@@ -1,0 +1,141 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): train the AOT
+//! model through the FULL stack — MU/SBS/MBS thread actors, DGC sparse
+//! uplinks, discounted-error downlinks, H-period global averaging, PJRT
+//! compute service — on the synthetic CIFAR-like corpus, comparing FL vs
+//! HFL (H = 2, 4, 6), and report accuracy, loss curves, per-link traffic,
+//! and simulated network time from the wireless model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_hfl_train            # standard
+//! cargo run --release --example e2e_hfl_train -- --quick                   # CI-sized
+//! cargo run --release --example e2e_hfl_train -- --iters 300 --mus 4      # custom
+//! ```
+
+use hfl::cli::Args;
+use hfl::config::Config;
+use hfl::coordinator::{run_coordinated, CoordinatorOptions, LinkKind};
+use hfl::data::SyntheticSpec;
+use hfl::runtime::{ModelOracle, Runtime};
+use hfl::sim::experiments::{scenario_latency, Scenario};
+use hfl::util::csv::CsvTable;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let quick = args.flag("quick");
+    let iters = args.get_parsed_or("iters", if quick { 48 } else { 160 })?;
+    let mus = args.get_parsed_or("mus", 4usize)?;
+    let model = args.get_or("model", "mlp");
+    let out = args.get_or("out", "results");
+    args.finish()?;
+
+    let mut cfg = Config::paper_table2();
+    cfg.topology.mus_per_cluster = mus;
+    let workers = cfg.topology.total_mus();
+    let n_clusters = cfg.topology.n_clusters;
+    let train_samples = (workers * 64 * if quick { 1 } else { 2 }).max(workers * 64);
+    let test_samples = if quick { 512 } else { 1024 };
+
+    println!(
+        "== end-to-end HFL training ==\nmodel={model} workers={workers} ({n_clusters} clusters × {mus}), iters={iters}\n"
+    );
+
+    let mut rows = CsvTable::new([
+        "algo", "h", "final_acc", "final_loss", "mu_ul_bits", "sbs_dl_bits", "sbs_ul_bits",
+        "mbs_dl_bits", "sim_time_s",
+    ]);
+    let mut loss_curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+
+    let variants: Vec<(String, usize, usize)> = vec![
+        ("FL".into(), 1, 1),
+        ("HFL".into(), n_clusters, 2),
+        ("HFL".into(), n_clusters, 4),
+        ("HFL".into(), n_clusters, 6),
+    ];
+    for (name, clusters, h) in variants {
+        let label = if clusters == 1 {
+            name.clone()
+        } else {
+            format!("{name} H={h}")
+        };
+        let opts = CoordinatorOptions {
+            iters,
+            peak_lr: cfg.training.scaled_lr(workers),
+            warmup_iters: iters / 10,
+            milestones: cfg.training.decay_milestones,
+            momentum: cfg.training.momentum as f32,
+            weight_decay: cfg.training.weight_decay as f32,
+            h_period: h,
+            n_clusters: clusters,
+            sparsity: cfg.sparsity.clone(),
+            eval_every_syncs: 4,
+        };
+        let spec = SyntheticSpec {
+            n_train: train_samples,
+            n_test: test_samples,
+            noise: 0.6,
+            seed: cfg.training.seed,
+            ..SyntheticSpec::default()
+        };
+        let model2 = model.clone();
+        let run = run_coordinated(
+            move || {
+                let rt = Runtime::load_default().expect("run `make artifacts` first");
+                ModelOracle::new(&rt, &model2, workers, &spec).expect("oracle")
+            },
+            &opts,
+        )?;
+
+        // Simulated per-iteration network time from the wireless model.
+        let sc = Scenario {
+            name: label.clone(),
+            n_clusters: clusters,
+            h_period: h,
+            workers,
+            sparse: true,
+        };
+        let per_iter_s = scenario_latency(&cfg, &sc);
+        let sim_time = per_iter_s * iters as f64;
+
+        println!("-- {label}: final top-1 {:.2}%  loss {:.4}  sim-time {:.1}s ({:.3}s/iter)",
+            run.final_eval.accuracy * 100.0,
+            run.final_eval.loss,
+            sim_time,
+            per_iter_s,
+        );
+        for (it, m) in &run.sync_evals {
+            println!("   iter {it:>4}  acc {:>6.2}%", m.accuracy * 100.0);
+        }
+        rows.push_row([
+            label.clone(),
+            h.to_string(),
+            format!("{:.4}", run.final_eval.accuracy * 100.0),
+            format!("{:.5}", run.final_eval.loss),
+            format!("{:.3e}", run.metrics.total_bits(LinkKind::MuUl)),
+            format!("{:.3e}", run.metrics.total_bits(LinkKind::SbsDl)),
+            format!("{:.3e}", run.metrics.total_bits(LinkKind::SbsUl)),
+            format!("{:.3e}", run.metrics.total_bits(LinkKind::MbsDl)),
+            format!("{sim_time:.2}"),
+        ]);
+        loss_curves.push((label, run.train_loss));
+    }
+
+    rows.save(format!("{out}/e2e_summary.csv"))?;
+    // Loss curves CSV (iteration, one column per variant).
+    let mut curve_table = CsvTable::new(
+        std::iter::once("iter".to_string())
+            .chain(loss_curves.iter().map(|(n, _)| n.clone()))
+            .collect::<Vec<_>>(),
+    );
+    let n_rows = loss_curves[0].1.len();
+    for i in 0..n_rows {
+        let mut row = vec![loss_curves[0].1[i].0 as f64];
+        for (_, c) in &loss_curves {
+            row.push(c.get(i).map(|x| x.1).unwrap_or(f64::NAN));
+        }
+        curve_table.push_nums(&row);
+    }
+    curve_table.save(format!("{out}/e2e_loss_curves.csv"))?;
+    println!("\nwrote {out}/e2e_summary.csv and {out}/e2e_loss_curves.csv");
+    println!("e2e_hfl_train OK");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Regenerate the data behind every latency figure (Fig. 3, 4, 5a, 5b) and
+//! save CSV series under `results/`.
+//!
+//! ```bash
+//! cargo run --release --example latency_sweep -- --fig all
+//! ```
+
+use hfl::cli::Args;
+use hfl::config::Config;
+use hfl::sim::{fig3, fig4, fig5a, fig5b};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let which = args.get_or("fig", "all");
+    let out = args.get_or("out", "results");
+    args.finish()?;
+    let cfg = Config::paper_table2();
+    let mus = [2usize, 4, 6, 8, 10, 14, 20];
+    let alphas: Vec<f64> = (0..=10).map(|i| 2.0 + 0.2 * i as f64).collect();
+
+    let figs: Vec<(&str, hfl::sim::FigureSeries)> = match which.as_str() {
+        "3" => vec![("fig3", fig3(&cfg, &mus))],
+        "4" => vec![("fig4", fig4(&cfg, &alphas))],
+        "5a" => vec![("fig5a", fig5a(&cfg, &mus))],
+        "5b" => vec![("fig5b", fig5b(&cfg, &mus))],
+        _ => vec![
+            ("fig3", fig3(&cfg, &mus)),
+            ("fig4", fig4(&cfg, &alphas)),
+            ("fig5a", fig5a(&cfg, &mus)),
+            ("fig5b", fig5b(&cfg, &mus)),
+        ],
+    };
+    for (name, f) in figs {
+        println!("{}", f.render());
+        let path = format!("{out}/{name}.csv");
+        f.to_csv().save(&path)?;
+        println!("wrote {path}\n");
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load the AOT artifacts, run one federated round by hand, and
+//! print what happened. Mirrors the README's five-minute tour.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use hfl::config::Config;
+use hfl::data::SyntheticSpec;
+use hfl::fl::{fl, TrainOptions};
+use hfl::runtime::{ModelOracle, Runtime};
+use hfl::wireless::{fl_latency, hfl_latency, LatencyInputs};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT-compiled training graph (built once by `make
+    //    artifacts`; Python is NOT used from here on).
+    let rt = Runtime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let meta = rt.model_meta("mlp")?.clone();
+    println!(
+        "model: mlp  Q = {} parameters, train batch {}",
+        meta.q_params, meta.train_batch
+    );
+
+    // 2. Build the gradient oracle: 8 MUs sharing a synthetic CIFAR-like
+    //    corpus in unshuffled contiguous shards (paper §V-B).
+    let spec = SyntheticSpec {
+        n_train: 1024,
+        n_test: 512,
+        noise: 0.6,
+        seed: 7,
+        ..SyntheticSpec::default()
+    };
+    let mut oracle = ModelOracle::new(&rt, "mlp", 8, &spec)?;
+
+    // 3. Train 30 iterations of plain federated SGD (Algorithm 1).
+    let opts = TrainOptions {
+        iters: 30,
+        peak_lr: 0.1,
+        warmup_iters: 3,
+        momentum: 0.9,
+        eval_every: 10,
+        ..Default::default()
+    };
+    let log = fl(&mut oracle, &opts);
+    for (it, m) in &log.evals {
+        println!("iter {it:>3}: top-1 {:.1}%  loss {:.3}", m.accuracy * 100.0, m.loss);
+    }
+
+    // 4. Ask the wireless model what one iteration costs over the paper's
+    //    HCN — flat FL vs hierarchical FL.
+    let cfg = Config::paper_table2();
+    let inputs = LatencyInputs::new(&cfg);
+    let t_fl = fl_latency(&inputs).total();
+    let t_hfl = hfl_latency(&inputs).per_iteration();
+    println!(
+        "\nper-iteration communication latency (Q = ResNet18-scale, sparse):\n  \
+         flat FL  : {t_fl:.3} s\n  HFL (H=2): {t_hfl:.3} s  → speed-up ×{:.2}",
+        t_fl / t_hfl
+    );
+    let acc = log.final_eval().unwrap().accuracy * 100.0;
+    assert!(acc > 30.0, "quickstart training should beat chance");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Topology report: the §V-A network layout — hexagonal clusters, reuse
+//! coloring, MU placement — plus the Algorithm-2 sub-carrier allocation for
+//! one cluster and for the flat-FL macro cell.
+//!
+//! ```bash
+//! cargo run --release --example topology_report -- [--mus 8] [--clusters 7]
+//! ```
+
+use hfl::cli::Args;
+use hfl::config::Config;
+use hfl::topology::NetworkTopology;
+use hfl::wireless::{allocate_subcarriers, LinkParams};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut cfg = Config::paper_table2();
+    if let Some(m) = args.get_parsed::<usize>("mus")? {
+        cfg.topology.mus_per_cluster = m;
+    }
+    if let Some(n) = args.get_parsed::<usize>("clusters")? {
+        cfg.topology.n_clusters = n;
+    }
+    args.finish()?;
+
+    let topo = NetworkTopology::generate(&cfg.topology);
+    println!("{}", topo.ascii_map(72, 36));
+    println!(
+        "\n{} clusters, {} reuse colors, {} sub-carriers per cluster",
+        topo.n_clusters(),
+        topo.layout.n_colors,
+        topo.layout.subcarriers_per_cluster(cfg.radio.subcarriers)
+    );
+
+    let link = |d: f64, p: f64| LinkParams {
+        p_max_w: p,
+        dist_m: d,
+        alpha: cfg.radio.pathloss_exp,
+        noise_w: cfg.radio.noise_power_w(),
+        b0_hz: cfg.radio.subcarrier_spacing_hz,
+        ber: cfg.radio.ber,
+    };
+
+    // Algorithm 2 inside cluster 1.
+    let dists = topo.sbs_distances(1);
+    let links: Vec<_> = dists.iter().map(|&d| link(d, cfg.radio.mu_power_w)).collect();
+    let m_cluster = topo.layout.subcarriers_per_cluster(cfg.radio.subcarriers);
+    let alloc = allocate_subcarriers(&links, m_cluster);
+    println!("\nAlgorithm 2 within cluster 1 ({} sub-carriers):", m_cluster);
+    for (i, (&d, (&c, &r))) in dists
+        .iter()
+        .zip(alloc.counts.iter().zip(&alloc.rates))
+        .enumerate()
+    {
+        println!("  MU {i}: d={d:>5.0} m  {c:>3} sub-carriers  {:>8.2} Mbit/s", r / 1e6);
+    }
+    println!("  min rate: {:.2} Mbit/s", alloc.min_rate() / 1e6);
+
+    // Flat FL over the macro cell.
+    let links: Vec<_> = topo
+        .mbs_distances()
+        .iter()
+        .map(|&d| link(d, cfg.radio.mu_power_w))
+        .collect();
+    let alloc = allocate_subcarriers(&links, cfg.radio.subcarriers);
+    println!(
+        "\nflat FL over the macro cell ({} MUs, {} sub-carriers): min rate {:.2} Mbit/s, max {:.2}",
+        links.len(),
+        cfg.radio.subcarriers,
+        alloc.min_rate() / 1e6,
+        alloc.max_rate() / 1e6
+    );
+    println!("\ntopology_report OK");
+    Ok(())
+}

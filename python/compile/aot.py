@@ -1,0 +1,159 @@
+"""AOT exporter: lower the Layer-2 training graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+results through the PJRT CPU client and Python never touches the training
+path again.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out`` (default ../artifacts):
+
+    train_step_{mlp,cnn}.hlo.txt   (params[Q], x[64,3072], y[i32 64]) -> (loss, grad[Q])
+    eval_step_{mlp,cnn}.hlo.txt    (params[Q], x[256,3072], y[i32 256]) -> (loss_sum, correct)
+    dgc_step_{mlp,cnn}.hlo.txt     (g[Q], u[Q], v[Q], sigma, thresh) -> (ghat, u', v')
+    init_{mlp,cnn}.f32             raw little-endian f32[Q] initial parameters
+    manifest.json                  shapes/metadata consumed by rust/src/runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.dgc_pallas import dgc_step
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+MODELS = ("mlp", "cnn")
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(model, out_dir, manifest):
+    q = M.n_params(model)
+    p_spec = spec((q,))
+
+    # --- train step ---
+    train = M.make_train_step(model)
+    lowered = jax.jit(train).lower(
+        p_spec, spec((TRAIN_BATCH, M.INPUT_DIM)), spec((TRAIN_BATCH,), jnp.int32)
+    )
+    path = f"train_step_{model}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        {
+            "name": f"train_step_{model}",
+            "file": path,
+            "inputs": [
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [TRAIN_BATCH, M.INPUT_DIM], "dtype": "f32"},
+                {"shape": [TRAIN_BATCH], "dtype": "i32"},
+            ],
+            "outputs": [
+                {"shape": [], "dtype": "f32"},
+                {"shape": [q], "dtype": "f32"},
+            ],
+        }
+    )
+
+    # --- eval step ---
+    ev = M.make_eval_step(model)
+    lowered = jax.jit(ev).lower(
+        p_spec, spec((EVAL_BATCH, M.INPUT_DIM)), spec((EVAL_BATCH,), jnp.int32)
+    )
+    path = f"eval_step_{model}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        {
+            "name": f"eval_step_{model}",
+            "file": path,
+            "inputs": [
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [EVAL_BATCH, M.INPUT_DIM], "dtype": "f32"},
+                {"shape": [EVAL_BATCH], "dtype": "i32"},
+            ],
+            "outputs": [
+                {"shape": [], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+            ],
+        }
+    )
+
+    # --- fused DGC step (ablation: XLA sparsifier vs native Rust) ---
+    lowered = jax.jit(dgc_step).lower(
+        spec((q,)), spec((q,)), spec((q,)), spec(()), spec(())
+    )
+    path = f"dgc_step_{model}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        {
+            "name": f"dgc_step_{model}",
+            "file": path,
+            "inputs": [
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [q], "dtype": "f32"},
+                {"shape": [q], "dtype": "f32"},
+            ],
+        }
+    )
+
+    # --- deterministic initial parameters (raw f32 little-endian) ---
+    import numpy as np
+
+    init = np.asarray(M.init_params(model, seed=0), dtype="<f4")
+    init_path = f"init_{model}.f32"
+    init.tofile(os.path.join(out_dir, init_path))
+    manifest["models"][model] = {
+        "q_params": q,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "input_dim": M.INPUT_DIM,
+        "n_classes": M.N_CLASSES,
+        "init_file": init_path,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": [], "models": {}}
+    for model in args.models.split(","):
+        print(f"exporting {model} ...", flush=True)
+        export_model(model.strip(), args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

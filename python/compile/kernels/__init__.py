@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Two kernels back the training graph:
+
+* :mod:`matmul_pallas` — MXU-tiled GEMM used by every dense/conv-as-GEMM
+  layer of the Layer-2 model, wrapped in ``jax.custom_vjp`` so the backward
+  pass also runs through the kernel.
+* :mod:`dgc_pallas` — fused DGC sparsification step (momentum-correct,
+  error-accumulate, threshold-mask) used by the ``dgc_step`` AOT artifact.
+
+Both are verified against the pure-jnp oracles in :mod:`ref` and lowered
+with ``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation).
+"""

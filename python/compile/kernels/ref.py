@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel test asserts `kernel(x) ≈ ref(x)`; the AOT artifacts are only
+built from kernels that pass those tests.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain dense GEMM, f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def dgc_step_ref(g, u, v, sigma, thresh):
+    """One DGC sparsification step (Algorithm 4 lines 6-12).
+
+    Returns ``(ghat, u_next, v_next)``:
+
+        u' = sigma * u + g
+        v' = v + u'
+        mask = |v'| >= thresh
+        ghat = v' * mask
+        u_next = u' * (1 - mask)
+        v_next = v' * (1 - mask)
+    """
+    u_new = sigma * u + g
+    v_new = v + u_new
+    mask = (jnp.abs(v_new) >= thresh).astype(v_new.dtype)
+    ghat = v_new * mask
+    keep = 1.0 - mask
+    return ghat, u_new * keep, v_new * keep

@@ -1,0 +1,187 @@
+"""Layer-2 JAX model: forward/backward on a FLAT parameter vector.
+
+The Rust coordinator owns the model as one ``f32[Q]`` vector (the ``w`` of
+Eq. 1) — sparsification, momentum and averaging all operate coordinate-wise
+on it. This module defines:
+
+* two model variants ("mlp", "cnn") for 32x32x3 10-class images,
+* deterministic pack/unpack between the flat vector and layer shapes,
+* ``train_step(params, x, y) -> (loss, grad)`` — the AOT hot path,
+* ``eval_step(params, x, y) -> (loss_sum, correct)`` — held-out metrics,
+* ``init_params(seed) -> flat`` — He-initialised weights.
+
+Every dense contraction (the model's FLOP hot-spot) routes through the
+Layer-1 Pallas GEMM (`kernels.matmul_pallas.matmul`); set
+``use_pallas=False`` to get the pure-jnp reference for oracle tests.
+The CNN implements convolution as im2col + GEMM, the standard TPU/MXU
+mapping (DESIGN.md section Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_pallas import matmul as matmul_pallas
+from .kernels.ref import matmul_ref
+
+IMAGE_SHAPE = (32, 32, 3)
+N_CLASSES = 10
+INPUT_DIM = 32 * 32 * 3
+
+
+def _mm(use_pallas):
+    return matmul_pallas if use_pallas else matmul_ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter shapes
+# ---------------------------------------------------------------------------
+
+def layer_shapes(model):
+    """Ordered (name, shape) pairs defining the flat layout."""
+    if model == "mlp":
+        return [
+            ("w1", (INPUT_DIM, 256)),
+            ("b1", (256,)),
+            ("w2", (256, 128)),
+            ("b2", (128,)),
+            ("w3", (128, N_CLASSES)),
+            ("b3", (N_CLASSES,)),
+        ]
+    if model == "cnn":
+        return [
+            ("conv1", (3 * 3 * 3, 16)),   # 3x3 kernel over 3 channels -> 16
+            ("bc1", (16,)),
+            ("conv2", (3 * 3 * 16, 32)),  # 3x3 over 16 -> 32
+            ("bc2", (32,)),
+            ("w1", (8 * 8 * 32, 64)),
+            ("b1", (64,)),
+            ("w2", (64, N_CLASSES)),
+            ("b2", (N_CLASSES,)),
+        ]
+    raise ValueError(f"unknown model {model!r}")
+
+
+def n_params(model):
+    """Total flat dimension Q."""
+    total = 0
+    for _, shape in layer_shapes(model):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def unpack(model, flat):
+    """Flat f32[Q] -> dict of shaped arrays (pure reshape/slice)."""
+    params = {}
+    off = 0
+    for name, shape in layer_shapes(model):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_params(model, seed=0):
+    """He-normal weights, zero biases, packed flat. Deterministic."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in layer_shapes(model):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            chunks.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = (2.0 / fan_in) ** 0.5
+            chunks.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _im2col(x, kh, kw):
+    """N,H,W,C -> N*H*W, kh*kw*C patches with SAME padding (stride 1)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(xp[:, di : di + h, dj : dj + w, :])
+    # (N, H, W, kh*kw*C)
+    patches = jnp.concatenate(cols, axis=-1)
+    return patches.reshape(n * h * w, kh * kw * c)
+
+
+def _avg_pool2(x):
+    """2x2 average pooling, N,H,W,C."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))
+
+
+def forward(model, flat, x, use_pallas=True):
+    """Logits f32[N, 10]. ``x`` is f32[N, 3072] (flattened, normalized)."""
+    mm = _mm(use_pallas)
+    p = unpack(model, flat)
+    if model == "mlp":
+        h = jax.nn.relu(mm(x, p["w1"]) + p["b1"])
+        h = jax.nn.relu(mm(h, p["w2"]) + p["b2"])
+        return mm(h, p["w3"]) + p["b3"]
+    # CNN: conv-as-GEMM via im2col.
+    n = x.shape[0]
+    img = x.reshape(n, *IMAGE_SHAPE)
+    h = _im2col(img, 3, 3)                      # (N*32*32, 27)
+    h = jax.nn.relu(mm(h, p["conv1"]) + p["bc1"])
+    h = _avg_pool2(h.reshape(n, 32, 32, 16))    # (N,16,16,16)
+    h = _im2col(h, 3, 3)                        # (N*16*16, 144)
+    h = jax.nn.relu(mm(h, p["conv2"]) + p["bc2"])
+    h = _avg_pool2(h.reshape(n, 16, 16, 32))    # (N,8,8,32)
+    h = h.reshape(n, 8 * 8 * 32)
+    h = jax.nn.relu(mm(h, p["w1"]) + p["b1"])
+    return mm(h, p["w2"]) + p["b2"]
+
+
+def _softmax_xent(logits, y):
+    """Mean cross-entropy over the batch; y is int32[N]."""
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return -picked.mean()
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def train_step(model, flat, x, y, use_pallas=True):
+    """(mean loss, flat gradient) at ``flat`` on minibatch (x, y)."""
+
+    def loss_fn(w):
+        return _softmax_xent(forward(model, w, x, use_pallas), y)
+
+    loss, grad = jax.value_and_grad(loss_fn)(flat)
+    return loss, grad
+
+
+def eval_step(model, flat, x, y, use_pallas=True):
+    """(summed loss, correct count) on an eval batch — chunk-accumulable."""
+    logits = forward(model, flat, x, use_pallas)
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    loss_sum = -picked.sum()
+    correct = (jnp.argmax(logits, axis=1) == y).sum().astype(jnp.float32)
+    return loss_sum, correct
+
+
+def make_train_step(model, use_pallas=True):
+    return functools.partial(train_step, model, use_pallas=use_pallas)
+
+
+def make_eval_step(model, use_pallas=True):
+    return functools.partial(eval_step, model, use_pallas=use_pallas)

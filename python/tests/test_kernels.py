@@ -1,0 +1,145 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes and dtypes-edge values and asserts allclose against the
+reference on every draw.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dgc_pallas import dgc_step
+from compile.kernels.matmul_pallas import matmul, matmul_pallas_raw, _pick_block
+from compile.kernels.ref import dgc_step_ref, matmul_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([1, 2, 3, 8, 16, 27, 50, 64, 100, 128, 200, 256])
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_across_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(matmul_pallas_raw(a, b))
+    want = np.asarray(matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(scale=st.sampled_from([1e-20, 1e-3, 1.0, 1e3, 1e10]))
+def test_matmul_extreme_scales(scale):
+    rng = np.random.default_rng(7)
+    a = (rng.normal(size=(16, 32)) * scale).astype(np.float32)
+    b = rng.normal(size=(32, 8)).astype(np.float32)
+    got = np.asarray(matmul_pallas_raw(a, b))
+    want = np.asarray(matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * max(scale, 1.0))
+
+
+def test_matmul_identity():
+    eye = np.eye(64, dtype=np.float32)
+    x = np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(matmul_pallas_raw(x, eye)), x, rtol=1e-6)
+
+
+def test_matmul_zeros():
+    a = np.zeros((32, 16), np.float32)
+    b = np.ones((16, 8), np.float32)
+    assert np.all(np.asarray(matmul_pallas_raw(a, b)) == 0.0)
+
+
+def test_matmul_vjp_matches_ref():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(64, 384)).astype(np.float32)
+    b = rng.normal(size=(384, 256)).astype(np.float32)
+
+    def f(a, b):
+        return jnp.mean(matmul(a, b) ** 2)
+
+    def fr(a, b):
+        return jnp.mean(matmul_ref(a, b) ** 2)
+
+    ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    gar, gbr = jax.grad(fr, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gar), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gbr), rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_under_jit():
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(8, 24)).astype(np.float32)
+    b = rng.normal(size=(24, 8)).astype(np.float32)
+    got = jax.jit(matmul)(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)), rtol=1e-4, atol=1e-5)
+
+
+@given(dim=st.integers(1, 300), target=st.sampled_from([8, 64, 128, 4096]))
+def test_pick_block_divides_and_bounded(dim, target):
+    b = _pick_block(dim, target)
+    assert 1 <= b <= max(target, 1)
+    assert dim % b == 0
+
+
+# ---------------------------------------------------------------------------
+# DGC kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 2, 7, 64, 1000, 4096, 5000]),
+    sigma=st.sampled_from([0.0, 0.5, 0.9]),
+    thresh=st.sampled_from([0.0, 0.5, 1.5, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dgc_matches_ref(n, sigma, thresh, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(n,)).astype(np.float32)
+    u = rng.normal(size=(n,)).astype(np.float32)
+    v = rng.normal(size=(n,)).astype(np.float32)
+    got = dgc_step(g, u, v, sigma, thresh)
+    want = dgc_step_ref(g, u, v, sigma, thresh)
+    for name, o, r in zip(("ghat", "u", "v"), got, want):
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(r), rtol=1e-6, atol=1e-6, err_msg=name
+        )
+
+
+def test_dgc_invariants():
+    """ghat + v_next == v + sigma*u + g (nothing lost), disjoint supports."""
+    rng = np.random.default_rng(11)
+    n = 512
+    g = rng.normal(size=(n,)).astype(np.float32)
+    u = rng.normal(size=(n,)).astype(np.float32)
+    v = rng.normal(size=(n,)).astype(np.float32)
+    ghat, u2, v2 = (np.asarray(x) for x in dgc_step(g, u, v, 0.9, 1.0))
+    total = v + 0.9 * u + g
+    np.testing.assert_allclose(ghat + v2, total, rtol=1e-5, atol=1e-6)
+    # A coordinate is either transmitted or retained, never both.
+    assert np.all((ghat == 0.0) | (v2 == 0.0))
+    assert np.all((ghat == 0.0) | (u2 == 0.0))
+
+
+def test_dgc_threshold_zero_sends_all():
+    g = np.ones(64, np.float32)
+    z = np.zeros(64, np.float32)
+    ghat, u2, v2 = (np.asarray(x) for x in dgc_step(g, z, z, 0.0, 0.0))
+    np.testing.assert_allclose(ghat, g)
+    assert np.all(u2 == 0.0) and np.all(v2 == 0.0)
+
+
+def test_dgc_huge_threshold_sends_nothing():
+    rng = np.random.default_rng(13)
+    g = rng.normal(size=(128,)).astype(np.float32)
+    z = np.zeros(128, np.float32)
+    ghat, u2, v2 = (np.asarray(x) for x in dgc_step(g, z, z, 0.0, 1e9))
+    assert np.all(ghat == 0.0)
+    np.testing.assert_allclose(v2, g, rtol=1e-6)

@@ -1,0 +1,43 @@
+//! Bench for Fig. 3: regenerates the speed-up table (HFL vs FL across MUs
+//! per cluster for H ∈ {2,4,6}) and times the underlying latency-model
+//! evaluation (threshold optimization + Algorithm 2 + broadcast closed
+//! form) with the crate's microbench harness.
+//!
+//! `cargo bench --bench fig3_speedup`
+
+use hfl::config::Config;
+use hfl::sim::fig3;
+use hfl::util::bench::{black_box, Bencher};
+use hfl::wireless::{fl_latency, hfl_latency, LatencyInputs};
+
+fn main() {
+    let cfg = Config::paper_table2();
+
+    // 1. Regenerate the figure data (the deliverable).
+    let f = fig3(&cfg, &[2, 4, 6, 8, 10, 14, 20]);
+    println!("{}", f.render());
+    let _ = std::fs::create_dir_all("results");
+    f.to_csv().save("results/fig3.csv").expect("save csv");
+
+    // 2. Sanity: the paper's qualitative claims.
+    for i in 0..f.x.len() {
+        assert!(
+            f.series[0].1[i] <= f.series[2].1[i],
+            "speed-up must grow with H"
+        );
+    }
+
+    // 3. Time the model evaluation itself.
+    let mut b = Bencher::new();
+    let inputs = LatencyInputs::new(&cfg);
+    b.bench("fl_latency(28 MUs, M=600)", || {
+        black_box(fl_latency(black_box(&inputs)));
+    });
+    b.bench("hfl_latency(7 clusters)", || {
+        black_box(hfl_latency(black_box(&inputs)));
+    });
+    b.bench_once("fig3 full sweep (7 points × 3 H)", || {
+        black_box(fig3(&cfg, &[2, 4, 6, 8, 10, 14, 20]));
+    });
+    print!("{}", b.summary());
+}

@@ -1,0 +1,43 @@
+//! Bench for Fig. 4: speed-up vs path-loss exponent α (H = 4), plus timing
+//! of the α-dependent threshold optimization.
+//!
+//! `cargo bench --bench fig4_pathloss`
+
+use hfl::config::Config;
+use hfl::sim::fig4;
+use hfl::util::bench::{black_box, Bencher};
+use hfl::wireless::LinkParams;
+
+fn main() {
+    let cfg = Config::paper_table2();
+    let alphas: Vec<f64> = (0..=10).map(|i| 2.0 + 0.2 * i as f64).collect();
+    let f = fig4(&cfg, &alphas);
+    println!("{}", f.render());
+    let _ = std::fs::create_dir_all("results");
+    f.to_csv().save("results/fig4.csv").expect("save csv");
+
+    let ys = &f.series[0].1;
+    assert!(
+        ys.last().unwrap() > ys.first().unwrap(),
+        "speed-up must increase with α (paper Fig. 4)"
+    );
+
+    let mut b = Bencher::new();
+    for alpha in [2.0, 2.8, 4.0] {
+        let link = LinkParams {
+            p_max_w: 0.2,
+            dist_m: 500.0,
+            alpha,
+            noise_w: cfg.radio.noise_power_w(),
+            b0_hz: cfg.radio.subcarrier_spacing_hz,
+            ber: cfg.radio.ber,
+        };
+        b.bench(&format!("threshold optimization (α={alpha})"), || {
+            black_box(link.optimal_rate_per_subcarrier(black_box(20)));
+        });
+    }
+    b.bench_once("fig4 full sweep (11 α points)", || {
+        black_box(fig4(&cfg, &alphas));
+    });
+    print!("{}", b.summary());
+}

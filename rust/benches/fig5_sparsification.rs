@@ -1,0 +1,67 @@
+//! Bench for Fig. 5a/5b: dense-vs-sparse per-iteration latency for HFL and
+//! flat FL as the cell load grows, plus timing of the payload accounting
+//! and an ablation of greedy (Algorithm 2) vs uniform sub-carrier split.
+//!
+//! `cargo bench --bench fig5_sparsification`
+
+use hfl::config::Config;
+use hfl::sim::{fig5a, fig5b};
+use hfl::topology::NetworkTopology;
+use hfl::util::bench::{black_box, Bencher};
+use hfl::wireless::subcarrier::{allocate_subcarriers, uniform_allocation};
+use hfl::wireless::LinkParams;
+
+fn main() {
+    let cfg = Config::paper_table2();
+    let mus = [2usize, 4, 6, 8, 10, 14, 20];
+    let a = fig5a(&cfg, &mus);
+    let b5 = fig5b(&cfg, &mus);
+    println!("{}", a.render());
+    println!("{}", b5.render());
+    let _ = std::fs::create_dir_all("results");
+    a.to_csv().save("results/fig5a.csv").expect("save");
+    b5.to_csv().save("results/fig5b.csv").expect("save");
+
+    // Paper claims: sparsification helps both; HFL's curve is flatter.
+    let fl_growth = b5.series[1].1.last().unwrap() / b5.series[1].1.first().unwrap();
+    let hfl_growth = a.series[1].1.last().unwrap() / a.series[1].1.first().unwrap();
+    assert!(
+        hfl_growth < fl_growth,
+        "sparse HFL should scale better with MUs: HFL ×{hfl_growth:.2} vs FL ×{fl_growth:.2}"
+    );
+    println!(
+        "robustness: sparse latency growth 2→20 MUs/cluster: FL ×{fl_growth:.2}, HFL ×{hfl_growth:.2}\n"
+    );
+
+    // Ablation: Algorithm 2 vs uniform split (design-choice bench).
+    let topo = NetworkTopology::generate(&cfg.topology);
+    let links: Vec<LinkParams> = topo
+        .mbs_distances()
+        .iter()
+        .map(|&d| LinkParams {
+            p_max_w: cfg.radio.mu_power_w,
+            dist_m: d,
+            alpha: cfg.radio.pathloss_exp,
+            noise_w: cfg.radio.noise_power_w(),
+            b0_hz: cfg.radio.subcarrier_spacing_hz,
+            ber: cfg.radio.ber,
+        })
+        .collect();
+    let greedy = allocate_subcarriers(&links, cfg.radio.subcarriers);
+    let uniform = uniform_allocation(&links, cfg.radio.subcarriers);
+    println!(
+        "ablation — max-min rate: Algorithm 2 {:.2} Mbit/s vs uniform {:.2} Mbit/s (×{:.2})\n",
+        greedy.min_rate() / 1e6,
+        uniform.min_rate() / 1e6,
+        greedy.min_rate() / uniform.min_rate()
+    );
+
+    let mut b = Bencher::new();
+    b.bench("allocate_subcarriers(28 MUs, 600 sc)", || {
+        black_box(allocate_subcarriers(black_box(&links), 600));
+    });
+    b.bench("uniform_allocation(28 MUs, 600 sc)", || {
+        black_box(uniform_allocation(black_box(&links), 600));
+    });
+    print!("{}", b.summary());
+}

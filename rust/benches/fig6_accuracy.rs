@@ -1,0 +1,62 @@
+//! Bench for Fig. 6 / Table III: train the AOT model under every paper
+//! scenario (Baseline, FL, HFL H∈{2,4,6}) on the synthetic CIFAR-like
+//! corpus and print the Table III block plus accuracy curves.
+//!
+//! `cargo bench --bench fig6_accuracy`            (quick scale, 1 seed)
+//! `cargo bench --bench fig6_accuracy -- --full`  (paper scale, 3 seeds)
+
+use hfl::config::Config;
+use hfl::sim::experiments::{pjrt_oracle_factory, render_table3, run_table3, Scale};
+use hfl::util::csv::CsvTable;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = Config::paper_table2();
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    println!(
+        "Fig. 6 / Table III — scale: iters={}, seeds={:?}, model={}",
+        scale.iters, scale.seeds, scale.model
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut factory = pjrt_oracle_factory(&cfg, &scale);
+    let results =
+        run_table3(&cfg, &scale, |sc, seed| factory(sc, seed)).expect("table3 run failed");
+    println!("\n{}", render_table3(&results));
+    println!("(wall time: {:.1}s)\n", t0.elapsed().as_secs_f64());
+
+    // Accuracy curves → CSV (Fig. 6 data).
+    let _ = std::fs::create_dir_all("results");
+    let mut header = vec!["iter".to_string()];
+    header.extend(results.iter().map(|r| r.scenario.name.clone()));
+    let mut table = CsvTable::new(header);
+    if let Some(first) = results.first() {
+        for (i, (it, _)) in first.curve.iter().enumerate() {
+            let mut row = vec![*it as f64];
+            for r in &results {
+                row.push(r.curve.get(i).map(|c| c.1).unwrap_or(f64::NAN));
+            }
+            table.push_nums(&row);
+        }
+    }
+    table.save("results/fig6_accuracy.csv").expect("save csv");
+    println!("wrote results/fig6_accuracy.csv");
+
+    // Shape checks. Horizon caveat (EXPERIMENTS.md): at the quick scale the
+    // local-SGD transient dominates, so accuracy-per-iteration *decreases*
+    // with H; the paper's Table III ordering (HFL ≥ FL) is a converged-
+    // plateau property — use `-- --full` for that regime. What must hold at
+    // any horizon: every variant trains, and HFL's per-iteration latency
+    // falls with H.
+    let fl_acc = results[1].mean_sem().0;
+    let hfl6_acc = results[4].mean_sem().0;
+    println!(
+        "\nshape check: FL {fl_acc:.2}% vs HFL(H=6) {hfl6_acc:.2}% \
+         (quick horizon = transient regime; see EXPERIMENTS.md)"
+    );
+    assert!(fl_acc > 30.0 && hfl6_acc > 30.0, "all variants must train");
+    assert!(
+        results[4].per_iter_latency_s <= results[2].per_iter_latency_s,
+        "HFL latency must fall with H"
+    );
+}

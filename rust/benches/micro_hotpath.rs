@@ -1,0 +1,108 @@
+//! Hot-path microbenchmarks (§Perf): every per-iteration cost on the L3
+//! training path, plus the PJRT train-step itself and the Rust-vs-XLA DGC
+//! ablation. Numbers feed EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench micro_hotpath`
+
+use hfl::runtime::{Runtime, TensorArg};
+use hfl::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use hfl::util::bench::{black_box, Bencher};
+use hfl::util::math::{quantile_abs, quickselect};
+use hfl::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let q = 820_874; // MLP parameter count
+    let mut rng = Pcg64::seeded(99);
+    let grad: Vec<f32> = (0..q).map(|_| rng.normal() as f32).collect();
+
+    // --- L3 sparsification hot path -------------------------------------
+    let mut dgc = DgcCompressor::new(q, 0.9, 0.99);
+    let mut msg = SparseVec::empty(q);
+    b.bench("dgc.step_into (Q=820k, φ=0.99)", || {
+        dgc.step_into(black_box(&grad), &mut msg);
+    });
+
+    let mut enc = DiscountedError::new(q, 0.9, 0.5);
+    b.bench("discounted_error.compress (Q=820k, φ=0.9)", || {
+        black_box(enc.compress(black_box(&grad)));
+    });
+
+    let mut scratch = Vec::with_capacity(q);
+    b.bench("quantile_abs (Q=820k)", || {
+        black_box(quantile_abs(black_box(&grad), 0.99, &mut scratch));
+    });
+    let mut xs: Vec<f32> = grad.clone();
+    b.bench("quickselect k=Q/2 (Q=820k)", || {
+        xs.copy_from_slice(&grad);
+        black_box(quickselect(black_box(&mut xs), q / 2));
+    });
+
+    let sparse = SparseVec::from_threshold(&grad, 2.3); // ~1%
+    let mut dense = vec![0.0f32; q];
+    b.bench(&format!("sparse.add_into ({} nnz)", sparse.nnz()), || {
+        sparse.add_into(black_box(&mut dense), 0.25);
+    });
+
+    // --- L2/L1 through PJRT ----------------------------------------------
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let meta = rt.model_meta("mlp").expect("mlp meta").clone();
+            let exe = rt.executable("train_step_mlp").expect("compile");
+            let params = rt.init_params("mlp").expect("init");
+            let x: Vec<f32> = (0..meta.train_batch * meta.input_dim)
+                .map(|i| ((i % 97) as f32) / 97.0 - 0.5)
+                .collect();
+            let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+            b.bench("pjrt train_step mlp (batch 64)", || {
+                black_box(
+                    exe.run(&[
+                        TensorArg::F32(&params, &[meta.q_params]),
+                        TensorArg::F32(&x, &[meta.train_batch, meta.input_dim]),
+                        TensorArg::I32(&y, &[meta.train_batch]),
+                    ])
+                    .expect("exec"),
+                );
+            });
+
+            // Ablation: DGC in XLA (AOT fused Pallas kernel) vs native Rust.
+            let dgc_exe = rt.executable("dgc_step_mlp").expect("compile dgc");
+            let u = vec![0.0f32; meta.q_params];
+            let v = vec![0.0f32; meta.q_params];
+            let g = &grad[..meta.q_params];
+            b.bench("pjrt dgc_step mlp (Q=820k)", || {
+                black_box(
+                    dgc_exe
+                        .run(&[
+                            TensorArg::F32(g, &[meta.q_params]),
+                            TensorArg::F32(&u, &[meta.q_params]),
+                            TensorArg::F32(&v, &[meta.q_params]),
+                            TensorArg::F32(&[0.9], &[]),
+                            TensorArg::F32(&[2.3], &[]),
+                        ])
+                        .expect("exec dgc"),
+                );
+            });
+
+            let eval_exe = rt.executable("eval_step_mlp").expect("compile eval");
+            let ex: Vec<f32> = (0..meta.eval_batch * meta.input_dim)
+                .map(|i| ((i % 89) as f32) / 89.0 - 0.5)
+                .collect();
+            let ey: Vec<i32> = (0..meta.eval_batch as i32).map(|i| i % 10).collect();
+            b.bench("pjrt eval_step mlp (batch 256)", || {
+                black_box(
+                    eval_exe
+                        .run(&[
+                            TensorArg::F32(&params, &[meta.q_params]),
+                            TensorArg::F32(&ex, &[meta.eval_batch, meta.input_dim]),
+                            TensorArg::I32(&ey, &[meta.eval_batch]),
+                        ])
+                        .expect("exec eval"),
+                );
+            });
+        }
+        Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e}"),
+    }
+
+    print!("{}", b.summary());
+}

@@ -1,0 +1,174 @@
+//! Dependency-free command-line parsing (no `clap` offline).
+//!
+//! Grammar: `hfl <subcommand> [--flag] [--key value] [--key=value] ...`.
+//! [`Args`] collects flags/options and reports unknown or missing ones with
+//! helpful errors; each subcommand in `main.rs` declares what it accepts.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options and
+/// `--flag` booleans.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys that were actually consumed by accessors; used to report typos.
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I, S>(argv: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` when next token isn't another option,
+                    // else boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.options.insert(stripped.to_string(), v);
+                        }
+                        _ => args.flags.push(stripped.to_string()),
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed numeric option.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}={s}: {e}")),
+        }
+    }
+
+    /// Typed numeric option with default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// Boolean flag (present / absent).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error if any provided option/flag was never consumed — catches typos
+    /// like `--epohcs`.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&str> = self
+            .options
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+            .filter(|k| !consumed.iter().any(|c| c == k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(["latency", "--fig", "3", "--mus=8", "--verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("latency"));
+        assert_eq!(a.get("fig"), Some("3"));
+        assert_eq!(a.get_parsed::<usize>("mus").unwrap(), Some(8));
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::parse(["x", "--quick", "--h", "4"]).unwrap();
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_parsed_or::<usize>("h", 2).unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(["x", "--h", "4", "--dense"]).unwrap();
+        assert_eq!(a.get("h"), Some("4"));
+        assert!(a.flag("dense"));
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = Args::parse(["x", "--epohcs", "3"]).unwrap();
+        let _ = a.get("epochs");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(["a", "b"]).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = Args::parse(["x", "--noise=-150"]).unwrap();
+        assert_eq!(a.get_parsed::<f64>("noise").unwrap(), Some(-150.0));
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(["x", "--n", "abc"]).unwrap();
+        assert!(a.get_parsed::<usize>("n").is_err());
+    }
+}

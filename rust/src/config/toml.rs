@@ -1,0 +1,215 @@
+//! TOML-subset parser for config files (offline environment has no `toml`
+//! crate). Supports: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments, and blank
+//! lines. This covers every config this project ships; nested tables and
+//! multi-line strings are intentionally rejected with clear errors.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; keys before any `[section]` land in `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.contains('[') || name.contains('.') {
+                return Err(format!(
+                    "line {}: nested tables are not supported ({name})",
+                    lineno + 1
+                ));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or("unterminated string literal")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // Numbers: underscores allowed as digit separators.
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# experiment config
+title = "fig3"
+
+[radio]
+subcarriers = 600
+spacing_hz = 30_000.0
+use_reuse = true
+phis = [0.99, 0.9, 0.9, 0.9]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"], TomlValue::Str("fig3".into()));
+        assert_eq!(doc["radio"]["subcarriers"], TomlValue::Int(600));
+        assert_eq!(doc["radio"]["spacing_hz"], TomlValue::Float(30000.0));
+        assert_eq!(doc["radio"]["use_reuse"], TomlValue::Bool(true));
+        match &doc["radio"]["phis"] {
+            TomlValue::Array(a) => assert_eq!(a.len(), 4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse("name = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(parse("[a.b]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("just a line").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = parse("ber = 1e-3\nnoise = -1.5E2").unwrap();
+        assert_eq!(doc[""]["ber"].as_f64(), Some(1e-3));
+        assert_eq!(doc[""]["noise"].as_f64(), Some(-150.0));
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(TomlValue::Int(5).as_usize(), Some(5));
+        assert_eq!(TomlValue::Int(-5).as_usize(), None);
+        assert_eq!(TomlValue::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+    }
+}

@@ -1,0 +1,191 @@
+//! The compute service: a single thread that owns the gradient oracle.
+//!
+//! PJRT handles in the `xla` crate wrap `Rc` internals and are `!Send`, so
+//! the AOT executables must live and die on one thread. Every MU's gradient
+//! request is serialized through this service — which matches the testbed
+//! anyway (one CPU), and in a real deployment each MU owns its own device.
+
+use crate::fl::oracle::{EvalMetrics, GradOracle};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum Request {
+    Grad {
+        worker: usize,
+        params: Arc<Vec<f32>>,
+        reply: Sender<(f64, Vec<f32>)>,
+    },
+    Eval {
+        params: Arc<Vec<f32>>,
+        reply: Sender<EvalMetrics>,
+    },
+    Meta {
+        reply: Sender<(usize, usize, Vec<f32>, usize)>,
+    },
+    Stop,
+}
+
+/// Cloneable handle to the compute thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Blocking gradient request for `worker` at `params`.
+    pub fn grad(&self, worker: usize, params: Arc<Vec<f32>>) -> (f64, Vec<f32>) {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Grad {
+                worker,
+                params,
+                reply,
+            })
+            .expect("compute service gone");
+        rx.recv().expect("compute service dropped reply")
+    }
+
+    /// Blocking evaluation request.
+    pub fn eval(&self, params: Arc<Vec<f32>>) -> EvalMetrics {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Eval { params, reply })
+            .expect("compute service gone");
+        rx.recv().expect("compute service dropped reply")
+    }
+
+    /// (dim, n_workers, init_params, iters_per_epoch).
+    pub fn meta(&self) -> (usize, usize, Vec<f32>, usize) {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Meta { reply })
+            .expect("compute service gone");
+        rx.recv().expect("compute service dropped reply")
+    }
+
+    pub fn stop(&self) {
+        let _ = self.tx.send(Request::Stop);
+    }
+}
+
+/// The owning service; join on drop-with-stop.
+pub struct ComputeService {
+    handle: ComputeHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Spawn the service. `factory` runs **inside** the new thread so the
+    /// oracle (and its !Send PJRT handles) is constructed where it lives.
+    pub fn spawn<F, O>(factory: F) -> Self
+    where
+        F: FnOnce() -> O + Send + 'static,
+        O: GradOracle + 'static,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let join = std::thread::Builder::new()
+            .name("hfl-compute".into())
+            .spawn(move || {
+                let mut oracle = factory();
+                let mut grad_buf = vec![0.0f32; oracle.dim()];
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Grad {
+                            worker,
+                            params,
+                            reply,
+                        } => {
+                            let loss = oracle.loss_grad(worker, &params, &mut grad_buf);
+                            let _ = reply.send((loss, grad_buf.clone()));
+                        }
+                        Request::Eval { params, reply } => {
+                            let _ = reply.send(oracle.eval(&params));
+                        }
+                        Request::Meta { reply } => {
+                            let dim = oracle.dim();
+                            let n = oracle.n_workers();
+                            let init = oracle.init_params();
+                            let ipe = oracle.iters_per_epoch();
+                            let _ = reply.send((dim, n, init, ipe));
+                        }
+                        Request::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn compute thread");
+        Self {
+            handle: ComputeHandle { tx },
+            join: Some(join),
+        }
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+
+    /// Stop and join.
+    pub fn shutdown(mut self) {
+        self.handle.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        self.handle.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::oracle::QuadraticOracle;
+
+    #[test]
+    fn serves_grad_eval_meta() {
+        let svc = ComputeService::spawn(|| QuadraticOracle::new(6, 3, 0.0, 1));
+        let h = svc.handle();
+        let (dim, n, init, ipe) = h.meta();
+        assert_eq!((dim, n, ipe), (6, 3, 10));
+        assert_eq!(init.len(), 6);
+        let params = Arc::new(init);
+        let (loss, grad) = h.grad(0, params.clone());
+        assert!(loss >= 0.0);
+        assert_eq!(grad.len(), 6);
+        let m = h.eval(params);
+        assert!(m.loss.is_finite());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let svc = ComputeService::spawn(|| QuadraticOracle::new(4, 8, 0.0, 2));
+        let h = svc.handle();
+        let params = Arc::new(vec![0.5f32; 4]);
+        let threads: Vec<_> = (0..8)
+            .map(|w| {
+                let h = h.clone();
+                let p = params.clone();
+                std::thread::spawn(move || h.grad(w, p))
+            })
+            .collect();
+        for t in threads {
+            let (loss, grad) = t.join().unwrap();
+            assert!(loss.is_finite());
+            assert_eq!(grad.len(), 4);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let svc = ComputeService::spawn(|| QuadraticOracle::new(2, 1, 0.0, 3));
+        drop(svc);
+    }
+}

@@ -1,0 +1,71 @@
+//! Wire messages between the coordinator's actors. Payloads are the sparse
+//! index+value vectors that the real system would transmit; dense state
+//! never crosses a link (except the one-time initial model, which in a real
+//! deployment ships with the firmware).
+
+use crate::sparse::SparseVec;
+
+/// MU → SBS: one iteration's sparsified gradient contribution.
+#[derive(Debug)]
+pub struct MuToSbs {
+    /// Cluster-local worker slot (0..per_cluster) — fixes aggregation order
+    /// so results are bit-identical to the sequential engine.
+    pub slot: usize,
+    /// Global worker id (diagnostics).
+    pub worker: usize,
+    /// Minibatch loss (metrics only; not transmitted in the real system).
+    pub loss: f64,
+    /// DGC-compressed gradient ĝ.
+    pub grad: SparseVec,
+}
+
+/// SBS → MU: sparsified model delta to apply to the local replica.
+#[derive(Debug)]
+pub enum SbsToMu {
+    /// Apply `delta` to the local model replica.
+    Update { iter: usize, delta: SparseVec },
+    /// Training finished; terminate.
+    Stop,
+}
+
+/// SBS inbox: gradient uploads from its MUs plus control from the MBS.
+#[derive(Debug)]
+pub enum SbsControl {
+    /// A gradient message from a cluster MU.
+    FromMu(MuToSbs),
+    /// Global model delta from the MBS (sync step).
+    GlobalDelta(SparseVec),
+    /// Terminate (propagates Stop to the MUs).
+    Stop,
+}
+
+/// SBS → MBS: the cluster's sparsified model difference at a sync point.
+#[derive(Debug)]
+pub struct MbsToSbs {
+    pub cluster: usize,
+    pub delta: SparseVec,
+    /// Mean training loss over the cluster for the elapsed period.
+    pub mean_loss: f64,
+}
+
+/// SBS → MBS inbox: either a sync contribution or completion notice.
+#[derive(Debug)]
+pub enum SbsToMbs {
+    Sync(MbsToSbs),
+    /// The cluster finished all its iterations.
+    Done { cluster: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<MuToSbs>();
+        assert_send::<SbsToMu>();
+        assert_send::<SbsControl>();
+        assert_send::<MbsToSbs>();
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-link communication metrics emitted by the actors. The latency model
+//! (`sim::experiments`) converts these into simulated network time using
+//! the wireless substrate; the actors themselves are wall-clock agnostic.
+
+use std::sync::mpsc::Sender;
+
+/// Which of the four sparsified links a message traversed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    MuUl,
+    SbsDl,
+    SbsUl,
+    MbsDl,
+}
+
+/// One transmitted message.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricEvent {
+    pub iter: usize,
+    pub cluster: usize,
+    pub link: LinkKind,
+    pub bits: f64,
+    /// Training loss piggybacked on MU uploads (NaN otherwise).
+    pub loss: f64,
+}
+
+/// Cheap cloneable emitter.
+#[derive(Clone)]
+pub struct MetricsSink {
+    tx: Sender<MetricEvent>,
+}
+
+impl MetricsSink {
+    pub fn new(tx: Sender<MetricEvent>) -> Self {
+        Self { tx }
+    }
+
+    pub fn emit(&self, ev: MetricEvent) {
+        let _ = self.tx.send(ev); // receiver gone during shutdown is fine
+    }
+}
+
+/// Aggregated view built by the MBS from the event stream.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub events: Vec<MetricEvent>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, ev: MetricEvent) {
+        self.events.push(ev);
+    }
+
+    /// Total bits over a link.
+    pub fn total_bits(&self, link: LinkKind) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.link == link)
+            .map(|e| e.bits)
+            .sum()
+    }
+
+    /// Per-iteration worst-MU uplink payload within each cluster — the
+    /// quantity entering `Γ_n^U = max_k bits_k / rate_k` (uniform rates
+    /// within a cluster make max-bits the max-latency proxy).
+    pub fn per_iter_max_mu_bits(&self, iter: usize, cluster: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.link == LinkKind::MuUl && e.iter == iter && e.cluster == cluster)
+            .map(|e| e.bits)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean training loss at an iteration (from MU uploads).
+    pub fn mean_loss(&self, iter: usize) -> Option<f64> {
+        let losses: Vec<f64> = self
+            .events
+            .iter()
+            .filter(|e| e.link == LinkKind::MuUl && e.iter == iter && e.loss.is_finite())
+            .map(|e| e.loss)
+            .collect();
+        if losses.is_empty() {
+            None
+        } else {
+            Some(losses.iter().sum::<f64>() / losses.len() as f64)
+        }
+    }
+
+    pub fn n_iters(&self) -> usize {
+        self.events.iter().map(|e| e.iter + 1).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn sink_and_log_roundtrip() {
+        let (tx, rx) = channel();
+        let sink = MetricsSink::new(tx);
+        sink.emit(MetricEvent {
+            iter: 0,
+            cluster: 1,
+            link: LinkKind::MuUl,
+            bits: 100.0,
+            loss: 2.0,
+        });
+        sink.emit(MetricEvent {
+            iter: 0,
+            cluster: 1,
+            link: LinkKind::MuUl,
+            bits: 250.0,
+            loss: 4.0,
+        });
+        sink.emit(MetricEvent {
+            iter: 0,
+            cluster: 1,
+            link: LinkKind::SbsDl,
+            bits: 70.0,
+            loss: f64::NAN,
+        });
+        drop(sink);
+        let mut log = MetricsLog::default();
+        while let Ok(ev) = rx.recv() {
+            log.push(ev);
+        }
+        assert_eq!(log.total_bits(LinkKind::MuUl), 350.0);
+        assert_eq!(log.total_bits(LinkKind::SbsDl), 70.0);
+        assert_eq!(log.per_iter_max_mu_bits(0, 1), 250.0);
+        assert_eq!(log.mean_loss(0), Some(3.0));
+        assert_eq!(log.n_iters(), 1);
+    }
+}

@@ -1,0 +1,31 @@
+//! The distributed coordinator: the paper's system realized as a
+//! thread-actor topology mirroring the HCN —
+//!
+//! ```text
+//!            MBS (leader, main thread)
+//!           /    |     \            global sync every H iterations
+//!        SBS₀  SBS₁ …  SBS_{N−1}    (one thread per cluster)
+//!       / | \                       intra-cluster rounds every iteration
+//!     MU MU MU …                    (one thread per mobile user)
+//!             \
+//!              ComputeService       (single thread owning the PJRT
+//!                                    runtime — xla handles are !Send)
+//! ```
+//!
+//! Every link carries the same [`SparseVec`](crate::sparse::SparseVec)
+//! messages as the reference engine in [`crate::fl::algorithms`], with the
+//! same compressors in the same order — the coordinator is *bit-identical*
+//! to the sequential engine (asserted by integration tests), it just runs
+//! the topology for real: channels, per-actor state, barrier-free
+//! synchronous rounds, graceful shutdown, and per-link metrics that the
+//! latency model converts into simulated network time.
+
+pub mod compute;
+pub mod messages;
+pub mod metrics;
+pub mod run;
+
+pub use compute::{ComputeHandle, ComputeService};
+pub use messages::{MbsToSbs, MuToSbs, SbsControl, SbsToMbs, SbsToMu};
+pub use metrics::{LinkKind, MetricEvent, MetricsLog};
+pub use run::{run_coordinated, CoordinatorOptions, CoordinatorRun};

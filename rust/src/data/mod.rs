@@ -1,0 +1,17 @@
+//! Dataset substrate.
+//!
+//! The paper trains on CIFAR-10; this environment has no dataset downloads,
+//! so [`synthetic`] generates a deterministic CIFAR-*like* 10-class
+//! 32×32×3 corpus (per-class smooth template + class-correlated texture +
+//! pixel noise — hard enough that a linear model underfits but a small
+//! CNN/MLP separates it). DESIGN.md §3 documents the substitution.
+//!
+//! [`partition`] implements the paper's §V-B data assignment: the training
+//! set is split across MUs **without shuffling** and every MU iterates its
+//! own fixed shard.
+
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::{Partition, Shard};
+pub use synthetic::{Dataset, SyntheticSpec};

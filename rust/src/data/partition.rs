@@ -1,0 +1,248 @@
+//! §V-B data assignment: "data sets are divided among the MUs without any
+//! shuffling and through the iterations MUs train the same subset".
+//!
+//! The training set is cut into K contiguous equal shards; worker k cycles
+//! through shard k in fixed minibatch order. (Because the synthetic
+//! generator interleaves classes, contiguous shards are still IID — the
+//! paper's non-IID extension is future work, §V-D.)
+
+use super::synthetic::Dataset;
+
+/// One worker's view of the training data.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Global sample indices owned by this worker (contiguous).
+    pub indices: Vec<usize>,
+    cursor: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Next `batch` indices, cycling deterministically (no shuffling).
+    pub fn next_batch(&mut self, batch: usize) -> Vec<usize> {
+        assert!(batch <= self.len(), "batch larger than shard");
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            out.push(self.indices[self.cursor]);
+            self.cursor = (self.cursor + 1) % self.indices.len();
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// Equal contiguous split of `n_samples` across `k` workers.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Shard>,
+    pub batch_size: usize,
+}
+
+impl Partition {
+    pub fn contiguous(dataset: &Dataset, k: usize, batch_size: usize) -> Self {
+        assert!(k > 0);
+        let n = dataset.len();
+        let per = n / k;
+        assert!(
+            per >= batch_size,
+            "shard size {per} < batch {batch_size} (need ≥1 batch per worker)"
+        );
+        let shards = (0..k)
+            .map(|w| Shard {
+                indices: (w * per..(w + 1) * per).collect(),
+                cursor: 0,
+            })
+            .collect();
+        Self { shards, batch_size }
+    }
+
+    /// Non-IID split (the paper's §V-D extension): samples are sorted by
+    /// label and dealt out in label-homogeneous blocks, so each worker sees
+    /// at most ~⌈blocks_per_worker⌉ classes. `blocks_per_worker = 2`
+    /// reproduces the classic "2-class shards" federated non-IID setting
+    /// (McMahan et al.); `= n_classes` degenerates toward IID.
+    pub fn non_iid(
+        dataset: &Dataset,
+        k: usize,
+        batch_size: usize,
+        blocks_per_worker: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(k > 0 && blocks_per_worker > 0);
+        let n = dataset.len();
+        let per = n / k;
+        assert!(
+            per >= batch_size,
+            "shard size {per} < batch {batch_size}"
+        );
+        // Sort indices by label (stable → deterministic).
+        let mut by_label: Vec<usize> = (0..n).collect();
+        by_label.sort_by_key(|&i| dataset.y[i]);
+        // Cut into k·blocks_per_worker label-homogeneous blocks and deal a
+        // random permutation of blocks to workers.
+        let n_blocks = k * blocks_per_worker;
+        let block_len = n / n_blocks;
+        assert!(block_len > 0, "too many blocks for dataset size");
+        let mut block_order: Vec<usize> = (0..n_blocks).collect();
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0x0D1D);
+        rng.shuffle(&mut block_order);
+        let shards = (0..k)
+            .map(|w| {
+                let mut indices = Vec::with_capacity(blocks_per_worker * block_len);
+                for b in 0..blocks_per_worker {
+                    let blk = block_order[w * blocks_per_worker + b];
+                    indices
+                        .extend_from_slice(&by_label[blk * block_len..(blk + 1) * block_len]);
+                }
+                Shard { indices, cursor: 0 }
+            })
+            .collect();
+        Self { shards, batch_size }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Iterations per epoch (shard length / batch).
+    pub fn iters_per_epoch(&self) -> usize {
+        (self.shards[0].len() / self.batch_size).max(1)
+    }
+
+    /// Label-distribution skew: mean over workers of the fraction of each
+    /// worker's samples in its single most-common class (1.0 = fully
+    /// homogeneous shards; ≈1/n_classes = IID).
+    pub fn label_skew(&self, dataset: &Dataset) -> f64 {
+        let mut total = 0.0;
+        for s in &self.shards {
+            let mut counts = std::collections::BTreeMap::new();
+            for &i in &s.indices {
+                *counts.entry(dataset.y[i]).or_insert(0usize) += 1;
+            }
+            let max = counts.values().copied().max().unwrap_or(0);
+            total += max as f64 / s.len().max(1) as f64;
+        }
+        total / self.shards.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn ds() -> Dataset {
+        let (train, _) = generate(&SyntheticSpec {
+            n_train: 240,
+            n_test: 10,
+            noise: 0.5,
+            seed: 1,
+            ..SyntheticSpec::default()
+        });
+        train
+    }
+
+    #[test]
+    fn contiguous_disjoint_cover() {
+        let d = ds();
+        let p = Partition::contiguous(&d, 4, 16);
+        let mut all: Vec<usize> = p.shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..240).collect::<Vec<_>>());
+        for s in &p.shards {
+            assert_eq!(s.len(), 60);
+        }
+    }
+
+    #[test]
+    fn batches_cycle_without_shuffle() {
+        let d = ds();
+        let mut p = Partition::contiguous(&d, 4, 16);
+        let b1 = p.shards[1].next_batch(16);
+        assert_eq!(b1, (60..76).collect::<Vec<_>>());
+        let _b2 = p.shards[1].next_batch(16);
+        let _b3 = p.shards[1].next_batch(16);
+        let b4 = p.shards[1].next_batch(16);
+        // 60-element shard: 4th batch wraps at 108..120 then 60..64.
+        assert_eq!(b4[..12], (108..120).collect::<Vec<_>>()[..]);
+        assert_eq!(b4[12..], (60..64).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn deterministic_across_resets() {
+        let d = ds();
+        let mut p = Partition::contiguous(&d, 2, 8);
+        let a = p.shards[0].next_batch(8);
+        p.shards[0].reset();
+        let b = p.shards[0].next_batch(8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iters_per_epoch() {
+        let d = ds();
+        let p = Partition::contiguous(&d, 4, 16);
+        assert_eq!(p.iters_per_epoch(), 3); // 60/16 = 3 (floor)
+    }
+
+    #[test]
+    #[should_panic(expected = "shard size")]
+    fn too_many_workers_rejected() {
+        let d = ds();
+        let _ = Partition::contiguous(&d, 200, 16);
+    }
+
+    #[test]
+    fn non_iid_covers_disjointly_and_skews_labels() {
+        let d = ds(); // 240 samples, 10 balanced classes (24 each)
+        // k=5 × 2 blocks = 10 blocks of 24 → each block is exactly one class.
+        let p = Partition::non_iid(&d, 5, 16, 2, 7);
+        // Disjoint cover of (n_blocks·block_len) samples.
+        let mut all: Vec<usize> = p.shards.iter().flat_map(|s| s.indices.clone()).collect();
+        let total = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total, "shards overlap");
+        for s in &p.shards {
+            assert_eq!(s.len(), 48);
+        }
+        // 2 classes per worker → heavy skew vs IID.
+        let skew = p.label_skew(&d);
+        let iid_skew = Partition::contiguous(&d, 5, 16).label_skew(&d);
+        assert!(
+            skew > iid_skew + 0.2,
+            "non-IID skew {skew} should exceed IID {iid_skew}"
+        );
+        assert!(skew >= 0.5, "2-class shards hold ≥50% one class: {skew}");
+    }
+
+    #[test]
+    fn non_iid_deterministic_per_seed() {
+        let d = ds();
+        let a = Partition::non_iid(&d, 4, 16, 2, 7);
+        let b = Partition::non_iid(&d, 4, 16, 2, 7);
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.indices, y.indices);
+        }
+        let c = Partition::non_iid(&d, 4, 16, 2, 8);
+        assert!(a.shards.iter().zip(&c.shards).any(|(x, y)| x.indices != y.indices));
+    }
+
+    #[test]
+    fn non_iid_many_blocks_approaches_iid() {
+        let d = ds();
+        let skew2 = Partition::non_iid(&d, 4, 16, 2, 7).label_skew(&d);
+        let skew10 = Partition::non_iid(&d, 4, 8, 6, 7).label_skew(&d);
+        assert!(skew10 < skew2, "{skew10} !< {skew2}");
+    }
+}

@@ -1,0 +1,302 @@
+//! Deterministic synthetic CIFAR-like dataset (substitution for CIFAR-10,
+//! DESIGN.md §3).
+//!
+//! Each class c gets (a) a smooth low-frequency template image (sum of a
+//! few random 2-D cosines), and (b) a characteristic high-frequency texture
+//! direction. A sample mixes the class signal with *structured background
+//! clutter* (random combinations of a shared smooth-image bank — CIFAR's
+//! "sky/grass" analogue, uninformative about the class and immune to
+//! dimension-averaging) plus iid pixel noise:
+//!
+//! ```text
+//! x = sep·template_c + texture_c·s·sep + Σ_j b_j·background_j + ε
+//!     s ~ N(0,3²),  b_j ~ N(0,1) (3 of 32 bank images),  ε ~ N(0, noise²)·I
+//! ```
+//!
+//! normalized to zero mean / unit variance per image. `class_sep` calibrates
+//! difficulty: at the default 0.22 a nearest-class-mean classifier gets
+//! ~37% (vs 10% chance) and the MLP reaches ~75% — non-saturated, so the
+//! FL/HFL comparisons of Fig. 6 / Table III have dynamic range.
+
+use crate::util::rng::Pcg64;
+
+pub const IMAGE_DIM: usize = 32 * 32 * 3;
+pub const N_CLASSES: usize = 10;
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Pixel noise std.
+    pub noise: f32,
+    /// Class-template amplitude relative to the structured background
+    /// clutter (amplitude 1). Small values bury the class signal under
+    /// sample-specific structure — the knob that keeps the task from
+    /// saturating (iid noise alone averages out over 3072 dimensions).
+    pub class_sep: f32,
+    /// Master seed (class structure + sample draws).
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        Self {
+            n_train: 8960,
+            n_test: 2000,
+            noise: 0.6,
+            class_sep: 0.22,
+            seed: 2019,
+        }
+    }
+}
+
+/// An in-memory dataset of flattened normalized images.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `n × IMAGE_DIM`.
+    pub x: Vec<f32>,
+    /// Labels `n`.
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.x[i * IMAGE_DIM..(i + 1) * IMAGE_DIM]
+    }
+
+    /// Copy rows `idx` into a dense batch buffer (`x_out`: B×IMAGE_DIM).
+    pub fn fill_batch(&self, idx: &[usize], x_out: &mut [f32], y_out: &mut [i32]) {
+        assert_eq!(x_out.len(), idx.len() * IMAGE_DIM);
+        assert_eq!(y_out.len(), idx.len());
+        for (b, &i) in idx.iter().enumerate() {
+            x_out[b * IMAGE_DIM..(b + 1) * IMAGE_DIM].copy_from_slice(self.image(i));
+            y_out[b] = self.y[i];
+        }
+    }
+}
+
+/// Class structure shared by train and test splits.
+struct ClassBank {
+    templates: Vec<Vec<f32>>,
+    textures: Vec<Vec<f32>>,
+    /// Structured background clutter bank: every sample mixes a few of
+    /// these with random weights, so samples share low-frequency structure
+    /// that is *uninformative* about the class (CIFAR's "sky/grass"
+    /// analogue) and that dimension-averaging cannot remove.
+    backgrounds: Vec<Vec<f32>>,
+}
+
+const N_BACKGROUNDS: usize = 32;
+const BG_MIX: usize = 3;
+
+/// One smooth unit-RMS image: sum of 4 random 2-D cosine waves per channel.
+fn smooth_image(rng: &mut Pcg64) -> Vec<f32> {
+    let mut t = vec![0.0f32; IMAGE_DIM];
+    for _ in 0..4 {
+        let fx = rng.uniform_range(0.5, 3.0);
+        let fy = rng.uniform_range(0.5, 3.0);
+        let phase = rng.uniform_range(0.0, std::f64::consts::TAU);
+        let chan_w = [rng.normal(), rng.normal(), rng.normal()];
+        for yy in 0..32 {
+            for xx in 0..32 {
+                let v = (fx * xx as f64 / 32.0 * std::f64::consts::TAU
+                    + fy * yy as f64 / 32.0 * std::f64::consts::TAU
+                    + phase)
+                    .cos();
+                for ch in 0..3 {
+                    t[(yy * 32 + xx) * 3 + ch] += (v * chan_w[ch]) as f32;
+                }
+            }
+        }
+    }
+    let rms = (t.iter().map(|v| v * v).sum::<f32>() / IMAGE_DIM as f32)
+        .sqrt()
+        .max(1e-6);
+    t.iter_mut().for_each(|v| *v /= rms);
+    t
+}
+
+fn build_classes(rng: &mut Pcg64) -> ClassBank {
+    let mut templates = Vec::with_capacity(N_CLASSES);
+    let mut textures = Vec::with_capacity(N_CLASSES);
+    for _ in 0..N_CLASSES {
+        templates.push(smooth_image(rng));
+        // Texture direction: unit-norm high-frequency pattern.
+        let mut tex: Vec<f32> = (0..IMAGE_DIM).map(|_| rng.normal() as f32).collect();
+        let norm = tex.iter().map(|v| v * v).sum::<f32>().sqrt();
+        tex.iter_mut().for_each(|v| *v /= norm);
+        textures.push(tex);
+    }
+    let backgrounds = (0..N_BACKGROUNDS).map(|_| smooth_image(rng)).collect();
+    ClassBank {
+        templates,
+        textures,
+        backgrounds,
+    }
+}
+
+/// Generate the train and test splits (shared class bank, disjoint draws).
+pub fn generate(spec: &SyntheticSpec) -> (Dataset, Dataset) {
+    let mut class_rng = Pcg64::new(spec.seed, 0xC1A5);
+    let bank = build_classes(&mut class_rng);
+    let mut train_rng = Pcg64::new(spec.seed, 0x7EA1);
+    let mut test_rng = Pcg64::new(spec.seed, 0x7E57);
+    (
+        sample_split(&bank, spec.n_train, spec, &mut train_rng),
+        sample_split(&bank, spec.n_test, spec, &mut test_rng),
+    )
+}
+
+fn sample_split(bank: &ClassBank, n: usize, spec: &SyntheticSpec, rng: &mut Pcg64) -> Dataset {
+    let noise = spec.noise;
+    let sep = spec.class_sep;
+    let mut x = vec![0.0f32; n * IMAGE_DIM];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        // Balanced labels in order c = i mod 10 (the partitioner decides
+        // who sees what; labels must not correlate with shard boundaries,
+        // so interleave classes).
+        let c = i % N_CLASSES;
+        y[i] = c as i32;
+        let s = rng.normal() as f32 * 3.0 * sep;
+        let row = &mut x[i * IMAGE_DIM..(i + 1) * IMAGE_DIM];
+        let (tpl, tex) = (&bank.templates[c], &bank.textures[c]);
+        // Per-sample structured background: mix of BG_MIX bank images.
+        let bg: Vec<(usize, f32)> = (0..BG_MIX)
+            .map(|_| (rng.uniform_usize(N_BACKGROUNDS), rng.normal() as f32))
+            .collect();
+        let mut mean = 0.0f32;
+        for j in 0..IMAGE_DIM {
+            let mut v = sep * tpl[j] + tex[j] * s + noise * rng.normal() as f32;
+            for &(bi, bw) in &bg {
+                v += bw * bank.backgrounds[bi][j];
+            }
+            row[j] = v;
+            mean += v;
+        }
+        // Per-image standardization.
+        mean /= IMAGE_DIM as f32;
+        let mut var = 0.0f32;
+        for v in row.iter_mut() {
+            *v -= mean;
+            var += *v * *v;
+        }
+        let std = (var / IMAGE_DIM as f32).sqrt().max(1e-6);
+        row.iter_mut().for_each(|v| *v /= std);
+    }
+    Dataset { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SyntheticSpec {
+        SyntheticSpec {
+            n_train: 200,
+            n_test: 100,
+            noise: 0.6,
+            seed: 42,
+            ..SyntheticSpec::default()
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = generate(&small());
+        let (b, _) = generate(&small());
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let (c, _) = generate(&SyntheticSpec {
+            seed: 43,
+            ..small()
+        });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn balanced_interleaved_labels() {
+        let (train, test) = generate(&small());
+        for c in 0..N_CLASSES as i32 {
+            assert_eq!(train.y.iter().filter(|&&y| y == c).count(), 20);
+            assert_eq!(test.y.iter().filter(|&&y| y == c).count(), 10);
+        }
+        assert_eq!(&train.y[..10], &(0..10).map(|i| i as i32).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn images_standardized() {
+        let (train, _) = generate(&small());
+        for i in (0..train.len()).step_by(37) {
+            let img = train.image(i);
+            let mean: f32 = img.iter().sum::<f32>() / IMAGE_DIM as f32;
+            let var: f32 = img.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / IMAGE_DIM as f32;
+            assert!(mean.abs() < 1e-3, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_template_mean() {
+        // Nearest-class-mean classifier on raw pixels should beat chance by
+        // a wide margin — i.e. the class signal is real.
+        // Use a wide class separation here: the property under test is that
+        // the class signal is real, not the difficulty calibration.
+        let (train, test) = generate(&SyntheticSpec {
+            n_train: 1000,
+            n_test: 200,
+            noise: 0.6,
+            class_sep: 0.8,
+            seed: 7,
+        });
+        let mut means = vec![vec![0.0f32; IMAGE_DIM]; N_CLASSES];
+        let mut counts = vec![0usize; N_CLASSES];
+        for i in 0..train.len() {
+            let c = train.y[i] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(train.image(i)) {
+                *m += v;
+            }
+        }
+        for c in 0..N_CLASSES {
+            means[c].iter_mut().for_each(|m| *m /= counts[c] as f32);
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let img = test.image(i);
+            let best = (0..N_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    let db: f32 = means[b].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == test.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy {acc} ≤ chance-ish");
+    }
+
+    #[test]
+    fn fill_batch_copies_rows() {
+        let (train, _) = generate(&small());
+        let idx = [3usize, 7, 11];
+        let mut x = vec![0f32; 3 * IMAGE_DIM];
+        let mut y = vec![0i32; 3];
+        train.fill_batch(&idx, &mut x, &mut y);
+        assert_eq!(&x[..IMAGE_DIM], train.image(3));
+        assert_eq!(y[0], train.y[3]);
+        assert_eq!(&x[2 * IMAGE_DIM..], train.image(11));
+    }
+}

@@ -1,0 +1,524 @@
+//! Reference implementations of the paper's four training algorithms.
+//!
+//! One parametric engine ([`run_hierarchical`]) covers the whole family —
+//! the paper's Algorithms 1/3/4/5 are special cases:
+//!
+//! | algorithm | clusters | sparsity |
+//! |-----------|----------|----------|
+//! | [`fl`] (Alg. 1 + momentum, Eq. 23)        | 1 | dense |
+//! | [`sparse_fl`] (Alg. 4 + DL sparsification) | 1 | φ links |
+//! | [`hfl`] (Alg. 3 + momentum)                | N | dense |
+//! | [`sparse_hfl`] (Alg. 5)                    | N | φ links |
+//!
+//! ### Wiring of Algorithm 5 (see DESIGN.md §6 for the mapping)
+//!
+//! Every sparsified link is one compressor instance:
+//! * MU→SBS: [`DgcCompressor`] (momentum correction, Eq. 24–29);
+//! * SBS→MU, SBS→MBS, MBS→SBS: [`DiscountedError`] encoders on model
+//!   *differences* (lines 21/24–31/36–39), with discounts β_s / β_s / β_m.
+//!
+//! Key invariant maintained throughout: the SBS's "true" model is
+//! `W_n = W̃_n + e_n` where `W̃_n` is the reference model its MUs hold and
+//! `e_n` is the DL encoder's suppressed error — transmitting `Ω(x + β·e)`
+//! and advancing `W̃_n` by exactly what was sent keeps every replica
+//! consistent without ever shipping a dense vector.
+//!
+//! With φ = 0 every encoder is lossless and the engine degenerates to
+//! exact Algorithm 1/3 (DGC with φ=0 flushes `v` each step, so the
+//! transmitted message is the momentum-corrected gradient — identical to
+//! server-side momentum SGD).
+
+use super::lr_schedule::LrSchedule;
+use super::oracle::{EvalMetrics, GradOracle};
+use crate::config::SparsityConfig;
+use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
+
+/// Options shared by all four algorithms.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// Total iterations (global steps).
+    pub iters: usize,
+    /// Peak learning rate (after linear scaling).
+    pub peak_lr: f64,
+    /// Warm-up iterations.
+    pub warmup_iters: usize,
+    /// LR decay milestones as fractions of `iters`.
+    pub milestones: (f64, f64),
+    /// Momentum σ (both MU-side DGC correction and dense momentum).
+    pub momentum: f32,
+    /// Weight decay λ.
+    pub weight_decay: f32,
+    /// Model-averaging period H.
+    pub h_period: usize,
+    /// Number of clusters N (1 → flat FL).
+    pub n_clusters: usize,
+    /// Sparsification configuration.
+    pub sparsity: SparsityConfig,
+    /// Evaluate every this many iterations (0 → only at the end).
+    pub eval_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            iters: 100,
+            peak_lr: 0.1,
+            warmup_iters: 0,
+            milestones: (0.5, 0.75),
+            momentum: 0.9,
+            weight_decay: 0.0,
+            h_period: 2,
+            n_clusters: 1,
+            sparsity: SparsityConfig::dense(),
+            eval_every: 0,
+        }
+    }
+}
+
+/// Per-link cumulative communication volume in bits (value+index wire
+/// format, 32-bit values) — consumed by the latency model to convert a
+/// training run into simulated network time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommBits {
+    pub mu_ul: f64,
+    pub sbs_dl: f64,
+    pub sbs_ul: f64,
+    pub mbs_dl: f64,
+    /// Number of MU→SBS messages (for averaging).
+    pub n_mu_msgs: u64,
+}
+
+impl CommBits {
+    pub fn total(&self) -> f64 {
+        self.mu_ul + self.sbs_dl + self.sbs_ul + self.mbs_dl
+    }
+}
+
+/// Output of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// (iteration, mean worker training loss).
+    pub train_loss: Vec<(usize, f64)>,
+    /// (iteration, held-out metrics).
+    pub evals: Vec<(usize, EvalMetrics)>,
+    /// Communication accounting.
+    pub bits: CommBits,
+    /// Final consensus parameters.
+    pub final_params: Vec<f32>,
+}
+
+impl TrainLog {
+    pub fn final_eval(&self) -> Option<EvalMetrics> {
+        self.evals.last().map(|(_, m)| *m)
+    }
+}
+
+/// Algorithm 1 (+ momentum, Eq. 23): flat synchronous FL, dense.
+pub fn fl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    let opts = TrainOptions {
+        n_clusters: 1,
+        sparsity: SparsityConfig::dense(),
+        ..opts.clone()
+    };
+    run_hierarchical(oracle, &opts)
+}
+
+/// Algorithm 4 (+ downlink sparsification, §V-C): flat sparse FL.
+pub fn sparse_fl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    let opts = TrainOptions {
+        n_clusters: 1,
+        sparsity: SparsityConfig {
+            enabled: true,
+            ..opts.sparsity.clone()
+        },
+        ..opts.clone()
+    };
+    run_hierarchical(oracle, &opts)
+}
+
+/// Algorithm 3 (+ momentum): hierarchical FL, dense, period-H averaging.
+pub fn hfl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    let opts = TrainOptions {
+        sparsity: SparsityConfig::dense(),
+        ..opts.clone()
+    };
+    assert!(opts.n_clusters > 1, "hfl requires n_clusters > 1 (use fl)");
+    run_hierarchical(oracle, &opts)
+}
+
+/// Algorithm 5: the paper's full sparse hierarchical FL.
+pub fn sparse_hfl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    let opts = TrainOptions {
+        sparsity: SparsityConfig {
+            enabled: true,
+            ..opts.sparsity.clone()
+        },
+        ..opts.clone()
+    };
+    assert!(opts.n_clusters > 1, "sparse_hfl requires n_clusters > 1");
+    run_hierarchical(oracle, &opts)
+}
+
+/// The parametric engine: N clusters × (K/N) workers, DGC uplinks,
+/// discounted-error model-difference encoders on the other three links,
+/// period-H global averaging.
+pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    let dim = oracle.dim();
+    let k_total = oracle.n_workers();
+    let n = opts.n_clusters;
+    assert!(n >= 1 && k_total >= n, "need ≥1 worker per cluster");
+    assert_eq!(
+        k_total % n,
+        0,
+        "workers ({k_total}) must divide evenly into clusters ({n}) — Assumption 1"
+    );
+    let per_cluster = k_total / n;
+
+    let (phi_ul, phi_sdl, phi_sul, phi_mdl) = if opts.sparsity.enabled {
+        (
+            opts.sparsity.phi_mu_ul,
+            opts.sparsity.phi_sbs_dl,
+            opts.sparsity.phi_sbs_ul,
+            opts.sparsity.phi_mbs_dl,
+        )
+    } else {
+        (0.0, 0.0, 0.0, 0.0)
+    };
+    // Flat FL: the single "SBS" *is* the MBS, so its DL uses the MBS's φ/β.
+    let (cluster_dl_phi, cluster_dl_beta) = if n == 1 {
+        (phi_mdl, opts.sparsity.beta_m)
+    } else {
+        (phi_sdl, opts.sparsity.beta_s)
+    };
+
+    let schedule = LrSchedule::new(opts.peak_lr, opts.warmup_iters, opts.iters, opts.milestones);
+
+    // Per-worker uplink compressors.
+    let mut dgc: Vec<DgcCompressor> = (0..k_total)
+        .map(|_| DgcCompressor::new(dim, opts.momentum, phi_ul))
+        .collect();
+    // Per-cluster reference models (what the MUs hold) and DL encoders.
+    let init = oracle.init_params();
+    let mut w_tilde: Vec<Vec<f32>> = vec![init.clone(); n];
+    let mut dl_enc: Vec<DiscountedError> = (0..n)
+        .map(|_| DiscountedError::new(dim, cluster_dl_phi, cluster_dl_beta as f32))
+        .collect();
+    // Per-cluster SBS→MBS encoders and the global reference model.
+    let mut ul_enc: Vec<DiscountedError> = (0..n)
+        .map(|_| DiscountedError::new(dim, phi_sul, opts.sparsity.beta_s as f32))
+        .collect();
+    let mut w_tilde_global = init.clone();
+    let mut mbs_enc = DiscountedError::new(dim, phi_mdl, opts.sparsity.beta_m as f32);
+
+    // Scratch.
+    let mut grad = vec![0.0f32; dim];
+    let mut agg = vec![0.0f32; dim];
+    let mut msg = SparseVec::empty(dim);
+    let mut log = TrainLog::default();
+
+    for t in 0..opts.iters {
+        let lr = schedule.at(t) as f32;
+        let mut iter_loss = 0.0f64;
+
+        for c in 0..n {
+            // --- Computation and Uplink (Alg. 5 lines 7–18) ---
+            agg.iter_mut().for_each(|x| *x = 0.0);
+            for j in 0..per_cluster {
+                let k = c * per_cluster + j;
+                let loss = oracle.loss_grad(k, &w_tilde[c], &mut grad);
+                iter_loss += loss / k_total as f64;
+                // Weight decay folds into the local gradient (pre-DGC).
+                if opts.weight_decay != 0.0 {
+                    for i in 0..dim {
+                        grad[i] += opts.weight_decay * w_tilde[c][i];
+                    }
+                }
+                dgc[k].step_into(&grad, &mut msg);
+                log.bits.mu_ul += msg.wire_bits(32);
+                log.bits.n_mu_msgs += 1;
+                msg.add_into(&mut agg, 1.0 / per_cluster as f32);
+            }
+            // --- Cluster model update + DL (lines 19–21, 35–39) ---
+            // x = −η·ĝ_n; DL message = Ω(x + β·e_n); W̃_n += sent.
+            for x in agg.iter_mut() {
+                *x *= -lr;
+            }
+            let dl_msg = dl_enc[c].compress(&agg);
+            log.bits.sbs_dl += dl_msg.wire_bits(32);
+            dl_msg.add_into(&mut w_tilde[c], 1.0);
+        }
+
+        log.train_loss.push((t, iter_loss));
+
+        // --- Global model averaging every H iterations (lines 22–34) ---
+        if n > 1 && (t + 1) % opts.h_period == 0 {
+            // Each SBS ships Δ_n = W_n − W̃ = (W̃_n + e_n) − W̃ through its
+            // sparsifying UL encoder.
+            agg.iter_mut().for_each(|x| *x = 0.0);
+            for c in 0..n {
+                let e_dl = dl_enc[c].error().to_vec();
+                let delta: Vec<f32> = (0..dim)
+                    .map(|i| w_tilde[c][i] + e_dl[i] - w_tilde_global[i])
+                    .collect();
+                let ul_msg = ul_enc[c].compress(&delta);
+                log.bits.sbs_ul += ul_msg.wire_bits(32);
+                ul_msg.add_into(&mut agg, 1.0 / n as f32);
+            }
+            // MBS: broadcast Ω(mean Δ + β_m·e) and advance the global ref.
+            let mbs_msg = mbs_enc.compress(&agg);
+            log.bits.mbs_dl += mbs_msg.wire_bits(32);
+            mbs_msg.add_into(&mut w_tilde_global, 1.0);
+            // Each SBS pulls its reference to the new global model through
+            // its DL encoder (final SBS→MU broadcast of the period).
+            for c in 0..n {
+                let delta: Vec<f32> = (0..dim)
+                    .map(|i| w_tilde_global[i] - w_tilde[c][i])
+                    .collect();
+                let dl_msg = dl_enc[c].compress(&delta);
+                log.bits.sbs_dl += dl_msg.wire_bits(32);
+                dl_msg.add_into(&mut w_tilde[c], 1.0);
+            }
+        }
+
+        if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
+            let consensus = consensus_params(&w_tilde);
+            let m = oracle.eval(&consensus);
+            log.evals.push((t + 1, m));
+        }
+    }
+
+    let consensus = consensus_params(&w_tilde);
+    let m = oracle.eval(&consensus);
+    log.evals.push((opts.iters, m));
+    log.final_params = consensus;
+    log
+}
+
+/// Consensus view: average of the cluster reference models.
+fn consensus_params(w_tilde: &[Vec<f32>]) -> Vec<f32> {
+    let n = w_tilde.len();
+    let dim = w_tilde[0].len();
+    let mut out = vec![0.0f32; dim];
+    for w in w_tilde {
+        for i in 0..dim {
+            out[i] += w[i] / n as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::oracle::QuadraticOracle;
+
+    fn opts(iters: usize) -> TrainOptions {
+        TrainOptions {
+            iters,
+            peak_lr: 0.05,
+            warmup_iters: 10,
+            milestones: (0.6, 0.85),
+            momentum: 0.9,
+            weight_decay: 0.0,
+            h_period: 4,
+            n_clusters: 1,
+            sparsity: SparsityConfig::dense(),
+            eval_every: 0,
+        }
+    }
+
+    /// Suboptimality gap of a parameter vector on the oracle's objective.
+    fn gap(oracle: &QuadraticOracle, w: &[f32]) -> f64 {
+        oracle.objective(w) - oracle.objective(&oracle.optimum())
+    }
+
+    #[test]
+    fn fl_converges_to_global_optimum() {
+        let mut oracle = QuadraticOracle::new(16, 8, 0.01, 101);
+        let log = fl(&mut oracle, &opts(400));
+        let opt = oracle.optimum();
+        let err: f64 = log
+            .final_params
+            .iter()
+            .zip(&opt)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 0.1, "FL distance to optimum {err}");
+        // Suboptimality gap shrinks (the raw loss has a large irreducible
+        // floor because workers hold different optima).
+        let g0 = gap(&oracle, &vec![0.0; 16]);
+        let gt = gap(&oracle, &log.final_params);
+        assert!(gt < g0 * 1e-3, "gap {g0} → {gt}");
+    }
+
+    #[test]
+    fn hfl_converges_to_global_optimum() {
+        let mut oracle = QuadraticOracle::new(16, 8, 0.01, 102);
+        let mut o = opts(600);
+        o.n_clusters = 4;
+        o.h_period = 4;
+        let log = hfl(&mut oracle, &o);
+        let opt = oracle.optimum();
+        let err: f64 = log
+            .final_params
+            .iter()
+            .zip(&opt)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 0.15, "HFL distance to optimum {err}");
+    }
+
+    #[test]
+    fn hfl_without_sync_diverges_from_consensus() {
+        // With H = ∞ (no sync within the horizon) clusters converge to their
+        // own optima, away from the global one — the reason Alg. 3 exists.
+        let mut oracle = QuadraticOracle::new(8, 8, 0.0, 103);
+        let mut o = opts(300);
+        o.n_clusters = 4;
+        o.h_period = 10_000;
+        let log = hfl(&mut oracle, &o);
+        let global_obj = oracle.objective(&log.final_params);
+        let mut oracle2 = QuadraticOracle::new(8, 8, 0.0, 103);
+        let mut o2 = opts(300);
+        o2.n_clusters = 4;
+        o2.h_period = 4;
+        let log2 = hfl(&mut oracle2, &o2);
+        let synced_obj = oracle2.objective(&log2.final_params);
+        assert!(
+            synced_obj < global_obj,
+            "period-H sync should improve the global objective: {synced_obj} vs {global_obj}"
+        );
+    }
+
+    #[test]
+    fn sparse_fl_converges_close_to_dense() {
+        let mut dense_oracle = QuadraticOracle::new(32, 4, 0.01, 104);
+        let dense = fl(&mut dense_oracle, &opts(500));
+        let mut sp = opts(500);
+        sp.sparsity = SparsityConfig {
+            enabled: true,
+            phi_mu_ul: 0.9,
+            phi_sbs_dl: 0.5,
+            phi_sbs_ul: 0.5,
+            phi_mbs_dl: 0.5,
+            beta_m: 0.2,
+            beta_s: 0.5,
+        };
+        let mut sparse_oracle = QuadraticOracle::new(32, 4, 0.01, 104);
+        let sparse = sparse_fl(&mut sparse_oracle, &sp);
+        let d_gap = gap(&dense_oracle, &dense.final_params);
+        let s_gap = gap(&sparse_oracle, &sparse.final_params);
+        let init_gap = gap(&sparse_oracle, &vec![0.0; 32]);
+        // Sparse must close most of the initial gap (Fig. 6: sparsified
+        // training still converges) even if it lags dense.
+        assert!(s_gap < init_gap * 0.05, "sparse gap {s_gap} vs init {init_gap}");
+        assert!(d_gap <= s_gap * 1.5 + 1e-3, "dense should be ≼ sparse: {d_gap} vs {s_gap}");
+    }
+
+    #[test]
+    fn sparse_hfl_converges_and_spends_fewer_bits() {
+        let mut o = opts(600);
+        o.n_clusters = 4;
+        o.h_period = 4;
+        // The paper's φ=0.99 targets Q≈11M (110k survivors); on a dim-64
+        // test problem that is <1 coordinate, so scale φ to keep ~6 alive.
+        o.sparsity = SparsityConfig {
+            phi_mu_ul: 0.9,
+            ..SparsityConfig::default()
+        };
+        let mut oracle = QuadraticOracle::new(64, 8, 0.01, 105);
+        let sparse = sparse_hfl(&mut oracle, &o);
+        let mut oracle_d = QuadraticOracle::new(64, 8, 0.01, 105);
+        let dense = hfl(&mut oracle_d, &o);
+        let s_gap = gap(&oracle, &sparse.final_params);
+        let init_gap = gap(&oracle, &vec![0.0; 64]);
+        assert!(s_gap < init_gap * 0.1, "sparse HFL stalled: {s_gap} vs {init_gap}");
+        assert!(
+            sparse.bits.total() < dense.bits.total() * 0.35,
+            "sparse bits {} should be ≪ dense {}",
+            sparse.bits.total(),
+            dense.bits.total()
+        );
+    }
+
+    #[test]
+    fn dense_engine_matches_manual_momentum_sgd_fl() {
+        // With N=1, φ=0, no decay/warmup, the engine must reproduce plain
+        // momentum SGD on the averaged gradient exactly.
+        let dim = 8;
+        let k = 4;
+        let mut oracle = QuadraticOracle::new(dim, k, 0.0, 106);
+        let mut o = opts(30);
+        o.warmup_iters = 0;
+        o.momentum = 0.9;
+        o.peak_lr = 0.03;
+        o.milestones = (2.0_f64.min(0.99), 0.995); // avoid decay inside 30 iters
+        let log = fl(&mut oracle, &o);
+
+        // Manual reference.
+        let mut oracle2 = QuadraticOracle::new(dim, k, 0.0, 106);
+        let mut w = vec![0.0f32; dim];
+        let mut u = vec![0.0f32; dim];
+        let mut g = vec![0.0f32; dim];
+        for _ in 0..30 {
+            let mut avg = vec![0.0f32; dim];
+            for kk in 0..k {
+                oracle2.loss_grad(kk, &w, &mut g);
+                for i in 0..dim {
+                    avg[i] += g[i] / k as f32;
+                }
+            }
+            for i in 0..dim {
+                u[i] = 0.9 * u[i] + avg[i];
+                w[i] -= 0.03 * u[i];
+            }
+        }
+        for i in 0..dim {
+            assert!(
+                (log.final_params[i] - w[i]).abs() < 1e-4,
+                "coord {i}: {} vs {}",
+                log.final_params[i],
+                w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn comm_bits_accounting_is_consistent() {
+        let mut oracle = QuadraticOracle::new(100, 4, 0.0, 107);
+        let mut o = opts(10);
+        o.n_clusters = 2;
+        o.h_period = 5;
+        o.sparsity = SparsityConfig::default();
+        let log = sparse_hfl(&mut oracle, &o);
+        assert!(log.bits.mu_ul > 0.0);
+        assert!(log.bits.sbs_dl > 0.0);
+        assert!(log.bits.sbs_ul > 0.0);
+        assert!(log.bits.mbs_dl > 0.0);
+        assert_eq!(log.bits.n_mu_msgs, 10 * 4);
+        // UL messages: φ=0.99 on dim=100 → ~1–2 coords × (32+7) bits × 40 msgs.
+        assert!(log.bits.mu_ul < 40.0 * 5.0 * 39.0, "{}", log.bits.mu_ul);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_clusters_rejected() {
+        let mut oracle = QuadraticOracle::new(4, 7, 0.0, 108);
+        let mut o = opts(5);
+        o.n_clusters = 3;
+        let _ = hfl(&mut oracle, &o);
+    }
+
+    #[test]
+    fn eval_cadence_respected() {
+        let mut oracle = QuadraticOracle::new(4, 2, 0.0, 109);
+        let mut o = opts(20);
+        o.eval_every = 5;
+        let log = fl(&mut oracle, &o);
+        // evals at 5, 10, 15, 20 + final (20 duplicates allowed)
+        assert!(log.evals.len() >= 4);
+        assert_eq!(log.evals[0].0, 5);
+    }
+}

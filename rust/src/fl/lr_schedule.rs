@@ -1,0 +1,91 @@
+//! Learning-rate schedule of §V-B: linear-scaling base LR, gradual warm-up
+//! over the first epochs (Goyal et al.), and ×0.1 step decay at the 50% and
+//! 75% milestones (the paper's 150th/225th epoch of 300).
+
+/// Piecewise LR schedule evaluated per iteration.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    /// Peak learning rate after warm-up (already linearly scaled by the
+    /// cumulative batch size).
+    pub peak_lr: f64,
+    /// Number of warm-up iterations (linear ramp from `peak/warmup_iters`).
+    pub warmup_iters: usize,
+    /// Total iterations.
+    pub total_iters: usize,
+    /// Milestone fractions of `total_iters` at which LR drops ×`decay`.
+    pub milestones: (f64, f64),
+    /// Multiplicative decay at each milestone.
+    pub decay: f64,
+}
+
+impl LrSchedule {
+    pub fn new(peak_lr: f64, warmup_iters: usize, total_iters: usize, milestones: (f64, f64)) -> Self {
+        assert!(total_iters > 0);
+        Self {
+            peak_lr,
+            warmup_iters,
+            total_iters,
+            milestones,
+            decay: 0.1,
+        }
+    }
+
+    /// LR at iteration `t` (0-based).
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_iters > 0 && t < self.warmup_iters {
+            // Linear ramp: (t+1)/warmup × peak.
+            return self.peak_lr * (t + 1) as f64 / self.warmup_iters as f64;
+        }
+        let frac = t as f64 / self.total_iters as f64;
+        let mut lr = self.peak_lr;
+        if frac >= self.milestones.0 {
+            lr *= self.decay;
+        }
+        if frac >= self.milestones.1 {
+            lr *= self.decay;
+        }
+        lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule::new(1.4, 100, 1000, (0.5, 0.75))
+    }
+
+    #[test]
+    fn warmup_ramps_linearly_to_peak() {
+        let s = sched();
+        assert!((s.at(0) - 0.014).abs() < 1e-12);
+        assert!((s.at(49) - 0.7).abs() < 1e-9);
+        assert!((s.at(99) - 1.4).abs() < 1e-12);
+        assert!((s.at(100) - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn milestones_decay_by_ten() {
+        let s = sched();
+        assert!((s.at(499) - 1.4).abs() < 1e-12);
+        assert!((s.at(500) - 0.14).abs() < 1e-12);
+        assert!((s.at(749) - 0.14).abs() < 1e-12);
+        assert!((s.at(750) - 0.014).abs() < 1e-12);
+        assert!((s.at(999) - 0.014).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_warmup_supported() {
+        let s = LrSchedule::new(0.1, 0, 10, (0.5, 0.75));
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = sched();
+        for t in 100..999 {
+            assert!(s.at(t + 1) <= s.at(t) + 1e-12);
+        }
+    }
+}

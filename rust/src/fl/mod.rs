@@ -1,0 +1,23 @@
+//! Federated learning algorithms on flat parameter vectors:
+//!
+//! * [`fl`] — centralized synchronous FL (Algorithm 1),
+//! * [`hfl`] — hierarchical FL with period-H model averaging (Algorithm 3),
+//! * [`sparse_fl`] — DGC-sparsified FL (Algorithm 4),
+//! * [`sparse_hfl`] — the paper's full system: hierarchical FL with all four
+//!   links sparsified and discounted error accumulation (Algorithm 5).
+//!
+//! Gradients come from a [`GradOracle`] — either the AOT-compiled JAX model
+//! through the PJRT runtime (production path) or a pure-Rust quadratic
+//! problem (tests, convergence proofs).
+
+pub mod algorithms;
+pub mod lr_schedule;
+pub mod optimizer;
+pub mod oracle;
+
+pub use algorithms::{
+    fl, hfl, run_hierarchical, sparse_fl, sparse_hfl, CommBits, TrainLog, TrainOptions,
+};
+pub use lr_schedule::LrSchedule;
+pub use optimizer::MomentumSgd;
+pub use oracle::{EvalMetrics, GradOracle, QuadraticOracle};

@@ -1,0 +1,193 @@
+//! Gradient sources for the FL algorithms.
+//!
+//! [`GradOracle`] abstracts "worker k computes a minibatch loss gradient at
+//! parameters w": the production implementation drives the AOT-compiled JAX
+//! model through PJRT ([`crate::runtime`]); [`QuadraticOracle`] is a
+//! pure-Rust strongly-convex problem with a known optimum used by the
+//! convergence tests — every algorithmic claim (FL ≈ HFL, sparsification
+//! converges, H trades accuracy) is first proven on it.
+
+/// Evaluation metrics on held-out data.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    /// Top-1 accuracy ∈ [0,1]; NaN for oracles without a notion of accuracy.
+    pub accuracy: f64,
+}
+
+/// A source of per-worker minibatch gradients over a flat parameter vector.
+pub trait GradOracle {
+    /// Parameter dimension Q.
+    fn dim(&self) -> usize;
+
+    /// Number of workers K.
+    fn n_workers(&self) -> usize;
+
+    /// Compute worker `k`'s next minibatch loss and gradient at `params`,
+    /// writing the gradient into `grad_out`. Advances that worker's batch
+    /// cursor (workers iterate their own shard, unshuffled, per §V-B).
+    fn loss_grad(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64;
+
+    /// Evaluate `params` on the held-out set.
+    fn eval(&mut self, params: &[f32]) -> EvalMetrics;
+
+    /// Iterations per epoch (shard size / batch size).
+    fn iters_per_epoch(&self) -> usize;
+
+    /// Initial parameter vector (deterministic per oracle).
+    fn init_params(&mut self) -> Vec<f32>;
+}
+
+/// Strongly convex synthetic problem: worker k owns
+/// `f_k(w) = 0.5·(w − c_k)ᵀ A_k (w − c_k)` with diagonal PSD `A_k`.
+/// The global optimum of (1/K)Σf_k is the A-weighted mean of the `c_k`,
+/// computable in closed form — ideal for convergence assertions.
+#[derive(Clone, Debug)]
+pub struct QuadraticOracle {
+    dim: usize,
+    /// Per-worker diagonal curvatures.
+    a: Vec<Vec<f32>>,
+    /// Per-worker optima.
+    c: Vec<Vec<f32>>,
+    /// Gradient noise level (simulates minibatch stochasticity).
+    pub noise: f32,
+    rng: crate::util::rng::Pcg64,
+}
+
+impl QuadraticOracle {
+    pub fn new(dim: usize, workers: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0xACC);
+        let a = (0..workers)
+            .map(|_| (0..dim).map(|_| rng.uniform_range(0.5, 2.0) as f32).collect())
+            .collect();
+        let c = (0..workers)
+            .map(|_| (0..dim).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect())
+            .collect();
+        Self {
+            dim,
+            a,
+            c,
+            noise,
+            rng,
+        }
+    }
+
+    /// Closed-form global optimum: argmin Σ_k 0.5(w−c_k)ᵀA_k(w−c_k)
+    /// = (Σ A_k)⁻¹ (Σ A_k c_k), coordinate-wise for diagonal A.
+    pub fn optimum(&self) -> Vec<f32> {
+        (0..self.dim)
+            .map(|i| {
+                let num: f32 = self.a.iter().zip(&self.c).map(|(a, c)| a[i] * c[i]).sum();
+                let den: f32 = self.a.iter().map(|a| a[i]).sum();
+                num / den
+            })
+            .collect()
+    }
+
+    /// Global objective value at `w`.
+    pub fn objective(&self, w: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for (a, c) in self.a.iter().zip(&self.c) {
+            for i in 0..self.dim {
+                total += 0.5 * (a[i] as f64) * ((w[i] - c[i]) as f64).powi(2);
+            }
+        }
+        total / self.a.len() as f64
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_workers(&self) -> usize {
+        self.a.len()
+    }
+
+    fn loss_grad(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        assert_eq!(params.len(), self.dim);
+        assert_eq!(grad_out.len(), self.dim);
+        let (a, c) = (&self.a[worker], &self.c[worker]);
+        let mut loss = 0.0f64;
+        for i in 0..self.dim {
+            let d = params[i] - c[i];
+            grad_out[i] = a[i] * d + self.noise * self.rng.normal() as f32;
+            loss += 0.5 * (a[i] as f64) * (d as f64) * (d as f64);
+        }
+        loss
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalMetrics {
+        EvalMetrics {
+            loss: self.objective(params),
+            accuracy: f64::NAN,
+        }
+    }
+
+    fn iters_per_epoch(&self) -> usize {
+        10
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        vec![0.0; self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_is_stationary() {
+        let mut o = QuadraticOracle::new(6, 4, 0.0, 7);
+        let w = o.optimum();
+        // Average gradient over workers at the optimum ≈ 0.
+        let mut avg = vec![0.0f32; 6];
+        let mut g = vec![0.0f32; 6];
+        for k in 0..4 {
+            o.loss_grad(k, &w, &mut g);
+            for i in 0..6 {
+                avg[i] += g[i] / 4.0;
+            }
+        }
+        for (i, &x) in avg.iter().enumerate() {
+            assert!(x.abs() < 1e-4, "coord {i}: {x}");
+        }
+    }
+
+    #[test]
+    fn objective_minimized_at_optimum() {
+        let o = QuadraticOracle::new(5, 3, 0.0, 8);
+        let w = o.optimum();
+        let fo = o.objective(&w);
+        let mut rng = crate::util::rng::Pcg64::seeded(9);
+        for _ in 0..20 {
+            let perturbed: Vec<f32> =
+                w.iter().map(|&x| x + rng.normal_ms(0.0, 0.5) as f32).collect();
+            assert!(o.objective(&perturbed) >= fo - 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_changes_gradients_but_not_mean() {
+        let mut o = QuadraticOracle::new(3, 1, 0.5, 10);
+        let w = vec![1.0f32, 2.0, 3.0];
+        let mut g = vec![0.0f32; 3];
+        let mut mean = vec![0.0f64; 3];
+        let n = 2000;
+        for _ in 0..n {
+            o.loss_grad(0, &w, &mut g);
+            for i in 0..3 {
+                mean[i] += g[i] as f64 / n as f64;
+            }
+        }
+        // Mean gradient ≈ noiseless gradient.
+        let mut o2 = QuadraticOracle::new(3, 1, 0.0, 10);
+        let mut g0 = vec![0.0f32; 3];
+        o2.loss_grad(0, &w, &mut g0);
+        for i in 0..3 {
+            assert!((mean[i] - g0[i] as f64).abs() < 0.05, "coord {i}");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! # hfl — Hierarchical Federated Learning across Heterogeneous Cellular Networks
+//!
+//! A three-layer reproduction of Abad, Ozfatura, Gündüz & Ercetin (2019):
+//!
+//! - **Layer 3 (this crate)** — the hierarchical FL coordinator (MBS leader,
+//!   SBS cluster servers, MU workers), DGC-style sparse communication, and a
+//!   full wireless latency substrate (OFDM sub-carrier allocation, truncated
+//!   channel-inversion power control, M-QAM rates, rateless broadcast,
+//!   hexagonal frequency reuse).
+//! - **Layer 2 (JAX, build-time)** — model forward/backward on flat parameter
+//!   vectors, AOT-lowered to HLO text in `artifacts/`.
+//! - **Layer 1 (Pallas, build-time)** — tiled-GEMM and fused-DGC kernels
+//!   inside the L2 graph, checked against a pure-jnp oracle.
+//!
+//! Python never runs at training time: [`runtime`] loads the HLO artifacts
+//! through the PJRT CPU client (`xla` crate) and the whole training loop is
+//! native Rust.
+//!
+//! ## Crate map
+//!
+//! | module | contents |
+//! |--------|----------|
+//! | [`util`] | RNG (PCG64), special functions (E1), quickselect, stats, CSV/JSON, microbench |
+//! | [`config`] | typed configuration + TOML-subset parser + paper presets (Table II) |
+//! | [`cli`] | dependency-free argument parser and subcommand dispatch |
+//! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement |
+//! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
+//! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation |
+//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 |
+//! | [`data`] | synthetic CIFAR-like dataset, non-shuffled partitioner, batcher |
+//! | [`runtime`] | PJRT client wrapper, HLO artifact registry, typed execution |
+//! | [`coordinator`] | thread-actor MBS/SBS/MU runtime with simulated-latency transport |
+//! | [`sim`] | figure/table scenario runners (Fig. 3–6, Table III) |
+//! | [`testing`] | minimal property-testing harness (offline substitute for proptest) |
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fl;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod testing;
+pub mod topology;
+pub mod util;
+pub mod wireless;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,259 @@
+//! `hfl` — command-line launcher for the hierarchical federated learning
+//! system.
+//!
+//! ```text
+//! hfl config    [--preset paper|smoke] [--file cfg.toml]      print active parameters
+//! hfl topology  [--clusters N] [--mus N] [--seed S]           layout + reuse report
+//! hfl latency   [--fig 3|4|5a|5b|all] [--out results/]        regenerate Fig. 3–5 data
+//! hfl train     [--algo fl|hfl|sparse-fl|sparse-hfl] [--model mlp|cnn]
+//!               [--iters N] [--h N] [--clusters N] [--mus N]
+//!               [--coordinated]                                train on the AOT model
+//! hfl table3    [--full]                                       Fig. 6 / Table III study
+//! ```
+
+use anyhow::{bail, Result};
+use hfl::cli::Args;
+use hfl::config::Config;
+use hfl::coordinator::{run_coordinated, CoordinatorOptions};
+use hfl::data::SyntheticSpec;
+use hfl::fl::{run_hierarchical, TrainOptions};
+use hfl::runtime::{ModelOracle, Runtime};
+use hfl::sim::experiments::{self, Scale};
+use hfl::sim::{fig3, fig4, fig5a, fig5b};
+use hfl::topology::NetworkTopology;
+use hfl::util::logging;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    logging::init(args.flag("verbose"));
+    let cfg = load_config(&args)?;
+    match args.subcommand.as_deref() {
+        Some("config") => {
+            print!("{}", cfg.render_table());
+            args.finish()
+        }
+        Some("topology") => cmd_topology(&args, &cfg),
+        Some("latency") => cmd_latency(&args, &cfg),
+        Some("train") => cmd_train(&args, &cfg),
+        Some("table3") => cmd_table3(&args, &cfg),
+        Some(other) => {
+            bail!("unknown subcommand `{other}` (try: config, topology, latency, train, table3)")
+        }
+        None => {
+            eprintln!(
+                "usage: hfl <config|topology|latency|train|table3> [options]\n\
+                 see rust/src/main.rs docs or README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get_or("preset", "paper").as_str() {
+        "paper" => Config::paper_table2(),
+        "smoke" => Config::smoke(),
+        other => bail!("unknown preset `{other}`"),
+    };
+    if let Some(path) = args.get("file") {
+        cfg = cfg.overlay_file(path)?;
+    }
+    // Common CLI overrides.
+    if let Some(m) = args.get_parsed::<usize>("subcarriers")? {
+        cfg.radio.subcarriers = m;
+    }
+    if let Some(a) = args.get_parsed::<f64>("alpha")? {
+        cfg.radio.pathloss_exp = a;
+    }
+    if let Some(n) = args.get_parsed::<usize>("clusters")? {
+        cfg.topology.n_clusters = n;
+    }
+    if let Some(m) = args.get_parsed::<usize>("mus")? {
+        cfg.topology.mus_per_cluster = m;
+    }
+    if let Some(h) = args.get_parsed::<usize>("h")? {
+        cfg.training.h_period = h;
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed")? {
+        cfg.training.seed = s;
+        cfg.topology.placement_seed = s;
+    }
+    if args.flag("dense") {
+        cfg.sparsity.enabled = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_topology(args: &Args, cfg: &Config) -> Result<()> {
+    let topo = NetworkTopology::generate(&cfg.topology);
+    println!("{}", topo.ascii_map(72, 36));
+    println!();
+    println!(
+        "clusters: {}   colors: {}   sub-carriers/cluster: {}",
+        topo.n_clusters(),
+        topo.layout.n_colors,
+        topo.layout.subcarriers_per_cluster(cfg.radio.subcarriers)
+    );
+    println!(
+        "min co-channel distance: {:.1} m (guard {:.1} m)",
+        topo.layout.min_cochannel_distance(),
+        topo.layout.d_th
+    );
+    for c in 0..topo.n_clusters() {
+        let d = topo.sbs_distances(c);
+        println!(
+            "  cluster {c}: color {}  {} MUs  d(SBS) {:.0}–{:.0} m",
+            topo.layout.colors[c],
+            d.len(),
+            d.iter().cloned().fold(f64::INFINITY, f64::min),
+            d.iter().cloned().fold(0.0, f64::max),
+        );
+    }
+    args.finish()
+}
+
+fn cmd_latency(args: &Args, cfg: &Config) -> Result<()> {
+    let which = args.get_or("fig", "all");
+    let out_dir = args.get_or("out", "results");
+    let mus: Vec<usize> = vec![2, 4, 6, 8, 10, 14, 20];
+    let alphas: Vec<f64> = (0..=10).map(|i| 2.0 + 0.2 * i as f64).collect();
+    let figs: Vec<(&str, hfl::sim::FigureSeries)> = match which.as_str() {
+        "3" => vec![("fig3", fig3(cfg, &mus))],
+        "4" => vec![("fig4", fig4(cfg, &alphas))],
+        "5a" => vec![("fig5a", fig5a(cfg, &mus))],
+        "5b" => vec![("fig5b", fig5b(cfg, &mus))],
+        "all" => vec![
+            ("fig3", fig3(cfg, &mus)),
+            ("fig4", fig4(cfg, &alphas)),
+            ("fig5a", fig5a(cfg, &mus)),
+            ("fig5b", fig5b(cfg, &mus)),
+        ],
+        other => bail!("unknown figure `{other}`"),
+    };
+    for (name, f) in figs {
+        println!("{}", f.render());
+        let path = format!("{out_dir}/{name}.csv");
+        f.to_csv().save(&path)?;
+        println!("wrote {path}\n");
+    }
+    args.finish()
+}
+
+fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
+    let algo = args.get_or("algo", "sparse-hfl");
+    let model = args.get_or("model", cfg.training.model.as_str());
+    let iters = args.get_parsed_or("iters", 120usize)?;
+    let coordinated = args.flag("coordinated");
+    let train_samples = args.get_parsed_or("train-samples", cfg.training.train_samples)?;
+    let test_samples = args.get_parsed_or("test-samples", cfg.training.test_samples)?;
+    args.finish()?;
+
+    let (n_clusters, sparse) = match algo.as_str() {
+        "fl" => (1, false),
+        "sparse-fl" => (1, true),
+        "hfl" => (cfg.topology.n_clusters, false),
+        "sparse-hfl" => (cfg.topology.n_clusters, true),
+        other => bail!("unknown algo `{other}`"),
+    };
+    let workers = cfg.topology.total_mus();
+    let opts = TrainOptions {
+        iters,
+        peak_lr: cfg.training.scaled_lr(workers),
+        warmup_iters: iters / 10,
+        milestones: cfg.training.decay_milestones,
+        momentum: cfg.training.momentum as f32,
+        weight_decay: cfg.training.weight_decay as f32,
+        h_period: cfg.training.h_period,
+        n_clusters,
+        sparsity: if sparse {
+            cfg.sparsity.clone()
+        } else {
+            hfl::config::SparsityConfig::dense()
+        },
+        eval_every: (iters / 8).max(1),
+    };
+    let spec = SyntheticSpec {
+        n_train: train_samples,
+        n_test: test_samples,
+        noise: 0.6,
+        seed: cfg.training.seed,
+        ..SyntheticSpec::default()
+    };
+    log::info!(
+        "training {algo} model={model} workers={workers} clusters={n_clusters} iters={iters} coordinated={coordinated}"
+    );
+
+    if coordinated {
+        let mut copts = CoordinatorOptions::from(&opts);
+        copts.eval_every_syncs = 2;
+        let model2 = model.clone();
+        let run = run_coordinated(
+            move || {
+                let rt = Runtime::load_default().expect("load artifacts");
+                ModelOracle::new(&rt, &model2, workers, &spec).expect("build oracle")
+            },
+            &copts,
+        )?;
+        for (it, m) in &run.sync_evals {
+            println!(
+                "iter {it:>5}  acc {:>6.2}%  loss {:.4}",
+                m.accuracy * 100.0,
+                m.loss
+            );
+        }
+        println!(
+            "final: acc {:.2}%  loss {:.4}",
+            run.final_eval.accuracy * 100.0,
+            run.final_eval.loss
+        );
+        println!(
+            "bits: mu_ul {:.3e}  sbs_dl {:.3e}  sbs_ul {:.3e}  mbs_dl {:.3e}",
+            run.metrics.total_bits(hfl::coordinator::LinkKind::MuUl),
+            run.metrics.total_bits(hfl::coordinator::LinkKind::SbsDl),
+            run.metrics.total_bits(hfl::coordinator::LinkKind::SbsUl),
+            run.metrics.total_bits(hfl::coordinator::LinkKind::MbsDl),
+        );
+    } else {
+        let rt = Runtime::load_default()?;
+        let mut oracle = ModelOracle::new(&rt, &model, workers, &spec)?;
+        let log = run_hierarchical(&mut oracle, &opts);
+        for (it, m) in &log.evals {
+            println!(
+                "iter {it:>5}  acc {:>6.2}%  loss {:.4}",
+                m.accuracy * 100.0,
+                m.loss
+            );
+        }
+        println!("total bits: {:.3e}", log.bits.total());
+    }
+    Ok(())
+}
+
+fn cmd_table3(args: &Args, cfg: &Config) -> Result<()> {
+    let scale = if args.flag("full") {
+        Scale::full()
+    } else {
+        Scale::quick()
+    };
+    let model = args.get_or("model", "mlp");
+    args.finish()?;
+    let scale = Scale { model, ..scale };
+    let mut factory = experiments::pjrt_oracle_factory(cfg, &scale);
+    let results = experiments::run_table3(cfg, &scale, |sc, seed| factory(sc, seed))?;
+    println!("{}", experiments::render_table3(&results));
+    for r in &results {
+        println!("-- {} accuracy curve (iter, %):", r.scenario.name);
+        for (it, acc) in &r.curve {
+            println!("   {it:>5} {acc:>6.2}");
+        }
+    }
+    Ok(())
+}

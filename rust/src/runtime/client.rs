@@ -1,0 +1,298 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Outputs arrive as a 1-element tuple per
+//! the AOT `return_tuple=True` convention and are decomposed into flat
+//! `Vec<f32>` buffers.
+
+use super::manifest::{ArtifactMeta, Manifest, ModelMeta};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A typed argument for [`Executable::run`].
+pub enum TensorArg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> TensorArg<'a> {
+    fn numel(&self) -> usize {
+        match self {
+            TensorArg::F32(d, _) => d.len(),
+            TensorArg::I32(d, _) => d.len(),
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            TensorArg::F32(_, s) => s,
+            TensorArg::I32(_, s) => s,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorArg::F32(d, _) => xla::Literal::vec1(d),
+            TensorArg::I32(d, _) => xla::Literal::vec1(d),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+/// One compiled AOT computation.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape-checked arguments; returns each output flattened
+    /// to `Vec<f32>` (i32 outputs are converted — the exported graphs only
+    /// produce f32).
+    pub fn run(&self, args: &[TensorArg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, want)) in args.iter().zip(&self.meta.inputs).enumerate() {
+            if arg.numel() != want.numel() {
+                bail!(
+                    "{}: input {i} has {} elements, manifest says {} (shape {:?})",
+                    self.meta.name,
+                    arg.numel(),
+                    want.numel(),
+                    want.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // return_tuple=True → always a tuple at top level.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: expected tuple output: {e:?}", self.meta.name))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}")))
+            .collect()
+    }
+}
+
+/// The shared PJRT client plus lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$HFL_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("HFL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(Executable { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn model_meta(&self, model: &str) -> Result<&ModelMeta> {
+        self.manifest.model(model)
+    }
+
+    /// Read the deterministic initial parameter vector exported by aot.py.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self.manifest.model(model)?;
+        let path = self.dir.join(&meta.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != meta.q_params * 4 {
+            bail!(
+                "{}: {} bytes, expected {}×4",
+                path.display(),
+                bytes.len(),
+                meta.q_params
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_and_runs_train_step_mlp() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(dir).unwrap();
+        let meta = rt.model_meta("mlp").unwrap().clone();
+        let exe = rt.executable("train_step_mlp").unwrap();
+        let params = rt.init_params("mlp").unwrap();
+        assert_eq!(params.len(), meta.q_params);
+        let x = vec![0.1f32; meta.train_batch * meta.input_dim];
+        let y: Vec<i32> = (0..meta.train_batch as i32).map(|i| i % 10).collect();
+        let out = exe
+            .run(&[
+                TensorArg::F32(&params, &[meta.q_params]),
+                TensorArg::F32(&x, &[meta.train_batch, meta.input_dim]),
+                TensorArg::I32(&y, &[meta.train_batch]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let loss = out[0][0];
+        // Untrained 10-class loss ≈ ln 10 ≈ 2.3.
+        assert!(loss.is_finite() && loss > 0.5 && loss < 6.0, "loss {loss}");
+        assert_eq!(out[1].len(), meta.q_params);
+        let gnorm: f32 = out[1].iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(gnorm > 0.0 && gnorm.is_finite());
+    }
+
+    #[test]
+    fn executable_cache_returns_same_instance() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(dir).unwrap();
+        let a = rt.executable("eval_step_mlp").unwrap();
+        let b = rt.executable("eval_step_mlp").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(dir).unwrap();
+        let exe = rt.executable("train_step_mlp").unwrap();
+        let tiny = vec![0f32; 8];
+        let err = exe.run(&[
+            TensorArg::F32(&tiny, &[8]),
+            TensorArg::F32(&tiny, &[8]),
+            TensorArg::I32(&[0i32; 8], &[8]),
+        ]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn gradient_descends_loss() {
+        // Ten SGD steps through the AOT artifact must reduce the loss —
+        // the end-to-end L3→L2→L1 correctness check.
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(dir).unwrap();
+        let meta = rt.model_meta("mlp").unwrap().clone();
+        let exe = rt.executable("train_step_mlp").unwrap();
+        let mut params = rt.init_params("mlp").unwrap();
+        // Deterministic separable batch.
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let mut x = vec![0f32; meta.train_batch * meta.input_dim];
+        let mut y = vec![0i32; meta.train_batch];
+        for i in 0..meta.train_batch {
+            let cls = (i % 10) as i32;
+            y[i] = cls;
+            for j in 0..meta.input_dim {
+                let sig = if j % 10 == cls as usize { 2.0 } else { 0.0 };
+                x[i * meta.input_dim + j] = sig + 0.1 * rng.normal() as f32;
+            }
+        }
+        let run = |params: &Vec<f32>| {
+            exe.run(&[
+                TensorArg::F32(params, &[meta.q_params]),
+                TensorArg::F32(&x, &[meta.train_batch, meta.input_dim]),
+                TensorArg::I32(&y, &[meta.train_batch]),
+            ])
+            .unwrap()
+        };
+        let loss0 = run(&params)[0][0];
+        for _ in 0..10 {
+            let out = run(&params);
+            for (p, g) in params.iter_mut().zip(&out[1]) {
+                *p -= 0.1 * g;
+            }
+        }
+        let loss1 = run(&params)[0][0];
+        assert!(
+            loss1 < loss0 * 0.8,
+            "loss should descend: {loss0} → {loss1}"
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! `artifacts/manifest.json` schema and parser (via the crate's own JSON
+//! reader — no serde offline).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tensor shape + dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT artifact (an HLO-text file plus its signature).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Per-model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub q_params: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    pub init_file: String,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version as i64 != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = req_str(a, "name")?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: req_str(a, "file")?,
+                    inputs: tensors(a.get("inputs"))?,
+                    outputs: tensors(a.get("outputs"))?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        if let Some(obj) = root.get("models").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                models.insert(
+                    k.clone(),
+                    ModelMeta {
+                        q_params: req_usize(v, "q_params")?,
+                        train_batch: req_usize(v, "train_batch")?,
+                        eval_batch: req_usize(v, "eval_batch")?,
+                        input_dim: req_usize(v, "input_dim")?,
+                        n_classes: req_usize(v, "n_classes")?,
+                        init_file: req_str(v, "init_file")?,
+                    },
+                );
+            }
+        }
+        Ok(Self { artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model `{name}` not in manifest"))
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string field `{key}`"))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing integer field `{key}`"))
+}
+
+fn tensors(v: Option<&Json>) -> Result<Vec<TensorMeta>> {
+    let arr = v
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing tensor list"))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorMeta {
+                shape,
+                dtype: req_str(t, "dtype")?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "train_step_mlp", "file": "train_step_mlp.hlo.txt",
+             "inputs": [{"shape": [10], "dtype": "f32"},
+                        {"shape": [4, 6], "dtype": "f32"},
+                        {"shape": [4], "dtype": "i32"}],
+             "outputs": [{"shape": [], "dtype": "f32"},
+                         {"shape": [10], "dtype": "f32"}]}
+        ],
+        "models": {"mlp": {"q_params": 10, "train_batch": 4, "eval_batch": 8,
+                            "input_dim": 6, "n_classes": 10,
+                            "init_file": "init_mlp.f32"}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("train_step_mlp").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![4, 6]);
+        assert_eq!(a.inputs[1].numel(), 24);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].numel(), 1);
+        let mm = m.model("mlp").unwrap();
+        assert_eq!(mm.q_params, 10);
+        assert_eq!(mm.init_file, "init_mlp.f32");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for model in ["mlp", "cnn"] {
+                assert!(m.model(model).is_ok());
+                assert!(m.artifact(&format!("train_step_{model}")).is_ok());
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime (Layer 3 ⇄ Layer 2 bridge): load the AOT HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them once on the PJRT CPU
+//! client, and execute them from the training hot path with flat f32/i32
+//! buffers. Python is never invoked here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, Q, batches).
+//! * [`client`] — `Runtime`: one PJRT client + compiled executables.
+//! * [`oracle`] — `ModelOracle`: implements [`crate::fl::GradOracle`] on top
+//!   of the `train_step`/`eval_step` executables plus the synthetic dataset.
+
+pub mod client;
+pub mod manifest;
+pub mod oracle;
+
+pub use client::{Executable, Runtime, TensorArg};
+pub use manifest::{ArtifactMeta, Manifest, ModelMeta, TensorMeta};
+pub use oracle::ModelOracle;

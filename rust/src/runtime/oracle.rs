@@ -1,0 +1,189 @@
+//! `ModelOracle`: the production [`GradOracle`] — synthetic CIFAR-like data
+//! partitioned across MUs, gradients computed by the AOT `train_step`
+//! executable, metrics by `eval_step`. This is the object the coordinator
+//! and the Fig. 6 / Table III experiments train with; no Python anywhere.
+
+use super::client::{Runtime, TensorArg};
+use crate::data::synthetic::IMAGE_DIM;
+use crate::data::{Dataset, Partition, SyntheticSpec};
+use crate::fl::oracle::{EvalMetrics, GradOracle};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// AOT-backed gradient oracle.
+pub struct ModelOracle {
+    train: Arc<super::client::Executable>,
+    eval: Arc<super::client::Executable>,
+    q: usize,
+    train_batch: usize,
+    eval_batch: usize,
+    init: Vec<f32>,
+    train_set: Dataset,
+    test_set: Dataset,
+    partition: Partition,
+    // Reused batch buffers (no allocation in the hot loop).
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+    ex_buf: Vec<f32>,
+    ey_buf: Vec<i32>,
+}
+
+impl ModelOracle {
+    /// Build from a loaded runtime. `workers` MUs share `spec.n_train`
+    /// samples in contiguous unshuffled shards (§V-B).
+    pub fn new(rt: &Runtime, model: &str, workers: usize, spec: &SyntheticSpec) -> Result<Self> {
+        let meta = rt.model_meta(model)?.clone();
+        let (train_set, test_set) = crate::data::synthetic::generate(spec);
+        let partition = Partition::contiguous(&train_set, workers, meta.train_batch);
+        Ok(Self {
+            train: rt.executable(&format!("train_step_{model}"))?,
+            eval: rt.executable(&format!("eval_step_{model}"))?,
+            q: meta.q_params,
+            train_batch: meta.train_batch,
+            eval_batch: meta.eval_batch,
+            init: rt.init_params(model)?,
+            x_buf: vec![0.0; meta.train_batch * IMAGE_DIM],
+            y_buf: vec![0; meta.train_batch],
+            ex_buf: vec![0.0; meta.eval_batch * IMAGE_DIM],
+            ey_buf: vec![0; meta.eval_batch],
+            train_set,
+            test_set,
+            partition,
+        })
+    }
+
+    pub fn q_params(&self) -> usize {
+        self.q
+    }
+
+    pub fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+}
+
+impl GradOracle for ModelOracle {
+    fn dim(&self) -> usize {
+        self.q
+    }
+
+    fn n_workers(&self) -> usize {
+        self.partition.n_workers()
+    }
+
+    fn loss_grad(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        let idx = self.partition.shards[worker].next_batch(self.train_batch);
+        self.train_set
+            .fill_batch(&idx, &mut self.x_buf, &mut self.y_buf);
+        let out = self
+            .train
+            .run(&[
+                TensorArg::F32(params, &[self.q]),
+                TensorArg::F32(&self.x_buf, &[self.train_batch, IMAGE_DIM]),
+                TensorArg::I32(&self.y_buf, &[self.train_batch]),
+            ])
+            .expect("train_step execution failed");
+        grad_out.copy_from_slice(&out[1]);
+        out[0][0] as f64
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalMetrics {
+        let n = self.test_set.len();
+        let chunks = n / self.eval_batch;
+        assert!(chunks > 0, "test set smaller than eval batch");
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for c in 0..chunks {
+            let idx: Vec<usize> = (c * self.eval_batch..(c + 1) * self.eval_batch).collect();
+            self.test_set
+                .fill_batch(&idx, &mut self.ex_buf, &mut self.ey_buf);
+            let out = self
+                .eval
+                .run(&[
+                    TensorArg::F32(params, &[self.q]),
+                    TensorArg::F32(&self.ex_buf, &[self.eval_batch, IMAGE_DIM]),
+                    TensorArg::I32(&self.ey_buf, &[self.eval_batch]),
+                ])
+                .expect("eval_step execution failed");
+            loss_sum += out[0][0] as f64;
+            correct += out[1][0] as f64;
+        }
+        let seen = (chunks * self.eval_batch) as f64;
+        EvalMetrics {
+            loss: loss_sum / seen,
+            accuracy: correct / seen,
+        }
+    }
+
+    fn iters_per_epoch(&self) -> usize {
+        self.partition.iters_per_epoch()
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        self.init.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Runtime::load(dir).unwrap())
+    }
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            n_train: 512,
+            n_test: 256,
+            noise: 0.6,
+            seed: 11,
+            ..SyntheticSpec::default()
+        }
+    }
+
+    #[test]
+    fn oracle_grad_and_eval_work() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut o = ModelOracle::new(&rt, "mlp", 4, &spec()).unwrap();
+        let params = o.init_params();
+        let mut grad = vec![0.0f32; o.dim()];
+        let loss = o.loss_grad(0, &params, &mut grad);
+        assert!(loss > 0.5 && loss < 6.0, "loss {loss}");
+        assert!(grad.iter().any(|&g| g != 0.0));
+        let m = o.eval(&params);
+        // Untrained: accuracy ≈ 10%, loss ≈ ln 10.
+        assert!(m.accuracy < 0.35, "untrained accuracy {}", m.accuracy);
+        assert!((m.loss - 10f64.ln()).abs() < 1.0, "loss {}", m.loss);
+    }
+
+    #[test]
+    fn short_fl_training_improves_accuracy() {
+        // End-to-end: Algorithm 1 over the AOT model must beat chance
+        // quickly on the synthetic set — the L1+L2+L3 composition proof.
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let mut o = ModelOracle::new(&rt, "mlp", 4, &spec()).unwrap();
+        let opts = crate::fl::TrainOptions {
+            iters: 40,
+            peak_lr: 0.05,
+            warmup_iters: 5,
+            momentum: 0.9,
+            ..Default::default()
+        };
+        let log = crate::fl::fl(&mut o, &opts);
+        let m = log.final_eval().unwrap();
+        assert!(
+            m.accuracy > 0.5,
+            "40 iters should separate synthetic classes: acc {}",
+            m.accuracy
+        );
+    }
+}

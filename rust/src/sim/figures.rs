@@ -1,0 +1,198 @@
+//! Latency figures (Fig. 3, 4, 5a, 5b): analytic sweeps over the wireless
+//! model. Each returns a [`FigureSeries`] with one named column per curve,
+//! ready for CSV export and console rendering.
+
+use crate::config::Config;
+use crate::util::csv::CsvTable;
+use crate::wireless::{fl_latency, hfl_latency, LatencyInputs};
+
+/// A figure's data: shared x-axis plus named y-series.
+#[derive(Clone, Debug)]
+pub struct FigureSeries {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    /// (curve label, y values).
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl FigureSeries {
+    pub fn to_csv(&self) -> CsvTable {
+        let mut header = vec![self.x_label.clone()];
+        header.extend(self.series.iter().map(|(n, _)| n.clone()));
+        let mut t = CsvTable::new(header);
+        for (i, &x) in self.x.iter().enumerate() {
+            let mut row = vec![x];
+            for (_, ys) in &self.series {
+                row.push(ys[i]);
+            }
+            t.push_nums(&row);
+        }
+        t
+    }
+
+    /// Console rendering with aligned columns.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} ==\n{:>12}", self.title, self.x_label);
+        for (name, _) in &self.series {
+            s.push_str(&format!(" {name:>14}"));
+        }
+        s.push('\n');
+        for (i, &x) in self.x.iter().enumerate() {
+            s.push_str(&format!("{x:>12.3}"));
+            for (_, ys) in &self.series {
+                s.push_str(&format!(" {:>14.4}", ys[i]));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+fn with_mus(cfg: &Config, mus: usize) -> Config {
+    let mut c = cfg.clone();
+    c.topology.mus_per_cluster = mus;
+    c
+}
+
+/// Fig. 3 — speed-up `T_FL / Γ_HFL` vs MUs per cluster for H ∈ {2, 4, 6},
+/// paper sparsity φ = (0.99, 0.9, 0.9, 0.9).
+pub fn fig3(base: &Config, mu_counts: &[usize]) -> FigureSeries {
+    let mut series: Vec<(String, Vec<f64>)> = [2usize, 4, 6]
+        .iter()
+        .map(|h| (format!("H={h}"), Vec::new()))
+        .collect();
+    for &mus in mu_counts {
+        let mut cfg = with_mus(base, mus);
+        cfg.sparsity.enabled = true;
+        let inputs = LatencyInputs::new(&cfg);
+        let t_fl = fl_latency(&inputs).total();
+        for (si, h) in [2usize, 4, 6].iter().enumerate() {
+            let mut c = cfg.clone();
+            c.training.h_period = *h;
+            let hf = hfl_latency(&LatencyInputs::new(&c));
+            series[si].1.push(t_fl / hf.per_iteration());
+        }
+    }
+    FigureSeries {
+        title: "Fig. 3: latency speed-up HFL vs FL (sparse)".into(),
+        x_label: "mus_per_cluster".into(),
+        x: mu_counts.iter().map(|&m| m as f64).collect(),
+        series,
+    }
+}
+
+/// Fig. 4 — speed-up vs path-loss exponent α (4 MUs/cluster, H = 4).
+pub fn fig4(base: &Config, alphas: &[f64]) -> FigureSeries {
+    let mut ys = Vec::with_capacity(alphas.len());
+    for &alpha in alphas {
+        let mut cfg = base.clone();
+        cfg.radio.pathloss_exp = alpha;
+        cfg.training.h_period = 4;
+        cfg.sparsity.enabled = true;
+        let inputs = LatencyInputs::new(&cfg);
+        let t_fl = fl_latency(&inputs).total();
+        let hf = hfl_latency(&inputs);
+        ys.push(t_fl / hf.per_iteration());
+    }
+    FigureSeries {
+        title: "Fig. 4: latency speed-up vs path-loss exponent (H=4)".into(),
+        x_label: "alpha".into(),
+        x: alphas.to_vec(),
+        series: vec![("speedup".into(), ys)],
+    }
+}
+
+/// Fig. 5a — HFL per-iteration latency, dense vs sparse, vs MUs/cluster.
+pub fn fig5a(base: &Config, mu_counts: &[usize]) -> FigureSeries {
+    let mut dense = Vec::new();
+    let mut sparse = Vec::new();
+    for &mus in mu_counts {
+        let mut cfg = with_mus(base, mus);
+        cfg.sparsity.enabled = false;
+        dense.push(hfl_latency(&LatencyInputs::new(&cfg)).per_iteration());
+        cfg.sparsity.enabled = true;
+        sparse.push(hfl_latency(&LatencyInputs::new(&cfg)).per_iteration());
+    }
+    FigureSeries {
+        title: "Fig. 5a: HFL per-iteration latency, dense vs sparse".into(),
+        x_label: "mus_per_cluster".into(),
+        x: mu_counts.iter().map(|&m| m as f64).collect(),
+        series: vec![("HFL".into(), dense), ("sparse HFL".into(), sparse)],
+    }
+}
+
+/// Fig. 5b — flat FL per-iteration latency, dense vs sparse, vs MUs/cluster.
+pub fn fig5b(base: &Config, mu_counts: &[usize]) -> FigureSeries {
+    let mut dense = Vec::new();
+    let mut sparse = Vec::new();
+    for &mus in mu_counts {
+        let mut cfg = with_mus(base, mus);
+        cfg.sparsity.enabled = false;
+        dense.push(fl_latency(&LatencyInputs::new(&cfg)).total());
+        cfg.sparsity.enabled = true;
+        sparse.push(fl_latency(&LatencyInputs::new(&cfg)).total());
+    }
+    FigureSeries {
+        title: "Fig. 5b: FL per-iteration latency, dense vs sparse".into(),
+        x_label: "mus_per_cluster".into(),
+        x: mu_counts.iter().map(|&m| m as f64).collect(),
+        series: vec![("FL".into(), dense), ("sparse FL".into(), sparse)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::paper_table2()
+    }
+
+    #[test]
+    fn fig3_shapes_match_paper() {
+        let f = fig3(&cfg(), &[4, 8, 12]);
+        assert_eq!(f.series.len(), 3);
+        // Speed-up grows with H at every MU count.
+        for i in 0..f.x.len() {
+            assert!(f.series[0].1[i] < f.series[1].1[i]);
+            assert!(f.series[1].1[i] < f.series[2].1[i]);
+        }
+        // And grows with MUs for fixed H.
+        for (_, ys) in &f.series {
+            assert!(ys.windows(2).all(|w| w[1] > w[0]), "{ys:?}");
+        }
+    }
+
+    #[test]
+    fn fig4_monotone_in_alpha() {
+        let f = fig4(&cfg(), &[2.0, 2.8, 3.6]);
+        let ys = &f.series[0].1;
+        assert!(ys[2] > ys[0], "{ys:?}");
+    }
+
+    #[test]
+    fn fig5_sparse_beats_dense_everywhere() {
+        for f in [fig5a(&cfg(), &[4, 10]), fig5b(&cfg(), &[4, 10])] {
+            let dense = &f.series[0].1;
+            let sparse = &f.series[1].1;
+            for i in 0..dense.len() {
+                assert!(
+                    sparse[i] < dense[i] / 5.0,
+                    "{}: sparse {} vs dense {}",
+                    f.title,
+                    sparse[i],
+                    dense[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let f = fig4(&cfg(), &[2.0, 3.0]);
+        let t = f.to_csv();
+        assert_eq!(t.n_rows(), 2);
+        assert!(f.render().contains("Fig. 4"));
+    }
+}

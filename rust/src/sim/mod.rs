@@ -1,0 +1,10 @@
+//! Scenario runners that regenerate every table and figure of the paper's
+//! evaluation (§V): the latency sweeps of Fig. 3–5 ([`figures`]) and the
+//! CIFAR-like training accuracy study of Fig. 6 / Table III
+//! ([`experiments`]). Each produces CSV series plus a human-readable block
+//! that EXPERIMENTS.md records.
+
+pub mod experiments;
+pub mod figures;
+
+pub use figures::{fig3, fig4, fig5a, fig5b, FigureSeries};

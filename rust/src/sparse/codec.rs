@@ -1,0 +1,197 @@
+//! Sparse vector wire format: parallel `(index, value)` arrays, the exact
+//! message DGC transmits. Provides dense↔sparse conversion, in-place
+//! accumulation (the aggregation primitive of MBS/SBS), and the bit
+//! accounting used by the latency model (`Q̂ + ⌈log2 Q⌉` bits per surviving
+//! coordinate).
+
+/// A sparse view of a length-`dim` f32 vector.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    /// Logical dense length Q.
+    pub dim: usize,
+    /// Sorted, distinct coordinate indices.
+    pub indices: Vec<u32>,
+    /// Values aligned with `indices`.
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn empty(dim: usize) -> Self {
+        Self {
+            dim,
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Collect every coordinate of `dense` where `keep` is true.
+    pub fn from_mask(dense: &[f32], keep: impl Fn(usize, f32) -> bool) -> Self {
+        let mut out = Self::empty(dense.len());
+        for (i, &x) in dense.iter().enumerate() {
+            if keep(i, x) {
+                out.indices.push(i as u32);
+                out.values.push(x);
+            }
+        }
+        out
+    }
+
+    /// Collect coordinates with |x| ≥ threshold.
+    pub fn from_threshold(dense: &[f32], threshold: f32) -> Self {
+        Self::from_mask(dense, |_, x| x.abs() >= threshold)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Achieved sparsity φ = 1 − nnz/dim.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.dim.max(1) as f64
+    }
+
+    /// Wire size in bits: each entry carries a ⌈log2 dim⌉-bit index and a
+    /// `bits_per_value`-bit value. (A dense message would be dim × Q̂.)
+    pub fn wire_bits(&self, bits_per_value: u32) -> f64 {
+        let index_bits = (self.dim.max(2) as f64).log2().ceil();
+        self.nnz() as f64 * (bits_per_value as f64 + index_bits)
+    }
+
+    /// Scatter-add into a dense buffer: `out[i] += scale·v_i`.
+    pub fn add_into(&self, out: &mut [f32], scale: f32) {
+        assert_eq!(out.len(), self.dim, "dimension mismatch");
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.add_into(&mut out, 1.0);
+        out
+    }
+
+    /// Sum of several sparse vectors into one dense accumulator (the MBS/SBS
+    /// aggregation step). Scale is applied uniformly (e.g. 1/K).
+    pub fn aggregate(parts: &[SparseVec], scale: f32) -> Vec<f32> {
+        assert!(!parts.is_empty());
+        let dim = parts[0].dim;
+        let mut out = vec![0.0; dim];
+        for p in parts {
+            assert_eq!(p.dim, dim, "dimension mismatch in aggregate");
+            p.add_into(&mut out, scale);
+        }
+        out
+    }
+
+    /// L2 mass of the carried values.
+    pub fn l2(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, PropConfig, VecF32};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn threshold_roundtrip() {
+        let dense = vec![0.0, 1.5, -0.2, 3.0, -4.0, 0.1];
+        let s = SparseVec::from_threshold(&dense, 1.0);
+        assert_eq!(s.indices, vec![1, 3, 4]);
+        assert_eq!(s.values, vec![1.5, 3.0, -4.0]);
+        let back = s.to_dense();
+        assert_eq!(back, vec![0.0, 1.5, 0.0, 3.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn wire_bits_accounting() {
+        let mut s = SparseVec::empty(1 << 20);
+        s.indices = vec![1, 2, 3];
+        s.values = vec![1.0, 2.0, 3.0];
+        // 20 index bits + 32 value bits
+        assert_eq!(s.wire_bits(32), 3.0 * 52.0);
+    }
+
+    #[test]
+    fn aggregate_averages() {
+        let a = SparseVec::from_threshold(&[1.0, 0.0, 2.0], 0.5);
+        let b = SparseVec::from_threshold(&[0.0, 4.0, 2.0], 0.5);
+        let sum = SparseVec::aggregate(&[a, b], 0.5);
+        assert_eq!(sum, vec![0.5, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_sparse_dense_roundtrip_preserves_kept_coords() {
+        let gen = VecF32 { min_len: 1, max_len: 300, scale: 2.0 };
+        check(&PropConfig::default(), &gen, |v| {
+            let th = 0.7f32;
+            let s = SparseVec::from_threshold(v, th);
+            let dense = s.to_dense();
+            for (i, (&orig, &rec)) in v.iter().zip(&dense).enumerate() {
+                let want = if orig.abs() >= th { orig } else { 0.0 };
+                if rec != want {
+                    return Err(format!("coord {i}: {rec} != {want}"));
+                }
+            }
+            // Indices sorted and distinct.
+            if !s.indices.windows(2).all(|w| w[0] < w[1]) {
+                return Err("indices not sorted/distinct".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mass_conservation_under_split() {
+        // sparse(v) + residual(v) == v exactly, coordinate-wise.
+        let gen = VecF32 { min_len: 1, max_len: 200, scale: 1.0 };
+        check(&PropConfig::default(), &gen, |v| {
+            let th = 0.5f32;
+            let kept = SparseVec::from_threshold(v, th);
+            let resid = SparseVec::from_mask(v, |_, x| x.abs() < th);
+            if kept.nnz() + resid.nnz() != v.len() {
+                return Err("split is not a partition".into());
+            }
+            let mut sum = kept.to_dense();
+            resid.add_into(&mut sum, 1.0);
+            if sum != *v {
+                return Err("kept + residual != original".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_and_full_extremes() {
+        let v = vec![1.0f32, -2.0, 3.0];
+        let none = SparseVec::from_threshold(&v, f32::INFINITY);
+        assert_eq!(none.nnz(), 0);
+        assert_eq!(none.sparsity(), 1.0);
+        let all = SparseVec::from_threshold(&v, 0.0);
+        assert_eq!(all.nnz(), 3);
+        assert_eq!(all.sparsity(), 0.0);
+        assert_eq!(all.to_dense(), v);
+    }
+
+    #[test]
+    fn add_into_scale() {
+        let s = SparseVec::from_threshold(&[2.0, 0.0], 1.0);
+        let mut acc = vec![1.0f32, 1.0];
+        s.add_into(&mut acc, -0.5);
+        assert_eq!(acc, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn random_large_vector_sparsity_matches_threshold_fraction() {
+        let mut rng = Pcg64::seeded(31);
+        let v: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+        // |N(0,1)| ≥ 1.96 with prob ≈ 0.05
+        let s = SparseVec::from_threshold(&v, 1.96);
+        let frac = s.nnz() as f64 / v.len() as f64;
+        assert!((frac - 0.05).abs() < 0.01, "kept fraction {frac}");
+    }
+}

@@ -1,0 +1,288 @@
+//! Deep-Gradient-Compression sparsifier (Algorithm 4, lines 6–12; Lin et
+//! al. 2018 as adopted by the paper).
+//!
+//! Per worker it keeps two buffers: the momentum-corrected accumulator
+//! `u` and the error (residual) accumulator `v`:
+//!
+//! ```text
+//! u ← σ·u + g                  (momentum correction, Eq. 24)
+//! v ← v + u                    (error accumulation, Eq. 25)
+//! g_th ← φ-quantile of |v|     (top-(1−φ) selection)
+//! mask ← |v| ≥ g_th
+//! ĝ = v ⊙ mask                 (transmitted)
+//! u ← u ⊙ ¬mask,  v ← v ⊙ ¬mask  (momentum-factor masking, Eq. 27–29)
+//! ```
+//!
+//! All buffers and scratch space are pre-allocated; `step` performs no heap
+//! allocation beyond the returned [`SparseVec`]'s own storage (which can be
+//! reused via [`DgcCompressor::step_into`]).
+
+use super::codec::SparseVec;
+use crate::util::math::quantile_abs;
+
+/// Per-worker DGC state.
+#[derive(Clone, Debug)]
+pub struct DgcCompressor {
+    /// Momentum correction factor σ.
+    pub momentum: f32,
+    /// Sparsity φ ∈ [0,1): fraction of coordinates suppressed.
+    pub phi: f64,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl DgcCompressor {
+    pub fn new(dim: usize, momentum: f32, phi: f64) -> Self {
+        assert!((0.0..1.0).contains(&phi), "phi={phi} outside [0,1)");
+        assert!((0.0..1.0).contains(&(momentum as f64)), "momentum={momentum}");
+        Self {
+            momentum,
+            phi,
+            u: vec![0.0; dim],
+            v: vec![0.0; dim],
+            scratch: Vec::with_capacity(dim),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.u.len()
+    }
+
+    /// Residual (untransmitted) accumulator — exposed for tests/diagnostics.
+    pub fn residual(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Momentum accumulator — exposed for tests/diagnostics.
+    pub fn momentum_buf(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// One compression step; returns the sparse message to transmit.
+    pub fn step(&mut self, grad: &[f32]) -> SparseVec {
+        let mut out = SparseVec::empty(grad.len());
+        self.step_into(grad, &mut out);
+        out
+    }
+
+    /// Allocation-free variant reusing `out`'s storage.
+    pub fn step_into(&mut self, grad: &[f32], out: &mut SparseVec) {
+        assert_eq!(grad.len(), self.dim(), "gradient dim mismatch");
+        let sigma = self.momentum;
+        // u ← σu + g; v ← v + u
+        for i in 0..grad.len() {
+            self.u[i] = sigma * self.u[i] + grad[i];
+            self.v[i] += self.u[i];
+        }
+        // Threshold at the φ-quantile of |v|.
+        let th = if self.phi == 0.0 {
+            0.0
+        } else {
+            quantile_abs(&self.v, self.phi, &mut self.scratch)
+        };
+        // Extract ĝ = v⊙mask and zero masked u, v.
+        out.dim = grad.len();
+        out.indices.clear();
+        out.values.clear();
+        if self.phi == 0.0 {
+            // Dense fast path: transmit v wholesale and keep the momentum
+            // buffer — this is exactly classical momentum SGD (Eq. 23),
+            // the paper's dense FL/HFL baseline. (DGC's momentum-factor
+            // masking exists to stop *stale* momentum from sparsified,
+            // delayed coordinates; with φ=0 nothing is delayed.)
+            for (i, &v) in self.v.iter().enumerate() {
+                out.indices.push(i as u32);
+                out.values.push(v);
+            }
+            self.v.iter_mut().for_each(|x| *x = 0.0);
+            return;
+        }
+        for i in 0..self.v.len() {
+            if self.v[i].abs() >= th {
+                out.indices.push(i as u32);
+                out.values.push(self.v[i]);
+                self.u[i] = 0.0;
+                self.v[i] = 0.0;
+            }
+        }
+    }
+
+    /// Reset both accumulators (used when the global model is replaced at a
+    /// period boundary and stale local residuals must not leak across).
+    pub fn reset(&mut self) {
+        self.u.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen, PropConfig};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_top_fraction() {
+        let dim = 1000;
+        let mut c = DgcCompressor::new(dim, 0.0, 0.99);
+        let mut rng = Pcg64::seeded(41);
+        let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let s = c.step(&g);
+        // ~1% of coordinates survive (quantile ties may admit a few extra).
+        assert!(s.nnz() >= 10 && s.nnz() <= 20, "nnz={}", s.nnz());
+        // Surviving values are the largest |g| (no momentum, first step → v = g).
+        let min_kept = s.values.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        let max_dropped = g
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !s.indices.contains(&(*i as u32)))
+            .map(|(_, v)| v.abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped, "{min_kept} < {max_dropped}");
+    }
+
+    #[test]
+    fn untransmitted_mass_accumulates_and_eventually_sends() {
+        // A small persistent gradient coordinate must eventually be sent.
+        let dim = 100;
+        let mut c = DgcCompressor::new(dim, 0.0, 0.9);
+        let mut g = vec![0.0f32; dim];
+        // Coordinate 7 gets a small constant gradient, others get noise that
+        // changes sign (cancels in v).
+        let mut rng = Pcg64::seeded(42);
+        let mut sent_7 = false;
+        for _ in 0..50 {
+            for (i, x) in g.iter_mut().enumerate() {
+                *x = if i == 7 { 0.05 } else { (rng.normal() * 0.5) as f32 };
+            }
+            let s = c.step(&g);
+            if s.indices.contains(&7) {
+                sent_7 = true;
+                break;
+            }
+        }
+        assert!(sent_7, "coordinate 7 was never transmitted");
+    }
+
+    #[test]
+    fn dense_mode_transmits_everything_immediately() {
+        let mut c = DgcCompressor::new(5, 0.0, 0.0);
+        let g = vec![1.0, -2.0, 0.0, 0.5, 3.0];
+        let s = c.step(&g);
+        assert_eq!(s.nnz(), 5);
+        assert_eq!(s.to_dense(), g);
+        assert!(c.residual().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dense_mode_with_momentum_is_momentum_sgd() {
+        // φ=0, σ=0.9: transmitted message equals the classical momentum
+        // accumulator u_t = Σ σ^i g_{t−i}.
+        let mut c = DgcCompressor::new(1, 0.9, 0.0);
+        let mut u_ref = 0.0f32;
+        for step in 0..10 {
+            let g = (step as f32 * 0.3 - 1.0).sin();
+            u_ref = 0.9 * u_ref + g;
+            let s = c.step(&[g]);
+            assert_eq!(s.nnz(), 1);
+            assert!((s.values[0] - u_ref).abs() < 1e-6, "step {step}");
+        }
+    }
+
+    #[test]
+    fn momentum_correction_matches_reference_recurrence() {
+        // Against a straightforward reference implementation.
+        let dim = 64;
+        let sigma = 0.9f32;
+        let phi = 0.8;
+        let mut c = DgcCompressor::new(dim, sigma, phi);
+        let mut ref_u = vec![0.0f32; dim];
+        let mut ref_v = vec![0.0f32; dim];
+        let mut rng = Pcg64::seeded(43);
+        let mut scratch = Vec::new();
+        for step in 0..20 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let s = c.step(&g);
+            // reference
+            for i in 0..dim {
+                ref_u[i] = sigma * ref_u[i] + g[i];
+                ref_v[i] += ref_u[i];
+            }
+            let th = quantile_abs(&ref_v, phi, &mut scratch);
+            let mut ref_sent = Vec::new();
+            for i in 0..dim {
+                if ref_v[i].abs() >= th {
+                    ref_sent.push((i as u32, ref_v[i]));
+                    ref_u[i] = 0.0;
+                    ref_v[i] = 0.0;
+                }
+            }
+            let got: Vec<(u32, f32)> =
+                s.indices.iter().copied().zip(s.values.iter().copied()).collect();
+            assert_eq!(got, ref_sent, "step {step}");
+            assert_eq!(c.residual(), &ref_v[..], "residual step {step}");
+            assert_eq!(c.momentum_buf(), &ref_u[..], "momentum step {step}");
+        }
+    }
+
+    #[test]
+    fn prop_transmitted_plus_residual_conserve_signal() {
+        // With σ=0: Σ_t sent_t + v_T == Σ_t g_t coordinate-wise.
+        struct Steps;
+        impl Gen for Steps {
+            type Value = (usize, usize, u64);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                (1 + rng.uniform_usize(8), 4 + rng.uniform_usize(60), rng.next_u64())
+            }
+        }
+        check(&PropConfig { cases: 50, ..Default::default() }, &Steps, |&(steps, dim, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut c = DgcCompressor::new(dim, 0.0, 0.7);
+            let mut total_g = vec![0.0f32; dim];
+            let mut total_sent = vec![0.0f32; dim];
+            for _ in 0..steps {
+                let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                for (t, &x) in total_g.iter_mut().zip(&g) {
+                    *t += x;
+                }
+                let s = c.step(&g);
+                s.add_into(&mut total_sent, 1.0);
+            }
+            for i in 0..dim {
+                let recon = total_sent[i] + c.residual()[i];
+                if (recon - total_g[i]).abs() > 1e-4 * (1.0 + total_g[i].abs()) {
+                    return Err(format!(
+                        "coord {i}: sent+resid {recon} != Σg {}",
+                        total_g[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = DgcCompressor::new(10, 0.9, 0.9);
+        // Distinct magnitudes so the φ-quantile genuinely suppresses some.
+        let g: Vec<f32> = (0..10).map(|i| (i + 1) as f32).collect();
+        let _ = c.step(&g);
+        assert!(c.residual().iter().any(|&x| x != 0.0));
+        c.reset();
+        assert!(c.residual().iter().all(|&x| x == 0.0));
+        assert!(c.momentum_buf().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn step_into_reuses_allocation() {
+        let mut c = DgcCompressor::new(100, 0.5, 0.9);
+        let mut out = SparseVec::empty(100);
+        let mut rng = Pcg64::seeded(44);
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+            c.step_into(&g, &mut out);
+            assert!(out.nnz() >= 1);
+        }
+    }
+}

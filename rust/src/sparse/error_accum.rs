@@ -1,0 +1,202 @@
+//! Discounted error accumulation for sparsified *model-difference*
+//! messages (Algorithm 5, lines 21/28/34; cf. Sattler et al., Tang et al.).
+//!
+//! Each of the hierarchy's sparsified links keeps a local error buffer: the
+//! coordinates suppressed by `Ω(·, φ)` are remembered and folded — scaled by
+//! a discount β — into the next message, so no signal is permanently lost
+//! but stale error cannot compound unboundedly:
+//!
+//! ```text
+//! x̃ = x + β·e                    (fold in discounted old error)
+//! send Ω(x̃, φ)
+//! e ← x̃ − Ω(x̃, φ)                (remember what was suppressed)
+//! ```
+
+use super::codec::SparseVec;
+use crate::util::math::quantile_abs;
+
+/// One link's sparsifying encoder with discounted error memory.
+#[derive(Clone, Debug)]
+pub struct DiscountedError {
+    /// Sparsity φ of this link (0 → dense passthrough, error stays empty).
+    pub phi: f64,
+    /// Error discount β.
+    pub beta: f32,
+    e: Vec<f32>,
+    folded: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl DiscountedError {
+    pub fn new(dim: usize, phi: f64, beta: f32) -> Self {
+        assert!((0.0..1.0).contains(&phi));
+        assert!((0.0..=1.0).contains(&(beta as f64)));
+        Self {
+            phi,
+            beta,
+            e: vec![0.0; dim],
+            folded: vec![0.0; dim],
+            scratch: Vec::with_capacity(dim),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.e.len()
+    }
+
+    /// Current error buffer (suppressed mass).
+    pub fn error(&self) -> &[f32] {
+        &self.e
+    }
+
+    /// Encode `x` for transmission: returns `Ω(x + β·e, φ)` and updates the
+    /// error buffer.
+    pub fn compress(&mut self, x: &[f32]) -> SparseVec {
+        assert_eq!(x.len(), self.dim(), "dim mismatch");
+        // x̃ = x + β·e
+        for i in 0..x.len() {
+            self.folded[i] = x[i] + self.beta * self.e[i];
+        }
+        if self.phi == 0.0 {
+            // Dense: transmit everything, error is identically zero.
+            let mut out = SparseVec::empty(x.len());
+            for (i, &v) in self.folded.iter().enumerate() {
+                out.indices.push(i as u32);
+                out.values.push(v);
+            }
+            self.e.iter_mut().for_each(|z| *z = 0.0);
+            return out;
+        }
+        let th = quantile_abs(&self.folded, self.phi, &mut self.scratch);
+        let mut out = SparseVec::empty(x.len());
+        for (i, &v) in self.folded.iter().enumerate() {
+            if v.abs() >= th {
+                out.indices.push(i as u32);
+                out.values.push(v);
+                self.e[i] = 0.0;
+            } else {
+                self.e[i] = v;
+            }
+        }
+        out
+    }
+
+    /// Drop accumulated error (used at hard model resets).
+    pub fn reset(&mut self) {
+        self.e.iter_mut().for_each(|z| *z = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen, PropConfig};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_link_is_lossless() {
+        let mut enc = DiscountedError::new(6, 0.0, 0.5);
+        let x = vec![1.0, -2.0, 3.0, 0.0, 0.5, -0.1];
+        let s = enc.compress(&x);
+        assert_eq!(s.to_dense(), x);
+        assert!(enc.error().iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn sent_plus_error_equals_folded_input() {
+        // Invariant of one step: Ω(x̃) + e_new == x̃ == x + β·e_old.
+        let mut enc = DiscountedError::new(50, 0.8, 0.5);
+        let mut rng = Pcg64::seeded(51);
+        let mut e_old = vec![0.0f32; 50];
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..50).map(|_| rng.normal() as f32).collect();
+            let s = enc.compress(&x);
+            let mut recon = s.to_dense();
+            for (r, &e) in recon.iter_mut().zip(enc.error()) {
+                *r += e;
+            }
+            for i in 0..50 {
+                let folded = x[i] + 0.5 * e_old[i];
+                assert!(
+                    (recon[i] - folded).abs() < 1e-5,
+                    "coord {i}: {} vs {}",
+                    recon[i],
+                    folded
+                );
+            }
+            e_old = enc.error().to_vec();
+        }
+    }
+
+    #[test]
+    fn beta_zero_discards_history() {
+        let mut enc = DiscountedError::new(10, 0.9, 0.0);
+        let x = vec![0.01f32; 10]; // everything suppressed except the top tie
+        let _ = enc.compress(&x);
+        let x2 = vec![0.0f32; 10];
+        let s2 = enc.compress(&x2);
+        // With β=0, the suppressed mass from step 1 must not reappear.
+        assert!(s2.values.iter().all(|&v| v == 0.0), "{:?}", s2.values);
+    }
+
+    #[test]
+    fn suppressed_signal_eventually_transmits_with_beta_one() {
+        // A constant small input below the threshold accumulates with β=1
+        // until it crosses and is sent.
+        let dim = 100;
+        let mut enc = DiscountedError::new(dim, 0.95, 1.0);
+        let mut rng = Pcg64::seeded(52);
+        let mut sent_0 = false;
+        for _ in 0..100 {
+            let mut x: Vec<f32> = (0..dim).map(|_| (rng.normal() * 0.02) as f32).collect();
+            x[0] = 0.03; // persistent small signal
+            let s = enc.compress(&x);
+            if s.indices.contains(&0) {
+                sent_0 = true;
+                break;
+            }
+        }
+        assert!(sent_0);
+    }
+
+    #[test]
+    fn prop_error_norm_bounded_by_input_scale() {
+        // The error buffer cannot blow up: after each step its entries are
+        // below the sparsity threshold, which is bounded by max|x̃|.
+        struct Inputs;
+        impl Gen for Inputs {
+            type Value = (u64, usize);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                (rng.next_u64(), 10 + rng.uniform_usize(100))
+            }
+        }
+        check(&PropConfig { cases: 40, ..Default::default() }, &Inputs, |&(seed, dim)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut enc = DiscountedError::new(dim, 0.9, 0.5);
+            for _ in 0..20 {
+                let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let max_folded = x
+                    .iter()
+                    .zip(enc.error())
+                    .map(|(&a, &e)| (a + 0.5 * e).abs())
+                    .fold(0.0f32, f32::max);
+                let _ = enc.compress(&x);
+                let max_err = enc.error().iter().map(|z| z.abs()).fold(0.0f32, f32::max);
+                if max_err > max_folded + 1e-6 {
+                    return Err(format!("error {max_err} exceeds folded input {max_folded}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut enc = DiscountedError::new(10, 0.9, 1.0);
+        let x: Vec<f32> = (0..10).map(|i| (i + 1) as f32 * 0.1).collect();
+        let _ = enc.compress(&x);
+        assert!(enc.error().iter().any(|&z| z != 0.0));
+        enc.reset();
+        assert!(enc.error().iter().all(|&z| z == 0.0));
+    }
+}

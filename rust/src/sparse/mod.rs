@@ -1,0 +1,14 @@
+//! Sparse communication (§IV): DGC-style top-k gradient sparsification with
+//! momentum correction ([`dgc`]), the sparse index+value wire format and
+//! its bit accounting ([`codec`]), and discounted error accumulation for
+//! the four sparsified links of the hierarchy ([`error_accum`]).
+
+pub mod codec;
+pub mod dgc;
+pub mod error_accum;
+pub mod quantize;
+
+pub use codec::SparseVec;
+pub use dgc::DgcCompressor;
+pub use error_accum::DiscountedError;
+pub use quantize::QuantizedVec;

@@ -1,0 +1,182 @@
+//! Q̂-bit value quantization (§II-A: "Each MU uses Q̂ bits to quantize each
+//! element of its gradient vector").
+//!
+//! The latency model charges `Q̂ + ⌈log2 Q⌉` bits per transmitted value; this
+//! module supplies the actual quantizer so the end-to-end system can trade
+//! `Q̂` against accuracy (an ablation the paper's model enables but does not
+//! plot — see `EXPERIMENTS.md §Extensions`).
+//!
+//! Scheme: per-message symmetric uniform quantization. The encoder finds
+//! `m = max|v|`, sends it once at full precision (32 bits, amortized), and
+//! maps every value to a signed integer of `bits` bits:
+//! `q = round(v / m · (2^{bits−1} − 1))`. Deterministic, zero-preserving,
+//! and unbiased up to rounding.
+
+use super::codec::SparseVec;
+
+/// A quantized sparse message plus its dequantization scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedVec {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    /// Quantized levels in `[-(2^{bits-1}-1), 2^{bits-1}-1]`.
+    pub levels: Vec<i32>,
+    /// Dequantization scale `m / (2^{bits-1}-1)`.
+    pub scale: f32,
+    pub bits: u32,
+}
+
+impl QuantizedVec {
+    /// Quantize a sparse message to `bits`-bit values (2 ≤ bits ≤ 32).
+    pub fn encode(v: &SparseVec, bits: u32) -> Self {
+        assert!((2..=32).contains(&bits), "bits={bits} out of range");
+        let qmax = ((1u64 << (bits - 1)) - 1) as f32;
+        let m = v.values.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = if m == 0.0 { 0.0 } else { m / qmax };
+        let levels = v
+            .values
+            .iter()
+            .map(|&x| {
+                if scale == 0.0 {
+                    0
+                } else {
+                    (x / scale).round().clamp(-qmax, qmax) as i32
+                }
+            })
+            .collect();
+        Self {
+            dim: v.dim,
+            indices: v.indices.clone(),
+            levels,
+            scale,
+            bits,
+        }
+    }
+
+    /// Reconstruct the sparse message (lossy).
+    pub fn decode(&self) -> SparseVec {
+        SparseVec {
+            dim: self.dim,
+            indices: self.indices.clone(),
+            values: self.levels.iter().map(|&q| q as f32 * self.scale).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Wire size: per-entry index + `bits`-bit value, plus one 32-bit scale.
+    pub fn wire_bits(&self) -> f64 {
+        let index_bits = (self.dim.max(2) as f64).log2().ceil();
+        self.nnz() as f64 * (self.bits as f64 + index_bits) + 32.0
+    }
+
+    /// Worst-case absolute quantization error of this message (scale/2).
+    pub fn max_abs_error(&self) -> f32 {
+        self.scale * 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, PropConfig, VecF32};
+
+    fn sparse_of(values: &[f32]) -> SparseVec {
+        SparseVec {
+            dim: values.len(),
+            indices: (0..values.len() as u32).collect(),
+            values: values.to_vec(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let v = sparse_of(&[0.5, -1.0, 0.125, 0.99, -0.33]);
+        for bits in [4u32, 8, 12, 16] {
+            let q = QuantizedVec::encode(&v, bits);
+            let back = q.decode();
+            for (a, b) in v.values.iter().zip(&back.values) {
+                assert!(
+                    (a - b).abs() <= q.max_abs_error() + 1e-7,
+                    "bits={bits}: {a} vs {b} (step {})",
+                    q.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let v = sparse_of(&[0.7, -0.3, 0.9, -0.05]);
+        let mut prev = f32::INFINITY;
+        for bits in [4u32, 8, 16, 24] {
+            let q = QuantizedVec::encode(&v, bits);
+            let back = q.decode();
+            let err: f32 = v
+                .values
+                .iter()
+                .zip(&back.values)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(err <= prev, "bits={bits}: {err} > {prev}");
+            prev = err;
+        }
+        assert!(prev < 1e-6, "24-bit error should be tiny: {prev}");
+    }
+
+    #[test]
+    fn zero_vector_and_empty_message() {
+        let q = QuantizedVec::encode(&sparse_of(&[0.0, 0.0]), 8);
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(q.decode().values, vec![0.0, 0.0]);
+        let empty = SparseVec::empty(10);
+        let q = QuantizedVec::encode(&empty, 8);
+        assert_eq!(q.nnz(), 0);
+        assert_eq!(q.wire_bits(), 32.0); // just the scale
+    }
+
+    #[test]
+    fn max_magnitude_is_exactly_representable() {
+        let v = sparse_of(&[2.0, -2.0, 1.0]);
+        let q = QuantizedVec::encode(&v, 8);
+        let back = q.decode();
+        assert!((back.values[0] - 2.0).abs() < 1e-6);
+        assert!((back.values[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_bits_accounting() {
+        let mut s = SparseVec::empty(1 << 20);
+        s.indices = vec![1, 2];
+        s.values = vec![1.0, -1.0];
+        let q = QuantizedVec::encode(&s, 8);
+        // 2 × (8 + 20) + 32 scale
+        assert_eq!(q.wire_bits(), 2.0 * 28.0 + 32.0);
+    }
+
+    #[test]
+    fn prop_quantize_dequantize_monotone_and_bounded() {
+        let gen = VecF32 {
+            min_len: 1,
+            max_len: 200,
+            scale: 3.0,
+        };
+        check(&PropConfig::default(), &gen, |values| {
+            let v = sparse_of(values);
+            let q = QuantizedVec::encode(&v, 8);
+            let back = q.decode();
+            for (i, (&a, &b)) in v.values.iter().zip(&back.values).enumerate() {
+                if (a - b).abs() > q.max_abs_error() + 1e-6 {
+                    return Err(format!("coord {i}: |{a} - {b}| > {}", q.max_abs_error()));
+                }
+                // Sign preservation for values above one step.
+                if a.abs() > q.scale && a.signum() != b.signum() {
+                    return Err(format!("coord {i}: sign flipped {a} → {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Planar geometry primitives for the cell layout.
+
+/// A point in the plane, metres.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Point {
+    pub const ORIGIN: Point = Point { x: 0.0, y: 0.0 };
+
+    pub fn new(x: f64, y: f64) -> Self {
+        Self { x, y }
+    }
+
+    pub fn dist(&self, other: &Point) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.dist(&Point::ORIGIN)
+    }
+
+    pub fn add(&self, other: &Point) -> Point {
+        Point::new(self.x + other.x, self.y + other.y)
+    }
+}
+
+/// Is `p` inside the flat-top regular hexagon centred at `c` with
+/// inscribed-circle radius (apothem) `r_in`?
+///
+/// A flat-top hexagon with apothem `a` satisfies, for the offset
+/// `(dx, dy) = p − c`:  |dy| ≤ a  and  |dy|·(1/√3) + |dx| · (2/√3) ≤ 2a/√3·...
+/// We use the standard half-plane test against the three edge normals.
+pub fn in_hexagon(p: &Point, c: &Point, r_in: f64) -> bool {
+    // Pointy-top hexagon via axial symmetry: normals at 0°, 60°, 120°.
+    let dx = (p.x - c.x).abs();
+    let dy = (p.y - c.y).abs();
+    // Flat-top orientation: apothem along y for the horizontal edge pair.
+    // Half-planes: x·cos(θ) + y·sin(θ) ≤ r_in for θ ∈ {90°, 30°, 150°}.
+    let eps = 1e-9;
+    dy <= r_in + eps && (dx * (3f64.sqrt() / 2.0) + dy * 0.5) <= r_in + eps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_and_norm() {
+        let a = Point::new(3.0, 4.0);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        assert!((a.dist(&Point::new(3.0, 0.0)) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hexagon_contains_center_and_apothem_points() {
+        let c = Point::ORIGIN;
+        let r = 250.0;
+        assert!(in_hexagon(&c, &c, r));
+        // Points just inside the apothem along the edge normals.
+        assert!(in_hexagon(&Point::new(0.0, r - 1.0), &c, r));
+        assert!(in_hexagon(&Point::new((r - 1.0) * 2.0 / 3f64.sqrt(), 0.0), &c, r));
+        // Outside beyond the circumradius.
+        let r_out = 2.0 * r / 3f64.sqrt();
+        assert!(!in_hexagon(&Point::new(r_out + 1.0, 0.0), &c, r));
+        assert!(!in_hexagon(&Point::new(0.0, r + 1.0), &c, r));
+    }
+
+    #[test]
+    fn hexagon_corner_cases() {
+        let c = Point::ORIGIN;
+        let r = 1.0;
+        // Circumradius corner along x at 2/√3 (flat-top, corner on x-axis).
+        let corner = Point::new(2.0 / 3f64.sqrt() - 1e-6, 0.0);
+        assert!(in_hexagon(&corner, &c, r));
+    }
+}

@@ -1,0 +1,223 @@
+//! Hexagonal cluster layout and frequency-reuse coloring (§V-A, Fig. 2).
+//!
+//! Clusters are flat-top hexagons with inscribed-circle diameter `d` (500 m
+//! in the paper), arranged as a "flower": one central hexagon (whose SBS
+//! co-locates with the MBS at the origin) surrounded by rings of six,
+//! twelve, ... neighbours. Adjacent hexagon centres are exactly `d` apart.
+//!
+//! The reuse coloring assigns different sub-carrier groups to any two
+//! clusters closer than the interference guard distance `D_th`; the paper
+//! assumes zero interference beyond `D_th`. Greedy smallest-available-color
+//! on the conflict graph reproduces the paper's 3-color pattern for the
+//! 7-cluster flower.
+
+use super::geometry::Point;
+
+/// Centres of the first `n` hexagons of the flower layout, ring by ring.
+///
+/// `center_dist` is the distance between adjacent centres (= the inscribed
+/// diameter). Supports up to 3 rings (1 + 6 + 12 + 18 = 37 clusters).
+pub fn hex_centers(n: usize, center_dist: f64) -> Vec<Point> {
+    assert!(n >= 1 && n <= 37, "hex flower supports 1..=37 clusters, got {n}");
+    let mut out = vec![Point::ORIGIN];
+    // Ring r has 6r cells: start at angle 90° (top) and walk around using
+    // axial-coordinate steps; equivalently place by polar formula per ring.
+    // Simpler: generate cube coordinates of rings and convert.
+    let mut ring = 1;
+    while out.len() < n {
+        out.extend(ring_centers(ring, center_dist));
+        ring += 1;
+    }
+    out.truncate(n);
+    out
+}
+
+/// Centres of hex ring `r` (6r cells), axial→cartesian for flat-top hexes
+/// with adjacent-centre distance `d`.
+fn ring_centers(r: usize, d: f64) -> Vec<Point> {
+    // Cube coordinates: start at (r, -r, 0)·direction and walk 6 edges.
+    const DIRS: [(i64, i64); 6] = [(0, 1), (-1, 1), (-1, 0), (0, -1), (1, -1), (1, 0)];
+    let mut cells = Vec::with_capacity(6 * r);
+    // start cell: r steps in direction 4 from origin = (r·1, r·-1)
+    let (mut q, mut s) = (r as i64, -(r as i64));
+    for dir in DIRS {
+        for _ in 0..r {
+            cells.push(axial_to_point(q, s, d));
+            q += dir.0;
+            s += dir.1;
+        }
+    }
+    cells
+}
+
+/// Axial (q, r) → cartesian for flat-top orientation, neighbour distance d.
+fn axial_to_point(q: i64, r: i64, d: f64) -> Point {
+    // Flat-top: x = d·(3/2/√3)·q ... use standard: x = d·(√3/2·q? )
+    // For neighbour distance d: x = d·(q + r/2·0)... derive simply:
+    // unit axial basis for pointy-top with size s: x = s·√3·(q + r/2), y = s·3/2·r,
+    // neighbour distance = s·√3. Set s·√3 = d.
+    let s = d / 3f64.sqrt();
+    let x = s * 3f64.sqrt() * (q as f64 + r as f64 / 2.0);
+    let y = s * 1.5 * r as f64;
+    Point::new(x, y)
+}
+
+/// A complete cluster layout: centres plus reuse coloring.
+#[derive(Clone, Debug)]
+pub struct HexLayout {
+    /// Cluster centres (SBS positions). Index 0 is the central cluster.
+    pub centers: Vec<Point>,
+    /// Inscribed-circle radius (apothem) of each hexagon.
+    pub apothem: f64,
+    /// Reuse color of each cluster.
+    pub colors: Vec<usize>,
+    /// Number of distinct colors `N_c`.
+    pub n_colors: usize,
+    /// Interference guard distance used for the coloring.
+    pub d_th: f64,
+}
+
+impl HexLayout {
+    /// Build the flower layout for `n_clusters` hexagons with inscribed
+    /// diameter `inscribed_diameter` and colour it with guard distance
+    /// `d_th` (clusters strictly closer than `d_th` conflict).
+    pub fn new(n_clusters: usize, inscribed_diameter: f64, d_th: f64) -> Self {
+        let centers = hex_centers(n_clusters, inscribed_diameter);
+        let colors = greedy_coloring(&centers, d_th);
+        let n_colors = colors.iter().copied().max().unwrap_or(0) + 1;
+        Self {
+            centers,
+            apothem: inscribed_diameter / 2.0,
+            colors,
+            n_colors,
+            d_th,
+        }
+    }
+
+    /// Default guard distance: anything closer than `√3 ×` the adjacent
+    /// centre distance conflicts — this forbids sharing between edge-adjacent
+    /// clusters but allows the 1-ring "opposite" cells, reproducing the
+    /// paper's Fig. 2 pattern (3 colors for the 7-flower).
+    pub fn with_default_guard(n_clusters: usize, inscribed_diameter: f64) -> Self {
+        let d_th = inscribed_diameter * 3f64.sqrt() * 0.999;
+        Self::new(n_clusters, inscribed_diameter, d_th)
+    }
+
+    /// Sub-carriers available per cluster when `m_total` are split evenly
+    /// across colors (§III-A: "proportional to 1/N_c").
+    pub fn subcarriers_per_cluster(&self, m_total: usize) -> usize {
+        (m_total / self.n_colors).max(1)
+    }
+
+    /// Minimum distance between same-color cluster centres (∞ if unique).
+    pub fn min_cochannel_distance(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for i in 0..self.centers.len() {
+            for j in i + 1..self.centers.len() {
+                if self.colors[i] == self.colors[j] {
+                    best = best.min(self.centers[i].dist(&self.centers[j]));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Greedy smallest-available-color on the distance-conflict graph.
+fn greedy_coloring(centers: &[Point], d_th: f64) -> Vec<usize> {
+    let n = centers.len();
+    let mut colors = vec![usize::MAX; n];
+    for i in 0..n {
+        let mut used = vec![false; n + 1];
+        for j in 0..i {
+            if centers[i].dist(&centers[j]) < d_th {
+                used[colors[j]] = true;
+            }
+        }
+        colors[i] = (0..=n).find(|&c| !used[c]).unwrap();
+    }
+    colors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flower_of_seven_geometry() {
+        let centers = hex_centers(7, 500.0);
+        assert_eq!(centers.len(), 7);
+        assert_eq!(centers[0], Point::ORIGIN);
+        // Ring 1: all at distance 500 from the origin.
+        for c in &centers[1..] {
+            assert!((c.dist(&Point::ORIGIN) - 500.0).abs() < 1e-9, "{c:?}");
+        }
+        // Consecutive ring cells are adjacent (distance 500).
+        for k in 1..=6 {
+            let a = &centers[k];
+            let b = &centers[if k == 6 { 1 } else { k + 1 }];
+            assert!((a.dist(b) - 500.0).abs() < 1e-6, "{a:?} {b:?}");
+        }
+    }
+
+    #[test]
+    fn two_rings_count_and_distinct() {
+        let centers = hex_centers(19, 500.0);
+        assert_eq!(centers.len(), 19);
+        for i in 0..19 {
+            for j in i + 1..19 {
+                assert!(centers[i].dist(&centers[j]) > 1.0, "duplicate centres {i},{j}");
+            }
+        }
+        // Ring 2 cells are at distance 500·√3 or 1000 from origin.
+        for c in &centers[7..] {
+            let d = c.dist(&Point::ORIGIN);
+            let ok = (d - 500.0 * 3f64.sqrt()).abs() < 1e-6 || (d - 1000.0).abs() < 1e-6;
+            assert!(ok, "ring-2 distance {d}");
+        }
+    }
+
+    #[test]
+    fn seven_flower_colors_like_paper() {
+        let layout = HexLayout::with_default_guard(7, 500.0);
+        assert_eq!(layout.n_colors, 3, "colors={:?}", layout.colors);
+        // Centre differs from every ring cell.
+        for k in 1..7 {
+            assert_ne!(layout.colors[0], layout.colors[k]);
+        }
+        // Same-color clusters separated by ≥ guard distance.
+        assert!(layout.min_cochannel_distance() >= layout.d_th);
+    }
+
+    #[test]
+    fn coloring_respects_guard_distance_generally() {
+        for n in [1usize, 3, 7, 12, 19, 37] {
+            for guard_mult in [1.1, 1.8, 2.5] {
+                let layout = HexLayout::new(n, 500.0, 500.0 * guard_mult);
+                for i in 0..n {
+                    for j in i + 1..n {
+                        if layout.colors[i] == layout.colors[j] {
+                            assert!(
+                                layout.centers[i].dist(&layout.centers[j]) >= layout.d_th,
+                                "n={n} guard={guard_mult} clusters {i},{j}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_cluster_gets_everything() {
+        let layout = HexLayout::with_default_guard(1, 500.0);
+        assert_eq!(layout.n_colors, 1);
+        assert_eq!(layout.subcarriers_per_cluster(600), 600);
+    }
+
+    #[test]
+    fn subcarrier_split() {
+        let layout = HexLayout::with_default_guard(7, 500.0);
+        assert_eq!(layout.subcarriers_per_cluster(600), 200);
+    }
+}

@@ -1,0 +1,13 @@
+//! Network geometry (§V-A): a circular macro-cell of radius 750 m containing
+//! a flower of hexagonal SBS clusters (inscribed-circle diameter 500 m),
+//! uniformly-placed MUs, and a frequency-reuse coloring that guarantees
+//! co-channel clusters are separated by at least the interference guard
+//! distance `D_th`.
+
+pub mod geometry;
+pub mod hex;
+pub mod placement;
+
+pub use geometry::Point;
+pub use hex::{hex_centers, HexLayout};
+pub use placement::{NetworkTopology, UserPlacement};

@@ -1,0 +1,223 @@
+//! Mobile-user placement (§V-A, Assumptions 1–2): MUs are uniformly
+//! distributed, each cluster contains an equal number of MUs, and SBSs sit
+//! at cluster centres. The macro-cell is a disc of radius 750 m centred on
+//! the MBS.
+
+use super::geometry::{in_hexagon, Point};
+use super::hex::HexLayout;
+use crate::config::TopologyConfig;
+use crate::util::rng::Pcg64;
+
+/// One placed mobile user.
+#[derive(Clone, Debug)]
+pub struct UserPlacement {
+    /// Global MU index.
+    pub id: usize,
+    /// Cluster (SBS) index.
+    pub cluster: usize,
+    pub pos: Point,
+    /// Distance to the serving SBS (cluster centre).
+    pub dist_sbs: f64,
+    /// Distance to the MBS (origin) — used by the flat-FL baseline.
+    pub dist_mbs: f64,
+}
+
+/// A fully instantiated network: layout + users.
+#[derive(Clone, Debug)]
+pub struct NetworkTopology {
+    pub layout: HexLayout,
+    pub users: Vec<UserPlacement>,
+    pub radius_m: f64,
+}
+
+impl NetworkTopology {
+    /// Build the topology from config. MUs are sampled uniformly inside each
+    /// cluster's hexagon (rejection sampling), clipped to the macro disc —
+    /// equal per-cluster counts per Assumption 1.
+    pub fn generate(cfg: &TopologyConfig) -> Self {
+        let layout = HexLayout::with_default_guard(cfg.n_clusters, cfg.hex_inscribed_diameter_m);
+        let mut rng = Pcg64::new(cfg.placement_seed, 0xD0_F0);
+        let mut users = Vec::with_capacity(cfg.total_mus());
+        let apothem = layout.apothem;
+        for (ci, center) in layout.centers.iter().enumerate() {
+            for _ in 0..cfg.mus_per_cluster {
+                let pos = sample_in_hex_and_disc(&mut rng, center, apothem, cfg.radius_m);
+                let id = users.len();
+                users.push(UserPlacement {
+                    id,
+                    cluster: ci,
+                    dist_sbs: pos.dist(center).max(1.0), // ≥1 m: avoid d^−α blow-up
+                    dist_mbs: pos.norm().max(1.0),
+                    pos,
+                });
+            }
+        }
+        Self {
+            layout,
+            users,
+            radius_m: cfg.radius_m,
+        }
+    }
+
+    /// Users of one cluster.
+    pub fn cluster_users(&self, cluster: usize) -> impl Iterator<Item = &UserPlacement> {
+        self.users.iter().filter(move |u| u.cluster == cluster)
+    }
+
+    /// Distances MU→MBS for all users (flat FL uplink).
+    pub fn mbs_distances(&self) -> Vec<f64> {
+        self.users.iter().map(|u| u.dist_mbs).collect()
+    }
+
+    /// Distances MU→SBS per cluster.
+    pub fn sbs_distances(&self, cluster: usize) -> Vec<f64> {
+        self.cluster_users(cluster).map(|u| u.dist_sbs).collect()
+    }
+
+    /// SBS→MBS distances (fronthaul path lengths; informational).
+    pub fn sbs_mbs_distances(&self) -> Vec<f64> {
+        self.layout
+            .centers
+            .iter()
+            .map(|c| c.norm().max(1.0))
+            .collect()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.layout.centers.len()
+    }
+
+    /// ASCII rendering of the layout for `topology_report`.
+    pub fn ascii_map(&self, width: usize, height: usize) -> String {
+        let mut grid = vec![vec![' '; width]; height];
+        let scale_x = (2.2 * self.radius_m) / width as f64;
+        let scale_y = (2.2 * self.radius_m) / height as f64;
+        let to_cell = |p: &Point| -> Option<(usize, usize)> {
+            let col = ((p.x + 1.1 * self.radius_m) / scale_x) as isize;
+            let row = ((-p.y + 1.1 * self.radius_m) / scale_y) as isize;
+            if (0..width as isize).contains(&col) && (0..height as isize).contains(&row) {
+                Some((row as usize, col as usize))
+            } else {
+                None
+            }
+        };
+        for u in &self.users {
+            if let Some((r, c)) = to_cell(&u.pos) {
+                grid[r][c] = char::from_digit((u.cluster % 10) as u32, 10).unwrap_or('?');
+            }
+        }
+        for (ci, center) in self.layout.centers.iter().enumerate() {
+            if let Some((r, c)) = to_cell(center) {
+                grid[r][c] = if ci == 0 { 'M' } else { 'S' };
+            }
+        }
+        grid.into_iter()
+            .map(|row| row.into_iter().collect::<String>())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Rejection-sample a point uniform over (hexagon ∩ macro-disc).
+fn sample_in_hex_and_disc(rng: &mut Pcg64, center: &Point, apothem: f64, disc_r: f64) -> Point {
+    // Bounding box of a flat-top hexagon: |dy| ≤ a, |dx| ≤ 2a/√3.
+    let half_w = 2.0 * apothem / 3f64.sqrt();
+    for _ in 0..10_000 {
+        let p = Point::new(
+            center.x + rng.uniform_range(-half_w, half_w),
+            center.y + rng.uniform_range(-apothem, apothem),
+        );
+        if in_hexagon(&p, center, apothem) && p.norm() <= disc_r {
+            return p;
+        }
+    }
+    // Hexagon ∩ disc can be empty only for far-out rings; fall back to the
+    // closest in-disc point toward the origin.
+    let n = center.norm();
+    if n > disc_r {
+        Point::new(center.x * disc_r / n, center.y * disc_r / n)
+    } else {
+        *center
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyConfig;
+
+    fn cfg() -> TopologyConfig {
+        TopologyConfig::default()
+    }
+
+    #[test]
+    fn equal_users_per_cluster() {
+        let topo = NetworkTopology::generate(&cfg());
+        assert_eq!(topo.users.len(), 28);
+        for c in 0..7 {
+            assert_eq!(topo.cluster_users(c).count(), 4, "cluster {c}");
+        }
+    }
+
+    #[test]
+    fn users_inside_their_hexagon_and_disc() {
+        let topo = NetworkTopology::generate(&cfg());
+        for u in &topo.users {
+            let center = &topo.layout.centers[u.cluster];
+            assert!(
+                in_hexagon(&u.pos, center, topo.layout.apothem),
+                "MU {} outside hexagon {}",
+                u.id,
+                u.cluster
+            );
+            assert!(u.pos.norm() <= 750.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn sbs_distance_bounded_by_circumradius() {
+        let topo = NetworkTopology::generate(&cfg());
+        let circum = 2.0 * topo.layout.apothem / 3f64.sqrt();
+        for u in &topo.users {
+            assert!(u.dist_sbs <= circum + 1e-9, "{}", u.dist_sbs);
+            assert!(u.dist_sbs >= 1.0); // clamped
+        }
+    }
+
+    #[test]
+    fn hfl_shortens_distances_vs_mbs() {
+        // The whole point of clustering: mean MU→SBS < mean MU→MBS.
+        let topo = NetworkTopology::generate(&cfg());
+        let mean_sbs: f64 =
+            topo.users.iter().map(|u| u.dist_sbs).sum::<f64>() / topo.users.len() as f64;
+        let mean_mbs: f64 =
+            topo.users.iter().map(|u| u.dist_mbs).sum::<f64>() / topo.users.len() as f64;
+        assert!(
+            mean_sbs < mean_mbs,
+            "mean SBS dist {mean_sbs} should be < mean MBS dist {mean_mbs}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = NetworkTopology::generate(&cfg());
+        let b = NetworkTopology::generate(&cfg());
+        for (ua, ub) in a.users.iter().zip(&b.users) {
+            assert_eq!(ua.pos, ub.pos);
+        }
+        let c = NetworkTopology::generate(&TopologyConfig {
+            placement_seed: 999,
+            ..cfg()
+        });
+        assert!(a.users.iter().zip(&c.users).any(|(x, y)| x.pos != y.pos));
+    }
+
+    #[test]
+    fn ascii_map_renders() {
+        let topo = NetworkTopology::generate(&cfg());
+        let map = topo.ascii_map(60, 30);
+        assert!(map.contains('M'));
+        assert!(map.contains('S'));
+        assert_eq!(map.lines().count(), 30);
+    }
+}

@@ -1,0 +1,200 @@
+//! Criterion-style microbenchmark harness (the offline environment has no
+//! `criterion` crate). Provides warm-up, adaptive iteration counts, robust
+//! statistics (median + MAD), and a black-box to defeat constant folding.
+//!
+//! `cargo bench` targets use [`Bencher`] with `harness = false`.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>14} ± {:<12} ({} samples × {} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mad),
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warm-up time per benchmark.
+    pub warmup_time: Duration,
+    /// Number of samples to collect.
+    pub n_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            measure_time: Duration::from_millis(1500),
+            warmup_time: Duration::from_millis(300),
+            n_samples: 20,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            measure_time: Duration::from_millis(400),
+            warmup_time: Duration::from_millis(100),
+            n_samples: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly and record robust timing under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // Warm-up and per-iteration estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose iterations per sample so a sample is ≥ ~50 µs but the whole
+        // measurement fits the budget.
+        let budget = self.measure_time.as_secs_f64();
+        let per_sample_target = (budget / self.n_samples as f64).max(50e-6);
+        let iters = ((per_sample_target / per_iter.max(1e-12)).ceil() as u64).max(1);
+
+        let mut sample_times: Vec<f64> = Vec::with_capacity(self.n_samples);
+        for _ in 0..self.n_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        sample_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sample_times[sample_times.len() / 2];
+        let mut devs: Vec<f64> = sample_times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let m = Measurement {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            iters_per_sample: iters,
+            samples: sample_times.len(),
+        };
+        println!("{}", m.report());
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Run a function once and report its wall time (for long end-to-end
+    /// benches where repetition is impractical).
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> Measurement {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        let m = Measurement {
+            name: name.to_string(),
+            median: dt,
+            mad: Duration::ZERO,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        println!("{}", m.report());
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Final summary block, printed by bench mains.
+    pub fn summary(&self) -> String {
+        let mut s = String::from("\n== benchmark summary ==\n");
+        for m in &self.results {
+            s.push_str(&m.report());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            n_samples: 5,
+            results: Vec::new(),
+        };
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(black_box(i));
+            }
+            black_box(x);
+        });
+        assert!(m.median > Duration::ZERO);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_once_records() {
+        let mut b = Bencher::quick();
+        let m = b.bench_once("one", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(m.median >= Duration::from_millis(2));
+    }
+}

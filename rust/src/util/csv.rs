@@ -1,0 +1,135 @@
+//! Tiny CSV writer for experiment outputs (figure series, loss curves).
+//! Quotes fields only when necessary; numbers are written with enough
+//! precision to round-trip f64.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: impl IntoIterator<Item = S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of already-formatted cells; panics on arity mismatch.
+    pub fn push_row<S: Into<String>>(&mut self, row: impl IntoIterator<Item = S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Push a row of f64 values.
+    pub fn push_nums(&mut self, row: &[f64]) {
+        self.push_row(row.iter().map(|x| format_num(*x)));
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&self.header, &mut out);
+        for r in &self.rows {
+            write_record(r, &mut out);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+fn write_record(cells: &[String], out: &mut String) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format a number: integers plainly, floats with up-to-9 significant digits.
+pub fn format_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        let mut s = String::new();
+        let _ = write!(s, "{:.9}", x);
+        // trim trailing zeros but keep at least one decimal
+        while s.ends_with('0') {
+            s.pop();
+        }
+        if s.ends_with('.') {
+            s.push('0');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_table() {
+        let mut t = CsvTable::new(["mus", "speedup"]);
+        t.push_nums(&[4.0, 7.25]);
+        t.push_nums(&[8.0, 9.5]);
+        let s = t.to_string();
+        assert_eq!(s, "mus,speedup\n4,7.25\n8,9.5\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push_row(["x,y", "he said \"hi\""]);
+        let s = t.to_string();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push_row(["only-one"]);
+    }
+
+    #[test]
+    fn format_num_trims() {
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(0.5), "0.5");
+        assert_eq!(format_num(-2.25), "-2.25");
+    }
+}

@@ -1,0 +1,57 @@
+//! Minimal leveled logger to stderr (implements the `log` crate facade so
+//! library modules can use `log::info!` etc. without further wiring).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent). `verbose` raises the level to Debug.
+pub fn init(verbose: bool) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        log::set_max_level(if verbose { LevelFilter::Debug } else { LevelFilter::Info });
+        return;
+    }
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if verbose { LevelFilter::Debug } else { LevelFilter::Info });
+    once_cell::sync::Lazy::force(&START);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init(false);
+        super::init(true);
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,363 @@
+//! Special functions and numerical optimization used by the wireless model
+//! and the sparsification hot path.
+//!
+//! * [`exp_int_e1`] — the exponential integral E₁(x), which gives the
+//!   truncated channel-inversion power normalizer for Rayleigh fading:
+//!   Eq. (8) of the paper with `f(γ)=e^{-γ}` is
+//!   `∫_th^∞ e^{-γ}/γ dγ = E₁(th)`.
+//! * [`golden_section_max`] — derivative-free 1-D maximizer for the
+//!   threshold optimization of Eq. (11).
+//! * [`quickselect`] / [`quantile_abs`] — O(n) order statistics for the
+//!   DGC top-k threshold (no full sort on the hot path).
+
+/// Exponential integral E₁(x) = ∫ₓ^∞ e^{-t}/t dt, x > 0.
+///
+/// Abramowitz & Stegun 5.1.53 (series, x ≤ 1) and 5.1.56 (rational
+/// approximation, x > 1); relative error < 2e-7 over the full range, which
+/// is far below the Monte-Carlo noise of the latency simulations.
+pub fn exp_int_e1(x: f64) -> f64 {
+    assert!(x > 0.0, "E1 requires x > 0, got {x}");
+    if x <= 1.0 {
+        // E1(x) = -γ - ln x + Σ_{k≥1} (-1)^{k+1} x^k / (k·k!)
+        const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+        let mut sum = 0.0;
+        let mut term = 1.0; // x^k / k!
+        for k in 1..=30 {
+            term *= x / k as f64;
+            let contrib = term / k as f64;
+            if k % 2 == 1 {
+                sum += contrib;
+            } else {
+                sum -= contrib;
+            }
+            if contrib.abs() < 1e-17 {
+                break;
+            }
+        }
+        -EULER_GAMMA - x.ln() + sum
+    } else {
+        // x e^x E1(x) ≈ (x^4 + a3 x^3 + ... ) / (x^4 + b3 x^3 + ...)
+        const A: [f64; 4] = [8.573_328_740_1, 18.059_016_973, 8.634_760_892_5, 0.267_773_734_3];
+        const B: [f64; 4] = [9.573_322_345_4, 25.632_956_148_6, 21.099_653_082_6, 3.958_496_922_8];
+        let num = ((((x + A[0]) * x + A[1]) * x + A[2]) * x) + A[3];
+        let den = ((((x + B[0]) * x + B[1]) * x + B[2]) * x) + B[3];
+        (num / den) / (x * x.exp())
+    }
+}
+
+/// Maximize a unimodal function on [lo, hi] by golden-section search.
+///
+/// Returns `(argmax, max)`. `tol` is the absolute x-tolerance. The
+/// threshold objective of Eq. (11) is unimodal in γ_th (rate × coverage
+/// trade-off), so golden-section converges to the global maximum.
+pub fn golden_section_max<F: FnMut(f64) -> f64>(
+    mut f: F,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> (f64, f64) {
+    assert!(hi > lo, "invalid bracket [{lo}, {hi}]");
+    const INV_PHI: f64 = 0.618_033_988_749_894_8; // (√5 − 1)/2
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    while (b - a).abs() > tol {
+        if fc > fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    let xm = 0.5 * (a + b);
+    let fm = f(xm);
+    if fm >= fc && fm >= fd {
+        (xm, fm)
+    } else if fc >= fd {
+        (c, fc)
+    } else {
+        (d, fd)
+    }
+}
+
+/// In-place quickselect: after the call, `xs[k]` holds the k-th smallest
+/// element and the array is partitioned around it. Average O(n).
+///
+/// Uses median-of-three pivoting plus an insertion-sort base case, and a
+/// deterministic fallback shuffle-free pattern — worst cases on adversarial
+/// inputs do not occur for the float magnitudes we feed it.
+pub fn quickselect(xs: &mut [f32], k: usize) -> f32 {
+    assert!(k < xs.len(), "k={k} out of range for len={}", xs.len());
+    let (mut lo, mut hi) = (0usize, xs.len() - 1);
+    loop {
+        if hi - lo < 16 {
+            // insertion sort the small range
+            for i in lo + 1..=hi {
+                let mut j = i;
+                while j > lo && xs[j - 1] > xs[j] {
+                    xs.swap(j - 1, j);
+                    j -= 1;
+                }
+            }
+            return xs[k];
+        }
+        // median-of-three pivot
+        let mid = lo + (hi - lo) / 2;
+        if xs[lo] > xs[mid] {
+            xs.swap(lo, mid);
+        }
+        if xs[lo] > xs[hi] {
+            xs.swap(lo, hi);
+        }
+        if xs[mid] > xs[hi] {
+            xs.swap(mid, hi);
+        }
+        let pivot = xs[mid];
+        // Hoare partition
+        let (mut i, mut j) = (lo, hi);
+        loop {
+            while xs[i] < pivot {
+                i += 1;
+            }
+            while xs[j] > pivot {
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            xs.swap(i, j);
+            i += 1;
+            j -= 1;
+        }
+        if k <= j {
+            hi = j;
+        } else {
+            lo = j + 1;
+        }
+    }
+}
+
+/// Magnitude threshold `g_th` such that a fraction `phi` of `|v|` falls
+/// strictly below it — i.e. keep the top `(1-phi)` fraction by magnitude
+/// (Algorithm 4, line 8). Scratch buffer is caller-provided so the training
+/// hot loop allocates nothing.
+///
+/// For large vectors (n ≥ [`QUANTILE_SAMPLE_MIN`]) the threshold is
+/// estimated from a deterministic strided sample of ≥16 k elements — the
+/// sampling trick of the DGC paper itself (Lin et al. §3.2 run top-k on a
+/// 0.1–1% sample). This turns the dominant O(n) copy+select into O(n/stride)
+/// at the cost of a small, unbiased jitter in the achieved sparsity
+/// (EXPERIMENTS.md §Perf quantifies it).
+pub fn quantile_abs(v: &[f32], phi: f64, scratch: &mut Vec<f32>) -> f32 {
+    assert!((0.0..=1.0).contains(&phi), "phi={phi} outside [0,1]");
+    assert!(!v.is_empty());
+    scratch.clear();
+    if v.len() >= QUANTILE_SAMPLE_MIN {
+        let stride = v.len() / QUANTILE_SAMPLE_TARGET;
+        scratch.extend(v.iter().step_by(stride.max(1)).map(|x| x.abs()));
+    } else {
+        scratch.extend(v.iter().map(|x| x.abs()));
+    }
+    let n = scratch.len();
+    // Index of the first *kept* element when sorted ascending.
+    let k = ((phi * n as f64).floor() as usize).min(n - 1);
+    quickselect(scratch, k)
+}
+
+/// Vectors at least this long use sampled threshold estimation.
+pub const QUANTILE_SAMPLE_MIN: usize = 1 << 16;
+/// Approximate sample size for the strided estimate.
+pub const QUANTILE_SAMPLE_TARGET: usize = 16_384;
+
+/// Exact (non-sampled) variant, for callers that need the precise order
+/// statistic regardless of size.
+pub fn quantile_abs_exact(v: &[f32], phi: f64, scratch: &mut Vec<f32>) -> f32 {
+    assert!((0.0..=1.0).contains(&phi), "phi={phi} outside [0,1]");
+    assert!(!v.is_empty());
+    scratch.clear();
+    scratch.extend(v.iter().map(|x| x.abs()));
+    let n = scratch.len();
+    let k = ((phi * n as f64).floor() as usize).min(n - 1);
+    quickselect(scratch, k)
+}
+
+/// Numerically stable log-sum-exp (used by test oracles for softmax loss).
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m.is_infinite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// dB → linear power ratio.
+#[inline]
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Linear power ratio → dB.
+#[inline]
+pub fn linear_to_db(x: f64) -> f64 {
+    10.0 * x.log10()
+}
+
+/// dBm → Watts.
+#[inline]
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Reference E1 values (Abramowitz & Stegun tables / mpmath).
+    #[test]
+    fn e1_reference_values() {
+        let cases = [
+            (0.1, 1.822_923_958_4),
+            (0.5, 0.559_773_594_8),
+            (1.0, 0.219_383_934_4),
+            (2.0, 0.048_900_510_7),
+            (5.0, 0.001_148_295_6),
+            (10.0, 4.156_968_9e-6),
+        ];
+        for (x, want) in cases {
+            let got = exp_int_e1(x);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 2e-6, "E1({x}) = {got}, want {want} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn e1_continuous_at_switch_point() {
+        let below = exp_int_e1(1.0 - 1e-9);
+        let above = exp_int_e1(1.0 + 1e-9);
+        assert!((below - above).abs() < 1e-6);
+    }
+
+    #[test]
+    fn e1_matches_numerical_integral() {
+        // Simpson integration of e^-t/t from x to a large cutoff.
+        let numeric = |x: f64| {
+            let hi = x + 60.0;
+            let n = 400_000;
+            let h = (hi - x) / n as f64;
+            let f = |t: f64| (-t).exp() / t;
+            let mut s = f(x) + f(hi);
+            for i in 1..n {
+                let t = x + i as f64 * h;
+                s += if i % 2 == 1 { 4.0 } else { 2.0 } * f(t);
+            }
+            s * h / 3.0
+        };
+        for x in [0.3, 0.9, 1.5, 3.0] {
+            let got = exp_int_e1(x);
+            let want = numeric(x);
+            assert!(
+                ((got - want) / want).abs() < 1e-5,
+                "E1({x})={got} vs integral {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn golden_section_finds_quadratic_max() {
+        let (x, fx) = golden_section_max(|x| -(x - 1.7) * (x - 1.7) + 3.0, 0.0, 10.0, 1e-9);
+        assert!((x - 1.7).abs() < 1e-6, "x={x}");
+        assert!((fx - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_section_handles_boundary_max() {
+        // Monotone increasing — max at right edge.
+        let (x, _) = golden_section_max(|x| x, 0.0, 5.0, 1e-9);
+        assert!((x - 5.0).abs() < 1e-6, "x={x}");
+    }
+
+    #[test]
+    fn quickselect_matches_sort() {
+        let mut rng = Pcg64::seeded(11);
+        for n in [1usize, 2, 5, 17, 100, 1001] {
+            let orig: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut sorted = orig.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in [0, n / 3, n / 2, n - 1] {
+                let mut xs = orig.clone();
+                assert_eq!(quickselect(&mut xs, k), sorted[k], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn quickselect_with_duplicates() {
+        let mut xs = vec![2.0f32; 64];
+        xs.extend(vec![1.0f32; 64]);
+        assert_eq!(quickselect(&mut xs.clone(), 0), 1.0);
+        assert_eq!(quickselect(&mut xs.clone(), 63), 1.0);
+        assert_eq!(quickselect(&mut xs.clone(), 64), 2.0);
+        assert_eq!(quickselect(&mut xs, 127), 2.0);
+    }
+
+    #[test]
+    fn quantile_abs_keeps_top_fraction() {
+        // |v| = 1..=100; phi=0.9 → threshold at the 91st smallest = 91.
+        let v: Vec<f32> = (1..=100).map(|i| if i % 2 == 0 { i as f32 } else { -(i as f32) }).collect();
+        let mut scratch = Vec::new();
+        let th = quantile_abs(&v, 0.9, &mut scratch);
+        let kept = v.iter().filter(|x| x.abs() >= th).count();
+        assert_eq!(kept, 10, "th={th}");
+    }
+
+    #[test]
+    fn quantile_abs_sampled_close_to_exact_on_large_vectors() {
+        let mut rng = Pcg64::seeded(77);
+        let v: Vec<f32> = (0..300_000).map(|_| rng.normal() as f32).collect();
+        let mut s = Vec::new();
+        let sampled = quantile_abs(&v, 0.99, &mut s);
+        let exact = quantile_abs_exact(&v, 0.99, &mut s);
+        // Sampled threshold keeps ~1% of coordinates, within 20% relative.
+        let kept = v.iter().filter(|x| x.abs() >= sampled).count() as f64 / v.len() as f64;
+        assert!((kept - 0.01).abs() < 0.002, "kept fraction {kept}");
+        assert!((sampled - exact).abs() / exact < 0.05, "{sampled} vs {exact}");
+    }
+
+    #[test]
+    fn quantile_abs_extremes() {
+        let v = vec![3.0f32, -1.0, 2.0, -4.0];
+        let mut s = Vec::new();
+        // phi=0 keeps everything
+        let th0 = quantile_abs(&v, 0.0, &mut s);
+        assert!(v.iter().all(|x| x.abs() >= th0));
+        // phi=1 keeps only the max-magnitude element
+        let th1 = quantile_abs(&v, 1.0, &mut s);
+        assert_eq!(v.iter().filter(|x| x.abs() >= th1).count(), 1);
+    }
+
+    #[test]
+    fn log_sum_exp_stable() {
+        let xs = [1000.0, 1000.0];
+        let got = log_sum_exp(&xs);
+        assert!((got - (1000.0 + 2f64.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn db_conversions_roundtrip() {
+        for db in [-150.0, -30.0, 0.0, 13.0] {
+            assert!((linear_to_db(db_to_linear(db)) - db).abs() < 1e-9);
+        }
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watts(0.0) - 1e-3).abs() < 1e-15);
+    }
+}

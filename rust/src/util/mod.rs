@@ -1,0 +1,14 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! deterministic RNG + distributions, special functions, order statistics,
+//! descriptive statistics, CSV/JSON emitters, a tiny logger, and a
+//! criterion-style microbenchmark harness.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

@@ -1,0 +1,316 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we implement PCG64 (XSL-RR
+//! variant, O'Neill 2014) plus the distributions the wireless and training
+//! simulators need: uniform, standard normal (Ziggurat-free Box–Muller,
+//! which is plenty fast for our Monte-Carlo sizes), exponential (for
+//! Rayleigh-fading channel power gains), and utility samplers.
+//!
+//! All stochastic components in the crate take an explicit seed so figures
+//! and tables regenerate bit-for-bit.
+
+/// PCG64 (XSL-RR 128/64) pseudo-random generator.
+///
+/// State transition: 128-bit LCG; output: xor-shift-low + random rotate.
+/// Passes PractRand/TestU01 at this output size; period 2^128.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal variate from Box–Muller.
+    cached_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed and a stream id.
+    ///
+    /// Distinct `stream` values yield statistically independent sequences —
+    /// used to give every MU / cluster / figure its own stream derived from
+    /// one experiment seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        // SplitMix64 the seed into 128 bits of state so that small seeds
+        // (0, 1, 2...) still start from well-mixed states.
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next() as u128;
+        let s1 = sm.next() as u128;
+        let mut smi = SplitMix64::new(stream ^ 0x9e37_79b9_7f4a_7c15);
+        let i0 = smi.next() as u128;
+        let i1 = smi.next() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1, // must be odd
+            cached_normal: None,
+        };
+        // Warm up: decorrelates trivially-related seeds.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a child generator; `tag` labels the branch (e.g. MU index).
+    pub fn fork(&mut self, tag: u64) -> Self {
+        let s = self.next_u64();
+        Self::new(s ^ tag.wrapping_mul(0xa076_1d64_78bd_642f), tag)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn uniform_u64(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "uniform_u64 requires n > 0");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn uniform_usize(&mut self, n: usize) -> usize {
+        self.uniform_u64(n as u64) as usize
+    }
+
+    /// Standard normal N(0,1) via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Reject u1 == 0 to avoid ln(0).
+        let mut u1 = self.uniform();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.uniform();
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate 1 (mean 1). The power gain |h|^2 of a
+    /// Rayleigh-fading channel with E[|h|^2]=1 is Exp(1).
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        let mut u = self.uniform();
+        while u <= f64::MIN_POSITIVE {
+            u = self.uniform();
+        }
+        -u.ln()
+    }
+
+    /// Exponential with the given mean.
+    #[inline]
+    pub fn exponential_mean(&mut self, mean: f64) -> f64 {
+        mean * self.exponential()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.uniform_usize(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// SplitMix64 — used only to expand seeds into PCG state.
+struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0, "seeds 1 and 2 should not collide");
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut buckets = [0usize; 10];
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            buckets[(u * 10.0) as usize] += 1;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        for b in buckets {
+            let frac = b as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.01, "bucket frac {frac}");
+        }
+    }
+
+    #[test]
+    fn uniform_u64_unbiased_small_n() {
+        let mut rng = Pcg64::seeded(4);
+        let mut counts = [0usize; 3];
+        let n = 90_000;
+        for _ in 0..n {
+            counts[rng.uniform_u64(3) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 1.0 / 3.0).abs() < 0.01, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(5);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.01, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var={m2}");
+    }
+
+    #[test]
+    fn exponential_moments_and_support() {
+        let mut rng = Pcg64::seeded(6);
+        let n = 200_000;
+        let mut m1 = 0.0;
+        for _ in 0..n {
+            let e = rng.exponential();
+            assert!(e >= 0.0);
+            m1 += e;
+        }
+        m1 /= n as f64;
+        assert!((m1 - 1.0).abs() < 0.02, "mean={m1}");
+        // P(X > 1) = e^-1 ≈ 0.3679
+        let mut rng = Pcg64::seeded(7);
+        let tail = (0..n).filter(|_| rng.exponential() > 1.0).count() as f64 / n as f64;
+        assert!((tail - (-1.0f64).exp()).abs() < 0.01, "tail={tail}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(8);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "astronomically unlikely identity");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seeded(9);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(sorted.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut root = Pcg64::seeded(10);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Rateless broadcast downlink — Eq. (16)–(18).
+//!
+//! The base station spreads its power uniformly over the `M` sub-carriers
+//! and adapts a rateless code to the *worst* instantaneous SNR among the
+//! receivers on each sub-carrier:
+//!
+//! ```text
+//! R_m(t) = min_k B0·log2(1 + SNR_{k,m}(t)),   SNR_{k,m} = P·γ/(M·N0·B0·d_k^α)
+//! T_DL   = E[ min{ t : T_s Σ_{τ≤t} Σ_m R_m(τ) ≥ bits } ]
+//! ```
+//!
+//! ### Closed form for the per-sub-carrier expected min-rate
+//!
+//! With γ ~ Exp(1) i.i.d. per user, `P(R_m > r) = Π_k P(γ_k > (2^{r/B0}−1)/c_k)
+//! = exp(−(2^{r/B0}−1)·S)` where `c_k = P/(M·N0·B0·d_k^α)` and `S = Σ_k 1/c_k`.
+//! Integrating the CCDF with `u = 2^{r/B0}−1` gives the exact
+//!
+//! ```text
+//! E[R_m] = (B0/ln 2) · e^S · E₁(S).
+//! ```
+//!
+//! The stopping time of the renewal sum is then `T_DL ≈ T_s·⌈bits/(M·E[R_m]·T_s)⌉`
+//! (Wald; the per-slot sum over M ≥ 85 sub-carriers concentrates hard).
+//! [`broadcast_latency_mc`] simulates Eq. (18) literally and the tests
+//! verify the two agree to Monte-Carlo noise.
+
+use crate::util::math::exp_int_e1;
+use crate::util::rng::Pcg64;
+
+/// Inputs for a broadcast from one base station to a set of receivers.
+#[derive(Clone, Debug)]
+pub struct BroadcastParams {
+    /// Base-station total power (W), spread uniformly over sub-carriers.
+    pub p_total_w: f64,
+    /// Number of sub-carriers available to this broadcast.
+    pub m_subcarriers: usize,
+    /// Per-sub-carrier noise power N0·B0 (W).
+    pub noise_w: f64,
+    /// Sub-carrier bandwidth B0 (Hz).
+    pub b0_hz: f64,
+    /// Path-loss exponent α.
+    pub alpha: f64,
+    /// Receiver distances d_k (m).
+    pub dists_m: Vec<f64>,
+    /// Slot duration T_s (s).
+    pub slot_s: f64,
+}
+
+impl BroadcastParams {
+    /// `c_k = P/(M·N0·B0·d_k^α)` — mean SNR of receiver k (Eq. 17).
+    fn mean_snrs(&self) -> Vec<f64> {
+        let p_per = self.p_total_w / self.m_subcarriers as f64;
+        self.dists_m
+            .iter()
+            .map(|d| p_per / (self.noise_w * d.powf(self.alpha)))
+            .collect()
+    }
+
+    /// Exact expected worst-user rate on one sub-carrier (bits/s).
+    pub fn expected_min_rate(&self) -> f64 {
+        assert!(!self.dists_m.is_empty(), "broadcast needs ≥1 receiver");
+        let s: f64 = self.mean_snrs().iter().map(|c| 1.0 / c).sum();
+        // e^S·E1(S): for tiny S, E1 ~ −ln S so the product is finite; for
+        // large S (hopeless link) it tends to 1/S.
+        self.b0_hz / std::f64::consts::LN_2 * s.exp() * exp_int_e1(s.max(1e-300))
+    }
+
+    /// Expected total broadcast rate over all sub-carriers (bits/s).
+    pub fn expected_total_rate(&self) -> f64 {
+        self.m_subcarriers as f64 * self.expected_min_rate()
+    }
+}
+
+/// Expected broadcast latency (s) for `bits` via the closed form + Wald
+/// stopping-time approximation, quantized up to whole slots as the rateless
+/// decoder finishes at a slot boundary.
+pub fn broadcast_latency(params: &BroadcastParams, bits: f64) -> f64 {
+    if bits <= 0.0 {
+        return 0.0;
+    }
+    let rate = params.expected_total_rate();
+    let slots = (bits / (rate * params.slot_s)).ceil();
+    slots * params.slot_s
+}
+
+/// Literal Monte-Carlo simulation of Eq. (18): sample every sub-carrier's
+/// worst-user rate per slot until `bits` are delivered; average over
+/// `trials`. Exact but O(slots × M × K) — used for validation and small
+/// problems.
+pub fn broadcast_latency_mc(
+    params: &BroadcastParams,
+    bits: f64,
+    trials: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    if bits <= 0.0 {
+        return 0.0;
+    }
+    let cs = params.mean_snrs();
+    let mut total = 0.0;
+    for _ in 0..trials {
+        let mut delivered = 0.0;
+        let mut slots = 0u64;
+        while delivered < bits {
+            slots += 1;
+            let mut slot_rate = 0.0;
+            for _ in 0..params.m_subcarriers {
+                // min over users of log2(1+c_k γ_k); γ i.i.d. per (user, m, t)
+                let min_rate = cs
+                    .iter()
+                    .map(|&c| (1.0 + c * rng.exponential()).log2())
+                    .fold(f64::INFINITY, f64::min);
+                slot_rate += params.b0_hz * min_rate;
+            }
+            delivered += slot_rate * params.slot_s;
+            if slots > 100_000_000 {
+                panic!("broadcast MC did not terminate: rate ~ 0");
+            }
+        }
+        total += slots as f64 * params.slot_s;
+    }
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(dists: Vec<f64>, m: usize) -> BroadcastParams {
+        BroadcastParams {
+            p_total_w: 20.0,
+            m_subcarriers: m,
+            noise_w: 3e-14,
+            b0_hz: 30_000.0,
+            alpha: 2.8,
+            dists_m: dists,
+            slot_s: 1e-3,
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_single_user_mc_mean() {
+        // E[log2(1+cγ)] MC vs (1/ln2)·e^{1/c}E1(1/c)
+        let p = params(vec![400.0], 100);
+        let c = p.mean_snrs()[0];
+        let mut rng = Pcg64::seeded(21);
+        let n = 300_000;
+        let mc: f64 = (0..n)
+            .map(|_| (1.0 + c * rng.exponential()).log2())
+            .sum::<f64>()
+            / n as f64;
+        let analytic = p.expected_min_rate() / p.b0_hz;
+        assert!(
+            (mc - analytic).abs() / analytic < 0.01,
+            "mc {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn closed_form_matches_multiuser_mc() {
+        let p = params(vec![200.0, 500.0, 700.0, 740.0], 50);
+        let mut rng = Pcg64::seeded(22);
+        let cs = p.mean_snrs();
+        let n = 200_000;
+        let mc: f64 = (0..n)
+            .map(|_| {
+                cs.iter()
+                    .map(|&c| (1.0 + c * rng.exponential()).log2())
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum::<f64>()
+            / n as f64;
+        let analytic = p.expected_min_rate() / p.b0_hz;
+        assert!(
+            (mc - analytic).abs() / analytic < 0.02,
+            "mc {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn latency_formula_matches_full_mc_simulation() {
+        let p = params(vec![300.0, 650.0], 20);
+        let bits = 2e6; // small enough for MC
+        let analytic = broadcast_latency(&p, bits);
+        let mut rng = Pcg64::seeded(23);
+        let mc = broadcast_latency_mc(&p, bits, 30, &mut rng);
+        assert!(
+            (mc - analytic).abs() / analytic < 0.05,
+            "mc {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn worst_user_dominates() {
+        let near = params(vec![100.0, 120.0], 50);
+        let with_far = params(vec![100.0, 740.0], 50);
+        assert!(near.expected_min_rate() > with_far.expected_min_rate());
+        // And the min-rate is below the far user's own single-user rate.
+        let far_alone = params(vec![740.0], 50);
+        assert!(with_far.expected_min_rate() <= far_alone.expected_min_rate() + 1e-9);
+    }
+
+    #[test]
+    fn latency_decreases_with_subcarriers_sublinearly() {
+        // More sub-carriers help, but the fixed power budget is split among
+        // them, so the gain is sub-linear in M (log2(1+c/M) per carrier).
+        let bits = 3.57e8; // ResNet18 × 32 bits
+        let t_few = broadcast_latency(&params(vec![400.0, 600.0], 85), bits);
+        let t_many = broadcast_latency(&params(vec![400.0, 600.0], 600), bits);
+        assert!(t_many < t_few);
+        let ratio = t_few / t_many;
+        assert!(
+            ratio > 1.5 && ratio < 600.0 / 85.0,
+            "ratio {ratio} should be sub-linear in M"
+        );
+    }
+
+    #[test]
+    fn more_users_never_faster() {
+        let bits = 1e8;
+        let t2 = broadcast_latency(&params(vec![300.0, 400.0], 100), bits);
+        let t4 = broadcast_latency(&params(vec![300.0, 400.0, 500.0, 700.0], 100), bits);
+        assert!(t4 >= t2);
+    }
+
+    #[test]
+    fn zero_bits_zero_latency() {
+        assert_eq!(broadcast_latency(&params(vec![100.0], 10), 0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_quantized_to_slots() {
+        let p = params(vec![400.0], 10);
+        let t = broadcast_latency(&p, 1.0); // one bit still costs one slot
+        assert!((t - p.slot_s).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! Rayleigh block-fading channel model (§II).
+//!
+//! The complex coefficient `h` has unit-mean Rayleigh magnitude, so the
+//! power gain `γ = |h|²` is Exp(1), i.i.d. across sub-carriers and slots.
+//! Large-scale attenuation is the paper's `d^{-α}` path loss; Eq. (6)
+//! normalizes the gain by the AWGN power and path loss:
+//! `γ̃ = γ / (N0·B0·d^α)`.
+
+use crate::util::rng::Pcg64;
+
+/// Static link budget between one transmitter/receiver pair.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkBudget {
+    /// Distance d (m).
+    pub dist_m: f64,
+    /// Path-loss exponent α.
+    pub alpha: f64,
+    /// Noise power on one sub-carrier, N0·B0 (W).
+    pub noise_w: f64,
+}
+
+impl LinkBudget {
+    /// The deterministic denominator of Eq. (6): `N0·B0·d^α`.
+    pub fn attenuation(&self) -> f64 {
+        self.noise_w * self.dist_m.powf(self.alpha)
+    }
+
+    /// Sample an instantaneous *normalized* channel gain γ̃ (Eq. 6).
+    pub fn sample_normalized_gain(&self, rng: &mut Pcg64) -> f64 {
+        rng.exponential() / self.attenuation()
+    }
+
+    /// Instantaneous SNR for transmit power `p` split over `m` sub-carriers
+    /// with a fresh fade (Eq. 17 shape).
+    pub fn sample_snr(&self, p_per_subcarrier: f64, rng: &mut Pcg64) -> f64 {
+        p_per_subcarrier * rng.exponential() / self.attenuation()
+    }
+
+    /// Mean SNR with power `p` on this link.
+    pub fn mean_snr(&self, p_per_subcarrier: f64) -> f64 {
+        p_per_subcarrier / self.attenuation()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attenuation_matches_hand_calc() {
+        let lb = LinkBudget {
+            dist_m: 100.0,
+            alpha: 2.0,
+            noise_w: 1e-14,
+        };
+        assert!((lb.attenuation() - 1e-10).abs() < 1e-22);
+    }
+
+    #[test]
+    fn gain_sampling_mean() {
+        let lb = LinkBudget {
+            dist_m: 10.0,
+            alpha: 2.0,
+            noise_w: 1e-12,
+        };
+        let mut rng = Pcg64::seeded(12);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| lb.sample_normalized_gain(&mut rng)).sum::<f64>() / n as f64;
+        let expect = 1.0 / lb.attenuation();
+        assert!((mean / expect - 1.0).abs() < 0.02, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn pathloss_monotone_in_distance_and_alpha() {
+        let mk = |d: f64, a: f64| LinkBudget {
+            dist_m: d,
+            alpha: a,
+            noise_w: 3e-14,
+        };
+        assert!(mk(200.0, 2.8).attenuation() < mk(700.0, 2.8).attenuation());
+        assert!(mk(200.0, 2.0).attenuation() < mk(200.0, 3.5).attenuation());
+        // Mean SNR decreases with distance.
+        assert!(mk(200.0, 2.8).mean_snr(0.01) > mk(700.0, 2.8).mean_snr(0.01));
+    }
+}

@@ -1,0 +1,417 @@
+//! End-to-end communication latency of flat FL (§II-A/B) and hierarchical
+//! FL (§III-A, Eq. 21), with the sparse-payload bit accounting of §IV.
+//!
+//! Payloads: a dense model/gradient of `Q` parameters quantized to `Q̂` bits
+//! costs `Q·Q̂` bits; a φ-sparsified one transmits the `(1−φ)·Q` surviving
+//! values plus their indices (⌈log2 Q⌉ bits each), exactly what DGC sends.
+
+use super::broadcast::{broadcast_latency, BroadcastParams};
+use super::mqam::LinkParams;
+use super::subcarrier::allocate_subcarriers;
+use crate::config::{Config, SparsityConfig};
+use crate::topology::NetworkTopology;
+
+/// Payload size in bits for `q` parameters at `bits_per_param`, sparsified
+/// by φ (φ = 0 → dense, no index overhead).
+pub fn payload_bits(q: usize, bits_per_param: u32, phi: f64) -> f64 {
+    assert!((0.0..1.0).contains(&phi), "phi={phi}");
+    if phi == 0.0 {
+        return q as f64 * bits_per_param as f64;
+    }
+    // Number of surviving values: round to counter fp noise in (1−φ)·Q,
+    // at least one value survives (DGC always sends the top element).
+    let kept = ((1.0 - phi) * q as f64).round().clamp(1.0, q as f64);
+    let index_bits = (q as f64).log2().ceil();
+    kept * (bits_per_param as f64 + index_bits)
+}
+
+/// Everything the latency model needs, bundled from the experiment config.
+#[derive(Clone, Debug)]
+pub struct LatencyInputs {
+    pub cfg: Config,
+    pub topo: NetworkTopology,
+}
+
+impl LatencyInputs {
+    pub fn new(cfg: &Config) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            topo: NetworkTopology::generate(&cfg.topology),
+        }
+    }
+
+    fn mu_link(&self, dist: f64) -> LinkParams {
+        let r = &self.cfg.radio;
+        LinkParams {
+            p_max_w: r.mu_power_w,
+            dist_m: dist,
+            alpha: r.pathloss_exp,
+            noise_w: r.noise_power_w(),
+            b0_hz: r.subcarrier_spacing_hz,
+            ber: r.ber,
+        }
+    }
+
+    fn sparsity(&self) -> SparsityEffective {
+        SparsityEffective::from(&self.cfg.sparsity)
+    }
+}
+
+/// φ values with `enabled` folded in (disabled → all dense).
+struct SparsityEffective {
+    mu_ul: f64,
+    sbs_dl: f64,
+    sbs_ul: f64,
+    mbs_dl: f64,
+}
+
+impl From<&SparsityConfig> for SparsityEffective {
+    fn from(s: &SparsityConfig) -> Self {
+        if s.enabled {
+            Self {
+                mu_ul: s.phi_mu_ul,
+                sbs_dl: s.phi_sbs_dl,
+                sbs_ul: s.phi_sbs_ul,
+                mbs_dl: s.phi_mbs_dl,
+            }
+        } else {
+            Self {
+                mu_ul: 0.0,
+                sbs_dl: 0.0,
+                sbs_ul: 0.0,
+                mbs_dl: 0.0,
+            }
+        }
+    }
+}
+
+/// Per-iteration latency decomposition of flat FL.
+#[derive(Clone, Copy, Debug)]
+pub struct FlLatency {
+    /// Gradient aggregation uplink, Eq. (15).
+    pub t_ul_s: f64,
+    /// Broadcast downlink, Eq. (18).
+    pub t_dl_s: f64,
+}
+
+impl FlLatency {
+    /// `T_FL = T_UL + T_DL` (per iteration).
+    pub fn total(&self) -> f64 {
+        self.t_ul_s + self.t_dl_s
+    }
+}
+
+/// Per-iteration (period-amortized) latency decomposition of HFL, Eq. (21).
+#[derive(Clone, Debug)]
+pub struct HflLatency {
+    /// Worst-cluster uplink latency per intra-cluster iteration, `max_n Γ_n^U`.
+    pub gamma_ul_s: f64,
+    /// Worst-cluster downlink latency per intra-cluster iteration, `max_n Γ_n^D`.
+    pub gamma_dl_s: f64,
+    /// SBS→MBS fronthaul uplink per period, `Θ^U`.
+    pub theta_ul_s: f64,
+    /// MBS→SBS fronthaul downlink per period, `Θ^D`.
+    pub theta_dl_s: f64,
+    /// Final SBS→MU model broadcast per period, `max_n Γ_n^D` term of Eq. 21.
+    pub final_dl_s: f64,
+    /// Averaging period H.
+    pub h: usize,
+    /// Per-cluster uplink latencies (diagnostics).
+    pub per_cluster_ul_s: Vec<f64>,
+    /// Per-cluster downlink latencies (diagnostics).
+    pub per_cluster_dl_s: Vec<f64>,
+}
+
+impl HflLatency {
+    /// Full period latency `Γ^period` (Eq. 21). The per-cluster sum uses the
+    /// worst cluster's (UL+DL) since expected per-iteration latencies are
+    /// time-invariant.
+    pub fn period(&self) -> f64 {
+        let worst_cluster: f64 = self
+            .per_cluster_ul_s
+            .iter()
+            .zip(&self.per_cluster_dl_s)
+            .map(|(u, d)| (u + d) * self.h as f64)
+            .fold(0.0, f64::max);
+        worst_cluster + self.theta_ul_s + self.theta_dl_s + self.final_dl_s
+    }
+
+    /// Amortized per-iteration latency `Γ^HFL = Γ^period / H`.
+    pub fn per_iteration(&self) -> f64 {
+        self.period() / self.h as f64
+    }
+}
+
+/// Flat FL per-iteration latency: all K MUs transmit to the MBS over the
+/// full band, MBS broadcasts the aggregate back.
+pub fn fl_latency(inputs: &LatencyInputs) -> FlLatency {
+    let cfg = &inputs.cfg;
+    let phi = inputs.sparsity();
+    let q = cfg.latency.q_params;
+    let qb = cfg.latency.bits_per_param;
+
+    // Uplink: Algorithm 2 over every MU's link to the MBS.
+    let links: Vec<LinkParams> = inputs
+        .topo
+        .users
+        .iter()
+        .map(|u| inputs.mu_link(u.dist_mbs))
+        .collect();
+    let alloc = allocate_subcarriers(&links, cfg.radio.subcarriers);
+    let ul_bits = payload_bits(q, qb, phi.mu_ul);
+    let t_ul = alloc
+        .rates
+        .iter()
+        .map(|r| ul_bits / r)
+        .fold(0.0, f64::max);
+
+    // Downlink: MBS broadcast to every MU. In flat FL the MBS applies the
+    // model-difference sparsification φ^dl_MBS (§V-C discusses FL with
+    // downlink sparsification).
+    let dl_bits = payload_bits(q, qb, phi.mbs_dl);
+    let bp = BroadcastParams {
+        p_total_w: cfg.radio.mbs_power_w,
+        m_subcarriers: cfg.radio.subcarriers,
+        noise_w: cfg.radio.noise_power_w(),
+        b0_hz: cfg.radio.subcarrier_spacing_hz,
+        alpha: cfg.radio.pathloss_exp,
+        dists_m: inputs.topo.mbs_distances(),
+        slot_s: cfg.radio.broadcast_slot_s,
+    };
+    let t_dl = broadcast_latency(&bp, dl_bits);
+
+    FlLatency {
+        t_ul_s: t_ul,
+        t_dl_s: t_dl,
+    }
+}
+
+/// Hierarchical FL latency (Eq. 21) with frequency reuse: each cluster gets
+/// `M / N_c` sub-carriers, MU↔SBS links replace MU↔MBS, and every H
+/// iterations the SBSs exchange sparsified model differences with the MBS
+/// over the ×`fronthaul_multiplier` fronthaul.
+pub fn hfl_latency(inputs: &LatencyInputs) -> HflLatency {
+    let cfg = &inputs.cfg;
+    let phi = inputs.sparsity();
+    let q = cfg.latency.q_params;
+    let qb = cfg.latency.bits_per_param;
+    let topo = &inputs.topo;
+
+    let m_cluster = topo.layout.subcarriers_per_cluster(cfg.radio.subcarriers);
+    let ul_bits = payload_bits(q, qb, phi.mu_ul);
+    let dl_bits = payload_bits(q, qb, phi.sbs_dl);
+
+    let mut per_cluster_ul = Vec::with_capacity(topo.n_clusters());
+    let mut per_cluster_dl = Vec::with_capacity(topo.n_clusters());
+    let mut rate_sum = 0.0;
+    let mut rate_count = 0usize;
+
+    for n in 0..topo.n_clusters() {
+        let dists = topo.sbs_distances(n);
+        assert!(!dists.is_empty(), "cluster {n} has no users");
+        // Uplink MU→SBS: Algorithm 2 within the cluster band.
+        let links: Vec<LinkParams> = dists.iter().map(|&d| inputs.mu_link(d)).collect();
+        let alloc = allocate_subcarriers(&links, m_cluster.max(links.len()));
+        let gamma_u = alloc
+            .rates
+            .iter()
+            .map(|r| ul_bits / r)
+            .fold(0.0, f64::max);
+        rate_sum += alloc.rates.iter().sum::<f64>();
+        rate_count += alloc.rates.len();
+
+        // Downlink SBS→MU broadcast of the aggregated (sparse) gradient.
+        let bp = BroadcastParams {
+            p_total_w: cfg.radio.sbs_power_w,
+            m_subcarriers: m_cluster,
+            noise_w: cfg.radio.noise_power_w(),
+            b0_hz: cfg.radio.subcarrier_spacing_hz,
+            alpha: cfg.radio.pathloss_exp,
+            dists_m: dists,
+            slot_s: cfg.radio.broadcast_slot_s,
+        };
+        let gamma_d = broadcast_latency(&bp, dl_bits);
+
+        per_cluster_ul.push(gamma_u);
+        per_cluster_dl.push(gamma_d);
+    }
+
+    // Fronthaul: ×multiplier of the mean per-MU UL rate (§V-A).
+    let mean_mu_rate = rate_sum / rate_count as f64;
+    let fronthaul_rate = cfg.radio.fronthaul_multiplier * mean_mu_rate;
+    let theta_ul = payload_bits(q, qb, phi.sbs_ul) / fronthaul_rate;
+    let theta_dl = payload_bits(q, qb, phi.mbs_dl) / fronthaul_rate;
+
+    // Final SBS→MU model broadcast after global averaging: worst cluster DL.
+    let final_dl = per_cluster_dl.iter().cloned().fold(0.0, f64::max);
+
+    HflLatency {
+        gamma_ul_s: per_cluster_ul.iter().cloned().fold(0.0, f64::max),
+        gamma_dl_s: final_dl,
+        theta_ul_s: theta_ul,
+        theta_dl_s: theta_dl,
+        final_dl_s: final_dl,
+        h: cfg.training.h_period,
+        per_cluster_ul_s: per_cluster_ul,
+        per_cluster_dl_s: per_cluster_dl,
+    }
+}
+
+/// Headline metric of Fig. 3–5: `speed-up = T^FL / Γ^HFL`.
+pub fn speedup(inputs: &LatencyInputs) -> f64 {
+    fl_latency(inputs).total() / hfl_latency(inputs).per_iteration()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn small_cfg() -> Config {
+        // Paper-scale Q: all latency formulas are analytic, so this is fast,
+        // and it keeps the broadcast slot quantization negligible.
+        Config::paper_table2()
+    }
+
+    #[test]
+    fn payload_bits_dense_and_sparse() {
+        assert_eq!(payload_bits(1000, 32, 0.0), 32_000.0);
+        // φ=0.99 → 10 values × (32 + 10) bits
+        assert_eq!(payload_bits(1000, 32, 0.99), 10.0 * 42.0);
+        // Sparse must beat dense for high φ …
+        assert!(payload_bits(1_000_000, 32, 0.99) < payload_bits(1_000_000, 32, 0.0));
+        // … but not necessarily for tiny φ (index overhead).
+        assert!(payload_bits(1_000_000, 32, 0.01) > payload_bits(1_000_000, 32, 0.0) * 0.95);
+    }
+
+    #[test]
+    fn hfl_beats_fl_in_loaded_cells() {
+        // Fig. 3: speed-up exceeds 1 and grows with the number of MUs per
+        // cluster (at the smallest cells + H=2 the final-model broadcast
+        // amortizes over too few iterations and the two roughly tie).
+        let mut prev = 0.0;
+        for mus in [4usize, 8, 12, 16] {
+            let mut cfg = small_cfg();
+            cfg.topology.mus_per_cluster = mus;
+            cfg.training.h_period = 4;
+            let s = speedup(&LatencyInputs::new(&cfg));
+            assert!(s > prev, "speed-up should grow with MUs: {mus} gives {s} (prev {prev})");
+            prev = s;
+        }
+        assert!(prev > 1.3, "speed-up at 16 MUs/cluster should be clear: {prev}");
+        let mut cfg = small_cfg();
+        cfg.topology.mus_per_cluster = 8;
+        assert!(speedup(&LatencyInputs::new(&cfg)) > 1.0);
+    }
+
+    #[test]
+    fn speedup_grows_with_h() {
+        let mut prev = 0.0;
+        for h in [1usize, 2, 4, 6] {
+            let mut cfg = small_cfg();
+            cfg.training.h_period = h;
+            let s = speedup(&LatencyInputs::new(&cfg));
+            assert!(
+                s >= prev,
+                "speed-up should not decrease with H: H={h} gives {s} < {prev}"
+            );
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_pathloss_exponent() {
+        // Fig. 4: harsher path loss punishes the long MBS links more.
+        let mut prev = 0.0;
+        for alpha in [2.0, 2.4, 2.8, 3.2, 3.6, 4.0] {
+            let mut cfg = small_cfg();
+            cfg.radio.pathloss_exp = alpha;
+            let s = speedup(&LatencyInputs::new(&cfg));
+            assert!(
+                s > prev * 0.98,
+                "speed-up should trend up with α: α={alpha} gives {s} (prev {prev})"
+            );
+            prev = s;
+        }
+        // End-to-end it must have grown substantially.
+        let mut lo = small_cfg();
+        lo.radio.pathloss_exp = 2.0;
+        let mut hi = small_cfg();
+        hi.radio.pathloss_exp = 4.0;
+        assert!(speedup(&LatencyInputs::new(&hi)) > speedup(&LatencyInputs::new(&lo)));
+    }
+
+    #[test]
+    fn sparsification_cuts_latency_dramatically() {
+        // Fig. 5 shape: sparse vs dense for both FL and HFL.
+        let mut dense = small_cfg();
+        dense.sparsity.enabled = false;
+        let mut sparse = small_cfg();
+        sparse.sparsity.enabled = true;
+        let di = LatencyInputs::new(&dense);
+        let si = LatencyInputs::new(&sparse);
+        let fl_gain = fl_latency(&di).total() / fl_latency(&si).total();
+        let hfl_gain = hfl_latency(&di).per_iteration() / hfl_latency(&si).per_iteration();
+        assert!(fl_gain > 5.0, "FL sparsification gain {fl_gain}");
+        assert!(hfl_gain > 5.0, "HFL sparsification gain {hfl_gain}");
+    }
+
+    #[test]
+    fn latency_scales_linearly_in_q() {
+        let mut small = small_cfg();
+        small.sparsity.enabled = false; // broadcast slot quantization aside
+        small.latency.q_params = 2_000_000;
+        let mut big = small.clone();
+        big.latency.q_params = small.latency.q_params * 4;
+        let ts = fl_latency(&LatencyInputs::new(&small)).total();
+        let tb = fl_latency(&LatencyInputs::new(&big)).total();
+        let ratio = tb / ts;
+        assert!((ratio - 4.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn eq21_period_composition() {
+        let cfg = small_cfg();
+        let h = hfl_latency(&LatencyInputs::new(&cfg));
+        let manual = h
+            .per_cluster_ul_s
+            .iter()
+            .zip(&h.per_cluster_dl_s)
+            .map(|(u, d)| (u + d) * h.h as f64)
+            .fold(0.0, f64::max)
+            + h.theta_ul_s
+            + h.theta_dl_s
+            + h.final_dl_s;
+        assert!((h.period() - manual).abs() < 1e-12);
+        assert!((h.per_iteration() - manual / h.h as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fronthaul_negligible_with_paper_multiplier() {
+        let cfg = small_cfg();
+        let h = hfl_latency(&LatencyInputs::new(&cfg));
+        // The ×100 fronthaul should be a small share of the period.
+        assert!(h.theta_ul_s + h.theta_dl_s < 0.5 * h.period());
+    }
+
+    #[test]
+    fn more_mus_increase_fl_latency_more_than_hfl() {
+        // Fig. 5 discussion: macro cell scarcity hurts FL harder.
+        let at = |mus: usize| {
+            let mut cfg = small_cfg();
+            cfg.topology.mus_per_cluster = mus;
+            let i = LatencyInputs::new(&cfg);
+            (fl_latency(&i).total(), hfl_latency(&i).per_iteration())
+        };
+        let (fl4, hfl4) = at(4);
+        let (fl12, hfl12) = at(12);
+        assert!(fl12 > fl4);
+        assert!(hfl12 > hfl4 * 0.9); // HFL may grow a little
+        assert!(
+            fl12 / fl4 > hfl12 / hfl4,
+            "FL growth {} should exceed HFL growth {}",
+            fl12 / fl4,
+            hfl12 / hfl4
+        );
+    }
+}

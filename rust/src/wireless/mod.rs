@@ -1,0 +1,22 @@
+//! The wireless PHY substrate of the paper (§II, §III-A): Rayleigh-fading
+//! channels, truncated channel-inversion power control, threshold-optimized
+//! M-QAM expected rates, the optimal max-min sub-carrier allocation
+//! (Algorithm 2), the rateless broadcast downlink, and the end-to-end
+//! latency of flat FL ([`latency::fl_latency`]) and hierarchical FL
+//! ([`latency::hfl_latency`], Eq. 21).
+//!
+//! All quantities are *expected* values over the fading distribution, as in
+//! the paper's analysis; the broadcast expectation has both an exact
+//! closed form (derived in [`broadcast`]) and a Monte-Carlo estimator used
+//! to cross-validate it in tests.
+
+pub mod broadcast;
+pub mod channel;
+pub mod power;
+pub mod latency;
+pub mod mqam;
+pub mod subcarrier;
+
+pub use latency::{fl_latency, hfl_latency, FlLatency, HflLatency, LatencyInputs};
+pub use mqam::LinkParams;
+pub use subcarrier::{allocate_subcarriers, Allocation};

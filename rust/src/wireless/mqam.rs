@@ -1,0 +1,168 @@
+//! Threshold-optimized expected uplink rate for truncated channel inversion
+//! with M-QAM signalling — Eq. (5)–(12) of the paper, following
+//! Goldsmith & Chua (1997).
+//!
+//! With Rayleigh fading (γ ~ Exp(1)) the power normalizer of Eq. (7)–(8)
+//! has closed form `E[1/γ]_{γth} = E₁(γth)` (exponential integral), so the
+//! expected per-sub-carrier rate of a MU with `m` assigned sub-carriers is
+//!
+//! ```text
+//! Ū(m) = max_{γth}  B0·log2(1 + κ·P_max / (m·N0·B0·d^α·E₁(γth))) · e^{−γth}
+//! κ = 1.5 / (−ln(5·BER))
+//! ```
+//!
+//! which we maximize by golden-section search over ln γth (the objective is
+//! unimodal: small γth wastes power inverting deep fades, large γth wastes
+//! coverage).
+
+use crate::util::math::{exp_int_e1, golden_section_max};
+
+/// Static parameters of one transmitter→receiver link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkParams {
+    /// Transmitter total power budget P_max (W).
+    pub p_max_w: f64,
+    /// Distance d (m).
+    pub dist_m: f64,
+    /// Path-loss exponent α.
+    pub alpha: f64,
+    /// Per-sub-carrier noise power N0·B0 (W).
+    pub noise_w: f64,
+    /// Sub-carrier bandwidth B0 (Hz).
+    pub b0_hz: f64,
+    /// Target bit error rate.
+    pub ber: f64,
+}
+
+impl LinkParams {
+    /// κ = 1.5 / (−ln(5·BER)) — the M-QAM SNR gap factor of Eq. (9).
+    pub fn qam_kappa(&self) -> f64 {
+        1.5 / (-(5.0 * self.ber).ln())
+    }
+
+    /// Deterministic link attenuation N0·B0·d^α.
+    pub fn attenuation(&self) -> f64 {
+        self.noise_w * self.dist_m.powf(self.alpha)
+    }
+
+    /// Expected rate on ONE sub-carrier when the transmitter's power is
+    /// split over `m_subcarriers`, with the optimal truncation threshold
+    /// (Eq. 11). Returns `(rate_bps, optimal_gamma_th)`.
+    pub fn optimal_rate_per_subcarrier(&self, m_subcarriers: usize) -> (f64, f64) {
+        assert!(m_subcarriers >= 1);
+        let kappa = self.qam_kappa();
+        let p_per = self.p_max_w / m_subcarriers as f64;
+        let c = kappa * p_per / self.attenuation(); // κ·ρ numerator scale
+        let objective = |ln_th: f64| {
+            let th: f64 = ln_th.exp();
+            let rho_scale = c / exp_int_e1(th);
+            self.b0_hz * (1.0 + rho_scale).log2() * (-th).exp()
+        };
+        let (ln_th, rate) = golden_section_max(objective, (1e-9f64).ln(), (30.0f64).ln(), 1e-6);
+        (rate, ln_th.exp())
+    }
+
+    /// Total expected UL rate with `m` sub-carriers: `Ū_k = m · Ū(m)`
+    /// (Eq. 12; i.i.d. sub-carriers so all have the same optimum).
+    pub fn total_rate(&self, m_subcarriers: usize) -> f64 {
+        let (per, _) = self.optimal_rate_per_subcarrier(m_subcarriers);
+        m_subcarriers as f64 * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_mu_link(dist: f64) -> LinkParams {
+        LinkParams {
+            p_max_w: 0.2,
+            dist_m: dist,
+            alpha: 2.8,
+            noise_w: 3e-14, // −150 dBm/Hz × 30 kHz
+            b0_hz: 30_000.0,
+            ber: 1e-3,
+        }
+    }
+
+    #[test]
+    fn kappa_value() {
+        let k = paper_mu_link(100.0).qam_kappa();
+        // 1.5 / −ln(0.005) = 1.5/5.2983 ≈ 0.28311
+        assert!((k - 0.28311).abs() < 1e-4, "{k}");
+    }
+
+    #[test]
+    fn rate_positive_and_sane_at_paper_scales() {
+        let (rate, th) = paper_mu_link(250.0).optimal_rate_per_subcarrier(20);
+        assert!(rate > 0.0);
+        assert!(th > 0.0);
+        // 30 kHz sub-carrier cannot exceed ~20 bit/s/Hz at these SNRs.
+        assert!(rate < 30_000.0 * 25.0, "rate {rate}");
+        // And at 250 m with 10 mW/sub-carrier the link is strong: expect
+        // at least a few bits/s/Hz.
+        assert!(rate > 30_000.0 * 2.0, "rate {rate}");
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let near = paper_mu_link(100.0).total_rate(10);
+        let mid = paper_mu_link(400.0).total_rate(10);
+        let far = paper_mu_link(750.0).total_rate(10);
+        assert!(near > mid && mid > far, "{near} {mid} {far}");
+    }
+
+    #[test]
+    fn total_rate_increases_with_subcarriers() {
+        let l = paper_mu_link(300.0);
+        let mut prev = 0.0;
+        for m in [1usize, 2, 4, 8, 16, 32] {
+            let r = l.total_rate(m);
+            assert!(r > prev, "m={m}: {r} <= {prev}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn per_subcarrier_rate_decreases_with_subcarriers() {
+        // Splitting the same power over more sub-carriers lowers each one's
+        // rate (log concavity) even as the total grows.
+        let l = paper_mu_link(300.0);
+        let (r1, _) = l.optimal_rate_per_subcarrier(1);
+        let (r8, _) = l.optimal_rate_per_subcarrier(8);
+        let (r64, _) = l.optimal_rate_per_subcarrier(64);
+        assert!(r1 > r8 && r8 > r64);
+    }
+
+    #[test]
+    fn optimal_threshold_beats_fixed_thresholds() {
+        let l = paper_mu_link(500.0);
+        let kappa = l.qam_kappa();
+        let c = kappa * (l.p_max_w / 4.0) / l.attenuation();
+        let rate_at = |th: f64| l.b0_hz * (1.0 + c / exp_int_e1(th)).log2() * (-th).exp();
+        let (opt_rate, _) = l.optimal_rate_per_subcarrier(4);
+        for th in [1e-6, 1e-3, 0.01, 0.1, 0.5, 1.0, 2.0, 5.0] {
+            assert!(
+                opt_rate >= rate_at(th) - 1e-6,
+                "th={th}: fixed {} > optimal {opt_rate}",
+                rate_at(th)
+            );
+        }
+    }
+
+    #[test]
+    fn rate_increases_with_power() {
+        let mut weak = paper_mu_link(300.0);
+        weak.p_max_w = 0.02;
+        let strong = paper_mu_link(300.0);
+        assert!(strong.total_rate(8) > weak.total_rate(8));
+    }
+
+    #[test]
+    fn rate_decreases_with_stricter_ber() {
+        let mut strict = paper_mu_link(300.0);
+        strict.ber = 1e-6;
+        let loose = paper_mu_link(300.0);
+        assert!(loose.total_rate(8) > strict.total_rate(8));
+    }
+}

@@ -1,0 +1,202 @@
+//! Optimal max-min sub-carrier allocation — Algorithm 2 and Theorem 1.
+//!
+//! Give every MU one sub-carrier, then repeatedly hand the next sub-carrier
+//! to the MU whose current total expected rate `Ū_k` is smallest,
+//! re-optimizing that MU's truncation threshold (its per-sub-carrier rate
+//! depends on its count through the power split). Theorem 1 proves this
+//! greedy is optimal for the max-min objective of Eq. (13); our property
+//! tests check greedy ≥ every random allocation on random instances.
+
+use super::mqam::LinkParams;
+
+/// Result of allocating `m_total` sub-carriers among `K` users.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Sub-carrier count per user.
+    pub counts: Vec<usize>,
+    /// Total expected rate `Ū_k` per user (bits/s) at its final count.
+    pub rates: Vec<f64>,
+}
+
+impl Allocation {
+    pub fn min_rate(&self) -> f64 {
+        self.rates.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_rate(&self) -> f64 {
+        self.rates.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Algorithm 2. `links[k]` are the static link parameters of MU k;
+/// `m_total` must be ≥ K (every MU needs at least one sub-carrier,
+/// otherwise its rate — and the min — is zero).
+pub fn allocate_subcarriers(links: &[LinkParams], m_total: usize) -> Allocation {
+    let k = links.len();
+    assert!(k > 0, "no users to allocate to");
+    assert!(
+        m_total >= k,
+        "need at least one sub-carrier per MU ({k} MUs, {m_total} sub-carriers)"
+    );
+    let mut counts = vec![1usize; k];
+    let mut rates: Vec<f64> = links.iter().map(|l| l.total_rate(1)).collect();
+    let mut remaining = m_total - k;
+    while remaining > 0 {
+        // k* = argmin Ū_k (line 5)
+        let (kstar, _) = rates
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        counts[kstar] += 1;
+        rates[kstar] = links[kstar].total_rate(counts[kstar]);
+        remaining -= 1;
+    }
+    Allocation { counts, rates }
+}
+
+/// Rates for an arbitrary (externally chosen) allocation — used by tests and
+/// the ablation bench comparing greedy against naive splits.
+pub fn rates_for_counts(links: &[LinkParams], counts: &[usize]) -> Vec<f64> {
+    assert_eq!(links.len(), counts.len());
+    links
+        .iter()
+        .zip(counts)
+        .map(|(l, &c)| if c == 0 { 0.0 } else { l.total_rate(c) })
+        .collect()
+}
+
+/// Uniform split baseline: ⌊M/K⌋ each, remainder to the first users.
+pub fn uniform_allocation(links: &[LinkParams], m_total: usize) -> Allocation {
+    let k = links.len();
+    let base = m_total / k;
+    let extra = m_total % k;
+    let counts: Vec<usize> = (0..k).map(|i| base + usize::from(i < extra)).collect();
+    let rates = rates_for_counts(links, &counts);
+    Allocation { counts, rates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen, PropConfig};
+    use crate::util::rng::Pcg64;
+
+    fn link(dist: f64) -> LinkParams {
+        LinkParams {
+            p_max_w: 0.2,
+            dist_m: dist,
+            alpha: 2.8,
+            noise_w: 3e-14,
+            b0_hz: 30_000.0,
+            ber: 1e-3,
+        }
+    }
+
+    #[test]
+    fn conserves_subcarriers_and_covers_everyone() {
+        let links: Vec<_> = [100.0, 300.0, 500.0, 700.0].map(link).into();
+        let alloc = allocate_subcarriers(&links, 40);
+        assert_eq!(alloc.counts.iter().sum::<usize>(), 40);
+        assert!(alloc.counts.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn far_users_get_more_subcarriers() {
+        let links: Vec<_> = [100.0, 700.0].map(link).into();
+        let alloc = allocate_subcarriers(&links, 30);
+        assert!(
+            alloc.counts[1] > alloc.counts[0],
+            "far user got {:?}",
+            alloc.counts
+        );
+    }
+
+    #[test]
+    fn greedy_beats_uniform_min_rate_for_heterogeneous_users() {
+        let links: Vec<_> = [80.0, 200.0, 450.0, 740.0].map(link).into();
+        let greedy = allocate_subcarriers(&links, 60);
+        let uniform = uniform_allocation(&links, 60);
+        assert!(
+            greedy.min_rate() >= uniform.min_rate() - 1e-9,
+            "greedy {} < uniform {}",
+            greedy.min_rate(),
+            uniform.min_rate()
+        );
+        // With this heterogeneity it should be strictly better.
+        assert!(greedy.min_rate() > uniform.min_rate() * 1.01);
+    }
+
+    #[test]
+    fn equal_distances_get_balanced_counts() {
+        let links: Vec<_> = [400.0, 400.0, 400.0].map(link).into();
+        let alloc = allocate_subcarriers(&links, 31);
+        let min = *alloc.counts.iter().min().unwrap();
+        let max = *alloc.counts.iter().max().unwrap();
+        assert!(max - min <= 1, "{:?}", alloc.counts);
+    }
+
+    /// Random-instance property: greedy's min-rate ≥ min-rate of random
+    /// feasible allocations with the same total (Theorem 1 corollary).
+    #[test]
+    fn prop_greedy_is_maxmin_optimal_vs_random_allocations() {
+        struct Instance;
+        impl Gen for Instance {
+            type Value = (Vec<f64>, usize, u64);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                let k = 2 + rng.uniform_usize(4);
+                let dists: Vec<f64> = (0..k).map(|_| rng.uniform_range(50.0, 750.0)).collect();
+                let m = k + rng.uniform_usize(20);
+                (dists, m, rng.next_u64())
+            }
+        }
+        check(&PropConfig { cases: 40, ..Default::default() }, &Instance, |(dists, m, seed)| {
+            let links: Vec<_> = dists.iter().map(|&d| link(d)).collect();
+            let greedy = allocate_subcarriers(&links, *m);
+            let mut rng = Pcg64::seeded(*seed);
+            for _ in 0..10 {
+                // Random feasible allocation: 1 each + random remainder.
+                let mut counts = vec![1usize; links.len()];
+                for _ in 0..(m - links.len()) {
+                    counts[rng.uniform_usize(links.len())] += 1;
+                }
+                let rates = rates_for_counts(&links, &counts);
+                let alt_min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+                if alt_min > greedy.min_rate() + 1e-6 {
+                    return Err(format!(
+                        "random alloc {counts:?} min {alt_min} beats greedy {}",
+                        greedy.min_rate()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exhaustive_small_instance_optimality() {
+        // K=3, M=7: enumerate all allocations (c1+c2+c3=7, ci≥1) and verify
+        // greedy achieves the global max-min.
+        let links: Vec<_> = [150.0, 420.0, 730.0].map(link).into();
+        let greedy = allocate_subcarriers(&links, 7).min_rate();
+        let mut best = 0.0f64;
+        for c1 in 1..=5 {
+            for c2 in 1..=(6 - c1) {
+                let c3 = 7 - c1 - c2;
+                let rates = rates_for_counts(&links, &[c1, c2, c3]);
+                best = best.max(rates.iter().cloned().fold(f64::INFINITY, f64::min));
+            }
+        }
+        assert!(
+            (greedy - best).abs() / best < 1e-9,
+            "greedy {greedy} vs exhaustive {best}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one sub-carrier")]
+    fn too_few_subcarriers_panics() {
+        let links: Vec<_> = [100.0, 200.0, 300.0].map(link).into();
+        allocate_subcarriers(&links, 2);
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration test: the thread-actor coordinator and the sequential
+//! reference engine are the SAME algorithm — identical compressors in
+//! identical order — so on a deterministic oracle they must produce
+//! bit-identical final parameters and identical communication bits.
+
+use hfl::config::SparsityConfig;
+use hfl::coordinator::{run_coordinated, CoordinatorOptions, LinkKind};
+use hfl::fl::oracle::QuadraticOracle;
+use hfl::fl::{run_hierarchical, TrainOptions};
+
+fn train_opts(sparse: bool, n_clusters: usize) -> TrainOptions {
+    TrainOptions {
+        iters: 48,
+        peak_lr: 0.04,
+        warmup_iters: 6,
+        milestones: (0.5, 0.75),
+        momentum: 0.9,
+        weight_decay: 1e-3,
+        h_period: 4,
+        n_clusters,
+        sparsity: if sparse {
+            SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.8,
+                phi_sbs_dl: 0.5,
+                phi_sbs_ul: 0.5,
+                phi_mbs_dl: 0.5,
+                beta_m: 0.2,
+                beta_s: 0.5,
+            }
+        } else {
+            SparsityConfig::dense()
+        },
+        eval_every: 0,
+    }
+}
+
+/// NOTE: the quadratic oracle must be noiseless — its noise RNG is shared
+/// across workers, so request *order* (which differs between the threaded
+/// and sequential versions) would perturb noisy gradients.
+fn check_equivalence(sparse: bool, n_clusters: usize, seed: u64) {
+    let opts = train_opts(sparse, n_clusters);
+    let mut oracle = QuadraticOracle::new(24, 8, 0.0, seed);
+    let seq = run_hierarchical(&mut oracle, &opts);
+
+    let copts = CoordinatorOptions::from(&opts);
+    let coord = run_coordinated(move || QuadraticOracle::new(24, 8, 0.0, seed), &copts).unwrap();
+
+    assert_eq!(
+        seq.final_params, coord.final_params,
+        "sequential and coordinated final parameters must be bit-identical \
+         (sparse={sparse}, n={n_clusters})"
+    );
+
+    // Communication accounting agrees per link.
+    let links = [
+        (seq.bits.mu_ul, LinkKind::MuUl),
+        (seq.bits.sbs_dl, LinkKind::SbsDl),
+        (seq.bits.sbs_ul, LinkKind::SbsUl),
+        (seq.bits.mbs_dl, LinkKind::MbsDl),
+    ];
+    for (want, link) in links {
+        let got = coord.metrics.total_bits(link);
+        assert_eq!(got, want, "bits mismatch on {link:?}");
+    }
+}
+
+#[test]
+fn dense_hfl_bit_identical() {
+    check_equivalence(false, 4, 2024);
+}
+
+#[test]
+fn sparse_hfl_bit_identical() {
+    check_equivalence(true, 4, 2025);
+}
+
+#[test]
+fn dense_flat_fl_bit_identical() {
+    check_equivalence(false, 1, 2026);
+}
+
+#[test]
+fn sparse_flat_fl_bit_identical() {
+    check_equivalence(true, 1, 2027);
+}
+
+#[test]
+fn two_clusters_sparse_bit_identical() {
+    check_equivalence(true, 2, 2028);
+}
