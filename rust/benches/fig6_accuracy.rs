@@ -28,7 +28,7 @@ fn main() {
     // Accuracy curves → CSV (Fig. 6 data).
     let _ = std::fs::create_dir_all("results");
     let mut header = vec!["iter".to_string()];
-    header.extend(results.iter().map(|r| r.scenario.name.clone()));
+    header.extend(results.iter().map(|r| r.name.clone()));
     let mut table = CsvTable::new(header);
     if let Some(first) = results.first() {
         for (i, (it, _)) in first.curve.iter().enumerate() {

@@ -60,6 +60,27 @@ impl MetricsLog {
             .sum()
     }
 
+    /// Fold the event stream into the engine's per-link accounting schema
+    /// ([`crate::fl::CommBits`]) — the shared currency of
+    /// [`crate::sim::result::ScenarioResult`], letting the sequential
+    /// engine, the coordinator and the matrix runner be compared (and
+    /// golden-traced) field by field.
+    pub fn comm_bits(&self) -> crate::fl::CommBits {
+        let mut bits = crate::fl::CommBits::default();
+        for e in &self.events {
+            match e.link {
+                LinkKind::MuUl => {
+                    bits.mu_ul += e.bits;
+                    bits.n_mu_msgs += 1;
+                }
+                LinkKind::SbsDl => bits.sbs_dl += e.bits,
+                LinkKind::SbsUl => bits.sbs_ul += e.bits,
+                LinkKind::MbsDl => bits.mbs_dl += e.bits,
+            }
+        }
+        bits
+    }
+
     /// Per-iteration worst-MU uplink payload within each cluster — the
     /// quantity entering `Γ_n^U = max_k bits_k / rate_k` (uniform rates
     /// within a cluster make max-bits the max-latency proxy).
@@ -131,5 +152,12 @@ mod tests {
         assert_eq!(log.per_iter_max_mu_bits(0, 1), 250.0);
         assert_eq!(log.mean_loss(0), Some(3.0));
         assert_eq!(log.n_iters(), 1);
+        let bits = log.comm_bits();
+        assert_eq!(bits.mu_ul, 350.0);
+        assert_eq!(bits.sbs_dl, 70.0);
+        assert_eq!(bits.sbs_ul, 0.0);
+        assert_eq!(bits.mbs_dl, 0.0);
+        assert_eq!(bits.n_mu_msgs, 2);
+        assert_eq!(bits.total(), 420.0);
     }
 }

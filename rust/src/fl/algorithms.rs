@@ -78,7 +78,7 @@ impl Default for TrainOptions {
 /// Per-link cumulative communication volume in bits (value+index wire
 /// format, 32-bit values) — consumed by the latency model to convert a
 /// training run into simulated network time.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommBits {
     pub mu_ul: f64,
     pub sbs_dl: f64,

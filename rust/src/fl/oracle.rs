@@ -72,6 +72,36 @@ impl QuadraticOracle {
         }
     }
 
+    /// Like [`QuadraticOracle::new`], but with a *non-IID skew* knob
+    /// controlling data heterogeneity, used by the scenario-matrix engine
+    /// ([`crate::sim::matrix`]): every worker's optimum is
+    /// `c_k = c_shared + skew · δ_k` with `δ_k ~ N(0, 3)` per coordinate.
+    /// `skew = 0` makes all workers share one optimum (IID — hierarchy
+    /// costs nothing); `skew = 1` matches the heterogeneity scale of
+    /// [`QuadraticOracle::new`] (fully non-IID shards).
+    pub fn new_skewed(dim: usize, workers: usize, noise: f32, skew: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&skew), "skew={skew} outside [0,1]");
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0xACC1);
+        let shared: Vec<f32> = (0..dim).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect();
+        let a = (0..workers)
+            .map(|_| (0..dim).map(|_| rng.uniform_range(0.5, 2.0) as f32).collect())
+            .collect();
+        let c = (0..workers)
+            .map(|_| {
+                (0..dim)
+                    .map(|i| shared[i] + (skew * rng.normal_ms(0.0, 3.0)) as f32)
+                    .collect()
+            })
+            .collect();
+        Self {
+            dim,
+            a,
+            c,
+            noise,
+            rng,
+        }
+    }
+
     /// Closed-form global optimum: argmin Σ_k 0.5(w−c_k)ᵀA_k(w−c_k)
     /// = (Σ A_k)⁻¹ (Σ A_k c_k), coordinate-wise for diagonal A.
     pub fn optimum(&self) -> Vec<f32> {
@@ -166,6 +196,53 @@ mod tests {
             let perturbed: Vec<f32> =
                 w.iter().map(|&x| x + rng.normal_ms(0.0, 0.5) as f32).collect();
             assert!(o.objective(&perturbed) >= fo - 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_skew_is_iid_and_skew_widens_spread() {
+        // skew = 0: every worker shares one optimum, which is also the
+        // global optimum.
+        let o = QuadraticOracle::new_skewed(8, 4, 0.0, 0.0, 77);
+        let w = o.optimum();
+        for k in 0..4 {
+            for i in 0..8 {
+                assert!((o.c[k][i] - o.c[0][i]).abs() < 1e-12, "worker {k} coord {i}");
+            }
+        }
+        for i in 0..8 {
+            assert!((w[i] - o.c[0][i]).abs() < 1e-5, "coord {i}");
+        }
+        // Larger skew → larger spread of per-worker optima.
+        let spread = |o: &QuadraticOracle| -> f64 {
+            let w = o.optimum();
+            o.c.iter()
+                .map(|c| {
+                    c.iter()
+                        .zip(&w)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                })
+                .sum::<f64>()
+        };
+        let half = QuadraticOracle::new_skewed(8, 4, 0.0, 0.5, 77);
+        let full = QuadraticOracle::new_skewed(8, 4, 0.0, 1.0, 77);
+        assert!(spread(&half) > 0.0);
+        assert!(spread(&full) > spread(&half), "{} vs {}", spread(&full), spread(&half));
+    }
+
+    #[test]
+    fn skewed_oracle_is_deterministic_per_seed() {
+        let mut a = QuadraticOracle::new_skewed(6, 3, 0.0, 0.7, 9);
+        let mut b = QuadraticOracle::new_skewed(6, 3, 0.0, 0.7, 9);
+        let w = vec![0.25f32; 6];
+        let (mut ga, mut gb) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+        for k in 0..3 {
+            let la = a.loss_grad(k, &w, &mut ga);
+            let lb = b.loss_grad(k, &w, &mut gb);
+            assert_eq!(la, lb);
+            assert_eq!(ga, gb);
         }
     }
 

@@ -13,24 +13,27 @@
 //!   inside the L2 graph, checked against a pure-jnp oracle.
 //!
 //! Python never runs at training time: [`runtime`] loads the HLO artifacts
-//! through the PJRT CPU client (`xla` crate) and the whole training loop is
-//! native Rust.
+//! through the PJRT CPU client (`xla` crate, behind the **`pjrt`** cargo
+//! feature) and the whole training loop is native Rust. The default build
+//! is dependency-light (only `anyhow`): the PJRT path is replaced by an
+//! API-identical stub and every pure-Rust path — quadratic oracles, the
+//! wireless latency model, the scenario-matrix engine — works offline.
 //!
 //! ## Crate map
 //!
 //! | module | contents |
 //! |--------|----------|
-//! | [`util`] | RNG (PCG64), special functions (E1), quickselect, stats, CSV/JSON, microbench |
+//! | [`util`] | RNG (PCG64 + per-scenario streams), special functions (E1), quickselect, stats, CSV/JSON emitters, logger, microbench |
 //! | [`config`] | typed configuration + TOML-subset parser + paper presets (Table II) |
 //! | [`cli`] | dependency-free argument parser and subcommand dispatch |
 //! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement |
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
 //! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation |
-//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 |
+//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5, quadratic oracles (IID→non-IID skew) |
 //! | [`data`] | synthetic CIFAR-like dataset, non-shuffled partitioner, batcher |
-//! | [`runtime`] | PJRT client wrapper, HLO artifact registry, typed execution |
-//! | [`coordinator`] | thread-actor MBS/SBS/MU runtime with simulated-latency transport |
-//! | [`sim`] | figure/table scenario runners (Fig. 3–6, Table III) |
+//! | [`runtime`] | PJRT client wrapper + HLO artifact registry (`pjrt` feature; offline stub by default) |
+//! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
+//! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`), shared `ScenarioResult` + golden traces (`sim::result`) |
 //! | [`testing`] | minimal property-testing harness (offline substitute for proptest) |
 
 pub mod cli;

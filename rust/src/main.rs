@@ -9,6 +9,9 @@
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
 //!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
+//! hfl matrix    [--quick|--full] [--threads N] [--iters N] [--dim N]
+//!               [--out results/] [--write-golden F] [--check-golden F]
+//!                                                              scenario-matrix sweep
 //! ```
 
 use anyhow::{bail, Result};
@@ -20,6 +23,7 @@ use hfl::fl::{run_hierarchical, TrainOptions};
 use hfl::runtime::{ModelOracle, Runtime};
 use hfl::sim::experiments::{self, Scale};
 use hfl::sim::{fig3, fig4, fig5a, fig5b};
+use hfl::sim::{result, run_matrix, MatrixOptions, ScenarioSpec};
 use hfl::topology::NetworkTopology;
 use hfl::util::logging;
 
@@ -43,12 +47,15 @@ fn run() -> Result<()> {
         Some("latency") => cmd_latency(&args, &cfg),
         Some("train") => cmd_train(&args, &cfg),
         Some("table3") => cmd_table3(&args, &cfg),
+        Some("matrix") => cmd_matrix(&args, &cfg),
         Some(other) => {
-            bail!("unknown subcommand `{other}` (try: config, topology, latency, train, table3)")
+            bail!(
+                "unknown subcommand `{other}` (try: config, topology, latency, train, table3, matrix)"
+            )
         }
         None => {
             eprintln!(
-                "usage: hfl <config|topology|latency|train|table3> [options]\n\
+                "usage: hfl <config|topology|latency|train|table3|matrix> [options]\n\
                  see rust/src/main.rs docs or README.md"
             );
             Ok(())
@@ -187,7 +194,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
         seed: cfg.training.seed,
         ..SyntheticSpec::default()
     };
-    log::info!(
+    hfl::log_info!(
         "training {algo} model={model} workers={workers} clusters={n_clusters} iters={iters} coordinated={coordinated}"
     );
 
@@ -250,10 +257,84 @@ fn cmd_table3(args: &Args, cfg: &Config) -> Result<()> {
     let results = experiments::run_table3(cfg, &scale, |sc, seed| factory(sc, seed))?;
     println!("{}", experiments::render_table3(&results));
     for r in &results {
-        println!("-- {} accuracy curve (iter, %):", r.scenario.name);
+        println!("-- {} accuracy curve (iter, %):", r.name);
         for (it, acc) in &r.curve {
             println!("   {it:>5} {acc:>6.2}");
         }
+    }
+    Ok(())
+}
+
+fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
+    let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
+    let full = args.flag("full");
+    let threads = args.get_parsed_or("threads", 0usize)?;
+    let iters = args.get_parsed::<usize>("iters")?;
+    let dim = args.get_parsed::<usize>("dim")?;
+    let out = args.get_or("out", "results");
+    let write_golden = args.get("write-golden").map(str::to_string);
+    let check_golden = args.get("check-golden").map(str::to_string);
+    args.finish()?;
+
+    let spec = if full {
+        ScenarioSpec::full()
+    } else {
+        ScenarioSpec::quick()
+    };
+    let mut opts = MatrixOptions {
+        threads,
+        base_seed: cfg.training.seed,
+        ..Default::default()
+    };
+    if let Some(it) = iters {
+        opts.iters = it;
+    }
+    if let Some(d) = dim {
+        opts.dim = d;
+    }
+
+    let t0 = std::time::Instant::now();
+    let results = run_matrix(cfg, &spec, &opts)?;
+    println!(
+        "scenario matrix — {} scenarios, threads={} ({}), {:.2}s wall",
+        results.len(),
+        opts.threads,
+        if opts.threads == 0 { "auto" } else { "fixed" },
+        t0.elapsed().as_secs_f64()
+    );
+    for r in &results {
+        println!("{}", r.table_row());
+    }
+
+    let csv_path = format!("{out}/matrix.csv");
+    result::results_to_csv(&results).save(&csv_path)?;
+    let json_path = format!("{out}/matrix.json");
+    std::fs::write(
+        &json_path,
+        format!("{}\n", result::results_to_json(&results).to_string_compact()),
+    )?;
+    let golden_text = format!("{}\n", result::golden_to_json(&results).to_string_compact());
+    let golden_path = format!("{out}/matrix_golden.json");
+    std::fs::write(&golden_path, &golden_text)?;
+    println!("wrote {csv_path}, {json_path} and {golden_path}");
+
+    if let Some(path) = write_golden {
+        std::fs::write(&path, &golden_text)?;
+        println!("wrote golden fixture {path}");
+    }
+    if let Some(path) = check_golden {
+        let text = std::fs::read_to_string(&path)?;
+        let json = hfl::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let fixture = result::golden_from_json(&json)?;
+        let diff = result::golden_diff(&results, &fixture);
+        if !diff.is_empty() {
+            for d in &diff {
+                eprintln!("golden mismatch: {d}");
+            }
+            bail!("{} golden-trace mismatches against {path}", diff.len());
+        }
+        println!("golden traces match {path} ({} scenarios)", results.len());
     }
     Ok(())
 }

@@ -4,14 +4,29 @@
 //! buffers. Python is never invoked here.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (shapes, Q, batches).
-//! * [`client`] — `Runtime`: one PJRT client + compiled executables.
-//! * [`oracle`] — `ModelOracle`: implements [`crate::fl::GradOracle`] on top
+//! * `client` — `Runtime`: one PJRT client + compiled executables.
+//! * `oracle` — `ModelOracle`: implements [`crate::fl::GradOracle`] on top
 //!   of the `train_step`/`eval_step` executables plus the synthetic dataset.
+//!
+//! The `client`/`oracle` pair links against the `xla` crate and is gated
+//! behind the **`pjrt`** cargo feature; the default (offline) build swaps in
+//! [`stub`], which exposes the identical API but whose constructors return
+//! errors — so every caller compiles unchanged and the pure-Rust paths
+//! (quadratic oracles, the scenario-matrix engine, the wireless model) work
+//! with zero native dependencies.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod oracle;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime, TensorArg};
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta, TensorMeta};
+#[cfg(feature = "pjrt")]
 pub use oracle::ModelOracle;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, ModelOracle, Runtime, TensorArg};

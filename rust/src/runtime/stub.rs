@@ -1,0 +1,140 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! cargo feature is **off** (the default, offline build). Every constructor
+//! returns an error explaining how to enable the real thing, and the types
+//! are uninhabited so no dead execution path survives into the binary:
+//! callers that match on `Runtime::load*` errors (benches, examples, the
+//! table3/train subcommands) degrade gracefully, everything else still
+//! type-checks against the exact same signatures as [`super::client`] /
+//! [`super::oracle`].
+
+use super::manifest::{ArtifactMeta, ModelMeta};
+use crate::data::SyntheticSpec;
+use crate::fl::oracle::{EvalMetrics, GradOracle};
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Uninhabited token: proves at the type level that stub values can never
+/// actually exist.
+#[derive(Clone, Copy, Debug)]
+enum Never {}
+
+const DISABLED: &str = "hfl was built without the `pjrt` feature: the PJRT/XLA runtime is \
+     unavailable. Rebuild with `cargo build --features pjrt` (after adding \
+     the `xla` dependency; see README.md §PJRT) or use the pure-Rust \
+     oracles (QuadraticOracle, sim::matrix).";
+
+/// A typed argument for [`Executable::run`] (mirrors the real signature).
+pub enum TensorArg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// One compiled AOT computation (never constructible without `pjrt`).
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    never: Never,
+}
+
+impl Executable {
+    pub fn run(&self, _args: &[TensorArg]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+/// The PJRT client wrapper (never constructible without `pjrt`).
+pub struct Runtime {
+    never: Never,
+}
+
+impl Runtime {
+    /// Always fails: the `pjrt` feature is disabled.
+    pub fn load(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    /// Always fails: the `pjrt` feature is disabled.
+    pub fn load_default() -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn executable(&self, _name: &str) -> Result<Arc<Executable>> {
+        match self.never {}
+    }
+
+    pub fn model_meta(&self, _model: &str) -> Result<&ModelMeta> {
+        match self.never {}
+    }
+
+    pub fn init_params(&self, _model: &str) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// AOT-backed gradient oracle (never constructible without `pjrt`).
+pub struct ModelOracle {
+    never: Never,
+}
+
+impl ModelOracle {
+    /// Always fails: constructing a [`Runtime`] already requires `pjrt`.
+    pub fn new(
+        _rt: &Runtime,
+        _model: &str,
+        _workers: usize,
+        _spec: &SyntheticSpec,
+    ) -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    pub fn q_params(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn train_batch(&self) -> usize {
+        match self.never {}
+    }
+}
+
+impl GradOracle for ModelOracle {
+    fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    fn n_workers(&self) -> usize {
+        match self.never {}
+    }
+
+    fn loss_grad(&mut self, _worker: usize, _params: &[f32], _grad_out: &mut [f32]) -> f64 {
+        match self.never {}
+    }
+
+    fn eval(&mut self, _params: &[f32]) -> EvalMetrics {
+        match self.never {}
+    }
+
+    fn iters_per_epoch(&self) -> usize {
+        match self.never {}
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_missing_feature() {
+        let err = Runtime::load_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = Runtime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

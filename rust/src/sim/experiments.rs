@@ -12,11 +12,11 @@
 
 use crate::config::Config;
 use crate::data::SyntheticSpec;
-use crate::fl::{run_hierarchical, GradOracle, TrainLog, TrainOptions};
+use crate::fl::{run_hierarchical, CommBits, GradOracle, TrainLog, TrainOptions};
 use crate::runtime::{ModelOracle, Runtime};
+use crate::sim::result::{Engine, GoldenTrace, ScenarioResult};
 use crate::util::stats::Running;
-use crate::wireless::{fl_latency, hfl_latency, LatencyInputs};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Experiment size (quick = CI-sized, paper = full overnight run).
 #[derive(Clone, Debug)]
@@ -109,40 +109,11 @@ pub fn paper_scenarios(cfg: &Config) -> Vec<Scenario> {
     ]
 }
 
-/// A scenario's aggregated outcome.
-#[derive(Clone, Debug)]
-pub struct ScenarioResult {
-    pub scenario: Scenario,
-    /// Final top-1 accuracies per seed (percent).
-    pub final_accs: Vec<f64>,
-    /// Accuracy curve (iteration, mean-across-seeds accuracy %).
-    pub curve: Vec<(usize, f64)>,
-    /// Simulated per-iteration communication latency (s) from the wireless
-    /// model with Q = the trained model's parameter count.
-    pub per_iter_latency_s: f64,
-    /// Total transmitted bits (mean across seeds).
-    pub total_bits: f64,
-}
-
-impl ScenarioResult {
-    pub fn mean_sem(&self) -> (f64, f64) {
-        let mut r = Running::new();
-        r.extend(self.final_accs.iter().copied());
-        (r.mean(), r.sem())
-    }
-
-    /// Table III-style row.
-    pub fn table_row(&self) -> String {
-        let (m, s) = self.mean_sem();
-        format!(
-            "{:<16} {:>7.2} ± {:<5.2}  per-iter latency {:>9.4}s  total {:>10.3e} bits",
-            self.scenario.name, m, s, self.per_iter_latency_s, self.total_bits
-        )
-    }
-}
-
-/// Run every scenario × seed. The oracle factory lets tests substitute the
-/// quadratic problem for the PJRT model.
+/// Run every scenario × seed, producing the shared
+/// [`crate::sim::result::ScenarioResult`] schema (engine =
+/// [`Engine::Sequential`]; per-link bits are means across seeds; the golden
+/// trace fingerprints the first seed's run). The oracle factory lets tests
+/// substitute the quadratic problem for the PJRT model.
 pub fn run_table3<F>(
     cfg: &Config,
     scale: &Scale,
@@ -151,11 +122,16 @@ pub fn run_table3<F>(
 where
     F: FnMut(&Scenario, u64) -> Result<Box<dyn GradOracle>>,
 {
+    if scale.seeds.is_empty() {
+        bail!("table3 needs at least one seed");
+    }
     let mut results = Vec::new();
-    for sc in paper_scenarios(cfg) {
+    for (idx, sc) in paper_scenarios(cfg).into_iter().enumerate() {
         let mut final_accs = Vec::new();
         let mut curves: Vec<Vec<(usize, f64)>> = Vec::new();
-        let mut bits = Running::new();
+        let mut bits_sum = CommBits::default();
+        let mut loss_acc = Running::new();
+        let mut first_trace: Option<GoldenTrace> = None;
         for &seed in &scale.seeds {
             let mut oracle = make_oracle(&sc, seed)?;
             let opts = TrainOptions {
@@ -178,9 +154,17 @@ where
                 eval_every: scale.eval_every,
             };
             let log: TrainLog = run_hierarchical(oracle.as_mut(), &opts);
-            let acc = log.final_eval().map(|m| m.accuracy * 100.0).unwrap_or(f64::NAN);
-            final_accs.push(acc);
-            bits.push(log.bits.total());
+            if first_trace.is_none() {
+                first_trace = Some(GoldenTrace::from_train_log(&log));
+            }
+            let ev = log.final_eval().unwrap_or_default();
+            final_accs.push(ev.accuracy * 100.0);
+            loss_acc.push(ev.loss);
+            bits_sum.mu_ul += log.bits.mu_ul;
+            bits_sum.sbs_dl += log.bits.sbs_dl;
+            bits_sum.sbs_ul += log.bits.sbs_ul;
+            bits_sum.mbs_dl += log.bits.mbs_dl;
+            bits_sum.n_mu_msgs += log.bits.n_mu_msgs;
             curves.push(
                 log.evals
                     .iter()
@@ -203,12 +187,27 @@ where
         };
 
         let per_iter = scenario_latency(cfg, &sc);
+        let n_seeds = scale.seeds.len() as f64;
         results.push(ScenarioResult {
-            scenario: sc,
+            id: idx,
+            name: sc.name.clone(),
+            engine: Engine::Sequential,
+            n_clusters: sc.n_clusters,
+            workers: sc.workers,
+            h_period: sc.h_period,
+            sparse: sc.sparse,
             final_accs,
+            final_loss: loss_acc.mean(),
             curve,
             per_iter_latency_s: per_iter,
-            total_bits: bits.mean(),
+            bits: CommBits {
+                mu_ul: bits_sum.mu_ul / n_seeds,
+                sbs_dl: bits_sum.sbs_dl / n_seeds,
+                sbs_ul: bits_sum.sbs_ul / n_seeds,
+                mbs_dl: bits_sum.mbs_dl / n_seeds,
+                n_mu_msgs: bits_sum.n_mu_msgs / scale.seeds.len() as u64,
+            },
+            trace: first_trace.expect("at least one seed ran"),
         });
     }
     Ok(results)
@@ -224,16 +223,13 @@ pub fn scenario_latency(cfg: &Config, sc: &Scenario) -> f64 {
     c.sparsity.enabled = sc.sparse;
     c.training.h_period = sc.h_period;
     if sc.n_clusters == 1 {
-        // Flat FL over the macro cell.
+        // Flat FL over the macro cell: same geography, MUs spread across it.
         c.topology.mus_per_cluster = sc.workers / c.topology.n_clusters.max(1);
-        let inputs = LatencyInputs::new(&c);
-        fl_latency(&inputs).total()
     } else {
         c.topology.n_clusters = sc.n_clusters;
         c.topology.mus_per_cluster = sc.workers / sc.n_clusters;
-        let inputs = LatencyInputs::new(&c);
-        hfl_latency(&inputs).per_iteration()
     }
+    crate::sim::price_latency(&c, sc.n_clusters == 1)
 }
 
 /// Standard PJRT-backed oracle factory for [`run_table3`].
@@ -324,8 +320,10 @@ mod tests {
         .unwrap();
         assert_eq!(results.len(), 5);
         for r in &results {
+            assert_eq!(r.engine, Engine::Sequential);
             assert_eq!(r.final_accs.len(), 2);
             assert!(!r.curve.is_empty());
+            assert!(r.bits.n_mu_msgs > 0, "{}: no MU uploads accounted", r.name);
             let (m, _) = r.mean_sem();
             assert!(m.is_finite());
         }
@@ -336,7 +334,7 @@ mod tests {
             assert!(
                 hfl.per_iter_latency_s < fl.per_iter_latency_s,
                 "{} latency {} !< FL {}",
-                hfl.scenario.name,
+                hfl.name,
                 hfl.per_iter_latency_s,
                 fl.per_iter_latency_s
             );

@@ -1,0 +1,494 @@
+//! Parallel deterministic **scenario-matrix engine**: a declarative grid
+//! ([`ScenarioSpec`]) over cluster counts × MUs-per-cell × IID/non-IID data
+//! skew × sparsity levels × aggregation period H × channel profiles
+//! (path-loss / straggler), expanded into concrete [`MatrixScenario`]s and
+//! executed across a work-stealing thread pool.
+//!
+//! ## Determinism contract
+//!
+//! Results are **bit-identical regardless of worker count or completion
+//! order**:
+//!
+//! * every scenario derives its own [`Pcg64`] stream from
+//!   `(base_seed, scenario id)` — no RNG state is shared across cells;
+//! * each cell runs the sequential reference engine
+//!   ([`crate::fl::run_hierarchical`]) in isolation, so all its f32/f64
+//!   reductions happen in a fixed order;
+//! * the pool performs an *ordered reduction keyed by scenario id*: workers
+//!   publish `(id, result)` pairs and the reducer slots them back into grid
+//!   order before returning.
+//!
+//! The regression suite (`rust/tests/matrix_golden.rs`) asserts the
+//! contract by comparing [`GoldenTrace`](crate::sim::result::GoldenTrace)s
+//! from 1-thread and 8-thread runs of the same grid.
+
+use crate::config::{Config, SparsityConfig};
+use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
+use crate::sim::result::{Engine, ScenarioMeta, ScenarioResult};
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+
+/// Radio-environment profile applied to a scenario's latency model:
+/// path-loss exponent plus a multiplicative straggler slowdown (the
+/// worst-case MU holding back each synchronous round).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChannelProfile {
+    pub name: String,
+    pub pathloss_exp: f64,
+    /// ≥ 1; multiplies the simulated per-iteration latency.
+    pub straggler_factor: f64,
+}
+
+impl ChannelProfile {
+    /// Table II nominal conditions (α = 2.8, no stragglers).
+    pub fn nominal() -> Self {
+        Self {
+            name: "nominal".into(),
+            pathloss_exp: 2.8,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// Harsh urban propagation (α = 3.6) — the right end of Fig. 4.
+    pub fn deep_fade() -> Self {
+        Self {
+            name: "deepfade".into(),
+            pathloss_exp: 3.6,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// Nominal propagation with a 2.5× straggler tail holding back every
+    /// synchronous round.
+    pub fn straggler() -> Self {
+        Self {
+            name: "straggler".into(),
+            pathloss_exp: 2.8,
+            straggler_factor: 2.5,
+        }
+    }
+}
+
+/// Declarative scenario grid: the cartesian product of every axis.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Cluster counts N (1 = flat FL over the macro cell).
+    pub cells: Vec<usize>,
+    /// MUs per cluster `|C_n|`.
+    pub mus_per_cell: Vec<usize>,
+    /// Non-IID data skew ∈ [0, 1] (0 = IID shards, 1 = fully heterogeneous).
+    pub skews: Vec<f64>,
+    /// MU-uplink sparsity levels; `None` = dense, `Some(φ)` = DGC at φ.
+    pub phis: Vec<Option<f64>>,
+    /// Global aggregation periods H.
+    pub h_periods: Vec<usize>,
+    /// Channel / straggler profiles.
+    pub profiles: Vec<ChannelProfile>,
+}
+
+impl ScenarioSpec {
+    /// CI-sized grid: 3 × 2 × 2 × 2 × 1 × 1 = 24 scenarios.
+    pub fn quick() -> Self {
+        Self {
+            cells: vec![1, 2, 4],
+            mus_per_cell: vec![2, 4],
+            skews: vec![0.0, 1.0],
+            phis: vec![None, Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+        }
+    }
+
+    /// Full sweep: 4 × 3 × 3 × 3 × 3 × 3 = 972 scenarios.
+    pub fn full() -> Self {
+        Self {
+            cells: vec![1, 2, 4, 7],
+            mus_per_cell: vec![2, 4, 8],
+            skews: vec![0.0, 0.5, 1.0],
+            phis: vec![None, Some(0.9), Some(0.99)],
+            h_periods: vec![2, 4, 6],
+            profiles: vec![
+                ChannelProfile::nominal(),
+                ChannelProfile::deep_fade(),
+                ChannelProfile::straggler(),
+            ],
+        }
+    }
+
+    /// Number of scenarios the grid expands to.
+    pub fn n_scenarios(&self) -> usize {
+        self.cells.len()
+            * self.mus_per_cell.len()
+            * self.skews.len()
+            * self.phis.len()
+            * self.h_periods.len()
+            * self.profiles.len()
+    }
+
+    /// Expand the grid into concrete scenarios with stable, dense ids
+    /// (axis order: cells, MUs, skew, φ, H, profile — outermost first).
+    pub fn expand(&self) -> Vec<MatrixScenario> {
+        let mut out = Vec::with_capacity(self.n_scenarios());
+        for &n_clusters in &self.cells {
+            for &mus in &self.mus_per_cell {
+                for &skew in &self.skews {
+                    for &phi in &self.phis {
+                        for &h in &self.h_periods {
+                            for profile in &self.profiles {
+                                let phi_label = match phi {
+                                    None => "dense".to_string(),
+                                    Some(p) => format!("phi{p}"),
+                                };
+                                out.push(MatrixScenario {
+                                    id: out.len(),
+                                    name: format!(
+                                        "c{n_clusters}x{mus}-h{h}-skew{skew}-{phi_label}-{}",
+                                        profile.name
+                                    ),
+                                    n_clusters,
+                                    mus_per_cluster: mus,
+                                    skew,
+                                    phi,
+                                    h_period: h,
+                                    profile: profile.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One concrete grid cell.
+#[derive(Clone, Debug)]
+pub struct MatrixScenario {
+    /// Dense index within the expanded grid — the reduction key and the
+    /// stream id of the cell's private RNG.
+    pub id: usize,
+    pub name: String,
+    pub n_clusters: usize,
+    pub mus_per_cluster: usize,
+    pub skew: f64,
+    pub phi: Option<f64>,
+    pub h_period: usize,
+    pub profile: ChannelProfile,
+}
+
+impl MatrixScenario {
+    pub fn workers(&self) -> usize {
+        self.n_clusters * self.mus_per_cluster
+    }
+}
+
+/// Execution options for a matrix run (training scale + parallelism).
+#[derive(Clone, Debug)]
+pub struct MatrixOptions {
+    /// Worker threads; 0 → `std::thread::available_parallelism()`.
+    pub threads: usize,
+    /// Training iterations per cell.
+    pub iters: usize,
+    /// Quadratic-problem dimension per cell.
+    pub dim: usize,
+    pub peak_lr: f64,
+    pub warmup_iters: usize,
+    pub eval_every: usize,
+    /// Gradient noise of the quadratic oracle (0 = deterministic descent).
+    pub grad_noise: f32,
+    /// Root seed; each cell uses the `Pcg64` stream `(base_seed, id)`.
+    pub base_seed: u64,
+}
+
+impl Default for MatrixOptions {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            iters: 30,
+            dim: 32,
+            peak_lr: 0.05,
+            warmup_iters: 3,
+            eval_every: 10,
+            grad_noise: 0.0,
+            base_seed: 2019,
+        }
+    }
+}
+
+/// Run every cell of the grid across the pool; results come back sorted by
+/// scenario id, bit-identical for any `threads` value.
+pub fn run_matrix(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    opts: &MatrixOptions,
+) -> Result<Vec<ScenarioResult>> {
+    let scenarios = spec.expand();
+    if scenarios.is_empty() {
+        bail!("scenario grid is empty (every axis needs at least one value)");
+    }
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        opts.threads
+    }
+    .clamp(1, scenarios.len());
+    Ok(run_parallel(scenarios.len(), threads, |i| {
+        run_cell(cfg, &scenarios[i], opts)
+    }))
+}
+
+/// Execute one grid cell: seed its private RNG stream, train with the
+/// sequential reference engine, price the scenario with the wireless model.
+fn run_cell(cfg: &Config, sc: &MatrixScenario, opts: &MatrixOptions) -> ScenarioResult {
+    // Per-scenario seeded stream: fully determined by (base_seed, id).
+    let mut stream = Pcg64::new(opts.base_seed, sc.id as u64);
+    let oracle_seed = stream.next_u64();
+    let workers = sc.workers();
+    let mut oracle =
+        QuadraticOracle::new_skewed(opts.dim, workers, opts.grad_noise, sc.skew, oracle_seed);
+    let topts = TrainOptions {
+        iters: opts.iters,
+        peak_lr: opts.peak_lr,
+        warmup_iters: opts.warmup_iters,
+        milestones: (0.6, 0.85),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        h_period: sc.h_period,
+        n_clusters: sc.n_clusters,
+        sparsity: match sc.phi {
+            Some(phi) => SparsityConfig {
+                enabled: true,
+                phi_mu_ul: phi,
+                ..cfg.sparsity.clone()
+            },
+            None => SparsityConfig::dense(),
+        },
+        eval_every: opts.eval_every,
+    };
+    let log = run_hierarchical(&mut oracle, &topts);
+    let meta = ScenarioMeta {
+        id: sc.id,
+        name: sc.name.clone(),
+        n_clusters: sc.n_clusters,
+        workers,
+        h_period: sc.h_period,
+        sparse: sc.phi.is_some(),
+    };
+    ScenarioResult::from_train_log(meta, Engine::Matrix, matrix_latency(cfg, sc), &log)
+}
+
+/// Simulated per-iteration communication latency of one cell under its
+/// channel profile (0 for a single local MU — nothing is transmitted).
+pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
+    if sc.workers() <= 1 {
+        return 0.0;
+    }
+    let mut c = cfg.clone();
+    c.radio.pathloss_exp = sc.profile.pathloss_exp;
+    c.training.h_period = sc.h_period;
+    c.sparsity.enabled = sc.phi.is_some();
+    if let Some(phi) = sc.phi {
+        c.sparsity.phi_mu_ul = phi;
+    }
+    c.topology.n_clusters = sc.n_clusters;
+    c.topology.mus_per_cluster = sc.mus_per_cluster;
+    c.topology.reuse_colors = c.topology.reuse_colors.min(sc.n_clusters);
+    crate::sim::price_latency(&c, sc.n_clusters == 1) * sc.profile.straggler_factor
+}
+
+/// Work-stealing parallel map over item indices `0..n_items` with an
+/// ordered reduction: returns `f(0), f(1), …` in index order no matter
+/// which worker computed what.
+///
+/// Each worker owns a deque preloaded with a strided share of the items;
+/// it pops its own work from the front and, when empty, steals from the
+/// back of the next non-empty victim. Items are disjoint, so scheduling
+/// affects only wall-clock, never results.
+pub fn run_parallel<T, F>(n_items: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(threads >= 1, "need at least one worker thread");
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((w..n_items).step_by(threads).collect()))
+        .collect();
+    let (tx, rx) = channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let tx = tx.clone();
+            let queues = &queues;
+            let f = &f;
+            scope.spawn(move || loop {
+                let own = queues[w].lock().unwrap().pop_front();
+                let idx = match own {
+                    Some(i) => i,
+                    None => {
+                        // Steal from the back of the first non-empty victim.
+                        let mut stolen = None;
+                        for off in 1..threads {
+                            let victim = (w + off) % threads;
+                            if let Some(i) = queues[victim].lock().unwrap().pop_back() {
+                                stolen = Some(i);
+                                break;
+                            }
+                        }
+                        match stolen {
+                            Some(i) => i,
+                            None => break, // every queue drained — done
+                        }
+                    }
+                };
+                if tx.send((idx, f(idx))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+    // All workers joined; senders dropped; drain and slot by index.
+    let mut slots: Vec<Option<T>> = (0..n_items).map(|_| None).collect();
+    while let Ok((i, v)) = rx.recv() {
+        assert!(slots[i].is_none(), "item {i} computed twice");
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| v.unwrap_or_else(|| panic!("item {i} produced no result")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn quick_grid_has_at_least_24_unique_scenarios() {
+        let spec = ScenarioSpec::quick();
+        assert!(spec.n_scenarios() >= 24, "{}", spec.n_scenarios());
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), spec.n_scenarios());
+        let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), scenarios.len(), "duplicate scenario names");
+        for (i, sc) in scenarios.iter().enumerate() {
+            assert_eq!(sc.id, i, "ids must be dense and in grid order");
+            assert_eq!(sc.workers() % sc.n_clusters, 0);
+        }
+    }
+
+    #[test]
+    fn run_parallel_is_ordered_and_complete() {
+        for threads in [1, 2, 3, 8] {
+            let calls = AtomicUsize::new(0);
+            let out = run_parallel(17, threads, |i| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                i * i
+            });
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(calls.load(Ordering::SeqCst), 17);
+        }
+        // More threads than items is fine.
+        assert_eq!(run_parallel(2, 8, |i| i), vec![0, 1]);
+        assert!(run_parallel(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn tiny_matrix_is_thread_count_invariant() {
+        let cfg = Config::smoke();
+        let spec = ScenarioSpec {
+            cells: vec![1, 2],
+            mus_per_cell: vec![2],
+            skews: vec![1.0],
+            phis: vec![None, Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+        };
+        let opts = MatrixOptions {
+            iters: 10,
+            dim: 16,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let one = run_matrix(&cfg, &spec, &MatrixOptions { threads: 1, ..opts.clone() }).unwrap();
+        let many = run_matrix(&cfg, &spec, &MatrixOptions { threads: 4, ..opts }).unwrap();
+        assert_eq!(one.len(), 4);
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.trace, b.trace, "{}", a.name);
+            assert_eq!(a.per_iter_latency_s, b.per_iter_latency_s, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn cells_differ_from_each_other() {
+        // Different grid cells must not share RNG streams: their traces
+        // (and hence final params) differ.
+        let cfg = Config::smoke();
+        let spec = ScenarioSpec {
+            cells: vec![2],
+            mus_per_cell: vec![2],
+            skews: vec![0.0, 1.0],
+            phis: vec![Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+        };
+        let opts = MatrixOptions { threads: 1, iters: 8, dim: 12, ..Default::default() };
+        let results = run_matrix(&cfg, &spec, &opts).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_ne!(results[0].trace.params_hash, results[1].trace.params_hash);
+    }
+
+    #[test]
+    fn profiles_change_latency_only() {
+        let cfg = Config::smoke();
+        let base = MatrixScenario {
+            id: 0,
+            name: "x".into(),
+            n_clusters: 2,
+            mus_per_cluster: 4,
+            skew: 1.0,
+            phi: Some(0.9),
+            h_period: 2,
+            profile: ChannelProfile::nominal(),
+        };
+        let nominal = matrix_latency(&cfg, &base);
+        assert!(nominal > 0.0);
+        let mut fade = base.clone();
+        fade.profile = ChannelProfile::deep_fade();
+        let mut slow = base.clone();
+        slow.profile = ChannelProfile::straggler();
+        assert!(matrix_latency(&cfg, &fade) != nominal, "α must move latency");
+        let s = matrix_latency(&cfg, &slow);
+        assert!((s / nominal - 2.5).abs() < 1e-9, "straggler factor: {s} vs {nominal}");
+    }
+
+    #[test]
+    fn single_worker_cell_transmits_nothing() {
+        let cfg = Config::smoke();
+        let sc = MatrixScenario {
+            id: 0,
+            name: "solo".into(),
+            n_clusters: 1,
+            mus_per_cluster: 1,
+            skew: 0.0,
+            phi: None,
+            h_period: 2,
+            profile: ChannelProfile::nominal(),
+        };
+        assert_eq!(matrix_latency(&cfg, &sc), 0.0);
+    }
+}

@@ -1,10 +1,34 @@
-//! Scenario runners that regenerate every table and figure of the paper's
-//! evaluation (§V): the latency sweeps of Fig. 3–5 ([`figures`]) and the
-//! CIFAR-like training accuracy study of Fig. 6 / Table III
-//! ([`experiments`]). Each produces CSV series plus a human-readable block
-//! that EXPERIMENTS.md records.
+//! Scenario runners. [`figures`] and [`experiments`] regenerate every table
+//! and figure of the paper's evaluation (§V: latency sweeps of Fig. 3–5,
+//! the CIFAR-like training study of Fig. 6 / Table III). [`matrix`] goes
+//! wider: a declarative scenario grid (clusters × MUs × data skew ×
+//! sparsity × H × channel profiles) executed deterministically across a
+//! work-stealing thread pool. All runners emit the shared
+//! [`result::ScenarioResult`] schema with stable JSON/CSV serialization and
+//! bit-exact [`result::GoldenTrace`] fingerprints for the regression suite.
 
 pub mod experiments;
 pub mod figures;
+pub mod matrix;
+pub mod result;
 
 pub use figures::{fig3, fig4, fig5a, fig5b, FigureSeries};
+pub use matrix::{run_matrix, ChannelProfile, MatrixOptions, MatrixScenario, ScenarioSpec};
+pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult};
+
+use crate::config::Config;
+use crate::wireless::{fl_latency, hfl_latency, LatencyInputs};
+
+/// Shared per-iteration latency pricing used by both the Table III runner
+/// ([`experiments::scenario_latency`]) and the matrix engine
+/// ([`matrix::matrix_latency`]): build the wireless model from a prepared
+/// config and take flat-FL total or HFL period-amortized latency. Keeping
+/// the core in one place keeps the two runners' pricing comparable.
+pub(crate) fn price_latency(cfg: &Config, flat: bool) -> f64 {
+    let inputs = LatencyInputs::new(cfg);
+    if flat {
+        fl_latency(&inputs).total()
+    } else {
+        hfl_latency(&inputs).per_iteration()
+    }
+}

@@ -1,0 +1,560 @@
+//! The **shared scenario-result schema**: one record type produced by all
+//! three execution engines — the sequential reference engine
+//! ([`crate::fl::run_hierarchical`]), the thread-actor coordinator
+//! ([`crate::coordinator::run_coordinated`]), and the parallel scenario
+//! matrix ([`crate::sim::matrix`]) — with stable JSON/CSV serialization via
+//! [`crate::util::json`] / [`crate::util::csv`].
+//!
+//! Each result carries a [`GoldenTrace`]: a compact, bit-exact fingerprint
+//! of the run (FNV-1a hash of the final parameters' f32 bit patterns, a
+//! digest of the per-round loss curve, and the total bits shipped on each
+//! of the four link tiers). Golden traces are what the regression suite
+//! checks in as fixtures, so a future "make it faster" PR cannot silently
+//! change *what* is computed — only how fast.
+//!
+//! Note on cross-engine comparisons: the sequential engine and the
+//! coordinator are bit-identical in final parameters and per-link bits
+//! (asserted by `tests/coordinator_equivalence.rs`), so `params_hash` and
+//! `bits` agree across engines. The loss-curve digest is engine-internal —
+//! the coordinator averages losses per cluster before averaging clusters,
+//! a different (mathematically equal) f64 summation order — so compare
+//! `loss_digest` only against traces from the same engine.
+
+use crate::coordinator::CoordinatorRun;
+use crate::fl::{CommBits, TrainLog};
+use crate::util::csv::{format_num, CsvTable};
+use crate::util::json::{Json, ObjBuilder};
+use crate::util::stats::Running;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Which engine produced a [`ScenarioResult`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// In-process reference engine (`fl::run_hierarchical`).
+    Sequential,
+    /// Thread-actor MBS/SBS/MU coordinator.
+    Coordinated,
+    /// Scenario-matrix runner (one engine run per grid cell).
+    Matrix,
+}
+
+impl Engine {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Engine::Sequential => "sequential",
+            Engine::Coordinated => "coordinated",
+            Engine::Matrix => "matrix",
+        }
+    }
+}
+
+/// FNV-1a 64-bit over an arbitrary byte stream — dependency-free, stable
+/// across platforms, and sensitive to every bit of every f32/f64 it sees.
+pub fn fnv1a64(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash the exact f32 bit patterns of a parameter vector.
+pub fn hash_params(params: &[f32]) -> u64 {
+    fnv1a64(params.iter().flat_map(|x| x.to_bits().to_le_bytes()))
+}
+
+/// Digest a per-round `(iteration, loss)` curve, order- and bit-exact.
+pub fn digest_loss_curve(curve: &[(usize, f64)]) -> u64 {
+    fnv1a64(curve.iter().flat_map(|(it, loss)| {
+        let mut bytes = Vec::with_capacity(16);
+        bytes.extend_from_slice(&(*it as u64).to_le_bytes());
+        bytes.extend_from_slice(&loss.to_bits().to_le_bytes());
+        bytes
+    }))
+}
+
+/// Compact bit-exact fingerprint of one scenario run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GoldenTrace {
+    /// FNV-1a over the final consensus parameters' f32 bit patterns.
+    pub params_hash: u64,
+    /// FNV-1a over the per-iteration mean training-loss curve.
+    pub loss_digest: u64,
+    /// Total transmitted bits per link tier (value+index wire format).
+    pub bits: CommBits,
+}
+
+impl GoldenTrace {
+    pub fn from_train_log(log: &TrainLog) -> Self {
+        Self {
+            params_hash: hash_params(&log.final_params),
+            loss_digest: digest_loss_curve(&log.train_loss),
+            bits: log.bits,
+        }
+    }
+
+    pub fn from_coordinated(run: &CoordinatorRun) -> Self {
+        Self {
+            params_hash: hash_params(&run.final_params),
+            loss_digest: digest_loss_curve(&run.train_loss),
+            bits: run.metrics.comm_bits(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("params_hash", format!("{:016x}", self.params_hash))
+            .str("loss_digest", format!("{:016x}", self.loss_digest))
+            .num("mu_ul_bits", self.bits.mu_ul)
+            .num("sbs_dl_bits", self.bits.sbs_dl)
+            .num("sbs_ul_bits", self.bits.sbs_ul)
+            .num("mbs_dl_bits", self.bits.mbs_dl)
+            .num("n_mu_msgs", self.bits.n_mu_msgs as f64)
+            .build()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let hex = |key: &str| -> Result<u64> {
+            let s = j
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("golden trace: missing string `{key}`"))?;
+            u64::from_str_radix(s, 16).map_err(|e| anyhow!("golden trace `{key}`: {e}"))
+        };
+        let num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("golden trace: missing number `{key}`"))
+        };
+        Ok(Self {
+            params_hash: hex("params_hash")?,
+            loss_digest: hex("loss_digest")?,
+            bits: CommBits {
+                mu_ul: num("mu_ul_bits")?,
+                sbs_dl: num("sbs_dl_bits")?,
+                sbs_ul: num("sbs_ul_bits")?,
+                mbs_dl: num("mbs_dl_bits")?,
+                n_mu_msgs: num("n_mu_msgs")? as u64,
+            },
+        })
+    }
+
+    /// Human-readable field-by-field mismatch report (empty = identical).
+    pub fn diff(&self, other: &GoldenTrace) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.params_hash != other.params_hash {
+            out.push(format!(
+                "params_hash {:016x} != {:016x}",
+                self.params_hash, other.params_hash
+            ));
+        }
+        if self.loss_digest != other.loss_digest {
+            out.push(format!(
+                "loss_digest {:016x} != {:016x}",
+                self.loss_digest, other.loss_digest
+            ));
+        }
+        for (name, a, b) in [
+            ("mu_ul_bits", self.bits.mu_ul, other.bits.mu_ul),
+            ("sbs_dl_bits", self.bits.sbs_dl, other.bits.sbs_dl),
+            ("sbs_ul_bits", self.bits.sbs_ul, other.bits.sbs_ul),
+            ("mbs_dl_bits", self.bits.mbs_dl, other.bits.mbs_dl),
+        ] {
+            if a != b {
+                out.push(format!("{name} {a} != {b}"));
+            }
+        }
+        if self.bits.n_mu_msgs != other.bits.n_mu_msgs {
+            out.push(format!(
+                "n_mu_msgs {} != {}",
+                self.bits.n_mu_msgs, other.bits.n_mu_msgs
+            ));
+        }
+        out
+    }
+}
+
+/// Identity of one scenario, shared by every engine's result constructor.
+#[derive(Clone, Debug)]
+pub struct ScenarioMeta {
+    /// Stable id within a run (reduction key for the matrix engine).
+    pub id: usize,
+    pub name: String,
+    pub n_clusters: usize,
+    pub workers: usize,
+    pub h_period: usize,
+    pub sparse: bool,
+}
+
+/// One scenario's aggregated outcome — the shared schema.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub id: usize,
+    pub name: String,
+    pub engine: Engine,
+    pub n_clusters: usize,
+    pub workers: usize,
+    pub h_period: usize,
+    pub sparse: bool,
+    /// Final top-1 accuracies per seed (percent; NaN for loss-only oracles).
+    pub final_accs: Vec<f64>,
+    /// Final held-out loss (mean across seeds).
+    pub final_loss: f64,
+    /// Accuracy curve (iteration, mean-across-seeds accuracy %).
+    pub curve: Vec<(usize, f64)>,
+    /// Simulated per-iteration communication latency (s) from the wireless
+    /// model; 0 for baselines that transmit nothing.
+    pub per_iter_latency_s: f64,
+    /// Per-link transmitted bits (mean across seeds).
+    pub bits: CommBits,
+    /// Bit-exact fingerprint of the (first-seed) run.
+    pub trace: GoldenTrace,
+}
+
+impl ScenarioResult {
+    /// Build from one sequential-engine training log.
+    pub fn from_train_log(
+        meta: ScenarioMeta,
+        engine: Engine,
+        per_iter_latency_s: f64,
+        log: &TrainLog,
+    ) -> Self {
+        let final_eval = log.final_eval().unwrap_or_default();
+        Self {
+            id: meta.id,
+            name: meta.name,
+            engine,
+            n_clusters: meta.n_clusters,
+            workers: meta.workers,
+            h_period: meta.h_period,
+            sparse: meta.sparse,
+            final_accs: vec![final_eval.accuracy * 100.0],
+            final_loss: final_eval.loss,
+            curve: log
+                .evals
+                .iter()
+                .map(|(it, m)| (*it, m.accuracy * 100.0))
+                .collect(),
+            per_iter_latency_s,
+            bits: log.bits,
+            trace: GoldenTrace::from_train_log(log),
+        }
+    }
+
+    /// Build from a coordinated (thread-actor) run.
+    pub fn from_coordinated(
+        meta: ScenarioMeta,
+        per_iter_latency_s: f64,
+        run: &CoordinatorRun,
+    ) -> Self {
+        Self {
+            id: meta.id,
+            name: meta.name,
+            engine: Engine::Coordinated,
+            n_clusters: meta.n_clusters,
+            workers: meta.workers,
+            h_period: meta.h_period,
+            sparse: meta.sparse,
+            final_accs: vec![run.final_eval.accuracy * 100.0],
+            final_loss: run.final_eval.loss,
+            curve: run
+                .sync_evals
+                .iter()
+                .map(|(it, m)| (*it, m.accuracy * 100.0))
+                .collect(),
+            per_iter_latency_s,
+            bits: run.metrics.comm_bits(),
+            trace: GoldenTrace::from_coordinated(run),
+        }
+    }
+
+    /// Mean ± SEM of the per-seed final accuracies.
+    pub fn mean_sem(&self) -> (f64, f64) {
+        let mut r = Running::new();
+        r.extend(self.final_accs.iter().copied());
+        (r.mean(), r.sem())
+    }
+
+    /// Table III-style row. Oracles without a notion of accuracy (the
+    /// quadratic problems driving the matrix engine) report NaN accuracy;
+    /// the row falls back to the final loss for them.
+    pub fn table_row(&self) -> String {
+        let (m, s) = self.mean_sem();
+        let quality = if m.is_nan() {
+            format!("loss {:>10.4e}", self.final_loss)
+        } else {
+            format!("{m:>7.2} ± {s:<5.2}")
+        };
+        format!(
+            "{:<28} {:<16}  per-iter latency {:>9.4}s  total {:>10.3e} bits",
+            self.name,
+            quality,
+            self.per_iter_latency_s,
+            self.bits.total()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (mean, sem) = self.mean_sem();
+        ObjBuilder::new()
+            .num("id", self.id as f64)
+            .str("name", self.name.clone())
+            .str("engine", self.engine.as_str())
+            .num("n_clusters", self.n_clusters as f64)
+            .num("workers", self.workers as f64)
+            .num("h_period", self.h_period as f64)
+            .bool("sparse", self.sparse)
+            .arr_num("final_accs", &self.final_accs)
+            .num("mean_acc", mean)
+            .num("sem_acc", sem)
+            .num("final_loss", self.final_loss)
+            .num("per_iter_latency_s", self.per_iter_latency_s)
+            .val(
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|(it, y)| Json::Arr(vec![Json::Num(*it as f64), Json::Num(*y)]))
+                        .collect(),
+                ),
+            )
+            .val("trace", self.trace.to_json())
+            .build()
+    }
+
+    /// CSV column names (matches [`ScenarioResult::csv_row`]).
+    pub fn csv_header() -> Vec<&'static str> {
+        vec![
+            "id",
+            "name",
+            "engine",
+            "n_clusters",
+            "workers",
+            "h_period",
+            "sparse",
+            "mean_acc",
+            "sem_acc",
+            "final_loss",
+            "per_iter_latency_s",
+            "mu_ul_bits",
+            "sbs_dl_bits",
+            "sbs_ul_bits",
+            "mbs_dl_bits",
+            "params_hash",
+            "loss_digest",
+        ]
+    }
+
+    pub fn csv_row(&self) -> Vec<String> {
+        let (mean, sem) = self.mean_sem();
+        vec![
+            self.id.to_string(),
+            self.name.clone(),
+            self.engine.as_str().to_string(),
+            self.n_clusters.to_string(),
+            self.workers.to_string(),
+            self.h_period.to_string(),
+            self.sparse.to_string(),
+            format_num(mean),
+            format_num(sem),
+            format_num(self.final_loss),
+            format_num(self.per_iter_latency_s),
+            format_num(self.bits.mu_ul),
+            format_num(self.bits.sbs_dl),
+            format_num(self.bits.sbs_ul),
+            format_num(self.bits.mbs_dl),
+            format!("{:016x}", self.trace.params_hash),
+            format!("{:016x}", self.trace.loss_digest),
+        ]
+    }
+}
+
+/// A batch of results as one CSV table.
+pub fn results_to_csv(results: &[ScenarioResult]) -> CsvTable {
+    let mut t = CsvTable::new(ScenarioResult::csv_header());
+    for r in results {
+        t.push_row(r.csv_row());
+    }
+    t
+}
+
+/// A batch of results as one JSON array.
+pub fn results_to_json(results: &[ScenarioResult]) -> Json {
+    Json::Arr(results.iter().map(ScenarioResult::to_json).collect())
+}
+
+/// Golden-trace map `{scenario name → trace}` for a batch of results — the
+/// fixture format the regression suite checks in.
+pub fn golden_to_json(results: &[ScenarioResult]) -> Json {
+    let mut map = BTreeMap::new();
+    for r in results {
+        map.insert(r.name.clone(), r.trace.to_json());
+    }
+    Json::Obj(map)
+}
+
+/// Parse a golden-trace fixture back into `{scenario name → trace}`.
+pub fn golden_from_json(j: &Json) -> Result<BTreeMap<String, GoldenTrace>> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow!("golden fixture: expected a JSON object"))?;
+    let mut out = BTreeMap::new();
+    for (name, v) in obj {
+        out.insert(name.clone(), GoldenTrace::from_json(v)?);
+    }
+    Ok(out)
+}
+
+/// Compare a batch of results against a parsed fixture. Returns one line
+/// per discrepancy (missing scenario, extra scenario, or trace mismatch);
+/// empty = fixture fully matches.
+pub fn golden_diff(
+    results: &[ScenarioResult],
+    fixture: &BTreeMap<String, GoldenTrace>,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for r in results {
+        seen.insert(r.name.clone());
+        match fixture.get(&r.name) {
+            None => out.push(format!("`{}`: not in fixture", r.name)),
+            Some(want) => {
+                for d in want.diff(&r.trace) {
+                    out.push(format!("`{}`: {d}", r.name));
+                }
+            }
+        }
+    }
+    for name in fixture.keys() {
+        if !seen.contains(name) {
+            out.push(format!("`{name}`: in fixture but not in results"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_trace() -> GoldenTrace {
+        GoldenTrace {
+            params_hash: 0xdead_beef_0123_4567,
+            loss_digest: 0x0fed_cba9_8765_4321,
+            bits: CommBits {
+                mu_ul: 1234.5,
+                sbs_dl: 678.0,
+                sbs_ul: 90.25,
+                mbs_dl: 42.0,
+                n_mu_msgs: 360,
+            },
+        }
+    }
+
+    fn sample_result(name: &str) -> ScenarioResult {
+        ScenarioResult {
+            id: 3,
+            name: name.into(),
+            engine: Engine::Matrix,
+            n_clusters: 4,
+            workers: 8,
+            h_period: 2,
+            sparse: true,
+            final_accs: vec![61.0, 63.0],
+            final_loss: 0.4,
+            curve: vec![(10, 50.0), (20, 62.0)],
+            per_iter_latency_s: 0.125,
+            bits: sample_trace().bits,
+            trace: sample_trace(),
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        // Reference value: FNV-1a 64 of the empty input is the offset basis.
+        assert_eq!(fnv1a64([]), 0xcbf2_9ce4_8422_2325);
+        let a = hash_params(&[1.0, 2.0, 3.0]);
+        let b = hash_params(&[1.0, 2.0, 3.0]);
+        let c = hash_params(&[1.0, 2.0, 3.0000002]);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "a one-ulp change must change the hash");
+        // ±0.0 have different bit patterns — the hash is bit-exact.
+        assert_ne!(hash_params(&[0.0]), hash_params(&[-0.0]));
+    }
+
+    #[test]
+    fn loss_digest_sees_order_and_iterations() {
+        let a = digest_loss_curve(&[(0, 1.0), (1, 0.5)]);
+        let b = digest_loss_curve(&[(1, 0.5), (0, 1.0)]);
+        let c = digest_loss_curve(&[(0, 1.0), (2, 0.5)]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, digest_loss_curve(&[(0, 1.0), (1, 0.5)]));
+    }
+
+    #[test]
+    fn golden_trace_json_roundtrip_is_exact() {
+        let t = sample_trace();
+        let s = t.to_json().to_string_compact();
+        let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(t, back);
+        assert!(t.diff(&back).is_empty());
+    }
+
+    #[test]
+    fn golden_trace_diff_reports_every_field() {
+        let a = sample_trace();
+        let mut b = a;
+        b.params_hash ^= 1;
+        b.bits.mu_ul += 1.0;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d[0].contains("params_hash"));
+        assert!(d[1].contains("mu_ul_bits"));
+    }
+
+    #[test]
+    fn result_json_and_csv_are_consistent() {
+        let r = sample_result("c4x2-h2");
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("c4x2-h2"));
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("matrix"));
+        assert_eq!(j.get("mean_acc").unwrap().as_f64(), Some(62.0));
+        let row = r.csv_row();
+        assert_eq!(row.len(), ScenarioResult::csv_header().len());
+        let table = results_to_csv(&[r]);
+        assert_eq!(table.n_rows(), 1);
+        assert!(table.to_string().contains("c4x2-h2"));
+    }
+
+    #[test]
+    fn golden_fixture_roundtrip_and_diff() {
+        let results = vec![sample_result("a"), sample_result("b")];
+        let fixture_text = golden_to_json(&results).to_string_compact();
+        let fixture = golden_from_json(&json::parse(&fixture_text).unwrap()).unwrap();
+        assert!(golden_diff(&results, &fixture).is_empty());
+
+        // Perturb one scenario and drop another.
+        let mut bad = results.clone();
+        bad[0].trace.loss_digest ^= 0xff;
+        bad.pop();
+        let d = golden_diff(&bad, &fixture);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|l| l.contains("loss_digest")));
+        assert!(d.iter().any(|l| l.contains("not in results")));
+    }
+
+    #[test]
+    fn mean_sem_and_table_row() {
+        let r = sample_result("x");
+        let (m, s) = r.mean_sem();
+        assert_eq!(m, 62.0);
+        assert!(s > 0.0);
+        let row = r.table_row();
+        assert!(row.contains('x'));
+        assert!(row.contains("per-iter latency"));
+    }
+}

@@ -1,57 +1,118 @@
-//! Minimal leveled logger to stderr (implements the `log` crate facade so
-//! library modules can use `log::info!` etc. without further wiring).
+//! Minimal leveled logger to stderr, dependency-free for the offline build
+//! (no `log` facade crate). Callers use the [`crate::log_info!`] /
+//! [`crate::log_debug!`] / [`crate::log_warn!`] / [`crate::log_error!`]
+//! macros, which format lazily and route through [`emit`].
 
-use log::{Level, LevelFilter, Metadata, Record};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
-static INSTALLED: AtomicBool = AtomicBool::new(false);
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
 
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static START: OnceLock<Instant> = OnceLock::new();
+/// Maximum level that is emitted (a `Level` discriminant).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 /// Install the logger (idempotent). `verbose` raises the level to Debug.
 pub fn init(verbose: bool) {
-    if INSTALLED.swap(true, Ordering::SeqCst) {
-        log::set_max_level(if verbose { LevelFilter::Debug } else { LevelFilter::Info });
+    START.get_or_init(Instant::now);
+    let lvl = if verbose { Level::Debug } else { Level::Info };
+    MAX_LEVEL.store(lvl as u8, Ordering::SeqCst);
+}
+
+/// Whether a record at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Prefer the `log_*!` macros, which also record the
+/// calling module as the target.
+pub fn emit(level: Level, target: &str, args: std::fmt::Arguments) {
+    if !enabled(level) {
         return;
     }
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(if verbose { LevelFilter::Debug } else { LevelFilter::Info });
-    once_cell::sync::Lazy::force(&START);
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {args}", level.tag());
+}
+
+/// `log_info!("trained {} iters", n)` — info-level record.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Debug-level record (visible with `--verbose`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Warn-level record.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Error-level record.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_is_idempotent() {
-        super::init(false);
-        super::init(true);
-        log::info!("logger smoke");
+    fn init_is_idempotent_and_filters() {
+        init(false);
+        init(true);
+        assert!(enabled(Level::Debug));
+        init(false);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        crate::log_info!("logger smoke {}", 42);
     }
 }

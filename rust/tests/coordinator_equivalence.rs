@@ -1,12 +1,20 @@
 //! Integration test: the thread-actor coordinator and the sequential
 //! reference engine are the SAME algorithm — identical compressors in
 //! identical order — so on a deterministic oracle they must produce
-//! bit-identical final parameters and identical communication bits.
+//! bit-identical final parameters and identical communication bits, across
+//! the sparse AND dense paths for 1, 2, and 4 clusters.
+//!
+//! The same invariant is restated through the shared result schema: the
+//! two engines' [`GoldenTrace`]s agree on `params_hash` and per-link bits.
+//! (The loss-curve digest is engine-internal — the coordinator averages
+//! losses per cluster before averaging clusters, a different f64 summation
+//! order — so it is deliberately NOT compared here.)
 
 use hfl::config::SparsityConfig;
 use hfl::coordinator::{run_coordinated, CoordinatorOptions, LinkKind};
 use hfl::fl::oracle::QuadraticOracle;
 use hfl::fl::{run_hierarchical, TrainOptions};
+use hfl::sim::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult};
 
 fn train_opts(sparse: bool, n_clusters: usize) -> TrainOptions {
     TrainOptions {
@@ -63,16 +71,36 @@ fn check_equivalence(sparse: bool, n_clusters: usize, seed: u64) {
         let got = coord.metrics.total_bits(link);
         assert_eq!(got, want, "bits mismatch on {link:?}");
     }
-}
 
-#[test]
-fn dense_hfl_bit_identical() {
-    check_equivalence(false, 4, 2024);
-}
+    // Restated through the shared golden-trace schema: same parameter hash,
+    // same per-link bits (the trace constructors pull from each engine's
+    // own accounting path).
+    let ts = GoldenTrace::from_train_log(&seq);
+    let tc = GoldenTrace::from_coordinated(&coord);
+    assert_eq!(
+        ts.params_hash, tc.params_hash,
+        "trace params_hash diverged (sparse={sparse}, n={n_clusters})"
+    );
+    assert_eq!(ts.bits, tc.bits, "trace bits diverged (sparse={sparse}, n={n_clusters})");
 
-#[test]
-fn sparse_hfl_bit_identical() {
-    check_equivalence(true, 4, 2025);
+    // And once more at the full shared-result level: both engines populate
+    // the same ScenarioResult schema and agree on everything bit-exact.
+    let meta = ScenarioMeta {
+        id: 0,
+        name: format!("equiv-n{n_clusters}-sparse{sparse}"),
+        n_clusters,
+        workers: 8,
+        h_period: opts.h_period,
+        sparse,
+    };
+    let rs = ScenarioResult::from_train_log(meta.clone(), Engine::Sequential, 0.0, &seq);
+    let rc = ScenarioResult::from_coordinated(meta, 0.0, &coord);
+    assert_eq!(rs.engine, Engine::Sequential);
+    assert_eq!(rc.engine, Engine::Coordinated);
+    assert_eq!(rc.name, rs.name);
+    assert_eq!(rs.trace.params_hash, rc.trace.params_hash);
+    assert_eq!(rs.bits, rc.bits);
+    assert_eq!(rc.final_accs.len(), 1);
 }
 
 #[test]
@@ -86,6 +114,21 @@ fn sparse_flat_fl_bit_identical() {
 }
 
 #[test]
-fn two_clusters_sparse_bit_identical() {
+fn dense_two_clusters_bit_identical() {
+    check_equivalence(false, 2, 2029);
+}
+
+#[test]
+fn sparse_two_clusters_bit_identical() {
     check_equivalence(true, 2, 2028);
+}
+
+#[test]
+fn dense_four_clusters_bit_identical() {
+    check_equivalence(false, 4, 2024);
+}
+
+#[test]
+fn sparse_four_clusters_bit_identical() {
+    check_equivalence(true, 4, 2025);
 }

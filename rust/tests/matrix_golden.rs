@@ -1,0 +1,128 @@
+//! Golden-trace regression suite for the scenario-matrix engine.
+//!
+//! 1. **Thread invariance** (the engine's core contract): the full ≥24-cell
+//!    quick grid produces bit-identical golden traces — parameter hashes,
+//!    per-link bit totals, loss digests, curves — when executed with 1
+//!    worker thread and with 8 worker threads.
+//! 2. **Fixture regression**: one quick matrix cell is checked against the
+//!    fixture in `tests/fixtures/`. On first run (or with `HFL_BLESS=1`)
+//!    the fixture is (re)generated; afterwards any bit drift in the
+//!    training arithmetic, the compressors, or the RNG fails the test. See
+//!    `tests/fixtures/README.md` for the regeneration workflow.
+
+use hfl::config::Config;
+use hfl::sim::matrix::{ChannelProfile, MatrixOptions, ScenarioSpec};
+use hfl::sim::{result, run_matrix};
+use std::path::PathBuf;
+
+fn quick_opts(threads: usize) -> MatrixOptions {
+    MatrixOptions {
+        threads,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn quick_grid_bit_identical_across_thread_counts() {
+    let cfg = Config::smoke();
+    let spec = ScenarioSpec::quick();
+    assert!(spec.n_scenarios() >= 24, "quick grid shrank below 24 cells");
+
+    let serial = run_matrix(&cfg, &spec, &quick_opts(1)).unwrap();
+    let parallel = run_matrix(&cfg, &spec, &quick_opts(8)).unwrap();
+
+    assert_eq!(serial.len(), spec.n_scenarios());
+    assert_eq!(serial.len(), parallel.len());
+    // Bit-pattern views: the quadratic oracles report NaN accuracy, and
+    // NaN != NaN under `==` — bit equality is the actual contract here.
+    let curve_bits =
+        |c: &[(usize, f64)]| c.iter().map(|(i, y)| (*i, y.to_bits())).collect::<Vec<_>>();
+    let f64_bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.name, b.name, "ordered reduction must preserve grid order");
+        assert_eq!(a.trace, b.trace, "trace diverged for `{}`", a.name);
+        assert_eq!(
+            curve_bits(&a.curve),
+            curve_bits(&b.curve),
+            "eval curve diverged for `{}`",
+            a.name
+        );
+        assert_eq!(
+            f64_bits(&a.final_accs),
+            f64_bits(&b.final_accs),
+            "accs diverged for `{}`",
+            a.name
+        );
+        assert_eq!(
+            a.per_iter_latency_s.to_bits(),
+            b.per_iter_latency_s.to_bits(),
+            "latency diverged for `{}`",
+            a.name
+        );
+    }
+
+    // And the whole-grid golden map round-trips through its JSON fixture
+    // format without loss.
+    let text = result::golden_to_json(&serial).to_string_compact();
+    let fixture = result::golden_from_json(&hfl::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(fixture.len(), serial.len());
+    assert!(result::golden_diff(&parallel, &fixture).is_empty());
+}
+
+/// The single quick cell pinned by the checked-in fixture.
+fn fixture_cell() -> (Config, ScenarioSpec, MatrixOptions) {
+    let spec = ScenarioSpec {
+        cells: vec![2],
+        mus_per_cell: vec![4],
+        skews: vec![1.0],
+        phis: vec![Some(0.9)],
+        h_periods: vec![2],
+        profiles: vec![ChannelProfile::nominal()],
+    };
+    (Config::smoke(), spec, MatrixOptions::default())
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/matrix_quick_cell.golden.json")
+}
+
+#[test]
+fn quick_cell_matches_checked_in_golden_fixture() {
+    let (cfg, spec, opts) = fixture_cell();
+    assert_eq!(spec.n_scenarios(), 1);
+
+    // The cell itself is thread-count invariant (1 vs many workers).
+    let serial = run_matrix(&cfg, &spec, &MatrixOptions { threads: 1, ..opts.clone() }).unwrap();
+    let parallel = run_matrix(&cfg, &spec, &MatrixOptions { threads: 8, ..opts }).unwrap();
+    assert_eq!(serial[0].trace, parallel[0].trace, "thread count changed the cell");
+
+    let path = fixture_path();
+    let golden_text = format!("{}\n", result::golden_to_json(&serial).to_string_compact());
+    let bless = std::env::var("HFL_BLESS").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &golden_text).unwrap();
+        eprintln!(
+            "matrix_golden: {} fixture {} — commit it to pin these traces",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        // Fall through: the freshly written fixture must round-trip through
+        // the comparison path, so bootstrap runs are never vacuous.
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let json = hfl::util::json::parse(&text)
+        .unwrap_or_else(|e| panic!("unparseable fixture {}: {e}", path.display()));
+    let fixture = result::golden_from_json(&json).unwrap();
+    let diff = result::golden_diff(&serial, &fixture);
+    assert!(
+        diff.is_empty(),
+        "golden traces drifted from {} — if intentional, regenerate with \
+         HFL_BLESS=1 cargo test quick_cell_matches (see tests/fixtures/README.md):\n  {}",
+        path.display(),
+        diff.join("\n  ")
+    );
+}

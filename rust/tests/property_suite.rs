@@ -1,0 +1,269 @@
+//! Property-testing suite, in two parts:
+//!
+//! 1. **Meta-tests of the `testing` harness itself**: a passing property
+//!    must run exactly `cases` iterations; a deliberately failing property
+//!    must shrink to the documented minimal counterexample within
+//!    `max_shrink_steps`; a zero-step budget must disable shrinking but
+//!    still report the failure.
+//! 2. **Properties of the sparse layer** via [`hfl::testing::Gen`]:
+//!    sparsifier mass conservation in `sparse::dgc` across φ levels, and
+//!    codec round-trip / bit-accounting invariants in `sparse::codec`.
+
+use hfl::sparse::{DgcCompressor, SparseVec};
+use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
+use hfl::util::rng::Pcg64;
+use std::cell::Cell;
+
+// --- 1. Harness meta-tests --------------------------------------------------
+
+#[test]
+fn passing_property_runs_exactly_cases_iterations() {
+    for cases in [1usize, 17, 123] {
+        let count = Cell::new(0usize);
+        check(
+            &PropConfig {
+                cases,
+                ..Default::default()
+            },
+            &UsizeRange { lo: 0, hi: 10 },
+            |_| {
+                count.set(count.get() + 1);
+                Ok(())
+            },
+        );
+        assert_eq!(count.get(), cases, "cases={cases}");
+    }
+}
+
+/// Extract the (shrunk) counterexample from the harness panic message,
+/// which has the documented form `…input: <value>…`.
+fn failing_input(panic: Box<dyn std::any::Any + Send>) -> usize {
+    let msg = panic
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("harness panics with a String payload");
+    assert!(msg.contains("property failed"), "unexpected panic: {msg}");
+    msg.split("input: ")
+        .nth(1)
+        .expect("panic message names the input")
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .trim_end_matches(',')
+        .parse()
+        .expect("usize counterexample")
+}
+
+#[test]
+fn failing_property_shrinks_to_minimal_counterexample() {
+    // Fails iff n ≥ 10 on [0, 1000]. UsizeRange shrinks toward `lo` via
+    // {lo, midpoint, n−1} candidates with greedy first-improvement descent,
+    // so the documented minimal counterexample is exactly 10 — reached well
+    // within the default `max_shrink_steps` budget.
+    let res = std::panic::catch_unwind(|| {
+        check(
+            &PropConfig {
+                cases: 100,
+                ..Default::default()
+            },
+            &UsizeRange { lo: 0, hi: 1000 },
+            |&n| if n < 10 { Ok(()) } else { Err(format!("{n} ≥ 10")) },
+        );
+    });
+    let n = failing_input(res.expect_err("property must fail"));
+    assert_eq!(n, 10, "shrinker must reach the minimal counterexample");
+}
+
+#[test]
+fn zero_shrink_budget_reports_original_failure() {
+    // With max_shrink_steps = 0 the harness must not shrink at all: the
+    // reported input is whatever first failed (≥ 10, and with cases=1 the
+    // very first generated value).
+    let mut first_fail: Option<usize> = None;
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        check(
+            &PropConfig {
+                cases: 500,
+                max_shrink_steps: 0,
+                ..Default::default()
+            },
+            &UsizeRange { lo: 0, hi: 1000 },
+            |&n| {
+                if n < 10 {
+                    Ok(())
+                } else {
+                    if first_fail.is_none() {
+                        first_fail = Some(n);
+                    }
+                    Err(format!("{n} ≥ 10"))
+                }
+            },
+        );
+    }));
+    let reported = failing_input(res.expect_err("property must fail"));
+    assert_eq!(Some(reported), first_fail, "no shrinking may occur");
+    assert!(reported >= 10);
+}
+
+#[test]
+fn shrink_budget_bounds_the_descent() {
+    // A tiny budget must still terminate and report *some* failing value
+    // no smaller than the true minimum.
+    let res = std::panic::catch_unwind(|| {
+        check(
+            &PropConfig {
+                cases: 100,
+                max_shrink_steps: 2,
+                ..Default::default()
+            },
+            &UsizeRange { lo: 0, hi: 1000 },
+            |&n| if n < 10 { Ok(()) } else { Err("ge 10".into()) },
+        );
+    });
+    let n = failing_input(res.expect_err("property must fail"));
+    assert!(n >= 10, "budget-bounded shrink may stop early but never below 10: {n}");
+}
+
+// --- 2. Sparse-layer properties ---------------------------------------------
+
+/// Generator for DGC runs: (steps, dim, seed).
+struct DgcCase;
+
+impl Gen for DgcCase {
+    type Value = (usize, usize, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            1 + rng.uniform_usize(10),
+            4 + rng.uniform_usize(80),
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, &(steps, dim, seed): &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if steps > 1 {
+            out.push((steps / 2, dim, seed));
+        }
+        if dim > 4 {
+            out.push((steps, (dim / 2).max(4), seed));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_dgc_conserves_mass_across_phi_levels() {
+    // With σ = 0 the DGC recurrence reduces to v ← v + g, sent = top
+    // coordinates of v — so at any horizon, Σ_t sent_t + v_T == Σ_t g_t
+    // coordinate-wise, for EVERY sparsity level. Nothing is ever lost,
+    // only delayed (the error-accumulation guarantee behind Fig. 6).
+    for phi in [0.0, 0.5, 0.9] {
+        check(
+            &PropConfig {
+                cases: 40,
+                seed: 0x5eed + phi.to_bits(),
+                ..Default::default()
+            },
+            &DgcCase,
+            |&(steps, dim, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let mut dgc = DgcCompressor::new(dim, 0.0, phi);
+                let mut total_g = vec![0.0f32; dim];
+                let mut total_sent = vec![0.0f32; dim];
+                for _ in 0..steps {
+                    let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                    for (t, &x) in total_g.iter_mut().zip(&g) {
+                        *t += x;
+                    }
+                    dgc.step(&g).add_into(&mut total_sent, 1.0);
+                }
+                for i in 0..dim {
+                    let recon = total_sent[i] + dgc.residual()[i];
+                    if (recon - total_g[i]).abs() > 1e-4 * (1.0 + total_g[i].abs()) {
+                        return Err(format!(
+                            "phi={phi}: coord {i}: sent+residual {recon} != Σg {}",
+                            total_g[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_and_wire_accounting() {
+    let gen = Pair(
+        VecF32 {
+            min_len: 2,
+            max_len: 400,
+            scale: 2.0,
+        },
+        UsizeRange { lo: 0, hi: 20 }, // threshold in tenths: 0.0 .. 2.0
+    );
+    check(&PropConfig::default(), &gen, |(v, tenths)| {
+        let th = *tenths as f32 / 10.0;
+        let s = SparseVec::from_threshold(v, th);
+        // Round-trip: kept coordinates exact, dropped ones zero.
+        let dense = s.to_dense();
+        for (i, (&orig, &rec)) in v.iter().zip(&dense).enumerate() {
+            let want = if orig.abs() >= th { orig } else { 0.0 };
+            if rec != want {
+                return Err(format!("coord {i}: {rec} != {want}"));
+            }
+        }
+        // Indices sorted, distinct, in range.
+        if !s.indices.windows(2).all(|w| w[0] < w[1]) {
+            return Err("indices not sorted/distinct".into());
+        }
+        if s.indices.iter().any(|&i| i as usize >= v.len()) {
+            return Err("index out of range".into());
+        }
+        // Wire accounting: nnz × (32 + ⌈log2 dim⌉) bits exactly.
+        let index_bits = (v.len().max(2) as f64).log2().ceil();
+        let want_bits = s.nnz() as f64 * (32.0 + index_bits);
+        if s.wire_bits(32) != want_bits {
+            return Err(format!("wire_bits {} != {want_bits}", s.wire_bits(32)));
+        }
+        // Scatter-add linearity: add_into with scale −1 cancels to_dense.
+        let mut acc = s.to_dense();
+        s.add_into(&mut acc, -1.0);
+        if acc.iter().any(|&x| x != 0.0) {
+            return Err("add_into(−1) must cancel to_dense".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregate_matches_manual_sum() {
+    let gen = Pair(
+        VecF32 {
+            min_len: 3,
+            max_len: 60,
+            scale: 1.0,
+        },
+        VecF32 {
+            min_len: 3,
+            max_len: 60,
+            scale: 1.0,
+        },
+    );
+    check(&PropConfig { cases: 100, ..Default::default() }, &gen, |(a, b)| {
+        // Align lengths (generators are independent).
+        let dim = a.len().min(b.len());
+        let (a, b) = (&a[..dim], &b[..dim]);
+        let sa = SparseVec::from_threshold(a, 0.5);
+        let sb = SparseVec::from_threshold(b, 0.5);
+        let agg = SparseVec::aggregate(&[sa.clone(), sb.clone()], 0.5);
+        let mut manual = vec![0.0f32; dim];
+        sa.add_into(&mut manual, 0.5);
+        sb.add_into(&mut manual, 0.5);
+        if agg != manual {
+            return Err("aggregate != manual scatter-adds".into());
+        }
+        Ok(())
+    });
+}
