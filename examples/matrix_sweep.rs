@@ -10,6 +10,7 @@
 
 use hfl::cli::Args;
 use hfl::config::Config;
+use hfl::des::{MobilityProfile, StragglerPolicy};
 use hfl::sim::matrix::{ChannelProfile, MatrixOptions, ScenarioSpec};
 use hfl::sim::{result, run_matrix};
 
@@ -23,7 +24,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = Config::paper_table2();
     // A custom grid: the paper's 7-cluster flower plus smaller layouts,
     // crossed with data heterogeneity, DGC sparsity, H, and two channel
-    // profiles (nominal vs deep fade with stragglers).
+    // profiles (nominal vs deep fade with stragglers). The mobility and
+    // straggler-policy axes stay at their defaults here (static,
+    // wait-for-all) — add `MobilityProfile::Waypoint`/`StragglerPolicy::
+    // Deadline` values to route cells through the discrete-event engine.
     let spec = ScenarioSpec {
         cells: vec![1, 4, 7],
         mus_per_cell: vec![4],
@@ -31,6 +35,8 @@ fn main() -> anyhow::Result<()> {
         phis: vec![None, Some(0.9)],
         h_periods: vec![2, 6],
         profiles: vec![ChannelProfile::nominal(), ChannelProfile::straggler()],
+        mobilities: vec![MobilityProfile::Static],
+        stragglers: vec![StragglerPolicy::WaitForAll],
     };
     println!(
         "matrix sweep: {} scenarios across {threads} threads ({iters} iters/cell)\n",

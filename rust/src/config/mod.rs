@@ -349,6 +349,63 @@ impl LatencyModelConfig {
     }
 }
 
+/// Discrete-event simulator knobs (`crate::des`): heterogeneous MU compute
+/// profiles, the random-waypoint mobility defaults, and the deadline
+/// straggler-policy defaults used by the `hfl des` scenario grids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesConfig {
+    /// Mean per-round gradient-compute time (s); 0 ⇒ instantaneous compute
+    /// (communication-only timelines, the analytic cross-validation mode).
+    pub compute_mean_s: f64,
+    /// Lognormal heterogeneity σ of the per-MU mean compute speed.
+    pub compute_het: f64,
+    /// Random-waypoint walking speed (m/s) of the default mobility axis.
+    pub waypoint_speed_mps: f64,
+    /// Pause at each waypoint (s).
+    pub waypoint_pause_s: f64,
+    /// Deadline as a multiple of the cluster's expected slowest member
+    /// round time (compute + uplink); < 1 cuts off stragglers.
+    pub deadline_rel: f64,
+    /// Weight applied to post-deadline (stale) updates folded into the next
+    /// aggregation round; 0 discards them entirely.
+    pub stale_discount: f64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        Self {
+            compute_mean_s: 0.02,
+            compute_het: 0.5,
+            waypoint_speed_mps: 20.0,
+            waypoint_pause_s: 10.0,
+            deadline_rel: 0.9,
+            stale_discount: 0.5,
+        }
+    }
+}
+
+impl DesConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("compute_mean_s", self.compute_mean_s),
+            ("compute_het", self.compute_het),
+            ("waypoint_speed_mps", self.waypoint_speed_mps),
+            ("waypoint_pause_s", self.waypoint_pause_s),
+        ] {
+            if v < 0.0 || !v.is_finite() {
+                bail!("{name} must be finite and ≥ 0, got {v}");
+            }
+        }
+        if self.deadline_rel <= 0.0 || !self.deadline_rel.is_finite() {
+            bail!("deadline_rel must be > 0, got {}", self.deadline_rel);
+        }
+        if !(0.0..=1.0).contains(&self.stale_discount) {
+            bail!("stale_discount must be in [0,1], got {}", self.stale_discount);
+        }
+        Ok(())
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
@@ -357,6 +414,7 @@ pub struct Config {
     pub sparsity: SparsityConfig,
     pub training: TrainingConfig,
     pub latency: LatencyModelConfig,
+    pub des: DesConfig,
 }
 
 impl Config {
@@ -388,6 +446,7 @@ impl Config {
         self.sparsity.validate().context("sparsity")?;
         self.training.validate().context("training")?;
         self.latency.validate().context("latency")?;
+        self.des.validate().context("des")?;
         Ok(())
     }
 
@@ -475,6 +534,12 @@ impl Config {
             ("latency", "bits_per_param") => self.latency.bits_per_param = need_usize()? as u32,
             ("latency", "mc_trials") => self.latency.mc_trials = need_usize()?,
             ("latency", "channel_seed") => self.latency.channel_seed = need_usize()? as u64,
+            ("des", "compute_mean_s") => self.des.compute_mean_s = need_f64()?,
+            ("des", "compute_het") => self.des.compute_het = need_f64()?,
+            ("des", "waypoint_speed_mps") => self.des.waypoint_speed_mps = need_f64()?,
+            ("des", "waypoint_pause_s") => self.des.waypoint_pause_s = need_f64()?,
+            ("des", "deadline_rel") => self.des.deadline_rel = need_f64()?,
+            ("des", "stale_discount") => self.des.stale_discount = need_f64()?,
             (s, k) => bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -597,6 +662,21 @@ mod tests {
         assert!(!c.sparsity.enabled);
         assert_eq!(c.training.model, ModelKind::Cnn);
         assert_eq!(c.training.h_period, 6);
+    }
+
+    #[test]
+    fn des_defaults_valid_and_overridable() {
+        let c = Config::default();
+        c.des.validate().unwrap();
+        let mut c = Config::default();
+        c.apply_override("des", "deadline_rel", &toml::TomlValue::Float(0.7))
+            .unwrap();
+        c.apply_override("des", "stale_discount", &toml::TomlValue::Float(0.0))
+            .unwrap();
+        assert_eq!(c.des.deadline_rel, 0.7);
+        assert_eq!(c.des.stale_discount, 0.0);
+        c.des.stale_discount = 1.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,1009 @@
+//! The deterministic discrete-event engine: simulates the full HCN
+//! timeline — per-MU gradient compute, uplink transmission priced by the
+//! `wireless` link model, SBS intra-cluster aggregation with straggler
+//! policies, and the H-periodic MBS global sync — while executing exactly
+//! the arithmetic of the sequential reference engine
+//! ([`crate::fl::run_hierarchical`]).
+//!
+//! ## Determinism contract
+//!
+//! The run is a pure function of `(config, TrainOptions, DesParams)`:
+//!
+//! * the event queue orders by `(time, seq)` with a deterministic insertion
+//!   counter, so simultaneous events never race;
+//! * every MU owns private `Pcg64` streams (compute jitter, mobility) keyed
+//!   by `(seed, entity id)` — nothing is shared or order-dependent;
+//! * all floating-point reductions happen at fixed program points in fixed
+//!   (cluster-id, MU-id) order, never in event-arrival order.
+//!
+//! ## Equivalence to the sequential engine
+//!
+//! In the static, wait-for-all configuration with a deterministic oracle
+//! (`grad_noise = 0`, the matrix default) the DES executes the *identical*
+//! f32/f64 operation sequence as `run_hierarchical`: final parameters, the
+//! per-iteration loss curve, and the per-link bit totals are bit-exact, and
+//! the simulated wall-clock per iteration equals the analytic
+//! [`crate::wireless::hfl_latency`] / [`crate::wireless::fl_latency`] value
+//! (within f64 accumulation noise ≪ 1e-6 relative) — asserted by
+//! `rust/tests/des_golden.rs`. Evaluation points additionally coincide when
+//! `eval_every` is a multiple of `H` (clusters are only time-aligned at
+//! sync barriers).
+//!
+//! With mobility, deadlines, or nonzero compute profiles the timeline
+//! departs from the closed form — that is the point of the subsystem — but
+//! stays bit-reproducible across reruns and thread counts.
+
+use crate::config::Config;
+use crate::des::events::{EventKind, EventQueue, TimelineRecorder};
+use crate::des::mobility::{MobilityProfile, Waypoint};
+use crate::des::straggler::{ComputeProfile, StragglerPolicy};
+use crate::fl::{consensus_params, GradOracle, LrSchedule, TrainLog, TrainOptions};
+use crate::sim::result::TimelineDigest;
+use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use crate::topology::{HexLayout, NetworkTopology};
+use crate::util::rng::Pcg64;
+use crate::wireless::broadcast::{broadcast_latency, BroadcastParams};
+use crate::wireless::latency::payload_bits;
+use crate::wireless::{allocate_subcarriers, LinkParams};
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Execution parameters of one DES run, beyond the shared [`TrainOptions`].
+#[derive(Clone, Debug)]
+pub struct DesParams {
+    pub topts: TrainOptions,
+    pub mobility: MobilityProfile,
+    pub straggler: StragglerPolicy,
+    pub compute: ComputeProfile,
+    /// Multiplies every MU's mean compute time (the legacy channel-profile
+    /// straggler factor of [`crate::sim::matrix::ChannelProfile`]).
+    pub compute_scale: f64,
+    /// Seed of the per-entity compute/mobility streams.
+    pub seed: u64,
+}
+
+/// Everything a DES run produces.
+#[derive(Clone, Debug)]
+pub struct DesOutcome {
+    /// Training log in the sequential engine's schema.
+    pub log: TrainLog,
+    /// Simulated wall-clock of the whole run (s).
+    pub total_time_s: f64,
+    /// `total_time_s / iters` — comparable to the analytic per-iteration
+    /// latency in the static wait-for-all configuration.
+    pub per_iter_s: f64,
+    /// Fingerprint of the processed event stream.
+    pub timeline: TimelineDigest,
+    pub n_handovers: u64,
+    /// Messages that arrived after their round's deadline.
+    pub n_late: u64,
+    /// MU-rounds skipped because the MU was still transmitting.
+    pub n_skipped_rounds: u64,
+}
+
+/// Link-latency pricing of the current topology snapshot, mirroring the
+/// analytic model line by line (`wireless::fl_latency` / `hfl_latency`) so
+/// the static timeline reproduces it exactly.
+struct Pricing {
+    /// Per-MU uplink transmission time of one sparse gradient (s).
+    ul_time: Vec<f64>,
+    /// Per-cluster SBS→MU broadcast latency of one round update (s).
+    gamma_dl: Vec<f64>,
+    /// SBS→MBS fronthaul per sync (s).
+    theta_ul: f64,
+    /// MBS→SBS fronthaul per sync (s).
+    theta_dl: f64,
+    /// Worst-cluster final model broadcast per sync (s).
+    max_final_dl: f64,
+}
+
+fn mu_link(cfg: &Config, dist: f64) -> LinkParams {
+    let r = &cfg.radio;
+    LinkParams {
+        p_max_w: r.mu_power_w,
+        dist_m: dist,
+        alpha: r.pathloss_exp,
+        noise_w: r.noise_power_w(),
+        b0_hz: r.subcarrier_spacing_hz,
+        ber: r.ber,
+    }
+}
+
+fn price(
+    cfg: &Config,
+    members: &[Vec<usize>],
+    dist_sbs: &[f64],
+    dist_mbs: &[f64],
+    m_cluster: usize,
+    flat: bool,
+) -> Result<Pricing> {
+    let k_total = dist_sbs.len();
+    let n_clusters = members.len();
+    let mut p = Pricing {
+        ul_time: vec![0.0; k_total],
+        gamma_dl: vec![0.0; n_clusters],
+        theta_ul: 0.0,
+        theta_dl: 0.0,
+        max_final_dl: 0.0,
+    };
+    if k_total <= 1 {
+        // A single MU transmits nothing (same convention as the matrix
+        // engine's analytic pricing).
+        return Ok(p);
+    }
+    let q = cfg.latency.q_params;
+    let qb = cfg.latency.bits_per_param;
+    let s = &cfg.sparsity;
+    let (phi_ul, phi_sdl, phi_mdl, phi_sul) = if s.enabled {
+        (s.phi_mu_ul, s.phi_sbs_dl, s.phi_mbs_dl, s.phi_sbs_ul)
+    } else {
+        (0.0, 0.0, 0.0, 0.0)
+    };
+    let ul_bits = payload_bits(q, qb, phi_ul);
+
+    if flat {
+        if cfg.radio.subcarriers < k_total {
+            bail!(
+                "flat uplink needs ≥1 sub-carrier per MU ({k_total} MUs, {} sub-carriers)",
+                cfg.radio.subcarriers
+            );
+        }
+        let links: Vec<LinkParams> = dist_mbs.iter().map(|&d| mu_link(cfg, d)).collect();
+        let alloc = allocate_subcarriers(&links, cfg.radio.subcarriers);
+        for (k, rate) in alloc.rates.iter().enumerate() {
+            p.ul_time[k] = ul_bits / rate;
+        }
+        let bp = BroadcastParams {
+            p_total_w: cfg.radio.mbs_power_w,
+            m_subcarriers: cfg.radio.subcarriers,
+            noise_w: cfg.radio.noise_power_w(),
+            b0_hz: cfg.radio.subcarrier_spacing_hz,
+            alpha: cfg.radio.pathloss_exp,
+            dists_m: dist_mbs.to_vec(),
+            slot_s: cfg.radio.broadcast_slot_s,
+        };
+        p.gamma_dl[0] = broadcast_latency(&bp, payload_bits(q, qb, phi_mdl));
+        p.max_final_dl = p.gamma_dl[0];
+        return Ok(p);
+    }
+
+    let dl_bits = payload_bits(q, qb, phi_sdl);
+    let mut rate_sum = 0.0;
+    let mut rate_count = 0usize;
+    for (c, mems) in members.iter().enumerate() {
+        if mems.is_empty() {
+            continue; // mobility emptied this cluster: nothing to price
+        }
+        let dists: Vec<f64> = mems.iter().map(|&k| dist_sbs[k]).collect();
+        let links: Vec<LinkParams> = dists.iter().map(|&d| mu_link(cfg, d)).collect();
+        let alloc = allocate_subcarriers(&links, m_cluster.max(links.len()));
+        for (j, &k) in mems.iter().enumerate() {
+            p.ul_time[k] = ul_bits / alloc.rates[j];
+        }
+        rate_sum += alloc.rates.iter().sum::<f64>();
+        rate_count += alloc.rates.len();
+        let bp = BroadcastParams {
+            p_total_w: cfg.radio.sbs_power_w,
+            m_subcarriers: m_cluster,
+            noise_w: cfg.radio.noise_power_w(),
+            b0_hz: cfg.radio.subcarrier_spacing_hz,
+            alpha: cfg.radio.pathloss_exp,
+            dists_m: dists,
+            slot_s: cfg.radio.broadcast_slot_s,
+        };
+        p.gamma_dl[c] = broadcast_latency(&bp, dl_bits);
+    }
+    if rate_count > 0 {
+        let fronthaul_rate = cfg.radio.fronthaul_multiplier * (rate_sum / rate_count as f64);
+        p.theta_ul = payload_bits(q, qb, phi_sul) / fronthaul_rate;
+        p.theta_dl = payload_bits(q, qb, phi_mdl) / fronthaul_rate;
+    }
+    p.max_final_dl = p.gamma_dl.iter().cloned().fold(0.0, f64::max);
+    Ok(p)
+}
+
+/// Per-cluster round bookkeeping.
+struct RoundCtx {
+    round: usize,
+    aggregated: bool,
+    /// MUs computing this round (sorted by id).
+    participants: Vec<usize>,
+    /// Participants whose uplink landed before aggregation.
+    fresh: BTreeSet<usize>,
+    /// Participants whose uplink has not landed yet.
+    awaiting: usize,
+    done: bool,
+}
+
+struct Sim<'a, O: GradOracle + ?Sized> {
+    oracle: &'a mut O,
+    topts: &'a TrainOptions,
+    cfg: &'a Config,
+    params: &'a DesParams,
+    n: usize,
+    k_total: usize,
+    dim: usize,
+    h: usize,
+    flat: bool,
+    // Geometry / membership.
+    layout: HexLayout,
+    m_cluster: usize,
+    dist_sbs: Vec<f64>,
+    dist_mbs: Vec<f64>,
+    mu_cluster: Vec<usize>,
+    members: Vec<Vec<usize>>,
+    walkers: Vec<Option<Waypoint>>,
+    // Timing.
+    pricing: Pricing,
+    mu_mean_comp: Vec<f64>,
+    comp_rng: Vec<Pcg64>,
+    busy_until: Vec<f64>,
+    // Training state (mirrors `run_hierarchical`).
+    schedule: LrSchedule,
+    dgc: Vec<DgcCompressor>,
+    w_tilde: Vec<Vec<f32>>,
+    dl_enc: Vec<DiscountedError>,
+    ul_enc: Vec<DiscountedError>,
+    w_tilde_global: Vec<f32>,
+    mbs_enc: DiscountedError,
+    /// Per-cluster stale messages `(msg, weight, arrives_at)` awaiting a
+    /// later aggregation. An entry is only applied once the simulated clock
+    /// has passed `arrives_at` — a late update cannot land before its
+    /// transmission physically completes.
+    stale: Vec<Vec<(SparseVec, f32, f64)>>,
+    // Bookkeeping.
+    ctx: Vec<RoundCtx>,
+    /// Raw per-(round, MU) losses; folded in global MU order when the
+    /// iteration completes so the loss curve matches the sequential engine
+    /// bit-for-bit in the static wait-for-all configuration.
+    round_loss: Vec<f64>,
+    clusters_done_at: Vec<usize>,
+    queue: EventQueue,
+    rec: TimelineRecorder,
+    log: TrainLog,
+    grad: Vec<f32>,
+    agg: Vec<f32>,
+    msg: SparseVec,
+    n_handovers: u64,
+    n_late: u64,
+    n_skipped: u64,
+    finish_time: f64,
+}
+
+impl<O: GradOracle + ?Sized> Sim<'_, O> {
+    fn eval_due(&self, round: usize) -> bool {
+        self.topts.eval_every > 0 && (round + 1) % self.topts.eval_every == 0
+    }
+
+    fn push_eval(&mut self, round: usize) {
+        let consensus = consensus_params(&self.w_tilde);
+        let m = self.oracle.eval(&consensus);
+        self.log.evals.push((round + 1, m));
+    }
+
+    fn start_round(&mut self, c: usize, round: usize, t: f64) {
+        let mut participants = Vec::new();
+        for &mu in &self.members[c] {
+            if self.busy_until[mu] <= t {
+                participants.push(mu);
+            } else {
+                self.n_skipped += 1;
+            }
+        }
+        let awaiting = participants.len();
+        self.ctx[c] = RoundCtx {
+            round,
+            aggregated: false,
+            participants,
+            fresh: BTreeSet::new(),
+            awaiting,
+            done: false,
+        };
+        if awaiting == 0 {
+            // Nothing computes this round (empty or fully-busy cluster):
+            // aggregate whatever stale mass has arrived and move on.
+            self.aggregate(c, t);
+            self.queue
+                .push(t + self.pricing.gamma_dl[c], EventKind::RoundEnd { cluster: c, round });
+            return;
+        }
+        let parts = self.ctx[c].participants.clone();
+        let mut expected_worst = 0.0f64;
+        for &mu in &parts {
+            let comp = self
+                .params
+                .compute
+                .sample_round(self.mu_mean_comp[mu], &mut self.comp_rng[mu]);
+            self.busy_until[mu] = t + comp + self.pricing.ul_time[mu];
+            self.queue
+                .push(t + comp, EventKind::ComputeDone { mu, cluster: c, round });
+            expected_worst =
+                expected_worst.max(self.mu_mean_comp[mu] + self.pricing.ul_time[mu]);
+        }
+        if let StragglerPolicy::Deadline { rel, .. } = &self.params.straggler {
+            let d = rel * expected_worst;
+            if d > 0.0 {
+                self.queue.push(t + d, EventKind::Deadline { cluster: c, round });
+            }
+        }
+    }
+
+    /// Execute the cluster's round arithmetic (identical to one iteration of
+    /// the sequential engine's inner loop) at the aggregation instant `t`.
+    fn aggregate(&mut self, c: usize, t: f64) {
+        let (round, parts) = {
+            let ctx = &mut self.ctx[c];
+            ctx.aggregated = true;
+            (ctx.round, ctx.participants.clone())
+        };
+        let denom = parts.len() as f32;
+        let stale_discount = match &self.params.straggler {
+            StragglerPolicy::Deadline { stale_discount, .. } => *stale_discount,
+            StragglerPolicy::WaitForAll => 0.0,
+        };
+        self.agg.iter_mut().for_each(|x| *x = 0.0);
+        // Stale updates whose transmission has landed by now apply first,
+        // pre-discounted; ones still in flight go back in the queue (their
+        // original order preserved) for a later aggregation.
+        let pending = std::mem::take(&mut self.stale[c]);
+        for (m, w, arrives_at) in pending {
+            if arrives_at <= t {
+                m.add_into(&mut self.agg, w);
+            } else {
+                self.stale[c].push((m, w, arrives_at));
+            }
+        }
+        // Fresh computation + uplink, in MU-id order — never arrival order.
+        for &mu in &parts {
+            let loss = self
+                .oracle
+                .loss_grad(mu, &self.w_tilde[c], &mut self.grad);
+            self.round_loss[round * self.k_total + mu] = loss;
+            if self.topts.weight_decay != 0.0 {
+                for i in 0..self.dim {
+                    self.grad[i] += self.topts.weight_decay * self.w_tilde[c][i];
+                }
+            }
+            self.dgc[mu].step_into(&self.grad, &mut self.msg);
+            self.log.bits.mu_ul += self.msg.wire_bits(32);
+            self.log.bits.n_mu_msgs += 1;
+            if self.ctx[c].fresh.contains(&mu) {
+                self.msg.add_into(&mut self.agg, 1.0 / denom);
+            } else {
+                // Missed the deadline: the bits were still spent; the
+                // update arrives stale once its uplink completes (or is
+                // discarded when the discount is zero).
+                self.n_late += 1;
+                if stale_discount > 0.0 {
+                    self.stale[c].push((
+                        self.msg.clone(),
+                        stale_discount / denom,
+                        self.busy_until[mu],
+                    ));
+                }
+            }
+        }
+        let lr = self.schedule.at(round) as f32;
+        for x in self.agg.iter_mut() {
+            *x *= -lr;
+        }
+        let dl_msg = self.dl_enc[c].compress(&self.agg);
+        self.log.bits.sbs_dl += dl_msg.wire_bits(32);
+        dl_msg.add_into(&mut self.w_tilde[c], 1.0);
+    }
+
+    /// Fold the completed iteration's per-MU losses in global MU order —
+    /// the sequential engine's exact summation order.
+    fn fold_iteration_loss(&mut self, round: usize) {
+        let mut iter_loss = 0.0f64;
+        for mu in 0..self.k_total {
+            let v = self.round_loss[round * self.k_total + mu];
+            if !v.is_nan() {
+                iter_loss += v / self.k_total as f64;
+            }
+        }
+        self.log.train_loss.push((round, iter_loss));
+    }
+
+    /// The H-periodic global sync: identical arithmetic to the sequential
+    /// engine's sync block, then fronthaul + final broadcast pricing.
+    fn do_sync(&mut self, round: usize, t: f64) {
+        self.agg.iter_mut().for_each(|x| *x = 0.0);
+        for c in 0..self.n {
+            let e_dl = self.dl_enc[c].error().to_vec();
+            let delta: Vec<f32> = (0..self.dim)
+                .map(|i| self.w_tilde[c][i] + e_dl[i] - self.w_tilde_global[i])
+                .collect();
+            let ul_msg = self.ul_enc[c].compress(&delta);
+            self.log.bits.sbs_ul += ul_msg.wire_bits(32);
+            ul_msg.add_into(&mut self.agg, 1.0 / self.n as f32);
+        }
+        let mbs_msg = self.mbs_enc.compress(&self.agg);
+        self.log.bits.mbs_dl += mbs_msg.wire_bits(32);
+        mbs_msg.add_into(&mut self.w_tilde_global, 1.0);
+        for c in 0..self.n {
+            let delta: Vec<f32> = (0..self.dim)
+                .map(|i| self.w_tilde_global[i] - self.w_tilde[c][i])
+                .collect();
+            let dl_msg = self.dl_enc[c].compress(&delta);
+            self.log.bits.sbs_dl += dl_msg.wire_bits(32);
+            dl_msg.add_into(&mut self.w_tilde[c], 1.0);
+        }
+        // Clusters resume together once the slowest final broadcast lands.
+        let t_resume =
+            t + self.pricing.theta_ul + self.pricing.theta_dl + self.pricing.max_final_dl;
+        self.queue
+            .push(t_resume, EventKind::GlobalSync { period: (round + 1) / self.h });
+    }
+
+    /// Move the MUs to their positions at time `t`, re-associate to the
+    /// nearest SBS, and reprice every link. Called when all clusters are
+    /// time-aligned: at sync boundaries, or at every round end for flat
+    /// (single-cluster) topologies that never sync.
+    fn update_mobility(&mut self, t: f64) -> Result<()> {
+        if self.params.mobility.is_static() {
+            return Ok(());
+        }
+        for k in 0..self.k_total {
+            let pos = match self.walkers[k].as_mut() {
+                Some(w) => w.position_at(t),
+                None => continue,
+            };
+            self.dist_mbs[k] = pos.norm().max(1.0);
+            let nearest = self.layout.nearest_center(&pos);
+            if nearest != self.mu_cluster[k] {
+                self.n_handovers += 1;
+                self.rec.record_kind(
+                    t,
+                    &EventKind::Handover { mu: k, from: self.mu_cluster[k], to: nearest },
+                );
+                self.mu_cluster[k] = nearest;
+            }
+            self.dist_sbs[k] = pos.dist(&self.layout.centers[self.mu_cluster[k]]).max(1.0);
+        }
+        for m in self.members.iter_mut() {
+            m.clear();
+        }
+        for k in 0..self.k_total {
+            self.members[self.mu_cluster[k]].push(k);
+        }
+        self.pricing = price(
+            self.cfg,
+            &self.members,
+            &self.dist_sbs,
+            &self.dist_mbs,
+            self.m_cluster,
+            self.flat,
+        )?;
+        Ok(())
+    }
+
+    fn run(&mut self) -> Result<()> {
+        let iters = self.topts.iters;
+        for c in 0..self.n {
+            self.start_round(c, 0, 0.0);
+        }
+        // Generous upper bound on legitimate events; a breach means a
+        // scheduling bug, reported as an error rather than a hang.
+        let cap = 64
+            + (iters as u64 + 2) * (4 * self.k_total as u64 + 4 * self.n as u64 + 8);
+        let mut processed = 0u64;
+        while let Some(ev) = self.queue.pop() {
+            self.rec.record(&ev);
+            processed += 1;
+            if processed > cap {
+                bail!("DES event cap exceeded ({cap}): the scheduler is looping");
+            }
+            match ev.kind {
+                EventKind::ComputeDone { mu, cluster, round } => {
+                    self.queue.push(
+                        self.busy_until[mu],
+                        EventKind::UplinkDone { mu, cluster, round },
+                    );
+                }
+                EventKind::UplinkDone { mu, cluster, round } => {
+                    let ready = {
+                        let ctx = &mut self.ctx[cluster];
+                        if ctx.round == round && !ctx.aggregated {
+                            ctx.fresh.insert(mu);
+                            ctx.awaiting -= 1;
+                            ctx.awaiting == 0
+                        } else {
+                            false // late arrival — charged at aggregation
+                        }
+                    };
+                    if ready {
+                        self.aggregate(cluster, ev.time);
+                        self.queue.push(
+                            ev.time + self.pricing.gamma_dl[cluster],
+                            EventKind::RoundEnd { cluster, round },
+                        );
+                    }
+                }
+                EventKind::Deadline { cluster, round } => {
+                    let fire = {
+                        let ctx = &self.ctx[cluster];
+                        ctx.round == round && !ctx.aggregated
+                    };
+                    if fire {
+                        self.aggregate(cluster, ev.time);
+                        self.queue.push(
+                            ev.time + self.pricing.gamma_dl[cluster],
+                            EventKind::RoundEnd { cluster, round },
+                        );
+                    }
+                }
+                EventKind::RoundEnd { cluster, round } => {
+                    self.clusters_done_at[round] += 1;
+                    let complete = self.clusters_done_at[round] == self.n;
+                    if complete {
+                        self.fold_iteration_loss(round);
+                    }
+                    let sync_due = self.n > 1 && (round + 1) % self.h == 0;
+                    if sync_due {
+                        // Barrier: the last cluster to finish triggers the
+                        // sync at the barrier instant.
+                        if complete {
+                            self.do_sync(round, ev.time);
+                        }
+                    } else {
+                        if complete && self.eval_due(round) {
+                            self.push_eval(round);
+                        }
+                        if round + 1 < self.topts.iters {
+                            if self.flat {
+                                // Flat topologies have no sync barriers, but
+                                // their single cluster is time-aligned at
+                                // every round end — move/reprice here.
+                                self.update_mobility(ev.time)?;
+                            }
+                            self.start_round(cluster, round + 1, ev.time);
+                        } else {
+                            self.ctx[cluster].done = true;
+                            self.finish_time = self.finish_time.max(ev.time);
+                        }
+                    }
+                }
+                EventKind::GlobalSync { period } => {
+                    let round = period * self.h - 1;
+                    self.update_mobility(ev.time)?;
+                    if self.eval_due(round) {
+                        self.push_eval(round);
+                    }
+                    for c in 0..self.n {
+                        if round + 1 < self.topts.iters {
+                            self.start_round(c, round + 1, ev.time);
+                        } else {
+                            self.ctx[c].done = true;
+                            self.finish_time = self.finish_time.max(ev.time);
+                        }
+                    }
+                }
+                EventKind::Handover { .. } => {
+                    // Handovers are digest records, never queued.
+                    bail!("handover events must not enter the queue");
+                }
+            }
+        }
+        if self.ctx.iter().any(|c| !c.done) {
+            bail!("DES queue drained with unfinished clusters — scheduling bug");
+        }
+        Ok(())
+    }
+}
+
+/// Run the discrete-event simulation. See the module docs for the
+/// determinism and sequential-equivalence contracts.
+pub fn run_des<O: GradOracle + ?Sized>(
+    oracle: &mut O,
+    cfg: &Config,
+    params: &DesParams,
+) -> Result<DesOutcome> {
+    let topts = &params.topts;
+    let n = topts.n_clusters;
+    let k_total = oracle.n_workers();
+    let dim = oracle.dim();
+    if topts.iters == 0 {
+        bail!("DES needs at least one iteration");
+    }
+    if n < 1 || k_total < n {
+        bail!("need ≥1 worker per cluster ({k_total} workers, {n} clusters)");
+    }
+    if k_total % n != 0 {
+        bail!("workers ({k_total}) must divide evenly into clusters ({n}) — Assumption 1");
+    }
+    if topts.h_period == 0 {
+        bail!("h_period must be ≥ 1");
+    }
+    if cfg.topology.n_clusters != n || cfg.topology.total_mus() != k_total {
+        bail!(
+            "topology config ({} clusters × {} MUs) disagrees with the oracle/TrainOptions \
+             ({n} clusters, {k_total} workers)",
+            cfg.topology.n_clusters,
+            cfg.topology.mus_per_cluster
+        );
+    }
+
+    let topo = NetworkTopology::generate(&cfg.topology);
+    let flat = n == 1;
+    let m_cluster = topo.layout.subcarriers_per_cluster(cfg.radio.subcarriers);
+    let dist_sbs: Vec<f64> = topo.users.iter().map(|u| u.dist_sbs).collect();
+    let dist_mbs: Vec<f64> = topo.users.iter().map(|u| u.dist_mbs).collect();
+    let mu_cluster: Vec<usize> = topo.users.iter().map(|u| u.cluster).collect();
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (k, &c) in mu_cluster.iter().enumerate() {
+        members[c].push(k);
+    }
+
+    // Per-entity streams: compute heterogeneity, per-round jitter, mobility.
+    let mut mu_mean_comp = Vec::with_capacity(k_total);
+    let mut comp_rng = Vec::with_capacity(k_total);
+    let mut walkers: Vec<Option<Waypoint>> = Vec::with_capacity(k_total);
+    for k in 0..k_total {
+        let mut het_stream = Pcg64::new(params.seed, 0x1000_0000 + k as u64);
+        mu_mean_comp.push(params.compute.mu_mean(&mut het_stream) * params.compute_scale);
+        comp_rng.push(Pcg64::new(params.seed, 0x2000_0000 + k as u64));
+        walkers.push(match &params.mobility {
+            MobilityProfile::Static => None,
+            MobilityProfile::Waypoint { speed_mps, pause_s } => Some(Waypoint::new(
+                topo.users[k].pos,
+                *speed_mps,
+                *pause_s,
+                cfg.topology.radius_m,
+                Pcg64::new(params.seed, 0x3000_0000 + k as u64),
+            )),
+        });
+    }
+
+    // Training state — constructed in the sequential engine's exact order.
+    let (phi_ul, phi_sdl, phi_sul, phi_mdl) = if topts.sparsity.enabled {
+        (
+            topts.sparsity.phi_mu_ul,
+            topts.sparsity.phi_sbs_dl,
+            topts.sparsity.phi_sbs_ul,
+            topts.sparsity.phi_mbs_dl,
+        )
+    } else {
+        (0.0, 0.0, 0.0, 0.0)
+    };
+    let (cluster_dl_phi, cluster_dl_beta) = if n == 1 {
+        (phi_mdl, topts.sparsity.beta_m)
+    } else {
+        (phi_sdl, topts.sparsity.beta_s)
+    };
+    let schedule = LrSchedule::new(
+        topts.peak_lr,
+        topts.warmup_iters,
+        topts.iters,
+        topts.milestones,
+    );
+    let dgc: Vec<DgcCompressor> = (0..k_total)
+        .map(|_| DgcCompressor::new(dim, topts.momentum, phi_ul))
+        .collect();
+    let init = oracle.init_params();
+    let w_tilde: Vec<Vec<f32>> = vec![init.clone(); n];
+    let dl_enc: Vec<DiscountedError> = (0..n)
+        .map(|_| DiscountedError::new(dim, cluster_dl_phi, cluster_dl_beta as f32))
+        .collect();
+    let ul_enc: Vec<DiscountedError> = (0..n)
+        .map(|_| DiscountedError::new(dim, phi_sul, topts.sparsity.beta_s as f32))
+        .collect();
+    let mbs_enc = DiscountedError::new(dim, phi_mdl, topts.sparsity.beta_m as f32);
+
+    let pricing = price(cfg, &members, &dist_sbs, &dist_mbs, m_cluster, flat)?;
+    let ctx: Vec<RoundCtx> = (0..n)
+        .map(|_| RoundCtx {
+            round: 0,
+            aggregated: true,
+            participants: Vec::new(),
+            fresh: BTreeSet::new(),
+            awaiting: 0,
+            done: false,
+        })
+        .collect();
+
+    let mut sim = Sim {
+        oracle,
+        topts,
+        cfg,
+        params,
+        n,
+        k_total,
+        dim,
+        h: topts.h_period,
+        flat,
+        layout: topo.layout.clone(),
+        m_cluster,
+        dist_sbs,
+        dist_mbs,
+        mu_cluster,
+        members,
+        walkers,
+        pricing,
+        mu_mean_comp,
+        comp_rng,
+        busy_until: vec![0.0; k_total],
+        schedule,
+        dgc,
+        w_tilde,
+        dl_enc,
+        ul_enc,
+        w_tilde_global: init,
+        mbs_enc,
+        stale: vec![Vec::new(); n],
+        ctx,
+        round_loss: vec![f64::NAN; topts.iters * k_total],
+        clusters_done_at: vec![0; topts.iters],
+        queue: EventQueue::new(),
+        rec: TimelineRecorder::new(),
+        log: TrainLog::default(),
+        grad: vec![0.0; dim],
+        agg: vec![0.0; dim],
+        msg: SparseVec::empty(dim),
+        n_handovers: 0,
+        n_late: 0,
+        n_skipped: 0,
+        finish_time: 0.0,
+    };
+    sim.run()?;
+
+    // Final consensus + eval, exactly like the sequential engine.
+    let consensus = consensus_params(&sim.w_tilde);
+    let m = sim.oracle.eval(&consensus);
+    sim.log.evals.push((topts.iters, m));
+    sim.log.final_params = consensus;
+
+    let total = sim.finish_time;
+    Ok(DesOutcome {
+        per_iter_s: total / topts.iters as f64,
+        total_time_s: total,
+        timeline: sim.rec.digest(),
+        n_handovers: sim.n_handovers,
+        n_late: sim.n_late,
+        n_skipped_rounds: sim.n_skipped,
+        log: sim.log,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityConfig;
+    use crate::fl::{run_hierarchical, QuadraticOracle};
+
+    fn cfg_for(n: usize, mus: usize) -> Config {
+        let mut c = Config::smoke();
+        c.topology.n_clusters = n;
+        c.topology.mus_per_cluster = mus;
+        c.topology.reuse_colors = c.topology.reuse_colors.min(n);
+        c.training.h_period = 2;
+        c.sparsity.enabled = true;
+        c.sparsity.phi_mu_ul = 0.9;
+        c
+    }
+
+    fn topts_for(cfg: &Config, iters: usize) -> TrainOptions {
+        TrainOptions {
+            iters,
+            peak_lr: 0.05,
+            warmup_iters: 3,
+            milestones: (0.6, 0.85),
+            momentum: 0.9,
+            weight_decay: 0.0,
+            h_period: cfg.training.h_period,
+            n_clusters: cfg.topology.n_clusters,
+            sparsity: cfg.sparsity.clone(),
+            eval_every: 10,
+        }
+    }
+
+    fn static_params(topts: TrainOptions) -> DesParams {
+        DesParams {
+            topts,
+            mobility: MobilityProfile::Static,
+            straggler: StragglerPolicy::WaitForAll,
+            compute: ComputeProfile::none(),
+            compute_scale: 1.0,
+            seed: 99,
+        }
+    }
+
+    fn bits_f32(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn static_waitall_matches_sequential_engine_bit_exactly() {
+        let cfg = cfg_for(2, 4);
+        let topts = topts_for(&cfg, 20);
+        let mut des_oracle = QuadraticOracle::new_skewed(16, 8, 0.0, 1.0, 4242);
+        let out = run_des(&mut des_oracle, &cfg, &static_params(topts.clone())).unwrap();
+        let mut seq_oracle = QuadraticOracle::new_skewed(16, 8, 0.0, 1.0, 4242);
+        let seq = run_hierarchical(&mut seq_oracle, &topts);
+        assert_eq!(
+            bits_f32(&out.log.final_params),
+            bits_f32(&seq.final_params),
+            "final params must be bit-identical"
+        );
+        assert_eq!(out.log.bits, seq.bits, "per-link bits must agree");
+        // The loss curve folds in the sequential engine's exact order.
+        let curve_bits = |c: &[(usize, f64)]| -> Vec<(usize, u64)> {
+            c.iter().map(|(i, x)| (*i, x.to_bits())).collect()
+        };
+        assert_eq!(curve_bits(&out.log.train_loss), curve_bits(&seq.train_loss));
+        // Evals land on sync boundaries (eval_every % H == 0) — identical.
+        assert_eq!(out.log.evals.len(), seq.evals.len());
+        for ((ia, ma), (ib, mb)) in out.log.evals.iter().zip(&seq.evals) {
+            assert_eq!(ia, ib);
+            assert_eq!(ma.loss.to_bits(), mb.loss.to_bits());
+        }
+        assert_eq!(out.n_late, 0);
+        assert_eq!(out.n_handovers, 0);
+        assert_eq!(out.n_skipped_rounds, 0);
+    }
+
+    #[test]
+    fn static_waitall_matches_analytic_hfl_latency() {
+        let cfg = cfg_for(4, 4);
+        let topts = topts_for(&cfg, 8); // multiple of H = 2
+        let mut oracle = QuadraticOracle::new_skewed(8, 16, 0.0, 1.0, 7);
+        let out = run_des(&mut oracle, &cfg, &static_params(topts)).unwrap();
+        let analytic = crate::sim::price_latency(&cfg, false);
+        let rel = (out.per_iter_s - analytic).abs() / analytic;
+        assert!(
+            rel < 1e-6,
+            "DES per-iter {} vs analytic {analytic} (rel {rel})",
+            out.per_iter_s
+        );
+    }
+
+    #[test]
+    fn flat_static_matches_analytic_fl_latency() {
+        let cfg = cfg_for(1, 4);
+        let topts = topts_for(&cfg, 6);
+        let mut oracle = QuadraticOracle::new_skewed(8, 4, 0.0, 1.0, 8);
+        let out = run_des(&mut oracle, &cfg, &static_params(topts)).unwrap();
+        let analytic = crate::sim::price_latency(&cfg, true);
+        let rel = (out.per_iter_s - analytic).abs() / analytic;
+        assert!(
+            rel < 1e-6,
+            "flat DES per-iter {} vs analytic {analytic} (rel {rel})",
+            out.per_iter_s
+        );
+    }
+
+    #[test]
+    fn rerun_with_same_seed_is_bit_identical() {
+        let cfg = cfg_for(2, 4);
+        let run = || {
+            let topts = topts_for(&cfg, 12);
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
+                straggler: StragglerPolicy::Deadline { rel: 0.9, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.5, het: 0.5 },
+                compute_scale: 1.0,
+                seed: 1234,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 55);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.timeline, b.timeline, "timeline digest must be reproducible");
+        assert_eq!(bits_f32(&a.log.final_params), bits_f32(&b.log.final_params));
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.n_late, b.n_late);
+        assert_eq!(a.n_handovers, b.n_handovers);
+        // A different seed produces a different timeline.
+        let topts = topts_for(&cfg, 12);
+        let params = DesParams {
+            seed: 1235,
+            ..DesParams {
+                topts,
+                mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
+                straggler: StragglerPolicy::Deadline { rel: 0.9, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.5, het: 0.5 },
+                compute_scale: 1.0,
+                seed: 0,
+            }
+        };
+        let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 55);
+        let c = run_des(&mut oracle, &cfg, &params).unwrap();
+        assert_ne!(a.timeline.digest, c.timeline.digest);
+    }
+
+    #[test]
+    fn fast_waypoint_mobility_triggers_handovers() {
+        let cfg = cfg_for(4, 2);
+        let topts = topts_for(&cfg, 8);
+        let params = DesParams {
+            topts,
+            mobility: MobilityProfile::Waypoint { speed_mps: 400.0, pause_s: 0.5 },
+            straggler: StragglerPolicy::WaitForAll,
+            compute: ComputeProfile::none(),
+            compute_scale: 1.0,
+            seed: 31,
+        };
+        let mut oracle = QuadraticOracle::new_skewed(8, 8, 0.0, 1.0, 31);
+        let out = run_des(&mut oracle, &cfg, &params).unwrap();
+        assert!(
+            out.n_handovers > 0,
+            "400 m/s walkers across 4 cells must hand over at least once"
+        );
+        // Mobility must not corrupt the training loop: every iteration logged.
+        assert_eq!(out.log.train_loss.len(), 8);
+        assert_eq!(out.log.final_params.len(), 8);
+    }
+
+    #[test]
+    fn tight_deadline_produces_late_updates_and_different_params() {
+        let cfg = cfg_for(2, 4);
+        let run = |straggler: StragglerPolicy| {
+            let topts = topts_for(&cfg, 10);
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Static,
+                straggler,
+                compute: ComputeProfile::none(),
+                compute_scale: 1.0,
+                seed: 77,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 77);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let waitall = run(StragglerPolicy::WaitForAll);
+        let tight = run(StragglerPolicy::Deadline { rel: 0.5, stale_discount: 0.5 });
+        assert!(tight.n_late > 0, "a 0.5× deadline must cut off stragglers");
+        assert_ne!(
+            bits_f32(&waitall.log.final_params),
+            bits_f32(&tight.log.final_params),
+            "stale discounting must change the training trajectory"
+        );
+        // The deadline round ends no later than the wait-for-all round.
+        assert!(tight.total_time_s <= waitall.total_time_s + 1e-9);
+    }
+
+    #[test]
+    fn loose_deadline_reproduces_waitall_arithmetic() {
+        // With instantaneous compute the arrival times are deterministic,
+        // so a 2× deadline never fires before the last uplink: identical
+        // parameters, different timeline (the deadline events exist).
+        let cfg = cfg_for(2, 4);
+        let run = |straggler: StragglerPolicy| {
+            let topts = topts_for(&cfg, 8);
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Static,
+                straggler,
+                compute: ComputeProfile::none(),
+                compute_scale: 1.0,
+                seed: 5,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(10, 8, 0.0, 1.0, 5);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let waitall = run(StragglerPolicy::WaitForAll);
+        let loose = run(StragglerPolicy::Deadline { rel: 2.0, stale_discount: 0.5 });
+        assert_eq!(loose.n_late, 0);
+        assert_eq!(
+            bits_f32(&waitall.log.final_params),
+            bits_f32(&loose.log.final_params)
+        );
+        assert_ne!(waitall.timeline, loose.timeline, "deadline events enter the digest");
+    }
+
+    #[test]
+    fn invalid_setups_are_errors_not_panics() {
+        let cfg = cfg_for(2, 4);
+        // Worker count not divisible by clusters.
+        let mut oracle = QuadraticOracle::new_skewed(8, 7, 0.0, 1.0, 3);
+        let topts = TrainOptions { n_clusters: 2, ..topts_for(&cfg, 4) };
+        assert!(run_des(&mut oracle, &cfg, &static_params(topts)).is_err());
+        // Topology config disagreeing with the oracle.
+        let mut oracle = QuadraticOracle::new_skewed(8, 8, 0.0, 1.0, 3);
+        let bad_cfg = cfg_for(4, 4);
+        let topts = topts_for(&cfg, 4);
+        assert!(run_des(&mut oracle, &bad_cfg, &static_params(topts)).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Event queue of the discrete-event HCN simulator.
+//!
+//! Events are totally ordered by `(time, seq)`: `time` via IEEE-754 total
+//! order (`f64::total_cmp`) and `seq` — a monotonically increasing insertion
+//! counter — as the tiebreak, so simultaneous events process in the exact
+//! order they were scheduled. The queue is a binary min-heap; together with
+//! the per-entity RNG streams this makes the whole timeline a pure function
+//! of `(config, seed)` — the determinism contract the golden-trace suite
+//! pins down.
+//!
+//! [`TimelineRecorder`] folds every processed event into an incremental
+//! FNV-1a digest (`kind tag ‖ time bits ‖ entity ids`, in processing
+//! order). Two runs with equal [`TimelineDigest`]s executed the same events
+//! at the same simulated times in the same order.
+
+use crate::sim::result::{Fnv1a, TimelineDigest};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What happened (or is scheduled to happen) at one point in simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// MU finished computing its local gradient for `round`.
+    ComputeDone { mu: usize, cluster: usize, round: usize },
+    /// MU's sparse uplink message fully arrived at its SBS.
+    UplinkDone { mu: usize, cluster: usize, round: usize },
+    /// The cluster's straggler deadline for `round` expired.
+    Deadline { cluster: usize, round: usize },
+    /// The SBS finished broadcasting the aggregated round update.
+    RoundEnd { cluster: usize, round: usize },
+    /// The H-periodic MBS global sync (fronthaul + final broadcast) ended.
+    GlobalSync { period: usize },
+    /// An MU re-associated from cluster `from` to cluster `to` (recorded
+    /// into the timeline digest; never queued).
+    Handover { mu: usize, from: usize, to: usize },
+}
+
+impl EventKind {
+    /// Stable tag + entity fields fed to the timeline digest.
+    fn digest_fields(&self) -> (u8, [u64; 3]) {
+        match *self {
+            EventKind::ComputeDone { mu, cluster, round } => {
+                (1, [mu as u64, cluster as u64, round as u64])
+            }
+            EventKind::UplinkDone { mu, cluster, round } => {
+                (2, [mu as u64, cluster as u64, round as u64])
+            }
+            EventKind::Deadline { cluster, round } => (3, [cluster as u64, round as u64, 0]),
+            EventKind::RoundEnd { cluster, round } => (4, [cluster as u64, round as u64, 0]),
+            EventKind::GlobalSync { period } => (5, [period as u64, 0, 0]),
+            EventKind::Handover { mu, from, to } => (6, [mu as u64, from as u64, to as u64]),
+        }
+    }
+}
+
+/// One scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    /// Insertion counter — the deterministic tiebreak for equal times.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Binary min-heap of events keyed by `(time, seq)`.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at absolute simulated time `time`.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "non-finite event time {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Event { time, seq, kind }));
+    }
+
+    /// Pop the earliest event (ties broken by insertion order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Incremental FNV-1a digest over the processed-event stream (shares the
+/// [`Fnv1a`] kernel with the parameter/loss hashes in `sim::result`).
+#[derive(Clone, Debug, Default)]
+pub struct TimelineRecorder {
+    n: u64,
+    h: Fnv1a,
+}
+
+impl TimelineRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one record `(time, kind)` into the digest. The queue's internal
+    /// `seq` is deliberately excluded: record order already captures it.
+    pub fn record_kind(&mut self, time: f64, kind: &EventKind) {
+        let (tag, fields) = kind.digest_fields();
+        self.n += 1;
+        self.h.absorb([tag]);
+        self.h.absorb(time.to_bits().to_le_bytes());
+        for f in fields {
+            self.h.absorb(f.to_le_bytes());
+        }
+    }
+
+    /// Fold one queue-processed event.
+    pub fn record(&mut self, ev: &Event) {
+        self.record_kind(ev.time, &ev.kind);
+    }
+
+    pub fn digest(&self) -> TimelineDigest {
+        TimelineDigest {
+            n_events: self.n,
+            digest: self.h.finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_seq_tiebreak() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::RoundEnd { cluster: 0, round: 0 });
+        q.push(1.0, EventKind::ComputeDone { mu: 3, cluster: 0, round: 0 });
+        q.push(1.0, EventKind::ComputeDone { mu: 1, cluster: 0, round: 0 });
+        q.push(0.5, EventKind::Deadline { cluster: 1, round: 0 });
+        assert_eq!(q.len(), 4);
+        let order: Vec<Event> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0].time, 0.5);
+        // Equal times: insertion order (mu 3 was pushed before mu 1).
+        assert_eq!(order[1].kind, EventKind::ComputeDone { mu: 3, cluster: 0, round: 0 });
+        assert_eq!(order[2].kind, EventKind::ComputeDone { mu: 1, cluster: 0, round: 0 });
+        assert_eq!(order[3].time, 2.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn recorder_is_order_and_content_sensitive() {
+        let a_events = [
+            (0.5, EventKind::ComputeDone { mu: 0, cluster: 0, round: 0 }),
+            (1.0, EventKind::UplinkDone { mu: 0, cluster: 0, round: 0 }),
+        ];
+        let mut a = TimelineRecorder::new();
+        for (t, k) in &a_events {
+            a.record_kind(*t, k);
+        }
+        // Same events, same order: identical digest.
+        let mut b = TimelineRecorder::new();
+        for (t, k) in &a_events {
+            b.record_kind(*t, k);
+        }
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.digest().n_events, 2);
+        // Swapped order: different digest.
+        let mut c = TimelineRecorder::new();
+        for (t, k) in a_events.iter().rev() {
+            c.record_kind(*t, k);
+        }
+        assert_ne!(a.digest().digest, c.digest().digest);
+        // A one-ulp time change is visible.
+        let mut d = TimelineRecorder::new();
+        d.record_kind(0.5, &a_events[0].1);
+        d.record_kind(f64::from_bits(1.0f64.to_bits() + 1), &a_events[1].1);
+        assert_ne!(a.digest().digest, d.digest().digest);
+    }
+
+    #[test]
+    fn distinct_kinds_have_distinct_digests() {
+        let kinds = [
+            EventKind::ComputeDone { mu: 1, cluster: 2, round: 3 },
+            EventKind::UplinkDone { mu: 1, cluster: 2, round: 3 },
+            EventKind::Deadline { cluster: 1, round: 2 },
+            EventKind::RoundEnd { cluster: 1, round: 2 },
+            EventKind::GlobalSync { period: 1 },
+            EventKind::Handover { mu: 1, from: 2, to: 0 },
+        ];
+        let mut digests = Vec::new();
+        for k in &kinds {
+            let mut r = TimelineRecorder::new();
+            r.record_kind(1.0, k);
+            digests.push(r.digest().digest);
+        }
+        digests.sort_unstable();
+        digests.dedup();
+        assert_eq!(digests.len(), kinds.len(), "kind tags collide");
+    }
+}

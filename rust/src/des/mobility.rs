@@ -1,0 +1,193 @@
+//! MU mobility for the discrete-event simulator: random-waypoint traces
+//! over the macro disc that hosts the hexagonal cluster flower
+//! (`crate::topology::hex`).
+//!
+//! Each mobile MU owns a [`Waypoint`] walker with its own `Pcg64` stream:
+//! it repeatedly draws a destination uniform over the macro disc, walks
+//! there in a straight line at constant speed, pauses, and draws the next
+//! leg. Positions are queried at monotonically increasing simulated times
+//! (the engine samples them at global-sync boundaries), so the sequence of
+//! RNG draws — and hence the whole trace — is a pure function of the seed.
+//!
+//! Handover is the engine's job: after moving the MUs it re-associates each
+//! one to the nearest SBS centre ([`crate::topology::HexLayout::nearest_center`]).
+
+use crate::topology::Point;
+use crate::util::rng::Pcg64;
+
+/// Mobility axis of a DES scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MobilityProfile {
+    /// MUs stay at their placement positions (the analytic-model regime).
+    Static,
+    /// Random-waypoint over the macro disc.
+    Waypoint { speed_mps: f64, pause_s: f64 },
+}
+
+impl MobilityProfile {
+    pub fn is_static(&self) -> bool {
+        matches!(self, MobilityProfile::Static)
+    }
+
+    /// Short tag used in scenario names (stable across runs).
+    pub fn label(&self) -> String {
+        match self {
+            MobilityProfile::Static => "static".to_string(),
+            MobilityProfile::Waypoint { speed_mps, .. } => format!("wp{speed_mps}"),
+        }
+    }
+}
+
+/// One MU's random-waypoint walker.
+#[derive(Clone, Debug)]
+pub struct Waypoint {
+    /// Position at the start of the current leg (the last waypoint).
+    anchor: Point,
+    target: Point,
+    /// Time the walker leaves `anchor` (after the pause).
+    leg_start: f64,
+    /// Time the walker reaches `target`.
+    arrive: f64,
+    speed: f64,
+    pause: f64,
+    disc_r: f64,
+    rng: Pcg64,
+}
+
+impl Waypoint {
+    pub fn new(start: Point, speed_mps: f64, pause_s: f64, disc_r: f64, rng: Pcg64) -> Self {
+        let mut w = Self {
+            anchor: start,
+            target: start,
+            leg_start: 0.0,
+            arrive: 0.0,
+            speed: speed_mps,
+            pause: pause_s,
+            disc_r,
+            rng,
+        };
+        w.next_leg(0.0);
+        w
+    }
+
+    fn next_leg(&mut self, now: f64) {
+        // Destination uniform over the disc: r = R√u, θ ~ U[0, 2π).
+        let r = self.disc_r * self.rng.uniform().sqrt();
+        let ang = self.rng.uniform_range(0.0, std::f64::consts::TAU);
+        self.target = Point::new(r * ang.cos(), r * ang.sin());
+        self.leg_start = now + self.pause;
+        let dist = self.anchor.dist(&self.target);
+        self.arrive = if self.speed > 0.0 {
+            self.leg_start + dist / self.speed
+        } else {
+            f64::INFINITY
+        };
+    }
+
+    /// Position at absolute simulated time `t`. Calls must use
+    /// non-decreasing `t` (the walker advances through its legs and never
+    /// rewinds).
+    pub fn position_at(&mut self, t: f64) -> Point {
+        while t >= self.arrive {
+            self.anchor = self.target;
+            let arrived = self.arrive;
+            self.next_leg(arrived);
+        }
+        if t <= self.leg_start {
+            self.anchor
+        } else {
+            let frac = (t - self.leg_start) / (self.arrive - self.leg_start);
+            Point::new(
+                self.anchor.x + (self.target.x - self.anchor.x) * frac,
+                self.anchor.y + (self.target.y - self.anchor.y) * frac,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walker(seed: u64) -> Waypoint {
+        Waypoint::new(
+            Point::new(100.0, -50.0),
+            10.0,
+            2.0,
+            750.0,
+            Pcg64::new(seed, 77),
+        )
+    }
+
+    #[test]
+    fn stays_inside_disc_and_moves() {
+        let mut w = walker(1);
+        let mut moved = false;
+        let mut prev = w.position_at(0.0);
+        for i in 1..400 {
+            let p = w.position_at(i as f64 * 5.0);
+            assert!(p.norm() <= 750.0 + 1e-6, "escaped the disc: {p:?}");
+            if p.dist(&prev) > 1.0 {
+                moved = true;
+            }
+            prev = p;
+        }
+        assert!(moved, "walker never moved");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = walker(42);
+        let mut b = walker(42);
+        let mut c = walker(43);
+        let mut diverged = false;
+        for i in 0..200 {
+            let t = i as f64 * 7.5;
+            let pa = a.position_at(t);
+            let pb = b.position_at(t);
+            assert_eq!(pa, pb, "same seed must give the same trace");
+            if pa.dist(&c.position_at(t)) > 1.0 {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds should give different traces");
+    }
+
+    #[test]
+    fn pauses_at_waypoints() {
+        // Immediately after construction the walker pauses at its start.
+        let mut w = walker(7);
+        let p0 = w.position_at(0.0);
+        let p1 = w.position_at(1.0); // pause is 2 s
+        assert_eq!(p0, p1, "walker must pause before departing");
+        let p3 = w.position_at(3.0);
+        assert!(p3.dist(&p0) > 0.0, "walker must depart after the pause");
+    }
+
+    #[test]
+    fn speed_bounds_displacement() {
+        let mut w = walker(9);
+        let mut prev = w.position_at(0.0);
+        for i in 1..300 {
+            let t = i as f64;
+            let p = w.position_at(t);
+            // 10 m/s ⇒ at most 10 m per second step (pauses make it less).
+            assert!(p.dist(&prev) <= 10.0 + 1e-9, "too fast at t={t}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn zero_speed_never_moves() {
+        let mut w = Waypoint::new(
+            Point::new(5.0, 5.0),
+            0.0,
+            1.0,
+            750.0,
+            Pcg64::new(3, 3),
+        );
+        for i in 0..50 {
+            assert_eq!(w.position_at(i as f64 * 100.0), Point::new(5.0, 5.0));
+        }
+    }
+}

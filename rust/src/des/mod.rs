@@ -1,0 +1,40 @@
+//! Deterministic **discrete-event HCN simulator**.
+//!
+//! Where the analytic `wireless::latency` model prices a *time-invariant*
+//! round in closed form, this subsystem simulates the timeline event by
+//! event — MU gradient compute (heterogeneous per-MU profiles), uplink
+//! transmission timed by the `wireless::mqam`/`subcarrier` link model, SBS
+//! intra-cluster aggregation, and the H-periodic MBS global sync — which
+//! unlocks the scenarios where *time actually matters*:
+//!
+//! * **Mobility / handover** ([`mobility`]): MUs follow random-waypoint
+//!   traces over the hex flower and re-associate to the nearest SBS at
+//!   sync boundaries, repricing every link as they move.
+//! * **Straggler policies** ([`straggler`]): wait-for-all rounds vs. a
+//!   deadline cutoff with stale-update discounting.
+//!
+//! The arithmetic is *reused*, not reimplemented: rounds execute the exact
+//! compressor/optimizer operations of [`crate::fl::run_hierarchical`]
+//! (DGC uplinks, discounted-error encoders, period-H averaging), so in the
+//! static wait-for-all configuration the final parameters are bit-identical
+//! to the sequential engine and the simulated per-round wall clock agrees
+//! with the analytic model within 1e-6 relative error (cross-validated by
+//! `rust/tests/des_golden.rs`). See [`engine`] for the full determinism
+//! contract and [`events`] for the `(time, seq)`-ordered queue and the
+//! timeline digest that golden fixtures pin.
+//!
+//! Entry points: [`run_des`] (one simulation), [`run_des_cell`] (one
+//! scenario-matrix grid cell → shared [`crate::sim::result`] schema), and
+//! the `hfl des` CLI subcommand (quick/full DES scenario grids).
+
+pub mod engine;
+pub mod events;
+pub mod mobility;
+pub mod runner;
+pub mod straggler;
+
+pub use engine::{run_des, DesOutcome, DesParams};
+pub use events::{Event, EventKind, EventQueue, TimelineRecorder};
+pub use mobility::{MobilityProfile, Waypoint};
+pub use runner::run_des_cell;
+pub use straggler::{ComputeProfile, StragglerPolicy};

@@ -1,0 +1,66 @@
+//! Glue between the scenario matrix and the discrete-event engine: builds
+//! the scenario's oracle + radio config exactly like the sequential cell
+//! runner (same seed derivation, same `TrainOptions`, same config
+//! overrides), executes [`crate::des::engine::run_des`], and emits the
+//! shared [`ScenarioResult`]/[`GoldenTrace`] schema with the per-event
+//! timeline digest attached.
+
+use crate::config::Config;
+use crate::des::engine::{run_des, DesOutcome, DesParams};
+use crate::des::straggler::ComputeProfile;
+use crate::fl::QuadraticOracle;
+use crate::sim::matrix::{cell_train_options, scenario_config, MatrixOptions, MatrixScenario};
+use crate::sim::result::{Engine, ScenarioMeta, ScenarioResult};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Execute one grid cell on the discrete-event engine.
+///
+/// The first `base_seed`-derived draw seeds the oracle — identical to the
+/// sequential cell runner, so a static wait-for-all DES cell trains the
+/// exact same problem as its sequential twin (the cross-validation suite
+/// relies on this). The second draw seeds the DES per-entity streams.
+pub fn run_des_cell(
+    cfg: &Config,
+    sc: &MatrixScenario,
+    opts: &MatrixOptions,
+) -> Result<ScenarioResult> {
+    let mut stream = Pcg64::new(opts.base_seed, sc.id as u64);
+    let oracle_seed = stream.next_u64();
+    let des_seed = stream.next_u64();
+    let workers = sc.workers();
+    let mut oracle =
+        QuadraticOracle::new_skewed(opts.dim, workers, opts.grad_noise, sc.skew, oracle_seed);
+    let topts = cell_train_options(cfg, sc, opts);
+    let scfg = scenario_config(cfg, sc);
+    let params = DesParams {
+        topts,
+        mobility: sc.mobility.clone(),
+        straggler: sc.straggler.clone(),
+        compute: ComputeProfile {
+            mean_s: opts.compute_mean_s,
+            het: opts.compute_het,
+        },
+        compute_scale: sc.profile.straggler_factor,
+        seed: des_seed,
+    };
+    let outcome = run_des(&mut oracle, &scfg, &params)?;
+    Ok(result_from_outcome(sc, &outcome))
+}
+
+/// Fold a [`DesOutcome`] into the shared scenario-result schema: the
+/// standard `TrainLog` mapping plus the DES-only timeline digest.
+pub fn result_from_outcome(sc: &MatrixScenario, out: &DesOutcome) -> ScenarioResult {
+    let meta = ScenarioMeta {
+        id: sc.id,
+        name: sc.name.clone(),
+        n_clusters: sc.n_clusters,
+        workers: sc.workers(),
+        h_period: sc.h_period,
+        sparse: sc.phi.is_some(),
+    };
+    let mut result =
+        ScenarioResult::from_train_log(meta, Engine::Des, out.per_iter_s, &out.log);
+    result.trace.timeline = Some(out.timeline);
+    result
+}

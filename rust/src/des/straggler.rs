@@ -1,0 +1,143 @@
+//! Straggler policies and heterogeneous compute-time profiles for the
+//! discrete-event engine.
+//!
+//! A cluster round ends when its SBS aggregates. Under
+//! [`StragglerPolicy::WaitForAll`] that is when the last member's uplink
+//! lands (the paper's synchronous model — the slowest MU holds the round).
+//! Under [`StragglerPolicy::Deadline`] the SBS aggregates at
+//! `rel ×` the round's *expected* slowest member time (mean compute +
+//! uplink, known at round start); updates that land later are **stale**:
+//! they are folded into the first aggregation *after their transmission
+//! completes*, scaled by `stale_discount` (0 ⇒ discarded), and the late MU
+//! skips rounds until its transmission finishes. Every transmitted message — fresh or late — is charged to the
+//! MU-uplink bit budget: the airtime was spent either way.
+
+use crate::util::rng::Pcg64;
+
+/// Straggler-policy axis of a DES scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StragglerPolicy {
+    /// Synchronous: every round waits for all participating members.
+    WaitForAll,
+    /// Deadline cutoff with stale-update discounting.
+    Deadline {
+        /// Deadline as a multiple of the expected slowest member round
+        /// time; < 1 cuts off the tail.
+        rel: f64,
+        /// Weight applied to post-deadline updates at the next aggregation.
+        stale_discount: f32,
+    },
+}
+
+impl StragglerPolicy {
+    pub fn is_wait_for_all(&self) -> bool {
+        matches!(self, StragglerPolicy::WaitForAll)
+    }
+
+    /// Short tag used in scenario names (stable across runs).
+    pub fn label(&self) -> String {
+        match self {
+            StragglerPolicy::WaitForAll => "waitall".to_string(),
+            StragglerPolicy::Deadline { rel, stale_discount } => {
+                format!("dl{rel}s{stale_discount}")
+            }
+        }
+    }
+}
+
+/// Heterogeneous per-MU gradient-compute times.
+///
+/// Each MU draws a *mean* compute time once (lognormal around `mean_s` with
+/// σ = `het`), then every round it participates in draws a jittered
+/// duration around that mean. `mean_s = 0` disables computation time
+/// entirely — the regime in which the DES timeline must agree with the
+/// analytic `wireless::latency` model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeProfile {
+    pub mean_s: f64,
+    pub het: f64,
+}
+
+impl ComputeProfile {
+    /// Instantaneous compute (communication-only timelines).
+    pub fn none() -> Self {
+        Self { mean_s: 0.0, het: 0.0 }
+    }
+
+    /// Per-MU mean compute time (one draw per MU at simulation start).
+    pub fn mu_mean(&self, rng: &mut Pcg64) -> f64 {
+        if self.mean_s <= 0.0 {
+            return 0.0;
+        }
+        self.mean_s * (self.het * rng.normal()).exp()
+    }
+
+    /// One round's compute duration for an MU with per-MU mean `m`: mean-1
+    /// multiplicative jitter with an exponential tail (the occasional slow
+    /// minibatch that deadline policies exist to cut off).
+    pub fn sample_round(&self, m: f64, rng: &mut Pcg64) -> f64 {
+        if m <= 0.0 {
+            return 0.0;
+        }
+        m * (0.7 + 0.3 * rng.exponential())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable_and_distinct() {
+        assert_eq!(StragglerPolicy::WaitForAll.label(), "waitall");
+        let d = StragglerPolicy::Deadline { rel: 0.9, stale_discount: 0.5 };
+        assert_eq!(d.label(), "dl0.9s0.5");
+        assert_ne!(d.label(), StragglerPolicy::WaitForAll.label());
+    }
+
+    #[test]
+    fn zero_mean_draws_nothing_and_costs_nothing() {
+        let p = ComputeProfile::none();
+        let mut rng = Pcg64::seeded(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(p.mu_mean(&mut rng), 0.0);
+        assert_eq!(p.sample_round(0.0, &mut rng), 0.0);
+        // The RNG stream was not advanced (determinism: disabled compute
+        // consumes no draws).
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn heterogeneity_spreads_mu_means() {
+        let p = ComputeProfile { mean_s: 0.1, het: 0.8 };
+        let mut rng = Pcg64::seeded(5);
+        let means: Vec<f64> = (0..64).map(|_| p.mu_mean(&mut rng)).collect();
+        let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        assert!(min > 0.0);
+        assert!(max / min > 2.0, "lognormal spread too narrow: {min}..{max}");
+    }
+
+    #[test]
+    fn round_samples_jitter_around_mean() {
+        let p = ComputeProfile { mean_s: 0.05, het: 0.0 };
+        let mut rng = Pcg64::seeded(6);
+        let m = p.mu_mean(&mut rng);
+        assert!((m - 0.05).abs() < 1e-12);
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut above = 0usize;
+        for _ in 0..n {
+            let s = p.sample_round(m, &mut rng);
+            assert!(s >= 0.7 * m);
+            sum += s;
+            if s > m {
+                above += 1;
+            }
+        }
+        let mean = sum / n as f64;
+        assert!((mean - m).abs() / m < 0.02, "jitter mean drifted: {mean} vs {m}");
+        // The exponential tail exceeds the mean reasonably often.
+        assert!(above > n / 10);
+    }
+}

@@ -294,8 +294,10 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
     log
 }
 
-/// Consensus view: average of the cluster reference models.
-fn consensus_params(w_tilde: &[Vec<f32>]) -> Vec<f32> {
+/// Consensus view: average of the cluster reference models. Public so the
+/// discrete-event engine ([`crate::des`]) produces bit-identical consensus
+/// parameters from its own cluster states.
+pub fn consensus_params(w_tilde: &[Vec<f32>]) -> Vec<f32> {
     let n = w_tilde.len();
     let dim = w_tilde[0].len();
     let mut out = vec![0.0f32; dim];

@@ -16,7 +16,8 @@ pub mod optimizer;
 pub mod oracle;
 
 pub use algorithms::{
-    fl, hfl, run_hierarchical, sparse_fl, sparse_hfl, CommBits, TrainLog, TrainOptions,
+    consensus_params, fl, hfl, run_hierarchical, sparse_fl, sparse_hfl, CommBits, TrainLog,
+    TrainOptions,
 };
 pub use lr_schedule::LrSchedule;
 pub use optimizer::MomentumSgd;

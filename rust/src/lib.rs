@@ -24,22 +24,34 @@
 //! | module | contents |
 //! |--------|----------|
 //! | [`util`] | RNG (PCG64 + per-scenario streams), special functions (E1), quickselect, stats, CSV/JSON emitters, logger, microbench |
-//! | [`config`] | typed configuration + TOML-subset parser + paper presets (Table II) |
+//! | [`config`] | typed configuration + TOML-subset parser + paper presets (Table II) + DES knobs (`[des]`) |
 //! | [`cli`] | dependency-free argument parser and subcommand dispatch |
-//! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement |
+//! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement, nearest-SBS association |
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
 //! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation |
 //! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5, quadratic oracles (IID→non-IID skew) |
 //! | [`data`] | synthetic CIFAR-like dataset, non-shuffled partitioner, batcher |
 //! | [`runtime`] | PJRT client wrapper + HLO artifact registry (`pjrt` feature; offline stub by default) |
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
-//! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`), shared `ScenarioResult` + golden traces (`sim::result`) |
+//! | [`des`] | **discrete-event HCN simulator**: `(time, seq)`-keyed event queue, waypoint mobility + handover, straggler deadlines with stale discounting, timeline digests |
+//! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`, now with mobility × straggler axes), shared `ScenarioResult` + golden traces (`sim::result`) |
 //! | [`testing`] | minimal property-testing harness (offline substitute for proptest) |
+//!
+//! ### Determinism contract of the event-driven paths
+//!
+//! The [`des`] engine is bit-reproducible: identical event order, timeline
+//! digest, and golden trace for any `--threads` value and across reruns
+//! with the same seed (per-entity PCG64 streams; all reductions in fixed
+//! entity order, never arrival order). Its static wait-for-all
+//! configuration reproduces the sequential engine's final parameters
+//! bit-exactly and matches the analytic per-round latency within 1e-6
+//! relative error — see `rust/tests/des_golden.rs`.
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod des;
 pub mod fl;
 pub mod runtime;
 pub mod sim;

@@ -12,6 +12,11 @@
 //! hfl matrix    [--quick|--full] [--threads N] [--iters N] [--dim N]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
+//! hfl des       [--quick|--full] [--threads N] [--iters N] [--dim N]
+//!               [--compute-mean S] [--compute-het X]
+//!               [--out results/] [--write-golden F] [--check-golden F]
+//!                                  discrete-event HCN simulation grid
+//!                                  (mobility × straggler × deadline axes)
 //! ```
 
 use anyhow::{bail, Result};
@@ -23,7 +28,7 @@ use hfl::fl::{run_hierarchical, TrainOptions};
 use hfl::runtime::{ModelOracle, Runtime};
 use hfl::sim::experiments::{self, Scale};
 use hfl::sim::{fig3, fig4, fig5a, fig5b};
-use hfl::sim::{result, run_matrix, MatrixOptions, ScenarioSpec};
+use hfl::sim::{result, run_matrix, EngineSelect, MatrixOptions, ScenarioSpec};
 use hfl::topology::NetworkTopology;
 use hfl::util::logging;
 
@@ -48,14 +53,15 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args, &cfg),
         Some("table3") => cmd_table3(&args, &cfg),
         Some("matrix") => cmd_matrix(&args, &cfg),
+        Some("des") => cmd_des(&args, &cfg),
         Some(other) => {
             bail!(
-                "unknown subcommand `{other}` (try: config, topology, latency, train, table3, matrix)"
+                "unknown subcommand `{other}` (try: config, topology, latency, train, table3, matrix, des)"
             )
         }
         None => {
             eprintln!(
-                "usage: hfl <config|topology|latency|train|table3|matrix> [options]\n\
+                "usage: hfl <config|topology|latency|train|table3|matrix|des> [options]\n\
                  see rust/src/main.rs docs or README.md"
             );
             Ok(())
@@ -277,13 +283,15 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     args.finish()?;
 
     let spec = if full {
-        ScenarioSpec::full()
+        ScenarioSpec::full_with(&cfg.des)
     } else {
-        ScenarioSpec::quick()
+        ScenarioSpec::quick_with(&cfg.des)
     };
     let mut opts = MatrixOptions {
         threads,
         base_seed: cfg.training.seed,
+        compute_mean_s: cfg.des.compute_mean_s,
+        compute_het: cfg.des.compute_het,
         ..Default::default()
     };
     if let Some(it) = iters {
@@ -305,16 +313,80 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     for r in &results {
         println!("{}", r.table_row());
     }
+    write_grid_outputs(&results, &out, "matrix", write_golden, check_golden)
+}
 
-    let csv_path = format!("{out}/matrix.csv");
-    result::results_to_csv(&results).save(&csv_path)?;
-    let json_path = format!("{out}/matrix.json");
+fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
+    let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
+    let full = args.flag("full");
+    let threads = args.get_parsed_or("threads", 0usize)?;
+    let iters = args.get_parsed::<usize>("iters")?;
+    let dim = args.get_parsed::<usize>("dim")?;
+    let compute_mean = args.get_parsed_or("compute-mean", cfg.des.compute_mean_s)?;
+    let compute_het = args.get_parsed_or("compute-het", cfg.des.compute_het)?;
+    let out = args.get_or("out", "results");
+    let write_golden = args.get("write-golden").map(str::to_string);
+    let check_golden = args.get("check-golden").map(str::to_string);
+    args.finish()?;
+
+    let spec = if full {
+        ScenarioSpec::full_des(&cfg.des)
+    } else {
+        ScenarioSpec::quick_des(&cfg.des)
+    };
+    let mut opts = MatrixOptions {
+        threads,
+        base_seed: cfg.training.seed,
+        engine: EngineSelect::Des,
+        compute_mean_s: compute_mean,
+        compute_het,
+        ..Default::default()
+    };
+    if let Some(it) = iters {
+        opts.iters = it;
+    }
+    if let Some(d) = dim {
+        opts.dim = d;
+    }
+
+    let t0 = std::time::Instant::now();
+    let results = run_matrix(cfg, &spec, &opts)?;
+    println!(
+        "discrete-event grid — {} scenarios, threads={} ({}), {:.2}s wall",
+        results.len(),
+        opts.threads,
+        if opts.threads == 0 { "auto" } else { "fixed" },
+        t0.elapsed().as_secs_f64()
+    );
+    for r in &results {
+        let tl = r
+            .trace
+            .timeline
+            .map(|t| format!("  timeline {:016x} ({} events)", t.digest, t.n_events))
+            .unwrap_or_default();
+        println!("{}{tl}", r.table_row());
+    }
+    write_grid_outputs(&results, &out, "des", write_golden, check_golden)
+}
+
+/// Shared tail of the grid subcommands: CSV + JSON + golden outputs under
+/// `out/<prefix>.*`, optional fixture write, optional fixture check.
+fn write_grid_outputs(
+    results: &[hfl::sim::ScenarioResult],
+    out: &str,
+    prefix: &str,
+    write_golden: Option<String>,
+    check_golden: Option<String>,
+) -> Result<()> {
+    let csv_path = format!("{out}/{prefix}.csv");
+    result::results_to_csv(results).save(&csv_path)?;
+    let json_path = format!("{out}/{prefix}.json");
     std::fs::write(
         &json_path,
-        format!("{}\n", result::results_to_json(&results).to_string_compact()),
+        format!("{}\n", result::results_to_json(results).to_string_compact()),
     )?;
-    let golden_text = format!("{}\n", result::golden_to_json(&results).to_string_compact());
-    let golden_path = format!("{out}/matrix_golden.json");
+    let golden_text = format!("{}\n", result::golden_to_json(results).to_string_compact());
+    let golden_path = format!("{out}/{prefix}_golden.json");
     std::fs::write(&golden_path, &golden_text)?;
     println!("wrote {csv_path}, {json_path} and {golden_path}");
 
@@ -327,7 +399,7 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
         let json = hfl::util::json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
         let fixture = result::golden_from_json(&json)?;
-        let diff = result::golden_diff(&results, &fixture);
+        let diff = result::golden_diff(results, &fixture);
         if !diff.is_empty() {
             for d in &diff {
                 eprintln!("golden mismatch: {d}");

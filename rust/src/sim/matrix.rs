@@ -1,8 +1,15 @@
 //! Parallel deterministic **scenario-matrix engine**: a declarative grid
 //! ([`ScenarioSpec`]) over cluster counts × MUs-per-cell × IID/non-IID data
 //! skew × sparsity levels × aggregation period H × channel profiles
-//! (path-loss / straggler), expanded into concrete [`MatrixScenario`]s and
-//! executed across a work-stealing thread pool.
+//! (path-loss / straggler) × mobility profiles × straggler policies,
+//! expanded into concrete [`MatrixScenario`]s and executed across a
+//! work-stealing thread pool.
+//!
+//! Cells whose mobility/straggler axes sit at their defaults (static,
+//! wait-for-all) run on the sequential reference engine with analytic
+//! latency pricing; any other cell — and every cell when
+//! [`EngineSelect::Des`] is forced (`hfl des`) — runs on the discrete-event
+//! engine ([`crate::des`]), which simulates the timeline event by event.
 //!
 //! ## Determinism contract
 //!
@@ -11,22 +18,24 @@
 //!
 //! * every scenario derives its own [`Pcg64`] stream from
 //!   `(base_seed, scenario id)` — no RNG state is shared across cells;
-//! * each cell runs the sequential reference engine
-//!   ([`crate::fl::run_hierarchical`]) in isolation, so all its f32/f64
-//!   reductions happen in a fixed order;
+//! * each cell runs its engine (sequential reference engine
+//!   [`crate::fl::run_hierarchical`] or the single-threaded DES) in
+//!   isolation, so all its f32/f64 reductions happen in a fixed order;
 //! * the pool performs an *ordered reduction keyed by scenario id*: workers
 //!   publish `(id, result)` pairs and the reducer slots them back into grid
 //!   order before returning.
 //!
-//! The regression suite (`rust/tests/matrix_golden.rs`) asserts the
-//! contract by comparing [`GoldenTrace`](crate::sim::result::GoldenTrace)s
-//! from 1-thread and 8-thread runs of the same grid.
+//! The regression suites (`rust/tests/matrix_golden.rs`,
+//! `rust/tests/des_golden.rs`) assert the contract by comparing
+//! [`GoldenTrace`](crate::sim::result::GoldenTrace)s — including DES
+//! timeline digests — from 1-thread and 8-thread runs of the same grid.
 
-use crate::config::{Config, SparsityConfig};
+use crate::config::{Config, DesConfig, SparsityConfig};
+use crate::des::{MobilityProfile, StragglerPolicy};
 use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
 use crate::sim::result::{Engine, ScenarioMeta, ScenarioResult};
 use crate::util::rng::Pcg64;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::channel;
 use std::sync::Mutex;
@@ -87,11 +96,26 @@ pub struct ScenarioSpec {
     pub h_periods: Vec<usize>,
     /// Channel / straggler profiles.
     pub profiles: Vec<ChannelProfile>,
+    /// Mobility profiles. Any non-[`MobilityProfile::Static`] value routes
+    /// the cell through the discrete-event engine (`crate::des`).
+    pub mobilities: Vec<MobilityProfile>,
+    /// Straggler policies. Any non-[`StragglerPolicy::WaitForAll`] value
+    /// routes the cell through the discrete-event engine.
+    pub stragglers: Vec<StragglerPolicy>,
 }
 
 impl ScenarioSpec {
-    /// CI-sized grid: 3 × 2 × 2 × 2 × 1 × 1 = 24 scenarios.
+    /// CI-sized grid: 3 × 2 × 2 × 2 × 1 × 1 × 2 × 2 = 96 scenarios — the
+    /// classic 24 static wait-for-all cells crossed with the two DES axes
+    /// (random-waypoint mobility, deadline straggler cutoff) at their
+    /// default `[des]` knob values.
     pub fn quick() -> Self {
+        Self::quick_with(&DesConfig::default())
+    }
+
+    /// [`ScenarioSpec::quick`] with the mobility/straggler axis values
+    /// taken from a `[des]` config section.
+    pub fn quick_with(des: &DesConfig) -> Self {
         Self {
             cells: vec![1, 2, 4],
             mus_per_cell: vec![2, 4],
@@ -99,11 +123,32 @@ impl ScenarioSpec {
             phis: vec![None, Some(0.9)],
             h_periods: vec![2],
             profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![
+                MobilityProfile::Static,
+                MobilityProfile::Waypoint {
+                    speed_mps: des.waypoint_speed_mps,
+                    pause_s: des.waypoint_pause_s,
+                },
+            ],
+            stragglers: vec![
+                StragglerPolicy::WaitForAll,
+                StragglerPolicy::Deadline {
+                    rel: des.deadline_rel,
+                    stale_discount: des.stale_discount as f32,
+                },
+            ],
         }
     }
 
-    /// Full sweep: 4 × 3 × 3 × 3 × 3 × 3 = 972 scenarios.
+    /// Full sweep: 4 × 3 × 3 × 3 × 3 × 3 × 2 × 2 = 3888 scenarios.
     pub fn full() -> Self {
+        Self::full_with(&DesConfig::default())
+    }
+
+    /// [`ScenarioSpec::full`] with the mobility/straggler axis values taken
+    /// from a `[des]` config section.
+    pub fn full_with(des: &DesConfig) -> Self {
+        let quick = Self::quick_with(des);
         Self {
             cells: vec![1, 2, 4, 7],
             mus_per_cell: vec![2, 4, 8],
@@ -114,6 +159,70 @@ impl ScenarioSpec {
                 ChannelProfile::nominal(),
                 ChannelProfile::deep_fade(),
                 ChannelProfile::straggler(),
+            ],
+            mobilities: quick.mobilities,
+            stragglers: quick.stragglers,
+        }
+    }
+
+    /// DES-focused quick grid for `hfl des`: every cell runs on the
+    /// discrete-event engine (3 × 1 × 1 × 2 × 1 × 1 × 2 × 2 = 24 cells),
+    /// with the mobility/straggler axes taken from the `[des]` config.
+    pub fn quick_des(des: &DesConfig) -> Self {
+        Self {
+            cells: vec![1, 2, 4],
+            mus_per_cell: vec![4],
+            skews: vec![1.0],
+            phis: vec![None, Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![
+                MobilityProfile::Static,
+                MobilityProfile::Waypoint {
+                    speed_mps: des.waypoint_speed_mps,
+                    pause_s: des.waypoint_pause_s,
+                },
+            ],
+            stragglers: vec![
+                StragglerPolicy::WaitForAll,
+                StragglerPolicy::Deadline {
+                    rel: des.deadline_rel,
+                    stale_discount: des.stale_discount as f32,
+                },
+            ],
+        }
+    }
+
+    /// DES full sweep: 3 × 2 × 2 × 2 × 2 × 2 × 3 × 3 = 864 cells.
+    pub fn full_des(des: &DesConfig) -> Self {
+        Self {
+            cells: vec![2, 4, 7],
+            mus_per_cell: vec![4, 8],
+            skews: vec![0.0, 1.0],
+            phis: vec![None, Some(0.9)],
+            h_periods: vec![2, 4],
+            profiles: vec![ChannelProfile::nominal(), ChannelProfile::deep_fade()],
+            mobilities: vec![
+                MobilityProfile::Static,
+                MobilityProfile::Waypoint {
+                    speed_mps: des.waypoint_speed_mps,
+                    pause_s: des.waypoint_pause_s,
+                },
+                MobilityProfile::Waypoint {
+                    speed_mps: des.waypoint_speed_mps * 5.0,
+                    pause_s: des.waypoint_pause_s,
+                },
+            ],
+            stragglers: vec![
+                StragglerPolicy::WaitForAll,
+                StragglerPolicy::Deadline {
+                    rel: des.deadline_rel,
+                    stale_discount: des.stale_discount as f32,
+                },
+                StragglerPolicy::Deadline {
+                    rel: des.deadline_rel,
+                    stale_discount: 0.0,
+                },
             ],
         }
     }
@@ -126,10 +235,21 @@ impl ScenarioSpec {
             * self.phis.len()
             * self.h_periods.len()
             * self.profiles.len()
+            * self.mobilities.len()
+            * self.stragglers.len()
     }
 
     /// Expand the grid into concrete scenarios with stable, dense ids
-    /// (axis order: cells, MUs, skew, φ, H, profile — outermost first).
+    /// (axis order: cells, MUs, skew, φ, H, profile, mobility, straggler —
+    /// outermost first). The default static wait-for-all combination keeps
+    /// the historical *name format*; DES combinations append
+    /// `-<mobility>-<straggler>`. Note that ids are dense within *this*
+    /// grid: adding axis values renumbers later cells, and since a cell's
+    /// RNG stream is keyed by `(base_seed, id)`, a same-named cell in a
+    /// differently-shaped grid trains a different problem. Golden fixtures
+    /// are therefore only comparable across runs of the *same* grid shape
+    /// (the checked-in fixtures pin single-cell grids, which always get
+    /// id 0).
     pub fn expand(&self) -> Vec<MatrixScenario> {
         let mut out = Vec::with_capacity(self.n_scenarios());
         for &n_clusters in &self.cells {
@@ -138,23 +258,39 @@ impl ScenarioSpec {
                     for &phi in &self.phis {
                         for &h in &self.h_periods {
                             for profile in &self.profiles {
-                                let phi_label = match phi {
-                                    None => "dense".to_string(),
-                                    Some(p) => format!("phi{p}"),
-                                };
-                                out.push(MatrixScenario {
-                                    id: out.len(),
-                                    name: format!(
-                                        "c{n_clusters}x{mus}-h{h}-skew{skew}-{phi_label}-{}",
-                                        profile.name
-                                    ),
-                                    n_clusters,
-                                    mus_per_cluster: mus,
-                                    skew,
-                                    phi,
-                                    h_period: h,
-                                    profile: profile.clone(),
-                                });
+                                for mobility in &self.mobilities {
+                                    for straggler in &self.stragglers {
+                                        let phi_label = match phi {
+                                            None => "dense".to_string(),
+                                            Some(p) => format!("phi{p}"),
+                                        };
+                                        let mut name = format!(
+                                            "c{n_clusters}x{mus}-h{h}-skew{skew}-{phi_label}-{}",
+                                            profile.name
+                                        );
+                                        if !(mobility.is_static()
+                                            && straggler.is_wait_for_all())
+                                        {
+                                            name.push_str(&format!(
+                                                "-{}-{}",
+                                                mobility.label(),
+                                                straggler.label()
+                                            ));
+                                        }
+                                        out.push(MatrixScenario {
+                                            id: out.len(),
+                                            name,
+                                            n_clusters,
+                                            mus_per_cluster: mus,
+                                            skew,
+                                            phi,
+                                            h_period: h,
+                                            profile: profile.clone(),
+                                            mobility: mobility.clone(),
+                                            straggler: straggler.clone(),
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -178,12 +314,30 @@ pub struct MatrixScenario {
     pub phi: Option<f64>,
     pub h_period: usize,
     pub profile: ChannelProfile,
+    pub mobility: MobilityProfile,
+    pub straggler: StragglerPolicy,
 }
 
 impl MatrixScenario {
     pub fn workers(&self) -> usize {
         self.n_clusters * self.mus_per_cluster
     }
+
+    /// True when the cell needs the discrete-event engine: the analytic
+    /// latency model cannot express mobility or deadline policies.
+    pub fn is_event_driven(&self) -> bool {
+        !(self.mobility.is_static() && self.straggler.is_wait_for_all())
+    }
+}
+
+/// Which engine executes the grid cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSelect {
+    /// Sequential reference engine for static wait-for-all cells; the
+    /// discrete-event engine for cells with mobility or deadline policies.
+    Auto,
+    /// Every cell runs on the discrete-event engine (`hfl des`).
+    Des,
 }
 
 /// Execution options for a matrix run (training scale + parallelism).
@@ -202,6 +356,13 @@ pub struct MatrixOptions {
     pub grad_noise: f32,
     /// Root seed; each cell uses the `Pcg64` stream `(base_seed, id)`.
     pub base_seed: u64,
+    /// Engine dispatch policy.
+    pub engine: EngineSelect,
+    /// Mean per-round MU compute time (s) for DES cells; 0 = instantaneous
+    /// (the analytic cross-validation regime).
+    pub compute_mean_s: f64,
+    /// Lognormal heterogeneity σ of per-MU compute speed for DES cells.
+    pub compute_het: f64,
 }
 
 impl Default for MatrixOptions {
@@ -215,12 +376,17 @@ impl Default for MatrixOptions {
             eval_every: 10,
             grad_noise: 0.0,
             base_seed: 2019,
+            engine: EngineSelect::Auto,
+            compute_mean_s: 0.0,
+            compute_het: 0.5,
         }
     }
 }
 
 /// Run every cell of the grid across the pool; results come back sorted by
-/// scenario id, bit-identical for any `threads` value.
+/// scenario id, bit-identical for any `threads` value. A failing cell fails
+/// the whole run with the scenario's name attached instead of aborting the
+/// pool.
 pub fn run_matrix(
     cfg: &Config,
     spec: &ScenarioSpec,
@@ -238,21 +404,23 @@ pub fn run_matrix(
         opts.threads
     }
     .clamp(1, scenarios.len());
-    Ok(run_parallel(scenarios.len(), threads, |i| {
+    let cells = run_parallel(scenarios.len(), threads, |i| {
         run_cell(cfg, &scenarios[i], opts)
-    }))
+    })?;
+    cells
+        .into_iter()
+        .zip(&scenarios)
+        .map(|(r, sc)| r.with_context(|| format!("scenario `{}` (id {})", sc.name, sc.id)))
+        .collect()
 }
 
-/// Execute one grid cell: seed its private RNG stream, train with the
-/// sequential reference engine, price the scenario with the wireless model.
-fn run_cell(cfg: &Config, sc: &MatrixScenario, opts: &MatrixOptions) -> ScenarioResult {
-    // Per-scenario seeded stream: fully determined by (base_seed, id).
-    let mut stream = Pcg64::new(opts.base_seed, sc.id as u64);
-    let oracle_seed = stream.next_u64();
-    let workers = sc.workers();
-    let mut oracle =
-        QuadraticOracle::new_skewed(opts.dim, workers, opts.grad_noise, sc.skew, oracle_seed);
-    let topts = TrainOptions {
+/// The scenario's TrainOptions (shared by the sequential and DES paths).
+pub(crate) fn cell_train_options(
+    cfg: &Config,
+    sc: &MatrixScenario,
+    opts: &MatrixOptions,
+) -> TrainOptions {
+    TrainOptions {
         iters: opts.iters,
         peak_lr: opts.peak_lr,
         warmup_iters: opts.warmup_iters,
@@ -270,7 +438,24 @@ fn run_cell(cfg: &Config, sc: &MatrixScenario, opts: &MatrixOptions) -> Scenario
             None => SparsityConfig::dense(),
         },
         eval_every: opts.eval_every,
-    };
+    }
+}
+
+/// Execute one grid cell: seed its private RNG stream, train with the
+/// sequential reference engine (or hand off to the discrete-event engine
+/// when the cell has mobility/straggler axes or `EngineSelect::Des` forces
+/// it), price the scenario with the wireless model.
+fn run_cell(cfg: &Config, sc: &MatrixScenario, opts: &MatrixOptions) -> Result<ScenarioResult> {
+    if opts.engine == EngineSelect::Des || sc.is_event_driven() {
+        return crate::des::run_des_cell(cfg, sc, opts);
+    }
+    // Per-scenario seeded stream: fully determined by (base_seed, id).
+    let mut stream = Pcg64::new(opts.base_seed, sc.id as u64);
+    let oracle_seed = stream.next_u64();
+    let workers = sc.workers();
+    let mut oracle =
+        QuadraticOracle::new_skewed(opts.dim, workers, opts.grad_noise, sc.skew, oracle_seed);
+    let topts = cell_train_options(cfg, sc, opts);
     let log = run_hierarchical(&mut oracle, &topts);
     let meta = ScenarioMeta {
         id: sc.id,
@@ -280,15 +465,18 @@ fn run_cell(cfg: &Config, sc: &MatrixScenario, opts: &MatrixOptions) -> Scenario
         h_period: sc.h_period,
         sparse: sc.phi.is_some(),
     };
-    ScenarioResult::from_train_log(meta, Engine::Matrix, matrix_latency(cfg, sc), &log)
+    Ok(ScenarioResult::from_train_log(
+        meta,
+        Engine::Matrix,
+        matrix_latency(cfg, sc),
+        &log,
+    ))
 }
 
-/// Simulated per-iteration communication latency of one cell under its
-/// channel profile (0 for a single local MU — nothing is transmitted).
-pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
-    if sc.workers() <= 1 {
-        return 0.0;
-    }
+/// The base config with one scenario's overrides applied — shared by the
+/// analytic pricing below and the DES runner so both engines model the same
+/// radio environment.
+pub(crate) fn scenario_config(cfg: &Config, sc: &MatrixScenario) -> Config {
     let mut c = cfg.clone();
     c.radio.pathloss_exp = sc.profile.pathloss_exp;
     c.training.h_period = sc.h_period;
@@ -299,6 +487,16 @@ pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
     c.topology.n_clusters = sc.n_clusters;
     c.topology.mus_per_cluster = sc.mus_per_cluster;
     c.topology.reuse_colors = c.topology.reuse_colors.min(sc.n_clusters);
+    c
+}
+
+/// Simulated per-iteration communication latency of one cell under its
+/// channel profile (0 for a single local MU — nothing is transmitted).
+pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
+    if sc.workers() <= 1 {
+        return 0.0;
+    }
+    let c = scenario_config(cfg, sc);
     crate::sim::price_latency(&c, sc.n_clusters == 1) * sc.profile.straggler_factor
 }
 
@@ -310,14 +508,20 @@ pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
 /// it pops its own work from the front and, when empty, steals from the
 /// back of the next non-empty victim. Items are disjoint, so scheduling
 /// affects only wall-clock, never results.
-pub fn run_parallel<T, F>(n_items: usize, threads: usize, f: F) -> Vec<T>
+///
+/// A missing or duplicated reduction slot (a worker thread died, or an item
+/// was handed out twice) is reported as an error with the item index
+/// attached — it no longer aborts the whole process from inside the pool.
+pub fn run_parallel<T, F>(n_items: usize, threads: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    assert!(threads >= 1, "need at least one worker thread");
+    if threads == 0 {
+        bail!("run_parallel needs at least one worker thread");
+    }
     if n_items == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
         .map(|w| Mutex::new((w..n_items).step_by(threads).collect()))
@@ -358,13 +562,19 @@ where
     // All workers joined; senders dropped; drain and slot by index.
     let mut slots: Vec<Option<T>> = (0..n_items).map(|_| None).collect();
     while let Ok((i, v)) = rx.recv() {
-        assert!(slots[i].is_none(), "item {i} computed twice");
+        if slots[i].is_some() {
+            bail!("parallel reduction: item {i} was computed twice (scheduler bug)");
+        }
         slots[i] = Some(v);
     }
     slots
         .into_iter()
         .enumerate()
-        .map(|(i, v)| v.unwrap_or_else(|| panic!("item {i} produced no result")))
+        .map(|(i, v)| {
+            v.ok_or_else(|| {
+                anyhow!("parallel reduction: item {i} produced no result (worker thread died?)")
+            })
+        })
         .collect()
 }
 
@@ -372,6 +582,14 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn static_spec(spec: ScenarioSpec) -> ScenarioSpec {
+        ScenarioSpec {
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![StragglerPolicy::WaitForAll],
+            ..spec
+        }
+    }
 
     #[test]
     fn quick_grid_has_at_least_24_unique_scenarios() {
@@ -387,6 +605,37 @@ mod tests {
             assert_eq!(sc.id, i, "ids must be dense and in grid order");
             assert_eq!(sc.workers() % sc.n_clusters, 0);
         }
+        // The quick grid carries at least one mobility+straggler DES cell,
+        // and the classic static wait-for-all cells keep their old names.
+        assert!(
+            scenarios
+                .iter()
+                .any(|s| !s.mobility.is_static() && !s.straggler.is_wait_for_all()),
+            "quick grid must include a mobility+straggler scenario"
+        );
+        assert!(scenarios.iter().any(|s| !s.is_event_driven()));
+        for sc in &scenarios {
+            assert_eq!(
+                sc.is_event_driven(),
+                sc.name.contains("wp") || sc.name.contains("dl"),
+                "{}: DES cells (and only DES cells) carry axis suffixes",
+                sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn des_quick_grid_is_sized_and_unique() {
+        let des = crate::config::DesConfig::default();
+        for spec in [ScenarioSpec::quick_des(&des), ScenarioSpec::full_des(&des)] {
+            let scenarios = spec.expand();
+            assert_eq!(scenarios.len(), spec.n_scenarios());
+            let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), scenarios.len(), "duplicate DES scenario names");
+        }
+        assert_eq!(ScenarioSpec::quick_des(&des).n_scenarios(), 24);
     }
 
     #[test]
@@ -396,26 +645,29 @@ mod tests {
             let out = run_parallel(17, threads, |i| {
                 calls.fetch_add(1, Ordering::SeqCst);
                 i * i
-            });
+            })
+            .unwrap();
             assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
             assert_eq!(calls.load(Ordering::SeqCst), 17);
         }
         // More threads than items is fine.
-        assert_eq!(run_parallel(2, 8, |i| i), vec![0, 1]);
-        assert!(run_parallel(0, 4, |i| i).is_empty());
+        assert_eq!(run_parallel(2, 8, |i| i).unwrap(), vec![0, 1]);
+        assert!(run_parallel(0, 4, |i| i).unwrap().is_empty());
+        assert!(run_parallel(3, 0, |i| i).is_err(), "zero threads is an error");
     }
 
     #[test]
     fn tiny_matrix_is_thread_count_invariant() {
         let cfg = Config::smoke();
-        let spec = ScenarioSpec {
+        let spec = static_spec(ScenarioSpec {
             cells: vec![1, 2],
             mus_per_cell: vec![2],
             skews: vec![1.0],
             phis: vec![None, Some(0.9)],
             h_periods: vec![2],
             profiles: vec![ChannelProfile::nominal()],
-        };
+            ..ScenarioSpec::quick()
+        });
         let opts = MatrixOptions {
             iters: 10,
             dim: 16,
@@ -438,33 +690,40 @@ mod tests {
         // Different grid cells must not share RNG streams: their traces
         // (and hence final params) differ.
         let cfg = Config::smoke();
-        let spec = ScenarioSpec {
+        let spec = static_spec(ScenarioSpec {
             cells: vec![2],
             mus_per_cell: vec![2],
             skews: vec![0.0, 1.0],
             phis: vec![Some(0.9)],
             h_periods: vec![2],
             profiles: vec![ChannelProfile::nominal()],
-        };
+            ..ScenarioSpec::quick()
+        });
         let opts = MatrixOptions { threads: 1, iters: 8, dim: 12, ..Default::default() };
         let results = run_matrix(&cfg, &spec, &opts).unwrap();
         assert_eq!(results.len(), 2);
         assert_ne!(results[0].trace.params_hash, results[1].trace.params_hash);
     }
 
-    #[test]
-    fn profiles_change_latency_only() {
-        let cfg = Config::smoke();
-        let base = MatrixScenario {
+    fn static_scenario(name: &str) -> MatrixScenario {
+        MatrixScenario {
             id: 0,
-            name: "x".into(),
+            name: name.into(),
             n_clusters: 2,
             mus_per_cluster: 4,
             skew: 1.0,
             phi: Some(0.9),
             h_period: 2,
             profile: ChannelProfile::nominal(),
-        };
+            mobility: MobilityProfile::Static,
+            straggler: StragglerPolicy::WaitForAll,
+        }
+    }
+
+    #[test]
+    fn profiles_change_latency_only() {
+        let cfg = Config::smoke();
+        let base = static_scenario("x");
         let nominal = matrix_latency(&cfg, &base);
         assert!(nominal > 0.0);
         let mut fade = base.clone();
@@ -479,16 +738,29 @@ mod tests {
     #[test]
     fn single_worker_cell_transmits_nothing() {
         let cfg = Config::smoke();
-        let sc = MatrixScenario {
-            id: 0,
-            name: "solo".into(),
-            n_clusters: 1,
-            mus_per_cluster: 1,
-            skew: 0.0,
-            phi: None,
-            h_period: 2,
-            profile: ChannelProfile::nominal(),
-        };
+        let mut sc = static_scenario("solo");
+        sc.n_clusters = 1;
+        sc.mus_per_cluster = 1;
+        sc.skew = 0.0;
+        sc.phi = None;
         assert_eq!(matrix_latency(&cfg, &sc), 0.0);
+    }
+
+    #[test]
+    fn scenario_config_applies_every_override() {
+        let cfg = Config::smoke();
+        let mut sc = static_scenario("ov");
+        sc.n_clusters = 4;
+        sc.mus_per_cluster = 2;
+        sc.h_period = 6;
+        sc.profile = ChannelProfile::deep_fade();
+        let c = scenario_config(&cfg, &sc);
+        assert_eq!(c.radio.pathloss_exp, 3.6);
+        assert_eq!(c.training.h_period, 6);
+        assert_eq!(c.topology.n_clusters, 4);
+        assert_eq!(c.topology.mus_per_cluster, 2);
+        assert!(c.sparsity.enabled);
+        assert_eq!(c.sparsity.phi_mu_ul, 0.9);
+        assert!(c.topology.reuse_colors <= 4);
     }
 }

@@ -2,10 +2,13 @@
 //! and figure of the paper's evaluation (§V: latency sweeps of Fig. 3–5,
 //! the CIFAR-like training study of Fig. 6 / Table III). [`matrix`] goes
 //! wider: a declarative scenario grid (clusters × MUs × data skew ×
-//! sparsity × H × channel profiles) executed deterministically across a
-//! work-stealing thread pool. All runners emit the shared
+//! sparsity × H × channel profiles × mobility × straggler policy) executed
+//! deterministically across a work-stealing thread pool; cells with
+//! mobility or deadline axes run on the discrete-event engine
+//! ([`crate::des`]). All runners emit the shared
 //! [`result::ScenarioResult`] schema with stable JSON/CSV serialization and
-//! bit-exact [`result::GoldenTrace`] fingerprints for the regression suite.
+//! bit-exact [`result::GoldenTrace`] fingerprints (plus per-event timeline
+//! digests for DES runs) for the regression suite.
 
 pub mod experiments;
 pub mod figures;
@@ -13,8 +16,10 @@ pub mod matrix;
 pub mod result;
 
 pub use figures::{fig3, fig4, fig5a, fig5b, FigureSeries};
-pub use matrix::{run_matrix, ChannelProfile, MatrixOptions, MatrixScenario, ScenarioSpec};
-pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult};
+pub use matrix::{
+    run_matrix, ChannelProfile, EngineSelect, MatrixOptions, MatrixScenario, ScenarioSpec,
+};
+pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult, TimelineDigest};
 
 use crate::config::Config;
 use crate::wireless::{fl_latency, hfl_latency, LatencyInputs};

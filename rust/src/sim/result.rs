@@ -37,6 +37,8 @@ pub enum Engine {
     Coordinated,
     /// Scenario-matrix runner (one engine run per grid cell).
     Matrix,
+    /// Discrete-event HCN simulator (`crate::des`).
+    Des,
 }
 
 impl Engine {
@@ -45,19 +47,56 @@ impl Engine {
             Engine::Sequential => "sequential",
             Engine::Coordinated => "coordinated",
             Engine::Matrix => "matrix",
+            Engine::Des => "des",
         }
+    }
+}
+
+/// Fingerprint of a discrete-event timeline: the number of processed events
+/// and an FNV-1a digest over their `(kind, time, entities)` records in
+/// processing order. Two runs with identical digests executed the exact
+/// same event sequence at the exact same simulated times.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimelineDigest {
+    pub n_events: u64,
+    pub digest: u64,
+}
+
+/// Incremental FNV-1a 64-bit state — the one hash kernel behind parameter
+/// hashes, loss digests, and the DES timeline recorder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325) // offset basis
+    }
+
+    /// Fold bytes into the state.
+    pub fn absorb(&mut self, bytes: impl IntoIterator<Item = u8>) {
+        for b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
     }
 }
 
 /// FNV-1a 64-bit over an arbitrary byte stream — dependency-free, stable
 /// across platforms, and sensitive to every bit of every f32/f64 it sees.
 pub fn fnv1a64(bytes: impl IntoIterator<Item = u8>) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+    let mut h = Fnv1a::new();
+    h.absorb(bytes);
+    h.finish()
 }
 
 /// Hash the exact f32 bit patterns of a parameter vector.
@@ -84,6 +123,9 @@ pub struct GoldenTrace {
     pub loss_digest: u64,
     /// Total transmitted bits per link tier (value+index wire format).
     pub bits: CommBits,
+    /// Per-event timeline fingerprint — `Some` only for runs produced by
+    /// the discrete-event engine; analytic engines have no timeline.
+    pub timeline: Option<TimelineDigest>,
 }
 
 impl GoldenTrace {
@@ -92,6 +134,7 @@ impl GoldenTrace {
             params_hash: hash_params(&log.final_params),
             loss_digest: digest_loss_curve(&log.train_loss),
             bits: log.bits,
+            timeline: None,
         }
     }
 
@@ -100,19 +143,25 @@ impl GoldenTrace {
             params_hash: hash_params(&run.final_params),
             loss_digest: digest_loss_curve(&run.train_loss),
             bits: run.metrics.comm_bits(),
+            timeline: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        ObjBuilder::new()
+        let mut b = ObjBuilder::new()
             .str("params_hash", format!("{:016x}", self.params_hash))
             .str("loss_digest", format!("{:016x}", self.loss_digest))
             .num("mu_ul_bits", self.bits.mu_ul)
             .num("sbs_dl_bits", self.bits.sbs_dl)
             .num("sbs_ul_bits", self.bits.sbs_ul)
             .num("mbs_dl_bits", self.bits.mbs_dl)
-            .num("n_mu_msgs", self.bits.n_mu_msgs as f64)
-            .build()
+            .num("n_mu_msgs", self.bits.n_mu_msgs as f64);
+        if let Some(t) = self.timeline {
+            b = b
+                .str("timeline_digest", format!("{:016x}", t.digest))
+                .num("timeline_events", t.n_events as f64);
+        }
+        b.build()
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -128,6 +177,14 @@ impl GoldenTrace {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("golden trace: missing number `{key}`"))
         };
+        let timeline = if j.get("timeline_digest").is_some() {
+            Some(TimelineDigest {
+                digest: hex("timeline_digest")?,
+                n_events: num("timeline_events")? as u64,
+            })
+        } else {
+            None
+        };
         Ok(Self {
             params_hash: hex("params_hash")?,
             loss_digest: hex("loss_digest")?,
@@ -138,6 +195,7 @@ impl GoldenTrace {
                 mbs_dl: num("mbs_dl_bits")?,
                 n_mu_msgs: num("n_mu_msgs")? as u64,
             },
+            timeline,
         })
     }
 
@@ -170,6 +228,17 @@ impl GoldenTrace {
             out.push(format!(
                 "n_mu_msgs {} != {}",
                 self.bits.n_mu_msgs, other.bits.n_mu_msgs
+            ));
+        }
+        if self.timeline != other.timeline {
+            let show = |t: Option<TimelineDigest>| match t {
+                Some(t) => format!("{:016x}/{} events", t.digest, t.n_events),
+                None => "none".to_string(),
+            };
+            out.push(format!(
+                "timeline {} != {}",
+                show(self.timeline),
+                show(other.timeline)
             ));
         }
         out
@@ -451,6 +520,7 @@ mod tests {
                 mbs_dl: 42.0,
                 n_mu_msgs: 360,
             },
+            timeline: None,
         }
     }
 
@@ -514,6 +584,35 @@ mod tests {
         assert_eq!(d.len(), 2, "{d:?}");
         assert!(d[0].contains("params_hash"));
         assert!(d[1].contains("mu_ul_bits"));
+    }
+
+    #[test]
+    fn golden_trace_timeline_roundtrip_and_diff() {
+        let mut t = sample_trace();
+        t.timeline = Some(TimelineDigest {
+            n_events: 4821,
+            digest: 0x1122_3344_5566_7788,
+        });
+        let s = t.to_json().to_string_compact();
+        assert!(s.contains("timeline_digest"));
+        let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(t, back);
+        // A timeline mismatch (and a missing timeline) is reported.
+        let mut other = t;
+        other.timeline = Some(TimelineDigest {
+            n_events: 4821,
+            digest: 0x1122_3344_5566_7789,
+        });
+        let d = t.diff(&other);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("timeline"));
+        assert_eq!(t.diff(&sample_trace()).len(), 1);
+        // Fixtures without timeline fields still parse (back-compat).
+        let legacy = sample_trace();
+        let s = legacy.to_json().to_string_compact();
+        assert!(!s.contains("timeline"));
+        let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.timeline, None);
     }
 
     #[test]

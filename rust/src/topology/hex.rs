@@ -109,6 +109,21 @@ impl HexLayout {
         (m_total / self.n_colors).max(1)
     }
 
+    /// Index of the cluster centre nearest to `p` (lowest index wins ties) —
+    /// the association rule the DES mobility model uses for handover.
+    pub fn nearest_center(&self, p: &Point) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, c) in self.centers.iter().enumerate() {
+            let d = p.dist(c);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
     /// Minimum distance between same-color cluster centres (∞ if unique).
     pub fn min_cochannel_distance(&self) -> f64 {
         let mut best = f64::INFINITY;
@@ -213,6 +228,22 @@ mod tests {
         let layout = HexLayout::with_default_guard(1, 500.0);
         assert_eq!(layout.n_colors, 1);
         assert_eq!(layout.subcarriers_per_cluster(600), 600);
+    }
+
+    #[test]
+    fn nearest_center_matches_geometry() {
+        let layout = HexLayout::with_default_guard(7, 500.0);
+        // Each centre is its own nearest cluster.
+        for (i, c) in layout.centers.iter().enumerate() {
+            assert_eq!(layout.nearest_center(c), i);
+        }
+        // A point just beside a ring-1 centre associates to that cluster,
+        // not the central one.
+        let c1 = layout.centers[1];
+        let p = Point::new(c1.x + 10.0, c1.y - 10.0);
+        assert_eq!(layout.nearest_center(&p), 1);
+        // The origin belongs to the central cluster.
+        assert_eq!(layout.nearest_center(&Point::ORIGIN), 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 
 use crate::util::math::exp_int_e1;
 use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
 
 /// Inputs for a broadcast from one base station to a set of receivers.
 #[derive(Clone, Debug)]
@@ -86,19 +87,20 @@ pub fn broadcast_latency(params: &BroadcastParams, bits: f64) -> f64 {
 /// Literal Monte-Carlo simulation of Eq. (18): sample every sub-carrier's
 /// worst-user rate per slot until `bits` are delivered; average over
 /// `trials`. Exact but O(slots × M × K) — used for validation and small
-/// problems.
+/// problems. Errors (instead of spinning forever) when the link is so weak
+/// that the payload cannot be delivered within the slot budget.
 pub fn broadcast_latency_mc(
     params: &BroadcastParams,
     bits: f64,
     trials: usize,
     rng: &mut Pcg64,
-) -> f64 {
+) -> Result<f64> {
     if bits <= 0.0 {
-        return 0.0;
+        return Ok(0.0);
     }
     let cs = params.mean_snrs();
     let mut total = 0.0;
-    for _ in 0..trials {
+    for trial in 0..trials {
         let mut delivered = 0.0;
         let mut slots = 0u64;
         while delivered < bits {
@@ -114,12 +116,16 @@ pub fn broadcast_latency_mc(
             }
             delivered += slot_rate * params.slot_s;
             if slots > 100_000_000 {
-                panic!("broadcast MC did not terminate: rate ~ 0");
+                bail!(
+                    "broadcast Monte Carlo did not terminate: trial {trial} delivered only \
+                     {delivered:.3e} of {bits:.3e} bits after {slots} slots (worst-user rate ≈ 0; \
+                     check powers/distances/noise in the broadcast parameters)"
+                );
             }
         }
         total += slots as f64 * params.slot_s;
     }
-    total / trials as f64
+    Ok(total / trials as f64)
 }
 
 #[cfg(test)]
@@ -183,7 +189,7 @@ mod tests {
         let bits = 2e6; // small enough for MC
         let analytic = broadcast_latency(&p, bits);
         let mut rng = Pcg64::seeded(23);
-        let mc = broadcast_latency_mc(&p, bits, 30, &mut rng);
+        let mc = broadcast_latency_mc(&p, bits, 30, &mut rng).unwrap();
         assert!(
             (mc - analytic).abs() / analytic < 0.05,
             "mc {mc} vs analytic {analytic}"

@@ -12,9 +12,10 @@ use crate::config::{Config, SparsityConfig};
 use crate::topology::NetworkTopology;
 
 /// Payload size in bits for `q` parameters at `bits_per_param`, sparsified
-/// by φ (φ = 0 → dense, no index overhead).
+/// by φ (φ = 0 → dense, no index overhead; φ = 1 clamps to the DGC floor of
+/// a single surviving element — DGC always sends the top coordinate).
 pub fn payload_bits(q: usize, bits_per_param: u32, phi: f64) -> f64 {
-    assert!((0.0..1.0).contains(&phi), "phi={phi}");
+    assert!((0.0..=1.0).contains(&phi), "phi={phi} outside [0,1]");
     if phi == 0.0 {
         return q as f64 * bits_per_param as f64;
     }
@@ -278,6 +279,9 @@ mod tests {
         assert_eq!(payload_bits(1000, 32, 0.0), 32_000.0);
         // φ=0.99 → 10 values × (32 + 10) bits
         assert_eq!(payload_bits(1000, 32, 0.99), 10.0 * 42.0);
+        // φ=1.0 clamps to the DGC always-send-one-element floor.
+        assert_eq!(payload_bits(1000, 32, 1.0), 42.0);
+        assert_eq!(payload_bits(1, 32, 1.0), 32.0);
         // Sparse must beat dense for high φ …
         assert!(payload_bits(1_000_000, 32, 0.99) < payload_bits(1_000_000, 32, 0.0));
         // … but not necessarily for tiny φ (index overhead).

@@ -1,0 +1,208 @@
+//! Golden-trace regression suite for the discrete-event engine (`hfl des`).
+//!
+//! 1. **Thread invariance**: the 24-cell DES quick grid produces
+//!    bit-identical golden traces — parameter hashes, per-link bits, loss
+//!    digests, *and per-event timeline digests* — at 1 and 8 worker
+//!    threads, and across reruns with the same seed.
+//! 2. **Cross-validation against the analytic model**: a static
+//!    wait-for-all DES cell reproduces the sequential engine's final
+//!    parameters bit-exactly and its simulated per-iteration wall clock
+//!    matches `wireless::latency` within 1e-6 relative error.
+//! 3. **Fixture regression**: one mobility+straggler quick-grid cell is
+//!    pinned by a checked-in fixture (self-blessing on first run;
+//!    regenerate with `HFL_BLESS=1`, see `tests/fixtures/README.md`).
+
+use hfl::config::Config;
+use hfl::sim::matrix::{matrix_latency, EngineSelect, MatrixOptions, ScenarioSpec};
+use hfl::sim::{result, run_matrix};
+use std::path::PathBuf;
+
+fn des_opts(threads: usize) -> MatrixOptions {
+    MatrixOptions {
+        threads,
+        engine: EngineSelect::Des,
+        compute_mean_s: 0.02,
+        compute_het: 0.5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn des_quick_grid_bit_identical_across_thread_counts_and_reruns() {
+    let cfg = Config::smoke();
+    let spec = ScenarioSpec::quick_des(&cfg.des);
+    assert_eq!(spec.n_scenarios(), 24, "DES quick grid changed size");
+
+    let serial = run_matrix(&cfg, &spec, &des_opts(1)).unwrap();
+    let parallel = run_matrix(&cfg, &spec, &des_opts(8)).unwrap();
+    let rerun = run_matrix(&cfg, &spec, &des_opts(8)).unwrap();
+
+    assert_eq!(serial.len(), spec.n_scenarios());
+    for ((a, b), c) in serial.iter().zip(&parallel).zip(&rerun) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.name, b.name, "ordered reduction must preserve grid order");
+        assert_eq!(a.trace, b.trace, "trace diverged for `{}`", a.name);
+        assert_eq!(b.trace, c.trace, "rerun diverged for `{}`", b.name);
+        assert!(
+            a.trace.timeline.is_some(),
+            "DES results must carry a timeline digest (`{}`)",
+            a.name
+        );
+        assert_eq!(
+            a.per_iter_latency_s.to_bits(),
+            b.per_iter_latency_s.to_bits(),
+            "latency diverged for `{}`",
+            a.name
+        );
+    }
+
+    // The golden map round-trips through its JSON fixture format with the
+    // timeline fields intact.
+    let text = result::golden_to_json(&serial).to_string_compact();
+    let fixture = result::golden_from_json(&hfl::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(fixture.len(), serial.len());
+    assert!(result::golden_diff(&parallel, &fixture).is_empty());
+}
+
+#[test]
+fn static_waitall_des_cell_cross_validates_against_sequential_and_analytic() {
+    // One static wait-for-all cell, instantaneous compute: the DES must
+    // reproduce the sequential engine bit-exactly and the analytic latency
+    // within 1e-6 relative error. `iters` stays a multiple of H so the
+    // timeline is whole periods.
+    let cfg = Config::smoke();
+    let spec = ScenarioSpec {
+        mobilities: vec![hfl::des::MobilityProfile::Static],
+        stragglers: vec![hfl::des::StragglerPolicy::WaitForAll],
+        cells: vec![2],
+        mus_per_cell: vec![4],
+        skews: vec![1.0],
+        phis: vec![Some(0.9)],
+        h_periods: vec![2],
+        ..ScenarioSpec::quick_des(&cfg.des)
+    };
+    assert_eq!(spec.n_scenarios(), 1);
+    let scenarios = spec.expand();
+
+    let sequential = run_matrix(
+        &cfg,
+        &spec,
+        &MatrixOptions { threads: 1, ..Default::default() },
+    )
+    .unwrap();
+    let des = run_matrix(
+        &cfg,
+        &spec,
+        &MatrixOptions {
+            threads: 1,
+            engine: EngineSelect::Des,
+            compute_mean_s: 0.0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(sequential[0].engine.as_str(), "matrix");
+    assert_eq!(des[0].engine.as_str(), "des");
+
+    // Bit-exact arithmetic equivalence.
+    assert_eq!(
+        des[0].trace.params_hash, sequential[0].trace.params_hash,
+        "static wait-for-all DES must reproduce the sequential engine's params"
+    );
+    assert_eq!(
+        des[0].trace.loss_digest, sequential[0].trace.loss_digest,
+        "loss curves must fold identically"
+    );
+    assert_eq!(des[0].trace.bits, sequential[0].trace.bits);
+
+    // Latency cross-validation: the matrix engine prices this cell with the
+    // closed-form model; the DES timeline must agree.
+    let analytic = matrix_latency(&cfg, &scenarios[0]);
+    let simulated = des[0].per_iter_latency_s;
+    let rel = (simulated - analytic).abs() / analytic;
+    assert!(
+        rel < 1e-6,
+        "DES per-iteration latency {simulated} vs analytic {analytic} (rel err {rel})"
+    );
+}
+
+/// The mobility+straggler quick-grid cell pinned by the checked-in fixture.
+/// It comes from `ScenarioSpec::quick()` — the ordinary `hfl matrix --quick`
+/// grid — restricted to one coordinate along every axis, proving the DES
+/// axes ride the standard matrix pipeline.
+fn fixture_cell() -> (Config, ScenarioSpec, MatrixOptions) {
+    let cfg = Config::smoke();
+    let quick = ScenarioSpec::quick();
+    let spec = ScenarioSpec {
+        cells: vec![2],
+        mus_per_cell: vec![4],
+        skews: vec![1.0],
+        phis: vec![Some(0.9)],
+        h_periods: vec![2],
+        profiles: quick.profiles.clone(),
+        // Keep ONLY the non-default axis values: this cell must be
+        // event-driven (mobility + deadline straggler policy).
+        mobilities: vec![quick.mobilities.last().unwrap().clone()],
+        stragglers: vec![quick.stragglers.last().unwrap().clone()],
+    };
+    let opts = MatrixOptions {
+        threads: 1,
+        compute_mean_s: 0.02,
+        compute_het: 0.5,
+        ..Default::default()
+    };
+    (cfg, spec, opts)
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/des_quick_cell.golden.json")
+}
+
+#[test]
+fn mobility_straggler_cell_matches_checked_in_golden_fixture() {
+    let (cfg, spec, opts) = fixture_cell();
+    assert_eq!(spec.n_scenarios(), 1);
+    let scenarios = spec.expand();
+    assert!(
+        scenarios[0].is_event_driven(),
+        "fixture cell must exercise mobility + straggler axes: {}",
+        scenarios[0].name
+    );
+
+    // Thread-count invariance of the cell (Auto dispatch routes it to the
+    // DES engine because of its axes — no EngineSelect::Des needed).
+    let serial = run_matrix(&cfg, &spec, &MatrixOptions { threads: 1, ..opts.clone() }).unwrap();
+    let parallel = run_matrix(&cfg, &spec, &MatrixOptions { threads: 8, ..opts }).unwrap();
+    assert_eq!(serial[0].engine.as_str(), "des");
+    assert_eq!(serial[0].trace, parallel[0].trace, "thread count changed the cell");
+    assert!(serial[0].trace.timeline.is_some());
+
+    let path = fixture_path();
+    let golden_text = format!("{}\n", result::golden_to_json(&serial).to_string_compact());
+    let bless = std::env::var("HFL_BLESS").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &golden_text).unwrap();
+        eprintln!(
+            "des_golden: {} fixture {} — commit it to pin these traces",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        // Fall through: the freshly written fixture must round-trip through
+        // the comparison path, so bootstrap runs are never vacuous.
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let json = hfl::util::json::parse(&text)
+        .unwrap_or_else(|e| panic!("unparseable fixture {}: {e}", path.display()));
+    let fixture = result::golden_from_json(&json).unwrap();
+    let diff = result::golden_diff(&serial, &fixture);
+    assert!(
+        diff.is_empty(),
+        "DES golden traces drifted from {} — if intentional, regenerate with \
+         HFL_BLESS=1 cargo test mobility_straggler_cell (see tests/fixtures/README.md):\n  {}",
+        path.display(),
+        diff.join("\n  ")
+    );
+}

@@ -79,6 +79,8 @@ fn fixture_cell() -> (Config, ScenarioSpec, MatrixOptions) {
         phis: vec![Some(0.9)],
         h_periods: vec![2],
         profiles: vec![ChannelProfile::nominal()],
+        mobilities: vec![hfl::des::MobilityProfile::Static],
+        stragglers: vec![hfl::des::StragglerPolicy::WaitForAll],
     };
     (Config::smoke(), spec, MatrixOptions::default())
 }

@@ -8,10 +8,16 @@
 //! 2. **Properties of the sparse layer** via [`hfl::testing::Gen`]:
 //!    sparsifier mass conservation in `sparse::dgc` across φ levels, and
 //!    codec round-trip / bit-accounting invariants in `sparse::codec`.
+//! 3. **Properties of the wireless latency model**: `payload_bits`
+//!    monotonicity in φ (with the q=1 and dense edges), and latency
+//!    monotonicity in link distance and sparsity.
 
 use hfl::sparse::{DgcCompressor, SparseVec};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
 use hfl::util::rng::Pcg64;
+use hfl::wireless::broadcast::{broadcast_latency, BroadcastParams};
+use hfl::wireless::latency::payload_bits;
+use hfl::wireless::LinkParams;
 use std::cell::Cell;
 
 // --- 1. Harness meta-tests --------------------------------------------------
@@ -232,6 +238,129 @@ fn prop_codec_roundtrip_and_wire_accounting() {
         s.add_into(&mut acc, -1.0);
         if acc.iter().any(|&x| x != 0.0) {
             return Err("add_into(−1) must cancel to_dense".into());
+        }
+        Ok(())
+    });
+}
+
+// --- 3. Wireless latency-model properties -----------------------------------
+
+/// Generator for payload instances: (q, bits_per_param, φ_lo, φ_hi) with
+/// 0 < φ_lo ≤ φ_hi ≤ 1.
+struct PayloadCase;
+
+impl Gen for PayloadCase {
+    type Value = (usize, u32, f64, f64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let q = 1 + rng.uniform_usize(2_000_000);
+        let qb = [8u32, 16, 32][rng.uniform_usize(3)];
+        let a = rng.uniform_range(f64::MIN_POSITIVE, 1.0);
+        let b = rng.uniform_range(f64::MIN_POSITIVE, 1.0);
+        (q, qb, a.min(b), a.max(b))
+    }
+}
+
+#[test]
+fn prop_payload_bits_monotone_in_phi() {
+    // Among sparse levels (φ > 0, index overhead included) a higher φ never
+    // costs more bits; φ = 1 is accepted and clamps to the one-element DGC
+    // floor. (The dense φ = 0 encoding has no index overhead, so it is
+    // deliberately outside the monotone family.)
+    check(&PropConfig { cases: 200, ..Default::default() }, &PayloadCase, |&(q, qb, lo, hi)| {
+        let b_lo = payload_bits(q, qb, lo);
+        let b_hi = payload_bits(q, qb, hi);
+        if b_hi > b_lo {
+            return Err(format!("phi {lo} -> {b_lo} bits but phi {hi} -> {b_hi} bits"));
+        }
+        let floor = payload_bits(q, qb, 1.0);
+        if b_hi < floor {
+            return Err(format!("phi {hi} -> {b_hi} below the one-element floor {floor}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_payload_bits_edges() {
+    check(&PropConfig { cases: 100, ..Default::default() }, &PayloadCase, |&(q, qb, lo, hi)| {
+        // Dense is exactly Q·Q̂ for every q.
+        if payload_bits(q, qb, 0.0) != q as f64 * qb as f64 {
+            return Err(format!("dense({q}, {qb}) != Q·Q̂"));
+        }
+        // q = 1: a single parameter costs Q̂ bits at every sparsity level
+        // (one survivor, zero index bits).
+        for phi in [0.0, lo, hi, 1.0] {
+            if payload_bits(1, qb, phi) != qb as f64 {
+                return Err(format!("payload_bits(1, {qb}, {phi}) != {qb}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generator for link-monotonicity instances: (near, far, subcarriers).
+struct LinkCase;
+
+impl Gen for LinkCase {
+    type Value = (f64, f64, usize);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let a = rng.uniform_range(10.0, 750.0);
+        let b = rng.uniform_range(10.0, 750.0);
+        (a.min(b), a.max(b), 1 + rng.uniform_usize(64))
+    }
+}
+
+fn mu_link(dist: f64) -> LinkParams {
+    LinkParams {
+        p_max_w: 0.2,
+        dist_m: dist,
+        alpha: 2.8,
+        noise_w: 3e-14,
+        b0_hz: 30_000.0,
+        ber: 1e-3,
+    }
+}
+
+#[test]
+fn prop_uplink_latency_monotone_in_distance() {
+    // Farther MUs achieve no higher a rate, so shipping the same payload
+    // takes no less time (uplink latency = bits / rate).
+    check(&PropConfig { cases: 60, ..Default::default() }, &LinkCase, |&(near, far, m)| {
+        let r_near = mu_link(near).total_rate(m);
+        let r_far = mu_link(far).total_rate(m);
+        if r_far > r_near * (1.0 + 1e-9) {
+            return Err(format!("rate({far} m) = {r_far} > rate({near} m) = {r_near}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broadcast_latency_monotone_in_distance_and_sparsity() {
+    check(&PropConfig { cases: 40, ..Default::default() }, &LinkCase, |&(near, far, m)| {
+        let bp = |d: f64| BroadcastParams {
+            p_total_w: 6.3,
+            m_subcarriers: m.max(4),
+            noise_w: 3e-14,
+            b0_hz: 30_000.0,
+            alpha: 2.8,
+            dists_m: vec![near.min(200.0), d],
+            slot_s: 1e-3,
+        };
+        let q = 1_000_000;
+        // Distance: the farther worst receiver can only slow the broadcast.
+        let t_near = broadcast_latency(&bp(near), payload_bits(q, 32, 0.9));
+        let t_far = broadcast_latency(&bp(far), payload_bits(q, 32, 0.9));
+        if t_far < t_near {
+            return Err(format!("broadcast {far} m took {t_far} < {t_near} at {near} m"));
+        }
+        // Sparsity: a sparser payload on the same link is never slower.
+        let t_dense = broadcast_latency(&bp(far), payload_bits(q, 32, 0.5));
+        let t_sparse = broadcast_latency(&bp(far), payload_bits(q, 32, 0.99));
+        if t_sparse > t_dense {
+            return Err(format!("phi 0.99 took {t_sparse} > phi 0.5 {t_dense}"));
         }
         Ok(())
     });
