@@ -1,39 +1,238 @@
 //! Hot-path microbenchmarks (§Perf): every per-iteration cost on the L3
-//! training path, plus the PJRT train-step itself and the Rust-vs-XLA DGC
-//! ablation. Numbers feed EXPERIMENTS.md §Perf.
+//! training path, the full-round training step (flat-arena engine vs a
+//! faithful replica of the pre-arena seed hot path), the intra-round
+//! fan-out scaling, plus the PJRT train-step itself and the Rust-vs-XLA
+//! DGC ablation. Numbers feed EXPERIMENTS.md §Perf and — under
+//! `HFL_BENCH_JSON=1` — the committed `BENCH_micro.json` perf trajectory.
 //!
-//! `cargo bench --bench micro_hotpath`
+//! ```bash
+//! cargo bench --bench micro_hotpath              # full scale (Q = 820k)
+//! cargo bench --bench micro_hotpath -- --smoke   # tiny dim (CI harness check)
+//! HFL_BENCH_JSON=1 cargo bench --bench micro_hotpath   # + BENCH_micro.json
+//! ```
 
+use hfl::config::SparsityConfig;
+use hfl::fl::{run_hierarchical, TrainOptions};
+use hfl::fl::{LrSchedule, QuadraticOracle};
 use hfl::runtime::{Runtime, TensorArg};
 use hfl::sparse::{DgcCompressor, DiscountedError, SparseVec};
 use hfl::util::bench::{black_box, Bencher};
 use hfl::util::math::{quantile_abs, quickselect};
 use hfl::util::rng::Pcg64;
 
+/// The four-link sparsity profile used by both engine benches.
+fn bench_sparsity() -> SparsityConfig {
+    SparsityConfig {
+        enabled: true,
+        phi_mu_ul: 0.99,
+        phi_sbs_dl: 0.9,
+        phi_sbs_ul: 0.9,
+        phi_mbs_dl: 0.9,
+        beta_m: 0.2,
+        beta_s: 0.5,
+    }
+}
+
+/// Faithful replica of the **pre-arena seed hot path** (PR-2 state of
+/// `fl::run_hierarchical` + `QuadraticOracle`): scattered `Vec<Vec<f32>>`
+/// cluster state, a fresh `SparseVec` allocation per DL/UL encode,
+/// `error().to_vec()` + two `collect()`ed delta vectors per cluster per
+/// H-sync, and one Box–Muller draw per gradient coordinate even at
+/// noise = 0. This is the baseline the ≥1.5× full-round target in
+/// `BENCH_micro.json` is measured against.
+mod seed_replica {
+    use super::*;
+
+    pub struct SeedOracle {
+        dim: usize,
+        a: Vec<Vec<f32>>,
+        c: Vec<Vec<f32>>,
+        noise: f32,
+        rng: Pcg64,
+    }
+
+    impl SeedOracle {
+        pub fn new(dim: usize, workers: usize, seed: u64) -> Self {
+            let mut rng = Pcg64::new(seed, 0xACC1);
+            let shared: Vec<f32> = (0..dim).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect();
+            let a: Vec<Vec<f32>> = (0..workers)
+                .map(|_| (0..dim).map(|_| rng.uniform_range(0.5, 2.0) as f32).collect())
+                .collect();
+            let c: Vec<Vec<f32>> = (0..workers)
+                .map(|_| {
+                    (0..dim)
+                        .map(|i| shared[i] + rng.normal_ms(0.0, 3.0) as f32)
+                        .collect()
+                })
+                .collect();
+            Self {
+                dim,
+                a,
+                c,
+                noise: 0.0,
+                rng,
+            }
+        }
+
+        /// The seed `loss_grad`: the RNG is drawn per coordinate and
+        /// multiplied by `noise` even when `noise == 0`.
+        pub fn loss_grad(&mut self, worker: usize, params: &[f32], grad: &mut [f32]) -> f64 {
+            let (a, c) = (&self.a[worker], &self.c[worker]);
+            let mut loss = 0.0f64;
+            for i in 0..self.dim {
+                let d = params[i] - c[i];
+                grad[i] = a[i] * d + self.noise * self.rng.normal() as f32;
+                loss += 0.5 * (a[i] as f64) * (d as f64) * (d as f64);
+            }
+            loss
+        }
+
+        /// The seed eval objective (identical to `QuadraticOracle::objective`).
+        pub fn objective(&self, w: &[f32]) -> f64 {
+            let mut total = 0.0f64;
+            for (a, c) in self.a.iter().zip(&self.c) {
+                for i in 0..self.dim {
+                    total += 0.5 * (a[i] as f64) * ((w[i] - c[i]) as f64).powi(2);
+                }
+            }
+            total / self.a.len() as f64
+        }
+    }
+
+    /// One full training run on the seed data layout; returns a checksum
+    /// so the optimizer cannot elide the work.
+    pub fn run(dim: usize, n: usize, per_cluster: usize, iters: usize, h: usize, seed: u64) -> f64 {
+        let k_total = n * per_cluster;
+        let sp = bench_sparsity();
+        let mut oracle = SeedOracle::new(dim, k_total, seed);
+        let schedule = LrSchedule::new(0.05, 2, iters, (0.6, 0.85));
+        let mut dgc: Vec<DgcCompressor> = (0..k_total)
+            .map(|_| DgcCompressor::new(dim, 0.9, sp.phi_mu_ul))
+            .collect();
+        let init = vec![0.0f32; dim];
+        let mut w_tilde: Vec<Vec<f32>> = vec![init.clone(); n];
+        let mut dl_enc: Vec<DiscountedError> = (0..n)
+            .map(|_| DiscountedError::new(dim, sp.phi_sbs_dl, sp.beta_s as f32))
+            .collect();
+        let mut ul_enc: Vec<DiscountedError> = (0..n)
+            .map(|_| DiscountedError::new(dim, sp.phi_sbs_ul, sp.beta_s as f32))
+            .collect();
+        let mut w_tilde_global = init.clone();
+        let mut mbs_enc = DiscountedError::new(dim, sp.phi_mbs_dl, sp.beta_m as f32);
+        let mut grad = vec![0.0f32; dim];
+        let mut agg = vec![0.0f32; dim];
+        let mut msg = SparseVec::empty(dim);
+        let mut checksum = 0.0f64;
+        for t in 0..iters {
+            let lr = schedule.at(t) as f32;
+            for c in 0..n {
+                agg.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..per_cluster {
+                    let k = c * per_cluster + j;
+                    let loss = oracle.loss_grad(k, &w_tilde[c], &mut grad);
+                    checksum += loss / k_total as f64;
+                    dgc[k].step_into(&grad, &mut msg);
+                    checksum += msg.wire_bits(32);
+                    msg.add_into(&mut agg, 1.0 / per_cluster as f32);
+                }
+                for x in agg.iter_mut() {
+                    *x *= -lr;
+                }
+                let dl_msg = dl_enc[c].compress(&agg);
+                checksum += dl_msg.wire_bits(32);
+                dl_msg.add_into(&mut w_tilde[c], 1.0);
+            }
+            if n > 1 && (t + 1) % h == 0 {
+                agg.iter_mut().for_each(|x| *x = 0.0);
+                for c in 0..n {
+                    let e_dl = dl_enc[c].error().to_vec();
+                    let delta: Vec<f32> = (0..dim)
+                        .map(|i| w_tilde[c][i] + e_dl[i] - w_tilde_global[i])
+                        .collect();
+                    let ul_msg = ul_enc[c].compress(&delta);
+                    checksum += ul_msg.wire_bits(32);
+                    ul_msg.add_into(&mut agg, 1.0 / n as f32);
+                }
+                let mbs_msg = mbs_enc.compress(&agg);
+                checksum += mbs_msg.wire_bits(32);
+                mbs_msg.add_into(&mut w_tilde_global, 1.0);
+                for c in 0..n {
+                    let delta: Vec<f32> = (0..dim)
+                        .map(|i| w_tilde_global[i] - w_tilde[c][i])
+                        .collect();
+                    let dl_msg = dl_enc[c].compress(&delta);
+                    checksum += dl_msg.wire_bits(32);
+                    dl_msg.add_into(&mut w_tilde[c], 1.0);
+                }
+            }
+        }
+        // Final consensus + eval — the seed engine ended every run with
+        // these, so the replica must charge for them too (symmetric with
+        // `run_hierarchical`'s closing consensus_of_lanes + oracle.eval).
+        let mut consensus = vec![0.0f32; dim];
+        for w in &w_tilde {
+            for i in 0..dim {
+                consensus[i] += w[i] / n as f32;
+            }
+        }
+        checksum + oracle.objective(&consensus)
+    }
+}
+
+/// The flat-arena engine on the same problem shape; returns a checksum.
+fn run_arena(
+    dim: usize,
+    n: usize,
+    per_cluster: usize,
+    iters: usize,
+    h: usize,
+    inner: usize,
+    seed: u64,
+) -> f64 {
+    let opts = TrainOptions {
+        iters,
+        peak_lr: 0.05,
+        warmup_iters: 2,
+        milestones: (0.6, 0.85),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        h_period: h,
+        n_clusters: n,
+        sparsity: bench_sparsity(),
+        eval_every: 0,
+        inner_threads: inner,
+    };
+    let mut oracle = QuadraticOracle::new_skewed(dim, n * per_cluster, 0.0, 1.0, seed);
+    let log = run_hierarchical(&mut oracle, &opts);
+    log.train_loss.iter().map(|(_, l)| l).sum::<f64>() + log.bits.total()
+}
+
 fn main() {
-    let mut b = Bencher::new();
-    let q = 820_874; // MLP parameter count
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let q: usize = if smoke { 4096 } else { 820_874 }; // MLP parameter count
+    let mut b = if smoke { Bencher::quick() } else { Bencher::new() };
     let mut rng = Pcg64::seeded(99);
     let grad: Vec<f32> = (0..q).map(|_| rng.normal() as f32).collect();
 
     // --- L3 sparsification hot path -------------------------------------
     let mut dgc = DgcCompressor::new(q, 0.9, 0.99);
     let mut msg = SparseVec::empty(q);
-    b.bench("dgc.step_into (Q=820k, φ=0.99)", || {
+    b.bench(&format!("dgc.step_into (Q={q}, φ=0.99)"), || {
         dgc.step_into(black_box(&grad), &mut msg);
     });
 
     let mut enc = DiscountedError::new(q, 0.9, 0.5);
-    b.bench("discounted_error.compress (Q=820k, φ=0.9)", || {
-        black_box(enc.compress(black_box(&grad)));
+    let mut enc_out = SparseVec::empty(q);
+    b.bench(&format!("discounted_error.compress_into (Q={q}, φ=0.9)"), || {
+        enc.compress_into(black_box(&grad), &mut enc_out);
     });
 
     let mut scratch = Vec::with_capacity(q);
-    b.bench("quantile_abs (Q=820k)", || {
+    b.bench(&format!("quantile_abs (Q={q})"), || {
         black_box(quantile_abs(black_box(&grad), 0.99, &mut scratch));
     });
     let mut xs: Vec<f32> = grad.clone();
-    b.bench("quickselect k=Q/2 (Q=820k)", || {
+    b.bench(&format!("quickselect k=Q/2 (Q={q})"), || {
         xs.copy_from_slice(&grad);
         black_box(quickselect(black_box(&mut xs), q / 2));
     });
@@ -44,8 +243,51 @@ fn main() {
         sparse.add_into(black_box(&mut dense), 0.25);
     });
 
-    // --- L2/L1 through PJRT ----------------------------------------------
-    match Runtime::load_default() {
+    // --- Full-round training step: seed layout vs flat arena -------------
+    // 2 clusters × 2 MUs, 6 rounds incl. H-syncs, oracle setup + final
+    // consensus/eval charged symmetrically on both sides — the acceptance
+    // target is ≥1.5× single-thread throughput for arena vs seed at
+    // Q = 820k.
+    let (n_fr, per_fr, it_fr, h_fr) = (2usize, 2usize, 6usize, 2usize);
+    let mut round_seed = 0u64;
+    let seed_m = b.bench(&format!("full_round/seed (Q={q}, {n_fr}x{per_fr}, {it_fr} iters)"), || {
+        round_seed += 1;
+        black_box(seed_replica::run(q, n_fr, per_fr, it_fr, h_fr, round_seed));
+    });
+    let mut round_seed2 = 0u64;
+    let arena_m = b.bench(&format!("full_round/arena (Q={q}, {n_fr}x{per_fr}, {it_fr} iters)"), || {
+        round_seed2 += 1;
+        black_box(run_arena(q, n_fr, per_fr, it_fr, h_fr, 1, round_seed2));
+    });
+    println!(
+        "  → full-round speedup (arena vs seed, single-thread): {:.2}×",
+        seed_m.ns() / arena_m.ns()
+    );
+
+    // --- Intra-round fan-out scaling: 8 clusters, 1 vs 4 inner threads ---
+    let (n_sc, per_sc, it_sc) = (8usize, 1usize, 2usize);
+    let mut sc_seed = 0u64;
+    let fan1_m = b.bench(&format!("fanout/inner=1 (Q={q}, {n_sc} clusters)"), || {
+        sc_seed += 1;
+        black_box(run_arena(q, n_sc, per_sc, it_sc, 2, 1, sc_seed));
+    });
+    let mut sc_seed4 = 0u64;
+    let fan4_m = b.bench(&format!("fanout/inner=4 (Q={q}, {n_sc} clusters)"), || {
+        sc_seed4 += 1;
+        black_box(run_arena(q, n_sc, per_sc, it_sc, 2, 4, sc_seed4));
+    });
+    println!(
+        "  → per-cluster fan-out scaling (4 inner threads over {n_sc} clusters): {:.2}×",
+        fan1_m.ns() / fan4_m.ns()
+    );
+
+    // --- L2/L1 through PJRT (full scale only: tensor shapes are fixed) ---
+    let runtime = if smoke {
+        Err(anyhow::anyhow!("--smoke skips the PJRT benches"))
+    } else {
+        Runtime::load_default()
+    };
+    match runtime {
         Ok(rt) => {
             let meta = rt.model_meta("mlp").expect("mlp meta").clone();
             let exe = rt.executable("train_step_mlp").expect("compile");
@@ -105,4 +347,14 @@ fn main() {
     }
 
     print!("{}", b.summary());
+
+    // Perf-trajectory plumbing: HFL_BENCH_JSON=1 writes the stable schema
+    // (see README §Performance) to BENCH_micro.json (or the path named by
+    // HFL_BENCH_JSON_PATH) so successive PRs can diff the numbers.
+    if std::env::var("HFL_BENCH_JSON").is_ok() {
+        let path = std::env::var("HFL_BENCH_JSON_PATH")
+            .unwrap_or_else(|_| "BENCH_micro.json".to_string());
+        b.write_json(&path).expect("write bench JSON");
+        println!("wrote {path}");
+    }
 }

@@ -14,7 +14,11 @@
 //! * every MU owns private `Pcg64` streams (compute jitter, mobility) keyed
 //!   by `(seed, entity id)` — nothing is shared or order-dependent;
 //! * all floating-point reductions happen at fixed program points in fixed
-//!   (cluster-id, MU-id) order, never in event-arrival order.
+//!   (cluster-id, MU-id) order, never in event-arrival order;
+//! * the per-MU compute+uplink work inside one cluster aggregation may fan
+//!   out across threads (`TrainOptions::inner_threads`) — MUs own disjoint
+//!   state and the reduction still folds in MU-id order, so results are
+//!   bit-identical for every fan-out width.
 //!
 //! ## Equivalence to the sequential engine
 //!
@@ -37,16 +41,19 @@ use crate::config::Config;
 use crate::des::events::{EventKind, EventQueue, TimelineRecorder};
 use crate::des::mobility::{MobilityProfile, Waypoint};
 use crate::des::straggler::{ComputeProfile, StragglerPolicy};
-use crate::fl::{consensus_params, GradOracle, LrSchedule, TrainLog, TrainOptions};
+use crate::fl::{consensus_from_rows, GradOracle, LrSchedule, TrainLog, TrainOptions};
+use crate::sim::matrix::run_parallel;
 use crate::sim::result::TimelineDigest;
 use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use crate::tensor::{kernels, RowMatrix};
 use crate::topology::{HexLayout, NetworkTopology};
 use crate::util::rng::Pcg64;
 use crate::wireless::broadcast::{broadcast_latency, BroadcastParams};
 use crate::wireless::latency::payload_bits;
 use crate::wireless::{allocate_subcarriers, LinkParams};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
+use std::sync::Mutex;
 
 /// Execution parameters of one DES run, beyond the shared [`TrainOptions`].
 #[derive(Clone, Debug)]
@@ -238,10 +245,13 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     mu_mean_comp: Vec<f64>,
     comp_rng: Vec<Pcg64>,
     busy_until: Vec<f64>,
-    // Training state (mirrors `run_hierarchical`).
+    // Training state (mirrors `run_hierarchical`). DGC compressors sit
+    // behind per-MU mutexes so the intra-round fan-out can drive disjoint
+    // MUs from worker threads; the sequential path locks uncontended.
     schedule: LrSchedule,
-    dgc: Vec<DgcCompressor>,
-    w_tilde: Vec<Vec<f32>>,
+    dgc: Vec<Mutex<DgcCompressor>>,
+    /// Per-cluster reference models in one flat cache-aligned allocation.
+    w_tilde: RowMatrix,
     dl_enc: Vec<DiscountedError>,
     ul_enc: Vec<DiscountedError>,
     w_tilde_global: Vec<f32>,
@@ -264,10 +274,56 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     grad: Vec<f32>,
     agg: Vec<f32>,
     msg: SparseVec,
+    /// Reusable SBS→MU downlink message (per-round DL encode).
+    dl_out: SparseVec,
+    /// Reusable sync scratch: Δ vectors of the H-period global sync.
+    sync_delta: Vec<f32>,
+    /// Reusable sync message (UL/MBS/final-DL encodes).
+    sync_msg: SparseVec,
+    /// Fan-out width for the per-MU compute+uplink work inside one
+    /// cluster aggregation (resolved from `TrainOptions::inner_threads`).
+    inner_threads: usize,
+    /// Fan-out scratch slots, keyed by position in the current round's
+    /// participant list (empty when the fan-out cannot run). Slot buffers
+    /// grow to `dim` lazily on first use.
+    par_bufs: Vec<Mutex<ParBuf>>,
     n_handovers: u64,
     n_late: u64,
     n_skipped: u64,
     finish_time: f64,
+}
+
+/// One fan-out slot's private scratch (gradient buffer + DGC message).
+struct ParBuf {
+    grad: Vec<f32>,
+    msg: SparseVec,
+}
+
+/// Apply one MU's compressed update to the cluster aggregate — the single
+/// definition of the fresh/late policy, shared by the fan-out reduction
+/// and the sequential path so the two can never drift apart. A fresh
+/// message folds into `agg`; a late one (deadline missed) counts toward
+/// `n_late` and, when discounted, is queued as stale mass that lands once
+/// its uplink physically completes at `arrives_at`.
+#[allow(clippy::too_many_arguments)]
+fn apply_mu_message(
+    msg: &SparseVec,
+    fresh: bool,
+    denom: f32,
+    stale_discount: f32,
+    arrives_at: f64,
+    agg: &mut [f32],
+    stale_c: &mut Vec<(SparseVec, f32, f64)>,
+    n_late: &mut u64,
+) {
+    if fresh {
+        msg.add_into(agg, 1.0 / denom);
+    } else {
+        *n_late += 1;
+        if stale_discount > 0.0 {
+            stale_c.push((msg.clone(), stale_discount / denom, arrives_at));
+        }
+    }
 }
 
 impl<O: GradOracle + ?Sized> Sim<'_, O> {
@@ -276,12 +332,12 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     }
 
     fn push_eval(&mut self, round: usize) {
-        let consensus = consensus_params(&self.w_tilde);
+        let consensus = consensus_from_rows(self.w_tilde.iter_rows(), self.dim, self.n);
         let m = self.oracle.eval(&consensus);
         self.log.evals.push((round + 1, m));
     }
 
-    fn start_round(&mut self, c: usize, round: usize, t: f64) {
+    fn start_round(&mut self, c: usize, round: usize, t: f64) -> Result<()> {
         let mut participants = Vec::new();
         for &mu in &self.members[c] {
             if self.busy_until[mu] <= t {
@@ -302,10 +358,10 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         if awaiting == 0 {
             // Nothing computes this round (empty or fully-busy cluster):
             // aggregate whatever stale mass has arrived and move on.
-            self.aggregate(c, t);
+            self.aggregate(c, t)?;
             self.queue
                 .push(t + self.pricing.gamma_dl[c], EventKind::RoundEnd { cluster: c, round });
-            return;
+            return Ok(());
         }
         let parts = self.ctx[c].participants.clone();
         let mut expected_worst = 0.0f64;
@@ -326,11 +382,19 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                 self.queue.push(t + d, EventKind::Deadline { cluster: c, round });
             }
         }
+        Ok(())
     }
 
     /// Execute the cluster's round arithmetic (identical to one iteration of
     /// the sequential engine's inner loop) at the aggregation instant `t`.
-    fn aggregate(&mut self, c: usize, t: f64) {
+    ///
+    /// The per-MU compute+uplink work fans out across the
+    /// [`run_parallel`] pool when `inner_threads > 1` and the oracle has a
+    /// [`crate::fl::ParGradOracle`] view; the reduction (loss slots, bit
+    /// accounting, aggregation into `agg`) always folds sequentially in
+    /// MU-id order afterwards, so results are bit-identical to the
+    /// sequential path for any thread count.
+    fn aggregate(&mut self, c: usize, t: f64) -> Result<()> {
         let (round, parts) = {
             let ctx = &mut self.ctx[c];
             ctx.aggregated = true;
@@ -341,7 +405,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             StragglerPolicy::Deadline { stale_discount, .. } => *stale_discount,
             StragglerPolicy::WaitForAll => 0.0,
         };
-        self.agg.iter_mut().for_each(|x| *x = 0.0);
+        kernels::zero(&mut self.agg);
         // Stale updates whose transmission has landed by now apply first,
         // pre-discounted; ones still in flight go back in the queue (their
         // original order preserved) for a later aggregation.
@@ -353,43 +417,90 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                 self.stale[c].push((m, w, arrives_at));
             }
         }
-        // Fresh computation + uplink, in MU-id order — never arrival order.
-        for &mu in &parts {
-            let loss = self
-                .oracle
-                .loss_grad(mu, &self.w_tilde[c], &mut self.grad);
-            self.round_loss[round * self.k_total + mu] = loss;
-            if self.topts.weight_decay != 0.0 {
-                for i in 0..self.dim {
-                    self.grad[i] += self.topts.weight_decay * self.w_tilde[c][i];
-                }
-            }
-            self.dgc[mu].step_into(&self.grad, &mut self.msg);
-            self.log.bits.mu_ul += self.msg.wire_bits(32);
-            self.log.bits.n_mu_msgs += 1;
-            if self.ctx[c].fresh.contains(&mu) {
-                self.msg.add_into(&mut self.agg, 1.0 / denom);
-            } else {
-                // Missed the deadline: the bits were still spent; the
-                // update arrives stale once its uplink completes (or is
-                // discarded when the discount is zero).
-                self.n_late += 1;
-                if stale_discount > 0.0 {
-                    self.stale[c].push((
-                        self.msg.clone(),
-                        stale_discount / denom,
+        let wd = self.topts.weight_decay;
+        let threads = self.inner_threads.min(parts.len()).max(1);
+        let mut ran_parallel = false;
+        if threads > 1 && !self.par_bufs.is_empty() {
+            if let Some(par) = self.oracle.par_view() {
+                // Fan out: gradient + DGC compression per participant into
+                // its private buffers (disjoint MUs → disjoint state).
+                let w_row = self.w_tilde.row(c);
+                let dgc = &self.dgc;
+                let bufs = &self.par_bufs;
+                let dim = self.dim;
+                // Buffer slots are keyed by *position in this round's
+                // participant list*, not MU id: only one cluster is in
+                // flight at a time, so the number of slots that ever grow
+                // to `dim` is bounded by the largest cluster, not K.
+                let losses = run_parallel(parts.len(), threads, |idx| {
+                    let mu = parts[idx];
+                    let mut pb_guard = bufs[idx].lock().unwrap();
+                    let pb = &mut *pb_guard;
+                    if pb.grad.len() != dim {
+                        pb.grad.resize(dim, 0.0);
+                    }
+                    let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
+                    if wd != 0.0 {
+                        kernels::axpy(&mut pb.grad, w_row, wd);
+                    }
+                    dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
+                    loss
+                })
+                .with_context(|| format!("DES intra-round fan-out (cluster {c}, round {round})"))?;
+                // Ordered reduction in MU-id order — never arrival order.
+                for (idx, &mu) in parts.iter().enumerate() {
+                    self.round_loss[round * self.k_total + mu] = losses[idx];
+                    let pb = self.par_bufs[idx].lock().unwrap();
+                    self.log.bits.mu_ul += pb.msg.wire_bits(32);
+                    self.log.bits.n_mu_msgs += 1;
+                    apply_mu_message(
+                        &pb.msg,
+                        self.ctx[c].fresh.contains(&mu),
+                        denom,
+                        stale_discount,
                         self.busy_until[mu],
-                    ));
+                        &mut self.agg,
+                        &mut self.stale[c],
+                        &mut self.n_late,
+                    );
                 }
+                ran_parallel = true;
+            }
+        }
+        if !ran_parallel {
+            // Fresh computation + uplink, in MU-id order — never arrival
+            // order.
+            for &mu in &parts {
+                let loss = self
+                    .oracle
+                    .loss_grad(mu, self.w_tilde.row(c), &mut self.grad);
+                self.round_loss[round * self.k_total + mu] = loss;
+                if wd != 0.0 {
+                    kernels::axpy(&mut self.grad, self.w_tilde.row(c), wd);
+                }
+                self.dgc[mu].lock().unwrap().step_into(&self.grad, &mut self.msg);
+                self.log.bits.mu_ul += self.msg.wire_bits(32);
+                self.log.bits.n_mu_msgs += 1;
+                // Bits are spent either way; a late update lands stale
+                // once its uplink completes (or is discarded at discount 0).
+                apply_mu_message(
+                    &self.msg,
+                    self.ctx[c].fresh.contains(&mu),
+                    denom,
+                    stale_discount,
+                    self.busy_until[mu],
+                    &mut self.agg,
+                    &mut self.stale[c],
+                    &mut self.n_late,
+                );
             }
         }
         let lr = self.schedule.at(round) as f32;
-        for x in self.agg.iter_mut() {
-            *x *= -lr;
-        }
-        let dl_msg = self.dl_enc[c].compress(&self.agg);
-        self.log.bits.sbs_dl += dl_msg.wire_bits(32);
-        dl_msg.add_into(&mut self.w_tilde[c], 1.0);
+        kernels::scale(&mut self.agg, -lr);
+        self.dl_enc[c].compress_into(&self.agg, &mut self.dl_out);
+        self.log.bits.sbs_dl += self.dl_out.wire_bits(32);
+        self.dl_out.add_into(self.w_tilde.row_mut(c), 1.0);
+        Ok(())
     }
 
     /// Fold the completed iteration's per-MU losses in global MU order —
@@ -407,27 +518,30 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
 
     /// The H-periodic global sync: identical arithmetic to the sequential
     /// engine's sync block, then fronthaul + final broadcast pricing.
+    /// Allocation-free: the Δ vectors land in a reusable scratch slice and
+    /// each encoder's error buffer is borrowed in place.
     fn do_sync(&mut self, round: usize, t: f64) {
-        self.agg.iter_mut().for_each(|x| *x = 0.0);
+        kernels::zero(&mut self.agg);
         for c in 0..self.n {
-            let e_dl = self.dl_enc[c].error().to_vec();
-            let delta: Vec<f32> = (0..self.dim)
-                .map(|i| self.w_tilde[c][i] + e_dl[i] - self.w_tilde_global[i])
-                .collect();
-            let ul_msg = self.ul_enc[c].compress(&delta);
-            self.log.bits.sbs_ul += ul_msg.wire_bits(32);
-            ul_msg.add_into(&mut self.agg, 1.0 / self.n as f32);
+            // Δ_n = W̃_n + e_n − W̃ (fused; e_n borrowed, never cloned).
+            kernels::add_sub(
+                &mut self.sync_delta,
+                self.w_tilde.row(c),
+                self.dl_enc[c].error(),
+                &self.w_tilde_global,
+            );
+            self.ul_enc[c].compress_into(&self.sync_delta, &mut self.sync_msg);
+            self.log.bits.sbs_ul += self.sync_msg.wire_bits(32);
+            self.sync_msg.add_into(&mut self.agg, 1.0 / self.n as f32);
         }
-        let mbs_msg = self.mbs_enc.compress(&self.agg);
-        self.log.bits.mbs_dl += mbs_msg.wire_bits(32);
-        mbs_msg.add_into(&mut self.w_tilde_global, 1.0);
+        self.mbs_enc.compress_into(&self.agg, &mut self.sync_msg);
+        self.log.bits.mbs_dl += self.sync_msg.wire_bits(32);
+        self.sync_msg.add_into(&mut self.w_tilde_global, 1.0);
         for c in 0..self.n {
-            let delta: Vec<f32> = (0..self.dim)
-                .map(|i| self.w_tilde_global[i] - self.w_tilde[c][i])
-                .collect();
-            let dl_msg = self.dl_enc[c].compress(&delta);
-            self.log.bits.sbs_dl += dl_msg.wire_bits(32);
-            dl_msg.add_into(&mut self.w_tilde[c], 1.0);
+            kernels::sub(&mut self.sync_delta, &self.w_tilde_global, self.w_tilde.row(c));
+            self.dl_enc[c].compress_into(&self.sync_delta, &mut self.sync_msg);
+            self.log.bits.sbs_dl += self.sync_msg.wire_bits(32);
+            self.sync_msg.add_into(self.w_tilde.row_mut(c), 1.0);
         }
         // Clusters resume together once the slowest final broadcast lands.
         let t_resume =
@@ -481,7 +595,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     fn run(&mut self) -> Result<()> {
         let iters = self.topts.iters;
         for c in 0..self.n {
-            self.start_round(c, 0, 0.0);
+            self.start_round(c, 0, 0.0)?;
         }
         // Generous upper bound on legitimate events; a breach means a
         // scheduling bug, reported as an error rather than a hang.
@@ -513,7 +627,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                         }
                     };
                     if ready {
-                        self.aggregate(cluster, ev.time);
+                        self.aggregate(cluster, ev.time)?;
                         self.queue.push(
                             ev.time + self.pricing.gamma_dl[cluster],
                             EventKind::RoundEnd { cluster, round },
@@ -526,7 +640,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                         ctx.round == round && !ctx.aggregated
                     };
                     if fire {
-                        self.aggregate(cluster, ev.time);
+                        self.aggregate(cluster, ev.time)?;
                         self.queue.push(
                             ev.time + self.pricing.gamma_dl[cluster],
                             EventKind::RoundEnd { cluster, round },
@@ -557,7 +671,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                                 // every round end — move/reprice here.
                                 self.update_mobility(ev.time)?;
                             }
-                            self.start_round(cluster, round + 1, ev.time);
+                            self.start_round(cluster, round + 1, ev.time)?;
                         } else {
                             self.ctx[cluster].done = true;
                             self.finish_time = self.finish_time.max(ev.time);
@@ -572,7 +686,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                     }
                     for c in 0..self.n {
                         if round + 1 < self.topts.iters {
-                            self.start_round(c, round + 1, ev.time);
+                            self.start_round(c, round + 1, ev.time)?;
                         } else {
                             self.ctx[c].done = true;
                             self.finish_time = self.finish_time.max(ev.time);
@@ -677,11 +791,11 @@ pub fn run_des<O: GradOracle + ?Sized>(
         topts.iters,
         topts.milestones,
     );
-    let dgc: Vec<DgcCompressor> = (0..k_total)
-        .map(|_| DgcCompressor::new(dim, topts.momentum, phi_ul))
+    let dgc: Vec<Mutex<DgcCompressor>> = (0..k_total)
+        .map(|_| Mutex::new(DgcCompressor::new(dim, topts.momentum, phi_ul)))
         .collect();
     let init = oracle.init_params();
-    let w_tilde: Vec<Vec<f32>> = vec![init.clone(); n];
+    let w_tilde = RowMatrix::broadcast(&init, n);
     let dl_enc: Vec<DiscountedError> = (0..n)
         .map(|_| DiscountedError::new(dim, cluster_dl_phi, cluster_dl_beta as f32))
         .collect();
@@ -689,6 +803,32 @@ pub fn run_des<O: GradOracle + ?Sized>(
         .map(|_| DiscountedError::new(dim, phi_sul, topts.sparsity.beta_s as f32))
         .collect();
     let mbs_enc = DiscountedError::new(dim, phi_mdl, topts.sparsity.beta_m as f32);
+
+    // Intra-round fan-out width (same resolution policy as the sequential
+    // engine). Fan-out scratch slots exist only when the fan-out can
+    // actually run (the oracle has a thread-safe view); they start empty
+    // and grow to `dim` lazily, so resident memory is bounded by the
+    // largest cluster actually fanned out, not by K.
+    let inner_threads = crate::fl::algorithms::resolve_inner_threads(topts.inner_threads);
+    let par_bufs: Vec<Mutex<ParBuf>> = if inner_threads > 1 && oracle.par_view().is_some() {
+        (0..k_total)
+            .map(|_| {
+                Mutex::new(ParBuf {
+                    grad: Vec::new(),
+                    msg: SparseVec::empty(dim),
+                })
+            })
+            .collect()
+    } else {
+        if inner_threads > 1 {
+            crate::log_info!(
+                "inner_threads={} requested but this oracle has no parallel view \
+                 (shared mutable state); DES aggregations run sequentially",
+                topts.inner_threads
+            );
+        }
+        Vec::new()
+    };
 
     let pricing = price(cfg, &members, &dist_sbs, &dist_mbs, m_cluster, flat)?;
     let ctx: Vec<RoundCtx> = (0..n)
@@ -740,6 +880,11 @@ pub fn run_des<O: GradOracle + ?Sized>(
         grad: vec![0.0; dim],
         agg: vec![0.0; dim],
         msg: SparseVec::empty(dim),
+        dl_out: SparseVec::empty(dim),
+        sync_delta: vec![0.0; dim],
+        sync_msg: SparseVec::empty(dim),
+        inner_threads,
+        par_bufs,
         n_handovers: 0,
         n_late: 0,
         n_skipped: 0,
@@ -748,7 +893,7 @@ pub fn run_des<O: GradOracle + ?Sized>(
     sim.run()?;
 
     // Final consensus + eval, exactly like the sequential engine.
-    let consensus = consensus_params(&sim.w_tilde);
+    let consensus = consensus_from_rows(sim.w_tilde.iter_rows(), dim, n);
     let m = sim.oracle.eval(&consensus);
     sim.log.evals.push((topts.iters, m));
     sim.log.final_params = consensus;
@@ -768,7 +913,6 @@ pub fn run_des<O: GradOracle + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SparsityConfig;
     use crate::fl::{run_hierarchical, QuadraticOracle};
 
     fn cfg_for(n: usize, mus: usize) -> Config {
@@ -794,6 +938,7 @@ mod tests {
             n_clusters: cfg.topology.n_clusters,
             sparsity: cfg.sparsity.clone(),
             eval_every: 10,
+            inner_threads: 1,
         }
     }
 
@@ -991,6 +1136,48 @@ mod tests {
             bits_f32(&loose.log.final_params)
         );
         assert_ne!(waitall.timeline, loose.timeline, "deadline events enter the digest");
+    }
+
+    #[test]
+    fn inner_fanout_is_bit_exact_with_sequential_des() {
+        // The per-MU fan-out inside cluster aggregation must not change a
+        // single bit — including under deadlines, stale discounting, and
+        // heterogeneous compute (the RNG streams are per-entity, and every
+        // reduction folds in MU-id order).
+        let cfg = cfg_for(2, 4);
+        let run = |inner: usize| {
+            let topts = TrainOptions {
+                inner_threads: inner,
+                ..topts_for(&cfg, 12)
+            };
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
+                straggler: StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.4, het: 0.5 },
+                compute_scale: 1.0,
+                seed: 2222,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(14, 8, 0.0, 1.0, 66);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let seq = run(1);
+        for inner in [2usize, 8] {
+            let par = run(inner);
+            assert_eq!(par.timeline, seq.timeline, "inner={inner}");
+            assert_eq!(
+                bits_f32(&par.log.final_params),
+                bits_f32(&seq.log.final_params),
+                "inner={inner}"
+            );
+            assert_eq!(par.log.bits, seq.log.bits, "inner={inner}");
+            assert_eq!(par.n_late, seq.n_late);
+            assert_eq!(par.n_skipped_rounds, seq.n_skipped_rounds);
+            let curve = |l: &TrainLog| -> Vec<(usize, u64)> {
+                l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect()
+            };
+            assert_eq!(curve(&par.log), curve(&seq.log), "inner={inner}");
+        }
     }
 
     #[test]

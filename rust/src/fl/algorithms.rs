@@ -13,8 +13,8 @@
 //! ### Wiring of Algorithm 5 (see DESIGN.md §6 for the mapping)
 //!
 //! Every sparsified link is one compressor instance:
-//! * MU→SBS: [`DgcCompressor`] (momentum correction, Eq. 24–29);
-//! * SBS→MU, SBS→MBS, MBS→SBS: [`DiscountedError`] encoders on model
+//! * MU→SBS: [`DgcKernel`] (momentum correction, Eq. 24–29);
+//! * SBS→MU, SBS→MBS, MBS→SBS: [`DiscountKernel`] encoders on model
 //!   *differences* (lines 21/24–31/36–39), with discounts β_s / β_s / β_m.
 //!
 //! Key invariant maintained throughout: the SBS's "true" model is
@@ -27,11 +27,51 @@
 //! exact Algorithm 1/3 (DGC with φ=0 flushes `v` each step, so the
 //! transmitted message is the momentum-corrected gradient — identical to
 //! server-side momentum SGD).
+//!
+//! ### Memory layout: the training arena
+//!
+//! All model-sized state lives in **one contiguous cache-aligned
+//! [`TensorArena`]**, partitioned into per-cluster *lanes* plus a global
+//! sync region (offsets in units of `pad = padded(dim)`):
+//!
+//! ```text
+//! lane c (stride (6 + 2·|C_n|)·pad):        global region ((6 + N)·pad):
+//!   0  W̃_n   cluster reference model          0  W̃      global reference
+//!   1  e_n   DL encoder error                 1  e_m    MBS encoder error
+//!   2  DL encoder fold scratch                2  encoder fold scratch
+//!   3  ĝ_n   uplink aggregate                 3  sync aggregate
+//!   4  gradient scratch                       4  sync delta scratch
+//!   5  quantile scratch                       5  quantile scratch
+//!   6… per-worker DGC (u_j, v_j) pairs        6… per-cluster UL errors e_n^ul
+//! ```
+//!
+//! A round touches exactly one lane per cluster, so lanes stream through
+//! the cache front-to-back and — because lanes are disjoint `&mut` slices
+//! — the per-cluster compute+uplink blocks can fan out across the
+//! [`run_parallel`] work-stealing pool ([`TrainOptions::inner_threads`]).
+//!
+//! ### Determinism contract of the intra-round fan-out
+//!
+//! Results are **bit-identical for every `inner_threads` value**, and
+//! bit-identical to the historical sequential engine:
+//!
+//! * clusters share no mutable state within a round (disjoint lanes), so
+//!   scheduling affects wall-clock only;
+//! * the fan-out requires a [`ParGradOracle`] view — an oracle whose
+//!   gradients are pure per `(worker, params)`; oracles with shared
+//!   mutable state (noisy quadratic, PJRT batch cursors) run sequentially
+//!   regardless of `inner_threads`;
+//! * every f64 reduction (loss, per-link bits) is folded *after* the
+//!   fan-out in global worker order — the sequential engine's exact
+//!   summation order — via an ordered reduction keyed by cluster id.
 
 use super::lr_schedule::LrSchedule;
-use super::oracle::{EvalMetrics, GradOracle};
+use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use crate::config::SparsityConfig;
-use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use crate::sim::matrix::run_parallel;
+use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
+use crate::tensor::{kernels, padded, TensorArena};
+use std::sync::Mutex;
 
 /// Options shared by all four algorithms.
 #[derive(Clone, Debug)]
@@ -56,6 +96,11 @@ pub struct TrainOptions {
     pub sparsity: SparsityConfig,
     /// Evaluate every this many iterations (0 → only at the end).
     pub eval_every: usize,
+    /// Intra-round fan-out width: worker threads executing the independent
+    /// per-cluster compute+uplink blocks of each round. `1` (default) runs
+    /// sequentially; `0` uses one thread per available core. Results are
+    /// bit-identical for every value (see the module docs).
+    pub inner_threads: usize,
 }
 
 impl Default for TrainOptions {
@@ -71,6 +116,7 @@ impl Default for TrainOptions {
             n_clusters: 1,
             sparsity: SparsityConfig::dense(),
             eval_every: 0,
+            inner_threads: 1,
         }
     }
 }
@@ -159,13 +205,211 @@ pub fn sparse_hfl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -
     run_hierarchical(oracle, &opts)
 }
 
+// ---------------------------------------------------------------------------
+// Arena plumbing
+// ---------------------------------------------------------------------------
+
+/// Model-sized buffers per lane before the per-worker DGC pairs (see the
+/// module-level layout diagram).
+const LANE_HEAD: usize = 6;
+/// Model-sized buffers in the global region before the per-cluster UL
+/// encoder errors.
+const SYNC_HEAD: usize = 6;
+
+/// One cluster's arena lane plus its reusable sparse message buffers.
+struct Lane<'a> {
+    /// This cluster's slice of the training arena (stride
+    /// `(LANE_HEAD + 2·per_cluster)·pad`).
+    buf: &'a mut [f32],
+    /// Reusable MU→SBS message.
+    msg: SparseVec,
+    /// Reusable SBS→MU downlink message.
+    dl: SparseVec,
+}
+
+/// Named disjoint views into one lane, split on demand.
+struct LaneView<'b> {
+    w_tilde: &'b mut [f32],
+    dl_e: &'b mut [f32],
+    dl_folded: &'b mut [f32],
+    agg: &'b mut [f32],
+    grad: &'b mut [f32],
+    qscratch: &'b mut [f32],
+    /// Per-worker DGC pairs: worker j's `u` at `2j·pad`, `v` at
+    /// `(2j+1)·pad`, each `dim` long.
+    dgc: &'b mut [f32],
+}
+
+/// Pop one `pad`-stride chunk off the front of `rest`, trimmed to `dim`.
+fn take_chunk<'a>(rest: &mut &'a mut [f32], pad: usize, dim: usize) -> &'a mut [f32] {
+    let buf = std::mem::take(rest);
+    let (head, tail) = buf.split_at_mut(pad);
+    *rest = tail;
+    &mut head[..dim]
+}
+
+fn lane_view(mut buf: &mut [f32], pad: usize, dim: usize) -> LaneView<'_> {
+    let w_tilde = take_chunk(&mut buf, pad, dim);
+    let dl_e = take_chunk(&mut buf, pad, dim);
+    let dl_folded = take_chunk(&mut buf, pad, dim);
+    let agg = take_chunk(&mut buf, pad, dim);
+    let grad = take_chunk(&mut buf, pad, dim);
+    let qscratch = take_chunk(&mut buf, pad, dim);
+    LaneView {
+        w_tilde,
+        dl_e,
+        dl_folded,
+        agg,
+        grad,
+        qscratch,
+        dgc: buf,
+    }
+}
+
+/// Named disjoint views into the global sync region.
+struct SyncBufs<'a> {
+    w_global: &'a mut [f32],
+    mbs_e: &'a mut [f32],
+    folded: &'a mut [f32],
+    agg: &'a mut [f32],
+    delta: &'a mut [f32],
+    qscratch: &'a mut [f32],
+    /// Per-cluster SBS→MBS encoder errors, cluster c at `c·pad`.
+    ul_e: &'a mut [f32],
+}
+
+fn sync_bufs(mut buf: &mut [f32], pad: usize, dim: usize) -> SyncBufs<'_> {
+    let w_global = take_chunk(&mut buf, pad, dim);
+    let mbs_e = take_chunk(&mut buf, pad, dim);
+    let folded = take_chunk(&mut buf, pad, dim);
+    let agg = take_chunk(&mut buf, pad, dim);
+    let delta = take_chunk(&mut buf, pad, dim);
+    let qscratch = take_chunk(&mut buf, pad, dim);
+    SyncBufs {
+        w_global,
+        mbs_e,
+        folded,
+        agg,
+        delta,
+        qscratch,
+        ul_e: buf,
+    }
+}
+
+/// Uniform gradient access for [`round_cluster`]: either the exclusive
+/// sequential oracle or a shared fan-out view.
+trait RoundOracle {
+    fn lg(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64;
+}
+
+struct SeqOracle<'a, O: GradOracle + ?Sized>(&'a mut O);
+
+impl<O: GradOracle + ?Sized> RoundOracle for SeqOracle<'_, O> {
+    fn lg(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        self.0.loss_grad(worker, params, grad_out)
+    }
+}
+
+struct ParOracle<'a>(&'a dyn ParGradOracle);
+
+impl RoundOracle for ParOracle<'_> {
+    fn lg(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        self.0.loss_grad_par(worker, params, grad_out)
+    }
+}
+
+/// What one cluster's block reports back through the ordered reduction.
+/// Per-worker values are kept individually so the reducer can fold f64
+/// sums in global worker order — the sequential engine's exact order.
+struct ClusterOut {
+    losses: Vec<f64>,
+    mu_bits: Vec<f64>,
+    dl_bits: f64,
+}
+
+/// One cluster's full round block (Alg. 5 lines 7–21): per-worker gradient
+/// + DGC uplink, aggregation, DL encode, reference-model advance. Touches
+/// only this cluster's lane, so blocks of different clusters are
+/// independent — the unit of the intra-round fan-out.
+#[allow(clippy::too_many_arguments)]
+fn round_cluster<R: RoundOracle>(
+    oracle: &mut R,
+    lane: &mut Lane<'_>,
+    c: usize,
+    per_cluster: usize,
+    dim: usize,
+    pad: usize,
+    lr: f32,
+    weight_decay: f32,
+    dgc_kernel: DgcKernel,
+    dl_kernel: DiscountKernel,
+) -> ClusterOut {
+    let lv = lane_view(&mut *lane.buf, pad, dim);
+    let mut out = ClusterOut {
+        losses: Vec::with_capacity(per_cluster),
+        mu_bits: Vec::with_capacity(per_cluster),
+        dl_bits: 0.0,
+    };
+    // --- Computation and Uplink (Alg. 5 lines 7–18) ---
+    kernels::zero(lv.agg);
+    for j in 0..per_cluster {
+        let k = c * per_cluster + j;
+        let loss = oracle.lg(k, lv.w_tilde, lv.grad);
+        out.losses.push(loss);
+        // Weight decay folds into the local gradient (pre-DGC).
+        if weight_decay != 0.0 {
+            kernels::axpy(lv.grad, lv.w_tilde, weight_decay);
+        }
+        let base = 2 * j * pad;
+        let (u, v) = lv.dgc[base..base + 2 * pad].split_at_mut(pad);
+        dgc_kernel.step_into(lv.grad, &mut u[..dim], &mut v[..dim], lv.qscratch, &mut lane.msg);
+        out.mu_bits.push(lane.msg.wire_bits(32));
+        lane.msg.add_into(lv.agg, 1.0 / per_cluster as f32);
+    }
+    // --- Cluster model update + DL (lines 19–21, 35–39) ---
+    // x = −η·ĝ_n; DL message = Ω(x + β·e_n); W̃_n += sent.
+    kernels::scale(lv.agg, -lr);
+    dl_kernel.compress_into(lv.agg, lv.dl_e, lv.dl_folded, lv.qscratch, &mut lane.dl);
+    out.dl_bits = lane.dl.wire_bits(32);
+    lane.dl.add_into(lv.w_tilde, 1.0);
+    out
+}
+
+/// Consensus over the lanes (W̃_n sits at lane offset 0).
+fn consensus_of_lanes(lanes: &[Mutex<Lane<'_>>], dim: usize) -> Vec<f32> {
+    let n = lanes.len();
+    let mut out = vec![0.0f32; dim];
+    for lane in lanes {
+        let lane = lane.lock().unwrap();
+        kernels::acc_mean(&mut out, &lane.buf[..dim], n as f32);
+    }
+    out
+}
+
+/// Resolve an `inner_threads` request: `0` = one thread per available
+/// core, anything else taken literally (callers clamp to their own
+/// parallelism grain). Shared by this engine and the DES engine so both
+/// interpret [`TrainOptions::inner_threads`] identically.
+pub(crate) fn resolve_inner_threads(requested: usize) -> usize {
+    match requested {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        t => t,
+    }
+}
+
 /// The parametric engine: N clusters × (K/N) workers, DGC uplinks,
 /// discounted-error model-difference encoders on the other three links,
-/// period-H global averaging.
+/// period-H global averaging. All state lives in one cache-aligned
+/// [`TensorArena`]; the per-cluster blocks of each round fan out across
+/// [`run_parallel`] when [`TrainOptions::inner_threads`] asks for it,
+/// bit-exactly (see the module docs for the layout and the contract).
 pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
     let dim = oracle.dim();
     let k_total = oracle.n_workers();
     let n = opts.n_clusters;
+    assert!(dim > 0, "oracle dimension must be ≥ 1");
     assert!(n >= 1 && k_total >= n, "need ≥1 worker per cluster");
     assert_eq!(
         k_total % n,
@@ -193,120 +437,181 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
 
     let schedule = LrSchedule::new(opts.peak_lr, opts.warmup_iters, opts.iters, opts.milestones);
 
-    // Per-worker uplink compressors.
-    let mut dgc: Vec<DgcCompressor> = (0..k_total)
-        .map(|_| DgcCompressor::new(dim, opts.momentum, phi_ul))
-        .collect();
-    // Per-cluster reference models (what the MUs hold) and DL encoders.
-    let init = oracle.init_params();
-    let mut w_tilde: Vec<Vec<f32>> = vec![init.clone(); n];
-    let mut dl_enc: Vec<DiscountedError> = (0..n)
-        .map(|_| DiscountedError::new(dim, cluster_dl_phi, cluster_dl_beta as f32))
-        .collect();
-    // Per-cluster SBS→MBS encoders and the global reference model.
-    let mut ul_enc: Vec<DiscountedError> = (0..n)
-        .map(|_| DiscountedError::new(dim, phi_sul, opts.sparsity.beta_s as f32))
-        .collect();
-    let mut w_tilde_global = init.clone();
-    let mut mbs_enc = DiscountedError::new(dim, phi_mdl, opts.sparsity.beta_m as f32);
+    // Stateless compressor kernels; all their state lives in the arena.
+    let dgc_kernel = DgcKernel::new(opts.momentum, phi_ul);
+    let dl_kernel = DiscountKernel::new(cluster_dl_phi, cluster_dl_beta as f32);
+    let ul_kernel = DiscountKernel::new(phi_sul, opts.sparsity.beta_s as f32);
+    let mbs_kernel = DiscountKernel::new(phi_mdl, opts.sparsity.beta_m as f32);
 
-    // Scratch.
-    let mut grad = vec![0.0f32; dim];
-    let mut agg = vec![0.0f32; dim];
-    let mut msg = SparseVec::empty(dim);
+    // One contiguous arena: n per-cluster lanes + the global sync region.
+    let pad = padded(dim);
+    let lane_stride = (LANE_HEAD + 2 * per_cluster) * pad;
+    let global_len = (SYNC_HEAD + n) * pad;
+    let mut arena = TensorArena::zeroed(n * lane_stride + global_len);
+    let init = oracle.init_params();
+    let (lane_chunks, global_buf) = arena.split_lanes_mut(n, lane_stride);
+    let lanes: Vec<Mutex<Lane<'_>>> = lane_chunks
+        .into_iter()
+        .map(|buf| {
+            buf[..dim].copy_from_slice(&init);
+            Mutex::new(Lane {
+                buf,
+                msg: SparseVec::empty(dim),
+                dl: SparseVec::empty(dim),
+            })
+        })
+        .collect();
+    let g = sync_bufs(global_buf, pad, dim);
+    g.w_global.copy_from_slice(&init);
+    let mut sync_msg = SparseVec::empty(dim);
     let mut log = TrainLog::default();
+    let inner = resolve_inner_threads(opts.inner_threads).clamp(1, n);
+    // The fan-out needs a thread-safe oracle view; without one the rounds
+    // run sequentially no matter what was asked — say so once instead of
+    // silently ignoring the flag.
+    let use_par = inner > 1 && oracle.par_view().is_some();
+    if inner > 1 && !use_par {
+        crate::log_info!(
+            "inner_threads={} requested but this oracle has no parallel view \
+             (shared mutable state); running rounds sequentially",
+            opts.inner_threads
+        );
+    }
 
     for t in 0..opts.iters {
         let lr = schedule.at(t) as f32;
+
+        // --- Per-cluster compute+uplink blocks, fanned out when asked ---
+        let outs: Vec<ClusterOut> = if use_par {
+            let par = oracle.par_view().expect("par_view checked above");
+            run_parallel(n, inner, |c| {
+                let mut lane = lanes[c].lock().unwrap();
+                round_cluster(
+                    &mut ParOracle(par),
+                    &mut lane,
+                    c,
+                    per_cluster,
+                    dim,
+                    pad,
+                    lr,
+                    opts.weight_decay,
+                    dgc_kernel,
+                    dl_kernel,
+                )
+            })
+            .expect("intra-round fan-out pool failed")
+        } else {
+            let mut seq = Vec::with_capacity(n);
+            for c in 0..n {
+                let mut lane = lanes[c].lock().unwrap();
+                seq.push(round_cluster(
+                    &mut SeqOracle(&mut *oracle),
+                    &mut lane,
+                    c,
+                    per_cluster,
+                    dim,
+                    pad,
+                    lr,
+                    opts.weight_decay,
+                    dgc_kernel,
+                    dl_kernel,
+                ));
+            }
+            seq
+        };
+
+        // --- Ordered reduction: fold losses and bits in cluster order,
+        //     per-worker values individually — the sequential engine's
+        //     exact f64 summation order, independent of thread count ---
         let mut iter_loss = 0.0f64;
-
-        for c in 0..n {
-            // --- Computation and Uplink (Alg. 5 lines 7–18) ---
-            agg.iter_mut().for_each(|x| *x = 0.0);
-            for j in 0..per_cluster {
-                let k = c * per_cluster + j;
-                let loss = oracle.loss_grad(k, &w_tilde[c], &mut grad);
-                iter_loss += loss / k_total as f64;
-                // Weight decay folds into the local gradient (pre-DGC).
-                if opts.weight_decay != 0.0 {
-                    for i in 0..dim {
-                        grad[i] += opts.weight_decay * w_tilde[c][i];
-                    }
-                }
-                dgc[k].step_into(&grad, &mut msg);
-                log.bits.mu_ul += msg.wire_bits(32);
-                log.bits.n_mu_msgs += 1;
-                msg.add_into(&mut agg, 1.0 / per_cluster as f32);
+        for out in &outs {
+            for &l in &out.losses {
+                iter_loss += l / k_total as f64;
             }
-            // --- Cluster model update + DL (lines 19–21, 35–39) ---
-            // x = −η·ĝ_n; DL message = Ω(x + β·e_n); W̃_n += sent.
-            for x in agg.iter_mut() {
-                *x *= -lr;
+            for &b in &out.mu_bits {
+                log.bits.mu_ul += b;
             }
-            let dl_msg = dl_enc[c].compress(&agg);
-            log.bits.sbs_dl += dl_msg.wire_bits(32);
-            dl_msg.add_into(&mut w_tilde[c], 1.0);
+            log.bits.n_mu_msgs += out.mu_bits.len() as u64;
+            log.bits.sbs_dl += out.dl_bits;
         }
-
         log.train_loss.push((t, iter_loss));
 
         // --- Global model averaging every H iterations (lines 22–34) ---
         if n > 1 && (t + 1) % opts.h_period == 0 {
             // Each SBS ships Δ_n = W_n − W̃ = (W̃_n + e_n) − W̃ through its
-            // sparsifying UL encoder.
-            agg.iter_mut().for_each(|x| *x = 0.0);
-            for c in 0..n {
-                let e_dl = dl_enc[c].error().to_vec();
-                let delta: Vec<f32> = (0..dim)
-                    .map(|i| w_tilde[c][i] + e_dl[i] - w_tilde_global[i])
-                    .collect();
-                let ul_msg = ul_enc[c].compress(&delta);
-                log.bits.sbs_ul += ul_msg.wire_bits(32);
-                ul_msg.add_into(&mut agg, 1.0 / n as f32);
+            // sparsifying UL encoder; the encoder error is borrowed from
+            // the lane in place — no per-sync allocations.
+            kernels::zero(g.agg);
+            for (c, lane_mutex) in lanes.iter().enumerate() {
+                let mut lane = lane_mutex.lock().unwrap();
+                let lv = lane_view(&mut *lane.buf, pad, dim);
+                kernels::add_sub(g.delta, lv.w_tilde, lv.dl_e, g.w_global);
+                ul_kernel.compress_into(
+                    g.delta,
+                    &mut g.ul_e[c * pad..c * pad + dim],
+                    g.folded,
+                    g.qscratch,
+                    &mut sync_msg,
+                );
+                log.bits.sbs_ul += sync_msg.wire_bits(32);
+                sync_msg.add_into(g.agg, 1.0 / n as f32);
             }
             // MBS: broadcast Ω(mean Δ + β_m·e) and advance the global ref.
-            let mbs_msg = mbs_enc.compress(&agg);
-            log.bits.mbs_dl += mbs_msg.wire_bits(32);
-            mbs_msg.add_into(&mut w_tilde_global, 1.0);
+            mbs_kernel.compress_into(g.agg, g.mbs_e, g.folded, g.qscratch, &mut sync_msg);
+            log.bits.mbs_dl += sync_msg.wire_bits(32);
+            sync_msg.add_into(g.w_global, 1.0);
             // Each SBS pulls its reference to the new global model through
             // its DL encoder (final SBS→MU broadcast of the period).
-            for c in 0..n {
-                let delta: Vec<f32> = (0..dim)
-                    .map(|i| w_tilde_global[i] - w_tilde[c][i])
-                    .collect();
-                let dl_msg = dl_enc[c].compress(&delta);
-                log.bits.sbs_dl += dl_msg.wire_bits(32);
-                dl_msg.add_into(&mut w_tilde[c], 1.0);
+            for lane_mutex in &lanes {
+                let mut lane = lane_mutex.lock().unwrap();
+                let lv = lane_view(&mut *lane.buf, pad, dim);
+                kernels::sub(g.delta, g.w_global, lv.w_tilde);
+                dl_kernel.compress_into(g.delta, lv.dl_e, lv.dl_folded, lv.qscratch, &mut lane.dl);
+                log.bits.sbs_dl += lane.dl.wire_bits(32);
+                lane.dl.add_into(lv.w_tilde, 1.0);
             }
         }
 
         if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-            let consensus = consensus_params(&w_tilde);
+            let consensus = consensus_of_lanes(&lanes, dim);
             let m = oracle.eval(&consensus);
             log.evals.push((t + 1, m));
         }
     }
 
-    let consensus = consensus_params(&w_tilde);
+    let consensus = consensus_of_lanes(&lanes, dim);
     let m = oracle.eval(&consensus);
     log.evals.push((opts.iters, m));
     log.final_params = consensus;
     log
 }
 
-/// Consensus view: average of the cluster reference models. Public so the
-/// discrete-event engine ([`crate::des`]) produces bit-identical consensus
-/// parameters from its own cluster states.
+/// Consensus view: average of the cluster reference models, folded in row
+/// order with the reference `out[i] += w[i]/n` arithmetic. Arena-backed
+/// engines feed their row slices straight in; public so the discrete-event
+/// engine ([`crate::des`]) produces bit-identical consensus parameters
+/// from its own cluster state.
+pub fn consensus_from_rows<'a>(
+    rows: impl Iterator<Item = &'a [f32]>,
+    dim: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; dim];
+    let mut count = 0usize;
+    for w in rows {
+        kernels::acc_mean(&mut out, &w[..dim], n as f32);
+        count += 1;
+    }
+    assert_eq!(count, n, "consensus row count mismatch");
+    out
+}
+
+/// Consensus over `Vec<Vec<f32>>` cluster state — compat wrapper around
+/// [`consensus_from_rows`].
 pub fn consensus_params(w_tilde: &[Vec<f32>]) -> Vec<f32> {
     let n = w_tilde.len();
     let dim = w_tilde[0].len();
-    let mut out = vec![0.0f32; dim];
-    for w in w_tilde {
-        for i in 0..dim {
-            out[i] += w[i] / n as f32;
-        }
-    }
-    out
+    consensus_from_rows(w_tilde.iter().map(|w| w.as_slice()), dim, n)
 }
 
 #[cfg(test)]
@@ -326,6 +631,7 @@ mod tests {
             n_clusters: 1,
             sparsity: SparsityConfig::dense(),
             eval_every: 0,
+            inner_threads: 1,
         }
     }
 
@@ -522,5 +828,54 @@ mod tests {
         // evals at 5, 10, 15, 20 + final (20 duplicates allowed)
         assert!(log.evals.len() >= 4);
         assert_eq!(log.evals[0].0, 5);
+    }
+
+    #[test]
+    fn inner_fanout_is_bit_exact_with_sequential() {
+        // Same problem, inner_threads ∈ {1, 3, 8}: final params, per-link
+        // bits, the loss curve, and every eval must be bit-identical.
+        let run = |threads: usize| {
+            let mut o = opts(40);
+            o.n_clusters = 4;
+            o.h_period = 4;
+            o.eval_every = 10;
+            o.weight_decay = 1e-3;
+            o.inner_threads = threads;
+            o.sparsity = SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.8,
+                ..SparsityConfig::default()
+            };
+            let mut oracle = QuadraticOracle::new_skewed(24, 8, 0.0, 1.0, 321);
+            run_hierarchical(&mut oracle, &o)
+        };
+        let base = run(1);
+        for threads in [3usize, 8] {
+            let other = run(threads);
+            let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits_of(&base.final_params),
+                bits_of(&other.final_params),
+                "threads={threads}"
+            );
+            assert_eq!(base.bits, other.bits, "threads={threads}");
+            let curve = |l: &TrainLog| {
+                l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect::<Vec<_>>()
+            };
+            assert_eq!(curve(&base), curve(&other), "threads={threads}");
+            assert_eq!(base.evals.len(), other.evals.len());
+            for ((ia, ma), (ib, mb)) in base.evals.iter().zip(&other.evals) {
+                assert_eq!(ia, ib);
+                assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn consensus_from_rows_matches_vec_variant() {
+        let w = vec![vec![1.0f32, 2.0, 3.0], vec![-1.0, 0.5, 9.0], vec![0.1, 0.2, 0.3]];
+        let a = consensus_params(&w);
+        let b = consensus_from_rows(w.iter().map(|r| r.as_slice()), 3, 3);
+        assert_eq!(a, b);
     }
 }

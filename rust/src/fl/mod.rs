@@ -16,9 +16,9 @@ pub mod optimizer;
 pub mod oracle;
 
 pub use algorithms::{
-    consensus_params, fl, hfl, run_hierarchical, sparse_fl, sparse_hfl, CommBits, TrainLog,
-    TrainOptions,
+    consensus_from_rows, consensus_params, fl, hfl, run_hierarchical, sparse_fl, sparse_hfl,
+    CommBits, TrainLog, TrainOptions,
 };
 pub use lr_schedule::LrSchedule;
 pub use optimizer::MomentumSgd;
-pub use oracle::{EvalMetrics, GradOracle, QuadraticOracle};
+pub use oracle::{EvalMetrics, GradOracle, ParGradOracle, QuadraticOracle};

@@ -36,6 +36,27 @@ pub trait GradOracle {
 
     /// Initial parameter vector (deterministic per oracle).
     fn init_params(&mut self) -> Vec<f32>;
+
+    /// A thread-safe view for the deterministic intra-round fan-out, or
+    /// `None` when this oracle's `loss_grad` depends on shared mutable
+    /// state (e.g. a cross-worker noise RNG) and therefore must be called
+    /// sequentially. When `Some`, the view's
+    /// [`ParGradOracle::loss_grad_par`] must return bit-identical results
+    /// to [`GradOracle::loss_grad`] for every `(worker, params)` —
+    /// engines rely on that to keep parallel rounds bit-exact with the
+    /// sequential reference path.
+    fn par_view(&self) -> Option<&dyn ParGradOracle> {
+        None
+    }
+}
+
+/// Shared-reference gradient access for the intra-round fan-out: pure per
+/// `(worker, params)` — no batch cursors, no shared RNG — so any number of
+/// threads may call it concurrently in any order without changing results.
+pub trait ParGradOracle: Sync {
+    /// Worker `k`'s loss and gradient at `params`, bit-identical to the
+    /// sequential [`GradOracle::loss_grad`] of the same oracle.
+    fn loss_grad_par(&self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64;
 }
 
 /// Strongly convex synthetic problem: worker k owns
@@ -136,6 +157,13 @@ impl GradOracle for QuadraticOracle {
     }
 
     fn loss_grad(&mut self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        if self.noise == 0.0 {
+            // Noise-free fast path: skip the per-coordinate RNG draw (which
+            // would be multiplied by 0 and add ±0.0 — value-identical). At
+            // CIFAR-10 scale the Box–Muller draws dominated the seed
+            // engine's gradient cost.
+            return self.loss_grad_par(worker, params, grad_out);
+        }
         assert_eq!(params.len(), self.dim);
         assert_eq!(grad_out.len(), self.dim);
         let (a, c) = (&self.a[worker], &self.c[worker]);
@@ -161,6 +189,31 @@ impl GradOracle for QuadraticOracle {
 
     fn init_params(&mut self) -> Vec<f32> {
         vec![0.0; self.dim]
+    }
+
+    fn par_view(&self) -> Option<&dyn ParGradOracle> {
+        // Noisy gradients draw from one RNG shared across workers, so call
+        // order matters — only the deterministic oracle is fan-out-safe.
+        if self.noise == 0.0 {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl ParGradOracle for QuadraticOracle {
+    fn loss_grad_par(&self, worker: usize, params: &[f32], grad_out: &mut [f32]) -> f64 {
+        assert_eq!(params.len(), self.dim);
+        assert_eq!(grad_out.len(), self.dim);
+        let (a, c) = (&self.a[worker], &self.c[worker]);
+        let mut loss = 0.0f64;
+        for i in 0..self.dim {
+            let d = params[i] - c[i];
+            grad_out[i] = a[i] * d;
+            loss += 0.5 * (a[i] as f64) * (d as f64) * (d as f64);
+        }
+        loss
     }
 }
 
@@ -244,6 +297,27 @@ mod tests {
             assert_eq!(la, lb);
             assert_eq!(ga, gb);
         }
+    }
+
+    #[test]
+    fn par_view_is_bit_identical_to_sequential_when_noise_free() {
+        let mut o = QuadraticOracle::new_skewed(12, 3, 0.0, 0.8, 99);
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (mut g_seq, mut g_par) = (vec![0.0f32; 12], vec![0.0f32; 12]);
+        for k in 0..3 {
+            let l_par = o
+                .par_view()
+                .expect("noise-free oracle must be fan-out-safe")
+                .loss_grad_par(k, &w, &mut g_par);
+            let l_seq = o.loss_grad(k, &w, &mut g_seq);
+            assert_eq!(l_seq.to_bits(), l_par.to_bits(), "worker {k} loss");
+            for i in 0..12 {
+                assert_eq!(g_seq[i].to_bits(), g_par[i].to_bits(), "worker {k} coord {i}");
+            }
+        }
+        // A noisy oracle shares one RNG across workers → no parallel view.
+        let noisy = QuadraticOracle::new(4, 2, 0.1, 5);
+        assert!(noisy.par_view().is_none());
     }
 
     #[test]

@@ -28,8 +28,9 @@
 //! | [`cli`] | dependency-free argument parser and subcommand dispatch |
 //! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement, nearest-SBS association |
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
-//! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation |
-//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5, quadratic oracles (IID→non-IID skew) |
+//! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation — owning structs + stateless arena kernels |
+//! | [`tensor`] | **flat tensor arenas + fused kernels**: one cache-aligned allocation for all per-cluster/per-worker hot-path state, bit-exact axpy/scale/scatter kernels, lane splitting for the intra-round fan-out |
+//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 on the tensor arena with deterministic per-cluster fan-out (`inner_threads`), quadratic oracles (IID→non-IID skew) |
 //! | [`data`] | synthetic CIFAR-like dataset, non-shuffled partitioner, batcher |
 //! | [`runtime`] | PJRT client wrapper + HLO artifact registry (`pjrt` feature; offline stub by default) |
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
@@ -46,6 +47,13 @@
 //! configuration reproduces the sequential engine's final parameters
 //! bit-exactly and matches the analytic per-round latency within 1e-6
 //! relative error — see `rust/tests/des_golden.rs`.
+//!
+//! The same contract covers the **intra-round fan-out**
+//! (`--inner-threads` / `fl::TrainOptions::inner_threads`): per-cluster
+//! round blocks execute on disjoint arena lanes and all f64 reductions
+//! fold in global worker order afterwards, so training results are
+//! bit-identical for every fan-out width — asserted across
+//! `inner_threads ∈ {1, 2, 8}` by `rust/tests/property_suite.rs`.
 
 pub mod cli;
 pub mod config;
@@ -56,6 +64,7 @@ pub mod fl;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;
+pub mod tensor;
 pub mod testing;
 pub mod topology;
 pub mod util;

@@ -7,12 +7,13 @@
 //! hfl latency   [--fig 3|4|5a|5b|all] [--out results/]        regenerate Fig. 3–5 data
 //! hfl train     [--algo fl|hfl|sparse-fl|sparse-hfl] [--model mlp|cnn]
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
-//!               [--coordinated]                                train on the AOT model
+//!               [--inner-threads N] [--coordinated]            train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
 //! hfl matrix    [--quick|--full] [--threads N] [--iters N] [--dim N]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
-//! hfl des       [--quick|--full] [--threads N] [--iters N] [--dim N]
+//! hfl des       [--quick|--full] [--threads N] [--inner-threads N]
+//!               [--iters N] [--dim N]
 //!               [--compute-mean S] [--compute-het X]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
@@ -167,6 +168,8 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     let coordinated = args.flag("coordinated");
     let train_samples = args.get_parsed_or("train-samples", cfg.training.train_samples)?;
     let test_samples = args.get_parsed_or("test-samples", cfg.training.test_samples)?;
+    // Intra-round fan-out width (bit-exact for any value; 0 = auto).
+    let inner_threads = args.get_parsed_or("inner-threads", 1usize)?;
     args.finish()?;
 
     let (n_clusters, sparse) = match algo.as_str() {
@@ -192,6 +195,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
             hfl::config::SparsityConfig::dense()
         },
         eval_every: (iters / 8).max(1),
+        inner_threads,
     };
     let spec = SyntheticSpec {
         n_train: train_samples,
@@ -320,6 +324,8 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
     let full = args.flag("full");
     let threads = args.get_parsed_or("threads", 0usize)?;
+    // Per-cell intra-round fan-out, multiplying the cross-cell pool.
+    let inner_threads = args.get_parsed_or("inner-threads", 1usize)?;
     let iters = args.get_parsed::<usize>("iters")?;
     let dim = args.get_parsed::<usize>("dim")?;
     let compute_mean = args.get_parsed_or("compute-mean", cfg.des.compute_mean_s)?;
@@ -340,6 +346,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
         engine: EngineSelect::Des,
         compute_mean_s: compute_mean,
         compute_het,
+        inner_threads,
         ..Default::default()
     };
     if let Some(it) = iters {

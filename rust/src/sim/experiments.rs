@@ -152,6 +152,7 @@ where
                     crate::config::SparsityConfig::dense()
                 },
                 eval_every: scale.eval_every,
+                inner_threads: 1,
             };
             let log: TrainLog = run_hierarchical(oracle.as_mut(), &opts);
             if first_trace.is_none() {

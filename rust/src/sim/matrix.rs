@@ -363,6 +363,11 @@ pub struct MatrixOptions {
     pub compute_mean_s: f64,
     /// Lognormal heterogeneity σ of per-MU compute speed for DES cells.
     pub compute_het: f64,
+    /// Intra-scenario fan-out width ([`TrainOptions::inner_threads`]):
+    /// threads executing the per-cluster blocks *inside* each cell's
+    /// rounds, on top of the cross-cell `threads` pool. `1` (default) =
+    /// sequential cells; bit-identical results for every value.
+    pub inner_threads: usize,
 }
 
 impl Default for MatrixOptions {
@@ -379,6 +384,7 @@ impl Default for MatrixOptions {
             engine: EngineSelect::Auto,
             compute_mean_s: 0.0,
             compute_het: 0.5,
+            inner_threads: 1,
         }
     }
 }
@@ -438,6 +444,7 @@ pub(crate) fn cell_train_options(
             None => SparsityConfig::dense(),
         },
         eval_every: opts.eval_every,
+        inner_threads: opts.inner_threads,
     }
 }
 

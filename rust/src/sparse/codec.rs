@@ -57,12 +57,11 @@ impl SparseVec {
         self.nnz() as f64 * (bits_per_value as f64 + index_bits)
     }
 
-    /// Scatter-add into a dense buffer: `out[i] += scale·v_i`.
+    /// Scatter-add into a dense buffer: `out[i] += scale·v_i` (fused kernel,
+    /// bit-identical to the naive loop).
     pub fn add_into(&self, out: &mut [f32], scale: f32) {
         assert_eq!(out.len(), self.dim, "dimension mismatch");
-        for (&i, &v) in self.indices.iter().zip(&self.values) {
-            out[i as usize] += scale * v;
-        }
+        crate::tensor::kernels::scatter_add(out, &self.indices, &self.values, scale);
     }
 
     /// Materialize as dense.

@@ -18,9 +18,78 @@
 //! reused via [`DgcCompressor::step_into`]).
 
 use super::codec::SparseVec;
-use crate::util::math::quantile_abs;
+use crate::tensor::kernels;
+use crate::util::math::quantile_abs_into;
 
-/// Per-worker DGC state.
+/// The stateless DGC step: all buffers (`u`, `v`, quantile scratch) are
+/// borrowed from the caller, so the same kernel drives both the owning
+/// [`DgcCompressor`] and arena-resident state in the flat training engine
+/// ([`crate::fl::run_hierarchical`]), where every worker's `u`/`v` pair
+/// lives in one contiguous [`crate::tensor::TensorArena`].
+///
+/// Arithmetic is bit-identical to the historical in-struct implementation
+/// (same fused accumulate, same threshold, same extraction order).
+#[derive(Clone, Copy, Debug)]
+pub struct DgcKernel {
+    /// Momentum correction factor σ.
+    pub momentum: f32,
+    /// Sparsity φ ∈ [0,1): fraction of coordinates suppressed.
+    pub phi: f64,
+}
+
+impl DgcKernel {
+    pub fn new(momentum: f32, phi: f64) -> Self {
+        assert!((0.0..1.0).contains(&phi), "phi={phi} outside [0,1)");
+        assert!((0.0..1.0).contains(&(momentum as f64)), "momentum={momentum}");
+        Self { momentum, phi }
+    }
+
+    /// One compression step over borrowed state. `scratch` needs at least
+    /// [`crate::util::math::quantile_sample_len`]`(dim)` elements (`dim`
+    /// always suffices). Allocation-free apart from `out`'s own growth.
+    pub fn step_into(
+        &self,
+        grad: &[f32],
+        u: &mut [f32],
+        v: &mut [f32],
+        scratch: &mut [f32],
+        out: &mut SparseVec,
+    ) {
+        assert_eq!(grad.len(), u.len(), "gradient dim mismatch");
+        assert_eq!(grad.len(), v.len(), "gradient dim mismatch");
+        // u ← σu + g; v ← v + u
+        kernels::dgc_accumulate(u, v, grad, self.momentum);
+        out.dim = grad.len();
+        out.indices.clear();
+        out.values.clear();
+        if self.phi == 0.0 {
+            // Dense fast path: transmit v wholesale and keep the momentum
+            // buffer — this is exactly classical momentum SGD (Eq. 23),
+            // the paper's dense FL/HFL baseline. (DGC's momentum-factor
+            // masking exists to stop *stale* momentum from sparsified,
+            // delayed coordinates; with φ=0 nothing is delayed.)
+            for (i, &val) in v.iter().enumerate() {
+                out.indices.push(i as u32);
+                out.values.push(val);
+            }
+            kernels::zero(v);
+            return;
+        }
+        // Threshold at the φ-quantile of |v|, then extract ĝ = v⊙mask and
+        // zero masked u, v (momentum-factor masking, Eq. 27–29).
+        let th = quantile_abs_into(v, self.phi, scratch);
+        for i in 0..v.len() {
+            if v[i].abs() >= th {
+                out.indices.push(i as u32);
+                out.values.push(v[i]);
+                u[i] = 0.0;
+                v[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Per-worker DGC state (owning wrapper around [`DgcKernel`]).
 #[derive(Clone, Debug)]
 pub struct DgcCompressor {
     /// Momentum correction factor σ.
@@ -34,14 +103,21 @@ pub struct DgcCompressor {
 
 impl DgcCompressor {
     pub fn new(dim: usize, momentum: f32, phi: f64) -> Self {
-        assert!((0.0..1.0).contains(&phi), "phi={phi} outside [0,1)");
-        assert!((0.0..1.0).contains(&(momentum as f64)), "momentum={momentum}");
+        let _ = DgcKernel::new(momentum, phi); // validate the parameters
         Self {
             momentum,
             phi,
             u: vec![0.0; dim],
             v: vec![0.0; dim],
-            scratch: Vec::with_capacity(dim),
+            scratch: vec![0.0; dim],
+        }
+    }
+
+    /// The stateless kernel configured like this compressor.
+    pub fn kernel(&self) -> DgcKernel {
+        DgcKernel {
+            momentum: self.momentum,
+            phi: self.phi,
         }
     }
 
@@ -69,43 +145,8 @@ impl DgcCompressor {
     /// Allocation-free variant reusing `out`'s storage.
     pub fn step_into(&mut self, grad: &[f32], out: &mut SparseVec) {
         assert_eq!(grad.len(), self.dim(), "gradient dim mismatch");
-        let sigma = self.momentum;
-        // u ← σu + g; v ← v + u
-        for i in 0..grad.len() {
-            self.u[i] = sigma * self.u[i] + grad[i];
-            self.v[i] += self.u[i];
-        }
-        // Threshold at the φ-quantile of |v|.
-        let th = if self.phi == 0.0 {
-            0.0
-        } else {
-            quantile_abs(&self.v, self.phi, &mut self.scratch)
-        };
-        // Extract ĝ = v⊙mask and zero masked u, v.
-        out.dim = grad.len();
-        out.indices.clear();
-        out.values.clear();
-        if self.phi == 0.0 {
-            // Dense fast path: transmit v wholesale and keep the momentum
-            // buffer — this is exactly classical momentum SGD (Eq. 23),
-            // the paper's dense FL/HFL baseline. (DGC's momentum-factor
-            // masking exists to stop *stale* momentum from sparsified,
-            // delayed coordinates; with φ=0 nothing is delayed.)
-            for (i, &v) in self.v.iter().enumerate() {
-                out.indices.push(i as u32);
-                out.values.push(v);
-            }
-            self.v.iter_mut().for_each(|x| *x = 0.0);
-            return;
-        }
-        for i in 0..self.v.len() {
-            if self.v[i].abs() >= th {
-                out.indices.push(i as u32);
-                out.values.push(self.v[i]);
-                self.u[i] = 0.0;
-                self.v[i] = 0.0;
-            }
-        }
+        self.kernel()
+            .step_into(grad, &mut self.u, &mut self.v, &mut self.scratch, out);
     }
 
     /// Reset both accumulators (used when the global model is replaced at a
@@ -120,6 +161,7 @@ impl DgcCompressor {
 mod tests {
     use super::*;
     use crate::testing::{check, Gen, PropConfig};
+    use crate::util::math::quantile_abs;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -272,6 +314,29 @@ mod tests {
         c.reset();
         assert!(c.residual().iter().all(|&x| x == 0.0));
         assert!(c.momentum_buf().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn kernel_over_borrowed_buffers_matches_compressor() {
+        // The arena path (stateless kernel + external buffers) must be
+        // bit-identical to the owning compressor, dense and sparse.
+        for phi in [0.0, 0.8] {
+            let dim = 300;
+            let mut c = DgcCompressor::new(dim, 0.9, phi);
+            let k = c.kernel();
+            let (mut u, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim]);
+            let mut scratch = vec![0.0f32; dim];
+            let mut rng = Pcg64::seeded(45);
+            let (mut a, mut b) = (SparseVec::empty(dim), SparseVec::empty(dim));
+            for step in 0..10 {
+                let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                c.step_into(&g, &mut a);
+                k.step_into(&g, &mut u, &mut v, &mut scratch, &mut b);
+                assert_eq!(a, b, "phi={phi} step {step}");
+                assert_eq!(c.residual(), &v[..], "phi={phi} step {step}");
+                assert_eq!(c.momentum_buf(), &u[..], "phi={phi} step {step}");
+            }
+        }
     }
 
     #[test]

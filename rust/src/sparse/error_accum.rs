@@ -13,9 +13,75 @@
 //! ```
 
 use super::codec::SparseVec;
-use crate::util::math::quantile_abs;
+use crate::tensor::kernels;
+use crate::util::math::quantile_abs_into;
 
-/// One link's sparsifying encoder with discounted error memory.
+/// The stateless discounted-error step: the persistent error buffer `e`,
+/// the fold scratch, and the quantile scratch are all borrowed from the
+/// caller, so the same kernel drives both the owning [`DiscountedError`]
+/// and arena-resident encoder state in the flat training engine
+/// ([`crate::fl::run_hierarchical`]).
+///
+/// Arithmetic is bit-identical to the historical in-struct implementation
+/// (same fold, same threshold, same extraction order).
+#[derive(Clone, Copy, Debug)]
+pub struct DiscountKernel {
+    /// Sparsity φ of this link (0 → dense passthrough, error stays empty).
+    pub phi: f64,
+    /// Error discount β.
+    pub beta: f32,
+}
+
+impl DiscountKernel {
+    pub fn new(phi: f64, beta: f32) -> Self {
+        assert!((0.0..1.0).contains(&phi));
+        assert!((0.0..=1.0).contains(&(beta as f64)));
+        Self { phi, beta }
+    }
+
+    /// Encode `x` into `out` over borrowed state: transmit `Ω(x + β·e, φ)`
+    /// and update `e`. `scratch` needs at least
+    /// [`crate::util::math::quantile_sample_len`]`(dim)` elements (`dim`
+    /// always suffices). Allocation-free apart from `out`'s own growth.
+    pub fn compress_into(
+        &self,
+        x: &[f32],
+        e: &mut [f32],
+        folded: &mut [f32],
+        scratch: &mut [f32],
+        out: &mut SparseVec,
+    ) {
+        assert_eq!(x.len(), e.len(), "dim mismatch");
+        assert_eq!(x.len(), folded.len(), "dim mismatch");
+        // x̃ = x + β·e
+        kernels::discount_fold(folded, x, e, self.beta);
+        out.dim = x.len();
+        out.indices.clear();
+        out.values.clear();
+        if self.phi == 0.0 {
+            // Dense: transmit everything, error is identically zero.
+            for (i, &v) in folded.iter().enumerate() {
+                out.indices.push(i as u32);
+                out.values.push(v);
+            }
+            kernels::zero(e);
+            return;
+        }
+        let th = quantile_abs_into(folded, self.phi, scratch);
+        for (i, &v) in folded.iter().enumerate() {
+            if v.abs() >= th {
+                out.indices.push(i as u32);
+                out.values.push(v);
+                e[i] = 0.0;
+            } else {
+                e[i] = v;
+            }
+        }
+    }
+}
+
+/// One link's sparsifying encoder with discounted error memory (owning
+/// wrapper around [`DiscountKernel`]).
 #[derive(Clone, Debug)]
 pub struct DiscountedError {
     /// Sparsity φ of this link (0 → dense passthrough, error stays empty).
@@ -29,14 +95,13 @@ pub struct DiscountedError {
 
 impl DiscountedError {
     pub fn new(dim: usize, phi: f64, beta: f32) -> Self {
-        assert!((0.0..1.0).contains(&phi));
-        assert!((0.0..=1.0).contains(&(beta as f64)));
+        let _ = DiscountKernel::new(phi, beta); // validate the parameters
         Self {
             phi,
             beta,
             e: vec![0.0; dim],
             folded: vec![0.0; dim],
-            scratch: Vec::with_capacity(dim),
+            scratch: vec![0.0; dim],
         }
     }
 
@@ -49,36 +114,29 @@ impl DiscountedError {
         &self.e
     }
 
+    /// The stateless kernel configured like this encoder.
+    pub fn kernel(&self) -> DiscountKernel {
+        DiscountKernel {
+            phi: self.phi,
+            beta: self.beta,
+        }
+    }
+
     /// Encode `x` for transmission: returns `Ω(x + β·e, φ)` and updates the
     /// error buffer.
     pub fn compress(&mut self, x: &[f32]) -> SparseVec {
-        assert_eq!(x.len(), self.dim(), "dim mismatch");
-        // x̃ = x + β·e
-        for i in 0..x.len() {
-            self.folded[i] = x[i] + self.beta * self.e[i];
-        }
-        if self.phi == 0.0 {
-            // Dense: transmit everything, error is identically zero.
-            let mut out = SparseVec::empty(x.len());
-            for (i, &v) in self.folded.iter().enumerate() {
-                out.indices.push(i as u32);
-                out.values.push(v);
-            }
-            self.e.iter_mut().for_each(|z| *z = 0.0);
-            return out;
-        }
-        let th = quantile_abs(&self.folded, self.phi, &mut self.scratch);
         let mut out = SparseVec::empty(x.len());
-        for (i, &v) in self.folded.iter().enumerate() {
-            if v.abs() >= th {
-                out.indices.push(i as u32);
-                out.values.push(v);
-                self.e[i] = 0.0;
-            } else {
-                self.e[i] = v;
-            }
-        }
+        self.compress_into(x, &mut out);
         out
+    }
+
+    /// Allocation-free variant of [`DiscountedError::compress`] reusing
+    /// `out`'s storage — the hot-path entry point of the DES engine's
+    /// per-round DL encode and H-period sync.
+    pub fn compress_into(&mut self, x: &[f32], out: &mut SparseVec) {
+        assert_eq!(x.len(), self.dim(), "dim mismatch");
+        self.kernel()
+            .compress_into(x, &mut self.e, &mut self.folded, &mut self.scratch, out);
     }
 
     /// Drop accumulated error (used at hard model resets).
@@ -188,6 +246,29 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn kernel_over_borrowed_buffers_matches_encoder() {
+        // The arena path (stateless kernel + external buffers) must be
+        // bit-identical to the owning encoder, dense and sparse.
+        for phi in [0.0, 0.8] {
+            let dim = 200;
+            let mut enc = DiscountedError::new(dim, phi, 0.5);
+            let k = enc.kernel();
+            let mut e = vec![0.0f32; dim];
+            let mut folded = vec![0.0f32; dim];
+            let mut scratch = vec![0.0f32; dim];
+            let mut out = SparseVec::empty(dim);
+            let mut rng = Pcg64::seeded(53);
+            for step in 0..10 {
+                let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let a = enc.compress(&x);
+                k.compress_into(&x, &mut e, &mut folded, &mut scratch, &mut out);
+                assert_eq!(a, out, "phi={phi} step {step}");
+                assert_eq!(enc.error(), &e[..], "phi={phi} step {step}");
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //! momentum correction ([`dgc`]), the sparse index+value wire format and
 //! its bit accounting ([`codec`]), and discounted error accumulation for
 //! the four sparsified links of the hierarchy ([`error_accum`]).
+//!
+//! Each compressor comes in two forms: an owning struct
+//! ([`DgcCompressor`], [`DiscountedError`]) and a stateless slice-based
+//! kernel ([`DgcKernel`], [`DiscountKernel`]) over caller-provided buffers,
+//! which lets the flat training engine keep all compressor state in one
+//! contiguous [`crate::tensor::TensorArena`]. Both forms execute identical
+//! arithmetic (bit-exact).
 
 pub mod codec;
 pub mod dgc;
@@ -9,6 +16,6 @@ pub mod error_accum;
 pub mod quantize;
 
 pub use codec::SparseVec;
-pub use dgc::DgcCompressor;
-pub use error_accum::DiscountedError;
+pub use dgc::{DgcCompressor, DgcKernel};
+pub use error_accum::{DiscountKernel, DiscountedError};
 pub use quantize::QuantizedVec;

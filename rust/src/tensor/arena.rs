@@ -1,0 +1,293 @@
+//! Cache-aligned flat tensor storage.
+//!
+//! Every per-cluster / per-worker buffer of the training hot path lives in
+//! **one contiguous allocation** ([`TensorArena`]) instead of scattered
+//! `Vec<Vec<f32>>`s: a round walks the arena front to back, so the prefetcher
+//! sees one linear stream and adjacent buffers share cache lines only at
+//! 64-byte boundaries (no false sharing between parallel lanes).
+//!
+//! Layout is expressed in [`padded`] units: every logical buffer is rounded
+//! up to 16 f32s (one cache line), so any buffer placed at a multiple of
+//! [`padded`] starts cache-line-aligned. Two access styles:
+//!
+//! * **Typed chunks** — [`ArenaBuilder::reserve`] hands out [`Chunk`]
+//!   handles at build time; [`TensorArena::chunk`]/[`chunk_mut`] resolve
+//!   them to slices.
+//! * **Lane splitting** — [`TensorArena::split_lanes_mut`] partitions the
+//!   front of the arena into `n` disjoint `&mut [f32]` lanes of equal
+//!   stride (plus the tail), which is what the intra-round fan-out hands to
+//!   worker threads: disjointness is proven to the borrow checker, so the
+//!   parallel round needs no unsafe code.
+//!
+//! [`RowMatrix`] is the small typed view used for "N rows of dim params"
+//! state (the per-cluster reference models of the DES engine).
+
+/// One 64-byte cache line of f32 storage. The arena allocates these so the
+/// base pointer — and every [`padded`] offset — is 64-byte aligned.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct CacheLine([f32; 16]);
+
+/// f32s per cache line; the granularity of every arena offset.
+pub const LINE_F32: usize = 16;
+
+/// Round a buffer length up to a whole number of cache lines.
+#[inline]
+pub fn padded(len: usize) -> usize {
+    len.div_ceil(LINE_F32) * LINE_F32
+}
+
+/// A named region inside a [`TensorArena`], produced by
+/// [`ArenaBuilder::reserve`]. Offsets are in f32s and always cache-aligned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Accumulates [`Chunk`] reservations, then allocates the arena once.
+#[derive(Clone, Debug, Default)]
+pub struct ArenaBuilder {
+    len: usize,
+}
+
+impl ArenaBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `len` f32s at the next cache-line boundary.
+    pub fn reserve(&mut self, len: usize) -> Chunk {
+        let offset = self.len;
+        self.len += padded(len);
+        Chunk { offset, len }
+    }
+
+    /// Total f32s reserved so far (always a multiple of [`LINE_F32`]).
+    pub fn reserved(&self) -> usize {
+        self.len
+    }
+
+    /// Allocate the zero-initialized arena.
+    pub fn build(&self) -> TensorArena {
+        TensorArena::zeroed(self.len)
+    }
+}
+
+/// One contiguous, zero-initialized, 64-byte-aligned block of f32 storage.
+pub struct TensorArena {
+    lines: Vec<CacheLine>,
+    len: usize,
+}
+
+impl TensorArena {
+    /// Allocate `len` f32s of zeroed storage (rounded up internally to a
+    /// whole number of cache lines).
+    pub fn zeroed(len: usize) -> Self {
+        Self {
+            lines: vec![CacheLine([0.0; LINE_F32]); len.div_ceil(LINE_F32)],
+            len,
+        }
+    }
+
+    /// Logical length in f32s.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole arena as one flat slice.
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `CacheLine` is `repr(C)` over `[f32; 16]`, so the backing
+        // allocation is a valid, initialized run of `16 * lines.len()` f32s;
+        // `len` never exceeds it.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr() as *const f32, self.len) }
+    }
+
+    /// The whole arena as one flat mutable slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`; `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut f32, self.len) }
+    }
+
+    /// Resolve a [`Chunk`] to its slice.
+    pub fn chunk(&self, c: Chunk) -> &[f32] {
+        &self.as_slice()[c.offset..c.offset + c.len]
+    }
+
+    /// Resolve a [`Chunk`] to its mutable slice.
+    pub fn chunk_mut(&mut self, c: Chunk) -> &mut [f32] {
+        &mut self.as_mut_slice()[c.offset..c.offset + c.len]
+    }
+
+    /// Split the front of the arena into `n` disjoint mutable lanes of
+    /// `stride` f32s each, returning the lanes and the remaining tail. The
+    /// lanes can be moved onto worker threads simultaneously — this is the
+    /// safe partition the intra-round fan-out is built on.
+    ///
+    /// `stride` must be a multiple of [`LINE_F32`] so every lane stays
+    /// cache-aligned.
+    pub fn split_lanes_mut(&mut self, n: usize, stride: usize) -> (Vec<&mut [f32]>, &mut [f32]) {
+        assert_eq!(stride % LINE_F32, 0, "lane stride must be cache-aligned");
+        let buf = self.as_mut_slice();
+        assert!(n * stride <= buf.len(), "lanes exceed arena");
+        let (front, tail) = buf.split_at_mut(n * stride);
+        (front.chunks_exact_mut(stride).collect(), tail)
+    }
+}
+
+impl std::fmt::Debug for TensorArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TensorArena").field("len", &self.len).finish()
+    }
+}
+
+/// `rows × dim` f32 state in one flat cache-aligned allocation with a
+/// cache-line-padded row stride — the arena-backed replacement for
+/// `Vec<Vec<f32>>` model state.
+#[derive(Debug)]
+pub struct RowMatrix {
+    arena: TensorArena,
+    rows: usize,
+    dim: usize,
+    stride: usize,
+}
+
+impl RowMatrix {
+    /// `rows` zeroed rows of `dim` f32s.
+    pub fn zeroed(rows: usize, dim: usize) -> Self {
+        let mut b = ArenaBuilder::new();
+        for _ in 0..rows {
+            b.reserve(dim);
+        }
+        Self {
+            arena: b.build(),
+            rows,
+            dim,
+            stride: padded(dim),
+        }
+    }
+
+    /// Every row initialized to a copy of `row`.
+    pub fn broadcast(row: &[f32], rows: usize) -> Self {
+        let mut m = Self::zeroed(rows, row.len());
+        for r in 0..rows {
+            m.row_mut(r).copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let off = r * self.stride;
+        &self.arena.as_slice()[off..off + self.dim]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let off = r * self.stride;
+        &mut self.arena.as_mut_slice()[off..off + self.dim]
+    }
+
+    /// Rows front to back (each trimmed to `dim`).
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        let (slice, dim, stride) = (self.arena.as_slice(), self.dim, self.stride);
+        (0..self.rows).map(move |r| &slice[r * stride..r * stride + dim])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_rounds_to_cache_lines() {
+        assert_eq!(padded(0), 0);
+        assert_eq!(padded(1), 16);
+        assert_eq!(padded(16), 16);
+        assert_eq!(padded(17), 32);
+        assert_eq!(padded(820_874), 820_880);
+    }
+
+    #[test]
+    fn arena_is_zeroed_aligned_and_sized() {
+        let a = TensorArena::zeroed(100);
+        assert_eq!(a.len(), 100);
+        assert!(!a.is_empty());
+        assert!(a.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(a.as_slice().as_ptr() as usize % 64, 0, "base must be 64B-aligned");
+        let empty = TensorArena::zeroed(0);
+        assert!(empty.is_empty());
+        assert!(empty.as_slice().is_empty());
+    }
+
+    #[test]
+    fn builder_chunks_are_disjoint_and_aligned() {
+        let mut b = ArenaBuilder::new();
+        let x = b.reserve(10);
+        let y = b.reserve(17);
+        let z = b.reserve(16);
+        assert_eq!((x.offset, x.len), (0, 10));
+        assert_eq!((y.offset, y.len), (16, 17));
+        assert_eq!((z.offset, z.len), (48, 16));
+        assert_eq!(b.reserved(), 64);
+        let mut a = b.build();
+        assert_eq!(a.len(), 64);
+        a.chunk_mut(y).fill(2.0);
+        a.chunk_mut(x).fill(1.0);
+        assert!(a.chunk(x).iter().all(|&v| v == 1.0));
+        assert!(a.chunk(y).iter().all(|&v| v == 2.0));
+        assert!(a.chunk(z).iter().all(|&v| v == 0.0));
+        // Every chunk start is cache-aligned.
+        for c in [x, y, z] {
+            assert_eq!(a.chunk(c).as_ptr() as usize % 64, 0, "chunk at {}", c.offset);
+        }
+    }
+
+    #[test]
+    fn split_lanes_partitions_disjointly() {
+        let mut a = TensorArena::zeroed(3 * 32 + 16);
+        {
+            let (lanes, tail) = a.split_lanes_mut(3, 32);
+            assert_eq!(lanes.len(), 3);
+            assert_eq!(tail.len(), 16);
+            for (i, lane) in lanes.into_iter().enumerate() {
+                assert_eq!(lane.len(), 32);
+                assert_eq!(lane.as_ptr() as usize % 64, 0);
+                lane.fill(i as f32 + 1.0);
+            }
+            tail.fill(9.0);
+        }
+        let s = a.as_slice();
+        assert!(s[..32].iter().all(|&v| v == 1.0));
+        assert!(s[32..64].iter().all(|&v| v == 2.0));
+        assert!(s[64..96].iter().all(|&v| v == 3.0));
+        assert!(s[96..].iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn row_matrix_round_trips() {
+        let init = vec![1.0f32, 2.0, 3.0];
+        let mut m = RowMatrix::broadcast(&init, 4);
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.dim(), 3);
+        for r in 0..4 {
+            assert_eq!(m.row(r), &init[..]);
+        }
+        m.row_mut(2)[1] = 7.0;
+        assert_eq!(m.row(2), &[1.0, 7.0, 3.0]);
+        assert_eq!(m.row(1), &init[..], "rows must not alias");
+        let collected: Vec<Vec<f32>> = m.iter_rows().map(|r| r.to_vec()).collect();
+        assert_eq!(collected[2], vec![1.0, 7.0, 3.0]);
+        assert_eq!(collected.len(), 4);
+    }
+}

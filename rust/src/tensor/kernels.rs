@@ -1,0 +1,173 @@
+//! Fused element-wise kernels of the training hot path.
+//!
+//! Every kernel is a tight, autovectorizable loop over contiguous slices —
+//! the compiler turns them into SIMD without reassociating anything, because
+//! each output element depends only on its own inputs. That gives the
+//! **bit-exactness contract** these kernels are built around: each function
+//! performs *exactly* the per-element arithmetic (same operations, same
+//! order) as the scattered loops it replaced in `fl::run_hierarchical`,
+//! `sparse::{dgc, error_accum}`, and `des::engine`, so golden traces
+//! recorded against the pre-arena engine remain bit-identical.
+//!
+//! Do not "simplify" e.g. `acc_mean`'s `w[i] / n` into `w[i] * (1.0 / n)`:
+//! the two differ in the last ulp and would silently re-bless every
+//! fixture.
+
+/// `x[i] = 0`.
+#[inline]
+pub fn zero(x: &mut [f32]) {
+    x.fill(0.0);
+}
+
+/// `x[i] *= a`.
+#[inline]
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// `y[i] += a * x[i]` — the weight-decay fold and every scaled accumulate.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `out[i] += w[i] / n` — the consensus averaging step (kept as a division
+/// to match the reference arithmetic exactly).
+#[inline]
+pub fn acc_mean(out: &mut [f32], w: &[f32], n: f32) {
+    assert_eq!(out.len(), w.len(), "acc_mean length mismatch");
+    for i in 0..out.len() {
+        out[i] += w[i] / n;
+    }
+}
+
+/// `out[i] = a[i] + b[i] - c[i]` — the sync-delta `W̃_n + e_n − W̃`.
+#[inline]
+pub fn add_sub(out: &mut [f32], a: &[f32], b: &[f32], c: &[f32]) {
+    assert_eq!(out.len(), a.len(), "add_sub length mismatch");
+    assert_eq!(a.len(), b.len(), "add_sub length mismatch");
+    assert_eq!(b.len(), c.len(), "add_sub length mismatch");
+    for i in 0..out.len() {
+        out[i] = a[i] + b[i] - c[i];
+    }
+}
+
+/// `out[i] = a[i] - b[i]` — the pull-to-global delta `W̃ − W̃_n`.
+#[inline]
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len(), "sub length mismatch");
+    assert_eq!(a.len(), b.len(), "sub length mismatch");
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Fused DGC accumulate: `u[i] = sigma * u[i] + g[i]; v[i] += u[i]`
+/// (Eq. 24–25) in one pass over the worker's arena-resident pair.
+#[inline]
+pub fn dgc_accumulate(u: &mut [f32], v: &mut [f32], g: &[f32], sigma: f32) {
+    assert_eq!(u.len(), g.len(), "dgc_accumulate length mismatch");
+    assert_eq!(v.len(), g.len(), "dgc_accumulate length mismatch");
+    for i in 0..g.len() {
+        u[i] = sigma * u[i] + g[i];
+        v[i] += u[i];
+    }
+}
+
+/// Fused discounted-error fold: `folded[i] = x[i] + beta * e[i]`.
+#[inline]
+pub fn discount_fold(folded: &mut [f32], x: &[f32], e: &[f32], beta: f32) {
+    assert_eq!(folded.len(), x.len(), "discount_fold length mismatch");
+    assert_eq!(x.len(), e.len(), "discount_fold length mismatch");
+    for i in 0..folded.len() {
+        folded[i] = x[i] + beta * e[i];
+    }
+}
+
+/// Masked scatter-add: `out[indices[j]] += scale * values[j]` — the sparse
+/// aggregation primitive behind [`crate::sparse::SparseVec::add_into`].
+#[inline]
+pub fn scatter_add(out: &mut [f32], indices: &[u32], values: &[f32], scale: f32) {
+    assert_eq!(indices.len(), values.len(), "scatter_add length mismatch");
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] += scale * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Every kernel must be bit-identical to the naive scalar loop it
+    /// replaced — checked with `to_bits` so ±0.0 and ulp drift both fail.
+    #[test]
+    fn kernels_bit_match_reference_loops() {
+        let mut rng = Pcg64::seeded(2024);
+        for n in [1usize, 15, 16, 17, 100, 1000] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let c = rand_vec(&mut rng, n);
+
+            let mut y = a.clone();
+            axpy(&mut y, &b, 0.3);
+            for i in 0..n {
+                assert_eq!(y[i].to_bits(), (a[i] + 0.3 * b[i]).to_bits(), "axpy[{i}]");
+            }
+
+            let mut s = a.clone();
+            scale(&mut s, -0.7);
+            for i in 0..n {
+                assert_eq!(s[i].to_bits(), (a[i] * -0.7).to_bits(), "scale[{i}]");
+            }
+
+            let mut m = a.clone();
+            acc_mean(&mut m, &b, 3.0);
+            for i in 0..n {
+                assert_eq!(m[i].to_bits(), (a[i] + b[i] / 3.0).to_bits(), "acc_mean[{i}]");
+            }
+
+            let mut d = vec![0.0f32; n];
+            add_sub(&mut d, &a, &b, &c);
+            for i in 0..n {
+                assert_eq!(d[i].to_bits(), (a[i] + b[i] - c[i]).to_bits(), "add_sub[{i}]");
+            }
+            sub(&mut d, &a, &b);
+            for i in 0..n {
+                assert_eq!(d[i].to_bits(), (a[i] - b[i]).to_bits(), "sub[{i}]");
+            }
+
+            let mut f = vec![0.0f32; n];
+            discount_fold(&mut f, &a, &b, 0.5);
+            for i in 0..n {
+                assert_eq!(f[i].to_bits(), (a[i] + 0.5 * b[i]).to_bits(), "fold[{i}]");
+            }
+
+            let (mut u, mut v) = (a.clone(), b.clone());
+            dgc_accumulate(&mut u, &mut v, &c, 0.9);
+            for i in 0..n {
+                let u_ref = 0.9 * a[i] + c[i];
+                assert_eq!(u[i].to_bits(), u_ref.to_bits(), "dgc u[{i}]");
+                assert_eq!(v[i].to_bits(), (b[i] + u_ref).to_bits(), "dgc v[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_scatter() {
+        let mut x = vec![1.0f32, -2.0, 3.0, 4.0];
+        zero(&mut x[1..3]);
+        assert_eq!(x, vec![1.0, 0.0, 0.0, 4.0]);
+        scatter_add(&mut x, &[0, 3], &[2.0, -1.0], 0.5);
+        assert_eq!(x, vec![2.0, 0.0, 0.0, 3.5]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Flat tensor arenas and fused kernels for the training hot path.
+//!
+//! The pre-arena engine kept every model-sized buffer in its own `Vec<f32>`
+//! scattered across structs (`Vec<Vec<f32>>` reference models, per-worker
+//! DGC pairs, per-encoder residuals, ad-hoc scratch), so one training round
+//! chased pointers all over the heap and the H-period sync allocated fresh
+//! vectors per cluster. This module replaces that with:
+//!
+//! * [`arena`] — one contiguous 64-byte-aligned allocation holding all
+//!   per-cluster / per-worker state, partitioned into typed chunks
+//!   ([`Chunk`], [`ArenaBuilder`]) or equal-stride mutable lanes
+//!   ([`TensorArena::split_lanes_mut`]) that can be fanned out across
+//!   threads without unsafe code; plus [`RowMatrix`] for flat row-major
+//!   model state.
+//! * [`kernels`] — fused element-wise loops (axpy, scale, masked
+//!   scatter-add, the DGC accumulate, the discounted-error fold) that
+//!   autovectorize while preserving the reference engine's per-element
+//!   arithmetic order **exactly**, so golden traces stay bit-identical.
+//!
+//! See README §Performance for the layout diagram and the determinism
+//! contract of the intra-round fan-out built on top of these pieces.
+
+pub mod arena;
+pub mod kernels;
+
+pub use arena::{padded, ArenaBuilder, Chunk, RowMatrix, TensorArena, LINE_F32};

@@ -30,6 +30,11 @@ impl Measurement {
         self.median.as_secs_f64() * 1e9
     }
 
+    /// Median absolute deviation in nanoseconds.
+    pub fn mad_ns(&self) -> f64 {
+        self.mad.as_secs_f64() * 1e9
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<48} {:>14} ± {:<12} ({} samples × {} iters)",
@@ -117,10 +122,11 @@ impl Bencher {
             }
             sample_times.push(t0.elapsed().as_secs_f64() / iters as f64);
         }
-        sample_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (clock anomaly) must not panic the bench.
+        sample_times.sort_by(f64::total_cmp);
         let median = sample_times[sample_times.len() / 2];
         let mut devs: Vec<f64> = sample_times.iter().map(|t| (t - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = devs[devs.len() / 2];
 
         let m = Measurement {
@@ -155,6 +161,31 @@ impl Bencher {
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    /// Serialize every recorded measurement as the stable
+    /// `BENCH_micro.json` schema — one `{name, median_ns, mad_ns, samples,
+    /// iters}` object per entry — so successive PRs can track the perf
+    /// trajectory. `micro_hotpath` writes this under `HFL_BENCH_JSON=1`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::{Json, ObjBuilder};
+        let entries: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                ObjBuilder::new()
+                    .str("name", m.name.clone())
+                    .num("median_ns", m.ns())
+                    .num("mad_ns", m.mad_ns())
+                    .num("samples", m.samples as f64)
+                    .num("iters", m.iters_per_sample as f64)
+                    .build()
+            })
+            .collect();
+        let doc = ObjBuilder::new()
+            .val("benchmarks", Json::Arr(entries))
+            .build();
+        std::fs::write(path, format!("{}\n", doc.to_string_compact()))
     }
 
     /// Final summary block, printed by bench mains.
@@ -196,5 +227,26 @@ mod tests {
         let mut b = Bencher::quick();
         let m = b.bench_once("one", || std::thread::sleep(Duration::from_millis(2)));
         assert!(m.median >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn write_json_emits_the_stable_schema() {
+        let mut b = Bencher::quick();
+        b.bench_once("entry_a", || {});
+        b.bench_once("entry_b", || {});
+        let path = std::env::temp_dir().join("hfl_bench_write_json_test.json");
+        let path = path.to_str().unwrap().to_string();
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::util::json::parse(&text).unwrap();
+        let arr = json.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("entry_a"));
+        for e in arr {
+            for key in ["median_ns", "mad_ns", "samples", "iters"] {
+                assert!(e.get(key).unwrap().as_f64().is_some(), "missing {key}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

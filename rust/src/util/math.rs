@@ -158,18 +158,47 @@ pub fn quickselect(xs: &mut [f32], k: usize) -> f32 {
 /// at the cost of a small, unbiased jitter in the achieved sparsity
 /// (EXPERIMENTS.md §Perf quantifies it).
 pub fn quantile_abs(v: &[f32], phi: f64, scratch: &mut Vec<f32>) -> f32 {
+    let m = quantile_sample_len(v.len());
+    if scratch.len() < m {
+        scratch.resize(m, 0.0);
+    }
+    quantile_abs_into(v, phi, scratch)
+}
+
+/// Number of elements the (possibly sampled) threshold estimate inspects
+/// for a vector of length `n` — the scratch prefix [`quantile_abs_into`]
+/// requires. Never exceeds `n`.
+pub fn quantile_sample_len(n: usize) -> usize {
+    if n >= QUANTILE_SAMPLE_MIN {
+        let stride = (n / QUANTILE_SAMPLE_TARGET).max(1);
+        n.div_ceil(stride)
+    } else {
+        n
+    }
+}
+
+/// Slice-scratch variant of [`quantile_abs`] for arena-resident callers:
+/// identical sampling, selection, and result, but the scratch is a
+/// caller-provided preallocated slice of at least
+/// [`quantile_sample_len`]`(v.len())` elements (a `v.len()`-long slice
+/// always suffices). Performs no allocation.
+pub fn quantile_abs_into(v: &[f32], phi: f64, scratch: &mut [f32]) -> f32 {
     assert!((0.0..=1.0).contains(&phi), "phi={phi} outside [0,1]");
     assert!(!v.is_empty());
-    scratch.clear();
+    let m = quantile_sample_len(v.len());
+    let scratch = &mut scratch[..m];
     if v.len() >= QUANTILE_SAMPLE_MIN {
-        let stride = v.len() / QUANTILE_SAMPLE_TARGET;
-        scratch.extend(v.iter().step_by(stride.max(1)).map(|x| x.abs()));
+        let stride = (v.len() / QUANTILE_SAMPLE_TARGET).max(1);
+        for (dst, x) in scratch.iter_mut().zip(v.iter().step_by(stride)) {
+            *dst = x.abs();
+        }
     } else {
-        scratch.extend(v.iter().map(|x| x.abs()));
+        for (dst, x) in scratch.iter_mut().zip(v) {
+            *dst = x.abs();
+        }
     }
-    let n = scratch.len();
     // Index of the first *kept* element when sorted ascending.
-    let k = ((phi * n as f64).floor() as usize).min(n - 1);
+    let k = ((phi * m as f64).floor() as usize).min(m - 1);
     quickselect(scratch, k)
 }
 
@@ -292,7 +321,7 @@ mod tests {
         for n in [1usize, 2, 5, 17, 100, 1001] {
             let orig: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
             let mut sorted = orig.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.sort_by(f32::total_cmp);
             for k in [0, n / 3, n / 2, n - 1] {
                 let mut xs = orig.clone();
                 assert_eq!(quickselect(&mut xs, k), sorted[k], "n={n} k={k}");
@@ -331,6 +360,22 @@ mod tests {
         let kept = v.iter().filter(|x| x.abs() >= sampled).count() as f64 / v.len() as f64;
         assert!((kept - 0.01).abs() < 0.002, "kept fraction {kept}");
         assert!((sampled - exact).abs() / exact < 0.05, "{sampled} vs {exact}");
+    }
+
+    #[test]
+    fn quantile_abs_into_matches_vec_variant() {
+        let mut rng = Pcg64::seeded(78);
+        for n in [1usize, 5, 100, 70_000] {
+            let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut vec_scratch = Vec::new();
+            let mut slice_scratch = vec![0.0f32; n];
+            for phi in [0.0, 0.5, 0.9, 1.0] {
+                let a = quantile_abs(&v, phi, &mut vec_scratch);
+                let b = quantile_abs_into(&v, phi, &mut slice_scratch);
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} phi={phi}");
+            }
+            assert!(quantile_sample_len(n) <= n);
+        }
     }
 
     #[test]

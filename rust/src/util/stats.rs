@@ -95,7 +95,8 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     assert!((0.0..=100.0).contains(&p));
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaNs sort to the ends instead of panicking mid-sort.
+    s.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

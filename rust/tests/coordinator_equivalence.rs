@@ -40,6 +40,7 @@ fn train_opts(sparse: bool, n_clusters: usize) -> TrainOptions {
             SparsityConfig::dense()
         },
         eval_every: 0,
+        inner_threads: 1,
     }
 }
 

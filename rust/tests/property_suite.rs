@@ -11,7 +11,12 @@
 //! 3. **Properties of the wireless latency model**: `payload_bits`
 //!    monotonicity in φ (with the q=1 and dense edges), and latency
 //!    monotonicity in link distance and sparsity.
+//! 4. **Determinism of the intra-round fan-out**: `run_hierarchical` with
+//!    `inner_threads ∈ {1, 2, 8}` produces bit-identical final parameters,
+//!    per-link bits, and loss/eval digests across random configurations.
 
+use hfl::config::SparsityConfig;
+use hfl::fl::{run_hierarchical, QuadraticOracle, TrainLog, TrainOptions};
 use hfl::sparse::{DgcCompressor, SparseVec};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
 use hfl::util::rng::Pcg64;
@@ -364,6 +369,113 @@ fn prop_broadcast_latency_monotone_in_distance_and_sparsity() {
         }
         Ok(())
     });
+}
+
+// --- 4. Intra-round fan-out determinism --------------------------------------
+
+/// Generator for fan-out instances:
+/// (n_clusters, per_cluster, dim, h_period, sparse, weight_decay?, seed).
+struct FanoutCase;
+
+impl Gen for FanoutCase {
+    type Value = (usize, usize, usize, usize, bool, bool, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            2 + rng.uniform_usize(3),  // 2..=4 clusters
+            1 + rng.uniform_usize(3),  // 1..=3 MUs per cluster
+            4 + rng.uniform_usize(28), // dim 4..=31
+            1 + rng.uniform_usize(4),  // H 1..=4
+            rng.uniform() < 0.5,
+            rng.uniform() < 0.5,
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, &(n, per, dim, h, sparse, wd, seed): &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if n > 2 {
+            out.push((n - 1, per, dim, h, sparse, wd, seed));
+        }
+        if per > 1 {
+            out.push((n, per - 1, dim, h, sparse, wd, seed));
+        }
+        if dim > 4 {
+            out.push((n, per, (dim / 2).max(4), h, sparse, wd, seed));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_inner_fanout_bit_exact_across_thread_counts() {
+    // The determinism contract of `TrainOptions::inner_threads`: for every
+    // random configuration, fanning the per-cluster round blocks across 2
+    // or 8 threads reproduces the sequential run bit for bit — final
+    // parameters, per-link bit totals, the per-iteration loss curve, and
+    // every eval point.
+    check(
+        &PropConfig {
+            cases: 12,
+            ..Default::default()
+        },
+        &FanoutCase,
+        |&(n, per, dim, h, sparse, wd, seed)| {
+            let run = |threads: usize| -> TrainLog {
+                let opts = TrainOptions {
+                    iters: 8,
+                    peak_lr: 0.05,
+                    warmup_iters: 2,
+                    h_period: h,
+                    n_clusters: n,
+                    weight_decay: if wd { 1e-3 } else { 0.0 },
+                    sparsity: if sparse {
+                        SparsityConfig {
+                            enabled: true,
+                            phi_mu_ul: 0.8,
+                            ..SparsityConfig::default()
+                        }
+                    } else {
+                        SparsityConfig::dense()
+                    },
+                    eval_every: 4,
+                    inner_threads: threads,
+                    ..TrainOptions::default()
+                };
+                let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
+                run_hierarchical(&mut oracle, &opts)
+            };
+            let base = run(1);
+            for threads in [2usize, 8] {
+                let other = run(threads);
+                let fp = |l: &TrainLog| -> Vec<u32> {
+                    l.final_params.iter().map(|x| x.to_bits()).collect()
+                };
+                if fp(&base) != fp(&other) {
+                    return Err(format!("final_params diverge at inner_threads={threads}"));
+                }
+                if base.bits != other.bits {
+                    return Err(format!(
+                        "comm bits diverge at inner_threads={threads}: {:?} vs {:?}",
+                        base.bits, other.bits
+                    ));
+                }
+                let curve = |l: &TrainLog| -> Vec<(usize, u64)> {
+                    l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect()
+                };
+                if curve(&base) != curve(&other) {
+                    return Err(format!("loss curve diverges at inner_threads={threads}"));
+                }
+                let evals = |l: &TrainLog| -> Vec<(usize, u64)> {
+                    l.evals.iter().map(|(i, m)| (*i, m.loss.to_bits())).collect()
+                };
+                if evals(&base) != evals(&other) {
+                    return Err(format!("evals diverge at inner_threads={threads}"));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
