@@ -1,9 +1,11 @@
 //! Hot-path microbenchmarks (§Perf): every per-iteration cost on the L3
 //! training path, the full-round training step (flat-arena engine vs a
 //! faithful replica of the pre-arena seed hot path), the intra-round
-//! fan-out scaling, plus the PJRT train-step itself and the Rust-vs-XLA
-//! DGC ablation. Numbers feed EXPERIMENTS.md §Perf and — under
-//! `HFL_BENCH_JSON=1` — the committed `BENCH_micro.json` perf trajectory.
+//! fan-out scaling, the persistent-pool-vs-scoped-spawn dispatch ablation,
+//! plus the PJRT train-step itself and the Rust-vs-XLA DGC ablation.
+//! Numbers feed EXPERIMENTS.md §Perf and — under `HFL_BENCH_JSON=1` — the
+//! `BENCH_micro.json` perf trajectory, which CI gates against the
+//! checked-in `BENCH_baseline.json` (no >3× median regressions).
 //!
 //! ```bash
 //! cargo bench --bench micro_hotpath              # full scale (Q = 820k)
@@ -14,11 +16,14 @@
 use hfl::config::SparsityConfig;
 use hfl::fl::{run_hierarchical, TrainOptions};
 use hfl::fl::{LrSchedule, QuadraticOracle};
+use hfl::pool::WorkerPool;
 use hfl::runtime::{Runtime, TensorArg};
 use hfl::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use hfl::tensor::kernels;
 use hfl::util::bench::{black_box, Bencher};
 use hfl::util::math::{quantile_abs, quickselect};
 use hfl::util::rng::Pcg64;
+use std::sync::Mutex;
 
 /// The four-link sparsity profile used by both engine benches.
 fn bench_sparsity() -> SparsityConfig {
@@ -201,6 +206,7 @@ fn run_arena(
         sparsity: bench_sparsity(),
         eval_every: 0,
         inner_threads: inner,
+        pool: None,
     };
     let mut oracle = QuadraticOracle::new_skewed(dim, n * per_cluster, 0.0, 1.0, seed);
     let log = run_hierarchical(&mut oracle, &opts);
@@ -280,6 +286,48 @@ fn main() {
         "  → per-cluster fan-out scaling (4 inner threads over {n_sc} clusters): {:.2}×",
         fan1_m.ns() / fan4_m.ns()
     );
+
+    // --- Persistent pool vs per-round scoped spawns ----------------------
+    // The shape of one engine round: `lanes` disjoint cluster-sized blocks
+    // dispatched together, once per round. `spawn` rebuilds a thread scope
+    // every round (the PR-3 fan-out behaviour); `pool` pushes one batch
+    // onto the persistent worker pool (the shipped path). At --smoke dims
+    // the spawn cost dominates the block work — exactly the regime the
+    // pool removes; CI's baseline gate asserts pool ≤ spawn here.
+    let lanes = 4usize;
+    let rounds = 8usize;
+    let block = (q / 8).max(64);
+    let src: Vec<f32> = (0..block).map(|i| ((i as f32) * 0.13).cos()).collect();
+    let bufs: Vec<Mutex<Vec<f32>>> =
+        (0..lanes).map(|_| Mutex::new(vec![0.0f32; block])).collect();
+    let spawn_m = b.bench(&format!("fanout_round/spawn (dim={block}, {lanes} lanes)"), || {
+        for _ in 0..rounds {
+            std::thread::scope(|scope| {
+                let src = &src;
+                for buf in &bufs {
+                    scope.spawn(move || {
+                        let mut w = buf.lock().unwrap();
+                        kernels::axpy(w.as_mut_slice(), src, 1e-3);
+                    });
+                }
+            });
+        }
+    });
+    let pool = WorkerPool::new(lanes);
+    let pool_m = b.bench(&format!("fanout_round/pool (dim={block}, {lanes} lanes)"), || {
+        for _ in 0..rounds {
+            pool.run_ordered(lanes, lanes, |l| {
+                let mut w = bufs[l].lock().unwrap();
+                kernels::axpy(w.as_mut_slice(), &src, 1e-3);
+            })
+            .expect("pool fan-out");
+        }
+    });
+    println!(
+        "  → persistent pool vs per-round scoped spawns ({rounds} rounds × {lanes} lanes): {:.2}×",
+        spawn_m.ns() / pool_m.ns()
+    );
+    black_box(bufs[0].lock().unwrap()[0]);
 
     // --- L2/L1 through PJRT (full scale only: tensor shapes are fixed) ---
     let runtime = if smoke {

@@ -3,9 +3,32 @@
 //! Grammar: `hfl <subcommand> [--flag] [--key value] [--key=value] ...`.
 //! [`Args`] collects flags/options and reports unknown or missing ones with
 //! helpful errors; each subcommand in `main.rs` declares what it accepts.
+//! The shared `--pool-threads` option (persistent worker-pool lane budget,
+//! see [`crate::pool`]) is resolved by [`pool_from_args`].
 
+use crate::pool::WorkerPool;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// Resolve the shared `--pool-threads N` option against the `[pool]`
+/// config default: `0` (or absent with a zero default) keeps the lazily
+/// created process-wide shared pool (`None`); any other value builds a
+/// dedicated [`WorkerPool`] with that many lanes. The caller must keep the
+/// returned pool alive for the duration of the command — dropping it joins
+/// the workers — and thread `pool.handle()` through its options structs.
+pub fn pool_from_args(args: &Args, default_lanes: usize) -> Result<Option<WorkerPool>> {
+    let lanes = args.get_parsed_or("pool-threads", default_lanes)?;
+    // Same sanity bound the `[pool] threads` config path enforces
+    // (`PoolConfig::validate`) — reject absurd values before spawning.
+    if lanes > 4096 {
+        bail!("--pool-threads {lanes} outside sane range [0, 4096]");
+    }
+    Ok(if lanes == 0 {
+        None
+    } else {
+        Some(WorkerPool::new(lanes))
+    })
+}
 
 /// Parsed command line: a subcommand plus `--key value` options and
 /// `--flag` booleans.
@@ -170,5 +193,25 @@ mod tests {
     fn bad_parse_is_error() {
         let a = Args::parse(["x", "--n", "abc"]).unwrap();
         assert!(a.get_parsed::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn pool_from_args_builds_dedicated_pool_or_defers() {
+        let a = Args::parse(["matrix", "--pool-threads", "2"]).unwrap();
+        let pool = pool_from_args(&a, 0).unwrap().expect("dedicated pool");
+        assert_eq!(pool.lanes(), 2);
+        a.finish().unwrap();
+        // Absent with a zero default → shared pool (None).
+        let a = Args::parse(["matrix"]).unwrap();
+        assert!(pool_from_args(&a, 0).unwrap().is_none());
+        // Absent with a nonzero `[pool] threads` default → dedicated pool.
+        let a = Args::parse(["matrix"]).unwrap();
+        assert_eq!(pool_from_args(&a, 3).unwrap().unwrap().lanes(), 3);
+        // Explicit 0 overrides a nonzero config default back to shared.
+        let a = Args::parse(["matrix", "--pool-threads", "0"]).unwrap();
+        assert!(pool_from_args(&a, 3).unwrap().is_none());
+        // Absurd lane counts are rejected, mirroring PoolConfig::validate.
+        let a = Args::parse(["matrix", "--pool-threads", "500000"]).unwrap();
+        assert!(pool_from_args(&a, 0).is_err());
     }
 }

@@ -406,6 +406,26 @@ impl DesConfig {
     }
 }
 
+/// Persistent worker-pool knobs (`crate::pool`): the execution-lane budget
+/// shared by the scenario matrix and the engines' intra-round fan-outs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolConfig {
+    /// Execution lanes (including the submitting thread) of a dedicated
+    /// pool built at command startup; 0 (the default) keeps the lazily
+    /// created process-wide shared pool sized to `available_parallelism`.
+    /// CLI override: `--pool-threads N`.
+    pub threads: usize,
+}
+
+impl PoolConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.threads > 4096 {
+            bail!("pool threads {} outside sane range [0, 4096]", self.threads);
+        }
+        Ok(())
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
@@ -415,6 +435,7 @@ pub struct Config {
     pub training: TrainingConfig,
     pub latency: LatencyModelConfig,
     pub des: DesConfig,
+    pub pool: PoolConfig,
 }
 
 impl Config {
@@ -447,6 +468,7 @@ impl Config {
         self.training.validate().context("training")?;
         self.latency.validate().context("latency")?;
         self.des.validate().context("des")?;
+        self.pool.validate().context("pool")?;
         Ok(())
     }
 
@@ -540,6 +562,7 @@ impl Config {
             ("des", "waypoint_pause_s") => self.des.waypoint_pause_s = need_f64()?,
             ("des", "deadline_rel") => self.des.deadline_rel = need_f64()?,
             ("des", "stale_discount") => self.des.stale_discount = need_f64()?,
+            ("pool", "threads") => self.pool.threads = need_usize()?,
             (s, k) => bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -676,6 +699,20 @@ mod tests {
         assert_eq!(c.des.deadline_rel, 0.7);
         assert_eq!(c.des.stale_discount, 0.0);
         c.des.stale_discount = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pool_defaults_shared_and_overridable() {
+        let c = Config::default();
+        assert_eq!(c.pool.threads, 0, "default must defer to the shared pool");
+        c.pool.validate().unwrap();
+        let mut c = Config::default();
+        c.apply_override("pool", "threads", &toml::TomlValue::Int(6))
+            .unwrap();
+        assert_eq!(c.pool.threads, 6);
+        c.validate().unwrap();
+        c.pool.threads = 100_000;
         assert!(c.validate().is_err());
     }
 

@@ -42,7 +42,7 @@ use crate::des::events::{EventKind, EventQueue, TimelineRecorder};
 use crate::des::mobility::{MobilityProfile, Waypoint};
 use crate::des::straggler::{ComputeProfile, StragglerPolicy};
 use crate::fl::{consensus_from_rows, GradOracle, LrSchedule, TrainLog, TrainOptions};
-use crate::sim::matrix::run_parallel;
+use crate::pool::Lease;
 use crate::sim::result::TimelineDigest;
 use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
 use crate::tensor::{kernels, RowMatrix};
@@ -280,9 +280,10 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     sync_delta: Vec<f32>,
     /// Reusable sync message (UL/MBS/final-DL encodes).
     sync_msg: SparseVec,
-    /// Fan-out width for the per-MU compute+uplink work inside one
-    /// cluster aggregation (resolved from `TrainOptions::inner_threads`).
-    inner_threads: usize,
+    /// Lease on the persistent worker pool for the per-MU compute+uplink
+    /// fan-out inside one cluster aggregation (width resolved from
+    /// `TrainOptions::inner_threads`; `None` = sequential aggregations).
+    lease: Option<Lease>,
     /// Fan-out scratch slots, keyed by position in the current round's
     /// participant list (empty when the fan-out cannot run). Slot buffers
     /// grow to `dim` lazily on first use.
@@ -388,8 +389,9 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     /// Execute the cluster's round arithmetic (identical to one iteration of
     /// the sequential engine's inner loop) at the aggregation instant `t`.
     ///
-    /// The per-MU compute+uplink work fans out across the
-    /// [`run_parallel`] pool when `inner_threads > 1` and the oracle has a
+    /// The per-MU compute+uplink work fans out across lanes leased from
+    /// the persistent worker pool ([`crate::pool`]) when
+    /// `inner_threads > 1` and the oracle has a
     /// [`crate::fl::ParGradOracle`] view; the reduction (loss slots, bit
     /// accounting, aggregation into `agg`) always folds sequentially in
     /// MU-id order afterwards, so results are bit-identical to the
@@ -418,12 +420,14 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             }
         }
         let wd = self.topts.weight_decay;
-        let threads = self.inner_threads.min(parts.len()).max(1);
         let mut ran_parallel = false;
-        if threads > 1 && !self.par_bufs.is_empty() {
-            if let Some(par) = self.oracle.par_view() {
+        if parts.len() > 1 && !self.par_bufs.is_empty() {
+            if let (Some(lease), Some(par)) = (self.lease.as_ref(), self.oracle.par_view()) {
                 // Fan out: gradient + DGC compression per participant into
-                // its private buffers (disjoint MUs → disjoint state).
+                // its private buffers (disjoint MUs → disjoint state), on
+                // lanes leased from the persistent pool — no per-round
+                // thread spawns. The lease width is clamped to the
+                // participant count inside the pool.
                 let w_row = self.w_tilde.row(c);
                 let dgc = &self.dgc;
                 let bufs = &self.par_bufs;
@@ -432,21 +436,24 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                 // participant list*, not MU id: only one cluster is in
                 // flight at a time, so the number of slots that ever grow
                 // to `dim` is bounded by the largest cluster, not K.
-                let losses = run_parallel(parts.len(), threads, |idx| {
-                    let mu = parts[idx];
-                    let mut pb_guard = bufs[idx].lock().unwrap();
-                    let pb = &mut *pb_guard;
-                    if pb.grad.len() != dim {
-                        pb.grad.resize(dim, 0.0);
-                    }
-                    let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
-                    if wd != 0.0 {
-                        kernels::axpy(&mut pb.grad, w_row, wd);
-                    }
-                    dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
-                    loss
-                })
-                .with_context(|| format!("DES intra-round fan-out (cluster {c}, round {round})"))?;
+                let losses = lease
+                    .run_ordered(parts.len(), |idx| {
+                        let mu = parts[idx];
+                        let mut pb_guard = bufs[idx].lock().unwrap();
+                        let pb = &mut *pb_guard;
+                        if pb.grad.len() != dim {
+                            pb.grad.resize(dim, 0.0);
+                        }
+                        let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
+                        if wd != 0.0 {
+                            kernels::axpy(&mut pb.grad, w_row, wd);
+                        }
+                        dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
+                        loss
+                    })
+                    .with_context(|| {
+                        format!("DES intra-round fan-out (cluster {c}, round {round})")
+                    })?;
                 // Ordered reduction in MU-id order — never arrival order.
                 for (idx, &mu) in parts.iter().enumerate() {
                     self.round_loss[round * self.k_total + mu] = losses[idx];
@@ -805,12 +812,26 @@ pub fn run_des<O: GradOracle + ?Sized>(
     let mbs_enc = DiscountedError::new(dim, phi_mdl, topts.sparsity.beta_m as f32);
 
     // Intra-round fan-out width (same resolution policy as the sequential
-    // engine). Fan-out scratch slots exist only when the fan-out can
-    // actually run (the oracle has a thread-safe view); they start empty
-    // and grow to `dim` lazily, so resident memory is bounded by the
-    // largest cluster actually fanned out, not by K.
+    // engine), leased once from the persistent pool for the whole run.
+    // Fan-out scratch slots exist only when the fan-out can actually run
+    // (the oracle has a thread-safe view); they start empty and grow to
+    // `dim` lazily, so resident memory is bounded by the largest cluster
+    // actually fanned out, not by K.
     let inner_threads = crate::fl::algorithms::resolve_inner_threads(topts.inner_threads);
-    let par_bufs: Vec<Mutex<ParBuf>> = if inner_threads > 1 && oracle.par_view().is_some() {
+    let lease: Option<Lease> = if inner_threads > 1 && oracle.par_view().is_some() {
+        let handle = topts.pool.clone().unwrap_or_else(crate::pool::global_handle);
+        Some(handle.lease(inner_threads))
+    } else {
+        if inner_threads > 1 {
+            crate::log_info!(
+                "inner_threads={} requested but this oracle has no parallel view \
+                 (shared mutable state); DES aggregations run sequentially",
+                topts.inner_threads
+            );
+        }
+        None
+    };
+    let par_bufs: Vec<Mutex<ParBuf>> = if lease.is_some() {
         (0..k_total)
             .map(|_| {
                 Mutex::new(ParBuf {
@@ -820,13 +841,6 @@ pub fn run_des<O: GradOracle + ?Sized>(
             })
             .collect()
     } else {
-        if inner_threads > 1 {
-            crate::log_info!(
-                "inner_threads={} requested but this oracle has no parallel view \
-                 (shared mutable state); DES aggregations run sequentially",
-                topts.inner_threads
-            );
-        }
         Vec::new()
     };
 
@@ -883,7 +897,7 @@ pub fn run_des<O: GradOracle + ?Sized>(
         dl_out: SparseVec::empty(dim),
         sync_delta: vec![0.0; dim],
         sync_msg: SparseVec::empty(dim),
-        inner_threads,
+        lease,
         par_bufs,
         n_handovers: 0,
         n_late: 0,
@@ -939,6 +953,7 @@ mod tests {
             sparsity: cfg.sparsity.clone(),
             eval_every: 10,
             inner_threads: 1,
+            pool: None,
         }
     }
 

@@ -1,8 +1,9 @@
 //! Glue between the scenario matrix and the discrete-event engine: builds
 //! the scenario's oracle + radio config exactly like the sequential cell
-//! runner (same seed derivation, same `TrainOptions`, same config
-//! overrides), executes [`crate::des::engine::run_des`], and emits the
-//! shared [`ScenarioResult`]/[`GoldenTrace`] schema with the per-event
+//! runner (same seed derivation, same `TrainOptions` — including the
+//! [`crate::pool::PoolHandle`] lease source for the per-MU fan-out — same
+//! config overrides), executes [`crate::des::engine::run_des`], and emits
+//! the shared [`ScenarioResult`]/[`GoldenTrace`] schema with the per-event
 //! timeline digest attached.
 
 use crate::config::Config;

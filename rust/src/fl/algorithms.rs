@@ -47,8 +47,10 @@
 //!
 //! A round touches exactly one lane per cluster, so lanes stream through
 //! the cache front-to-back and — because lanes are disjoint `&mut` slices
-//! — the per-cluster compute+uplink blocks can fan out across the
-//! [`run_parallel`] work-stealing pool ([`TrainOptions::inner_threads`]).
+//! — the per-cluster compute+uplink blocks can fan out across lanes leased
+//! from the persistent worker pool ([`crate::pool`], via
+//! [`TrainOptions::inner_threads`]): one batch per round on threads that
+//! already exist, instead of the historical per-round scoped spawns.
 //!
 //! ### Determinism contract of the intra-round fan-out
 //!
@@ -68,7 +70,6 @@
 use super::lr_schedule::LrSchedule;
 use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use crate::config::SparsityConfig;
-use crate::sim::matrix::run_parallel;
 use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
 use crate::tensor::{kernels, padded, TensorArena};
 use std::sync::Mutex;
@@ -101,6 +102,10 @@ pub struct TrainOptions {
     /// sequentially; `0` uses one thread per available core. Results are
     /// bit-identical for every value (see the module docs).
     pub inner_threads: usize,
+    /// Persistent worker pool to lease the fan-out lanes from; `None`
+    /// (default) uses the process-wide shared pool
+    /// ([`crate::pool::global_handle`]). Bit-identical either way.
+    pub pool: Option<crate::pool::PoolHandle>,
 }
 
 impl Default for TrainOptions {
@@ -117,6 +122,7 @@ impl Default for TrainOptions {
             sparsity: SparsityConfig::dense(),
             eval_every: 0,
             inner_threads: 1,
+            pool: None,
         }
     }
 }
@@ -402,9 +408,10 @@ pub(crate) fn resolve_inner_threads(requested: usize) -> usize {
 /// The parametric engine: N clusters × (K/N) workers, DGC uplinks,
 /// discounted-error model-difference encoders on the other three links,
 /// period-H global averaging. All state lives in one cache-aligned
-/// [`TensorArena`]; the per-cluster blocks of each round fan out across
-/// [`run_parallel`] when [`TrainOptions::inner_threads`] asks for it,
-/// bit-exactly (see the module docs for the layout and the contract).
+/// [`TensorArena`]; the per-cluster blocks of each round fan out across a
+/// lease on the persistent worker pool ([`crate::pool`]) when
+/// [`TrainOptions::inner_threads`] asks for it, bit-exactly (see the
+/// module docs for the layout and the contract).
 pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
     let dim = oracle.dim();
     let k_total = oracle.n_workers();
@@ -477,29 +484,36 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
             opts.inner_threads
         );
     }
+    // One lease for the whole run: the pool threads persist across rounds,
+    // so each round costs a batch push + condvar wake, not `inner` spawns.
+    let lease = use_par.then(|| {
+        let handle = opts.pool.clone().unwrap_or_else(crate::pool::global_handle);
+        handle.lease(inner)
+    });
 
     for t in 0..opts.iters {
         let lr = schedule.at(t) as f32;
 
         // --- Per-cluster compute+uplink blocks, fanned out when asked ---
-        let outs: Vec<ClusterOut> = if use_par {
+        let outs: Vec<ClusterOut> = if let Some(lease) = &lease {
             let par = oracle.par_view().expect("par_view checked above");
-            run_parallel(n, inner, |c| {
-                let mut lane = lanes[c].lock().unwrap();
-                round_cluster(
-                    &mut ParOracle(par),
-                    &mut lane,
-                    c,
-                    per_cluster,
-                    dim,
-                    pad,
-                    lr,
-                    opts.weight_decay,
-                    dgc_kernel,
-                    dl_kernel,
-                )
-            })
-            .expect("intra-round fan-out pool failed")
+            lease
+                .run_ordered(n, |c| {
+                    let mut lane = lanes[c].lock().unwrap();
+                    round_cluster(
+                        &mut ParOracle(par),
+                        &mut lane,
+                        c,
+                        per_cluster,
+                        dim,
+                        pad,
+                        lr,
+                        opts.weight_decay,
+                        dgc_kernel,
+                        dl_kernel,
+                    )
+                })
+                .expect("intra-round fan-out pool failed")
         } else {
             let mut seq = Vec::with_capacity(n);
             for c in 0..n {
@@ -632,6 +646,7 @@ mod tests {
             sparsity: SparsityConfig::dense(),
             eval_every: 0,
             inner_threads: 1,
+            pool: None,
         }
     }
 
@@ -869,6 +884,33 @@ mod tests {
                 assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn dedicated_pool_lease_matches_shared_pool_bit_exactly() {
+        // TrainOptions::pool routes the fan-out through an explicit
+        // WorkerPool; results must match the shared-pool run bit for bit
+        // (the pool only changes where the lanes come from).
+        let run = |pool: Option<crate::pool::PoolHandle>| {
+            let mut o = opts(30);
+            o.n_clusters = 4;
+            o.h_period = 2;
+            o.inner_threads = 4;
+            o.sparsity = SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.8,
+                ..SparsityConfig::default()
+            };
+            o.pool = pool;
+            let mut oracle = QuadraticOracle::new_skewed(16, 8, 0.0, 1.0, 777);
+            run_hierarchical(&mut oracle, &o)
+        };
+        let shared = run(None);
+        let pool = crate::pool::WorkerPool::new(2);
+        let dedicated = run(Some(pool.handle()));
+        let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits_of(&shared.final_params), bits_of(&dedicated.final_params));
+        assert_eq!(shared.bits, dedicated.bits);
     }
 
     #[test]

@@ -30,7 +30,8 @@
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
 //! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation — owning structs + stateless arena kernels |
 //! | [`tensor`] | **flat tensor arenas + fused kernels**: one cache-aligned allocation for all per-cluster/per-worker hot-path state, bit-exact axpy/scale/scatter kernels, lane splitting for the intra-round fan-out |
-//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 on the tensor arena with deterministic per-cluster fan-out (`inner_threads`), quadratic oracles (IID→non-IID skew) |
+//! | [`pool`] | **persistent deterministic worker pool**: condvar-parked lanes created once per process, per-batch work-stealing queues, ordered-slot reduction, nested leases for the fl/des engines, panic propagation with item context |
+//! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 on the tensor arena with deterministic per-cluster fan-out (`inner_threads`, leased from [`pool`]), quadratic oracles (IID→non-IID skew) |
 //! | [`data`] | synthetic CIFAR-like dataset, non-shuffled partitioner, batcher |
 //! | [`runtime`] | PJRT client wrapper + HLO artifact registry (`pjrt` feature; offline stub by default) |
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
@@ -54,6 +55,11 @@
 //! fold in global worker order afterwards, so training results are
 //! bit-identical for every fan-out width — asserted across
 //! `inner_threads ∈ {1, 2, 8}` by `rust/tests/property_suite.rs`.
+//!
+//! All of these fan-outs execute on the persistent [`pool`] subsystem
+//! (created once per process, or per command via `--pool-threads`); the
+//! pool's ordered-slot reduction preserves the exact contract above for
+//! every pool size and lease width.
 
 pub mod cli;
 pub mod config;
@@ -61,6 +67,7 @@ pub mod coordinator;
 pub mod data;
 pub mod des;
 pub mod fl;
+pub mod pool;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;

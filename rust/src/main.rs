@@ -7,18 +7,26 @@
 //! hfl latency   [--fig 3|4|5a|5b|all] [--out results/]        regenerate Fig. 3–5 data
 //! hfl train     [--algo fl|hfl|sparse-fl|sparse-hfl] [--model mlp|cnn]
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
-//!               [--inner-threads N] [--coordinated]            train on the AOT model
+//!               [--inner-threads N] [--pool-threads N]
+//!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
-//! hfl matrix    [--quick|--full] [--threads N] [--iters N] [--dim N]
+//! hfl matrix    [--quick|--full] [--threads N] [--pool-threads N]
+//!               [--iters N] [--dim N]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
 //! hfl des       [--quick|--full] [--threads N] [--inner-threads N]
-//!               [--iters N] [--dim N]
+//!               [--pool-threads N] [--iters N] [--dim N]
 //!               [--compute-mean S] [--compute-het X]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
 //!                                  (mobility × straggler × deadline axes)
 //! ```
+//!
+//! `--pool-threads N` builds a dedicated persistent worker pool with `N`
+//! execution lanes for the whole command (`0`/default: the lazily created
+//! process-wide shared pool); every fan-out — the cross-cell grid and the
+//! nested per-cluster/per-MU lanes — leases from it. Results are
+//! bit-identical for every value (see `hfl::pool`).
 
 use anyhow::{bail, Result};
 use hfl::cli::Args;
@@ -170,6 +178,10 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     let test_samples = args.get_parsed_or("test-samples", cfg.training.test_samples)?;
     // Intra-round fan-out width (bit-exact for any value; 0 = auto).
     let inner_threads = args.get_parsed_or("inner-threads", 1usize)?;
+    // Dedicated persistent pool for this command, if requested; must stay
+    // alive until training finishes (dropping it joins the workers).
+    let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
+    let pool = dedicated_pool.as_ref().map(|p| p.handle());
     args.finish()?;
 
     let (n_clusters, sparse) = match algo.as_str() {
@@ -196,6 +208,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
         },
         eval_every: (iters / 8).max(1),
         inner_threads,
+        pool,
     };
     let spec = SyntheticSpec {
         n_train: train_samples,
@@ -284,6 +297,7 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     let out = args.get_or("out", "results");
     let write_golden = args.get("write-golden").map(str::to_string);
     let check_golden = args.get("check-golden").map(str::to_string);
+    let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     args.finish()?;
 
     let spec = if full {
@@ -296,6 +310,7 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
         base_seed: cfg.training.seed,
         compute_mean_s: cfg.des.compute_mean_s,
         compute_het: cfg.des.compute_het,
+        pool: dedicated_pool.as_ref().map(|p| p.handle()),
         ..Default::default()
     };
     if let Some(it) = iters {
@@ -333,6 +348,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let out = args.get_or("out", "results");
     let write_golden = args.get("write-golden").map(str::to_string);
     let check_golden = args.get("check-golden").map(str::to_string);
+    let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     args.finish()?;
 
     let spec = if full {
@@ -347,6 +363,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
         compute_mean_s: compute_mean,
         compute_het,
         inner_threads,
+        pool: dedicated_pool.as_ref().map(|p| p.handle()),
         ..Default::default()
     };
     if let Some(it) = iters {

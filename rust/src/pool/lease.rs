@@ -1,0 +1,156 @@
+//! Leasing layer of the worker pool: the type-erased [`Batch`] a submitter
+//! hands to the pool, and the width-capped [`Lease`] the training engines
+//! hold for the duration of a run.
+//!
+//! A `Batch` is one ordered parallel map: `n_items` jobs, `width` lanes
+//! ([`super::queue::LaneQueues`]), a lifetime-erased pointer to the
+//! submitter's job closure, and the completion/panic bookkeeping. The
+//! submitting thread always attaches as one executor and then blocks until
+//! every item has finished — that wait is what makes the lifetime erasure
+//! sound: the closure (and everything it borrows) provably outlives every
+//! job invocation, exactly like the `std::thread::scope` fan-out this
+//! subsystem replaces.
+
+use super::queue::LaneQueues;
+use super::PoolHandle;
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+/// Calls the concrete closure behind the erased pointer.
+///
+/// # Safety
+/// `data` must point to a live `F` for the duration of the call.
+unsafe fn trampoline<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
+    let f = &*(data as *const F);
+    f(idx);
+}
+
+/// One submitted ordered parallel map, shared between the submitter and
+/// any pool workers that attach to it.
+pub(crate) struct Batch {
+    queues: LaneQueues,
+    n_items: usize,
+    /// Lifetime-erased pointer to the submitter's `Fn(usize) + Sync`
+    /// closure. Only dereferenced (through `job_call`) for the `n_items`
+    /// claimed jobs, all of which complete before the submitter's
+    /// [`Batch::wait_done`] returns.
+    job_data: *const (),
+    job_call: unsafe fn(*const (), usize),
+    /// Completed-item count; guarded by a mutex (not an atomic) so
+    /// [`Batch::wait_done`] can park on the condvar without lost wakeups.
+    done: Mutex<usize>,
+    all_done: Condvar,
+    /// First panic observed in a job, with its item index.
+    panic: Mutex<Option<(usize, PanicPayload)>>,
+}
+
+// SAFETY: `job_data` points to a closure that is `Sync` (shared calls from
+// any thread are safe) and that the submitting thread keeps alive until
+// `wait_done` returns; no job is ever invoked after the last item has been
+// handed out. All other fields are `Send + Sync` by construction.
+unsafe impl Send for Batch {}
+unsafe impl Sync for Batch {}
+
+impl Batch {
+    /// Wrap `job` for pool execution over `n_items` items on `width` lanes.
+    ///
+    /// # Safety
+    /// The caller must keep `job` alive and un-moved until
+    /// [`Batch::wait_done`] has returned on the submitting thread.
+    pub(crate) unsafe fn new<F: Fn(usize) + Sync>(job: &F, n_items: usize, width: usize) -> Self {
+        Self {
+            queues: LaneQueues::new(n_items, width),
+            n_items,
+            job_data: job as *const F as *const (),
+            job_call: trampoline::<F>,
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    /// True when a pool worker could usefully attach: items remain and an
+    /// executor slot is free.
+    pub(crate) fn attachable(&self) -> bool {
+        self.queues.has_work() && self.queues.has_free_lane()
+    }
+
+    /// Attach as one executor: claim a lane, drain items (own queue first,
+    /// then steals), release the lane. Returns immediately when the batch
+    /// is already fully manned. A panicking job is recorded (first one
+    /// wins) and still counts as completed, so the batch always drains.
+    pub(crate) fn work(&self) {
+        let lane = match self.queues.claim_lane() {
+            Some(lane) => lane,
+            None => return,
+        };
+        while let Some(idx) = self.queues.next_item(lane) {
+            let result =
+                catch_unwind(AssertUnwindSafe(|| unsafe { (self.job_call)(self.job_data, idx) }));
+            if let Err(payload) = result {
+                let mut p = self.panic.lock().unwrap();
+                if p.is_none() {
+                    *p = Some((idx, payload));
+                }
+            }
+            let mut d = self.done.lock().unwrap();
+            *d += 1;
+            if *d == self.n_items {
+                self.all_done.notify_all();
+            }
+        }
+        self.queues.release_lane(lane);
+    }
+
+    /// Block until every item has finished (successfully or by panicking).
+    pub(crate) fn wait_done(&self) {
+        let mut d = self.done.lock().unwrap();
+        while *d < self.n_items {
+            d = self.all_done.wait(d).unwrap();
+        }
+    }
+
+    /// First job panic, if any — taken by the submitter after completion.
+    pub(crate) fn take_panic(&self) -> Option<(usize, PanicPayload)> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// A width-capped lease on a pool. Engines resolve their fan-out width
+/// once (`TrainOptions::inner_threads` → [`PoolHandle::lease`]) and push
+/// one batch per round through the lease; the pool threads persist across
+/// rounds, so the per-round cost is a queue push + condvar wake instead of
+/// `width` thread spawns.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    handle: PoolHandle,
+    width: usize,
+}
+
+impl Lease {
+    pub(crate) fn new(handle: PoolHandle, width: usize) -> Self {
+        Self {
+            handle,
+            width: width.max(1),
+        }
+    }
+
+    /// Leased fan-out width: the maximum number of concurrent executors
+    /// (including the submitting thread) a batch on this lease may use.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Ordered parallel map over `0..n_items` at the leased width — the
+    /// per-round entry point of the training engines.
+    pub fn run_ordered<T, F>(&self, n_items: usize, f: F) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.handle.run_ordered(n_items, self.width, f)
+    }
+}

@@ -1,0 +1,438 @@
+//! Persistent deterministic **worker-pool subsystem** for the fl/des/sim
+//! hot path.
+//!
+//! The PR-3 intra-round fan-out priced every round with fresh
+//! `std::thread::scope` spawns: O(rounds × clusters) thread creations per
+//! training run, which at small dimensions dominated the round itself. This
+//! module replaces that with a pool that is created **once** per process
+//! (or once per command via `--pool-threads`) and *leased* through the
+//! stack:
+//!
+//! * [`crate::sim::matrix::run_matrix`] runs the outer scenario grid as one
+//!   batch on the pool;
+//! * [`crate::fl::run_hierarchical`] and the DES engine
+//!   ([`crate::des::engine`]) lease nested lanes ([`PoolHandle::lease`])
+//!   for the per-cluster compute+uplink and per-MU compute+DGC fan-outs —
+//!   one batch per round, no spawns;
+//! * [`crate::sim::matrix::run_parallel`] survives as a thin compatibility
+//!   shim over [`PoolHandle::run_ordered`].
+//!
+//! ## Execution model
+//!
+//! The pool owns `lanes − 1` parked worker threads (std `Condvar` parking,
+//! no crossbeam); the submitting thread is always the remaining lane. A
+//! submitted [`lease::Batch`] carries its own per-lane work-stealing
+//! queues ([`queue::LaneQueues`]) preloaded with the identical strided
+//! distribution the scoped engine used. Workers wake, attach to a batch
+//! with free executor slots, drain items (own queue front first, then
+//! steals from victims' backs), and go back to sleep. The submitter
+//! attaches too and then blocks until the batch drains — which is what
+//! makes the borrowed-closure lifetime erasure sound and keeps nested
+//! submissions deadlock-free: every batch can always make progress on its
+//! own submitter even when all pool workers are busy.
+//!
+//! ## Determinism contract
+//!
+//! Identical to the historical `run_parallel`: results are returned in
+//! item-index order through an **ordered-slot reduction**, items are
+//! disjoint, and no reduction ever folds in completion order — so results
+//! are bit-identical for every pool size, lease width, and scheduling
+//! interleaving. The golden suites (`matrix_golden`, `des_golden`,
+//! coordinator equivalence) pass unchanged with the pool active at any
+//! thread count.
+//!
+//! ## Panics and errors
+//!
+//! A panicking job does not poison the pool: the panic is captured, the
+//! batch still drains, and the submitter re-raises the payload on its own
+//! thread with the failing item's index attached (`pool job <i> panicked:
+//! …`) — preserving the `std::thread::scope` propagation semantics while
+//! adding scenario context.
+
+pub mod lease;
+pub(crate) mod queue;
+
+pub use lease::Lease;
+
+use anyhow::{bail, Result};
+use lease::Batch;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// State shared between the pool's workers and every [`PoolHandle`].
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+}
+
+#[derive(Default)]
+struct State {
+    /// Batches with work outstanding, oldest first. A batch is pushed by
+    /// its submitter when advertised and removed by the same submitter
+    /// once it has drained.
+    batches: Vec<Arc<Batch>>,
+    shutdown: bool,
+}
+
+/// A persistent pool of `lanes` concurrent execution lanes — `lanes − 1`
+/// parked worker threads plus whichever thread submits a batch. Dropping
+/// the pool signals shutdown and joins the workers; handles taken from it
+/// keep working afterwards (batches then run entirely on their submitter).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    lanes: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `lanes` total execution lanes (including the
+    /// submitting thread); `0` means one lane per available core.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = if lanes == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            lanes
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work_ready: Condvar::new(),
+        });
+        let workers = (1..lanes)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hfl-pool-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            lanes,
+            workers,
+        }
+    }
+
+    /// Total execution lanes (including the submitting thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// A cloneable, `Send + Sync` handle for threading through options
+    /// structs and leasing nested lanes.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle {
+            shared: Arc::clone(&self.shared),
+            lanes: self.lanes,
+        }
+    }
+
+    /// Ordered parallel map — see [`PoolHandle::run_ordered`].
+    pub fn run_ordered<T, F>(&self, n_items: usize, width: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.handle().run_ordered(n_items, width, f)
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("lanes", &self.lanes)
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A worker: park until a batch has work and a free executor slot, attach
+/// and drain, repeat. Shutdown only wins once no batch is attachable, so
+/// dropping the pool never strands submitted work.
+fn worker_loop(shared: &Shared) {
+    let mut state = shared.state.lock().unwrap();
+    loop {
+        let attachable = state.batches.iter().find(|b| b.attachable()).cloned();
+        if let Some(batch) = attachable {
+            drop(state);
+            batch.work();
+            state = shared.state.lock().unwrap();
+            continue;
+        }
+        if state.shutdown {
+            break;
+        }
+        state = shared.work_ready.wait(state).unwrap();
+    }
+}
+
+/// Cloneable reference to a pool, independent of the [`WorkerPool`]'s
+/// lifetime. Threaded through [`crate::fl::TrainOptions`] /
+/// [`crate::sim::matrix::MatrixOptions`] so every layer of a run leases
+/// lanes from the same pool.
+#[derive(Clone)]
+pub struct PoolHandle {
+    shared: Arc<Shared>,
+    lanes: usize,
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHandle")
+            .field("lanes", &self.lanes)
+            .finish()
+    }
+}
+
+impl PoolHandle {
+    /// Lane count the pool was built with.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Take a width-capped lease for a training run's nested fan-outs.
+    /// A width of 0 is normalized to 1 (sequential).
+    pub fn lease(&self, width: usize) -> Lease {
+        Lease::new(self.clone(), width)
+    }
+
+    /// Ordered parallel map over item indices `0..n_items` with at most
+    /// `width` concurrent executors (including the calling thread), which
+    /// is clamped to `n_items` — an over-wide request never creates idle
+    /// lanes. Returns `f(0), f(1), …` in index order no matter which lane
+    /// computed what; bit-identical for every `width` and pool size.
+    ///
+    /// The calling thread always participates, so the call makes progress
+    /// even when every pool worker is busy — nested calls from inside pool
+    /// jobs cannot deadlock. `width == 0` is an error; a panicking `f` is
+    /// re-raised on the calling thread with the item index attached.
+    pub fn run_ordered<T, F>(&self, n_items: usize, width: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if width == 0 {
+            bail!("pool fan-out needs at least one lane");
+        }
+        if n_items == 0 {
+            return Ok(Vec::new());
+        }
+        let width = width.min(n_items);
+        let slots: Vec<Mutex<Option<T>>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+        let job = |idx: usize| {
+            let v = f(idx);
+            let mut slot = slots[idx].lock().unwrap();
+            // Guard against a scheduler bug handing an item out twice: the
+            // panic is captured by the batch and re-raised on the submitter
+            // instead of silently overwriting the first result.
+            assert!(slot.is_none(), "item {idx} was computed twice (scheduler bug)");
+            *slot = Some(v);
+        };
+        // SAFETY: `job` (and everything it borrows — `f`, `slots`) lives on
+        // this stack frame until after `wait_done` returns below, and no
+        // executor invokes the job once the last item has been handed out.
+        let batch = Arc::new(unsafe { Batch::new(&job, n_items, width) });
+        // A single-lane batch runs entirely on this thread — skip the
+        // advertising round-trip.
+        let advertised = width > 1;
+        if advertised {
+            let mut st = self.shared.state.lock().unwrap();
+            st.batches.push(Arc::clone(&batch));
+            drop(st);
+            // At most `width − 1` workers can help (the submitter below is
+            // the remaining lane); waking only that many keeps a narrow
+            // nested batch from stampeding every parked worker each round.
+            for _ in 1..width {
+                self.shared.work_ready.notify_one();
+            }
+        }
+        batch.work();
+        batch.wait_done();
+        if advertised {
+            let mut st = self.shared.state.lock().unwrap();
+            if let Some(pos) = st.batches.iter().position(|b| Arc::ptr_eq(b, &batch)) {
+                st.batches.remove(pos);
+            }
+        }
+        if let Some((idx, payload)) = batch.take_panic() {
+            resume_with_context(idx, payload);
+        }
+        let mut out = Vec::with_capacity(n_items);
+        for (idx, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().expect("result slot poisoned") {
+                Some(v) => out.push(v),
+                None => bail!("pool reduction: item {idx} produced no result (scheduler bug)"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Re-raise a captured job panic on the submitting thread, prefixing the
+/// failing item's index when the payload is a readable message.
+fn resume_with_context(item: usize, payload: Box<dyn std::any::Any + Send>) -> ! {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        panic!("pool job {item} panicked: {s}");
+    }
+    if let Some(s) = payload.downcast_ref::<String>() {
+        panic!("pool job {item} panicked: {s}");
+    }
+    std::panic::resume_unwind(payload)
+}
+
+/// Handle to the process-wide shared pool, created lazily with one lane
+/// per available core the first time any engine fans out without an
+/// explicit [`PoolHandle`] in its options. Never torn down: idle workers
+/// stay parked on the condvar for the life of the process.
+pub fn global_handle() -> PoolHandle {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(0)).handle()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ordered_and_complete_for_any_width() {
+        let pool = WorkerPool::new(4);
+        for width in [1usize, 2, 3, 8, 64] {
+            let calls = AtomicUsize::new(0);
+            let out = pool
+                .run_ordered(17, width, |i| {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    i * i
+                })
+                .unwrap();
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "width={width}");
+            assert_eq!(calls.load(Ordering::SeqCst), 17, "width={width}");
+        }
+        assert!(pool.run_ordered(0, 3, |i| i).unwrap().is_empty());
+        assert!(pool.run_ordered(3, 0, |i| i).is_err(), "zero lanes is an error");
+    }
+
+    #[test]
+    fn width_is_clamped_to_items() {
+        // A `width > n_items` request must not create idle lanes (the
+        // historical scoped engine parked the excess workers on spawn):
+        // the batch is built with exactly `n_items` lanes and completes.
+        let pool = WorkerPool::new(2);
+        let out = pool.run_ordered(2, 64, |i| i + 1).unwrap();
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // Outer batch saturates the pool; every job then leases a nested
+        // batch. The nested submitters drive their own batches, so the
+        // whole thing drains even with zero free workers.
+        let pool = WorkerPool::new(3);
+        let handle = pool.handle();
+        let out = pool
+            .run_ordered(6, 3, |i| {
+                let inner = handle.run_ordered(5, 2, |j| (i * 10 + j) as u64).unwrap();
+                inner.iter().sum::<u64>()
+            })
+            .unwrap();
+        let expect: Vec<u64> = (0..6)
+            .map(|i| (0..5).map(|j| (i * 10 + j) as u64).sum())
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn panic_in_job_propagates_with_item_context() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.run_ordered(8, 4, |i| {
+                if i == 5 {
+                    panic!("scenario `c4x2-h2-skew1` diverged");
+                }
+                i
+            });
+        }));
+        let payload = res.expect_err("panic must propagate to the submitter");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("pool job 5 panicked"), "missing item context: {msg}");
+        assert!(msg.contains("scenario `c4x2-h2-skew1` diverged"), "lost payload: {msg}");
+    }
+
+    #[test]
+    fn panicking_batch_leaves_the_pool_reusable() {
+        let pool = WorkerPool::new(3);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.run_ordered(4, 2, |i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+                i
+            });
+        }));
+        // The pool must keep scheduling normally after a job panic.
+        assert_eq!(pool.run_ordered(5, 2, |i| i * 3).unwrap(), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn repeated_batches_and_clean_drop() {
+        let pool = WorkerPool::new(4);
+        for round in 0..50 {
+            let out = pool.run_ordered(9, 3, |i| i + round).unwrap();
+            assert_eq!(out[8], 8 + round);
+        }
+        drop(pool); // joins workers; must not hang
+    }
+
+    #[test]
+    fn handle_survives_pool_drop() {
+        let pool = WorkerPool::new(3);
+        let handle = pool.handle();
+        drop(pool);
+        // All workers are gone; the submitter lane still completes batches.
+        assert_eq!(handle.run_ordered(6, 4, |i| i).unwrap(), (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn global_handle_is_shared_and_usable() {
+        let a = global_handle();
+        let b = global_handle();
+        assert_eq!(a.lanes(), b.lanes());
+        assert_eq!(a.run_ordered(4, 2, |i| i).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn lease_caps_width_and_runs_ordered() {
+        let pool = WorkerPool::new(4);
+        let lease = pool.handle().lease(2);
+        assert_eq!(lease.width(), 2);
+        assert_eq!(lease.run_ordered(5, |i| i * 2).unwrap(), vec![0, 2, 4, 6, 8]);
+        // Width 0 normalizes to sequential rather than erroring: engines
+        // resolve `inner_threads == 0` to "auto" before leasing, so a
+        // literal 0 here means "no fan-out requested".
+        assert_eq!(pool.handle().lease(0).width(), 1);
+    }
+
+    #[test]
+    fn zero_lane_pool_uses_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.lanes() >= 1);
+        assert_eq!(pool.run_ordered(3, pool.lanes(), |i| i).unwrap(), vec![0, 1, 2]);
+    }
+}

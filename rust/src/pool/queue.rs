@@ -1,0 +1,130 @@
+//! Per-lane job queues of one pool batch — the work-distribution half of
+//! the `run_parallel` contract, extracted so the persistent pool schedules
+//! jobs exactly like the historical per-round `std::thread::scope` fan-out
+//! did.
+//!
+//! A batch of `n_items` jobs is split across `width` *lanes*. Lane `l` is
+//! preloaded with the strided share `l, l + width, l + 2·width, …` — the
+//! identical distribution the scoped engine used — and an executor attached
+//! to lane `l` pops its own queue from the front, then steals from the back
+//! of the nearest non-empty victim. Items are disjoint, so scheduling
+//! affects wall-clock only, never results: the ordered-slot reduction
+//! upstream is keyed by item index, not completion order.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The strided per-lane deques of one batch plus the executor-slot
+/// accounting (which lanes are currently manned, how many items remain).
+pub(crate) struct LaneQueues {
+    lanes: Vec<Mutex<VecDeque<usize>>>,
+    /// Lane ids not currently claimed by an executor.
+    free: Mutex<Vec<usize>>,
+    /// Items not yet popped by any executor.
+    unclaimed: AtomicUsize,
+}
+
+impl LaneQueues {
+    /// Preload `n_items` across `width` lanes in the strided pattern.
+    pub fn new(n_items: usize, width: usize) -> Self {
+        assert!(width >= 1, "a batch needs at least one lane");
+        let lanes = (0..width)
+            .map(|l| Mutex::new((l..n_items).step_by(width).collect()))
+            .collect();
+        Self {
+            lanes,
+            // Popped back-to-front, so lane 0 goes to the first claimant
+            // (the submitting thread, which attaches before advertising
+            // completes in the common case).
+            free: Mutex::new((0..width).rev().collect()),
+            unclaimed: AtomicUsize::new(n_items),
+        }
+    }
+
+    /// True while any item is still waiting to be popped.
+    pub fn has_work(&self) -> bool {
+        self.unclaimed.load(Ordering::Acquire) > 0
+    }
+
+    pub fn has_free_lane(&self) -> bool {
+        !self.free.lock().unwrap().is_empty()
+    }
+
+    /// Claim an executor slot, or `None` when the batch is fully manned.
+    pub fn claim_lane(&self) -> Option<usize> {
+        self.free.lock().unwrap().pop()
+    }
+
+    pub fn release_lane(&self, lane: usize) {
+        self.free.lock().unwrap().push(lane);
+    }
+
+    /// Next item for the executor on `lane`: own queue front first, then a
+    /// steal from the back of the nearest non-empty victim.
+    pub fn next_item(&self, lane: usize) -> Option<usize> {
+        let width = self.lanes.len();
+        if let Some(i) = self.lanes[lane].lock().unwrap().pop_front() {
+            self.unclaimed.fetch_sub(1, Ordering::AcqRel);
+            return Some(i);
+        }
+        for off in 1..width {
+            let victim = (lane + off) % width;
+            if let Some(i) = self.lanes[victim].lock().unwrap().pop_back() {
+                self.unclaimed.fetch_sub(1, Ordering::AcqRel);
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn preload_is_strided_like_the_scoped_engine() {
+        let q = LaneQueues::new(10, 3);
+        // Lane 0 drains 0, 3, 6, 9 from its own front before stealing.
+        let mut own = Vec::new();
+        for _ in 0..4 {
+            own.push(q.next_item(0).unwrap());
+        }
+        assert_eq!(own, vec![0, 3, 6, 9]);
+        // The next pop steals from a victim's back.
+        assert!(q.next_item(0).is_some());
+    }
+
+    #[test]
+    fn every_item_is_handed_out_exactly_once() {
+        for (n, width) in [(1usize, 1usize), (7, 2), (16, 4), (5, 8)] {
+            let q = LaneQueues::new(n, width);
+            let mut seen = BTreeSet::new();
+            let mut lane = 0usize;
+            while let Some(i) = q.next_item(lane) {
+                assert!(seen.insert(i), "item {i} handed out twice");
+                lane = (lane + 1) % width;
+            }
+            assert_eq!(seen.len(), n, "n={n} width={width}");
+            assert!(!q.has_work());
+            for l in 0..width {
+                assert!(q.next_item(l).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn lane_claims_are_bounded_by_width() {
+        let q = LaneQueues::new(4, 2);
+        let a = q.claim_lane().unwrap();
+        let b = q.claim_lane().unwrap();
+        assert_ne!(a, b);
+        assert!(q.claim_lane().is_none(), "only `width` executors may attach");
+        assert!(!q.has_free_lane());
+        q.release_lane(a);
+        assert!(q.has_free_lane());
+        assert!(q.claim_lane().is_some());
+    }
+}

@@ -8,25 +8,32 @@
 //! * `oracle` — `ModelOracle`: implements [`crate::fl::GradOracle`] on top
 //!   of the `train_step`/`eval_step` executables plus the synthetic dataset.
 //!
-//! The `client`/`oracle` pair links against the `xla` crate and is gated
-//! behind the **`pjrt`** cargo feature; the default (offline) build swaps in
-//! [`stub`], which exposes the identical API but whose constructors return
-//! errors — so every caller compiles unchanged and the pure-Rust paths
-//! (quadratic oracles, the scenario-matrix engine, the wireless model) work
-//! with zero native dependencies.
+//! ## Gating: the `pjrt` feature and the `pjrt_native` cfg
+//!
+//! The native `client`/`oracle` pair links against the `xla` crate, which
+//! is not on the offline registry — so it compiles only when **both** the
+//! `pjrt` cargo feature is enabled *and* the builder opts in with
+//! `RUSTFLAGS="--cfg pjrt_native"` after adding the `xla` dependency (see
+//! README.md §PJRT). Every other combination — the default build, and
+//! `--features pjrt` alone — swaps in [`stub`], which exposes the
+//! identical API but whose constructors return errors. This two-level
+//! gate is what lets CI build and test the `pjrt` feature set offline
+//! (catching signature bitrot in every caller) without the native
+//! dependency. (`pjrt_native` is declared via `[lints.rust]
+//! unexpected_cfgs` check-cfg in Cargo.toml.)
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_native))]
 pub mod client;
 pub mod manifest;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_native))]
 pub mod oracle;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_native)))]
 pub mod stub;
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_native))]
 pub use client::{Executable, Runtime, TensorArg};
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta, TensorMeta};
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_native))]
 pub use oracle::ModelOracle;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", pjrt_native)))]
 pub use stub::{Executable, ModelOracle, Runtime, TensorArg};

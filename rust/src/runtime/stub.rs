@@ -1,11 +1,14 @@
-//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
-//! cargo feature is **off** (the default, offline build). Every constructor
-//! returns an error explaining how to enable the real thing, and the types
-//! are uninhabited so no dead execution path survives into the binary:
-//! callers that match on `Runtime::load*` errors (benches, examples, the
+//! API-compatible stand-in for the PJRT runtime, compiled whenever the
+//! native client is unavailable: the default offline build, and builds
+//! with `--features pjrt` but without the `--cfg pjrt_native` opt-in that
+//! links the `xla` crate (the combination CI exercises to keep the
+//! feature-gated callers from bitrotting). Every constructor returns an
+//! error explaining how to enable the real thing, and the types are
+//! uninhabited so no dead execution path survives into the binary: callers
+//! that match on `Runtime::load*` errors (benches, examples, the
 //! table3/train subcommands) degrade gracefully, everything else still
-//! type-checks against the exact same signatures as [`super::client`] /
-//! [`super::oracle`].
+//! type-checks against the exact same signatures as the native
+//! `runtime::client` / `runtime::oracle` pair.
 
 use super::manifest::{ArtifactMeta, ModelMeta};
 use crate::data::SyntheticSpec;
@@ -19,9 +22,9 @@ use std::sync::Arc;
 #[derive(Clone, Copy, Debug)]
 enum Never {}
 
-const DISABLED: &str = "hfl was built without the `pjrt` feature: the PJRT/XLA runtime is \
-     unavailable. Rebuild with `cargo build --features pjrt` (after adding \
-     the `xla` dependency; see README.md §PJRT) or use the pure-Rust \
+const DISABLED: &str = "hfl was built without the native PJRT/XLA runtime (pjrt feature + \
+     pjrt_native cfg): rebuild with `RUSTFLAGS=\"--cfg pjrt_native\" cargo build --features \
+     pjrt` after adding the `xla` dependency (see README.md §PJRT), or use the pure-Rust \
      oracles (QuadraticOracle, sim::matrix).";
 
 /// A typed argument for [`Executable::run`] (mirrors the real signature).

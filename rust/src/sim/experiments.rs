@@ -153,6 +153,7 @@ where
                 },
                 eval_every: scale.eval_every,
                 inner_threads: 1,
+                pool: None,
             };
             let log: TrainLog = run_hierarchical(oracle.as_mut(), &opts);
             if first_trace.is_none() {

@@ -2,8 +2,11 @@
 //! ([`ScenarioSpec`]) over cluster counts × MUs-per-cell × IID/non-IID data
 //! skew × sparsity levels × aggregation period H × channel profiles
 //! (path-loss / straggler) × mobility profiles × straggler policies,
-//! expanded into concrete [`MatrixScenario`]s and executed across a
-//! work-stealing thread pool.
+//! expanded into concrete [`MatrixScenario`]s and executed across the
+//! persistent work-stealing worker pool ([`crate::pool`]) — created once
+//! per process (or per command via `--pool-threads`) and leased through
+//! the stack, so nested engine fan-outs share the same lanes instead of
+//! spawning scoped threads per round.
 //!
 //! Cells whose mobility/straggler axes sit at their defaults (static,
 //! wait-for-all) run on the sequential reference engine with analytic
@@ -33,12 +36,10 @@
 use crate::config::{Config, DesConfig, SparsityConfig};
 use crate::des::{MobilityProfile, StragglerPolicy};
 use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
+use crate::pool::PoolHandle;
 use crate::sim::result::{Engine, ScenarioMeta, ScenarioResult};
 use crate::util::rng::Pcg64;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::VecDeque;
-use std::sync::mpsc::channel;
-use std::sync::Mutex;
+use anyhow::{bail, Context, Result};
 
 /// Radio-environment profile applied to a scenario's latency model:
 /// path-loss exponent plus a multiplicative straggler slowdown (the
@@ -368,6 +369,11 @@ pub struct MatrixOptions {
     /// rounds, on top of the cross-cell `threads` pool. `1` (default) =
     /// sequential cells; bit-identical results for every value.
     pub inner_threads: usize,
+    /// Persistent worker pool the grid (and every nested engine fan-out)
+    /// leases lanes from; `None` uses the process-wide shared pool
+    /// ([`crate::pool::global_handle`]). Results are bit-identical either
+    /// way — the pool only changes where the threads come from.
+    pub pool: Option<PoolHandle>,
 }
 
 impl Default for MatrixOptions {
@@ -385,6 +391,7 @@ impl Default for MatrixOptions {
             compute_mean_s: 0.0,
             compute_het: 0.5,
             inner_threads: 1,
+            pool: None,
         }
     }
 }
@@ -410,7 +417,8 @@ pub fn run_matrix(
         opts.threads
     }
     .clamp(1, scenarios.len());
-    let cells = run_parallel(scenarios.len(), threads, |i| {
+    let pool = opts.pool.clone().unwrap_or_else(crate::pool::global_handle);
+    let cells = pool.run_ordered(scenarios.len(), threads, |i| {
         run_cell(cfg, &scenarios[i], opts)
     })?;
     cells
@@ -445,6 +453,7 @@ pub(crate) fn cell_train_options(
         },
         eval_every: opts.eval_every,
         inner_threads: opts.inner_threads,
+        pool: opts.pool.clone(),
     }
 }
 
@@ -511,14 +520,16 @@ pub fn matrix_latency(cfg: &Config, sc: &MatrixScenario) -> f64 {
 /// ordered reduction: returns `f(0), f(1), …` in index order no matter
 /// which worker computed what.
 ///
-/// Each worker owns a deque preloaded with a strided share of the items;
-/// it pops its own work from the front and, when empty, steals from the
-/// back of the next non-empty victim. Items are disjoint, so scheduling
-/// affects only wall-clock, never results.
-///
-/// A missing or duplicated reduction slot (a worker thread died, or an item
-/// was handed out twice) is reported as an error with the item index
-/// attached — it no longer aborts the whole process from inside the pool.
+/// Since the pool refactor this is a thin compatibility shim over the
+/// persistent [`crate::pool`] subsystem (the process-wide shared pool):
+/// the per-lane strided preload, front-pop/back-steal scheduling, and the
+/// ordered-slot reduction are identical to the historical per-call
+/// `std::thread::scope` implementation, but the threads are created once
+/// per process instead of once per call. `threads` is **clamped to
+/// `n_items`** — an over-wide request no longer parks excess workers on
+/// spawn, it simply never creates the idle lanes. `threads == 0` remains
+/// an error, and a missing reduction slot is reported with the item index
+/// attached rather than aborting from inside the pool.
 pub fn run_parallel<T, F>(n_items: usize, threads: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
@@ -527,62 +538,7 @@ where
     if threads == 0 {
         bail!("run_parallel needs at least one worker thread");
     }
-    if n_items == 0 {
-        return Ok(Vec::new());
-    }
-    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
-        .map(|w| Mutex::new((w..n_items).step_by(threads).collect()))
-        .collect();
-    let (tx, rx) = channel::<(usize, T)>();
-    std::thread::scope(|scope| {
-        for w in 0..threads {
-            let tx = tx.clone();
-            let queues = &queues;
-            let f = &f;
-            scope.spawn(move || loop {
-                let own = queues[w].lock().unwrap().pop_front();
-                let idx = match own {
-                    Some(i) => i,
-                    None => {
-                        // Steal from the back of the first non-empty victim.
-                        let mut stolen = None;
-                        for off in 1..threads {
-                            let victim = (w + off) % threads;
-                            if let Some(i) = queues[victim].lock().unwrap().pop_back() {
-                                stolen = Some(i);
-                                break;
-                            }
-                        }
-                        match stolen {
-                            Some(i) => i,
-                            None => break, // every queue drained — done
-                        }
-                    }
-                };
-                if tx.send((idx, f(idx))).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(tx);
-    });
-    // All workers joined; senders dropped; drain and slot by index.
-    let mut slots: Vec<Option<T>> = (0..n_items).map(|_| None).collect();
-    while let Ok((i, v)) = rx.recv() {
-        if slots[i].is_some() {
-            bail!("parallel reduction: item {i} was computed twice (scheduler bug)");
-        }
-        slots[i] = Some(v);
-    }
-    slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, v)| {
-            v.ok_or_else(|| {
-                anyhow!("parallel reduction: item {i} produced no result (worker thread died?)")
-            })
-        })
-        .collect()
+    crate::pool::global_handle().run_ordered(n_items, threads, f)
 }
 
 #[cfg(test)]
@@ -689,6 +645,42 @@ mod tests {
             assert_eq!(a.name, b.name);
             assert_eq!(a.trace, b.trace, "{}", a.name);
             assert_eq!(a.per_iter_latency_s, b.per_iter_latency_s, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn explicit_pool_matches_shared_pool_bit_exactly() {
+        // Threading a dedicated WorkerPool handle through MatrixOptions
+        // (and from there into every cell's TrainOptions) must not change
+        // a single bit relative to the process-global pool.
+        let cfg = Config::smoke();
+        let spec = static_spec(ScenarioSpec {
+            cells: vec![1, 2],
+            mus_per_cell: vec![2],
+            skews: vec![1.0],
+            phis: vec![Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            ..ScenarioSpec::quick()
+        });
+        let opts = MatrixOptions {
+            threads: 4,
+            iters: 10,
+            dim: 16,
+            eval_every: 5,
+            inner_threads: 2,
+            ..Default::default()
+        };
+        let shared = run_matrix(&cfg, &spec, &opts).unwrap();
+        let dedicated_pool = crate::pool::WorkerPool::new(3);
+        let dopts = MatrixOptions {
+            pool: Some(dedicated_pool.handle()),
+            ..opts
+        };
+        let dedicated = run_matrix(&cfg, &spec, &dopts).unwrap();
+        assert_eq!(shared.len(), dedicated.len());
+        for (a, b) in shared.iter().zip(&dedicated) {
+            assert_eq!(a.trace, b.trace, "{}", a.name);
         }
     }
 

@@ -14,9 +14,15 @@
 //! 4. **Determinism of the intra-round fan-out**: `run_hierarchical` with
 //!    `inner_threads ∈ {1, 2, 8}` produces bit-identical final parameters,
 //!    per-link bits, and loss/eval digests across random configurations.
+//! 5. **Pool-leased fan-out across both engines**: the persistent-pool
+//!    lanes (`TrainOptions::pool`, shared or dedicated) reproduce the
+//!    sequential path bit for bit on the reference engine *and* the
+//!    discrete-event engine, including DES timeline digests.
 
-use hfl::config::SparsityConfig;
+use hfl::config::{Config, SparsityConfig};
+use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
 use hfl::fl::{run_hierarchical, QuadraticOracle, TrainLog, TrainOptions};
+use hfl::pool::{PoolHandle, WorkerPool};
 use hfl::sparse::{DgcCompressor, SparseVec};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
 use hfl::util::rng::Pcg64;
@@ -471,6 +477,140 @@ fn prop_inner_fanout_bit_exact_across_thread_counts() {
                 };
                 if evals(&base) != evals(&other) {
                     return Err(format!("evals diverge at inner_threads={threads}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- 5. Pool-leased fan-out across both engines ------------------------------
+
+/// Generator for cross-engine pool fan-out instances:
+/// (n_clusters, per_cluster, dim, h_period, seed).
+struct PoolFanoutCase;
+
+impl Gen for PoolFanoutCase {
+    type Value = (usize, usize, usize, usize, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            [2usize, 4][rng.uniform_usize(2)], // cluster counts the hex grids pin
+            2 + rng.uniform_usize(2),          // 2..=3 MUs per cluster
+            6 + rng.uniform_usize(10),         // dim 6..=15
+            1 + rng.uniform_usize(2),          // H 1..=2
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, &(n, per, dim, h, seed): &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if n > 2 {
+            out.push((2, per, dim, h, seed));
+        }
+        if per > 2 {
+            out.push((n, per - 1, dim, h, seed));
+        }
+        if dim > 6 {
+            out.push((n, per, dim - 1, h, seed));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_pool_leased_fanout_bit_exact_both_engines() {
+    // Satellite contract of the pool PR: pool-leased nested fan-out is
+    // bit-exact vs the sequential path for inner_threads ∈ {1, 2, 8} on
+    // BOTH engines — and identically so when the lanes come from an
+    // explicit dedicated WorkerPool (`TrainOptions::pool`) instead of the
+    // process-global one.
+    let dedicated = WorkerPool::new(3);
+    let fp = |l: &TrainLog| -> Vec<u32> { l.final_params.iter().map(|x| x.to_bits()).collect() };
+    check(
+        &PropConfig {
+            cases: 6,
+            ..Default::default()
+        },
+        &PoolFanoutCase,
+        |&(n, per, dim, h, seed)| {
+            let topts_for = |inner: usize, pool: Option<PoolHandle>| TrainOptions {
+                iters: 6,
+                peak_lr: 0.05,
+                warmup_iters: 2,
+                h_period: h,
+                n_clusters: n,
+                sparsity: SparsityConfig {
+                    enabled: true,
+                    phi_mu_ul: 0.8,
+                    ..SparsityConfig::default()
+                },
+                eval_every: 3,
+                inner_threads: inner,
+                pool,
+                ..TrainOptions::default()
+            };
+
+            // --- sequential-reference engine ------------------------------
+            let run_fl = |inner: usize, pool: Option<PoolHandle>| -> TrainLog {
+                let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
+                run_hierarchical(&mut oracle, &topts_for(inner, pool))
+            };
+            let base = run_fl(1, None);
+            for inner in [2usize, 8] {
+                for pool in [None, Some(dedicated.handle())] {
+                    let label = if pool.is_some() { "dedicated" } else { "shared" };
+                    let other = run_fl(inner, pool);
+                    if fp(&base) != fp(&other) {
+                        return Err(format!("fl params diverge: inner={inner} pool={label}"));
+                    }
+                    if base.bits != other.bits {
+                        return Err(format!("fl bits diverge: inner={inner} pool={label}"));
+                    }
+                }
+            }
+
+            // --- discrete-event engine ------------------------------------
+            let mut cfg = Config::smoke();
+            cfg.topology.n_clusters = n;
+            cfg.topology.mus_per_cluster = per;
+            cfg.topology.reuse_colors = cfg.topology.reuse_colors.min(n);
+            cfg.training.h_period = h;
+            let run_d = |inner: usize, pool: Option<PoolHandle>| {
+                let params = DesParams {
+                    topts: topts_for(inner, pool),
+                    mobility: MobilityProfile::Waypoint {
+                        speed_mps: 30.0,
+                        pause_s: 1.0,
+                    },
+                    straggler: StragglerPolicy::Deadline {
+                        rel: 0.8,
+                        stale_discount: 0.5,
+                    },
+                    compute: ComputeProfile {
+                        mean_s: 0.3,
+                        het: 0.5,
+                    },
+                    compute_scale: 1.0,
+                    seed,
+                };
+                let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
+                run_des(&mut oracle, &cfg, &params).expect("DES run failed")
+            };
+            let dbase = run_d(1, None);
+            for inner in [2usize, 8] {
+                for pool in [None, Some(dedicated.handle())] {
+                    let label = if pool.is_some() { "dedicated" } else { "shared" };
+                    let other = run_d(inner, pool);
+                    if other.timeline != dbase.timeline {
+                        return Err(format!("DES timeline diverges: inner={inner} pool={label}"));
+                    }
+                    if fp(&dbase.log) != fp(&other.log) {
+                        return Err(format!("DES params diverge: inner={inner} pool={label}"));
+                    }
+                    if dbase.log.bits != other.log.bits {
+                        return Err(format!("DES bits diverge: inner={inner} pool={label}"));
+                    }
                 }
             }
             Ok(())
