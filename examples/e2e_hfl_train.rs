@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
             n_clusters: clusters,
             sparsity: cfg.sparsity.clone(),
             eval_every_syncs: 4,
+            agg: cfg.agg,
         };
         let spec = SyntheticSpec {
             n_train: train_samples,

@@ -18,7 +18,8 @@ use hfl::fl::{run_hierarchical, TrainOptions};
 use hfl::fl::{LrSchedule, QuadraticOracle};
 use hfl::pool::WorkerPool;
 use hfl::runtime::{Runtime, TensorArg};
-use hfl::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use hfl::sparse::merge::{merge_weighted_into, MergeScratch};
+use hfl::sparse::{DgcCompressor, DiscountedError, SparseVec, SparseWire};
 use hfl::tensor::kernels;
 use hfl::util::bench::{black_box, Bencher};
 use hfl::util::math::{quantile_abs, quickselect};
@@ -207,6 +208,7 @@ fn run_arena(
         eval_every: 0,
         inner_threads: inner,
         pool: None,
+        agg: Default::default(),
     };
     let mut oracle = QuadraticOracle::new_skewed(dim, n * per_cluster, 0.0, 1.0, seed);
     let log = run_hierarchical(&mut oracle, &opts);
@@ -248,6 +250,72 @@ fn main() {
     b.bench(&format!("sparse.add_into ({} nnz)", sparse.nnz()), || {
         sparse.add_into(black_box(&mut dense), 0.25);
     });
+
+    // --- Sparse-first aggregation: k-way merge vs dense scatter ----------
+    // The paper's headline server-side regime: 16 MU messages at φ = 0.99
+    // over a large dim (2^20 at full scale — the acceptance target is
+    // merge ≥ 5× scatter there; the dense path pays O(dim) zero + scale
+    // every round no matter how sparse the messages are).
+    let mq: usize = if smoke { 4096 } else { 1 << 20 };
+    let n_mus = 16usize;
+    let keep = mq / 100; // φ = 0.99
+    let mut mrng = Pcg64::seeded(2026);
+    let parts_owned: Vec<SparseVec> = (0..n_mus)
+        .map(|_| {
+            let mut v = SparseVec::empty(mq);
+            v.reserve(keep);
+            let mut idx: Vec<u32> = (0..keep).map(|_| mrng.uniform_usize(mq) as u32).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            for i in idx {
+                v.indices.push(i);
+                v.values.push(mrng.normal() as f32);
+            }
+            v
+        })
+        .collect();
+    let parts: Vec<(&SparseVec, f32)> =
+        parts_owned.iter().map(|p| (p, 1.0 / n_mus as f32)).collect();
+    let mut agg_buf = vec![0.0f32; mq];
+    let scatter_m = b.bench(&format!("sparse_merge/scatter (Q={mq}, {n_mus} MUs, φ=0.99)"), || {
+        // The dense reference aggregation: zero → scatter × k → scale(−lr).
+        hfl::tensor::kernels::zero(black_box(&mut agg_buf));
+        for (p, w) in &parts {
+            p.add_into(&mut agg_buf, *w);
+        }
+        hfl::tensor::kernels::scale(&mut agg_buf, -0.05);
+    });
+    let mut merged = SparseVec::empty(mq);
+    let mut mscratch = MergeScratch::default();
+    let kway_m = b.bench(&format!("sparse_merge/kway (Q={mq}, {n_mus} MUs, φ=0.99)"), || {
+        // The sparse aggregation: k-way merge consensus + value scale.
+        merge_weighted_into(black_box(&parts), mq, &mut merged, &mut mscratch);
+        merged.scale_values(-0.05);
+    });
+    println!(
+        "  → sparse k-way merge vs dense scatter ({n_mus} MUs, φ=0.99): {:.2}×",
+        scatter_m.ns() / kway_m.ns()
+    );
+    black_box((agg_buf[0], merged.nnz()));
+
+    // --- SparseWire delta-packed codec -----------------------------------
+    let wire_src = &parts_owned[0];
+    let enc_m = b.bench(&format!("wire_codec/encode (Q={mq}, φ=0.99)"), || {
+        black_box(SparseWire::encode(black_box(wire_src)));
+    });
+    let wire = SparseWire::encode(wire_src);
+    let mut wire_out = SparseVec::empty(mq);
+    let dec_m = b.bench(&format!("wire_codec/decode (Q={mq}, φ=0.99)"), || {
+        black_box(&wire).decode_into(&mut wire_out);
+    });
+    println!(
+        "  → wire codec: {} packed bits vs {} priced ({:.1}% saved); enc {:.0} ns dec {:.0} ns",
+        wire.encoded_bits(),
+        wire_src.wire_bits(32) as u64,
+        100.0 * (1.0 - wire.encoded_bits() as f64 / wire_src.wire_bits(32)),
+        enc_m.ns(),
+        dec_m.ns()
+    );
 
     // --- Full-round training step: seed layout vs flat arena -------------
     // 2 clusters × 2 MUs, 6 rounds incl. H-syncs, oracle setup + final

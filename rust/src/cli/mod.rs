@@ -7,8 +7,23 @@
 //! see [`crate::pool`]) is resolved by [`pool_from_args`].
 
 use crate::pool::WorkerPool;
+use crate::sparse::merge::{AggPath, AggPolicy};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// Resolve the shared `--agg-path auto|sparse|dense` option against the
+/// `[agg]` config default (crossover always comes from the config). The
+/// returned policy is threaded into `TrainOptions::agg` /
+/// `MatrixOptions::agg`; every setting is bit-identical — the flag only
+/// moves wall-clock (see `crate::sparse::merge`).
+pub fn agg_from_args(args: &Args, default: AggPolicy) -> Result<AggPolicy> {
+    let mut agg = default;
+    if let Some(s) = args.get("agg-path") {
+        agg.path = AggPath::parse(s)?;
+    }
+    agg.validate()?;
+    Ok(agg)
+}
 
 /// Resolve the shared `--pool-threads N` option against the `[pool]`
 /// config default: `0` (or absent with a zero default) keeps the lazily
@@ -193,6 +208,22 @@ mod tests {
     fn bad_parse_is_error() {
         let a = Args::parse(["x", "--n", "abc"]).unwrap();
         assert!(a.get_parsed::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn agg_from_args_overrides_path_only() {
+        let a = Args::parse(["matrix", "--agg-path", "sparse"]).unwrap();
+        let agg = agg_from_args(&a, AggPolicy::default()).unwrap();
+        assert_eq!(agg.path, AggPath::Sparse);
+        assert_eq!(agg.crossover, AggPolicy::default().crossover);
+        a.finish().unwrap();
+        // Absent flag keeps the config default.
+        let a = Args::parse(["matrix"]).unwrap();
+        let cfg_default = AggPolicy { path: AggPath::Dense, crossover: 0.5 };
+        assert_eq!(agg_from_args(&a, cfg_default).unwrap(), cfg_default);
+        // Unknown values are rejected.
+        let a = Args::parse(["matrix", "--agg-path", "turbo"]).unwrap();
+        assert!(agg_from_args(&a, AggPolicy::default()).is_err());
     }
 
     #[test]

@@ -436,6 +436,11 @@ pub struct Config {
     pub latency: LatencyModelConfig,
     pub des: DesConfig,
     pub pool: PoolConfig,
+    /// Aggregation dispatch (`crate::sparse::merge`): sparse k-way merge
+    /// vs dense scatter at the SBS/MBS aggregation call sites. `[agg]
+    /// path = "auto"|"sparse"|"dense"`, `[agg] crossover = 0.25`; CLI
+    /// override `--agg-path`. Bit-identical for every setting.
+    pub agg: crate::sparse::merge::AggPolicy,
 }
 
 impl Config {
@@ -469,6 +474,7 @@ impl Config {
         self.latency.validate().context("latency")?;
         self.des.validate().context("des")?;
         self.pool.validate().context("pool")?;
+        self.agg.validate().context("agg")?;
         Ok(())
     }
 
@@ -563,6 +569,13 @@ impl Config {
             ("des", "deadline_rel") => self.des.deadline_rel = need_f64()?,
             ("des", "stale_discount") => self.des.stale_discount = need_f64()?,
             ("pool", "threads") => self.pool.threads = need_usize()?,
+            ("agg", "path") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                self.agg.path = crate::sparse::merge::AggPath::parse(s)?;
+            }
+            ("agg", "crossover") => self.agg.crossover = need_f64()?,
             (s, k) => bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -713,6 +726,28 @@ mod tests {
         assert_eq!(c.pool.threads, 6);
         c.validate().unwrap();
         c.pool.threads = 100_000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn agg_defaults_auto_and_overridable() {
+        use crate::sparse::merge::{AggPath, AGG_DENSITY_CROSSOVER};
+        let c = Config::default();
+        assert_eq!(c.agg.path, AggPath::Auto);
+        assert_eq!(c.agg.crossover, AGG_DENSITY_CROSSOVER);
+        c.agg.validate().unwrap();
+        let mut c = Config::default();
+        c.apply_override("agg", "path", &toml::TomlValue::Str("sparse".into()))
+            .unwrap();
+        c.apply_override("agg", "crossover", &toml::TomlValue::Float(0.5))
+            .unwrap();
+        assert_eq!(c.agg.path, AggPath::Sparse);
+        assert_eq!(c.agg.crossover, 0.5);
+        c.validate().unwrap();
+        assert!(c
+            .apply_override("agg", "path", &toml::TomlValue::Str("fast".into()))
+            .is_err());
+        c.agg.crossover = 0.0;
         assert!(c.validate().is_err());
     }
 

@@ -24,6 +24,7 @@ use super::metrics::{LinkKind, MetricEvent, MetricsLog, MetricsSink};
 use crate::config::SparsityConfig;
 use crate::fl::lr_schedule::LrSchedule;
 use crate::fl::oracle::{EvalMetrics, GradOracle};
+use crate::sparse::merge::{self, AggPolicy, DenseShadow, MergeScratch};
 use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -44,6 +45,9 @@ pub struct CoordinatorOptions {
     /// Evaluate on the MBS's global model every this many sync points
     /// (0 → final only).
     pub eval_every_syncs: usize,
+    /// Aggregation dispatch at the SBS/MBS slots (mirrors
+    /// [`crate::fl::TrainOptions::agg`]; bit-identical either way).
+    pub agg: AggPolicy,
 }
 
 impl Default for CoordinatorOptions {
@@ -59,6 +63,7 @@ impl Default for CoordinatorOptions {
             n_clusters: 1,
             sparsity: SparsityConfig::dense(),
             eval_every_syncs: 0,
+            agg: AggPolicy::default(),
         }
     }
 }
@@ -76,6 +81,7 @@ impl From<&crate::fl::TrainOptions> for CoordinatorOptions {
             n_clusters: o.n_clusters,
             sparsity: o.sparsity.clone(),
             eval_every_syncs: 0,
+            agg: o.agg,
         }
     }
 }
@@ -160,6 +166,7 @@ where
             momentum: opts.momentum,
             weight_decay: opts.weight_decay,
             phi_ul,
+            agg: opts.agg,
             init: init.clone(),
             compute: compute.clone(),
             metrics: MetricsSink::new(metric_tx.clone()),
@@ -182,6 +189,11 @@ where
     let mut w_global: Vec<f32> = (*init).clone();
     let mut mbs_enc = DiscountedError::new(dim, phi_mdl, opts.sparsity.beta_m as f32);
     let mut agg = vec![0.0f32; dim];
+    // Density-adaptive sync aggregation (reference baseline +0.0: the
+    // accumulator is zeroed, never scaled).
+    let mut mbs_shadow = DenseShadow::new();
+    let mut mbs_merged = SparseVec::empty(dim);
+    let mut mbs_scratch = MergeScratch::default();
     let mut sync_evals = Vec::new();
     let mut done = 0usize;
     let mut pending: Vec<Option<SparseVec>> = (0..n).map(|_| None).collect();
@@ -198,11 +210,25 @@ where
                 pending[m.cluster] = Some(m.delta);
                 pending_count += 1;
                 if pending_count == n {
-                    // Aggregate in cluster order (bit-identical to engine).
-                    agg.iter_mut().for_each(|x| *x = 0.0);
-                    for d in pending.iter_mut() {
-                        d.take().unwrap().add_into(&mut agg, 1.0 / n as f32);
-                    }
+                    // Aggregate in cluster order (bit-identical to the
+                    // engine), through the density-adaptive dispatch: the
+                    // k-way merge folds each coordinate in the same
+                    // cluster order as the dense scatter.
+                    let deltas: Vec<SparseVec> =
+                        pending.iter_mut().map(|d| d.take().unwrap()).collect();
+                    let scale = 1.0 / n as f32;
+                    let parts: Vec<(&SparseVec, f32)> =
+                        deltas.iter().map(|m| (m, scale)).collect();
+                    merge::aggregate_adaptive(
+                        &opts.agg,
+                        &parts,
+                        dim,
+                        None,
+                        &mut agg,
+                        &mut mbs_merged,
+                        &mut mbs_scratch,
+                        &mut mbs_shadow,
+                    );
                     pending_count = 0;
                     let msg = mbs_enc.compress(&agg);
                     mbs_metrics.emit(MetricEvent {
@@ -287,6 +313,7 @@ struct SbsContext {
     momentum: f32,
     weight_decay: f32,
     phi_ul: f64,
+    agg: AggPolicy,
     init: Arc<Vec<f32>>,
     compute: ComputeHandle,
     metrics: MetricsSink,
@@ -338,6 +365,11 @@ fn sbs_actor(ctx: SbsContext, inbox: Receiver<SbsControl>) -> SbsOutcome {
     let mut dl_enc = DiscountedError::new(ctx.dim, ctx.dl_phi, ctx.dl_beta);
     let mut ul_enc = DiscountedError::new(ctx.dim, ctx.ul_phi, ctx.ul_beta);
     let mut agg = vec![0.0f32; ctx.dim];
+    // Density-adaptive round aggregation (reference baseline −0.0: the
+    // accumulator is zeroed, scattered into, then scaled by −lr).
+    let mut agg_shadow = DenseShadow::new();
+    let mut agg_merged = SparseVec::default();
+    let mut agg_scratch = MergeScratch::default();
     let mut iter_losses = Vec::with_capacity(ctx.iters);
     let mut period_loss = 0.0f64;
     let mut period_count = 0usize;
@@ -361,21 +393,31 @@ fn sbs_actor(ctx: SbsContext, inbox: Receiver<SbsControl>) -> SbsOutcome {
                 }
             }
         }
-        // Aggregate in slot order → bit-identical to the engine.
-        agg.iter_mut().for_each(|x| *x = 0.0);
+        // Aggregate in slot order → bit-identical to the engine; the
+        // sparse merge folds each coordinate in the same slot order as
+        // the dense scatter, so either path is exact.
         let mut loss_sum = 0.0;
         for m in slots.iter().flatten() {
-            m.grad.add_into(&mut agg, 1.0 / ctx.per_cluster as f32);
             loss_sum += m.loss;
         }
+        let scale = 1.0 / ctx.per_cluster as f32;
+        let parts: Vec<(&SparseVec, f32)> =
+            slots.iter().flatten().map(|m| (&m.grad, scale)).collect();
+        merge::aggregate_adaptive(
+            &ctx.agg,
+            &parts,
+            ctx.dim,
+            Some(-lr),
+            &mut agg,
+            &mut agg_merged,
+            &mut agg_scratch,
+            &mut agg_shadow,
+        );
         let mean_loss = loss_sum / ctx.per_cluster as f64;
         iter_losses.push((t, mean_loss));
         period_loss += mean_loss;
         period_count += 1;
 
-        for x in agg.iter_mut() {
-            *x *= -lr;
-        }
         let dl_msg = dl_enc.compress(&agg);
         ctx.metrics.emit(MetricEvent {
             iter: t,
@@ -566,6 +608,7 @@ mod tests {
             n_clusters: 2,
             sparsity: SparsityConfig::dense(),
             eval_every_syncs: 3,
+            agg: AggPolicy::default(),
         }
     }
 
@@ -610,6 +653,40 @@ mod tests {
             .filter(|e| e.link == LinkKind::MuUl)
             .count();
         assert_eq!(mu_msgs, 360);
+    }
+
+    #[test]
+    fn agg_path_sparse_matches_dense_bit_exactly() {
+        // The actor topology through the sparse-merge aggregation must
+        // reproduce the dense-scatter run exactly — same final params,
+        // same per-link bits — across SBS rounds and MBS syncs.
+        let run = |path: crate::sparse::AggPath| {
+            let mut o = opts();
+            o.sparsity = SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.9,
+                phi_sbs_dl: 0.5,
+                phi_sbs_ul: 0.5,
+                phi_mbs_dl: 0.5,
+                beta_m: 0.2,
+                beta_s: 0.5,
+            };
+            o.agg = AggPolicy { path, ..Default::default() };
+            run_coordinated(|| QuadraticOracle::new(40, 6, 0.0, 81), &o).unwrap()
+        };
+        let dense = run(crate::sparse::AggPath::Dense);
+        for path in [crate::sparse::AggPath::Sparse, crate::sparse::AggPath::Auto] {
+            let other = run(path);
+            let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits_of(&dense.final_params), bits_of(&other.final_params), "{path:?}");
+            for link in [LinkKind::MuUl, LinkKind::SbsDl, LinkKind::SbsUl, LinkKind::MbsDl] {
+                assert_eq!(
+                    dense.metrics.total_bits(link).to_bits(),
+                    other.metrics.total_bits(link).to_bits(),
+                    "{path:?} {link:?}"
+                );
+            }
+        }
     }
 
     #[test]

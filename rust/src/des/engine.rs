@@ -44,6 +44,7 @@ use crate::des::straggler::{ComputeProfile, StragglerPolicy};
 use crate::fl::{consensus_from_rows, GradOracle, LrSchedule, TrainLog, TrainOptions};
 use crate::pool::Lease;
 use crate::sim::result::TimelineDigest;
+use crate::sparse::merge::{self, AggPath, DenseShadow, MergeScratch};
 use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
 use crate::tensor::{kernels, RowMatrix};
 use crate::topology::{HexLayout, NetworkTopology};
@@ -288,6 +289,33 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     /// participant list (empty when the fan-out cannot run). Slot buffers
     /// grow to `dim` lazily on first use.
     par_bufs: Vec<Mutex<ParBuf>>,
+    /// True when cluster aggregations keep per-participant messages live
+    /// for the density-adaptive sparse merge (φ_ul > 0 and the agg path
+    /// is not forced dense); false keeps the historical streaming
+    /// single-buffer scatter byte for byte.
+    collect_agg: bool,
+    /// Same gate for the H-sync aggregation (keyed on φ^ul_SBS).
+    collect_sync: bool,
+    /// Per-participant message slots of the sequential collect path,
+    /// grown lazily to the largest participant count seen.
+    seq_msgs: Vec<SparseVec>,
+    /// Per-cluster sync messages of the collect path (length N).
+    sync_msgs: Vec<SparseVec>,
+    /// Reusable merged consensus of the sparse path.
+    agg_sparse: SparseVec,
+    /// k-way merge scratch (heap + cursors).
+    merge_scratch: MergeScratch,
+    /// Keeps `agg` bit-identical to the reference `zero → scatter →
+    /// scale(−lr)` round sequence on the sparse path (−0.0 baseline).
+    agg_shadow: DenseShadow,
+    /// The H-sync aggregation accumulator. Separate from `agg` so the
+    /// round path's −0.0 baseline and the sync path's +0.0 baseline each
+    /// stay stable — sharing one buffer would flip the baseline at every
+    /// round/sync boundary and force a full O(dim) refill each time,
+    /// defeating the shadow's O(nnz) steady state.
+    sync_agg: Vec<f32>,
+    /// Shadow of `sync_agg` (+0.0 baseline; zeroed, never scaled).
+    sync_shadow: DenseShadow,
     n_handovers: u64,
     n_late: u64,
     n_skipped: u64,
@@ -407,17 +435,26 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             StragglerPolicy::Deadline { stale_discount, .. } => *stale_discount,
             StragglerPolicy::WaitForAll => 0.0,
         };
-        kernels::zero(&mut self.agg);
-        // Stale updates whose transmission has landed by now apply first,
-        // pre-discounted; ones still in flight go back in the queue (their
-        // original order preserved) for a later aggregation.
+        // Stale updates whose transmission has landed by now fold first
+        // (in stored order, pre-discounted); ones still in flight go back
+        // in the queue (their original order preserved) for a later
+        // aggregation.
         let pending = std::mem::take(&mut self.stale[c]);
+        let mut landed: Vec<(SparseVec, f32)> = Vec::new();
         for (m, w, arrives_at) in pending {
             if arrives_at <= t {
-                m.add_into(&mut self.agg, w);
+                landed.push((m, w));
             } else {
                 self.stale[c].push((m, w, arrives_at));
             }
+        }
+        if self.collect_agg {
+            return self.aggregate_collect(c, round, &parts, landed, denom, stale_discount);
+        }
+        kernels::zero(&mut self.agg);
+        self.agg_shadow.mark_dirty();
+        for (m, w) in &landed {
+            m.add_into(&mut self.agg, *w);
         }
         let wd = self.topts.weight_decay;
         let mut ran_parallel = false;
@@ -510,6 +547,126 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         Ok(())
     }
 
+    /// The collect variant of [`Sim::aggregate`]'s arithmetic tail: every
+    /// participant's message is materialized in a per-slot buffer (the
+    /// fan-out already had them; the sequential path gets `seq_msgs`),
+    /// then the round aggregate is built either by the k-way sparse merge
+    /// or by the dense scatter, chosen from the measured total nnz. All
+    /// side effects — loss slots, bit accounting, the fresh/late policy,
+    /// stale-queue pushes — execute in the exact MU-id order of the
+    /// streaming path, and the dense `agg` buffer handed to the DL
+    /// encoder is bit-identical either way (−0.0 baseline via the
+    /// shadow).
+    fn aggregate_collect(
+        &mut self,
+        c: usize,
+        round: usize,
+        parts: &[usize],
+        landed: Vec<(SparseVec, f32)>,
+        denom: f32,
+        stale_discount: f32,
+    ) -> Result<()> {
+        let wd = self.topts.weight_decay;
+        let mut ran_parallel = false;
+        if parts.len() > 1 && !self.par_bufs.is_empty() {
+            if let (Some(lease), Some(par)) = (self.lease.as_ref(), self.oracle.par_view()) {
+                let w_row = self.w_tilde.row(c);
+                let dgc = &self.dgc;
+                let bufs = &self.par_bufs;
+                let dim = self.dim;
+                let losses = lease
+                    .run_ordered(parts.len(), |idx| {
+                        let mu = parts[idx];
+                        let mut pb_guard = bufs[idx].lock().unwrap();
+                        let pb = &mut *pb_guard;
+                        if pb.grad.len() != dim {
+                            pb.grad.resize(dim, 0.0);
+                        }
+                        let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
+                        if wd != 0.0 {
+                            kernels::axpy(&mut pb.grad, w_row, wd);
+                        }
+                        dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
+                        loss
+                    })
+                    .with_context(|| {
+                        format!("DES intra-round fan-out (cluster {c}, round {round})")
+                    })?;
+                for (idx, &mu) in parts.iter().enumerate() {
+                    self.round_loss[round * self.k_total + mu] = losses[idx];
+                }
+                ran_parallel = true;
+            }
+        }
+        if !ran_parallel {
+            while self.seq_msgs.len() < parts.len() {
+                self.seq_msgs.push(SparseVec::empty(self.dim));
+            }
+            for (idx, &mu) in parts.iter().enumerate() {
+                let loss = self
+                    .oracle
+                    .loss_grad(mu, self.w_tilde.row(c), &mut self.grad);
+                self.round_loss[round * self.k_total + mu] = loss;
+                if wd != 0.0 {
+                    kernels::axpy(&mut self.grad, self.w_tilde.row(c), wd);
+                }
+                self.dgc[mu].lock().unwrap().step_into(&self.grad, &mut self.seq_msgs[idx]);
+            }
+        }
+        // Ordered reduction in MU-id order — never arrival order. The
+        // fan-out guards stay alive so the merge can borrow the messages.
+        let guards: Vec<std::sync::MutexGuard<'_, ParBuf>> = if ran_parallel {
+            parts
+                .iter()
+                .enumerate()
+                .map(|(idx, _)| self.par_bufs[idx].lock().unwrap())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut agg_parts: Vec<(&SparseVec, f32)> =
+            Vec::with_capacity(landed.len() + parts.len());
+        for (m, w) in &landed {
+            agg_parts.push((m, *w));
+        }
+        let mut late: Vec<(SparseVec, f32, f64)> = Vec::new();
+        for (idx, &mu) in parts.iter().enumerate() {
+            let m: &SparseVec = if ran_parallel { &guards[idx].msg } else { &self.seq_msgs[idx] };
+            self.log.bits.mu_ul += m.wire_bits(32);
+            self.log.bits.n_mu_msgs += 1;
+            // Bits are spent either way; a late update lands stale once
+            // its uplink completes (or is discarded at discount 0).
+            if self.ctx[c].fresh.contains(&mu) {
+                agg_parts.push((m, 1.0 / denom));
+            } else {
+                self.n_late += 1;
+                if stale_discount > 0.0 {
+                    late.push((m.clone(), stale_discount / denom, self.busy_until[mu]));
+                }
+            }
+        }
+        let lr = self.schedule.at(round) as f32;
+        merge::aggregate_adaptive(
+            &self.topts.agg,
+            &agg_parts,
+            self.dim,
+            Some(-lr),
+            &mut self.agg,
+            &mut self.agg_sparse,
+            &mut self.merge_scratch,
+            &mut self.agg_shadow,
+        );
+        drop(agg_parts);
+        drop(guards);
+        for e in late {
+            self.stale[c].push(e);
+        }
+        self.dl_enc[c].compress_into(&self.agg, &mut self.dl_out);
+        self.log.bits.sbs_dl += self.dl_out.wire_bits(32);
+        self.dl_out.add_into(self.w_tilde.row_mut(c), 1.0);
+        Ok(())
+    }
+
     /// Fold the completed iteration's per-MU losses in global MU order —
     /// the sequential engine's exact summation order.
     fn fold_iteration_loss(&mut self, round: usize) {
@@ -528,20 +685,52 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     /// Allocation-free: the Δ vectors land in a reusable scratch slice and
     /// each encoder's error buffer is borrowed in place.
     fn do_sync(&mut self, round: usize, t: f64) {
-        kernels::zero(&mut self.agg);
-        for c in 0..self.n {
-            // Δ_n = W̃_n + e_n − W̃ (fused; e_n borrowed, never cloned).
-            kernels::add_sub(
-                &mut self.sync_delta,
-                self.w_tilde.row(c),
-                self.dl_enc[c].error(),
-                &self.w_tilde_global,
+        if !self.collect_sync {
+            kernels::zero(&mut self.sync_agg);
+            self.sync_shadow.mark_dirty();
+            for c in 0..self.n {
+                // Δ_n = W̃_n + e_n − W̃ (fused; e_n borrowed, never cloned).
+                kernels::add_sub(
+                    &mut self.sync_delta,
+                    self.w_tilde.row(c),
+                    self.dl_enc[c].error(),
+                    &self.w_tilde_global,
+                );
+                self.ul_enc[c].compress_into(&self.sync_delta, &mut self.sync_msg);
+                self.log.bits.sbs_ul += self.sync_msg.wire_bits(32);
+                self.sync_msg.add_into(&mut self.sync_agg, 1.0 / self.n as f32);
+            }
+        } else {
+            // Collect every cluster's encoded Δ (same cluster-ordered
+            // encoder updates and bit accounting), then aggregate through
+            // the density-adaptive dispatch. The sync accumulator's
+            // reference baseline is +0.0 (zeroed, never scaled).
+            for c in 0..self.n {
+                kernels::add_sub(
+                    &mut self.sync_delta,
+                    self.w_tilde.row(c),
+                    self.dl_enc[c].error(),
+                    &self.w_tilde_global,
+                );
+                let out = &mut self.sync_msgs[c];
+                self.ul_enc[c].compress_into(&self.sync_delta, out);
+                self.log.bits.sbs_ul += out.wire_bits(32);
+            }
+            let scale = 1.0 / self.n as f32;
+            let parts: Vec<(&SparseVec, f32)> =
+                self.sync_msgs.iter().map(|m| (m, scale)).collect();
+            merge::aggregate_adaptive(
+                &self.topts.agg,
+                &parts,
+                self.dim,
+                None,
+                &mut self.sync_agg,
+                &mut self.agg_sparse,
+                &mut self.merge_scratch,
+                &mut self.sync_shadow,
             );
-            self.ul_enc[c].compress_into(&self.sync_delta, &mut self.sync_msg);
-            self.log.bits.sbs_ul += self.sync_msg.wire_bits(32);
-            self.sync_msg.add_into(&mut self.agg, 1.0 / self.n as f32);
         }
-        self.mbs_enc.compress_into(&self.agg, &mut self.sync_msg);
+        self.mbs_enc.compress_into(&self.sync_agg, &mut self.sync_msg);
         self.log.bits.mbs_dl += self.sync_msg.wire_bits(32);
         self.sync_msg.add_into(&mut self.w_tilde_global, 1.0);
         for c in 0..self.n {
@@ -844,6 +1033,18 @@ pub fn run_des<O: GradOracle + ?Sized>(
         Vec::new()
     };
 
+    // Density-adaptive aggregation: keep per-participant messages live
+    // only when a sparse merge could ever win (φ > 0 on the link and the
+    // path is not forced dense) — otherwise the historical streaming
+    // scatter runs byte for byte with no extra buffers.
+    let collect_agg = phi_ul > 0.0 && topts.agg.path != AggPath::Dense;
+    let collect_sync = phi_sul > 0.0 && topts.agg.path != AggPath::Dense;
+    let sync_msgs: Vec<SparseVec> = if collect_sync {
+        (0..n).map(|_| SparseVec::empty(dim)).collect()
+    } else {
+        Vec::new()
+    };
+
     let pricing = price(cfg, &members, &dist_sbs, &dist_mbs, m_cluster, flat)?;
     let ctx: Vec<RoundCtx> = (0..n)
         .map(|_| RoundCtx {
@@ -899,6 +1100,15 @@ pub fn run_des<O: GradOracle + ?Sized>(
         sync_msg: SparseVec::empty(dim),
         lease,
         par_bufs,
+        collect_agg,
+        collect_sync,
+        seq_msgs: Vec::new(),
+        sync_msgs,
+        agg_sparse: SparseVec::empty(dim),
+        merge_scratch: MergeScratch::default(),
+        agg_shadow: DenseShadow::new(),
+        sync_agg: vec![0.0; dim],
+        sync_shadow: DenseShadow::new(),
         n_handovers: 0,
         n_late: 0,
         n_skipped: 0,
@@ -954,6 +1164,7 @@ mod tests {
             eval_every: 10,
             inner_threads: 1,
             pool: None,
+            agg: Default::default(),
         }
     }
 
@@ -1192,6 +1403,49 @@ mod tests {
                 l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect()
             };
             assert_eq!(curve(&par.log), curve(&seq.log), "inner={inner}");
+        }
+    }
+
+    #[test]
+    fn agg_path_dispatch_is_bit_exact_in_des() {
+        // The sparse-merge aggregation must not change a single bit of a
+        // DES run — including under deadlines (stale weighted parts),
+        // mobility, heterogeneous compute, and the per-MU fan-out.
+        let cfg = cfg_for(2, 4);
+        let run = |path: crate::sparse::AggPath, inner: usize| {
+            let mut topts = topts_for(&cfg, 12);
+            topts.inner_threads = inner;
+            topts.agg = crate::sparse::AggPolicy { path, ..Default::default() };
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
+                straggler: StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.4, het: 0.5 },
+                compute_scale: 1.0,
+                seed: 4711,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(14, 8, 0.0, 1.0, 66);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let dense = run(crate::sparse::AggPath::Dense, 1);
+        for (path, inner) in [
+            (crate::sparse::AggPath::Sparse, 1),
+            (crate::sparse::AggPath::Auto, 1),
+            (crate::sparse::AggPath::Sparse, 4),
+        ] {
+            let other = run(path, inner);
+            assert_eq!(other.timeline, dense.timeline, "{path:?} inner={inner}");
+            assert_eq!(
+                bits_f32(&other.log.final_params),
+                bits_f32(&dense.log.final_params),
+                "{path:?} inner={inner}"
+            );
+            assert_eq!(other.log.bits, dense.log.bits, "{path:?} inner={inner}");
+            assert_eq!(other.n_late, dense.n_late, "{path:?} inner={inner}");
+            let curve = |l: &TrainLog| -> Vec<(usize, u64)> {
+                l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect()
+            };
+            assert_eq!(curve(&other.log), curve(&dense.log), "{path:?} inner={inner}");
         }
     }
 

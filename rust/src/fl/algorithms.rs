@@ -70,6 +70,7 @@
 use super::lr_schedule::LrSchedule;
 use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use crate::config::SparsityConfig;
+use crate::sparse::merge::{self, AggPath, AggPolicy, DenseShadow, MergeScratch};
 use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
 use crate::tensor::{kernels, padded, TensorArena};
 use std::sync::Mutex;
@@ -106,6 +107,10 @@ pub struct TrainOptions {
     /// (default) uses the process-wide shared pool
     /// ([`crate::pool::global_handle`]). Bit-identical either way.
     pub pool: Option<crate::pool::PoolHandle>,
+    /// Aggregation dispatch: k-way sparse merge vs dense scatter at the
+    /// SBS round and MBS sync call sites (`--agg-path`, `[agg]` config).
+    /// Bit-identical for every setting (see [`crate::sparse::merge`]).
+    pub agg: AggPolicy,
 }
 
 impl Default for TrainOptions {
@@ -123,6 +128,7 @@ impl Default for TrainOptions {
             eval_every: 0,
             inner_threads: 1,
             pool: None,
+            agg: AggPolicy::default(),
         }
     }
 }
@@ -227,10 +233,19 @@ struct Lane<'a> {
     /// This cluster's slice of the training arena (stride
     /// `(LANE_HEAD + 2·per_cluster)·pad`).
     buf: &'a mut [f32],
-    /// Reusable MU→SBS message.
-    msg: SparseVec,
+    /// Reusable MU→SBS messages. The streaming dense path reuses slot 0
+    /// for every worker; the sparse-merge path keeps one live message per
+    /// worker so the round can be k-way merged after measuring its nnz.
+    msgs: Vec<SparseVec>,
     /// Reusable SBS→MU downlink message.
     dl: SparseVec,
+    /// Reusable merged round consensus (sparse-path output).
+    agg_sparse: SparseVec,
+    /// k-way merge scratch (heap + cursors), reused across rounds.
+    merge_scratch: MergeScratch,
+    /// Keeps the lane's dense `agg` chunk bit-identical to the reference
+    /// `zero → scatter → scale(−lr)` sequence on the sparse path.
+    shadow: DenseShadow,
 }
 
 /// Named disjoint views into one lane, split on demand.
@@ -337,6 +352,15 @@ struct ClusterOut {
 /// + DGC uplink, aggregation, DL encode, reference-model advance. Touches
 /// only this cluster's lane, so blocks of different clusters are
 /// independent — the unit of the intra-round fan-out.
+///
+/// The aggregation step is density-adaptive ([`AggPolicy`]): the dense
+/// path executes the historical `zero → scatter(j ascending) → scale(−lr)`
+/// sequence; the sparse path k-way merges the round's messages into a
+/// sparse consensus with the identical per-coordinate fold order and
+/// writes it through the lane's [`DenseShadow`] (−0.0 baseline), so the
+/// DL encoder reads a bit-identical buffer either way. With φ_ul = 0 the
+/// messages are dense by construction and the streaming single-buffer
+/// path is kept as-is — no per-worker message storage.
 #[allow(clippy::too_many_arguments)]
 fn round_cluster<R: RoundOracle>(
     oracle: &mut R,
@@ -349,6 +373,7 @@ fn round_cluster<R: RoundOracle>(
     weight_decay: f32,
     dgc_kernel: DgcKernel,
     dl_kernel: DiscountKernel,
+    agg: AggPolicy,
 ) -> ClusterOut {
     let lv = lane_view(&mut *lane.buf, pad, dim);
     let mut out = ClusterOut {
@@ -357,7 +382,10 @@ fn round_cluster<R: RoundOracle>(
         dl_bits: 0.0,
     };
     // --- Computation and Uplink (Alg. 5 lines 7–18) ---
-    kernels::zero(lv.agg);
+    let streaming = dgc_kernel.phi == 0.0 || agg.path == AggPath::Dense;
+    if streaming {
+        kernels::zero(lv.agg);
+    }
     for j in 0..per_cluster {
         let k = c * per_cluster + j;
         let loss = oracle.lg(k, lv.w_tilde, lv.grad);
@@ -368,13 +396,33 @@ fn round_cluster<R: RoundOracle>(
         }
         let base = 2 * j * pad;
         let (u, v) = lv.dgc[base..base + 2 * pad].split_at_mut(pad);
-        dgc_kernel.step_into(lv.grad, &mut u[..dim], &mut v[..dim], lv.qscratch, &mut lane.msg);
-        out.mu_bits.push(lane.msg.wire_bits(32));
-        lane.msg.add_into(lv.agg, 1.0 / per_cluster as f32);
+        let msg = &mut lane.msgs[if streaming { 0 } else { j }];
+        dgc_kernel.step_into(lv.grad, &mut u[..dim], &mut v[..dim], lv.qscratch, msg);
+        out.mu_bits.push(msg.wire_bits(32));
+        if streaming {
+            msg.add_into(lv.agg, 1.0 / per_cluster as f32);
+        }
     }
     // --- Cluster model update + DL (lines 19–21, 35–39) ---
     // x = −η·ĝ_n; DL message = Ω(x + β·e_n); W̃_n += sent.
-    kernels::scale(lv.agg, -lr);
+    if streaming {
+        kernels::scale(lv.agg, -lr);
+        lane.shadow.mark_dirty();
+    } else {
+        let scale = 1.0 / per_cluster as f32;
+        let parts: Vec<(&SparseVec, f32)> =
+            lane.msgs[..per_cluster].iter().map(|m| (m, scale)).collect();
+        merge::aggregate_adaptive(
+            &agg,
+            &parts,
+            dim,
+            Some(-lr),
+            lv.agg,
+            &mut lane.agg_sparse,
+            &mut lane.merge_scratch,
+            &mut lane.shadow,
+        );
+    }
     dl_kernel.compress_into(lv.agg, lv.dl_e, lv.dl_folded, lv.qscratch, &mut lane.dl);
     out.dl_bits = lane.dl.wire_bits(32);
     lane.dl.add_into(lv.w_tilde, 1.0);
@@ -457,20 +505,39 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
     let mut arena = TensorArena::zeroed(n * lane_stride + global_len);
     let init = oracle.init_params();
     let (lane_chunks, global_buf) = arena.split_lanes_mut(n, lane_stride);
+    // The sparse-merge path needs every worker's message live at once;
+    // with φ_ul = 0 (dense messages) or a forced dense path the streaming
+    // single-buffer flow is kept, so only slot 0 ever grows.
+    let collect_msgs = phi_ul > 0.0 && opts.agg.path != AggPath::Dense;
+    let lane_msg_slots = if collect_msgs { per_cluster } else { 1 };
     let lanes: Vec<Mutex<Lane<'_>>> = lane_chunks
         .into_iter()
         .map(|buf| {
             buf[..dim].copy_from_slice(&init);
             Mutex::new(Lane {
                 buf,
-                msg: SparseVec::empty(dim),
+                msgs: (0..lane_msg_slots).map(|_| SparseVec::empty(dim)).collect(),
                 dl: SparseVec::empty(dim),
+                agg_sparse: SparseVec::empty(dim),
+                merge_scratch: MergeScratch::default(),
+                shadow: DenseShadow::new(),
             })
         })
         .collect();
     let g = sync_bufs(global_buf, pad, dim);
     g.w_global.copy_from_slice(&init);
     let mut sync_msg = SparseVec::empty(dim);
+    // Per-cluster sync messages, merged consensus, and shadow bookkeeping
+    // of the H-sync aggregation (sparse path only; see the sync block).
+    let collect_sync = phi_sul > 0.0 && opts.agg.path != AggPath::Dense;
+    let mut sync_msgs: Vec<SparseVec> = if collect_sync {
+        (0..n).map(|_| SparseVec::empty(dim)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut sync_merged = SparseVec::empty(dim);
+    let mut sync_scratch = MergeScratch::default();
+    let mut sync_shadow = DenseShadow::new();
     let mut log = TrainLog::default();
     let inner = resolve_inner_threads(opts.inner_threads).clamp(1, n);
     // The fan-out needs a thread-safe oracle view; without one the rounds
@@ -511,6 +578,7 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
                         opts.weight_decay,
                         dgc_kernel,
                         dl_kernel,
+                        opts.agg,
                     )
                 })
                 .expect("intra-round fan-out pool failed")
@@ -529,6 +597,7 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
                     opts.weight_decay,
                     dgc_kernel,
                     dl_kernel,
+                    opts.agg,
                 ));
             }
             seq
@@ -554,21 +623,46 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
         if n > 1 && (t + 1) % opts.h_period == 0 {
             // Each SBS ships Δ_n = W_n − W̃ = (W̃_n + e_n) − W̃ through its
             // sparsifying UL encoder; the encoder error is borrowed from
-            // the lane in place — no per-sync allocations.
-            kernels::zero(g.agg);
+            // the lane in place — no per-sync allocations. The N encoded
+            // deltas aggregate through the same density-adaptive dispatch
+            // as the round path (cluster-ordered fold either way; the
+            // sync accumulator's reference baseline is +0.0 — it is
+            // zeroed but never scaled).
+            if !collect_sync {
+                kernels::zero(g.agg);
+                sync_shadow.mark_dirty();
+            }
             for (c, lane_mutex) in lanes.iter().enumerate() {
                 let mut lane = lane_mutex.lock().unwrap();
                 let lv = lane_view(&mut *lane.buf, pad, dim);
                 kernels::add_sub(g.delta, lv.w_tilde, lv.dl_e, g.w_global);
+                let out = if collect_sync { &mut sync_msgs[c] } else { &mut sync_msg };
                 ul_kernel.compress_into(
                     g.delta,
                     &mut g.ul_e[c * pad..c * pad + dim],
                     g.folded,
                     g.qscratch,
-                    &mut sync_msg,
+                    out,
                 );
-                log.bits.sbs_ul += sync_msg.wire_bits(32);
-                sync_msg.add_into(g.agg, 1.0 / n as f32);
+                log.bits.sbs_ul += out.wire_bits(32);
+                if !collect_sync {
+                    out.add_into(g.agg, 1.0 / n as f32);
+                }
+            }
+            if collect_sync {
+                let scale = 1.0 / n as f32;
+                let parts: Vec<(&SparseVec, f32)> =
+                    sync_msgs.iter().map(|m| (m, scale)).collect();
+                merge::aggregate_adaptive(
+                    &opts.agg,
+                    &parts,
+                    dim,
+                    None,
+                    g.agg,
+                    &mut sync_merged,
+                    &mut sync_scratch,
+                    &mut sync_shadow,
+                );
             }
             // MBS: broadcast Ω(mean Δ + β_m·e) and advance the global ref.
             mbs_kernel.compress_into(g.agg, g.mbs_e, g.folded, g.qscratch, &mut sync_msg);
@@ -647,6 +741,7 @@ mod tests {
             eval_every: 0,
             inner_threads: 1,
             pool: None,
+            agg: AggPolicy::default(),
         }
     }
 
@@ -884,6 +979,71 @@ mod tests {
                 assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn agg_path_dispatch_is_bit_exact() {
+        // sparse-merge, dense-scatter, and auto aggregation must produce
+        // byte-identical runs: final params, per-link bits, loss curve,
+        // evals — across round aggregation AND the H-sync aggregation,
+        // with weight decay and all four links sparsified.
+        let run = |path: AggPath| {
+            let mut o = opts(48);
+            o.n_clusters = 4;
+            o.h_period = 4;
+            o.eval_every = 12;
+            o.weight_decay = 1e-3;
+            o.sparsity = SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.9,
+                ..SparsityConfig::default()
+            };
+            o.agg = AggPolicy { path, ..AggPolicy::default() };
+            let mut oracle = QuadraticOracle::new_skewed(48, 8, 0.0, 1.0, 2024);
+            run_hierarchical(&mut oracle, &o)
+        };
+        let dense = run(AggPath::Dense);
+        for path in [AggPath::Sparse, AggPath::Auto] {
+            let other = run(path);
+            let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits_of(&dense.final_params),
+                bits_of(&other.final_params),
+                "{path:?}"
+            );
+            assert_eq!(dense.bits, other.bits, "{path:?}");
+            let curve = |l: &TrainLog| {
+                l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect::<Vec<_>>()
+            };
+            assert_eq!(curve(&dense), curve(&other), "{path:?}");
+            assert_eq!(dense.evals.len(), other.evals.len(), "{path:?}");
+            for ((ia, ma), (ib, mb)) in dense.evals.iter().zip(&other.evals) {
+                assert_eq!(ia, ib);
+                assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "{path:?}");
+            }
+        }
+        // The sparse path under the fan-out must equal the sequential
+        // sparse path too (the lanes carry per-worker message slots).
+        let mut o = opts(24);
+        o.n_clusters = 4;
+        o.h_period = 2;
+        o.inner_threads = 4;
+        o.sparsity = SparsityConfig {
+            enabled: true,
+            phi_mu_ul: 0.9,
+            ..SparsityConfig::default()
+        };
+        o.agg = AggPolicy { path: AggPath::Sparse, ..AggPolicy::default() };
+        let mut oracle = QuadraticOracle::new_skewed(32, 8, 0.0, 1.0, 2025);
+        let fanned = run_hierarchical(&mut oracle, &o);
+        o.inner_threads = 1;
+        let mut oracle = QuadraticOracle::new_skewed(32, 8, 0.0, 1.0, 2025);
+        let seq = run_hierarchical(&mut oracle, &o);
+        assert_eq!(
+            fanned.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            seq.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(fanned.bits, seq.bits);
     }
 
     #[test]

@@ -28,7 +28,8 @@
 //! | [`cli`] | dependency-free argument parser and subcommand dispatch |
 //! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement, nearest-SBS association |
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
-//! | [`sparse`] | DGC sparsification, sparse codec + bit accounting, error accumulation — owning structs + stateless arena kernels |
+//! | [`sparse`] | DGC sparsification, sparse codec + bit accounting + delta-packed `SparseWire`, error accumulation — owning structs + stateless arena kernels |
+//! | [`sparse::merge`] | **sparse-first aggregation**: allocation-free k-way merge consensus (O(Σnnz·log k), bit-identical to the MU-ordered dense scatter), pool-parallel range variant, density-adaptive dispatch (`--agg-path`, `[agg]`), −0.0-exact `DenseShadow` |
 //! | [`tensor`] | **flat tensor arenas + fused kernels**: one cache-aligned allocation for all per-cluster/per-worker hot-path state, bit-exact axpy/scale/scatter kernels, lane splitting for the intra-round fan-out |
 //! | [`pool`] | **persistent deterministic worker pool**: condvar-parked lanes created once per process, per-batch work-stealing queues, ordered-slot reduction, nested leases for the fl/des engines, panic propagation with item context |
 //! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 on the tensor arena with deterministic per-cluster fan-out (`inner_threads`, leased from [`pool`]), quadratic oracles (IID→non-IID skew) |

@@ -8,14 +8,17 @@
 //! hfl train     [--algo fl|hfl|sparse-fl|sparse-hfl] [--model mlp|cnn]
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
 //!               [--inner-threads N] [--pool-threads N]
+//!               [--agg-path auto|sparse|dense]
 //!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
 //! hfl matrix    [--quick|--full] [--threads N] [--pool-threads N]
-//!               [--iters N] [--dim N]
+//!               [--iters N] [--dim N] [--phi F]
+//!               [--agg-path auto|sparse|dense]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
 //! hfl des       [--quick|--full] [--threads N] [--inner-threads N]
-//!               [--pool-threads N] [--iters N] [--dim N]
+//!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
+//!               [--agg-path auto|sparse|dense]
 //!               [--compute-mean S] [--compute-het X]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
@@ -27,6 +30,13 @@
 //! process-wide shared pool); every fan-out — the cross-cell grid and the
 //! nested per-cluster/per-MU lanes — leases from it. Results are
 //! bit-identical for every value (see `hfl::pool`).
+//!
+//! `--agg-path` picks the SBS/MBS aggregation implementation — k-way
+//! sparse merge, dense scatter, or the measured-density `auto` default
+//! (`[agg]` config section) — also bit-identical for every value (see
+//! `hfl::sparse::merge`). `--phi F` pins the grid's sparsity axis to a
+//! single φ cell (the CI determinism job uses it for the φ=0.99
+//! sparse-vs-dense diff).
 
 use anyhow::{bail, Result};
 use hfl::cli::Args;
@@ -182,6 +192,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     // alive until training finishes (dropping it joins the workers).
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let pool = dedicated_pool.as_ref().map(|p| p.handle());
+    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
     args.finish()?;
 
     let (n_clusters, sparse) = match algo.as_str() {
@@ -209,6 +220,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
         eval_every: (iters / 8).max(1),
         inner_threads,
         pool,
+        agg,
     };
     let spec = SyntheticSpec {
         n_train: train_samples,
@@ -298,19 +310,30 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     let write_golden = args.get("write-golden").map(str::to_string);
     let check_golden = args.get("check-golden").map(str::to_string);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
+    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    let phi_pin = args.get_parsed::<f64>("phi")?;
     args.finish()?;
 
-    let spec = if full {
+    let mut spec = if full {
         ScenarioSpec::full_with(&cfg.des)
     } else {
         ScenarioSpec::quick_with(&cfg.des)
     };
+    if let Some(phi) = phi_pin {
+        // Same bound DgcKernel enforces — reject here instead of panicking
+        // inside a pooled worker (invalid setups are errors, not panics).
+        if !(0.0..1.0).contains(&phi) {
+            bail!("--phi {phi} outside [0,1) (DGC keeps at least one coordinate)");
+        }
+        spec.phis = vec![Some(phi)];
+    }
     let mut opts = MatrixOptions {
         threads,
         base_seed: cfg.training.seed,
         compute_mean_s: cfg.des.compute_mean_s,
         compute_het: cfg.des.compute_het,
         pool: dedicated_pool.as_ref().map(|p| p.handle()),
+        agg,
         ..Default::default()
     };
     if let Some(it) = iters {
@@ -349,13 +372,23 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let write_golden = args.get("write-golden").map(str::to_string);
     let check_golden = args.get("check-golden").map(str::to_string);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
+    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    let phi_pin = args.get_parsed::<f64>("phi")?;
     args.finish()?;
 
-    let spec = if full {
+    let mut spec = if full {
         ScenarioSpec::full_des(&cfg.des)
     } else {
         ScenarioSpec::quick_des(&cfg.des)
     };
+    if let Some(phi) = phi_pin {
+        // Same bound DgcKernel enforces — reject here instead of panicking
+        // inside a pooled worker (invalid setups are errors, not panics).
+        if !(0.0..1.0).contains(&phi) {
+            bail!("--phi {phi} outside [0,1) (DGC keeps at least one coordinate)");
+        }
+        spec.phis = vec![Some(phi)];
+    }
     let mut opts = MatrixOptions {
         threads,
         base_seed: cfg.training.seed,
@@ -364,6 +397,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
         compute_het,
         inner_threads,
         pool: dedicated_pool.as_ref().map(|p| p.handle()),
+        agg,
         ..Default::default()
     };
     if let Some(it) = iters {

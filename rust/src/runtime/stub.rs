@@ -12,7 +12,7 @@
 
 use super::manifest::{ArtifactMeta, ModelMeta};
 use crate::data::SyntheticSpec;
-use crate::fl::oracle::{EvalMetrics, GradOracle};
+use crate::fl::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use anyhow::{bail, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -125,6 +125,22 @@ impl GradOracle for ModelOracle {
     }
 
     fn init_params(&mut self) -> Vec<f32> {
+        match self.never {}
+    }
+
+    fn par_view(&self) -> Option<&dyn ParGradOracle> {
+        // Advertise the fan-out-safe view so `--features pjrt` builds
+        // type-check the inner fan-out path (engines no longer hit the
+        // sequential-downgrade branch at compile time for this oracle).
+        // Uninhabited, so this is a pure API commitment; the *native*
+        // oracle still runs sequentially until it grows per-worker
+        // executable instances (ROADMAP item).
+        Some(self)
+    }
+}
+
+impl ParGradOracle for ModelOracle {
+    fn loss_grad_par(&self, _worker: usize, _params: &[f32], _grad_out: &mut [f32]) -> f64 {
         match self.never {}
     }
 }

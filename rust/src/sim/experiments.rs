@@ -154,6 +154,7 @@ where
                 eval_every: scale.eval_every,
                 inner_threads: 1,
                 pool: None,
+                agg: Default::default(),
             };
             let log: TrainLog = run_hierarchical(oracle.as_mut(), &opts);
             if first_trace.is_none() {

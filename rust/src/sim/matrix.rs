@@ -374,6 +374,10 @@ pub struct MatrixOptions {
     /// ([`crate::pool::global_handle`]). Results are bit-identical either
     /// way — the pool only changes where the threads come from.
     pub pool: Option<PoolHandle>,
+    /// Aggregation dispatch inside every cell's engine
+    /// ([`crate::sparse::merge`], `--agg-path`): sparse k-way merge vs
+    /// dense scatter. Bit-identical for every setting.
+    pub agg: crate::sparse::merge::AggPolicy,
 }
 
 impl Default for MatrixOptions {
@@ -392,6 +396,7 @@ impl Default for MatrixOptions {
             compute_het: 0.5,
             inner_threads: 1,
             pool: None,
+            agg: Default::default(),
         }
     }
 }
@@ -454,6 +459,7 @@ pub(crate) fn cell_train_options(
         eval_every: opts.eval_every,
         inner_threads: opts.inner_threads,
         pool: opts.pool.clone(),
+        agg: opts.agg,
     }
 }
 
@@ -681,6 +687,48 @@ mod tests {
         assert_eq!(shared.len(), dedicated.len());
         for (a, b) in shared.iter().zip(&dedicated) {
             assert_eq!(a.trace, b.trace, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn agg_path_produces_identical_golden_traces() {
+        // `--agg-path sparse|dense|auto` must yield identical golden
+        // traces across a grid that exercises both engines (sequential +
+        // DES via the straggler axis) and both aggregation sites.
+        use crate::sparse::merge::{AggPath, AggPolicy};
+        let cfg = Config::smoke();
+        let spec = ScenarioSpec {
+            cells: vec![1, 2],
+            mus_per_cell: vec![4],
+            skews: vec![1.0],
+            phis: vec![Some(0.9), Some(0.99)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![
+                StragglerPolicy::WaitForAll,
+                StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+            ],
+        };
+        let run = |path: AggPath| {
+            let opts = MatrixOptions {
+                threads: 2,
+                iters: 8,
+                dim: 24,
+                eval_every: 4,
+                agg: AggPolicy { path, ..Default::default() },
+                ..Default::default()
+            };
+            run_matrix(&cfg, &spec, &opts).unwrap()
+        };
+        let dense = run(AggPath::Dense);
+        for path in [AggPath::Sparse, AggPath::Auto] {
+            let other = run(path);
+            assert_eq!(dense.len(), other.len());
+            for (a, b) in dense.iter().zip(&other) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.trace, b.trace, "{path:?} {}", a.name);
+            }
         }
     }
 

@@ -1,15 +1,27 @@
 //! Sparse vector wire format: parallel `(index, value)` arrays, the exact
 //! message DGC transmits. Provides dense↔sparse conversion, in-place
-//! accumulation (the aggregation primitive of MBS/SBS), and the bit
-//! accounting used by the latency model (`Q̂ + ⌈log2 Q⌉` bits per surviving
-//! coordinate).
+//! accumulation (the aggregation primitive of MBS/SBS), the bit accounting
+//! used by the latency model (`Q̂ + ⌈log2 Q⌉` bits per surviving
+//! coordinate), and the delta-packed realized byte stream ([`SparseWire`]).
 
 /// A sparse view of a length-`dim` f32 vector.
+///
+/// **Invariant: `indices` is strictly ascending (sorted, unique), every
+/// index is `< dim`, and `values` is equally long.** Every producer in
+/// the crate maintains it — DGC and
+/// the discounted-error encoders extract coordinates in one ascending
+/// scan, [`SparseVec::from_mask`] walks the dense vector front to back,
+/// the k-way merge ([`crate::sparse::merge`]) emits a sorted union, and
+/// [`SparseWire::decode_into`] reconstructs ascending indices from
+/// non-negative gaps. The merge kernel and the wire codec *rely* on it
+/// (`debug_assert`ed there; [`SparseWire::encode`] asserts it
+/// unconditionally, since a violated invariant would silently corrupt the
+/// delta encoding). Check with [`SparseVec::is_sorted_unique`].
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SparseVec {
     /// Logical dense length Q.
     pub dim: usize,
-    /// Sorted, distinct coordinate indices.
+    /// Sorted, distinct coordinate indices (see the struct invariant).
     pub indices: Vec<u32>,
     /// Values aligned with `indices`.
     pub values: Vec<f32>,
@@ -43,6 +55,35 @@ impl SparseVec {
 
     pub fn nnz(&self) -> usize {
         self.indices.len()
+    }
+
+    /// Check the struct invariant: indices strictly ascending and `< dim`,
+    /// and the parallel arrays equally long.
+    pub fn is_sorted_unique(&self) -> bool {
+        self.indices.len() == self.values.len()
+            && self.indices.windows(2).all(|w| w[0] < w[1])
+            && match self.indices.last() {
+                Some(&i) => (i as usize) < self.dim,
+                None => true,
+            }
+    }
+
+    /// Reserve room for at least `additional` more entries in both parallel
+    /// arrays — the reuse paths (`step_into`/`compress_into`) call this
+    /// with the expected survivor count so a warm buffer never reallocates
+    /// mid-extraction.
+    pub fn reserve(&mut self, additional: usize) {
+        self.indices.reserve(additional);
+        self.values.reserve(additional);
+    }
+
+    /// `values[j] *= a` — the sparse counterpart of
+    /// [`crate::tensor::kernels::scale`] over the carried coordinates
+    /// (same per-element expression, bit-identical on them).
+    pub fn scale_values(&mut self, a: f32) {
+        for v in self.values.iter_mut() {
+            *v *= a;
+        }
     }
 
     /// Achieved sparsity φ = 1 − nnz/dim.
@@ -87,6 +128,181 @@ impl SparseVec {
     /// L2 mass of the carried values.
     pub fn l2(&self) -> f64 {
         self.values.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SparseWire: the realized byte stream
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian bit packer over `u64` words.
+#[derive(Debug, Default)]
+struct BitWriter {
+    words: Vec<u64>,
+    bit_len: usize,
+}
+
+impl BitWriter {
+    /// Append the low `bits` bits of `value`.
+    fn push(&mut self, value: u64, bits: u32) {
+        debug_assert!(bits <= 64);
+        debug_assert!(bits == 64 || value < (1u64 << bits), "value {value} overflows {bits} bits");
+        if bits == 0 {
+            return;
+        }
+        let word = self.bit_len / 64;
+        let off = (self.bit_len % 64) as u32;
+        if word == self.words.len() {
+            self.words.push(0);
+        }
+        self.words[word] |= value << off;
+        if off + bits > 64 {
+            self.words.push(value >> (64 - off));
+        }
+        self.bit_len += bits as usize;
+    }
+}
+
+/// Sequential reader over a [`BitWriter`]'s words.
+struct BitReader<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl BitReader<'_> {
+    fn read(&mut self, bits: u32) -> u64 {
+        debug_assert!(bits <= 64);
+        if bits == 0 {
+            return 0;
+        }
+        let word = self.pos / 64;
+        let off = (self.pos % 64) as u32;
+        let mut v = self.words[word] >> off;
+        if off + bits > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        self.pos += bits as usize;
+        if bits == 64 {
+            v
+        } else {
+            v & ((1u64 << bits) - 1)
+        }
+    }
+}
+
+/// Delta-encoded, bit-packed wire form of a [`SparseVec`] — the byte
+/// stream a DGC message actually occupies on the uplink.
+///
+/// Layout (one contiguous bit stream, little-endian within `u64` words):
+///
+/// ```text
+/// [ gap₀ | gap₁ | … | gap_{n−1} ][ v₀ | v₁ | … | v_{n−1} ]
+///   └──────── gap_bits each ───┘  └───── 32 bits each ───┘
+/// gap₀ = idx₀,   gap_j = idx_j − idx_{j−1} − 1   (strictly-ascending ⇒ ≥ 0)
+/// ```
+///
+/// `gap_bits` is the per-message width of the largest gap, so
+/// [`SparseWire::encoded_bits`] `= nnz · (gap_bits + 32)` is **never more
+/// than** the fixed-width accounting `nnz · (⌈log2 dim⌉ + 32)` that
+/// [`SparseVec::wire_bits`] / [`crate::wireless::latency::payload_bits`]
+/// price (a gap cannot exceed `dim − 1`, which needs exactly
+/// `⌈log2 dim⌉` bits) — asserted by the round-trip property suite. The
+/// engines keep *billing* the conservative fixed-width form, so golden
+/// traces and the latency model are unchanged; `SparseWire` is the
+/// realized stream those prices are an upper bound for.
+///
+/// Round-trips exactly: indices and f32 **bit patterns** (NaN payloads,
+/// ±0.0 signs) survive encode→decode untouched.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseWire {
+    /// Logical dense length Q of the encoded vector.
+    pub dim: usize,
+    /// Number of encoded coordinates.
+    pub nnz: usize,
+    /// Bit width of each packed index gap (0 when every gap is 0).
+    gap_bits: u32,
+    /// The packed payload.
+    words: Vec<u64>,
+}
+
+impl SparseWire {
+    /// Bits needed to represent `x` (0 for 0).
+    #[inline]
+    fn bits_for(x: u32) -> u32 {
+        32 - x.leading_zeros()
+    }
+
+    /// Encode `v` (asserts the [`SparseVec`] sorted-unique invariant — a
+    /// violation would corrupt the delta stream silently).
+    pub fn encode(v: &SparseVec) -> Self {
+        assert!(
+            v.is_sorted_unique(),
+            "SparseWire::encode requires sorted unique indices < dim"
+        );
+        let mut max_gap = 0u32;
+        let mut prev: i64 = -1;
+        for &i in &v.indices {
+            let gap = (i as i64 - prev - 1) as u32;
+            max_gap = max_gap.max(gap);
+            prev = i as i64;
+        }
+        let gap_bits = Self::bits_for(max_gap);
+        let mut w = BitWriter::default();
+        let mut prev: i64 = -1;
+        for &i in &v.indices {
+            w.push((i as i64 - prev - 1) as u64, gap_bits);
+            prev = i as i64;
+        }
+        for &x in &v.values {
+            w.push(x.to_bits() as u64, 32);
+        }
+        Self {
+            dim: v.dim,
+            nnz: v.indices.len(),
+            gap_bits,
+            words: w.words,
+        }
+    }
+
+    /// Decode into a reusable [`SparseVec`] (exact: same indices, same
+    /// value bit patterns).
+    pub fn decode_into(&self, out: &mut SparseVec) {
+        out.dim = self.dim;
+        out.indices.clear();
+        out.values.clear();
+        out.reserve(self.nnz);
+        let mut r = BitReader {
+            words: &self.words,
+            pos: 0,
+        };
+        let mut prev: i64 = -1;
+        for _ in 0..self.nnz {
+            let gap = r.read(self.gap_bits) as i64;
+            let idx = prev + 1 + gap;
+            out.indices.push(idx as u32);
+            prev = idx;
+        }
+        for _ in 0..self.nnz {
+            out.values.push(f32::from_bits(r.read(32) as u32));
+        }
+    }
+
+    /// Decode into a fresh [`SparseVec`].
+    pub fn decode(&self) -> SparseVec {
+        let mut out = SparseVec::empty(self.dim);
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Realized payload size in bits: `nnz · (gap_bits + 32)` — never more
+    /// than the fixed-width [`SparseVec::wire_bits`]`(32)` pricing.
+    pub fn encoded_bits(&self) -> u64 {
+        self.nnz as u64 * (self.gap_bits as u64 + 32)
+    }
+
+    /// Backing storage in `u64` words (for transport-size accounting).
+    pub fn words(&self) -> &[u64] {
+        &self.words
     }
 }
 
@@ -182,6 +398,81 @@ mod tests {
         let mut acc = vec![1.0f32, 1.0];
         s.add_into(&mut acc, -0.5);
         assert_eq!(acc, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn sorted_unique_invariant_check() {
+        let ok = SparseVec { dim: 10, indices: vec![0, 3, 9], values: vec![1.0; 3] };
+        assert!(ok.is_sorted_unique());
+        assert!(SparseVec::empty(0).is_sorted_unique());
+        let dup = SparseVec { dim: 10, indices: vec![0, 3, 3], values: vec![1.0; 3] };
+        assert!(!dup.is_sorted_unique());
+        let ragged = SparseVec { dim: 10, indices: vec![0, 3], values: vec![1.0; 3] };
+        assert!(!ragged.is_sorted_unique());
+        let unsorted = SparseVec { dim: 10, indices: vec![3, 0], values: vec![1.0; 2] };
+        assert!(!unsorted.is_sorted_unique());
+        let oob = SparseVec { dim: 10, indices: vec![0, 10], values: vec![1.0; 2] };
+        assert!(!oob.is_sorted_unique());
+    }
+
+    #[test]
+    fn wire_roundtrip_exact_and_within_priced_bits() {
+        let mut rng = Pcg64::seeded(77);
+        for dim in [1usize, 2, 7, 64, 1000, 1 << 14] {
+            for keep in [0.0f64, 0.01, 0.3, 1.0] {
+                let mut v = SparseVec::empty(dim);
+                for i in 0..dim {
+                    if rng.uniform() < keep {
+                        v.indices.push(i as u32);
+                        v.values.push(rng.normal() as f32);
+                    }
+                }
+                let wire = SparseWire::encode(&v);
+                let back = wire.decode();
+                assert_eq!(back.dim, v.dim);
+                assert_eq!(back.indices, v.indices, "dim={dim} keep={keep}");
+                let bits = |s: &SparseVec| s.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&back), bits(&v), "dim={dim} keep={keep}");
+                // The realized stream never exceeds what payload_bits prices.
+                assert!(
+                    wire.encoded_bits() as f64 <= v.wire_bits(32) + 1e-9,
+                    "dim={dim} keep={keep}: {} > {}",
+                    wire.encoded_bits(),
+                    v.wire_bits(32)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wire_preserves_value_bit_patterns() {
+        // ±0.0 and NaN payloads must survive the 32-bit value packing.
+        let v = SparseVec {
+            dim: 8,
+            indices: vec![0, 2, 5, 7],
+            values: vec![-0.0, f32::from_bits(0x7fc0_1234), f32::MIN_POSITIVE / 2.0, -1.5e-39],
+        };
+        let back = SparseWire::encode(&v).decode();
+        for (a, b) in v.values.iter().zip(&back.values) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wire_dense_run_uses_zero_gap_bits() {
+        // Consecutive indices ⇒ every gap is 0 ⇒ 32 bits per value only.
+        let v = SparseVec { dim: 100, indices: (0..100).collect(), values: vec![1.0; 100] };
+        let wire = SparseWire::encode(&v);
+        assert_eq!(wire.encoded_bits(), 100 * 32);
+        assert_eq!(wire.decode(), v);
+        assert!(!wire.words().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted unique")]
+    fn wire_rejects_invariant_violation() {
+        let bad = SparseVec { dim: 4, indices: vec![2, 1], values: vec![1.0, 2.0] };
+        let _ = SparseWire::encode(&bad);
     }
 
     #[test]

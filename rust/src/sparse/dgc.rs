@@ -67,16 +67,19 @@ impl DgcKernel {
             // buffer — this is exactly classical momentum SGD (Eq. 23),
             // the paper's dense FL/HFL baseline. (DGC's momentum-factor
             // masking exists to stop *stale* momentum from sparsified,
-            // delayed coordinates; with φ=0 nothing is delayed.)
-            for (i, &val) in v.iter().enumerate() {
-                out.indices.push(i as u32);
-                out.values.push(val);
-            }
+            // delayed coordinates; with φ=0 nothing is delayed.) Bulk
+            // `extend`s: one reserve + memcpy each instead of per-element
+            // push pairs with interleaved capacity checks.
+            out.indices.extend(0..v.len() as u32);
+            out.values.extend_from_slice(v);
             kernels::zero(v);
             return;
         }
         // Threshold at the φ-quantile of |v|, then extract ĝ = v⊙mask and
-        // zero masked u, v (momentum-factor masking, Eq. 27–29).
+        // zero masked u, v (momentum-factor masking, Eq. 27–29). A warm
+        // reused `out` already has the capacity; a cold one reserves the
+        // expected survivor count once instead of doubling through it.
+        out.reserve(((1.0 - self.phi) * v.len() as f64).ceil() as usize);
         let th = quantile_abs_into(v, self.phi, scratch);
         for i in 0..v.len() {
             if v[i].abs() >= th {

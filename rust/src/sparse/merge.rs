@@ -1,0 +1,663 @@
+//! Sparse-first aggregation: an allocation-free **k-way merge** that folds
+//! N sparse updates into one sparse consensus in `O(Σnnz · log k)` — the
+//! server-side replacement for scatter-adding every message into a dense
+//! `dim`-length accumulator — plus the density-adaptive dispatch policy
+//! ([`AggPolicy`]) the engines use to choose between the two paths, and the
+//! [`DenseShadow`] bookkeeping that keeps the dense encoder-input buffer
+//! bit-identical to the historical `zero → scatter → scale` sequence while
+//! only touching `O(nnz)` coordinates per round.
+//!
+//! ## Bit-exactness contract
+//!
+//! The merge reproduces the MU-ordered dense fold **exactly**: for every
+//! output coordinate `i` it computes
+//!
+//! ```text
+//! acc = 0.0f32;  for each part j containing i (ascending j): acc += w_j · v_j[i]
+//! ```
+//!
+//! which is the same f32 expression, in the same order, as the reference
+//! `out[i] += w_j · v_j[i]` scatter fold over a zeroed accumulator
+//! ([`crate::tensor::kernels::scatter_add`]). Ties (a coordinate present
+//! in several parts) pop from the merge heap in ascending part order
+//! because the heap key is `(index, part)` — so the result is
+//! bit-identical to the dense path, and golden fixtures recorded against
+//! the scatter engines pass unchanged. The pool-parallel variant
+//! ([`merge_weighted_par`]) partitions the *coordinate space* into
+//! contiguous per-lane ranges and merges each range independently; the
+//! per-coordinate fold order is unchanged, so the concatenated result is
+//! bit-identical for every width.
+//!
+//! The merge requires (and `debug_assert`s) the [`SparseVec`]
+//! sorted-unique-index invariant — see the [`SparseVec`] docs.
+//!
+//! ## The −0.0 emulation (`DenseShadow`)
+//!
+//! The reference round aggregation ends with `scale(agg, -lr)`, which turns
+//! every *untouched* coordinate into `+0.0 · (−lr) = −0.0`. A sparse path
+//! that leaves untouched coordinates at `+0.0` would hand the downstream
+//! encoder a buffer differing in the sign bit of zero — harmless in value
+//! but visible to the `to_bits` golden contract in pathological
+//! cancellation cases. [`DenseShadow::write`] therefore restores the
+//! previous round's touched coordinates to the exact baseline bit pattern
+//! (`−0.0` for post-scale round aggregates, `+0.0` for sync aggregates)
+//! before writing the merged consensus, falling back to one full
+//! `fill(baseline)` only when the baseline changes or the buffer was last
+//! written by the dense path.
+
+use super::codec::SparseVec;
+use crate::pool::PoolHandle;
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+/// Which aggregation path the engines take at their SBS/MBS call sites.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggPath {
+    /// Measure the round's total message nnz and pick the faster path
+    /// against [`AggPolicy::crossover`].
+    #[default]
+    Auto,
+    /// Always k-way merge (bit-identical to `Dense`, different wall-clock).
+    Sparse,
+    /// Always dense scatter-add — the historical path, byte for byte.
+    Dense,
+}
+
+impl AggPath {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(AggPath::Auto),
+            "sparse" => Ok(AggPath::Sparse),
+            "dense" => Ok(AggPath::Dense),
+            other => bail!("unknown aggregation path `{other}` (expected auto|sparse|dense)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AggPath::Auto => "auto",
+            AggPath::Sparse => "sparse",
+            AggPath::Dense => "dense",
+        }
+    }
+}
+
+/// Default density crossover of [`AggPolicy`]: the sparse merge wins while
+/// the round's total message nnz stays below this fraction of `dim`.
+///
+/// Tuned on the `micro_hotpath` `sparse_merge/{kway,scatter}` pair: the
+/// dense path streams ≈ 2·dim floats (zero + scale) regardless of
+/// sparsity, the merge touches ≈ Σnnz heap entries at a few ops each, so
+/// the break-even sits well above the paper's headline regime (φ = 0.99 ×
+/// 16 MUs ⇒ Σnnz/dim ≈ 0.16). The log k factor is deliberately folded
+/// into the constant — k is small and bounded in every deployment shape.
+/// Override per run with `[agg] crossover` in the config file.
+pub const AGG_DENSITY_CROSSOVER: f64 = 0.25;
+
+/// Density-adaptive aggregation dispatch, threaded from `[agg]` config /
+/// `--agg-path` down to every SBS/MBS aggregation call site.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AggPolicy {
+    pub path: AggPath,
+    /// Auto-path crossover: use the sparse merge while
+    /// `total_nnz ≤ crossover · dim`.
+    pub crossover: f64,
+}
+
+impl Default for AggPolicy {
+    fn default() -> Self {
+        Self {
+            path: AggPath::Auto,
+            crossover: AGG_DENSITY_CROSSOVER,
+        }
+    }
+}
+
+impl AggPolicy {
+    /// Should this round's aggregation take the sparse-merge path, given
+    /// the measured total message nnz?
+    pub fn use_sparse(&self, total_nnz: usize, dim: usize) -> bool {
+        match self.path {
+            AggPath::Dense => false,
+            AggPath::Sparse => true,
+            AggPath::Auto => (total_nnz as f64) <= self.crossover * dim as f64,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.crossover.is_finite() || self.crossover <= 0.0 || self.crossover > 1.0 {
+            bail!("agg crossover must be in (0, 1], got {}", self.crossover);
+        }
+        Ok(())
+    }
+}
+
+/// Reusable scratch of the k-way merge: the `(index, part)` min-heap and
+/// the per-part cursors. Grows to the part count once, then the merge is
+/// allocation-free (apart from `out`'s own growth).
+#[derive(Clone, Debug, Default)]
+pub struct MergeScratch {
+    heap: Vec<u64>,
+    cursors: Vec<usize>,
+}
+
+#[inline]
+fn heap_key(idx: u32, part: usize) -> u64 {
+    ((idx as u64) << 32) | part as u64
+}
+
+#[inline]
+fn heap_push(h: &mut Vec<u64>, key: u64) {
+    h.push(key);
+    let mut i = h.len() - 1;
+    while i > 0 {
+        let p = (i - 1) / 2;
+        if h[p] <= h[i] {
+            break;
+        }
+        h.swap(p, i);
+        i = p;
+    }
+}
+
+#[inline]
+fn heap_pop(h: &mut Vec<u64>) -> Option<u64> {
+    if h.is_empty() {
+        return None;
+    }
+    let top = h.swap_remove(0);
+    let n = h.len();
+    let mut i = 0;
+    loop {
+        let l = 2 * i + 1;
+        if l >= n {
+            break;
+        }
+        let r = l + 1;
+        let m = if r < n && h[r] < h[l] { r } else { l };
+        if h[i] <= h[m] {
+            break;
+        }
+        h.swap(i, m);
+        i = m;
+    }
+    Some(top)
+}
+
+/// Merge the coordinate range `[lo, hi)` of every part into `out`
+/// (appending), folding each coordinate's contributions in part order.
+fn merge_range(
+    parts: &[(&SparseVec, f32)],
+    lo: u64,
+    hi: u64,
+    out: &mut SparseVec,
+    scratch: &mut MergeScratch,
+) {
+    scratch.heap.clear();
+    scratch.cursors.clear();
+    scratch.cursors.resize(parts.len(), 0);
+    for (j, (p, _)) in parts.iter().enumerate() {
+        let start = p.indices.partition_point(|&i| (i as u64) < lo);
+        scratch.cursors[j] = start;
+        if start < p.indices.len() && (p.indices[start] as u64) < hi {
+            heap_push(&mut scratch.heap, heap_key(p.indices[start], j));
+        }
+    }
+    let mut cur: Option<u32> = None;
+    let mut acc = 0.0f32;
+    while let Some(key) = heap_pop(&mut scratch.heap) {
+        let idx = (key >> 32) as u32;
+        let j = (key & 0xffff_ffff) as usize;
+        let (p, w) = parts[j];
+        let pos = scratch.cursors[j];
+        let v = p.values[pos];
+        scratch.cursors[j] = pos + 1;
+        if pos + 1 < p.indices.len() && (p.indices[pos + 1] as u64) < hi {
+            heap_push(&mut scratch.heap, heap_key(p.indices[pos + 1], j));
+        }
+        match cur {
+            Some(ci) if ci == idx => {}
+            _ => {
+                if let Some(ci) = cur {
+                    out.indices.push(ci);
+                    out.values.push(acc);
+                }
+                cur = Some(idx);
+                acc = 0.0;
+            }
+        }
+        // The reference scatter expression, contribution by contribution:
+        // `out[i] += w · v` over a +0.0 start, in ascending part order.
+        acc += w * v;
+    }
+    if let Some(ci) = cur {
+        out.indices.push(ci);
+        out.values.push(acc);
+    }
+}
+
+/// K-way merge of `parts` (each `(message, weight)`) into the sparse
+/// consensus `out`: `out` carries the sorted union of the part indices,
+/// each value the part-ordered fold `Σ_j w_j · v_j[i]` — bit-identical to
+/// scatter-adding every part into a zeroed dense accumulator in the same
+/// order. `O(Σnnz · log k)`; allocation-free given warm `scratch`/`out`.
+pub fn merge_weighted_into(
+    parts: &[(&SparseVec, f32)],
+    dim: usize,
+    out: &mut SparseVec,
+    scratch: &mut MergeScratch,
+) {
+    for (p, _) in parts {
+        debug_assert_eq!(p.dim, dim, "merge part dimension mismatch");
+        debug_assert!(p.is_sorted_unique(), "merge parts need sorted unique indices");
+    }
+    out.dim = dim;
+    out.indices.clear();
+    out.values.clear();
+    merge_range(parts, 0, dim as u64, out, scratch);
+}
+
+/// Per-lane scratch of [`merge_weighted_par`]: one output buffer + merge
+/// scratch per coordinate range, reused across calls.
+#[derive(Debug, Default)]
+pub struct ParMergeScratch {
+    lanes: Vec<Mutex<(SparseVec, MergeScratch)>>,
+}
+
+/// Pool-parallel k-way merge: partitions the coordinate space `[0, dim)`
+/// into `width` contiguous ranges, merges each range independently on a
+/// lane of `pool` (the process-wide shared pool when `None`), and
+/// concatenates the per-range results in range order. Each coordinate's
+/// fold is executed by exactly one lane with the identical part-ordered
+/// arithmetic of [`merge_weighted_into`], so the result is **bit-identical
+/// to the sequential merge (and to the dense scatter fold) at any width**.
+///
+/// The engines deliberately do *not* route [`aggregate_adaptive`] through
+/// this variant: their parallelism budget is already spent on the
+/// cluster/MU lane fan-outs, and a nested range fan-out per aggregation
+/// would contend for the same pool. It is exposed (and property-tested at
+/// widths {1, 2, 8}) for callers aggregating very large dims outside an
+/// engine fan-out; wiring it into the engines' sync points — which run on
+/// the submitting thread with idle lanes — is a ROADMAP follow-up,
+/// pending measurement.
+pub fn merge_weighted_par(
+    parts: &[(&SparseVec, f32)],
+    dim: usize,
+    width: usize,
+    pool: Option<&PoolHandle>,
+    out: &mut SparseVec,
+    scratch: &mut ParMergeScratch,
+) -> Result<()> {
+    if width == 0 {
+        bail!("parallel merge needs at least one lane");
+    }
+    while scratch.lanes.len() < width {
+        scratch.lanes.push(Mutex::new((SparseVec::default(), MergeScratch::default())));
+    }
+    for (p, _) in parts {
+        debug_assert_eq!(p.dim, dim, "merge part dimension mismatch");
+        debug_assert!(p.is_sorted_unique(), "merge parts need sorted unique indices");
+    }
+    let handle = match pool {
+        Some(h) => h.clone(),
+        None => crate::pool::global_handle(),
+    };
+    let lanes = &scratch.lanes;
+    handle.run_ordered(width, width, |r| {
+        let lo = dim as u64 * r as u64 / width as u64;
+        let hi = dim as u64 * (r as u64 + 1) / width as u64;
+        let mut lane = lanes[r].lock().unwrap();
+        let (buf, ms) = &mut *lane;
+        buf.dim = dim;
+        buf.indices.clear();
+        buf.values.clear();
+        merge_range(parts, lo, hi, buf, ms);
+    })?;
+    out.dim = dim;
+    out.indices.clear();
+    out.values.clear();
+    for lane in &scratch.lanes[..width] {
+        let lane = lane.lock().unwrap();
+        out.indices.extend_from_slice(&lane.0.indices);
+        out.values.extend_from_slice(&lane.0.values);
+    }
+    Ok(())
+}
+
+/// One density-adaptive aggregation — the single definition of the
+/// dispatch every SBS/MBS call site (fl rounds + H-sync, DES cluster
+/// aggregation + sync, coordinator SBS/MBS) goes through, so the
+/// bit-exactness contract cannot drift apart across sites.
+///
+/// Folds `parts` into the dense accumulator `buf` exactly as the
+/// reference `zero → scatter(part order) → [scale]` sequence would:
+///
+/// * **dense path** (policy says scatter): literally that sequence, via
+///   the reference kernels;
+/// * **sparse path**: k-way merge into `merged` (same per-coordinate
+///   fold), values scaled by `post_scale`, written through `shadow` with
+///   the baseline every untouched coordinate holds after the reference
+///   sequence — computed as the reference's own `0.0 * post_scale`
+///   expression (−0.0 for the round path's `−lr`), or `+0.0` when no
+///   scale runs (sync accumulators).
+///
+/// `post_scale = Some(a)` multiplies the aggregate after the fold (the
+/// round path's `−lr`); `None` leaves it unscaled. The merge itself is
+/// allocation-free over warm scratch; the k-element `parts` list is the
+/// caller's (engines rebuild it per aggregation — k pointers, negligible
+/// against the O(nnz) fold).
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate_adaptive(
+    policy: &AggPolicy,
+    parts: &[(&SparseVec, f32)],
+    dim: usize,
+    post_scale: Option<f32>,
+    buf: &mut [f32],
+    merged: &mut SparseVec,
+    scratch: &mut MergeScratch,
+    shadow: &mut DenseShadow,
+) {
+    let total_nnz: usize = parts.iter().map(|(m, _)| m.nnz()).sum();
+    if policy.use_sparse(total_nnz, dim) {
+        merge_weighted_into(parts, dim, merged, scratch);
+        let baseline = match post_scale {
+            Some(a) => {
+                merged.scale_values(a);
+                0.0f32 * a
+            }
+            None => 0.0,
+        };
+        shadow.write(buf, baseline, merged);
+    } else {
+        crate::tensor::kernels::zero(buf);
+        for (m, w) in parts {
+            m.add_into(buf, *w);
+        }
+        if let Some(a) = post_scale {
+            crate::tensor::kernels::scale(buf, a);
+        }
+        shadow.mark_dirty();
+    }
+}
+
+/// Bookkeeping that lets the sparse aggregation path hand downstream
+/// encoders a dense buffer **bit-identical** to the reference
+/// `zero → scatter → [scale]` sequence while writing only `O(nnz)`
+/// coordinates per use (steady state).
+///
+/// Contract: after [`DenseShadow::write`]`(buf, baseline, merged)`, `buf`
+/// holds `merged`'s values at its indices and the exact `baseline` bit
+/// pattern everywhere else — `−0.0` reproduces the post-`scale(-lr)` state
+/// of the round path, `+0.0` the freshly zeroed state of the sync path.
+/// Any dense-path use of the same buffer must call
+/// [`DenseShadow::mark_dirty`]; the next sparse use then pays one full
+/// `fill` to re-establish the baseline.
+#[derive(Clone, Debug, Default)]
+pub struct DenseShadow {
+    /// Bit pattern every un-tracked coordinate currently holds (`None`
+    /// after a dense-path write left the buffer in an unknown state).
+    baseline: Option<u32>,
+    /// Coordinates of the last sparse write, to be restored next time.
+    touched: Vec<u32>,
+}
+
+impl DenseShadow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The buffer was written outside this shadow's control (dense path).
+    pub fn mark_dirty(&mut self) {
+        self.baseline = None;
+        self.touched.clear();
+    }
+
+    /// Establish `baseline` everywhere except `merged`'s coordinates,
+    /// which receive `merged`'s values. `O(prev_nnz + nnz)` when the
+    /// baseline is unchanged; one `fill` otherwise.
+    pub fn write(&mut self, buf: &mut [f32], baseline: f32, merged: &SparseVec) {
+        assert_eq!(buf.len(), merged.dim, "shadow buffer dimension mismatch");
+        let b_bits = baseline.to_bits();
+        if self.baseline == Some(b_bits) {
+            for &i in &self.touched {
+                buf[i as usize] = baseline;
+            }
+        } else {
+            buf.fill(baseline);
+            self.baseline = Some(b_bits);
+        }
+        for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+            buf[i as usize] = v;
+        }
+        self.touched.clear();
+        self.touched.extend_from_slice(&merged.indices);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::kernels;
+    use crate::util::rng::Pcg64;
+
+    /// Random sparse parts with the given keep probability, plus weights.
+    fn random_parts(
+        rng: &mut Pcg64,
+        k: usize,
+        dim: usize,
+        keep: f64,
+    ) -> Vec<(SparseVec, f32)> {
+        (0..k)
+            .map(|_| {
+                let dense: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let mask: Vec<bool> = (0..dim).map(|_| rng.uniform() < keep).collect();
+                let sv = SparseVec::from_mask(&dense, |i, _| mask[i]);
+                (sv, rng.uniform_range(0.1, 2.0) as f32)
+            })
+            .collect()
+    }
+
+    /// The reference: scatter every part into a zeroed dense accumulator.
+    fn dense_reference(parts: &[(SparseVec, f32)], dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        for (p, w) in parts {
+            kernels::scatter_add(&mut out, &p.indices, &p.values, *w);
+        }
+        out
+    }
+
+    fn as_refs(parts: &[(SparseVec, f32)]) -> Vec<(&SparseVec, f32)> {
+        parts.iter().map(|(p, w)| (p, *w)).collect()
+    }
+
+    #[test]
+    fn merge_matches_scatter_bit_for_bit() {
+        let mut rng = Pcg64::seeded(71);
+        let mut out = SparseVec::default();
+        let mut scratch = MergeScratch::default();
+        for &(k, dim, keep) in
+            &[(1usize, 50usize, 0.5f64), (3, 100, 0.1), (8, 64, 0.9), (16, 257, 0.01)]
+        {
+            let parts = random_parts(&mut rng, k, dim, keep);
+            let reference = dense_reference(&parts, dim);
+            merge_weighted_into(&as_refs(&parts), dim, &mut out, &mut scratch);
+            assert!(out.is_sorted_unique(), "k={k}");
+            let mut dense = vec![0.0f32; dim];
+            for (&i, &v) in out.indices.iter().zip(&out.values) {
+                dense[i as usize] = v;
+            }
+            for i in 0..dim {
+                assert_eq!(
+                    dense[i].to_bits(),
+                    reference[i].to_bits(),
+                    "k={k} dim={dim} keep={keep} coord {i}"
+                );
+            }
+            // Union completeness: every coordinate present in any part
+            // appears in the merge output.
+            let union: std::collections::BTreeSet<u32> = parts
+                .iter()
+                .flat_map(|(p, _)| p.indices.iter().copied())
+                .collect();
+            assert_eq!(out.indices, union.into_iter().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn tie_fold_order_is_part_order() {
+        // Two parts sharing a coordinate: the fold must be
+        // (0 + w0·a) + w1·b, not any reassociation. Pick values where
+        // f32 rounding distinguishes the orders.
+        let a = SparseVec { dim: 4, indices: vec![2], values: vec![1.0e-7] };
+        let b = SparseVec { dim: 4, indices: vec![2], values: vec![1.0] };
+        let parts = vec![(a, 1.0f32), (b, 1.0f32)];
+        let reference = dense_reference(&parts, 4);
+        let mut out = SparseVec::default();
+        merge_weighted_into(&as_refs(&parts), 4, &mut out, &mut MergeScratch::default());
+        assert_eq!(out.indices, vec![2]);
+        assert_eq!(out.values[0].to_bits(), reference[2].to_bits());
+    }
+
+    #[test]
+    fn empty_parts_and_no_parts() {
+        let mut out = SparseVec::default();
+        let mut scratch = MergeScratch::default();
+        merge_weighted_into(&[], 10, &mut out, &mut scratch);
+        assert_eq!(out.dim, 10);
+        assert_eq!(out.nnz(), 0);
+        let empty = SparseVec::empty(10);
+        merge_weighted_into(&[(&empty, 1.0), (&empty, 0.5)], 10, &mut out, &mut scratch);
+        assert_eq!(out.nnz(), 0);
+    }
+
+    #[test]
+    fn parallel_merge_is_bit_identical_for_every_width() {
+        let mut rng = Pcg64::seeded(72);
+        let parts = random_parts(&mut rng, 6, 300, 0.2);
+        let refs = as_refs(&parts);
+        let mut seq = SparseVec::default();
+        merge_weighted_into(&refs, 300, &mut seq, &mut MergeScratch::default());
+        let mut scratch = ParMergeScratch::default();
+        for width in [1usize, 2, 3, 8] {
+            let mut par = SparseVec::default();
+            merge_weighted_par(&refs, 300, width, None, &mut par, &mut scratch).unwrap();
+            assert_eq!(par.indices, seq.indices, "width={width}");
+            let bits = |v: &SparseVec| v.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&par), bits(&seq), "width={width}");
+            assert_eq!(par.dim, 300);
+        }
+        assert!(merge_weighted_par(&refs, 300, 0, None, &mut seq, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn shadow_reproduces_zero_scatter_scale_sequence() {
+        let dim = 40;
+        let mut rng = Pcg64::seeded(73);
+        let mut shadow = DenseShadow::new();
+        let mut buf = vec![0.0f32; dim];
+        let mut scratch = MergeScratch::default();
+        let mut merged = SparseVec::default();
+        for round in 0..6 {
+            let parts = random_parts(&mut rng, 4, dim, 0.15);
+            let lr = 0.05f32 * (round + 1) as f32;
+            // Reference: zero → scatter → scale(-lr), fresh buffer.
+            let mut reference = dense_reference(&parts, dim);
+            kernels::scale(&mut reference, -lr);
+            // Sparse path: merge → scale values → shadow write at −0.0.
+            merge_weighted_into(&as_refs(&parts), dim, &mut merged, &mut scratch);
+            merged.scale_values(-lr);
+            shadow.write(&mut buf, -0.0, &merged);
+            for i in 0..dim {
+                assert_eq!(
+                    buf[i].to_bits(),
+                    reference[i].to_bits(),
+                    "round {round} coord {i}"
+                );
+            }
+        }
+        // A baseline flip (sync-style +0.0 use of the same buffer) refills.
+        let parts = random_parts(&mut rng, 2, dim, 0.1);
+        merge_weighted_into(&as_refs(&parts), dim, &mut merged, &mut scratch);
+        shadow.write(&mut buf, 0.0, &merged);
+        let reference = dense_reference(&parts, dim);
+        for i in 0..dim {
+            assert_eq!(buf[i].to_bits(), reference[i].to_bits(), "sync coord {i}");
+        }
+        // Dense-path interference → mark_dirty → next write still exact.
+        buf.iter_mut().for_each(|x| *x = 9.0);
+        shadow.mark_dirty();
+        shadow.write(&mut buf, 0.0, &merged);
+        for i in 0..dim {
+            assert_eq!(buf[i].to_bits(), reference[i].to_bits(), "post-dirty coord {i}");
+        }
+    }
+
+    #[test]
+    fn aggregate_adaptive_matches_reference_on_both_paths() {
+        // Forced Sparse and forced Dense must leave the accumulator
+        // bit-identical to the reference zero → scatter → [scale]
+        // sequence, across both the scaled (round) and unscaled (sync)
+        // shapes, with interleaved path flips on one buffer.
+        let dim = 60;
+        let mut rng = Pcg64::seeded(74);
+        let mut merged = SparseVec::default();
+        let mut scratch = MergeScratch::default();
+        for post_scale in [Some(-0.07f32), None] {
+            let mut bufs = [vec![0.0f32; dim], vec![0.0f32; dim]];
+            let mut shadows = [DenseShadow::new(), DenseShadow::new()];
+            for round in 0..5 {
+                let parts = random_parts(&mut rng, 3, dim, 0.2);
+                let refs = as_refs(&parts);
+                let mut reference = dense_reference(&parts, dim);
+                if let Some(a) = post_scale {
+                    kernels::scale(&mut reference, a);
+                }
+                for (which, path) in [(0usize, AggPath::Sparse), (1, AggPath::Dense)] {
+                    // Alternate Auto in to flip paths on the same buffer.
+                    let path = if round % 2 == 1 { AggPath::Auto } else { path };
+                    let policy = AggPolicy { path, ..AggPolicy::default() };
+                    aggregate_adaptive(
+                        &policy,
+                        &refs,
+                        dim,
+                        post_scale,
+                        &mut bufs[which],
+                        &mut merged,
+                        &mut scratch,
+                        &mut shadows[which],
+                    );
+                    for i in 0..dim {
+                        assert_eq!(
+                            bufs[which][i].to_bits(),
+                            reference[i].to_bits(),
+                            "round {round} path {path:?} scale {post_scale:?} coord {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agg_path_parse_and_policy() {
+        assert_eq!(AggPath::parse("auto").unwrap(), AggPath::Auto);
+        assert_eq!(AggPath::parse("sparse").unwrap(), AggPath::Sparse);
+        assert_eq!(AggPath::parse("dense").unwrap(), AggPath::Dense);
+        assert!(AggPath::parse("fast").is_err());
+        let p = AggPolicy::default();
+        p.validate().unwrap();
+        assert_eq!(p.path.as_str(), "auto");
+        // φ=0.99 × 16 MUs (the paper's headline regime) must take the
+        // sparse path under the default crossover.
+        let dim = 1 << 20;
+        assert!(p.use_sparse(16 * dim / 100, dim));
+        // Dense-ish traffic must not.
+        assert!(!p.use_sparse(dim / 2, dim));
+        assert!(AggPolicy { path: AggPath::Auto, crossover: 0.0 }.validate().is_err());
+        assert!(AggPolicy { path: AggPath::Auto, crossover: 1.5 }.validate().is_err());
+        let forced = AggPolicy { path: AggPath::Sparse, ..Default::default() };
+        assert!(forced.use_sparse(usize::MAX, 1));
+        let dense = AggPolicy { path: AggPath::Dense, ..Default::default() };
+        assert!(!dense.use_sparse(0, 1 << 20));
+    }
+}

@@ -1,21 +1,27 @@
 //! Sparse communication (§IV): DGC-style top-k gradient sparsification with
-//! momentum correction ([`dgc`]), the sparse index+value wire format and
-//! its bit accounting ([`codec`]), and discounted error accumulation for
-//! the four sparsified links of the hierarchy ([`error_accum`]).
+//! momentum correction ([`dgc`]), the sparse index+value wire format, its
+//! bit accounting and the delta-packed realized stream ([`codec`]),
+//! discounted error accumulation for the four sparsified links of the
+//! hierarchy ([`error_accum`]), and the sparse-first aggregation kernels —
+//! allocation-free k-way merge consensus plus the density-adaptive
+//! dispatch policy — behind the SBS/MBS aggregation call sites ([`merge`]).
 //!
 //! Each compressor comes in two forms: an owning struct
 //! ([`DgcCompressor`], [`DiscountedError`]) and a stateless slice-based
 //! kernel ([`DgcKernel`], [`DiscountKernel`]) over caller-provided buffers,
 //! which lets the flat training engine keep all compressor state in one
 //! contiguous [`crate::tensor::TensorArena`]. Both forms execute identical
-//! arithmetic (bit-exact).
+//! arithmetic (bit-exact); so does the k-way merge relative to the dense
+//! scatter fold it replaces (see the [`merge`] module docs).
 
 pub mod codec;
 pub mod dgc;
 pub mod error_accum;
+pub mod merge;
 pub mod quantize;
 
-pub use codec::SparseVec;
+pub use codec::{SparseVec, SparseWire};
 pub use dgc::{DgcCompressor, DgcKernel};
 pub use error_accum::{DiscountKernel, DiscountedError};
+pub use merge::{AggPath, AggPolicy, DenseShadow, MergeScratch};
 pub use quantize::QuantizedVec;

@@ -42,6 +42,7 @@ fn train_opts(sparse: bool, n_clusters: usize) -> TrainOptions {
         eval_every: 0,
         inner_threads: 1,
         pool: None,
+        agg: Default::default(),
     }
 }
 

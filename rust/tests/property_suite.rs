@@ -23,7 +23,8 @@ use hfl::config::{Config, SparsityConfig};
 use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
 use hfl::fl::{run_hierarchical, QuadraticOracle, TrainLog, TrainOptions};
 use hfl::pool::{PoolHandle, WorkerPool};
-use hfl::sparse::{DgcCompressor, SparseVec};
+use hfl::sparse::merge::{merge_weighted_into, merge_weighted_par, MergeScratch, ParMergeScratch};
+use hfl::sparse::{DgcCompressor, SparseVec, SparseWire};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
 use hfl::util::rng::Pcg64;
 use hfl::wireless::broadcast::{broadcast_latency, BroadcastParams};
@@ -644,6 +645,116 @@ fn prop_aggregate_matches_manual_sum() {
         sb.add_into(&mut manual, 0.5);
         if agg != manual {
             return Err("aggregate != manual scatter-adds".into());
+        }
+        Ok(())
+    });
+}
+
+// --- 6. Sparse-first aggregation: k-way merge ≡ MU-ordered scatter ----------
+
+/// `(k, dim, φ selector, seed)` for the merge property.
+struct MergeCase;
+impl Gen for MergeCase {
+    type Value = (usize, usize, usize, u64);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            1 + rng.uniform_usize(16),
+            8 + rng.uniform_usize(400),
+            rng.uniform_usize(4),
+            rng.next_u64(),
+        )
+    }
+}
+
+#[test]
+fn prop_kway_merge_bit_identical_to_mu_ordered_scatter() {
+    // The k-way merge (sequential AND pool-parallel at widths {1, 2, 8})
+    // must reproduce the MU-ordered dense scatter fold bit for bit, on
+    // real DGC-extracted messages across φ ∈ {0, 0.5, 0.9, 0.99} with
+    // non-uniform per-part weights (the DES stale-update shape).
+    check(
+        &PropConfig { cases: 60, ..Default::default() },
+        &MergeCase,
+        |&(k, dim, phi_sel, seed)| {
+            let phi = [0.0, 0.5, 0.9, 0.99][phi_sel];
+            let mut rng = Pcg64::seeded(seed);
+            let mut parts: Vec<(SparseVec, f32)> = Vec::new();
+            for _ in 0..k {
+                let mut c = DgcCompressor::new(dim, 0.9, phi);
+                let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let msg = c.step(&g);
+                if !msg.is_sorted_unique() {
+                    return Err("DGC message violates the sorted-unique invariant".into());
+                }
+                parts.push((msg, rng.uniform_range(0.05, 1.5) as f32));
+            }
+            let refs: Vec<(&SparseVec, f32)> = parts.iter().map(|(p, w)| (p, *w)).collect();
+            // MU-ordered dense scatter fold — the reference arithmetic.
+            let mut reference = vec![0.0f32; dim];
+            for (p, w) in &parts {
+                p.add_into(&mut reference, *w);
+            }
+            let mut merged = SparseVec::default();
+            merge_weighted_into(&refs, dim, &mut merged, &mut MergeScratch::default());
+            if !merged.is_sorted_unique() {
+                return Err("merge output violates the sorted-unique invariant".into());
+            }
+            let mut dense = vec![0.0f32; dim];
+            for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+                dense[i as usize] = v;
+            }
+            for i in 0..dim {
+                if dense[i].to_bits() != reference[i].to_bits() {
+                    return Err(format!(
+                        "coord {i}: merge {:e} != scatter {:e} (k={k}, φ={phi})",
+                        dense[i], reference[i]
+                    ));
+                }
+            }
+            // Pool-parallel variant: identical output at every width.
+            let mut pscratch = ParMergeScratch::default();
+            for width in [1usize, 2, 8] {
+                let mut par = SparseVec::default();
+                merge_weighted_par(&refs, dim, width, None, &mut par, &mut pscratch)
+                    .map_err(|e| e.to_string())?;
+                if par.indices != merged.indices {
+                    return Err(format!("width {width}: index sets diverged"));
+                }
+                let vb = |s: &SparseVec| s.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if vb(&par) != vb(&merged) {
+                    return Err(format!("width {width}: value bits diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_wire_roundtrips_exactly_within_priced_bits() {
+    // SparseWire must round-trip indices and value bit patterns exactly at
+    // every density, and the delta-packed stream must never exceed the
+    // fixed-width accounting `payload_bits` prices.
+    let gen = VecF32 { min_len: 1, max_len: 500, scale: 2.0 };
+    check(&PropConfig::default(), &gen, |v| {
+        for th in [0.0f32, 0.5, 1.5, f32::INFINITY] {
+            let s = SparseVec::from_threshold(v, th);
+            let wire = SparseWire::encode(&s);
+            let back = wire.decode();
+            if back.dim != s.dim || back.indices != s.indices {
+                return Err(format!("th={th}: index round-trip failed"));
+            }
+            let vb = |s: &SparseVec| s.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            if vb(&back) != vb(&s) {
+                return Err(format!("th={th}: value bits round-trip failed"));
+            }
+            if wire.encoded_bits() as f64 > s.wire_bits(32) + 1e-9 {
+                return Err(format!(
+                    "th={th}: packed {} bits exceeds priced {}",
+                    wire.encoded_bits(),
+                    s.wire_bits(32)
+                ));
+            }
         }
         Ok(())
     });
