@@ -3,6 +3,14 @@
 //! Grammar: `hfl <subcommand> [--flag] [--key value] [--key=value] ...`.
 //! [`Args`] collects flags/options and reports unknown or missing ones with
 //! helpful errors; each subcommand in `main.rs` declares what it accepts.
+//!
+//! Ambiguity rule: in the space-separated form `--key value`, a value that
+//! itself starts with `--` is indistinguishable from the next flag, so the
+//! parser classifies `--key` as a boolean flag. Accessors detect the
+//! resulting kind mismatch (an option read as a flag or vice versa) and
+//! [`Args::finish`] turns it into a targeted error pointing at the
+//! `--key=value` escape hatch, which accepts any value verbatim
+//! (e.g. `--out=--weird-name.json`).
 //! The shared `--pool-threads` option (persistent worker-pool lane budget,
 //! see [`crate::pool`]) is resolved by [`pool_from_args`].
 
@@ -54,6 +62,9 @@ pub struct Args {
     flags: Vec<String>,
     /// Keys that were actually consumed by accessors; used to report typos.
     consumed: std::cell::RefCell<Vec<String>>,
+    /// Kind mismatches seen by accessors (option read as flag or vice
+    /// versa), reported by [`Args::finish`] with the `--key=value` hint.
+    misuses: std::cell::RefCell<Vec<String>>,
 }
 
 impl Args {
@@ -104,7 +115,18 @@ impl Args {
     /// String option.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.mark(key);
-        self.options.get(key).map(|s| s.as_str())
+        let hit = self.options.get(key).map(|s| s.as_str());
+        if hit.is_none() && self.flags.iter().any(|f| f == key) {
+            // `--key` was parsed as a boolean flag — most likely `--key value`
+            // with a value that starts with `--` (the parser cannot tell it
+            // from the next flag).
+            self.misuses.borrow_mut().push(format!(
+                "--{key} expects a value but was given none (a following \
+                 `--…` token is read as the next flag; write `--{key}=value` \
+                 to pass a value that starts with `--`)"
+            ));
+        }
+        hit
     }
 
     /// String option with default.
@@ -137,12 +159,28 @@ impl Args {
     /// Boolean flag (present / absent).
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
-        self.flags.iter().any(|f| f == key)
+        let hit = self.flags.iter().any(|f| f == key);
+        if !hit && self.options.contains_key(key) {
+            // `--key value` where the subcommand treats `--key` as a boolean
+            // flag: the parser swallowed the next token as its value.
+            self.misuses.borrow_mut().push(format!(
+                "--{key} is a boolean flag and takes no value (the token \
+                 after it was consumed as one; drop the value or check for \
+                 a missing `--` on it)"
+            ));
+        }
+        hit
     }
 
     /// Error if any provided option/flag was never consumed — catches typos
-    /// like `--epohcs`.
+    /// like `--epohcs` — or was used with the wrong kind (an option without
+    /// a value, a flag with one). Kind mismatches come with the
+    /// `--key=value` escape-hatch hint.
     pub fn finish(&self) -> Result<()> {
+        let misuses = self.misuses.borrow();
+        if !misuses.is_empty() {
+            bail!("{}", misuses.join("; "));
+        }
         let consumed = self.consumed.borrow();
         let unknown: Vec<&str> = self
             .options
@@ -196,6 +234,36 @@ mod tests {
     #[test]
     fn rejects_double_positional() {
         assert!(Args::parse(["a", "b"]).is_err());
+    }
+
+    #[test]
+    fn option_value_starting_with_dashes_is_a_targeted_error() {
+        // `--out --weird.json`: the parser reads `--out` as a flag and
+        // `--weird.json` as another flag. The option accessor notices the
+        // kind mismatch and finish() points at the `--key=value` hatch
+        // instead of a misleading unknown/positional error.
+        let a = Args::parse(["train", "--out", "--weird.json"]).unwrap();
+        assert_eq!(a.get("out"), None);
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--out expects a value"), "{err}");
+        assert!(err.contains("--out=value"), "{err}");
+    }
+
+    #[test]
+    fn key_equals_value_escape_hatch_accepts_dashed_values() {
+        let a = Args::parse(["train", "--out=--weird.json"]).unwrap();
+        assert_eq!(a.get("out"), Some("--weird.json"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_given_a_value_is_a_targeted_error() {
+        // `--quick now`: `now` is swallowed as the value of an option that
+        // the subcommand treats as a boolean flag.
+        let a = Args::parse(["matrix", "--quick", "now"]).unwrap();
+        assert!(!a.flag("quick"));
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--quick is a boolean flag"), "{err}");
     }
 
     #[test]

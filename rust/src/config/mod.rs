@@ -406,6 +406,38 @@ impl DesConfig {
     }
 }
 
+/// Checkpoint/resume knobs (`crate::snapshot`): periodic engine snapshots
+/// for `hfl train` / `hfl des` and the per-cell run log for `hfl matrix`.
+/// CLI overrides: `--checkpoint-every N`, `--checkpoint PATH`, `--resume
+/// PATH`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointConfig {
+    /// Snapshot after every `every`-th completed round; 0 (the default)
+    /// disables checkpointing. For `hfl matrix` any nonzero value enables
+    /// the per-cell run log (cells checkpoint at cell granularity).
+    pub every: usize,
+    /// Directory for default snapshot / run-log paths.
+    pub dir: String,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        Self {
+            every: 0,
+            dir: "checkpoints".into(),
+        }
+    }
+}
+
+impl CheckpointConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.dir.is_empty() {
+            bail!("checkpoint dir must not be empty");
+        }
+        Ok(())
+    }
+}
+
 /// Persistent worker-pool knobs (`crate::pool`): the execution-lane budget
 /// shared by the scenario matrix and the engines' intra-round fan-outs.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -436,6 +468,7 @@ pub struct Config {
     pub latency: LatencyModelConfig,
     pub des: DesConfig,
     pub pool: PoolConfig,
+    pub checkpoint: CheckpointConfig,
     /// Aggregation dispatch (`crate::sparse::merge`): sparse k-way merge
     /// vs dense scatter at the SBS/MBS aggregation call sites. `[agg]
     /// path = "auto"|"sparse"|"dense"`, `[agg] crossover = 0.25`; CLI
@@ -474,6 +507,7 @@ impl Config {
         self.latency.validate().context("latency")?;
         self.des.validate().context("des")?;
         self.pool.validate().context("pool")?;
+        self.checkpoint.validate().context("checkpoint")?;
         self.agg.validate().context("agg")?;
         Ok(())
     }
@@ -569,6 +603,13 @@ impl Config {
             ("des", "deadline_rel") => self.des.deadline_rel = need_f64()?,
             ("des", "stale_discount") => self.des.stale_discount = need_f64()?,
             ("pool", "threads") => self.pool.threads = need_usize()?,
+            ("checkpoint", "every") => self.checkpoint.every = need_usize()?,
+            ("checkpoint", "dir") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                self.checkpoint.dir = s.clone();
+            }
             ("agg", "path") => {
                 let V::Str(s) = value else {
                     bail!("expected string");
@@ -748,6 +789,24 @@ mod tests {
             .apply_override("agg", "path", &toml::TomlValue::Str("fast".into()))
             .is_err());
         c.agg.crossover = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_defaults_off_and_overridable() {
+        let c = Config::default();
+        assert_eq!(c.checkpoint.every, 0, "checkpointing must default to off");
+        assert_eq!(c.checkpoint.dir, "checkpoints");
+        c.checkpoint.validate().unwrap();
+        let mut c = Config::default();
+        c.apply_override("checkpoint", "every", &toml::TomlValue::Int(5))
+            .unwrap();
+        c.apply_override("checkpoint", "dir", &toml::TomlValue::Str("snaps".into()))
+            .unwrap();
+        assert_eq!(c.checkpoint.every, 5);
+        assert_eq!(c.checkpoint.dir, "snaps");
+        c.validate().unwrap();
+        c.checkpoint.dir.clear();
         assert!(c.validate().is_err());
     }
 

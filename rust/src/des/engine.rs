@@ -44,16 +44,19 @@ use crate::des::straggler::{ComputeProfile, StragglerPolicy};
 use crate::fl::{consensus_from_rows, GradOracle, LrSchedule, TrainLog, TrainOptions};
 use crate::pool::Lease;
 use crate::sim::result::TimelineDigest;
+use crate::snapshot::codec::{get_rng, put_rng, ByteReader, ByteWriter};
+use crate::snapshot::{self, CheckpointSpec};
 use crate::sparse::merge::{self, AggPath, DenseShadow, MergeScratch};
 use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
 use crate::tensor::{kernels, RowMatrix};
-use crate::topology::{HexLayout, NetworkTopology};
+use crate::topology::{HexLayout, NetworkTopology, Point};
 use crate::util::rng::Pcg64;
 use crate::wireless::broadcast::{broadcast_latency, BroadcastParams};
 use crate::wireless::latency::payload_bits;
 use crate::wireless::{allocate_subcarriers, LinkParams};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
+use std::path::Path;
 use std::sync::Mutex;
 
 /// Execution parameters of one DES run, beyond the shared [`TrainOptions`].
@@ -353,6 +356,102 @@ fn apply_mu_message(
             stale_c.push((msg.clone(), stale_discount / denom, arrives_at));
         }
     }
+}
+
+/// Trajectory-defining scalars of a DES run. A snapshot taken under one
+/// fingerprint refuses to resume under another — thread counts, pool
+/// wiring, and `agg` dispatch are deliberately excluded (bit-irrelevant by
+/// the determinism contract, so resuming at a different thread count is
+/// legal and still bit-exact).
+fn put_des_fingerprint(
+    w: &mut ByteWriter,
+    dim: usize,
+    k_total: usize,
+    cfg: &Config,
+    params: &DesParams,
+) {
+    let topts = &params.topts;
+    w.put_usize(dim);
+    w.put_usize(k_total);
+    w.put_usize(topts.n_clusters);
+    w.put_usize(topts.iters);
+    w.put_usize(topts.h_period);
+    w.put_usize(topts.warmup_iters);
+    w.put_usize(topts.eval_every);
+    w.put_f64(topts.peak_lr);
+    w.put_f64(topts.milestones.0);
+    w.put_f64(topts.milestones.1);
+    w.put_f32(topts.momentum);
+    w.put_f32(topts.weight_decay);
+    let s = &topts.sparsity;
+    w.put_bool(s.enabled);
+    w.put_f64(s.phi_mu_ul);
+    w.put_f64(s.phi_sbs_dl);
+    w.put_f64(s.phi_sbs_ul);
+    w.put_f64(s.phi_mbs_dl);
+    w.put_f64(s.beta_m);
+    w.put_f64(s.beta_s);
+    w.put_u64(params.seed);
+    w.put_f64(params.compute_scale);
+    match &params.mobility {
+        MobilityProfile::Static => w.put_u8(0),
+        MobilityProfile::Waypoint { speed_mps, pause_s } => {
+            w.put_u8(1);
+            w.put_f64(*speed_mps);
+            w.put_f64(*pause_s);
+        }
+    }
+    match &params.straggler {
+        StragglerPolicy::WaitForAll => w.put_u8(0),
+        StragglerPolicy::Deadline { rel, stale_discount } => {
+            w.put_u8(1);
+            w.put_f64(*rel);
+            w.put_f32(*stale_discount);
+        }
+    }
+    w.put_f64(params.compute.mean_s);
+    w.put_f64(params.compute.het);
+    w.put_usize(cfg.topology.n_clusters);
+    w.put_usize(cfg.topology.mus_per_cluster);
+    w.put_f64(cfg.topology.radius_m);
+    w.put_usize(cfg.radio.subcarriers);
+}
+
+fn check_des_fingerprint(
+    r: &mut ByteReader,
+    dim: usize,
+    k_total: usize,
+    cfg: &Config,
+    params: &DesParams,
+) -> Result<()> {
+    let mut expect = ByteWriter::new();
+    put_des_fingerprint(&mut expect, dim, k_total, cfg, params);
+    let expect = expect.into_bytes();
+    let got = r.take(expect.len()).context("snapshot fingerprint")?;
+    if got != expect.as_slice() {
+        bail!(
+            "snapshot was taken under a different DES configuration \
+             (dim/workers/clusters/iters/seed/mobility/straggler/compute/\
+             radio must match the resuming run exactly)"
+        );
+    }
+    Ok(())
+}
+
+fn put_sparse(w: &mut ByteWriter, m: &SparseVec) {
+    w.put_usize(m.dim);
+    w.put_u32_slice(&m.indices);
+    w.put_f32_slice(&m.values);
+}
+
+fn get_sparse(r: &mut ByteReader) -> Result<SparseVec> {
+    let dim = r.get_usize()?;
+    let indices = r.get_u32_vec()?;
+    let values = r.get_f32_vec()?;
+    if indices.len() != values.len() {
+        bail!("corrupt sparse vector in snapshot (nnz mismatch)");
+    }
+    Ok(SparseVec { dim, indices, values })
 }
 
 impl<O: GradOracle + ?Sized> Sim<'_, O> {
@@ -788,10 +887,300 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         Ok(())
     }
 
-    fn run(&mut self) -> Result<()> {
-        let iters = self.topts.iters;
+    /// Serialize every piece of mutable simulation state — mobility and
+    /// association, per-entity RNG streams, compressor error/momentum
+    /// buffers, cluster models, the stale queue, round bookkeeping, the
+    /// event queue with its insertion counter, the timeline recorder, the
+    /// training log, and the oracle's exported state. Everything derived
+    /// (pricing, membership lists, scratch buffers) is recomputed on
+    /// restore from what is stored here.
+    fn snapshot_payload(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        put_des_fingerprint(&mut w, self.dim, self.k_total, self.cfg, self.params);
+        // Mobility / association.
+        w.put_f64_slice(&self.dist_sbs);
+        w.put_f64_slice(&self.dist_mbs);
+        for &c in &self.mu_cluster {
+            w.put_usize(c);
+        }
+        for wk in &self.walkers {
+            match wk {
+                None => w.put_bool(false),
+                Some(wp) => {
+                    w.put_bool(true);
+                    let (anchor, target, leg_start, arrive, speed, pause, disc_r, rng) =
+                        wp.raw_state();
+                    w.put_f64(anchor.x);
+                    w.put_f64(anchor.y);
+                    w.put_f64(target.x);
+                    w.put_f64(target.y);
+                    w.put_f64(leg_start);
+                    w.put_f64(arrive);
+                    w.put_f64(speed);
+                    w.put_f64(pause);
+                    w.put_f64(disc_r);
+                    put_rng(&mut w, rng);
+                }
+            }
+        }
+        // Timing state.
+        for rng in &self.comp_rng {
+            put_rng(&mut w, rng);
+        }
+        w.put_f64_slice(&self.busy_until);
+        // Training state.
+        for d in &self.dgc {
+            let d = d.lock().unwrap();
+            w.put_f32_slice(d.momentum_buf());
+            w.put_f32_slice(d.residual());
+        }
         for c in 0..self.n {
-            self.start_round(c, 0, 0.0)?;
+            w.put_f32_slice(self.w_tilde.row(c));
+        }
+        for e in &self.dl_enc {
+            w.put_f32_slice(e.error());
+        }
+        for e in &self.ul_enc {
+            w.put_f32_slice(e.error());
+        }
+        w.put_f32_slice(&self.w_tilde_global);
+        w.put_f32_slice(self.mbs_enc.error());
+        for sc in &self.stale {
+            w.put_usize(sc.len());
+            for (m, wt, at) in sc {
+                put_sparse(&mut w, m);
+                w.put_f32(*wt);
+                w.put_f64(*at);
+            }
+        }
+        // Round bookkeeping.
+        for ctx in &self.ctx {
+            w.put_usize(ctx.round);
+            w.put_bool(ctx.aggregated);
+            w.put_usize(ctx.participants.len());
+            for &p in &ctx.participants {
+                w.put_usize(p);
+            }
+            w.put_usize(ctx.fresh.len());
+            for &p in &ctx.fresh {
+                w.put_usize(p);
+            }
+            w.put_usize(ctx.awaiting);
+            w.put_bool(ctx.done);
+        }
+        w.put_f64_slice(&self.round_loss);
+        for &x in &self.clusters_done_at {
+            w.put_usize(x);
+        }
+        // Event queue (original seq values preserved) + timeline digest.
+        w.put_u64(self.queue.next_seq());
+        let evs = self.queue.snapshot_events();
+        w.put_usize(evs.len());
+        for ev in &evs {
+            w.put_f64(ev.time);
+            w.put_u64(ev.seq);
+            let (tag, fields) = ev.kind.digest_fields();
+            w.put_u8(tag);
+            for f in fields {
+                w.put_u64(f);
+            }
+        }
+        let (rec_n, rec_d) = self.rec.raw_state();
+        w.put_u64(rec_n);
+        w.put_u64(rec_d);
+        crate::fl::algorithms::put_train_log(&mut w, &self.log);
+        w.put_u64(self.n_handovers);
+        w.put_u64(self.n_late);
+        w.put_u64(self.n_skipped);
+        w.put_f64(self.finish_time);
+        let blob = self
+            .oracle
+            .export_state()
+            .expect("export_state checked before the run");
+        w.put_bytes(&blob);
+        w.into_bytes()
+    }
+
+    /// Inverse of [`Sim::snapshot_payload`]: overwrite the freshly
+    /// constructed simulation with the checkpointed state, then recompute
+    /// the derived pieces (membership lists, link pricing, shadow
+    /// bookkeeping).
+    fn restore(&mut self, payload: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(payload);
+        check_des_fingerprint(&mut r, self.dim, self.k_total, self.cfg, self.params)?;
+        let dist_sbs = r.get_f64_vec()?;
+        let dist_mbs = r.get_f64_vec()?;
+        if dist_sbs.len() != self.k_total || dist_mbs.len() != self.k_total {
+            bail!("snapshot distance vectors have the wrong length");
+        }
+        self.dist_sbs = dist_sbs;
+        self.dist_mbs = dist_mbs;
+        for k in 0..self.k_total {
+            let c = r.get_usize()?;
+            if c >= self.n {
+                bail!("snapshot MU {k} associated to nonexistent cluster {c}");
+            }
+            self.mu_cluster[k] = c;
+        }
+        for k in 0..self.k_total {
+            let has = r.get_bool()?;
+            if has != self.walkers[k].is_some() {
+                bail!("snapshot mobility state disagrees with the mobility profile");
+            }
+            if has {
+                let ax = r.get_f64()?;
+                let ay = r.get_f64()?;
+                let tx = r.get_f64()?;
+                let ty = r.get_f64()?;
+                let leg_start = r.get_f64()?;
+                let arrive = r.get_f64()?;
+                let speed = r.get_f64()?;
+                let pause = r.get_f64()?;
+                let disc_r = r.get_f64()?;
+                let rng = get_rng(&mut r)?;
+                self.walkers[k] = Some(Waypoint::from_raw_state(
+                    Point::new(ax, ay),
+                    Point::new(tx, ty),
+                    leg_start,
+                    arrive,
+                    speed,
+                    pause,
+                    disc_r,
+                    rng,
+                ));
+            }
+        }
+        for k in 0..self.k_total {
+            self.comp_rng[k] = get_rng(&mut r)?;
+        }
+        let busy = r.get_f64_vec()?;
+        if busy.len() != self.k_total {
+            bail!("snapshot busy_until has the wrong length");
+        }
+        self.busy_until = busy;
+        for d in &self.dgc {
+            let u = r.get_f32_vec()?;
+            let v = r.get_f32_vec()?;
+            if u.len() != self.dim || v.len() != self.dim {
+                bail!("snapshot DGC state has the wrong dimension");
+            }
+            d.lock().unwrap().restore_state(&u, &v);
+        }
+        for c in 0..self.n {
+            r.get_f32_into(self.w_tilde.row_mut(c))?;
+        }
+        for e in self.dl_enc.iter_mut() {
+            let buf = r.get_f32_vec()?;
+            if buf.len() != self.dim {
+                bail!("snapshot DL encoder error has the wrong dimension");
+            }
+            e.restore_error(&buf);
+        }
+        for e in self.ul_enc.iter_mut() {
+            let buf = r.get_f32_vec()?;
+            if buf.len() != self.dim {
+                bail!("snapshot UL encoder error has the wrong dimension");
+            }
+            e.restore_error(&buf);
+        }
+        r.get_f32_into(&mut self.w_tilde_global)?;
+        let buf = r.get_f32_vec()?;
+        if buf.len() != self.dim {
+            bail!("snapshot MBS encoder error has the wrong dimension");
+        }
+        self.mbs_enc.restore_error(&buf);
+        for sc in self.stale.iter_mut() {
+            let len = r.get_usize()?;
+            sc.clear();
+            for _ in 0..len {
+                let m = get_sparse(&mut r)?;
+                let wt = r.get_f32()?;
+                let at = r.get_f64()?;
+                sc.push((m, wt, at));
+            }
+        }
+        for ctx in self.ctx.iter_mut() {
+            ctx.round = r.get_usize()?;
+            ctx.aggregated = r.get_bool()?;
+            let np = r.get_usize()?;
+            ctx.participants.clear();
+            for _ in 0..np {
+                ctx.participants.push(r.get_usize()?);
+            }
+            let nf = r.get_usize()?;
+            ctx.fresh.clear();
+            for _ in 0..nf {
+                ctx.fresh.insert(r.get_usize()?);
+            }
+            ctx.awaiting = r.get_usize()?;
+            ctx.done = r.get_bool()?;
+        }
+        let round_loss = r.get_f64_vec()?;
+        if round_loss.len() != self.round_loss.len() {
+            bail!("snapshot round_loss has the wrong length");
+        }
+        self.round_loss = round_loss;
+        for x in self.clusters_done_at.iter_mut() {
+            *x = r.get_usize()?;
+        }
+        let next_seq = r.get_u64()?;
+        let n_evs = r.get_usize()?;
+        let mut evs = Vec::with_capacity(n_evs.min(1 << 20));
+        for _ in 0..n_evs {
+            let time = r.get_f64()?;
+            let seq = r.get_u64()?;
+            if seq >= next_seq {
+                bail!("snapshot event seq beyond the insertion counter");
+            }
+            let tag = r.get_u8()?;
+            let fields = [r.get_u64()?, r.get_u64()?, r.get_u64()?];
+            let kind = EventKind::from_wire(tag, fields)
+                .ok_or_else(|| anyhow::anyhow!("unknown event tag {tag} in snapshot"))?;
+            evs.push(crate::des::events::Event { time, seq, kind });
+        }
+        self.queue = EventQueue::restore(evs, next_seq);
+        let rec_n = r.get_u64()?;
+        let rec_d = r.get_u64()?;
+        self.rec = TimelineRecorder::from_raw_state(rec_n, rec_d);
+        self.log = crate::fl::algorithms::get_train_log(&mut r)?;
+        self.n_handovers = r.get_u64()?;
+        self.n_late = r.get_u64()?;
+        self.n_skipped = r.get_u64()?;
+        self.finish_time = r.get_f64()?;
+        let blob = r.get_bytes()?;
+        self.oracle
+            .import_state(&blob)
+            .context("restoring oracle RNG state")?;
+        r.finish()?;
+        // Derived state: membership lists from the restored association,
+        // link pricing from the restored geometry (price() is pure), and
+        // shadow bookkeeping invalidated — the aggregate buffers no longer
+        // match the shadows' baseline records.
+        for m in self.members.iter_mut() {
+            m.clear();
+        }
+        for k in 0..self.k_total {
+            self.members[self.mu_cluster[k]].push(k);
+        }
+        self.pricing = price(
+            self.cfg,
+            &self.members,
+            &self.dist_sbs,
+            &self.dist_mbs,
+            self.m_cluster,
+            self.flat,
+        )?;
+        self.agg_shadow.mark_dirty();
+        self.sync_shadow.mark_dirty();
+        Ok(())
+    }
+
+    fn run(&mut self, resumed: bool, ckpt: Option<&CheckpointSpec>) -> Result<()> {
+        let iters = self.topts.iters;
+        if !resumed {
+            for c in 0..self.n {
+                self.start_round(c, 0, 0.0)?;
+            }
         }
         // Generous upper bound on legitimate events; a breach means a
         // scheduling bug, reported as an error rather than a hang.
@@ -804,6 +1193,10 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             if processed > cap {
                 bail!("DES event cap exceeded ({cap}): the scheduler is looping");
             }
+            // Set when this event completes a round; the snapshot is taken
+            // after the full match arm so the serialized queue already
+            // holds everything the arm scheduled.
+            let mut snap_round: Option<usize> = None;
             match ev.kind {
                 EventKind::ComputeDone { mu, cluster, round } => {
                     self.queue.push(
@@ -848,6 +1241,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                     let complete = self.clusters_done_at[round] == self.n;
                     if complete {
                         self.fold_iteration_loss(round);
+                        snap_round = Some(round);
                     }
                     let sync_due = self.n > 1 && (round + 1) % self.h == 0;
                     if sync_due {
@@ -894,6 +1288,15 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                     bail!("handover events must not enter the queue");
                 }
             }
+            if let (Some(spec), Some(done)) = (ckpt, snap_round) {
+                if spec.due_after_round(done, iters) {
+                    snapshot::write_snapshot(
+                        &spec.path,
+                        snapshot::ENGINE_DES,
+                        &self.snapshot_payload(),
+                    )?;
+                }
+            }
         }
         if self.ctx.iter().any(|c| !c.done) {
             bail!("DES queue drained with unfinished clusters — scheduling bug");
@@ -909,6 +1312,28 @@ pub fn run_des<O: GradOracle + ?Sized>(
     cfg: &Config,
     params: &DesParams,
 ) -> Result<DesOutcome> {
+    run_des_checkpointed(oracle, cfg, params, None, None)
+}
+
+/// [`run_des`] with optional periodic checkpointing and resume-from-snapshot.
+///
+/// With `ckpt` set, a full engine snapshot is written after each round whose
+/// completion satisfies [`CheckpointSpec::due_after_round`]. With `resume`
+/// set, the engine is reconstructed exactly as for a fresh run and then
+/// overwritten with the snapshot's state, so the continued run reproduces
+/// the uninterrupted run's timeline digest, loss digest, and final
+/// parameters bit for bit. Both require the oracle to support
+/// [`GradOracle::export_state`].
+pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
+    oracle: &mut O,
+    cfg: &Config,
+    params: &DesParams,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
+) -> Result<DesOutcome> {
+    if (ckpt.is_some() || resume.is_some()) && oracle.export_state().is_none() {
+        bail!("this oracle does not support state export; checkpoint/resume is unavailable");
+    }
     let topts = &params.topts;
     let n = topts.n_clusters;
     let k_total = oracle.n_workers();
@@ -1114,7 +1539,17 @@ pub fn run_des<O: GradOracle + ?Sized>(
         n_skipped: 0,
         finish_time: 0.0,
     };
-    sim.run()?;
+    let resumed = if let Some(path) = resume {
+        let payload = snapshot::read_snapshot(path, snapshot::ENGINE_DES)
+            .with_context(|| format!("reading DES snapshot {}", path.display()))?;
+        sim.restore(&payload)
+            .with_context(|| format!("restoring DES snapshot {}", path.display()))?;
+        crate::log_info!("resumed DES run from {}", path.display());
+        true
+    } else {
+        false
+    };
+    sim.run(resumed, ckpt)?;
 
     // Final consensus + eval, exactly like the sequential engine.
     let consensus = consensus_from_rows(sim.w_tilde.iter_rows(), dim, n);
@@ -1461,5 +1896,78 @@ mod tests {
         let bad_cfg = cfg_for(4, 4);
         let topts = topts_for(&cfg, 4);
         assert!(run_des(&mut oracle, &bad_cfg, &static_params(topts)).is_err());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_exact_mid_run() {
+        // Full state coverage: waypoint mobility (walker RNGs, handovers,
+        // repricing), a deadline policy (stale queue, late counters), and a
+        // heterogeneous compute profile (per-MU jitter RNGs), plus oracle
+        // gradient noise so the oracle RNG matters too.
+        let cfg = cfg_for(2, 4);
+        let make_params = || {
+            let topts = topts_for(&cfg, 14);
+            DesParams {
+                topts,
+                mobility: MobilityProfile::Waypoint { speed_mps: 60.0, pause_s: 0.5 },
+                straggler: StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.4, het: 0.6 },
+                compute_scale: 1.0,
+                seed: 2024,
+            }
+        };
+        let make_oracle = || QuadraticOracle::new_skewed(12, 8, 0.01, 1.0, 909);
+
+        // Uninterrupted reference run.
+        let mut oracle = make_oracle();
+        let full = run_des(&mut oracle, &cfg, &make_params()).unwrap();
+
+        // Checkpointed run: identical output, plus a snapshot on disk
+        // (every=5 over 14 iters → last snapshot after round 9).
+        let snap = std::env::temp_dir()
+            .join(format!("hfl_des_ckpt_{}.snap", std::process::id()));
+        let spec = CheckpointSpec::new(5, snap.clone());
+        let mut oracle = make_oracle();
+        let ckpt =
+            run_des_checkpointed(&mut oracle, &cfg, &make_params(), Some(&spec), None)
+                .unwrap();
+        assert_eq!(ckpt.timeline, full.timeline, "checkpointing must not perturb the run");
+        assert_eq!(bits_f32(&ckpt.log.final_params), bits_f32(&full.log.final_params));
+
+        // Resume from the round-9 snapshot: bit-identical everything.
+        let mut oracle = make_oracle(); // fresh oracle; state comes from the snapshot
+        let res =
+            run_des_checkpointed(&mut oracle, &cfg, &make_params(), None, Some(&snap))
+                .unwrap();
+        assert_eq!(res.timeline, full.timeline, "resumed timeline digest must match");
+        assert_eq!(
+            bits_f32(&res.log.final_params),
+            bits_f32(&full.log.final_params),
+            "resumed final params must be bit-identical"
+        );
+        assert_eq!(res.log.bits, full.log.bits, "resumed bit counters must match");
+        let curve = |l: &TrainLog| -> Vec<(usize, u64)> {
+            l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect()
+        };
+        assert_eq!(curve(&res.log), curve(&full.log));
+        assert_eq!(res.log.evals.len(), full.log.evals.len());
+        for ((ia, ma), (ib, mb)) in res.log.evals.iter().zip(&full.log.evals) {
+            assert_eq!(ia, ib);
+            assert_eq!(ma.loss.to_bits(), mb.loss.to_bits());
+        }
+        assert_eq!(res.n_late, full.n_late);
+        assert_eq!(res.n_handovers, full.n_handovers);
+        assert_eq!(res.n_skipped_rounds, full.n_skipped_rounds);
+        assert_eq!(res.total_time_s.to_bits(), full.total_time_s.to_bits());
+
+        // A mismatched configuration must be rejected, not silently resumed.
+        let mut wrong = make_params();
+        wrong.seed += 1;
+        let mut oracle = make_oracle();
+        assert!(
+            run_des_checkpointed(&mut oracle, &cfg, &wrong, None, Some(&snap)).is_err(),
+            "resuming under a different seed must error"
+        );
+        let _ = std::fs::remove_file(&snap);
     }
 }

@@ -36,8 +36,25 @@ pub enum EventKind {
 }
 
 impl EventKind {
-    /// Stable tag + entity fields fed to the timeline digest.
-    fn digest_fields(&self) -> (u8, [u64; 3]) {
+    /// Decode the `(tag, fields)` encoding of [`EventKind::digest_fields`]
+    /// back into a kind — the inverse used when restoring a checkpointed
+    /// event queue.
+    pub fn from_wire(tag: u8, f: [u64; 3]) -> Option<Self> {
+        let (a, b, c) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        Some(match tag {
+            1 => EventKind::ComputeDone { mu: a, cluster: b, round: c },
+            2 => EventKind::UplinkDone { mu: a, cluster: b, round: c },
+            3 => EventKind::Deadline { cluster: a, round: b },
+            4 => EventKind::RoundEnd { cluster: a, round: b },
+            5 => EventKind::GlobalSync { period: a },
+            6 => EventKind::Handover { mu: a, from: b, to: c },
+            _ => return None,
+        })
+    }
+
+    /// Stable tag + entity fields fed to the timeline digest; doubles as
+    /// the checkpoint wire encoding (see [`EventKind::from_wire`]).
+    pub fn digest_fields(&self) -> (u8, [u64; 3]) {
         match *self {
             EventKind::ComputeDone { mu, cluster, round } => {
                 (1, [mu as u64, cluster as u64, round as u64])
@@ -116,6 +133,32 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// The next insertion counter (for checkpointing).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Pending events in `(time, seq)` order with their original `seq`
+    /// values — the checkpoint image of the queue.
+    pub fn snapshot_events(&self) -> Vec<Event> {
+        let mut evs: Vec<Event> = self.heap.iter().map(|r| r.0).collect();
+        evs.sort_unstable();
+        evs
+    }
+
+    /// Rebuild a queue from [`EventQueue::snapshot_events`] output and the
+    /// saved [`EventQueue::next_seq`]. Original `seq` values are kept, so
+    /// tie-breaking — and therefore the whole remaining timeline — is
+    /// bit-identical to the uninterrupted run.
+    pub fn restore(events: Vec<Event>, next_seq: u64) -> Self {
+        let mut heap = BinaryHeap::with_capacity(events.len());
+        for ev in events {
+            assert!(ev.seq < next_seq, "restored event seq beyond next_seq");
+            heap.push(Reverse(ev));
+        }
+        Self { heap, next_seq }
+    }
 }
 
 /// Incremental FNV-1a digest over the processed-event stream (shares the
@@ -152,6 +195,21 @@ impl TimelineRecorder {
         TimelineDigest {
             n_events: self.n,
             digest: self.h.finish(),
+        }
+    }
+
+    /// Checkpoint image `(n_events, running_digest)` — the mid-stream
+    /// digest IS the FNV state, so this is exactly [`Self::digest`]'s
+    /// fields.
+    pub fn raw_state(&self) -> (u64, u64) {
+        (self.n, self.h.finish())
+    }
+
+    /// Rebuild a recorder mid-stream from [`Self::raw_state`] output.
+    pub fn from_raw_state(n: u64, digest: u64) -> Self {
+        Self {
+            n,
+            h: Fnv1a::from_raw(digest),
         }
     }
 }
@@ -206,6 +264,62 @@ mod tests {
         d.record_kind(0.5, &a_events[0].1);
         d.record_kind(f64::from_bits(1.0f64.to_bits() + 1), &a_events[1].1);
         assert_ne!(a.digest().digest, d.digest().digest);
+    }
+
+    #[test]
+    fn queue_snapshot_restore_preserves_order_and_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::RoundEnd { cluster: 0, round: 0 });
+        q.push(1.0, EventKind::ComputeDone { mu: 3, cluster: 0, round: 0 });
+        q.push(1.0, EventKind::ComputeDone { mu: 1, cluster: 0, round: 0 });
+        let _ = q.pop(); // consume one so the image is mid-run
+        let evs = q.snapshot_events();
+        assert_eq!(evs.len(), 2);
+        let mut r = EventQueue::restore(evs, q.next_seq());
+        assert_eq!(r.next_seq(), q.next_seq());
+        // Restored queue pops identically, including the seq tiebreak.
+        loop {
+            match (q.pop(), r.pop()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(a, b),
+            }
+        }
+        // New pushes continue the same seq sequence.
+        let mut r2 = EventQueue::restore(Vec::new(), 7);
+        r2.push(0.0, EventKind::GlobalSync { period: 0 });
+        assert_eq!(r2.pop().unwrap().seq, 7);
+    }
+
+    #[test]
+    fn event_kind_wire_roundtrips_every_variant() {
+        let kinds = [
+            EventKind::ComputeDone { mu: 1, cluster: 2, round: 3 },
+            EventKind::UplinkDone { mu: 4, cluster: 5, round: 6 },
+            EventKind::Deadline { cluster: 7, round: 8 },
+            EventKind::RoundEnd { cluster: 9, round: 10 },
+            EventKind::GlobalSync { period: 11 },
+            EventKind::Handover { mu: 12, from: 13, to: 14 },
+        ];
+        for k in kinds {
+            let (tag, fields) = k.digest_fields();
+            assert_eq!(EventKind::from_wire(tag, fields), Some(k));
+        }
+        assert_eq!(EventKind::from_wire(0, [0; 3]), None);
+        assert_eq!(EventKind::from_wire(7, [0; 3]), None);
+    }
+
+    #[test]
+    fn recorder_raw_state_roundtrip_continues_the_digest() {
+        let mut a = TimelineRecorder::new();
+        a.record_kind(0.5, &EventKind::GlobalSync { period: 0 });
+        let (n, d) = a.raw_state();
+        let mut b = TimelineRecorder::from_raw_state(n, d);
+        for i in 0..10 {
+            let k = EventKind::Deadline { cluster: i, round: i };
+            a.record_kind(i as f64, &k);
+            b.record_kind(i as f64, &k);
+        }
+        assert_eq!(a.digest(), b.digest());
     }
 
     #[test]

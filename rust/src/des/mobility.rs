@@ -84,6 +84,48 @@ impl Waypoint {
         };
     }
 
+    /// Full walker state for checkpointing:
+    /// `(anchor, target, leg_start, arrive, speed, pause, disc_r, rng)`.
+    #[allow(clippy::type_complexity)]
+    pub fn raw_state(&self) -> (Point, Point, f64, f64, f64, f64, f64, &Pcg64) {
+        (
+            self.anchor,
+            self.target,
+            self.leg_start,
+            self.arrive,
+            self.speed,
+            self.pause,
+            self.disc_r,
+            &self.rng,
+        )
+    }
+
+    /// Rebuild a walker from [`Waypoint::raw_state`] output. Unlike
+    /// [`Waypoint::new`] this draws no leg — the restored walker is
+    /// mid-trace, continuing the snapshotted one exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw_state(
+        anchor: Point,
+        target: Point,
+        leg_start: f64,
+        arrive: f64,
+        speed: f64,
+        pause: f64,
+        disc_r: f64,
+        rng: Pcg64,
+    ) -> Self {
+        Self {
+            anchor,
+            target,
+            leg_start,
+            arrive,
+            speed,
+            pause,
+            disc_r,
+            rng,
+        }
+    }
+
     /// Position at absolute simulated time `t`. Calls must use
     /// non-decreasing `t` (the walker advances through its legs and never
     /// rewinds).
@@ -174,6 +216,28 @@ mod tests {
             // 10 m/s ⇒ at most 10 m per second step (pauses make it less).
             assert!(p.dist(&prev) <= 10.0 + 1e-9, "too fast at t={t}");
             prev = p;
+        }
+    }
+
+    #[test]
+    fn raw_state_roundtrip_continues_the_trace() {
+        let mut a = walker(11);
+        // Advance mid-trace so the round trip carries a live leg.
+        let _ = a.position_at(123.0);
+        let (anchor, target, leg_start, arrive, speed, pause, disc_r, rng) = a.raw_state();
+        let mut b = Waypoint::from_raw_state(
+            anchor,
+            target,
+            leg_start,
+            arrive,
+            speed,
+            pause,
+            disc_r,
+            rng.clone(),
+        );
+        for i in 0..300 {
+            let t = 123.0 + i as f64 * 3.7;
+            assert_eq!(a.position_at(t), b.position_at(t), "diverged at t={t}");
         }
     }
 

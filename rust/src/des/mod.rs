@@ -33,7 +33,7 @@ pub mod mobility;
 pub mod runner;
 pub mod straggler;
 
-pub use engine::{run_des, DesOutcome, DesParams};
+pub use engine::{run_des, run_des_checkpointed, DesOutcome, DesParams};
 pub use events::{Event, EventKind, EventQueue, TimelineRecorder};
 pub use mobility::{MobilityProfile, Waypoint};
 pub use runner::run_des_cell;

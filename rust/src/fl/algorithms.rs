@@ -70,9 +70,13 @@
 use super::lr_schedule::LrSchedule;
 use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use crate::config::SparsityConfig;
+use crate::snapshot::codec::{ByteReader, ByteWriter};
+use crate::snapshot::{self, CheckpointSpec};
 use crate::sparse::merge::{self, AggPath, AggPolicy, DenseShadow, MergeScratch};
 use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
 use crate::tensor::{kernels, padded, TensorArena};
+use anyhow::{bail, Context};
+use std::path::Path;
 use std::sync::Mutex;
 
 /// Options shared by all four algorithms.
@@ -453,6 +457,100 @@ pub(crate) fn resolve_inner_threads(requested: usize) -> usize {
     }
 }
 
+/// Serialize the engine-side training log (everything but `final_params`,
+/// which is recomputed from the restored lanes at the end of the run).
+/// Shared with the DES engine's snapshot payload.
+pub(crate) fn put_train_log(w: &mut ByteWriter, log: &TrainLog) {
+    w.put_usize(log.train_loss.len());
+    for &(i, l) in &log.train_loss {
+        w.put_usize(i);
+        w.put_f64(l);
+    }
+    w.put_usize(log.evals.len());
+    for &(i, m) in &log.evals {
+        w.put_usize(i);
+        w.put_f64(m.loss);
+        w.put_f64(m.accuracy);
+    }
+    w.put_f64(log.bits.mu_ul);
+    w.put_f64(log.bits.sbs_dl);
+    w.put_f64(log.bits.sbs_ul);
+    w.put_f64(log.bits.mbs_dl);
+    w.put_u64(log.bits.n_mu_msgs);
+}
+
+pub(crate) fn get_train_log(r: &mut ByteReader) -> crate::Result<TrainLog> {
+    let mut log = TrainLog::default();
+    let n_loss = r.get_usize()?;
+    log.train_loss.reserve(n_loss.min(1 << 20));
+    for _ in 0..n_loss {
+        let i = r.get_usize()?;
+        let l = r.get_f64()?;
+        log.train_loss.push((i, l));
+    }
+    let n_evals = r.get_usize()?;
+    for _ in 0..n_evals {
+        let i = r.get_usize()?;
+        let loss = r.get_f64()?;
+        let accuracy = r.get_f64()?;
+        log.evals.push((i, EvalMetrics { loss, accuracy }));
+    }
+    log.bits.mu_ul = r.get_f64()?;
+    log.bits.sbs_dl = r.get_f64()?;
+    log.bits.sbs_ul = r.get_f64()?;
+    log.bits.mbs_dl = r.get_f64()?;
+    log.bits.n_mu_msgs = r.get_u64()?;
+    Ok(log)
+}
+
+/// Trajectory-defining scalars of a training run. A snapshot taken under
+/// one fingerprint refuses to resume under another — thread counts, pool
+/// wiring, and `agg` dispatch are deliberately *excluded* (they are
+/// bit-irrelevant by the determinism contract, so resuming at a different
+/// thread count is legal and still bit-exact).
+fn put_fl_fingerprint(w: &mut ByteWriter, dim: usize, k_total: usize, opts: &TrainOptions) {
+    w.put_usize(dim);
+    w.put_usize(k_total);
+    w.put_usize(opts.n_clusters);
+    w.put_usize(opts.iters);
+    w.put_usize(opts.h_period);
+    w.put_usize(opts.warmup_iters);
+    w.put_usize(opts.eval_every);
+    w.put_f64(opts.peak_lr);
+    w.put_f64(opts.milestones.0);
+    w.put_f64(opts.milestones.1);
+    w.put_f32(opts.momentum);
+    w.put_f32(opts.weight_decay);
+    let s = &opts.sparsity;
+    w.put_bool(s.enabled);
+    w.put_f64(s.phi_mu_ul);
+    w.put_f64(s.phi_sbs_dl);
+    w.put_f64(s.phi_sbs_ul);
+    w.put_f64(s.phi_mbs_dl);
+    w.put_f64(s.beta_m);
+    w.put_f64(s.beta_s);
+}
+
+fn check_fl_fingerprint(
+    r: &mut ByteReader,
+    dim: usize,
+    k_total: usize,
+    opts: &TrainOptions,
+) -> crate::Result<()> {
+    let mut expect = ByteWriter::new();
+    put_fl_fingerprint(&mut expect, dim, k_total, opts);
+    let expect = expect.into_bytes();
+    let got = r.take(expect.len()).context("snapshot fingerprint")?;
+    if got != expect.as_slice() {
+        bail!(
+            "snapshot was taken under a different training configuration \
+             (dim/workers/clusters/iters/h_period/lr/sparsity must match \
+             the resuming run exactly)"
+        );
+    }
+    Ok(())
+}
+
 /// The parametric engine: N clusters × (K/N) workers, DGC uplinks,
 /// discounted-error model-difference encoders on the other three links,
 /// period-H global averaging. All state lives in one cache-aligned
@@ -461,6 +559,24 @@ pub(crate) fn resolve_inner_threads(requested: usize) -> usize {
 /// [`TrainOptions::inner_threads`] asks for it, bit-exactly (see the
 /// module docs for the layout and the contract).
 pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
+    run_hierarchical_checkpointed(oracle, opts, None, None)
+        .expect("engine without checkpoint IO cannot fail")
+}
+
+/// [`run_hierarchical`] with checkpoint/resume: with `ckpt` set, the full
+/// engine state — every arena buffer at exact f32 bit patterns, the
+/// training log so far, and the oracle's RNG streams — is written through
+/// [`crate::snapshot`] after every round the spec marks due; with `resume`
+/// set, that state is restored and the loop continues from the saved
+/// round. A resumed run reproduces the uninterrupted run's `params_hash`
+/// and `loss_digest` bit-for-bit at any thread count (asserted by
+/// `rust/tests/checkpoint_resume.rs`).
+pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
+    oracle: &mut O,
+    opts: &TrainOptions,
+    ckpt: Option<&CheckpointSpec>,
+    resume: Option<&Path>,
+) -> crate::Result<TrainLog> {
     let dim = oracle.dim();
     let k_total = oracle.n_workers();
     let n = opts.n_clusters;
@@ -558,7 +674,60 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
         handle.lease(inner)
     });
 
-    for t in 0..opts.iters {
+    // --- Checkpoint/resume plumbing -----------------------------------
+    if (ckpt.is_some() || resume.is_some()) && oracle.export_state().is_none() {
+        bail!(
+            "this oracle does not support checkpointing (no state export); \
+             run without --checkpoint-every/--resume"
+        );
+    }
+    let mut start_round = 0usize;
+    if let Some(path) = resume {
+        let payload = snapshot::read_snapshot(path, snapshot::ENGINE_FL)
+            .with_context(|| format!("resuming from {}", path.display()))?;
+        let mut r = ByteReader::new(&payload);
+        check_fl_fingerprint(&mut r, dim, k_total, opts)?;
+        start_round = r.get_usize()?;
+        if start_round >= opts.iters {
+            bail!("snapshot is already past the final round ({start_round} >= {})", opts.iters);
+        }
+        for lane_mutex in &lanes {
+            let mut guard = lane_mutex.lock().unwrap();
+            let lane = &mut *guard;
+            let lv = lane_view(&mut *lane.buf, pad, dim);
+            r.get_f32_into(lv.w_tilde)?;
+            r.get_f32_into(lv.dl_e)?;
+            for j in 0..per_cluster {
+                let base = 2 * j * pad;
+                let (u, v) = lv.dgc[base..base + 2 * pad].split_at_mut(pad);
+                r.get_f32_into(&mut u[..dim])?;
+                r.get_f32_into(&mut v[..dim])?;
+            }
+            // The restored agg chunk no longer matches the shadow's −0.0
+            // baseline bookkeeping; force the next sparse-path write to
+            // re-zero it.
+            lane.shadow.mark_dirty();
+        }
+        r.get_f32_into(&mut g.w_global[..])?;
+        r.get_f32_into(&mut g.mbs_e[..])?;
+        for c in 0..n {
+            r.get_f32_into(&mut g.ul_e[c * pad..c * pad + dim])?;
+        }
+        log = get_train_log(&mut r)?;
+        let blob = r.get_bytes()?;
+        oracle
+            .import_state(&blob)
+            .context("restoring oracle RNG state")?;
+        r.finish()?;
+        sync_shadow.mark_dirty();
+        crate::log_info!(
+            "resumed training checkpoint at round {start_round}/{} from {}",
+            opts.iters,
+            path.display()
+        );
+    }
+
+    for t in start_round..opts.iters {
         let lr = schedule.at(t) as f32;
 
         // --- Per-cluster compute+uplink blocks, fanned out when asked ---
@@ -685,13 +854,47 @@ pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOpti
             let m = oracle.eval(&consensus);
             log.evals.push((t + 1, m));
         }
+
+        // --- Snapshot after every due round (atomic tmp+rename write) ---
+        if let Some(spec) = ckpt {
+            if spec.due_after_round(t, opts.iters) {
+                let mut w = ByteWriter::new();
+                put_fl_fingerprint(&mut w, dim, k_total, opts);
+                w.put_usize(t + 1);
+                for lane_mutex in &lanes {
+                    let mut guard = lane_mutex.lock().unwrap();
+                    let lane = &mut *guard;
+                    let lv = lane_view(&mut *lane.buf, pad, dim);
+                    w.put_f32_slice(lv.w_tilde);
+                    w.put_f32_slice(lv.dl_e);
+                    for j in 0..per_cluster {
+                        let base = 2 * j * pad;
+                        let (u, v) = lv.dgc[base..base + 2 * pad].split_at(pad);
+                        w.put_f32_slice(&u[..dim]);
+                        w.put_f32_slice(&v[..dim]);
+                    }
+                }
+                w.put_f32_slice(&g.w_global[..]);
+                w.put_f32_slice(&g.mbs_e[..]);
+                for c in 0..n {
+                    w.put_f32_slice(&g.ul_e[c * pad..c * pad + dim]);
+                }
+                put_train_log(&mut w, &log);
+                let blob = oracle
+                    .export_state()
+                    .expect("export_state checked before the loop");
+                w.put_bytes(&blob);
+                snapshot::write_snapshot(&spec.path, snapshot::ENGINE_FL, &w.into_bytes())
+                    .with_context(|| format!("writing checkpoint after round {t}"))?;
+            }
+        }
     }
 
     let consensus = consensus_of_lanes(&lanes, dim);
     let m = oracle.eval(&consensus);
     log.evals.push((opts.iters, m));
     log.final_params = consensus;
-    log
+    Ok(log)
 }
 
 /// Consensus view: average of the cluster reference models, folded in row
@@ -1071,6 +1274,58 @@ mod tests {
         let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits_of(&shared.final_params), bits_of(&dedicated.final_params));
         assert_eq!(shared.bits, dedicated.bits);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_exact_mid_run() {
+        // Snapshot a noisy sparse-HFL run mid-flight, resume it with a
+        // fresh oracle, and demand the exact curve/params/bits of the
+        // uninterrupted run.
+        let snap = std::env::temp_dir().join(format!("hfl_alg_ckpt_{}.snap", std::process::id()));
+        let mut o = opts(20);
+        o.n_clusters = 4;
+        o.h_period = 4;
+        o.eval_every = 5;
+        o.sparsity = SparsityConfig {
+            enabled: true,
+            phi_mu_ul: 0.8,
+            ..SparsityConfig::default()
+        };
+        // noise > 0 → the oracle RNG advances every draw, so a resume that
+        // failed to restore it would diverge immediately.
+        let mut full_oracle = QuadraticOracle::new_skewed(24, 8, 0.01, 1.0, 555);
+        let full = run_hierarchical(&mut full_oracle, &o);
+
+        let mut first = QuadraticOracle::new_skewed(24, 8, 0.01, 1.0, 555);
+        let spec = CheckpointSpec::new(7, &snap);
+        let _ = run_hierarchical_checkpointed(&mut first, &o, Some(&spec), None).unwrap();
+        // The last due snapshot on disk is after round 14 (7 and 14 < 20).
+        let mut second = QuadraticOracle::new_skewed(24, 8, 0.01, 1.0, 555);
+        let resumed = run_hierarchical_checkpointed(&mut second, &o, None, Some(&snap)).unwrap();
+        let _ = std::fs::remove_file(&snap);
+
+        let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits_of(&full.final_params), bits_of(&resumed.final_params));
+        assert_eq!(full.bits, resumed.bits);
+        let curve = |l: &TrainLog| {
+            l.train_loss.iter().map(|(i, x)| (*i, x.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(curve(&full), curve(&resumed));
+        assert_eq!(full.evals.len(), resumed.evals.len());
+        for ((ia, ma), (ib, mb)) in full.evals.iter().zip(&resumed.evals) {
+            assert_eq!(ia, ib);
+            assert_eq!(ma.loss.to_bits(), mb.loss.to_bits());
+        }
+        // A mismatched configuration must refuse to resume.
+        let mut third = QuadraticOracle::new_skewed(24, 8, 0.01, 1.0, 555);
+        let spec = CheckpointSpec::new(7, &snap);
+        let _ = run_hierarchical_checkpointed(&mut third, &o, Some(&spec), None).unwrap();
+        let mut wrong = o.clone();
+        wrong.peak_lr *= 2.0;
+        let mut fourth = QuadraticOracle::new_skewed(24, 8, 0.01, 1.0, 555);
+        let err = run_hierarchical_checkpointed(&mut fourth, &wrong, None, Some(&snap));
+        let _ = std::fs::remove_file(&snap);
+        assert!(err.is_err(), "config mismatch must be rejected");
     }
 
     #[test]

@@ -16,8 +16,8 @@ pub mod optimizer;
 pub mod oracle;
 
 pub use algorithms::{
-    consensus_from_rows, consensus_params, fl, hfl, run_hierarchical, sparse_fl, sparse_hfl,
-    CommBits, TrainLog, TrainOptions,
+    consensus_from_rows, consensus_params, fl, hfl, run_hierarchical,
+    run_hierarchical_checkpointed, sparse_fl, sparse_hfl, CommBits, TrainLog, TrainOptions,
 };
 pub use lr_schedule::LrSchedule;
 pub use optimizer::MomentumSgd;

@@ -38,6 +38,7 @@
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
 //! | [`des`] | **discrete-event HCN simulator**: `(time, seq)`-keyed event queue, waypoint mobility + handover, straggler deadlines with stale discounting, timeline digests |
 //! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`, now with mobility × straggler axes), shared `ScenarioResult` + golden traces (`sim::result`) |
+//! | [`snapshot`] | **checkpoint/resume**: versioned FNV-1a-checksummed engine-state snapshots (exact f32/f64 bit patterns, RNG raw states, DES event queue), atomic writes, append-only JSONL run log for resumable matrix sweeps (`--checkpoint-every` / `--resume`) |
 //! | [`testing`] | minimal property-testing harness (offline substitute for proptest) |
 //!
 //! ### Determinism contract of the event-driven paths
@@ -71,6 +72,7 @@ pub mod fl;
 pub mod pool;
 pub mod runtime;
 pub mod sim;
+pub mod snapshot;
 pub mod sparse;
 pub mod tensor;
 pub mod testing;

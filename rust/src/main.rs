@@ -9,17 +9,20 @@
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
 //!               [--inner-threads N] [--pool-threads N]
 //!               [--agg-path auto|sparse|dense]
+//!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
 //! hfl matrix    [--quick|--full] [--threads N] [--pool-threads N]
 //!               [--iters N] [--dim N] [--phi F]
 //!               [--agg-path auto|sparse|dense]
+//!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
 //! hfl des       [--quick|--full] [--threads N] [--inner-threads N]
 //!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
 //!               [--agg-path auto|sparse|dense]
 //!               [--compute-mean S] [--compute-het X]
+//!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
 //!                                  (mobility × straggler × deadline axes)
@@ -37,19 +40,29 @@
 //! `hfl::sparse::merge`). `--phi F` pins the grid's sparsity axis to a
 //! single φ cell (the CI determinism job uses it for the φ=0.99
 //! sparse-vs-dense diff).
+//!
+//! `--checkpoint-every N` enables checkpoint/resume (`hfl::snapshot`,
+//! `[checkpoint]` config section): `hfl train` snapshots full engine state
+//! every N rounds, while the grid commands (`matrix`, `des`) append each
+//! finished cell to a run log so a killed sweep restarts at the first
+//! unfinished cell. `--resume PATH` continues from a snapshot / run log —
+//! bit-identically to the uninterrupted run, at any thread count.
+//! `--checkpoint PATH` overrides the default `<dir>/<subcommand>` target.
 
 use anyhow::{bail, Result};
 use hfl::cli::Args;
 use hfl::config::Config;
 use hfl::coordinator::{run_coordinated, CoordinatorOptions};
 use hfl::data::SyntheticSpec;
-use hfl::fl::{run_hierarchical, TrainOptions};
+use hfl::fl::{run_hierarchical_checkpointed, TrainOptions};
 use hfl::runtime::{ModelOracle, Runtime};
 use hfl::sim::experiments::{self, Scale};
 use hfl::sim::{fig3, fig4, fig5a, fig5b};
-use hfl::sim::{result, run_matrix, EngineSelect, MatrixOptions, ScenarioSpec};
+use hfl::sim::{result, run_matrix_checkpointed, EngineSelect, MatrixOptions, ScenarioSpec};
+use hfl::snapshot::CheckpointSpec;
 use hfl::topology::NetworkTopology;
 use hfl::util::logging;
+use std::path::PathBuf;
 
 fn main() {
     if let Err(e) = run() {
@@ -86,6 +99,24 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Shared `--checkpoint-every N` / `--checkpoint PATH` / `--resume PATH`
+/// parsing. `default_file` is the subcommand's snapshot (or run-log) file
+/// name under the `[checkpoint] dir` directory. Returns the periodic spec
+/// (None when checkpointing is off) and the resume source, if any.
+fn checkpoint_from_args(
+    args: &Args,
+    cfg: &Config,
+    default_file: &str,
+) -> Result<(Option<CheckpointSpec>, Option<PathBuf>)> {
+    let every = args.get_parsed_or("checkpoint-every", cfg.checkpoint.every)?;
+    let path = args
+        .get("checkpoint")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(&cfg.checkpoint.dir).join(default_file));
+    let resume = args.get("resume").map(PathBuf::from);
+    Ok(((every > 0).then(|| CheckpointSpec::new(every, path)), resume))
 }
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -193,7 +224,11 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let pool = dedicated_pool.as_ref().map(|p| p.handle());
     let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    let (ckpt, resume) = checkpoint_from_args(args, cfg, "train.snap")?;
     args.finish()?;
+    if coordinated && (ckpt.is_some() || resume.is_some()) {
+        bail!("--checkpoint-every/--resume are not supported with --coordinated");
+    }
 
     let (n_clusters, sparse) = match algo.as_str() {
         "fl" => (1, false),
@@ -266,7 +301,12 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     } else {
         let rt = Runtime::load_default()?;
         let mut oracle = ModelOracle::new(&rt, &model, workers, &spec)?;
-        let log = run_hierarchical(&mut oracle, &opts);
+        let log = run_hierarchical_checkpointed(
+            &mut oracle,
+            &opts,
+            ckpt.as_ref(),
+            resume.as_deref(),
+        )?;
         for (it, m) in &log.evals {
             println!(
                 "iter {it:>5}  acc {:>6.2}%  loss {:.4}",
@@ -312,6 +352,7 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
     let phi_pin = args.get_parsed::<f64>("phi")?;
+    let (ckpt, resume) = checkpoint_from_args(args, cfg, "matrix_runlog.jsonl")?;
     args.finish()?;
 
     let mut spec = if full {
@@ -344,7 +385,10 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let results = run_matrix(cfg, &spec, &opts)?;
+    // A cell-granular run log: `--resume PATH` continues a killed sweep
+    // from its log; `--checkpoint-every N` (any N > 0) writes one.
+    let runlog = resume.or_else(|| ckpt.map(|s| s.path));
+    let results = run_matrix_checkpointed(cfg, &spec, &opts, runlog.as_deref())?;
     println!(
         "scenario matrix — {} scenarios, threads={} ({}), {:.2}s wall",
         results.len(),
@@ -374,6 +418,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
     let phi_pin = args.get_parsed::<f64>("phi")?;
+    let (ckpt, resume) = checkpoint_from_args(args, cfg, "des_runlog.jsonl")?;
     args.finish()?;
 
     let mut spec = if full {
@@ -408,7 +453,8 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let results = run_matrix(cfg, &spec, &opts)?;
+    let runlog = resume.or_else(|| ckpt.map(|s| s.path));
+    let results = run_matrix_checkpointed(cfg, &spec, &opts, runlog.as_deref())?;
     println!(
         "discrete-event grid — {} scenarios, threads={} ({}), {:.2}s wall",
         results.len(),
@@ -443,7 +489,15 @@ fn write_grid_outputs(
         &json_path,
         format!("{}\n", result::results_to_json(results).to_string_compact()),
     )?;
-    let golden_text = format!("{}\n", result::golden_to_json(results).to_string_compact());
+    // Golden traces are a bit-exactness boundary: refuse to emit a fixture
+    // with silently nulled non-finite numbers instead of writing one that
+    // can never round-trip.
+    let golden_text = format!(
+        "{}\n",
+        result::golden_to_json(results)
+            .to_string_strict()
+            .map_err(|e| anyhow::anyhow!("golden trace serialization: {e}"))?
+    );
     let golden_path = format!("{out}/{prefix}_golden.json");
     std::fs::write(&golden_path, &golden_text)?;
     println!("wrote {csv_path}, {json_path} and {golden_path}");

@@ -37,9 +37,14 @@ use crate::config::{Config, DesConfig, SparsityConfig};
 use crate::des::{MobilityProfile, StragglerPolicy};
 use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
 use crate::pool::PoolHandle;
-use crate::sim::result::{Engine, ScenarioMeta, ScenarioResult};
+use crate::sim::result::{Engine, Fnv1a, ScenarioMeta, ScenarioResult};
+use crate::snapshot;
+use crate::util::json::{self, ObjBuilder};
 use crate::util::rng::Pcg64;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
 
 /// Radio-environment profile applied to a scenario's latency model:
 /// path-loss exponent plus a multiplicative straggler slowdown (the
@@ -433,6 +438,158 @@ pub fn run_matrix(
         .collect()
 }
 
+/// First line of a matrix run log: everything the grid's results depend on.
+/// Threading knobs (`threads`, `inner_threads`, `pool`, `agg`) are
+/// deliberately excluded — results are bit-identical across them by the
+/// determinism contract, so a killed 8-thread sweep may legally resume on
+/// 1 thread. The scenario-name digest pins the exact grid shape (axis
+/// values and order), since cell RNG streams are keyed by grid position.
+fn runlog_header(spec: &ScenarioSpec, opts: &MatrixOptions) -> Result<String> {
+    let scenarios = spec.expand();
+    let mut names = Fnv1a::new();
+    for sc in &scenarios {
+        names.absorb(sc.name.bytes());
+        names.absorb([0u8]); // separator: names must not concatenate-collide
+    }
+    let j = ObjBuilder::new()
+        .str("kind", "hfl-matrix-runlog")
+        .num("version", 1.0)
+        .num("n_scenarios", scenarios.len() as f64)
+        .str("names_fnv", names.finish().to_string())
+        .str("base_seed", opts.base_seed.to_string())
+        .num("iters", opts.iters as f64)
+        .num("dim", opts.dim as f64)
+        .num("warmup_iters", opts.warmup_iters as f64)
+        .num("eval_every", opts.eval_every as f64)
+        .str("peak_lr_bits", opts.peak_lr.to_bits().to_string())
+        .str("grad_noise_bits", opts.grad_noise.to_bits().to_string())
+        .str("compute_mean_s_bits", opts.compute_mean_s.to_bits().to_string())
+        .str("compute_het_bits", opts.compute_het.to_bits().to_string())
+        .str(
+            "engine",
+            match opts.engine {
+                EngineSelect::Auto => "auto",
+                EngineSelect::Des => "des",
+            },
+        )
+        .build();
+    j.to_string_strict()
+        .map_err(|e| anyhow!("run-log header serialization: {e}"))
+}
+
+/// [`run_matrix`] with a per-cell **run log**: every completed cell is
+/// appended to `runlog` as one exact-JSON line (header line first), so a
+/// killed sweep restarted with the same command line re-runs only the
+/// missing cells and returns the merged grid in id order — bit-identical
+/// to an uninterrupted run at any thread count.
+///
+/// If `runlog` already holds a valid log for this exact grid/configuration,
+/// its cells are reused; a log written by a *different* grid is rejected. A
+/// torn final line (crash mid-append) is discarded and that cell re-runs.
+pub fn run_matrix_checkpointed(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    opts: &MatrixOptions,
+    runlog: Option<&Path>,
+) -> Result<Vec<ScenarioResult>> {
+    let Some(path) = runlog else {
+        return run_matrix(cfg, spec, opts);
+    };
+    let scenarios = spec.expand();
+    if scenarios.is_empty() {
+        bail!("scenario grid is empty (every axis needs at least one value)");
+    }
+    let header = runlog_header(spec, opts)?;
+
+    // Recover completed cells from an existing log.
+    let mut done: BTreeMap<usize, ScenarioResult> = BTreeMap::new();
+    if path.exists() {
+        let lines = snapshot::read_runlog_lines(path)?;
+        if let Some(first) = lines.first() {
+            if *first != header {
+                bail!(
+                    "run log {} was written by a different grid or configuration; \
+                     delete it or rerun with the original options",
+                    path.display()
+                );
+            }
+            for line in &lines[1..] {
+                let j = json::parse(line)
+                    .map_err(|e| anyhow!("run log {}: bad line: {e}", path.display()))?;
+                let r = ScenarioResult::from_exact_json(&j)
+                    .with_context(|| format!("run log {}", path.display()))?;
+                if r.id >= scenarios.len() || scenarios[r.id].name != r.name {
+                    bail!(
+                        "run log {} holds cell `{}` (id {}) which is not in this grid",
+                        path.display(),
+                        r.name,
+                        r.id
+                    );
+                }
+                done.insert(r.id, r);
+            }
+            if !done.is_empty() {
+                crate::log_info!(
+                    "resuming matrix sweep: {}/{} cells already in {}",
+                    done.len(),
+                    scenarios.len(),
+                    path.display()
+                );
+            }
+        }
+    }
+
+    // Start fresh (write the header) or append to the verified log.
+    let file = if done.is_empty() {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating run-log directory {}", dir.display()))?;
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating run log {}", path.display()))?;
+        snapshot::append_runlog_line(&mut f, &header)?;
+        f
+    } else {
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening run log {}", path.display()))?
+    };
+
+    let pending: Vec<usize> = (0..scenarios.len()).filter(|i| !done.contains_key(i)).collect();
+    if !pending.is_empty() {
+        let threads = if opts.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            opts.threads
+        }
+        .clamp(1, pending.len());
+        let pool = opts.pool.clone().unwrap_or_else(crate::pool::global_handle);
+        let file = Mutex::new(file);
+        let ran = pool.run_ordered(pending.len(), threads, |i| -> Result<ScenarioResult> {
+            let sc = &scenarios[pending[i]];
+            let res = run_cell(cfg, sc, opts)
+                .with_context(|| format!("scenario `{}` (id {})", sc.name, sc.id))?;
+            let line = res
+                .to_exact_json()
+                .to_string_strict()
+                .map_err(|e| anyhow!("serializing cell `{}`: {e}", sc.name))?;
+            snapshot::append_runlog_line(&mut file.lock().unwrap(), &line)
+                .with_context(|| format!("appending cell `{}` to the run log", sc.name))?;
+            Ok(res)
+        })?;
+        for r in ran {
+            let res = r?;
+            done.insert(res.id, res);
+        }
+    }
+    Ok(done.into_values().collect())
+}
+
 /// The scenario's TrainOptions (shared by the sequential and DES paths).
 pub(crate) fn cell_train_options(
     cfg: &Config,
@@ -791,6 +948,73 @@ mod tests {
         sc.skew = 0.0;
         sc.phi = None;
         assert_eq!(matrix_latency(&cfg, &sc), 0.0);
+    }
+
+    #[test]
+    fn runlog_resume_reuses_cells_and_matches_uninterrupted_run() {
+        let cfg = Config::smoke();
+        let spec = ScenarioSpec {
+            cells: vec![1, 2],
+            mus_per_cell: vec![2],
+            skews: vec![1.0],
+            phis: vec![None, Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![
+                StragglerPolicy::WaitForAll,
+                StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+            ],
+        };
+        let opts = MatrixOptions { threads: 2, iters: 8, dim: 12, ..Default::default() };
+        let full = run_matrix(&cfg, &spec, &opts).unwrap();
+        assert_eq!(full.len(), 8);
+
+        let log = std::env::temp_dir()
+            .join(format!("hfl_matrix_runlog_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&log);
+
+        // Fresh checkpointed run: same results, full log on disk.
+        let a = run_matrix_checkpointed(&cfg, &spec, &opts, Some(&log)).unwrap();
+        assert_eq!(a.len(), full.len());
+        for (x, y) in a.iter().zip(&full) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.trace, y.trace, "{}", x.name);
+        }
+
+        // Simulate a crash: keep the header + the first 3 completed cells
+        // plus a torn final line, then resume — missing cells re-run, and
+        // the merged grid is bit-identical (at a different thread count).
+        let text = std::fs::read_to_string(&log).unwrap();
+        let keep: Vec<&str> = text.lines().take(4).collect();
+        std::fs::write(&log, format!("{}\n{{\"torn", keep.join("\n"))).unwrap();
+        let resumed = run_matrix_checkpointed(
+            &cfg,
+            &spec,
+            &MatrixOptions { threads: 1, ..opts.clone() },
+            Some(&log),
+        )
+        .unwrap();
+        assert_eq!(resumed.len(), full.len());
+        for (x, y) in resumed.iter().zip(&full) {
+            assert_eq!(x.id, y.id, "merged grid must come back in id order");
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.trace, y.trace, "{}", x.name);
+            assert_eq!(
+                x.per_iter_latency_s.to_bits(),
+                y.per_iter_latency_s.to_bits(),
+                "{}",
+                x.name
+            );
+        }
+
+        // A log from a different configuration must be rejected.
+        let other = MatrixOptions { base_seed: opts.base_seed + 1, ..opts };
+        assert!(
+            run_matrix_checkpointed(&cfg, &spec, &other, Some(&log)).is_err(),
+            "a run log from another base_seed must not resume"
+        );
+        let _ = std::fs::remove_file(&log);
     }
 
     #[test]

@@ -17,7 +17,8 @@ pub mod result;
 
 pub use figures::{fig3, fig4, fig5a, fig5b, FigureSeries};
 pub use matrix::{
-    run_matrix, ChannelProfile, EngineSelect, MatrixOptions, MatrixScenario, ScenarioSpec,
+    run_matrix, run_matrix_checkpointed, ChannelProfile, EngineSelect, MatrixOptions,
+    MatrixScenario, ScenarioSpec,
 };
 pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult, TimelineDigest};
 

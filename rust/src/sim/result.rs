@@ -50,6 +50,16 @@ impl Engine {
             Engine::Des => "des",
         }
     }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sequential" => Ok(Engine::Sequential),
+            "coordinated" => Ok(Engine::Coordinated),
+            "matrix" => Ok(Engine::Matrix),
+            "des" => Ok(Engine::Des),
+            other => Err(anyhow!("unknown engine `{other}`")),
+        }
+    }
 }
 
 /// Fingerprint of a discrete-event timeline: the number of processed events
@@ -89,6 +99,13 @@ impl Fnv1a {
     pub fn finish(&self) -> u64 {
         self.0
     }
+
+    /// Rebuild a hasher mid-stream from a [`Fnv1a::finish`] value — the
+    /// state IS the running digest, so checkpoint/restore of an in-progress
+    /// digest is a plain u64 round trip.
+    pub fn from_raw(state: u64) -> Self {
+        Self(state)
+    }
 }
 
 /// FNV-1a 64-bit over an arbitrary byte stream — dependency-free, stable
@@ -112,6 +129,21 @@ pub fn digest_loss_curve(curve: &[(usize, f64)]) -> u64 {
         bytes.extend_from_slice(&loss.to_bits().to_le_bytes());
         bytes
     }))
+}
+
+/// An f64 as its exact IEEE-754 bit pattern, hex-encoded — the run-log
+/// form for values that may be NaN (JSON has no NaN) or must otherwise
+/// survive byte-for-byte.
+fn f64_bits_json(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn f64_from_bits_json(j: &Json) -> Result<f64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| anyhow!("expected an f64 bit-pattern string"))?;
+    let bits = u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad f64 bit pattern `{s}`: {e}"))?;
+    Ok(f64::from_bits(bits))
 }
 
 /// Compact bit-exact fingerprint of one scenario run.
@@ -148,6 +180,11 @@ impl GoldenTrace {
     }
 
     pub fn to_json(&self) -> Json {
+        // u64 counters travel as decimal *strings*: a JSON number is an
+        // f64 in this tree, and `as f64` silently rounds above 2^53 — the
+        // million-MU event counts will actually get there. The f64 bit
+        // totals are safe as numbers (Rust's shortest-round-trip Display
+        // reparses bit-exactly for every finite value).
         let mut b = ObjBuilder::new()
             .str("params_hash", format!("{:016x}", self.params_hash))
             .str("loss_digest", format!("{:016x}", self.loss_digest))
@@ -155,11 +192,11 @@ impl GoldenTrace {
             .num("sbs_dl_bits", self.bits.sbs_dl)
             .num("sbs_ul_bits", self.bits.sbs_ul)
             .num("mbs_dl_bits", self.bits.mbs_dl)
-            .num("n_mu_msgs", self.bits.n_mu_msgs as f64);
+            .str("n_mu_msgs", self.bits.n_mu_msgs.to_string());
         if let Some(t) = self.timeline {
             b = b
                 .str("timeline_digest", format!("{:016x}", t.digest))
-                .num("timeline_events", t.n_events as f64);
+                .str("timeline_events", t.n_events.to_string());
         }
         b.build()
     }
@@ -177,10 +214,24 @@ impl GoldenTrace {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("golden trace: missing number `{key}`"))
         };
+        // Decimal-string u64 counter, tolerating legacy fixtures that
+        // stored it as a JSON number (exact only up to 2^53 — beyond that
+        // the fixture was already corrupt and parsing refuses).
+        let dec = |key: &str| -> Result<u64> {
+            match j.get(key) {
+                Some(Json::Str(s)) => s
+                    .parse::<u64>()
+                    .map_err(|e| anyhow!("golden trace `{key}`: {e}")),
+                Some(n @ Json::Num(_)) => n.as_u64().ok_or_else(|| {
+                    anyhow!("golden trace `{key}`: legacy number is not an exact u64")
+                }),
+                _ => Err(anyhow!("golden trace: missing `{key}`")),
+            }
+        };
         let timeline = if j.get("timeline_digest").is_some() {
             Some(TimelineDigest {
                 digest: hex("timeline_digest")?,
-                n_events: num("timeline_events")? as u64,
+                n_events: dec("timeline_events")?,
             })
         } else {
             None
@@ -193,7 +244,7 @@ impl GoldenTrace {
                 sbs_dl: num("sbs_dl_bits")?,
                 sbs_ul: num("sbs_ul_bits")?,
                 mbs_dl: num("mbs_dl_bits")?,
-                n_mu_msgs: num("n_mu_msgs")? as u64,
+                n_mu_msgs: dec("n_mu_msgs")?,
             },
             timeline,
         })
@@ -391,6 +442,127 @@ impl ScenarioResult {
             )
             .val("trace", self.trace.to_json())
             .build()
+    }
+
+    /// Bit-exact JSON form for the matrix run log: every f64 travels as
+    /// its hex bit pattern (the accuracies of loss-only oracles are NaN,
+    /// which plain JSON cannot carry), every u64 as a decimal string.
+    /// [`ScenarioResult::from_exact_json`] inverts it byte-for-byte, so a
+    /// resumed sweep re-emits completed cells exactly as the killed run
+    /// would have.
+    pub fn to_exact_json(&self) -> Json {
+        let bits = |b: &CommBits| -> Json {
+            ObjBuilder::new()
+                .val("mu_ul", f64_bits_json(b.mu_ul))
+                .val("sbs_dl", f64_bits_json(b.sbs_dl))
+                .val("sbs_ul", f64_bits_json(b.sbs_ul))
+                .val("mbs_dl", f64_bits_json(b.mbs_dl))
+                .str("n_mu_msgs", b.n_mu_msgs.to_string())
+                .build()
+        };
+        ObjBuilder::new()
+            .num("id", self.id as f64)
+            .str("name", self.name.clone())
+            .str("engine", self.engine.as_str())
+            .num("n_clusters", self.n_clusters as f64)
+            .num("workers", self.workers as f64)
+            .num("h_period", self.h_period as f64)
+            .bool("sparse", self.sparse)
+            .val(
+                "final_accs",
+                Json::Arr(self.final_accs.iter().map(|&x| f64_bits_json(x)).collect()),
+            )
+            .val("final_loss", f64_bits_json(self.final_loss))
+            .val("per_iter_latency_s", f64_bits_json(self.per_iter_latency_s))
+            .val(
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|(it, y)| {
+                            Json::Arr(vec![Json::Num(*it as f64), f64_bits_json(*y)])
+                        })
+                        .collect(),
+                ),
+            )
+            .val("bits", bits(&self.bits))
+            .val("trace", self.trace.to_json())
+            .build()
+    }
+
+    /// Parse [`ScenarioResult::to_exact_json`] output.
+    pub fn from_exact_json(j: &Json) -> Result<Self> {
+        let field = |key: &str| -> Result<&Json> {
+            j.get(key)
+                .ok_or_else(|| anyhow!("run-log result: missing `{key}`"))
+        };
+        let int = |key: &str| -> Result<usize> {
+            field(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("run-log result: `{key}` is not an exact integer"))
+        };
+        let bits_obj = field("bits")?;
+        let bit = |key: &str| -> Result<f64> {
+            bits_obj
+                .get(key)
+                .ok_or_else(|| anyhow!("run-log result: missing `bits.{key}`"))
+                .and_then(f64_from_bits_json)
+        };
+        let n_mu_msgs = bits_obj
+            .get("n_mu_msgs")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("run-log result: missing `bits.n_mu_msgs`"))?
+            .parse::<u64>()
+            .map_err(|e| anyhow!("run-log result `bits.n_mu_msgs`: {e}"))?;
+        let final_accs = field("final_accs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("run-log result: `final_accs` is not an array"))?
+            .iter()
+            .map(f64_from_bits_json)
+            .collect::<Result<Vec<_>>>()?;
+        let curve = field("curve")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("run-log result: `curve` is not an array"))?
+            .iter()
+            .map(|p| -> Result<(usize, f64)> {
+                let pair = p
+                    .as_arr()
+                    .filter(|a| a.len() == 2)
+                    .ok_or_else(|| anyhow!("run-log result: bad curve point"))?;
+                let it = pair[0]
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("run-log result: bad curve iteration"))?;
+                Ok((it, f64_from_bits_json(&pair[1])?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            id: int("id")?,
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("run-log result: `name` is not a string"))?
+                .to_string(),
+            engine: Engine::parse(
+                field("engine")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("run-log result: `engine` is not a string"))?,
+            )?,
+            n_clusters: int("n_clusters")?,
+            workers: int("workers")?,
+            h_period: int("h_period")?,
+            sparse: matches!(field("sparse")?, Json::Bool(true)),
+            final_accs,
+            final_loss: f64_from_bits_json(field("final_loss")?)?,
+            curve,
+            per_iter_latency_s: f64_from_bits_json(field("per_iter_latency_s")?)?,
+            bits: CommBits {
+                mu_ul: bit("mu_ul")?,
+                sbs_dl: bit("sbs_dl")?,
+                sbs_ul: bit("sbs_ul")?,
+                mbs_dl: bit("mbs_dl")?,
+                n_mu_msgs,
+            },
+            trace: GoldenTrace::from_json(field("trace")?)?,
+        })
     }
 
     /// CSV column names (matches [`ScenarioResult::csv_row`]).
@@ -613,6 +785,60 @@ mod tests {
         assert!(!s.contains("timeline"));
         let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
         assert_eq!(back.timeline, None);
+    }
+
+    #[test]
+    fn u64_counters_roundtrip_exactly_above_2_53() {
+        // 2^53 + 1 is the first integer an f64 cannot represent — the old
+        // `as f64` path silently rounded it to 2^53.
+        let mut t = sample_trace();
+        t.bits.n_mu_msgs = (1u64 << 53) + 1;
+        t.timeline = Some(TimelineDigest {
+            n_events: u64::MAX - 7,
+            digest: 1,
+        });
+        let s = t.to_json().to_string_strict().unwrap();
+        let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.bits.n_mu_msgs, (1u64 << 53) + 1);
+        assert_eq!(back.timeline.unwrap().n_events, u64::MAX - 7);
+        assert_eq!(t, back);
+        // Legacy fixtures with small numeric counters still parse…
+        let legacy = r#"{"params_hash":"01","loss_digest":"02","mu_ul_bits":1,
+            "sbs_dl_bits":2,"sbs_ul_bits":3,"mbs_dl_bits":4,"n_mu_msgs":360}"#;
+        let back = GoldenTrace::from_json(&json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(back.bits.n_mu_msgs, 360);
+        // …but a rounded legacy counter refuses instead of lying.
+        let corrupt = legacy.replace("360", "1.8446744073709552e19");
+        assert!(GoldenTrace::from_json(&json::parse(&corrupt).unwrap()).is_err());
+    }
+
+    #[test]
+    fn exact_result_json_roundtrips_nan_and_signed_zero() {
+        let mut r = sample_result("exact");
+        r.final_accs = vec![f64::NAN, -0.0, 62.5];
+        r.final_loss = f64::NAN;
+        r.curve = vec![(10, f64::NAN), (20, 1.0 / 3.0)];
+        r.per_iter_latency_s = -0.0;
+        r.bits.n_mu_msgs = (1u64 << 60) + 3;
+        r.trace.bits.n_mu_msgs = (1u64 << 60) + 3;
+        // The exact form is strict-serializable even though the values
+        // include NaN — they travel as bit-pattern strings.
+        let s = r.to_exact_json().to_string_strict().unwrap();
+        let back = ScenarioResult::from_exact_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.engine, r.engine);
+        assert_eq!(back.final_accs.len(), 3);
+        assert_eq!(back.final_accs[0].to_bits(), r.final_accs[0].to_bits());
+        assert_eq!(back.final_accs[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.final_loss.to_bits(), r.final_loss.to_bits());
+        assert_eq!(back.curve.len(), 2);
+        assert_eq!(back.curve[0].1.to_bits(), f64::NAN.to_bits());
+        assert_eq!(back.curve[1].1.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(back.per_iter_latency_s.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.bits.n_mu_msgs, (1u64 << 60) + 3);
+        assert_eq!(back.trace, r.trace);
+        assert!(back.trace.diff(&r.trace).is_empty());
     }
 
     #[test]

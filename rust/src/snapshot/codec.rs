@@ -1,0 +1,378 @@
+//! Little-endian binary codec for snapshot payloads.
+//!
+//! Everything an engine checkpoints — f32 parameter buffers, u64 counters,
+//! 128-bit PCG states, event records — flows through [`ByteWriter`] /
+//! [`ByteReader`]. Floats are carried as their IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`), so NaN payloads and signed zeros round-trip
+//! exactly; nothing ever passes through a decimal representation.
+//!
+//! The reader is bounds-checked and returns errors (never panics) so a
+//! truncated or corrupted snapshot file surfaces as a clean `Err` at
+//! resume time.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, x: u128) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, x: usize) {
+        self.put_u64(x as u64);
+    }
+
+    pub fn put_bool(&mut self, x: bool) {
+        self.put_u8(x as u8);
+    }
+
+    /// f64 as its exact bit pattern.
+    pub fn put_f64(&mut self, x: f64) {
+        self.put_u64(x.to_bits());
+    }
+
+    /// f32 as its exact bit pattern.
+    pub fn put_f32(&mut self, x: f32) {
+        self.put_u32(x.to_bits());
+    }
+
+    pub fn put_opt_f64(&mut self, x: Option<f64>) {
+        match x {
+            Some(v) => {
+                self.put_u8(1);
+                self.put_f64(v);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    /// Length-prefixed f32 slice (bit patterns).
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+
+    /// Length-prefixed f64 slice (bit patterns).
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn put_u32_slice(&mut self, xs: &[u32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u32(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn put_u64_slice(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed nested byte blob.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Bounds-checked little-endian byte source over a borrowed buffer.
+pub struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    /// Error unless every byte was consumed — catches payload/reader drift.
+    pub fn finish(self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!(
+                "snapshot payload has {} trailing bytes (read {} of {})",
+                self.b.len() - self.i,
+                self.i,
+                self.b.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Take the next `n` raw bytes (used by fingerprint comparisons that
+    /// match a prefix wholesale).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "snapshot payload truncated: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.remaining()
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let x = self.get_u64()?;
+        if x > usize::MAX as u64 {
+            bail!("snapshot length {x} exceeds usize");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("bad bool byte {other} in snapshot"),
+        }
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.get_bool()? {
+            Some(self.get_f64()?)
+        } else {
+            None
+        })
+    }
+
+    /// Guard a length prefix against absurd values so a corrupted prefix
+    /// fails cleanly instead of attempting a huge allocation.
+    fn checked_len(&self, n: usize, elem_bytes: usize) -> Result<usize> {
+        if n.checked_mul(elem_bytes).map_or(true, |b| b > self.remaining()) {
+            bail!(
+                "snapshot slice length {n} (×{elem_bytes}B) exceeds remaining {} bytes",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 4)?;
+        (0..n).map(|_| self.get_f32()).collect()
+    }
+
+    /// Read a length-prefixed f32 slice into an existing buffer of the
+    /// exact expected length (arena regions, model rows).
+    pub fn get_f32_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let n = self.get_usize()?;
+        if n != out.len() {
+            bail!("snapshot f32 slice length {n} != expected {}", out.len());
+        }
+        for slot in out.iter_mut() {
+            *slot = self.get_f32()?;
+        }
+        Ok(())
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 8)?;
+        (0..n).map(|_| self.get_f64()).collect()
+    }
+
+    pub fn get_u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 4)?;
+        (0..n).map(|_| self.get_u32()).collect()
+    }
+
+    pub fn get_u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 8)?;
+        (0..n).map(|_| self.get_u64()).collect()
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 1)?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_usize()?;
+        let n = self.checked_len(n, 1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// Write a [`crate::util::rng::Pcg64`] raw state.
+pub fn put_rng(w: &mut ByteWriter, rng: &crate::util::rng::Pcg64) {
+    let (state, inc, cached) = rng.raw_state();
+    w.put_u128(state);
+    w.put_u128(inc);
+    w.put_opt_f64(cached);
+}
+
+/// Read a [`crate::util::rng::Pcg64`] raw state.
+pub fn get_rng(r: &mut ByteReader) -> Result<crate::util::rng::Pcg64> {
+    let state = r.get_u128()?;
+    let inc = r.get_u128()?;
+    let cached = r.get_opt_f64()?;
+    if inc & 1 != 1 {
+        bail!("corrupt snapshot: PCG increment is even");
+    }
+    Ok(crate::util::rng::Pcg64::from_raw_state(state, inc, cached))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_u128(u128::MAX - 9);
+        w.put_bool(true);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_f32(f32::MIN_POSITIVE);
+        w.put_opt_f64(None);
+        w.put_opt_f64(Some(f64::INFINITY));
+        w.put_f32_slice(&[1.5, -0.0, f32::NAN]);
+        w.put_f64_slice(&[2.5, f64::MIN]);
+        w.put_u32_slice(&[0, u32::MAX]);
+        w.put_u64_slice(&[1u64 << 60]);
+        w.put_str("héllo");
+        w.put_bytes(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_u128().unwrap(), u128::MAX - 9);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.get_f32().unwrap(), f32::MIN_POSITIVE);
+        assert_eq!(r.get_opt_f64().unwrap(), None);
+        assert_eq!(r.get_opt_f64().unwrap(), Some(f64::INFINITY));
+        let v = r.get_f32_vec().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(v[2].to_bits(), f32::NAN.to_bits());
+        assert_eq!(r.get_f64_vec().unwrap(), vec![2.5, f64::MIN]);
+        assert_eq!(r.get_u32_vec().unwrap(), vec![0, u32::MAX]);
+        assert_eq!(r.get_u64_vec().unwrap(), vec![1u64 << 60]);
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        assert_eq!(r.get_bytes().unwrap(), vec![1, 2, 3]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_errors() {
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..4]);
+        assert!(r.get_u64().is_err());
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u32().unwrap(), 5);
+        assert!(r.finish().is_err(), "trailing bytes must be detected");
+        // A corrupted huge length prefix fails instead of allocating.
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_f32_vec().is_err());
+    }
+
+    #[test]
+    fn rng_state_roundtrips_mid_stream() {
+        let mut rng = crate::util::rng::Pcg64::new(9, 3);
+        let _ = rng.normal(); // leave a cached variate
+        let mut w = ByteWriter::new();
+        put_rng(&mut w, &rng);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let mut back = get_rng(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(rng.normal().to_bits(), back.normal().to_bits());
+        for _ in 0..100 {
+            assert_eq!(rng.next_u64(), back.next_u64());
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! **Checkpoint/resume subsystem**: versioned, checksummed engine-state
+//! snapshots plus the append-only run log of the scenario-matrix sweeps.
+//!
+//! A snapshot file is a binary container:
+//!
+//! ```text
+//! [ magic "HFLSNAP1" | version u32 | engine u8 | payload_len u64 |
+//!   payload bytes … | fnv1a64(version‥payload) u64 ]
+//! ```
+//!
+//! The payload is engine-defined ([`codec`] little-endian encoding): the
+//! fl engine serializes its arena regions (exact f32 bit patterns), DGC
+//! `u`/`v` and discounted-error accumulators, the training log, and the
+//! oracle's mutable state; the DES engine additionally serializes every
+//! per-entity `Pcg64` stream, the `(time, seq)` event queue with its
+//! `next_seq`, the timeline recorder, and all bit counters. Writes are
+//! atomic (temp file + rename), so a crash mid-checkpoint leaves the
+//! previous snapshot intact.
+//!
+//! **Determinism contract.** Resuming from a round-k snapshot reproduces
+//! the uninterrupted run bit-for-bit — same `params_hash`, `loss_digest`,
+//! and DES `timeline_digest`, at any thread count. Anything that could
+//! advance differently after restore (RNG raw states including Box–Muller
+//! caches, heap `next_seq`, loss accumulators) is part of the payload;
+//! anything recomputable from the config (geometry, pricing, layouts) is
+//! deliberately not, and resume revalidates a config fingerprint instead.
+//!
+//! The matrix engines use an *event-sourced run log* instead of one giant
+//! state blob: a JSONL file whose header pins the grid fingerprint and
+//! whose lines are completed cells in [`crate::sim::result::
+//! ScenarioResult::to_exact_json`] form (f64s as bit patterns — NaN-safe).
+//! Resume replays the log, keeps every intact line, and re-runs only the
+//! missing cells; a torn final line (killed mid-append) is discarded.
+
+pub mod codec;
+
+use crate::sim::result::fnv1a64;
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File magic: identifies an hfl snapshot container.
+pub const MAGIC: [u8; 8] = *b"HFLSNAP1";
+/// Container format version. Bump on any layout change; readers refuse
+/// other versions instead of guessing.
+pub const VERSION: u32 = 1;
+
+/// Engine tag stored in the container header, so an fl snapshot can never
+/// be fed to the DES resume path (or vice versa) undetected.
+pub const ENGINE_FL: u8 = 1;
+/// See [`ENGINE_FL`].
+pub const ENGINE_DES: u8 = 2;
+
+/// Checkpoint cadence + destination, threaded into the engines.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Snapshot after every `every`-th completed round (0 = never).
+    pub every: usize,
+    /// Snapshot file path (overwritten atomically at each checkpoint).
+    pub path: PathBuf,
+}
+
+impl CheckpointSpec {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> Self {
+        Self {
+            every,
+            path: path.into(),
+        }
+    }
+
+    /// Should a snapshot be taken after completing round `t` (0-based) of
+    /// `iters` total? Never fires on the final round — the run is done and
+    /// the snapshot would be dead weight.
+    pub fn due_after_round(&self, t: usize, iters: usize) -> bool {
+        self.every > 0 && (t + 1) % self.every == 0 && t + 1 < iters
+    }
+}
+
+/// Write a snapshot container atomically: payload goes to `<path>.tmp`,
+/// then a rename swaps it in, so a crash mid-write never corrupts an
+/// existing snapshot.
+pub fn write_snapshot(path: &Path, engine: u8, payload: &[u8]) -> Result<()> {
+    let mut body = Vec::with_capacity(payload.len() + 29);
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.push(engine);
+    body.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    body.extend_from_slice(payload);
+    let checksum = fnv1a64(body.iter().copied());
+
+    let mut bytes = Vec::with_capacity(body.len() + 16);
+    bytes.extend_from_slice(&MAGIC);
+    bytes.extend_from_slice(&body);
+    bytes.extend_from_slice(&checksum.to_le_bytes());
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating snapshot temp file {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming snapshot into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// Read and verify a snapshot container; returns the payload. Fails on a
+/// wrong magic, unknown version, mismatched engine tag, truncation, or a
+/// checksum mismatch — a corrupted snapshot must never half-restore.
+pub fn read_snapshot(path: &Path, expect_engine: u8) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    if bytes.len() < MAGIC.len() + 4 + 1 + 8 + 8 {
+        bail!("snapshot {} is too short ({} bytes)", path.display(), bytes.len());
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        bail!("{} is not an hfl snapshot (bad magic)", path.display());
+    }
+    let body = &bytes[MAGIC.len()..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let computed = fnv1a64(body.iter().copied());
+    if stored != computed {
+        bail!(
+            "snapshot {} checksum mismatch (stored {stored:016x}, computed {computed:016x})",
+            path.display()
+        );
+    }
+    let version = u32::from_le_bytes(body[..4].try_into().unwrap());
+    if version != VERSION {
+        bail!(
+            "snapshot {} has format version {version}, this build reads {VERSION}",
+            path.display()
+        );
+    }
+    let engine = body[4];
+    if engine != expect_engine {
+        let name = |e: u8| match e {
+            ENGINE_FL => "fl",
+            ENGINE_DES => "des",
+            _ => "unknown",
+        };
+        bail!(
+            "snapshot {} was written by the {} engine, expected {}",
+            path.display(),
+            name(engine),
+            name(expect_engine)
+        );
+    }
+    let len = u64::from_le_bytes(body[5..13].try_into().unwrap()) as usize;
+    let payload = &body[13..];
+    if payload.len() != len {
+        bail!(
+            "snapshot {} payload length mismatch (header {len}, actual {})",
+            path.display(),
+            payload.len()
+        );
+    }
+    Ok(payload.to_vec())
+}
+
+/// Append one line to a JSONL run log and flush it to disk so a `kill -9`
+/// right after a cell completes still finds the line on resume.
+pub fn append_runlog_line(file: &mut std::fs::File, line: &str) -> Result<()> {
+    debug_assert!(!line.contains('\n'), "run-log lines must be single-line");
+    file.write_all(line.as_bytes())?;
+    file.write_all(b"\n")?;
+    file.sync_data()?;
+    Ok(())
+}
+
+/// Read a JSONL run log, tolerating a torn final line (the append that a
+/// crash interrupted): returns every complete, parseable line's text.
+/// A malformed line *followed by* intact lines is corruption, not a torn
+/// tail, and errors out.
+pub fn read_runlog_lines(path: &Path) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading run log {}", path.display()))?;
+    let mut out: Vec<String> = Vec::new();
+    let mut torn = false;
+    for (i, line) in text.split('\n').enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let parseable = crate::util::json::parse(line).is_ok();
+        if torn && parseable {
+            bail!(
+                "run log {}: line {} is malformed but later lines parse — corrupt log",
+                path.display(),
+                i
+            );
+        }
+        if parseable {
+            out.push(line.to_string());
+        } else {
+            torn = true;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hfl_snap_test_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn container_roundtrip_and_tamper_detection() {
+        let dir = tmp_dir("container");
+        let path = dir.join("a.snap");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        write_snapshot(&path, ENGINE_FL, &payload).unwrap();
+        assert_eq!(read_snapshot(&path, ENGINE_FL).unwrap(), payload);
+
+        // Wrong engine tag is refused.
+        let err = read_snapshot(&path, ENGINE_DES).unwrap_err().to_string();
+        assert!(err.contains("fl engine"), "{err}");
+
+        // A flipped payload byte fails the checksum.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_snapshot(&path, ENGINE_FL).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        // Truncation is detected.
+        write_snapshot(&path, ENGINE_FL, &payload).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read_snapshot(&path, ENGINE_FL).is_err());
+
+        // Not-a-snapshot is refused up front.
+        std::fs::write(&path, b"{\"json\": true}xxxxxxxxxxxxxxxxxxxxx").unwrap();
+        let err = read_snapshot(&path, ENGINE_FL).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_cadence() {
+        let spec = CheckpointSpec::new(5, "/tmp/x.snap");
+        assert!(!spec.due_after_round(3, 30));
+        assert!(spec.due_after_round(4, 30)); // rounds 0..=4 done = 5 rounds
+        assert!(spec.due_after_round(9, 30));
+        assert!(!spec.due_after_round(29, 30), "never on the final round");
+        let off = CheckpointSpec::new(0, "/tmp/x.snap");
+        assert!(!off.due_after_round(4, 30));
+    }
+
+    #[test]
+    fn runlog_tolerates_torn_tail_only() {
+        let dir = tmp_dir("runlog");
+        let path = dir.join("run.jsonl");
+        let mut f = std::fs::File::create(&path).unwrap();
+        append_runlog_line(&mut f, r#"{"id":0}"#).unwrap();
+        append_runlog_line(&mut f, r#"{"id":1}"#).unwrap();
+        // Simulate a torn append: partial JSON, no newline.
+        use std::io::Write as _;
+        f.write_all(br#"{"id":2,"tr"#).unwrap();
+        drop(f);
+        let lines = read_runlog_lines(&path).unwrap();
+        assert_eq!(lines, vec![r#"{"id":0}"#.to_string(), r#"{"id":1}"#.to_string()]);
+
+        // A malformed line in the middle is corruption, not a torn tail.
+        std::fs::write(&path, "{\"id\":0}\nnot json\n{\"id\":2}\n").unwrap();
+        assert!(read_runlog_lines(&path).is_err());
+    }
+}

@@ -138,6 +138,16 @@ impl DgcCompressor {
         &self.u
     }
 
+    /// Overwrite both accumulators from checkpointed state (exact bit
+    /// copies; dims must match). Inverse of reading
+    /// [`DgcCompressor::momentum_buf`] / [`DgcCompressor::residual`].
+    pub fn restore_state(&mut self, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), self.dim(), "momentum dim mismatch");
+        assert_eq!(v.len(), self.dim(), "residual dim mismatch");
+        self.u.copy_from_slice(u);
+        self.v.copy_from_slice(v);
+    }
+
     /// One compression step; returns the sparse message to transmit.
     pub fn step(&mut self, grad: &[f32]) -> SparseVec {
         let mut out = SparseVec::empty(grad.len());

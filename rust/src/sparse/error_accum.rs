@@ -144,6 +144,13 @@ impl DiscountedError {
     pub fn reset(&mut self) {
         self.e.iter_mut().for_each(|z| *z = 0.0);
     }
+
+    /// Overwrite the error buffer from checkpointed state (exact bit copy;
+    /// dim must match). Inverse of reading [`DiscountedError::error`].
+    pub fn restore_error(&mut self, e: &[f32]) {
+        assert_eq!(e.len(), self.dim(), "error dim mismatch");
+        self.e.copy_from_slice(e);
+    }
 }
 
 #[cfg(test)]

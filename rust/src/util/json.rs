@@ -34,8 +34,27 @@ impl Json {
         }
     }
 
+    /// Exact non-negative integer extraction. Returns `None` for
+    /// non-integral values, negatives, and anything above 2^53 — the
+    /// largest magnitude at which every integer is exactly representable
+    /// in the `f64` this tree stores. (The old `as f64 as usize` cast
+    /// silently rounded such values; counters that can exceed 2^53 must
+    /// round-trip through decimal strings instead — see
+    /// `sim::result::GoldenTrace`.)
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_u64().map(|x| x as usize)
+    }
+
+    /// Exact u64 extraction with the same 2^53 safety bound as
+    /// [`Json::as_usize`].
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|x| {
+            if x.is_finite() && x >= 0.0 && x.trunc() == x && x <= F64_EXACT_INT_MAX {
+                Some(x as u64)
+            } else {
+                None
+            }
+        })
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -61,6 +80,59 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Serialize compactly, but **reject non-finite numbers** instead of
+    /// silently emitting `null` the way [`Json::to_string_compact`] must
+    /// (JSON has no NaN/Inf). Trace and snapshot boundaries use this so a
+    /// diverged loss corrupts nothing undetected; the error names the path
+    /// of the offending value.
+    pub fn to_string_strict(&self) -> Result<String, String> {
+        let mut s = String::new();
+        self.write_strict(&mut s, &mut String::from("$"))?;
+        Ok(s)
+    }
+
+    fn write_strict(&self, out: &mut String, path: &mut String) -> Result<(), String> {
+        match self {
+            Json::Num(x) if !x.is_finite() => {
+                Err(format!("non-finite number {x} at {path} (strict JSON)"))
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let len = path.len();
+                    let _ = write!(path, "[{i}]");
+                    v.write_strict(out, path)?;
+                    path.truncate(len);
+                }
+                out.push(']');
+                Ok(())
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    let len = path.len();
+                    let _ = write!(path, ".{k}");
+                    v.write_strict(out, path)?;
+                    path.truncate(len);
+                }
+                out.push('}');
+                Ok(())
+            }
+            other => {
+                other.write(out);
+                Ok(())
+            }
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -94,6 +166,11 @@ impl Json {
         }
     }
 }
+
+/// Largest f64 magnitude at which every integer is exactly representable
+/// (2^53). Integers beyond this bound cannot round-trip through a JSON
+/// number and must be carried as decimal strings.
+pub const F64_EXACT_INT_MAX: f64 = 9_007_199_254_740_992.0;
 
 fn write_num(x: f64, out: &mut String) {
     if x.is_finite() {
@@ -399,5 +476,34 @@ mod tests {
     fn unicode_escape() {
         let j = parse(r#""é""#).unwrap();
         assert_eq!(j.as_str(), Some("é"));
+    }
+
+    #[test]
+    fn strict_writer_rejects_non_finite_with_path() {
+        let j = ObjBuilder::new()
+            .num("ok", 1.5)
+            .val("curve", Json::Arr(vec![Json::Num(0.5), Json::Num(f64::NAN)]))
+            .build();
+        let err = j.to_string_strict().unwrap_err();
+        assert!(err.contains("$.curve[1]"), "err should name the path: {err}");
+        assert!(Json::Num(f64::INFINITY).to_string_strict().is_err());
+        assert!(Json::Num(f64::NEG_INFINITY).to_string_strict().is_err());
+        // Finite trees serialize identically to the lenient writer.
+        let ok = ObjBuilder::new().num("a", 2.25).str("b", "x").build();
+        assert_eq!(ok.to_string_strict().unwrap(), ok.to_string_compact());
+    }
+
+    #[test]
+    fn as_usize_is_exact_and_bounded() {
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(F64_EXACT_INT_MAX).as_u64(), Some(1u64 << 53));
+        // Non-integral, negative, non-finite, and beyond-2^53 all refuse
+        // instead of silently rounding.
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(F64_EXACT_INT_MAX * 2.0).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
     }
 }

@@ -1,0 +1,333 @@
+//! Resume-at-round-k bit-exactness — the checkpoint subsystem's safety net.
+//!
+//! The snapshot format (`hfl::snapshot`) claims to capture *all* of the
+//! engine state: parameters at exact f32 bit patterns, DGC/discount error
+//! accumulators, every per-entity RNG stream, the DES event queue with its
+//! insertion counter, bit accounting, and the round index. These properties
+//! hold it to that claim: for a swept checkpoint cadence k, a run killed
+//! after round k and resumed from its snapshot must reproduce the
+//! uninterrupted run's final parameters, loss curve, eval curve, per-link
+//! bit totals — and, on the discrete-event engine, the per-event timeline
+//! digest — **bit for bit**.
+//!
+//! Thread counts are deliberately varied across the kill/resume boundary
+//! (inner fan-out ∈ {1, 8}, shared vs dedicated worker pool): the snapshot
+//! fingerprint excludes execution-resource knobs, so resuming on a
+//! different machine shape is legal and must not perturb a single bit.
+//! Mismatched *arithmetic* configuration (a different H, a different seed)
+//! must be refused outright.
+
+use hfl::config::{Config, SparsityConfig};
+use hfl::des::{
+    run_des_checkpointed, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy,
+};
+use hfl::fl::{run_hierarchical_checkpointed, QuadraticOracle, TrainLog, TrainOptions};
+use hfl::pool::WorkerPool;
+use hfl::snapshot::CheckpointSpec;
+use hfl::testing::{check, Gen, PropConfig};
+use hfl::util::rng::Pcg64;
+use std::path::PathBuf;
+
+const ITERS: usize = 12;
+
+/// One resume instance: checkpoint cadence k ∈ [1, ITERS−3] (so at least
+/// one snapshot is due before the final round), topology (n, per, dim, H),
+/// a seed, and a coin for which side of the kill/resume boundary runs with
+/// 8 threads on a dedicated pool.
+struct ResumeCase;
+
+impl Gen for ResumeCase {
+    /// (k, n_clusters, per_cluster, dim, h_period, swap_threads, seed)
+    type Value = (usize, usize, usize, usize, usize, bool, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            1 + rng.uniform_usize(ITERS - 3),
+            [2usize, 4][rng.uniform_usize(2)],
+            2 + rng.uniform_usize(2),
+            6 + rng.uniform_usize(10),
+            1 + rng.uniform_usize(3),
+            rng.uniform_usize(2) == 0,
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, &(k, n, per, dim, h, swap, seed): &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if k > 1 {
+            out.push((k / 2, n, per, dim, h, swap, seed));
+        }
+        if n > 2 {
+            out.push((k, 2, per, dim, h, swap, seed));
+        }
+        if dim > 6 {
+            out.push((k, n, per, dim - 1, h, swap, seed));
+        }
+        out
+    }
+}
+
+fn topts(n: usize, h: usize, inner: usize, pool: Option<hfl::pool::PoolHandle>) -> TrainOptions {
+    TrainOptions {
+        iters: ITERS,
+        peak_lr: 0.05,
+        warmup_iters: 2,
+        h_period: h,
+        n_clusters: n,
+        sparsity: SparsityConfig {
+            enabled: true,
+            phi_mu_ul: 0.8,
+            ..SparsityConfig::default()
+        },
+        eval_every: 4,
+        inner_threads: inner,
+        pool,
+        ..TrainOptions::default()
+    }
+}
+
+/// Odd seeds draw gradient noise, so the oracle RNG advances on every
+/// draw — a resume that failed to restore any stream diverges on its
+/// first post-resume round. Even seeds are noiseless: those oracles
+/// expose the `ParGradOracle` view, so the inner fan-out genuinely runs
+/// at width 8 and the thread-shape swap across the kill/resume boundary
+/// exercises real parallel execution, not a sequential fallback.
+fn oracle(dim: usize, workers: usize, seed: u64) -> QuadraticOracle {
+    let noise = if seed % 2 == 0 { 0.0 } else { 0.01 };
+    QuadraticOracle::new_skewed(dim, workers, noise, 1.0, seed)
+}
+
+fn fl_digest(l: &TrainLog) -> (Vec<u32>, Vec<(usize, u64)>, Vec<(usize, u64, u64)>) {
+    (
+        l.final_params.iter().map(|x| x.to_bits()).collect(),
+        l.train_loss.iter().map(|&(it, x)| (it, x.to_bits())).collect(),
+        l.evals
+            .iter()
+            .map(|&(it, m)| (it, m.loss.to_bits(), m.accuracy.to_bits()))
+            .collect(),
+    )
+}
+
+fn snap_path(tag: &str, case: u64) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "hfl_resume_{tag}_{}_{case:016x}.snap",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn prop_fl_resume_at_round_k_bit_exact() {
+    let dedicated = WorkerPool::new(8);
+    check(
+        &PropConfig { cases: 8, ..Default::default() },
+        &ResumeCase,
+        |&(k, n, per, dim, h, swap, seed)| {
+            let workers = n * per;
+            let (inner_a, pool_a, inner_b, pool_b) = if swap {
+                (8, Some(dedicated.handle()), 1, None)
+            } else {
+                (1, None, 8, Some(dedicated.handle()))
+            };
+
+            // Uninterrupted reference.
+            let full = run_hierarchical_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &topts(n, h, 1, None),
+                None,
+                None,
+            )
+            .map_err(|e| format!("full run: {e}"))?;
+
+            // Killed run: checkpoint every k rounds, then throw the result
+            // away — only the last on-disk snapshot survives the "crash".
+            let snap = snap_path("fl", seed ^ k as u64);
+            let spec = CheckpointSpec::new(k, &snap);
+            let ck = run_hierarchical_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &topts(n, h, inner_a, pool_a),
+                Some(&spec),
+                None,
+            )
+            .map_err(|e| format!("checkpointed run: {e}"))?;
+            if fl_digest(&ck) != fl_digest(&full) || ck.bits != full.bits {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!("checkpointing itself perturbed the run (k={k})"));
+            }
+
+            // Resume at a different thread count / pool shape.
+            let resumed = run_hierarchical_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &topts(n, h, inner_b, pool_b),
+                None,
+                Some(&snap),
+            )
+            .map_err(|e| format!("resumed run: {e}"))?;
+            if fl_digest(&resumed) != fl_digest(&full) {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!(
+                    "resume at k={k} (inner {inner_a}->{inner_b}) diverged from the full run"
+                ));
+            }
+            if resumed.bits != full.bits {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!("resume at k={k}: bit accounting diverged"));
+            }
+
+            // Arithmetic-config mismatch must be refused, not absorbed.
+            let err = run_hierarchical_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &topts(n, h + 1, 1, None),
+                None,
+                Some(&snap),
+            );
+            let _ = std::fs::remove_file(&snap);
+            if err.is_ok() {
+                return Err("resume accepted a snapshot from a different H".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_des_resume_at_round_k_bit_exact() {
+    let dedicated = WorkerPool::new(8);
+    check(
+        &PropConfig { cases: 5, ..Default::default() },
+        &ResumeCase,
+        |&(k, n, per, dim, h, swap, seed)| {
+            let workers = n * per;
+            let mut cfg = Config::smoke();
+            cfg.topology.n_clusters = n;
+            cfg.topology.mus_per_cluster = per;
+            cfg.topology.reuse_colors = cfg.topology.reuse_colors.min(n);
+            cfg.training.h_period = h;
+            let params_for = |inner: usize, pool: Option<hfl::pool::PoolHandle>| DesParams {
+                topts: topts(n, h, inner, pool),
+                mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
+                straggler: StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
+                compute: ComputeProfile { mean_s: 0.3, het: 0.5 },
+                compute_scale: 1.0,
+                seed,
+            };
+            let (inner_a, pool_a, inner_b, pool_b) = if swap {
+                (8, Some(dedicated.handle()), 1, None)
+            } else {
+                (1, None, 8, Some(dedicated.handle()))
+            };
+
+            let full = run_des_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &cfg,
+                &params_for(1, None),
+                None,
+                None,
+            )
+            .map_err(|e| format!("full run: {e}"))?;
+
+            let snap = snap_path("des", seed ^ k as u64);
+            let spec = CheckpointSpec::new(k, &snap);
+            let ck = run_des_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &cfg,
+                &params_for(inner_a, pool_a),
+                Some(&spec),
+                None,
+            )
+            .map_err(|e| format!("checkpointed run: {e}"))?;
+            if ck.timeline != full.timeline {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!("checkpointing itself perturbed the timeline (k={k})"));
+            }
+
+            let resumed = run_des_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &cfg,
+                &params_for(inner_b, pool_b),
+                None,
+                Some(&snap),
+            )
+            .map_err(|e| format!("resumed run: {e}"))?;
+
+            // The timeline digest covers every processed event in order —
+            // if the queue, any RNG stream, or any accumulator came back
+            // wrong, it cannot match.
+            if resumed.timeline != full.timeline {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!(
+                    "resume at k={k} (inner {inner_a}->{inner_b}): timeline diverged \
+                     ({:?} != {:?})",
+                    resumed.timeline, full.timeline
+                ));
+            }
+            if fl_digest(&resumed.log) != fl_digest(&full.log)
+                || resumed.log.bits != full.log.bits
+            {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!("resume at k={k}: training log diverged"));
+            }
+            if resumed.total_time_s.to_bits() != full.total_time_s.to_bits()
+                || resumed.n_handovers != full.n_handovers
+                || resumed.n_late != full.n_late
+                || resumed.n_skipped_rounds != full.n_skipped_rounds
+            {
+                let _ = std::fs::remove_file(&snap);
+                return Err(format!("resume at k={k}: clock/counters diverged"));
+            }
+
+            // A different seed is a different experiment: refuse.
+            let mut other = params_for(1, None);
+            other.seed = seed.wrapping_add(1);
+            let err = run_des_checkpointed(
+                &mut oracle(dim, workers, seed),
+                &cfg,
+                &other,
+                None,
+                Some(&snap),
+            );
+            let _ = std::fs::remove_file(&snap);
+            if err.is_ok() {
+                return Err("resume accepted a snapshot from a different seed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cross_engine_snapshots_are_refused() {
+    // An fl snapshot handed to the DES engine (and vice versa) must fail on
+    // the container's engine tag, before any payload is interpreted.
+    let seed = 0x5eed_cafe;
+    let (n, per, dim, h) = (2usize, 2usize, 8usize, 2usize);
+    let snap = snap_path("xengine", seed);
+    let spec = CheckpointSpec::new(4, &snap);
+    run_hierarchical_checkpointed(
+        &mut oracle(dim, n * per, seed),
+        &topts(n, h, 1, None),
+        Some(&spec),
+        None,
+    )
+    .expect("checkpointed fl run");
+
+    let mut cfg = Config::smoke();
+    cfg.topology.n_clusters = n;
+    cfg.topology.mus_per_cluster = per;
+    cfg.topology.reuse_colors = cfg.topology.reuse_colors.min(n);
+    cfg.training.h_period = h;
+    let params = DesParams {
+        topts: topts(n, h, 1, None),
+        mobility: MobilityProfile::Static,
+        straggler: StragglerPolicy::WaitForAll,
+        compute: ComputeProfile { mean_s: 0.3, het: 0.5 },
+        compute_scale: 1.0,
+        seed,
+    };
+    let err = run_des_checkpointed(&mut oracle(dim, n * per, seed), &cfg, &params, None, Some(&snap));
+    let _ = std::fs::remove_file(&snap);
+    let msg = format!("{:#}", err.expect_err("DES must refuse an fl snapshot"));
+    assert!(
+        msg.contains("engine") || msg.contains("snapshot"),
+        "unhelpful cross-engine error: {msg}"
+    );
+}

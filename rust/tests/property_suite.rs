@@ -18,14 +18,26 @@
 //!    lanes (`TrainOptions::pool`, shared or dedicated) reproduce the
 //!    sequential path bit for bit on the reference engine *and* the
 //!    discrete-event engine, including DES timeline digests.
+//! 6. **Sparse-first aggregation**: the k-way merge (sequential and
+//!    pool-parallel at every width) is bit-identical to the MU-ordered
+//!    dense scatter fold, and `SparseWire` round-trips within priced bits.
+//! 7. **JSON exactness at trace/snapshot boundaries**: strict
+//!    serialization round-trips every finite f64 bit pattern and
+//!    hard-errors (naming the path) on NaN/Inf; `Json::as_u64` never
+//!    rounds; u64 counters round-trip over the full range — including
+//!    above 2^53 — through the decimal-string lane; and
+//!    `ScenarioResult::to_exact_json`/`from_exact_json` invert bitwise
+//!    even when accuracies are NaN.
 
 use hfl::config::{Config, SparsityConfig};
 use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
-use hfl::fl::{run_hierarchical, QuadraticOracle, TrainLog, TrainOptions};
+use hfl::fl::{run_hierarchical, CommBits, QuadraticOracle, TrainLog, TrainOptions};
 use hfl::pool::{PoolHandle, WorkerPool};
+use hfl::sim::{Engine, GoldenTrace, ScenarioResult, TimelineDigest};
 use hfl::sparse::merge::{merge_weighted_into, merge_weighted_par, MergeScratch, ParMergeScratch};
 use hfl::sparse::{DgcCompressor, SparseVec, SparseWire};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
+use hfl::util::json::{self, Json, ObjBuilder};
 use hfl::util::rng::Pcg64;
 use hfl::wireless::broadcast::{broadcast_latency, BroadcastParams};
 use hfl::wireless::latency::payload_bits;
@@ -758,4 +770,266 @@ fn prop_sparse_wire_roundtrips_exactly_within_priced_bits() {
         }
         Ok(())
     });
+}
+
+// --- 7. JSON exactness at trace/snapshot boundaries --------------------------
+
+/// Arbitrary f64 **bit patterns**: uniform over the full 2^64 space with a
+/// bias toward the adversarial corners — signed zeros, subnormal extremes,
+/// `f64::MAX`, infinities, NaN payloads, and the 2^53 exact-integer edge.
+struct F64Bits;
+impl Gen for F64Bits {
+    type Value = u64;
+    fn generate(&self, rng: &mut Pcg64) -> u64 {
+        const CORNERS: [u64; 10] = [
+            0x0000_0000_0000_0000, // +0.0
+            0x8000_0000_0000_0000, // -0.0
+            0x0000_0000_0000_0001, // smallest subnormal
+            0x000f_ffff_ffff_ffff, // largest subnormal
+            0x7fef_ffff_ffff_ffff, // f64::MAX
+            0x7ff0_0000_0000_0000, // +inf
+            0xfff0_0000_0000_0000, // -inf
+            0x7ff8_0000_0000_0001, // quiet NaN with payload
+            0x4340_0000_0000_0000, // 2^53
+            0x4340_0000_0000_0001, // 2^53 + 2 (nearest f64 above)
+        ];
+        if rng.uniform_usize(4) == 0 {
+            CORNERS[rng.uniform_usize(CORNERS.len())]
+        } else {
+            rng.next_u64()
+        }
+    }
+}
+
+#[test]
+fn prop_strict_json_roundtrips_every_finite_f64_and_rejects_nonfinite() {
+    check(
+        &PropConfig { cases: 500, ..Default::default() },
+        &F64Bits,
+        |&bits| {
+            let x = f64::from_bits(bits);
+            let doc = ObjBuilder::new().num("x", x).build();
+            if !x.is_finite() {
+                // The satellite fix: NaN/Inf must hard-error at strict
+                // boundaries (naming the offending path) instead of the
+                // legacy writer's silent `null`.
+                return match doc.to_string_strict() {
+                    Err(e) if e.contains("$.x") => Ok(()),
+                    Err(e) => Err(format!("error does not name the path: {e}")),
+                    Ok(s) => Err(format!("non-finite {x} serialized as {s}")),
+                };
+            }
+            let text = doc.to_string_strict()?;
+            let back = json::parse(&text).map_err(|e| format!("reparse `{text}`: {e}"))?;
+            let y = back
+                .get("x")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("`x` missing after round trip of {text}"))?;
+            // The writer's integer fast path collapses -0.0 to `0`; every
+            // other finite value must round-trip bit-exactly (Rust's
+            // shortest-round-trip Display guarantees reparse equality).
+            let expect = if x == 0.0 { 0.0f64.to_bits() } else { bits };
+            if y.to_bits() != expect {
+                return Err(format!(
+                    "{x:e}: {bits:016x} reparsed as {:016x}",
+                    y.to_bits()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// u64 values spanning the whole range, biased toward the 2^53 boundary
+/// where JSON-number exactness breaks down.
+struct U64Any;
+impl Gen for U64Any {
+    type Value = u64;
+    fn generate(&self, rng: &mut Pcg64) -> u64 {
+        match rng.uniform_usize(4) {
+            0 => rng.uniform_usize(1 << 20) as u64,
+            1 => (1u64 << 53) - 4 + rng.uniform_usize(9) as u64,
+            2 => rng.next_u64() >> rng.uniform_usize(64),
+            _ => rng.next_u64(),
+        }
+    }
+}
+
+#[test]
+fn prop_exact_u64_extraction_never_rounds() {
+    // `Json::as_u64`/`as_usize` may return Some(u) only when u reproduces
+    // the stored f64 *exactly* and sits at or below 2^53 (the satellite
+    // fix for counters that silently rounded through `as f64 as usize`).
+    // Everything larger travels on the decimal-string lane, which is exact
+    // over the full u64 range including u64::MAX.
+    check(
+        &PropConfig { cases: 500, ..Default::default() },
+        &U64Any,
+        |&v| {
+            let f = v as f64;
+            match Json::Num(f).as_u64() {
+                Some(u) => {
+                    if u as f64 != f {
+                        return Err(format!("as_u64 lied: {u} != stored {f}"));
+                    }
+                    if f > 9_007_199_254_740_992.0 {
+                        return Err(format!("as_u64 accepted {f} above 2^53"));
+                    }
+                    if Json::Num(f).as_usize() != Some(u as usize) {
+                        return Err("as_usize disagrees with as_u64".into());
+                    }
+                }
+                None => {
+                    if f.is_finite() && f.trunc() == f && f >= 0.0 && f <= 9_007_199_254_740_992.0
+                    {
+                        return Err(format!("as_u64 rejected exact {f}"));
+                    }
+                }
+            }
+            // Negative and fractional numbers never extract.
+            if v > 0 && Json::Num(-f).as_u64().is_some() {
+                return Err(format!("as_u64 accepted negative {}", -f));
+            }
+            if Json::Num(0.5).as_u64().is_some() {
+                return Err("as_u64 accepted a fraction".into());
+            }
+            // Decimal-string lane: exact for every u64 through a full
+            // serialize → parse cycle.
+            let text = ObjBuilder::new()
+                .str("n", v.to_string())
+                .build()
+                .to_string_strict()?;
+            let back = json::parse(&text).map_err(|e| format!("reparse: {e}"))?;
+            let parsed = back
+                .get("n")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "`n` missing after round trip".to_string())?
+                .parse::<u64>()
+                .map_err(|e| e.to_string())?;
+            if parsed != v {
+                return Err(format!("decimal round trip {v} -> {parsed}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scenario_result_exact_json_roundtrip_is_bitwise() {
+    // The matrix run-log cell format: every f64 travels as its hex bit
+    // pattern (NaN accuracies of loss-only oracles included), every u64 as
+    // a decimal string. Serialize → strict-print → parse → deserialize must
+    // invert bitwise so a resumed sweep re-emits killed cells exactly.
+    struct SeedGen;
+    impl Gen for SeedGen {
+        type Value = u64;
+        fn generate(&self, rng: &mut Pcg64) -> u64 {
+            rng.next_u64()
+        }
+    }
+    fn any_f64(rng: &mut Pcg64) -> f64 {
+        f64::from_bits(rng.next_u64())
+    }
+    fn finite_f64(rng: &mut Pcg64) -> f64 {
+        loop {
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_finite() {
+                return x;
+            }
+        }
+    }
+    check(
+        &PropConfig { cases: 100, ..Default::default() },
+        &SeedGen,
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let engine = [Engine::Sequential, Engine::Coordinated, Engine::Matrix, Engine::Des]
+                [rng.uniform_usize(4)];
+            let n_accs = rng.uniform_usize(4);
+            let final_accs: Vec<f64> = (0..n_accs).map(|_| any_f64(&mut rng)).collect();
+            let n_curve = rng.uniform_usize(5);
+            let curve: Vec<(usize, f64)> = (0..n_curve)
+                .map(|i| (i * 5, any_f64(&mut rng)))
+                .collect();
+            // GoldenTrace bit totals travel as plain JSON numbers (always
+            // finite sums in real runs), so draw them finite here.
+            let trace = GoldenTrace {
+                params_hash: rng.next_u64(),
+                loss_digest: rng.next_u64(),
+                bits: CommBits {
+                    mu_ul: finite_f64(&mut rng),
+                    sbs_dl: finite_f64(&mut rng),
+                    sbs_ul: finite_f64(&mut rng),
+                    mbs_dl: finite_f64(&mut rng),
+                    n_mu_msgs: rng.next_u64(), // full range — beyond 2^53
+                },
+                timeline: if rng.uniform_usize(2) == 0 {
+                    Some(TimelineDigest { n_events: rng.next_u64(), digest: rng.next_u64() })
+                } else {
+                    None
+                },
+            };
+            let res = ScenarioResult {
+                id: rng.uniform_usize(1 << 16),
+                name: format!("cell \"{seed:016x}\"\n\t∈ grid"), // escapes + non-ASCII
+                engine,
+                n_clusters: 1 + rng.uniform_usize(8),
+                workers: 1 + rng.uniform_usize(64),
+                h_period: 1 + rng.uniform_usize(16),
+                sparse: rng.uniform_usize(2) == 0,
+                final_accs,
+                final_loss: any_f64(&mut rng),
+                curve,
+                per_iter_latency_s: any_f64(&mut rng),
+                bits: CommBits {
+                    mu_ul: any_f64(&mut rng),
+                    sbs_dl: any_f64(&mut rng),
+                    sbs_ul: any_f64(&mut rng),
+                    mbs_dl: any_f64(&mut rng),
+                    n_mu_msgs: rng.next_u64(),
+                },
+                trace,
+            };
+            let text = res.to_exact_json().to_string_strict()?;
+            let back = ScenarioResult::from_exact_json(
+                &json::parse(&text).map_err(|e| format!("reparse: {e}"))?,
+            )
+            .map_err(|e| format!("from_exact_json: {e}"))?;
+
+            let b = |x: f64| x.to_bits();
+            if back.id != res.id
+                || back.name != res.name
+                || back.engine.as_str() != res.engine.as_str()
+                || back.n_clusters != res.n_clusters
+                || back.workers != res.workers
+                || back.h_period != res.h_period
+                || back.sparse != res.sparse
+            {
+                return Err("identity fields diverged".into());
+            }
+            let accs = |v: &[f64]| v.iter().map(|&x| b(x)).collect::<Vec<_>>();
+            if accs(&back.final_accs) != accs(&res.final_accs) {
+                return Err("final_accs bit patterns diverged".into());
+            }
+            if b(back.final_loss) != b(res.final_loss)
+                || b(back.per_iter_latency_s) != b(res.per_iter_latency_s)
+            {
+                return Err("scalar f64 bit patterns diverged".into());
+            }
+            let pts = |c: &[(usize, f64)]| c.iter().map(|&(i, y)| (i, b(y))).collect::<Vec<_>>();
+            if pts(&back.curve) != pts(&res.curve) {
+                return Err("curve bit patterns diverged".into());
+            }
+            let comm = |c: &CommBits| {
+                (b(c.mu_ul), b(c.sbs_dl), b(c.sbs_ul), b(c.mbs_dl), c.n_mu_msgs)
+            };
+            if comm(&back.bits) != comm(&res.bits) {
+                return Err("comm-bits diverged".into());
+            }
+            if back.trace != res.trace {
+                return Err("golden trace diverged".into());
+            }
+            Ok(())
+        },
+    );
 }
