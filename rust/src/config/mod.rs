@@ -438,6 +438,41 @@ impl CheckpointConfig {
     }
 }
 
+/// Coordinator-as-a-service knobs (`crate::net`): where `hfl serve`
+/// listens (and `hfl worker` connects), plus the optional live-metrics
+/// endpoint and session log. CLI overrides: `--listen`/`--connect`,
+/// `--metrics-addr`, `--session-log`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Default `hfl serve` listen address / `hfl worker` target.
+    pub listen_addr: String,
+    /// `GET /metrics` HTTP endpoint address; empty (the default) disables
+    /// the endpoint.
+    pub metrics_addr: String,
+    /// Session message-log path for `hfl replay`; empty (the default)
+    /// disables logging.
+    pub session_log: String,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            listen_addr: "127.0.0.1:7070".into(),
+            metrics_addr: String::new(),
+            session_log: String::new(),
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.listen_addr.is_empty() {
+            bail!("net listen_addr must not be empty");
+        }
+        Ok(())
+    }
+}
+
 /// Persistent worker-pool knobs (`crate::pool`): the execution-lane budget
 /// shared by the scenario matrix and the engines' intra-round fan-outs.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -469,6 +504,7 @@ pub struct Config {
     pub des: DesConfig,
     pub pool: PoolConfig,
     pub checkpoint: CheckpointConfig,
+    pub net: NetConfig,
     /// Aggregation dispatch (`crate::sparse::merge`): sparse k-way merge
     /// vs dense scatter at the SBS/MBS aggregation call sites. `[agg]
     /// path = "auto"|"sparse"|"dense"`, `[agg] crossover = 0.25`; CLI
@@ -508,6 +544,7 @@ impl Config {
         self.des.validate().context("des")?;
         self.pool.validate().context("pool")?;
         self.checkpoint.validate().context("checkpoint")?;
+        self.net.validate().context("net")?;
         self.agg.validate().context("agg")?;
         Ok(())
     }
@@ -609,6 +646,24 @@ impl Config {
                     bail!("expected string");
                 };
                 self.checkpoint.dir = s.clone();
+            }
+            ("net", "listen_addr") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                self.net.listen_addr = s.clone();
+            }
+            ("net", "metrics_addr") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                self.net.metrics_addr = s.clone();
+            }
+            ("net", "session_log") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                self.net.session_log = s.clone();
             }
             ("agg", "path") => {
                 let V::Str(s) = value else {
@@ -807,6 +862,28 @@ mod tests {
         assert_eq!(c.checkpoint.dir, "snaps");
         c.validate().unwrap();
         c.checkpoint.dir.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn net_defaults_localhost_and_overridable() {
+        let c = Config::default();
+        assert_eq!(c.net.listen_addr, "127.0.0.1:7070");
+        assert!(c.net.metrics_addr.is_empty(), "metrics must default to off");
+        assert!(c.net.session_log.is_empty(), "session log must default to off");
+        c.net.validate().unwrap();
+        let mut c = Config::default();
+        c.apply_override("net", "listen_addr", &toml::TomlValue::Str("0.0.0.0:9000".into()))
+            .unwrap();
+        c.apply_override("net", "metrics_addr", &toml::TomlValue::Str("127.0.0.1:9100".into()))
+            .unwrap();
+        c.apply_override("net", "session_log", &toml::TomlValue::Str("s.hlog".into()))
+            .unwrap();
+        assert_eq!(c.net.listen_addr, "0.0.0.0:9000");
+        assert_eq!(c.net.metrics_addr, "127.0.0.1:9100");
+        assert_eq!(c.net.session_log, "s.hlog");
+        c.validate().unwrap();
+        c.net.listen_addr.clear();
         assert!(c.validate().is_err());
     }
 

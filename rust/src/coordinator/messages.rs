@@ -1,7 +1,13 @@
-//! Wire messages between the coordinator's actors. Payloads are the sparse
-//! index+value vectors that the real system would transmit; dense state
-//! never crosses a link (except the one-time initial model, which in a real
-//! deployment ships with the firmware).
+//! In-process messages between an SBS cell and its MU actors. Payloads are
+//! the sparse index+value vectors that the real system would transmit;
+//! dense state never crosses a link (except the one-time initial model,
+//! which in a real deployment ships with the firmware).
+//!
+//! The SBS↔MBS tier speaks [`crate::net::wire::WireMsg`] over a
+//! [`crate::net::transport::Transport`] instead — those messages are
+//! framed and byte-serialized because they may cross process boundaries;
+//! MU↔SBS messages stay plain structs on `mpsc` channels because a cell's
+//! MUs always share its process.
 
 use crate::sparse::SparseVec;
 
@@ -28,34 +34,6 @@ pub enum SbsToMu {
     Stop,
 }
 
-/// SBS inbox: gradient uploads from its MUs plus control from the MBS.
-#[derive(Debug)]
-pub enum SbsControl {
-    /// A gradient message from a cluster MU.
-    FromMu(MuToSbs),
-    /// Global model delta from the MBS (sync step).
-    GlobalDelta(SparseVec),
-    /// Terminate (propagates Stop to the MUs).
-    Stop,
-}
-
-/// SBS → MBS: the cluster's sparsified model difference at a sync point.
-#[derive(Debug)]
-pub struct MbsToSbs {
-    pub cluster: usize,
-    pub delta: SparseVec,
-    /// Mean training loss over the cluster for the elapsed period.
-    pub mean_loss: f64,
-}
-
-/// SBS → MBS inbox: either a sync contribution or completion notice.
-#[derive(Debug)]
-pub enum SbsToMbs {
-    Sync(MbsToSbs),
-    /// The cluster finished all its iterations.
-    Done { cluster: usize },
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,7 +43,5 @@ mod tests {
         fn assert_send<T: Send>() {}
         assert_send::<MuToSbs>();
         assert_send::<SbsToMu>();
-        assert_send::<SbsControl>();
-        assert_send::<MbsToSbs>();
     }
 }

@@ -14,7 +14,10 @@ pub enum LinkKind {
 }
 
 /// One transmitted message.
-#[derive(Clone, Copy, Debug)]
+///
+/// `PartialEq` follows IEEE semantics on the f64 fields (NaN ≠ NaN) — the
+/// wire tests compare events by bit pattern where NaN losses matter.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricEvent {
     pub iter: usize,
     pub cluster: usize,

@@ -3,11 +3,11 @@
 //!
 //! ```text
 //!            MBS (leader, main thread)
-//!           /    |     \            global sync every H iterations
-//!        SBS₀  SBS₁ …  SBS_{N−1}    (one thread per cluster)
-//!       / | \                       intra-cluster rounds every iteration
-//!     MU MU MU …                    (one thread per mobile user)
-//!             \
+//!           /    |     \            global sync every H iterations,
+//!        SBS₀  SBS₁ …  SBS_{N−1}    over a framed `net` transport
+//!       / | \                       (loopback in-process, TCP for
+//!     MU MU MU …                     `hfl serve`/`hfl worker`);
+//!             \                     intra-cluster rounds every iteration
 //!              ComputeService       (single thread owning the PJRT
 //!                                    runtime — xla handles are !Send)
 //! ```
@@ -18,7 +18,9 @@
 //! to the sequential engine (asserted by integration tests), it just runs
 //! the topology for real: channels, per-actor state, barrier-free
 //! synchronous rounds, graceful shutdown, and per-link metrics that the
-//! latency model converts into simulated network time.
+//! latency model converts into simulated network time. The SBS↔MBS tier
+//! lives in [`crate::net`]; this module keeps the MU actor, the compute
+//! service, the in-process MU↔SBS messages and the metrics schema.
 
 pub mod compute;
 pub mod messages;
@@ -26,6 +28,6 @@ pub mod metrics;
 pub mod run;
 
 pub use compute::{ComputeHandle, ComputeService};
-pub use messages::{MbsToSbs, MuToSbs, SbsControl, SbsToMbs, SbsToMu};
-pub use metrics::{LinkKind, MetricEvent, MetricsLog};
+pub use messages::{MuToSbs, SbsToMu};
+pub use metrics::{LinkKind, MetricEvent, MetricsLog, MetricsSink};
 pub use run::{run_coordinated, CoordinatorOptions, CoordinatorRun};

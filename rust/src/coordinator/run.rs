@@ -1,4 +1,4 @@
-//! Actor wiring and the coordinated training run.
+//! The coordinated training run and the MU actor.
 //!
 //! The coordinator executes the same arithmetic as the sequential reference
 //! engine ([`crate::fl::run_hierarchical`]) — same compressors, same
@@ -9,6 +9,15 @@
 //! encoders, channel-synchronized rounds, H-period global sync through the
 //! MBS, metrics, and clean shutdown.
 //!
+//! Since the `net` subsystem, the topology is *service-shaped*:
+//! [`run_coordinated`] delegates to
+//! [`crate::net::serve::run_coordinated_service`], which runs the MBS on
+//! the caller's thread and one SBS+MUs cell thread per cluster
+//! ([`crate::net::worker::run_cell`]), every SBS↔MBS hop crossing a framed
+//! loopback transport — the exact codec `hfl serve`/`hfl worker` ship over
+//! TCP. Only the MU actor lives here: MU↔SBS traffic stays on in-process
+//! channels on both deployment shapes.
+//!
 //! Synchronization protocol (no explicit barriers; channels carry it):
 //!
 //! 1. every MU computes a gradient at its replica and uploads it;
@@ -18,16 +27,15 @@
 //! 3. MUs apply exactly the expected number of deltas (they know H), then
 //!    start the next round.
 
-use super::compute::{ComputeHandle, ComputeService};
-use super::messages::{MbsToSbs, MuToSbs, SbsControl, SbsToMbs, SbsToMu};
+use super::compute::ComputeHandle;
+use super::messages::{MuToSbs, SbsToMu};
 use super::metrics::{LinkKind, MetricEvent, MetricsLog, MetricsSink};
 use crate::config::SparsityConfig;
-use crate::fl::lr_schedule::LrSchedule;
 use crate::fl::oracle::{EvalMetrics, GradOracle};
-use crate::sparse::merge::{self, AggPolicy, DenseShadow, MergeScratch};
-use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
-use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::sparse::merge::AggPolicy;
+use crate::sparse::{DgcCompressor, SparseVec};
+use anyhow::Result;
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 /// Options for a coordinated run (mirrors [`crate::fl::TrainOptions`]).
@@ -86,6 +94,22 @@ impl From<&crate::fl::TrainOptions> for CoordinatorOptions {
     }
 }
 
+/// The per-link sparsification levels `(φ_mu_ul, φ_sbs_dl, φ_sbs_ul,
+/// φ_mbs_dl)` in effect — all zeros when sparsity is disabled. Shared by
+/// the MBS, the cells and replay so the selection logic cannot drift.
+pub(crate) fn effective_phis(opts: &CoordinatorOptions) -> (f64, f64, f64, f64) {
+    if opts.sparsity.enabled {
+        (
+            opts.sparsity.phi_mu_ul,
+            opts.sparsity.phi_sbs_dl,
+            opts.sparsity.phi_sbs_ul,
+            opts.sparsity.phi_mbs_dl,
+        )
+    } else {
+        (0.0, 0.0, 0.0, 0.0)
+    }
+}
+
 /// Result of a coordinated run.
 #[derive(Clone, Debug)]
 pub struct CoordinatorRun {
@@ -103,443 +127,42 @@ pub struct CoordinatorRun {
 
 /// Run hierarchical FL on the actor topology. `factory` constructs the
 /// gradient oracle inside the compute thread (PJRT handles are !Send).
+///
+/// Delegates to the loopback-transport service
+/// ([`crate::net::serve::run_coordinated_service`]) with logging and live
+/// metrics off — so every in-process run, test, and golden trace exercises
+/// the full `net` frame/wire codec.
 pub fn run_coordinated<F, O>(factory: F, opts: &CoordinatorOptions) -> Result<CoordinatorRun>
 where
     F: FnOnce() -> O + Send + 'static,
     O: GradOracle + 'static,
 {
-    let svc = ComputeService::spawn(factory);
-    let compute = svc.handle();
-    let (dim, k_total, init, _ipe) = compute.meta();
-    let n = opts.n_clusters;
-    if n == 0 || k_total % n != 0 {
-        return Err(anyhow!(
-            "workers ({k_total}) must divide evenly into clusters ({n})"
-        ));
-    }
-    let per_cluster = k_total / n;
-
-    let (phi_ul, phi_sdl, phi_sul, phi_mdl) = if opts.sparsity.enabled {
-        (
-            opts.sparsity.phi_mu_ul,
-            opts.sparsity.phi_sbs_dl,
-            opts.sparsity.phi_sbs_ul,
-            opts.sparsity.phi_mbs_dl,
-        )
-    } else {
-        (0.0, 0.0, 0.0, 0.0)
-    };
-    let (dl_phi, dl_beta) = if n == 1 {
-        (phi_mdl, opts.sparsity.beta_m as f32)
-    } else {
-        (phi_sdl, opts.sparsity.beta_s as f32)
-    };
-
-    let (metric_tx, metric_rx) = channel::<MetricEvent>();
-    let init = Arc::new(init);
-
-    // --- Spawn SBS actors, each spawning its MU actors -------------------
-    let mut sbs_txs: Vec<Sender<SbsControl>> = Vec::with_capacity(n);
-    let (mbs_tx, mbs_rx) = channel::<SbsToMbs>();
-    let mut sbs_joins = Vec::with_capacity(n);
-    let mbs_metrics = MetricsSink::new(metric_tx.clone());
-    for c in 0..n {
-        let (sbs_tx, sbs_rx) = channel::<SbsControl>();
-        sbs_txs.push(sbs_tx.clone());
-        let ctx = SbsContext {
-            cluster: c,
-            per_cluster,
-            dim,
-            iters: opts.iters,
-            h_period: opts.h_period,
-            n_clusters: n,
-            schedule: LrSchedule::new(
-                opts.peak_lr,
-                opts.warmup_iters,
-                opts.iters,
-                opts.milestones,
-            ),
-            dl_phi,
-            dl_beta,
-            ul_phi: phi_sul,
-            ul_beta: opts.sparsity.beta_s as f32,
-            momentum: opts.momentum,
-            weight_decay: opts.weight_decay,
-            phi_ul,
-            agg: opts.agg,
-            init: init.clone(),
-            compute: compute.clone(),
-            metrics: MetricsSink::new(metric_tx.clone()),
-            mbs_tx: mbs_tx.clone(),
-            self_tx: sbs_tx,
-        };
-        sbs_joins.push(
-            std::thread::Builder::new()
-                .name(format!("hfl-sbs-{c}"))
-                .spawn(move || sbs_actor(ctx, sbs_rx))
-                .expect("spawn sbs"),
-        );
-    }
-    drop(mbs_tx);
-    drop(metric_tx);
-
-    // --- MBS (leader) loop ------------------------------------------------
-    // Process sync rounds as they arrive; finish when every cluster reports
-    // Done (this also handles iters % H != 0 and the flat-FL no-sync case).
-    let mut w_global: Vec<f32> = (*init).clone();
-    let mut mbs_enc = DiscountedError::new(dim, phi_mdl, opts.sparsity.beta_m as f32);
-    let mut agg = vec![0.0f32; dim];
-    // Density-adaptive sync aggregation (reference baseline +0.0: the
-    // accumulator is zeroed, never scaled).
-    let mut mbs_shadow = DenseShadow::new();
-    let mut mbs_merged = SparseVec::empty(dim);
-    let mut mbs_scratch = MergeScratch::default();
-    let mut sync_evals = Vec::new();
-    let mut done = 0usize;
-    let mut pending: Vec<Option<SparseVec>> = (0..n).map(|_| None).collect();
-    let mut pending_count = 0usize;
-    let mut sync_index = 0usize;
-    while done < n {
-        let msg = mbs_rx
-            .recv()
-            .map_err(|_| anyhow!("SBS actors died (sync {sync_index})"))?;
-        match msg {
-            SbsToMbs::Done { .. } => done += 1,
-            SbsToMbs::Sync(m) => {
-                assert!(pending[m.cluster].is_none(), "double sync from cluster");
-                pending[m.cluster] = Some(m.delta);
-                pending_count += 1;
-                if pending_count == n {
-                    // Aggregate in cluster order (bit-identical to the
-                    // engine), through the density-adaptive dispatch: the
-                    // k-way merge folds each coordinate in the same
-                    // cluster order as the dense scatter.
-                    let deltas: Vec<SparseVec> =
-                        pending.iter_mut().map(|d| d.take().unwrap()).collect();
-                    let scale = 1.0 / n as f32;
-                    let parts: Vec<(&SparseVec, f32)> =
-                        deltas.iter().map(|m| (m, scale)).collect();
-                    merge::aggregate_adaptive(
-                        &opts.agg,
-                        &parts,
-                        dim,
-                        None,
-                        &mut agg,
-                        &mut mbs_merged,
-                        &mut mbs_scratch,
-                        &mut mbs_shadow,
-                    );
-                    pending_count = 0;
-                    let msg = mbs_enc.compress(&agg);
-                    mbs_metrics.emit(MetricEvent {
-                        iter: (sync_index + 1) * opts.h_period - 1,
-                        cluster: usize::MAX,
-                        link: LinkKind::MbsDl,
-                        bits: msg.wire_bits(32),
-                        loss: f64::NAN,
-                    });
-                    msg.add_into(&mut w_global, 1.0);
-                    for tx in &sbs_txs {
-                        tx.send(SbsControl::GlobalDelta(msg.clone()))
-                            .map_err(|_| anyhow!("SBS inbox closed"))?;
-                    }
-                    sync_index += 1;
-                    if opts.eval_every_syncs > 0 && sync_index % opts.eval_every_syncs == 0 {
-                        let m = compute.eval(Arc::new(w_global.clone()));
-                        sync_evals.push((sync_index * opts.h_period, m));
-                    }
-                }
-            }
-        }
-    }
-    drop(mbs_metrics);
-
-    // --- Shutdown: collect final cluster models ---------------------------
-    for tx in &sbs_txs {
-        let _ = tx.send(SbsControl::Stop);
-    }
-    let mut final_params = vec![0.0f32; dim];
-    let mut train_loss_acc: Vec<(usize, f64, usize)> = Vec::new();
-    for j in sbs_joins {
-        let outcome = j.join().expect("sbs panicked");
-        for (i, v) in outcome.final_model.iter().enumerate() {
-            final_params[i] += v / n as f32;
-        }
-        for (it, loss) in outcome.iter_losses {
-            match train_loss_acc.iter_mut().find(|(i, _, _)| *i == it) {
-                Some((_, sum, cnt)) => {
-                    *sum += loss;
-                    *cnt += 1;
-                }
-                None => train_loss_acc.push((it, loss, 1)),
-            }
-        }
-    }
-    train_loss_acc.sort_by_key(|(i, _, _)| *i);
-    let train_loss: Vec<(usize, f64)> = train_loss_acc
-        .into_iter()
-        .map(|(i, s, c)| (i, s / c as f64))
-        .collect();
-
-    let final_eval = compute.eval(Arc::new(final_params.clone()));
-    svc.shutdown();
-
-    let mut metrics = MetricsLog::default();
-    while let Ok(ev) = metric_rx.recv() {
-        metrics.push(ev);
-    }
-
-    Ok(CoordinatorRun {
-        final_params,
-        final_eval,
-        sync_evals,
-        metrics,
-        train_loss,
-    })
-}
-
-struct SbsContext {
-    cluster: usize,
-    per_cluster: usize,
-    dim: usize,
-    iters: usize,
-    h_period: usize,
-    n_clusters: usize,
-    schedule: LrSchedule,
-    dl_phi: f64,
-    dl_beta: f32,
-    ul_phi: f64,
-    ul_beta: f32,
-    momentum: f32,
-    weight_decay: f32,
-    phi_ul: f64,
-    agg: AggPolicy,
-    init: Arc<Vec<f32>>,
-    compute: ComputeHandle,
-    metrics: MetricsSink,
-    mbs_tx: Sender<SbsToMbs>,
-    /// Sender into this SBS's own inbox — handed to its MU actors.
-    self_tx: Sender<SbsControl>,
-}
-
-struct SbsOutcome {
-    final_model: Vec<f32>,
-    iter_losses: Vec<(usize, f64)>,
-}
-
-/// SBS actor: spawns its MU threads, runs the intra-cluster rounds, talks
-/// to the MBS at sync points, returns its final reference model.
-fn sbs_actor(ctx: SbsContext, inbox: Receiver<SbsControl>) -> SbsOutcome {
-    // Spawn MU actors.
-    let mut mu_txs: Vec<Sender<SbsToMu>> = Vec::with_capacity(ctx.per_cluster);
-    let mut mu_joins = Vec::with_capacity(ctx.per_cluster);
-    for slot in 0..ctx.per_cluster {
-        let (tx, rx) = channel::<SbsToMu>();
-        mu_txs.push(tx);
-        let mctx = MuContext {
-            cluster: ctx.cluster,
-            slot,
-            worker: ctx.cluster * ctx.per_cluster + slot,
-            dim: ctx.dim,
-            iters: ctx.iters,
-            h_period: ctx.h_period,
-            hierarchical: ctx.n_clusters > 1,
-            momentum: ctx.momentum,
-            weight_decay: ctx.weight_decay,
-            phi_ul: ctx.phi_ul,
-            init: ctx.init.clone(),
-            compute: ctx.compute.clone(),
-            metrics: ctx.metrics.clone(),
-        };
-        let to_sbs = ctx.self_tx.clone();
-        mu_joins.push(
-            std::thread::Builder::new()
-                .name(format!("hfl-mu-{}", mctx.worker))
-                .spawn(move || mu_actor(mctx, rx, to_sbs))
-                .expect("spawn mu"),
-        );
-    }
-
-    let mut w_tilde: Vec<f32> = (*ctx.init).clone();
-    let mut w_global: Vec<f32> = (*ctx.init).clone();
-    let mut dl_enc = DiscountedError::new(ctx.dim, ctx.dl_phi, ctx.dl_beta);
-    let mut ul_enc = DiscountedError::new(ctx.dim, ctx.ul_phi, ctx.ul_beta);
-    let mut agg = vec![0.0f32; ctx.dim];
-    // Density-adaptive round aggregation (reference baseline −0.0: the
-    // accumulator is zeroed, scattered into, then scaled by −lr).
-    let mut agg_shadow = DenseShadow::new();
-    let mut agg_merged = SparseVec::default();
-    let mut agg_scratch = MergeScratch::default();
-    let mut iter_losses = Vec::with_capacity(ctx.iters);
-    let mut period_loss = 0.0f64;
-    let mut period_count = 0usize;
-
-    'outer: for t in 0..ctx.iters {
-        let lr = ctx.schedule.at(t) as f32;
-        // Collect one gradient per slot.
-        let mut slots: Vec<Option<MuToSbs>> = (0..ctx.per_cluster).map(|_| None).collect();
-        let mut got = 0;
-        while got < ctx.per_cluster {
-            match inbox.recv() {
-                Ok(SbsControl::FromMu(m)) => {
-                    let slot = m.slot;
-                    assert!(slots[slot].is_none(), "duplicate slot {slot}");
-                    slots[slot] = Some(m);
-                    got += 1;
-                }
-                Ok(SbsControl::Stop) | Err(_) => break 'outer,
-                Ok(SbsControl::GlobalDelta(_)) => {
-                    unreachable!("global delta outside sync point")
-                }
-            }
-        }
-        // Aggregate in slot order → bit-identical to the engine; the
-        // sparse merge folds each coordinate in the same slot order as
-        // the dense scatter, so either path is exact.
-        let mut loss_sum = 0.0;
-        for m in slots.iter().flatten() {
-            loss_sum += m.loss;
-        }
-        let scale = 1.0 / ctx.per_cluster as f32;
-        let parts: Vec<(&SparseVec, f32)> =
-            slots.iter().flatten().map(|m| (&m.grad, scale)).collect();
-        merge::aggregate_adaptive(
-            &ctx.agg,
-            &parts,
-            ctx.dim,
-            Some(-lr),
-            &mut agg,
-            &mut agg_merged,
-            &mut agg_scratch,
-            &mut agg_shadow,
-        );
-        let mean_loss = loss_sum / ctx.per_cluster as f64;
-        iter_losses.push((t, mean_loss));
-        period_loss += mean_loss;
-        period_count += 1;
-
-        let dl_msg = dl_enc.compress(&agg);
-        ctx.metrics.emit(MetricEvent {
-            iter: t,
-            cluster: ctx.cluster,
-            link: LinkKind::SbsDl,
-            bits: dl_msg.wire_bits(32),
-            loss: f64::NAN,
-        });
-        dl_msg.add_into(&mut w_tilde, 1.0);
-        for tx in &mu_txs {
-            if tx
-                .send(SbsToMu::Update {
-                    iter: t,
-                    delta: dl_msg.clone(),
-                })
-                .is_err()
-            {
-                break 'outer;
-            }
-        }
-
-        // Global sync.
-        if ctx.n_clusters > 1 && (t + 1) % ctx.h_period == 0 {
-            let delta: Vec<f32> = (0..ctx.dim)
-                .map(|i| w_tilde[i] + dl_enc.error()[i] - w_global[i])
-                .collect();
-            let ul_msg = ul_enc.compress(&delta);
-            ctx.metrics.emit(MetricEvent {
-                iter: t,
-                cluster: ctx.cluster,
-                link: LinkKind::SbsUl,
-                bits: ul_msg.wire_bits(32),
-                loss: f64::NAN,
-            });
-            if ctx
-                .mbs_tx
-                .send(SbsToMbs::Sync(MbsToSbs {
-                    cluster: ctx.cluster,
-                    delta: ul_msg,
-                    mean_loss: period_loss / period_count.max(1) as f64,
-                }))
-                .is_err()
-            {
-                break 'outer;
-            }
-            period_loss = 0.0;
-            period_count = 0;
-            // Wait for the MBS's global delta.
-            let global = loop {
-                match inbox.recv() {
-                    Ok(SbsControl::GlobalDelta(d)) => break d,
-                    Ok(SbsControl::Stop) | Err(_) => break 'outer,
-                    Ok(SbsControl::FromMu(_)) => {
-                        unreachable!("MU message during sync wait")
-                    }
-                }
-            };
-            // (MbsDl bits are accounted once at the MBS — it is a broadcast.)
-            global.add_into(&mut w_global, 1.0);
-            // Pull the cluster reference toward the new global model.
-            let delta: Vec<f32> = (0..ctx.dim)
-                .map(|i| w_global[i] - w_tilde[i])
-                .collect();
-            let dl_msg = dl_enc.compress(&delta);
-            ctx.metrics.emit(MetricEvent {
-                iter: t,
-                cluster: ctx.cluster,
-                link: LinkKind::SbsDl,
-                bits: dl_msg.wire_bits(32),
-                loss: f64::NAN,
-            });
-            dl_msg.add_into(&mut w_tilde, 1.0);
-            for tx in &mu_txs {
-                if tx
-                    .send(SbsToMu::Update {
-                        iter: t,
-                        delta: dl_msg.clone(),
-                    })
-                    .is_err()
-                {
-                    break 'outer;
-                }
-            }
-        }
-    }
-
-    let _ = ctx.mbs_tx.send(SbsToMbs::Done {
-        cluster: ctx.cluster,
-    });
-    for tx in &mu_txs {
-        let _ = tx.send(SbsToMu::Stop);
-    }
-    for j in mu_joins {
-        let _ = j.join();
-    }
-    SbsOutcome {
-        final_model: w_tilde,
-        iter_losses,
-    }
+    crate::net::serve::run_coordinated_service(factory, opts, None, None)
 }
 
 // --- MU actor ---------------------------------------------------------------
 
-struct MuContext {
-    cluster: usize,
-    slot: usize,
-    worker: usize,
-    dim: usize,
-    iters: usize,
-    h_period: usize,
-    hierarchical: bool,
-    momentum: f32,
-    weight_decay: f32,
-    phi_ul: f64,
-    init: Arc<Vec<f32>>,
-    compute: ComputeHandle,
-    metrics: MetricsSink,
+pub(crate) struct MuContext {
+    pub(crate) cluster: usize,
+    pub(crate) slot: usize,
+    pub(crate) worker: usize,
+    pub(crate) dim: usize,
+    pub(crate) iters: usize,
+    pub(crate) h_period: usize,
+    pub(crate) hierarchical: bool,
+    pub(crate) momentum: f32,
+    pub(crate) weight_decay: f32,
+    pub(crate) phi_ul: f64,
+    pub(crate) init: Arc<Vec<f32>>,
+    pub(crate) compute: ComputeHandle,
+    pub(crate) metrics: MetricsSink,
 }
 
 /// MU actor: per-iteration compute → DGC-compress → upload, then apply the
-/// deterministic number of SBS deltas (1, or 2 at sync iterations).
-fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<SbsControl>) {
+/// deterministic number of SBS deltas (1, or 2 at sync iterations). The
+/// metric event is emitted *before* the upload, so once the SBS holds a
+/// round's gradients the round's events are already drainable.
+pub(crate) fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<MuToSbs>) {
     let mut replica: Vec<f32> = (*ctx.init).clone();
     let mut dgc = DgcCompressor::new(ctx.dim, ctx.momentum, ctx.phi_ul);
     let mut msg = SparseVec::empty(ctx.dim);
@@ -560,12 +183,12 @@ fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<SbsControl>
             loss,
         });
         if to_sbs
-            .send(SbsControl::FromMu(MuToSbs {
+            .send(MuToSbs {
                 slot: ctx.slot,
                 worker: ctx.worker,
                 loss,
                 grad: msg.clone(),
-            }))
+            })
             .is_err()
         {
             return;

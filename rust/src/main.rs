@@ -26,7 +26,32 @@
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
 //!                                  (mobility × straggler × deadline axes)
+//! hfl serve     [--listen A] [--standalone] [--metrics-addr A]
+//!               [--session-log P] [--dim N] [--iters N] [--phi F]
+//!               [--clusters N] [--mus N] [--h N] [--seed S]
+//!               [--agg-path auto|sparse|dense]
+//!               [--out results/] [--write-golden F] [--check-golden F]
+//!                                  MBS service: accept one TCP worker per
+//!                                  cluster (or run all cells in-process
+//!                                  with --standalone) and train
+//! hfl worker    [--connect A] [--cluster C] [--dim N] [--iters N]
+//!               [--phi F] [--clusters N] [--mus N] [--h N] [--seed S]
+//!               [--agg-path auto|sparse|dense]
+//!                                  one SBS+MUs cell against a serving MBS
+//! hfl replay    --session-log P [--out results/]
+//!               [--write-golden F] [--check-golden F]
+//!                                  rebuild a run bit-exactly from its
+//!                                  session log (no training)
 //! ```
+//!
+//! `hfl serve` / `hfl worker` split the coordinator across processes: the
+//! SBS↔MBS hops travel as framed `SparseWire` messages over TCP
+//! (`hfl::net`), and both sides exchange a scenario fingerprint at
+//! handshake so mismatched configs are refused before training starts.
+//! The scenario flags (`--dim --iters --phi --clusters --mus --h --seed`)
+//! must therefore match across all processes of one session. Results are
+//! bit-identical to the in-process run — the CI `multiprocess` job diffs
+//! the golden traces, then replays the session log and diffs again.
 //!
 //! `--pool-threads N` builds a dedicated persistent worker pool with `N`
 //! execution lanes for the whole command (`0`/default: the lazily created
@@ -49,12 +74,16 @@
 //! bit-identically to the uninterrupted run, at any thread count.
 //! `--checkpoint PATH` overrides the default `<dir>/<subcommand>` target.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use hfl::cli::Args;
 use hfl::config::Config;
-use hfl::coordinator::{run_coordinated, CoordinatorOptions};
+use hfl::coordinator::{run_coordinated, ComputeService, CoordinatorOptions};
 use hfl::data::SyntheticSpec;
 use hfl::fl::{run_hierarchical_checkpointed, TrainOptions};
+use hfl::net::{
+    accept_workers, handshake_worker, replay_session, run_cell, run_coordinated_service, run_mbs,
+    LiveMetrics, MetricsServer, NetScenario, SessionLog, TcpTransport,
+};
 use hfl::runtime::{ModelOracle, Runtime};
 use hfl::sim::experiments::{self, Scale};
 use hfl::sim::{fig3, fig4, fig5a, fig5b};
@@ -62,7 +91,9 @@ use hfl::sim::{result, run_matrix_checkpointed, EngineSelect, MatrixOptions, Sce
 use hfl::snapshot::CheckpointSpec;
 use hfl::topology::NetworkTopology;
 use hfl::util::logging;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     if let Err(e) = run() {
@@ -86,14 +117,17 @@ fn run() -> Result<()> {
         Some("table3") => cmd_table3(&args, &cfg),
         Some("matrix") => cmd_matrix(&args, &cfg),
         Some("des") => cmd_des(&args, &cfg),
+        Some("serve") => cmd_serve(&args, &cfg),
+        Some("worker") => cmd_worker(&args, &cfg),
+        Some("replay") => cmd_replay(&args, &cfg),
         Some(other) => {
             bail!(
-                "unknown subcommand `{other}` (try: config, topology, latency, train, table3, matrix, des)"
+                "unknown subcommand `{other}` (try: config, topology, latency, train, table3, matrix, des, serve, worker, replay)"
             )
         }
         None => {
             eprintln!(
-                "usage: hfl <config|topology|latency|train|table3|matrix|des> [options]\n\
+                "usage: hfl <config|topology|latency|train|table3|matrix|des|serve|worker|replay> [options]\n\
                  see rust/src/main.rs docs or README.md"
             );
             Ok(())
@@ -471,6 +505,154 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
         println!("{}{tl}", r.table_row());
     }
     write_grid_outputs(&results, &out, "des", write_golden, check_golden)
+}
+
+/// `hfl serve` — run the MBS side of a coordinator-as-a-service session.
+///
+/// Default mode binds `--listen` (or `[net] listen_addr`) and waits for
+/// one `hfl worker` per cluster; `--standalone` instead runs every cell
+/// in-process over loopback transports (same framed codec, no sockets).
+/// Both modes share the session log, the live `/metrics` endpoint and
+/// the grid-style result/golden outputs, and both are bit-identical to
+/// the in-process coordinator.
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let mut scenario = NetScenario::from_cli(args, cfg)?;
+    scenario.copts.agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    let listen = args.get_or("listen", &cfg.net.listen_addr);
+    let standalone = args.flag("standalone");
+    let metrics_addr = args.get_or("metrics-addr", &cfg.net.metrics_addr);
+    let session_log = args.get_or("session-log", &cfg.net.session_log);
+    let out = args.get_or("out", "results");
+    let write_golden = args.get("write-golden").map(str::to_string);
+    let check_golden = args.get("check-golden").map(str::to_string);
+    args.finish()?;
+
+    let fingerprint = scenario.fingerprint();
+    println!(
+        "serving scenario {} (fingerprint {fingerprint:016x}, {} clusters × {} MUs)",
+        scenario.name, scenario.n_clusters, scenario.mus_per_cluster
+    );
+
+    let live = Arc::new(LiveMetrics::new(scenario.n_clusters));
+    // Bound to a variable: dropping the server closes its listener thread.
+    let _metrics_server = if metrics_addr.is_empty() {
+        None
+    } else {
+        let srv = MetricsServer::spawn(&metrics_addr, Arc::clone(&live))?;
+        println!("live metrics at http://{}/metrics", srv.local_addr());
+        Some(srv)
+    };
+    let mut log = if session_log.is_empty() {
+        None
+    } else {
+        let l = SessionLog::create(Path::new(&session_log), &scenario.header())?;
+        println!("session log at {session_log}");
+        Some(l)
+    };
+
+    let t0 = std::time::Instant::now();
+    let run = if standalone {
+        let sc = scenario.clone();
+        run_coordinated_service(
+            move || sc.oracle(),
+            &scenario.copts,
+            log.as_mut(),
+            Some(live.as_ref()),
+        )?
+    } else {
+        let listener = std::net::TcpListener::bind(&listen)
+            .with_context(|| format!("binding MBS listener on {listen}"))?;
+        println!("listening on {}", listener.local_addr()?);
+        let links = accept_workers(&listener, fingerprint, scenario.n_clusters)?;
+        // The MBS needs init + eval but never trains: its own copy of the
+        // deterministic oracle matches every worker's bit-for-bit.
+        let sc = scenario.clone();
+        let svc = ComputeService::spawn(move || sc.oracle());
+        let compute = svc.handle();
+        let (dim, _k, init, _ipe) = compute.meta();
+        let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
+        let run = run_mbs(
+            links,
+            &scenario.copts,
+            dim,
+            &init,
+            &mut eval,
+            log.as_mut(),
+            Some(live.as_ref()),
+        );
+        svc.shutdown();
+        run?
+    };
+    println!(
+        "session {} finished in {:.2}s wall",
+        scenario.name,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let result = result::ScenarioResult::from_coordinated(scenario.meta(), 0.0, &run);
+    println!("{}", result.table_row());
+    write_grid_outputs(&[result], &out, "net", write_golden, check_golden)
+}
+
+/// `hfl worker` — run one SBS+MUs cell against a serving MBS.
+///
+/// The worker builds its own oracle from the same flags/config as the
+/// server; the fingerprint handshake refuses the session if any
+/// bit-relevant scalar diverges.
+fn cmd_worker(args: &Args, cfg: &Config) -> Result<()> {
+    let mut scenario = NetScenario::from_cli(args, cfg)?;
+    scenario.copts.agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    let connect = args.get_or("connect", &cfg.net.listen_addr);
+    let want = args.get_parsed::<usize>("cluster")?;
+    args.finish()?;
+
+    let fingerprint = scenario.fingerprint();
+    println!(
+        "worker for scenario {} (fingerprint {fingerprint:016x}) connecting to {connect}",
+        scenario.name
+    );
+    let mut transport = TcpTransport::connect_retry(&connect, Duration::from_secs(30))?;
+    let (cluster, n) = handshake_worker(&mut transport, fingerprint, want)?;
+    if n != scenario.n_clusters {
+        bail!(
+            "MBS serves {n} clusters but local config has {} — flags diverge",
+            scenario.n_clusters
+        );
+    }
+    println!("assigned cluster {cluster}/{n}");
+
+    let sc = scenario.clone();
+    let svc = ComputeService::spawn(move || sc.oracle());
+    let res = run_cell(svc.handle(), &scenario.copts, cluster, &mut transport);
+    svc.shutdown();
+    res?;
+    println!("cluster {cluster} done");
+    Ok(())
+}
+
+/// `hfl replay` — reconstruct a finished run from its session log alone.
+///
+/// No training happens: the logged Sync/GlobalDelta/Done messages are
+/// folded back into a `CoordinatorRun` whose golden trace is bit-exact
+/// against the live session's (the CI multiprocess job diffs them).
+fn cmd_replay(args: &Args, cfg: &Config) -> Result<()> {
+    let session_log = args.get_or("session-log", &cfg.net.session_log);
+    let out = args.get_or("out", "results");
+    let write_golden = args.get("write-golden").map(str::to_string);
+    let check_golden = args.get("check-golden").map(str::to_string);
+    args.finish()?;
+    if session_log.is_empty() {
+        bail!("--session-log PATH required (or set [net] session_log)");
+    }
+
+    let (header, run) = replay_session(Path::new(&session_log))?;
+    println!(
+        "replayed session {} ({} clusters, {} workers, {} iters, h={})",
+        header.name, header.n_clusters, header.workers, header.iters, header.h_period
+    );
+    let result = result::ScenarioResult::from_coordinated(header.meta(), 0.0, &run);
+    println!("{}", result.table_row());
+    write_grid_outputs(&[result], &out, "net", write_golden, check_golden)
 }
 
 /// Shared tail of the grid subcommands: CSV + JSON + golden outputs under

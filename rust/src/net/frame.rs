@@ -1,0 +1,164 @@
+//! Length-prefixed message framing for the coordinator transport.
+//!
+//! Every message on the wire (and every record in a session log) is one
+//! frame:
+//!
+//! ```text
+//! ┌──────────┬─────────┬───────┬────────────┬───────────┬──────────────┐
+//! │ magic    │ version │ tag   │ len        │ payload   │ checksum     │
+//! │ "HFLN"   │ u8 = 1  │ u8    │ u32 LE     │ len bytes │ u64 LE       │
+//! └──────────┴─────────┴───────┴────────────┴───────────┴──────────────┘
+//! ```
+//!
+//! The checksum is FNV-1a over `version ‖ tag ‖ len ‖ payload` (the same
+//! hash the golden traces and snapshots use), so a flipped bit anywhere
+//! after the magic is a named error. [`decode_frame`] is incremental:
+//! `Ok(None)` means "not enough bytes yet" — a TCP reader keeps appending,
+//! and a torn tail in a session log is tolerated exactly like the matrix
+//! run log's final line.
+
+use crate::sim::result::Fnv1a;
+use anyhow::{bail, Result};
+
+/// Leading magic of every frame.
+pub const MAGIC: [u8; 4] = *b"HFLN";
+/// Wire-format version; bump on any layout change.
+pub const VERSION: u8 = 1;
+/// Fixed bytes before the payload: magic + version + tag + len.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4;
+/// Trailing checksum bytes.
+pub const TRAILER_LEN: usize = 8;
+/// Refuse frames claiming more than this (256 MiB) — a corrupt length
+/// field must not drive an allocation.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+fn checksum(tag: u8, len: u32, payload: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.absorb([VERSION, tag]);
+    h.absorb(len.to_le_bytes());
+    h.absorb(payload.iter().copied());
+    h.finish()
+}
+
+/// Encode one frame.
+pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+    let len = payload.len() as u32;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(tag);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&checksum(tag, len, payload).to_le_bytes());
+    out
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// Returns `Ok(Some((tag, payload, consumed)))` on a complete, verified
+/// frame; `Ok(None)` when `buf` holds only a prefix (read more / torn
+/// tail); `Err` on bad magic, unknown version, an oversized length field,
+/// or a checksum mismatch.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(u8, Vec<u8>, usize)>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    if buf[..4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x}{:02x}{:02x}{:02x} (want \"HFLN\")",
+            buf[0],
+            buf[1],
+            buf[2],
+            buf[3]
+        );
+    }
+    if buf[4] != VERSION {
+        bail!("unsupported frame version {} (want {VERSION})", buf[4]);
+    }
+    let tag = buf[5];
+    let len = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("frame length {len} exceeds {MAX_PAYLOAD}-byte cap");
+    }
+    let total = HEADER_LEN + len + TRAILER_LEN;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    let got = u64::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+    let want = checksum(tag, len as u32, payload);
+    if got != want {
+        bail!("frame checksum mismatch: stored {got:016x}, computed {want:016x} (tag {tag}, len {len})");
+    }
+    Ok(Some((tag, payload.to_vec(), total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let frame = encode_frame(4, b"hello delta");
+        let (tag, payload, consumed) = decode_frame(&frame).unwrap().unwrap();
+        assert_eq!(tag, 4);
+        assert_eq!(payload, b"hello delta");
+        assert_eq!(consumed, frame.len());
+        // Empty payloads frame fine too.
+        let empty = encode_frame(1, b"");
+        let (tag, payload, _) = decode_frame(&empty).unwrap().unwrap();
+        assert_eq!((tag, payload.len()), (1, 0));
+    }
+
+    #[test]
+    fn incremental_prefixes_are_incomplete_not_errors() {
+        let frame = encode_frame(2, b"partial");
+        for cut in 0..frame.len() {
+            assert!(
+                decode_frame(&frame[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes should be incomplete"
+            );
+        }
+        // Trailing garbage after a complete frame is the next frame's
+        // problem: consumed points past this one only.
+        let mut two = frame.clone();
+        two.extend_from_slice(&frame);
+        let (_, _, consumed) = decode_frame(&two).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+        assert!(decode_frame(&two[consumed..]).unwrap().is_some());
+    }
+
+    #[test]
+    fn bad_magic_is_named_error() {
+        let mut frame = encode_frame(3, b"x");
+        frame[0] = b'X';
+        let err = decode_frame(&frame).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn bad_version_is_named_error() {
+        let mut frame = encode_frame(3, b"x");
+        frame[4] = 99;
+        let err = decode_frame(&frame).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn checksum_flip_is_named_error() {
+        let mut frame = encode_frame(3, b"checksummed");
+        let mid = HEADER_LEN + 3;
+        frame[mid] ^= 0x40;
+        let err = decode_frame(&frame).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_is_named_error() {
+        let mut frame = encode_frame(3, b"x");
+        frame[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&frame).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+}

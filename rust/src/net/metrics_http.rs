@@ -1,0 +1,255 @@
+//! Live metrics for a serving MBS: a shared counter block updated by
+//! `run_mbs` and a hand-rolled HTTP/1.1 endpoint (`GET /metrics`) that
+//! serves it as JSON. No framework, no new dependencies — one listener
+//! thread, one short-lived connection per scrape.
+//!
+//! The endpoint is observability only: it reads the same
+//! [`MetricEvent`] stream that builds the golden-traced `MetricsLog`,
+//! but nothing here feeds back into the run (wall-clock straggler
+//! timing included), so serving metrics cannot perturb bit-exactness.
+
+use crate::coordinator::{LinkKind, MetricEvent};
+use crate::util::json::{Json, ObjBuilder};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct LiveStats {
+    n_clusters: usize,
+    sync_rounds: u64,
+    clusters_done: usize,
+    n_events: u64,
+    mu_ul_bits: f64,
+    sbs_dl_bits: f64,
+    sbs_ul_bits: f64,
+    mbs_dl_bits: f64,
+    mu_msgs: u64,
+    /// Mean training loss reported at the latest sync round (NaN before
+    /// the first).
+    last_loss: f64,
+    straggler_waits: u64,
+    finished: bool,
+}
+
+/// Shared live view of a running session (MBS side).
+pub struct LiveMetrics {
+    inner: Mutex<LiveStats>,
+}
+
+impl LiveMetrics {
+    pub fn new(n_clusters: usize) -> Self {
+        Self {
+            inner: Mutex::new(LiveStats {
+                n_clusters,
+                last_loss: f64::NAN,
+                ..LiveStats::default()
+            }),
+        }
+    }
+
+    /// Fold a batch of per-link events (piggybacked on `Sync`/`Done`, or
+    /// the MBS's own broadcast event).
+    pub fn note_events(&self, events: &[MetricEvent]) {
+        let mut s = self.inner.lock().unwrap();
+        for e in events {
+            s.n_events += 1;
+            match e.link {
+                LinkKind::MuUl => {
+                    s.mu_ul_bits += e.bits;
+                    s.mu_msgs += 1;
+                }
+                LinkKind::SbsDl => s.sbs_dl_bits += e.bits,
+                LinkKind::SbsUl => s.sbs_ul_bits += e.bits,
+                LinkKind::MbsDl => s.mbs_dl_bits += e.bits,
+            }
+        }
+    }
+
+    /// A sync round completed with this cross-cluster mean training loss.
+    pub fn note_sync_round(&self, mean_loss: f64) {
+        let mut s = self.inner.lock().unwrap();
+        s.sync_rounds += 1;
+        s.last_loss = mean_loss;
+    }
+
+    /// The MBS waited noticeably long on one cluster's message.
+    pub fn note_straggler(&self) {
+        self.inner.lock().unwrap().straggler_waits += 1;
+    }
+
+    /// One cluster reported `Done`.
+    pub fn note_done(&self) {
+        self.inner.lock().unwrap().clusters_done += 1;
+    }
+
+    /// The run completed.
+    pub fn finish(&self) {
+        self.inner.lock().unwrap().finished = true;
+    }
+
+    /// Current snapshot as the `/metrics` JSON document.
+    pub fn to_json(&self) -> Json {
+        let s = self.inner.lock().unwrap();
+        let b = ObjBuilder::new()
+            .num("n_clusters", s.n_clusters as f64)
+            .num("sync_rounds", s.sync_rounds as f64)
+            .num("clusters_done", s.clusters_done as f64)
+            .num("n_events", s.n_events as f64)
+            .num("mu_ul_bits", s.mu_ul_bits)
+            .num("sbs_dl_bits", s.sbs_dl_bits)
+            .num("sbs_ul_bits", s.sbs_ul_bits)
+            .num("mbs_dl_bits", s.mbs_dl_bits)
+            .num("mu_msgs", s.mu_msgs as f64)
+            .num("straggler_waits", s.straggler_waits as f64)
+            .bool("finished", s.finished);
+        let b = if s.last_loss.is_finite() {
+            b.num("last_loss", s.last_loss)
+        } else {
+            b.val("last_loss", Json::Null)
+        };
+        b.build()
+    }
+}
+
+/// The `/metrics` HTTP listener. Dropping it stops the thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks a free port) and serve `live` until drop.
+    pub fn spawn(addr: &str, live: Arc<LiveMetrics>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let local = listener.local_addr().context("metrics local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("hfl-metrics-http".into())
+            .spawn(move || serve_loop(listener, live, thread_stop))
+            .context("spawning metrics thread")?;
+        Ok(Self {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, live: Arc<LiveMetrics>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // A failed scrape never disturbs the run — drop and keep serving.
+        if let Ok(mut stream) = conn {
+            let _ = handle(&mut stream, &live);
+        }
+    }
+}
+
+fn handle(stream: &mut TcpStream, live: &LiveMetrics) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut req = Vec::new();
+    let mut chunk = [0u8; 1024];
+    // Read until the end of the request head (we ignore any body).
+    while !req.windows(4).any(|w| w == b"\r\n\r\n") && req.len() < 16 * 1024 {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&chunk[..n]);
+    }
+    let head = String::from_utf8_lossy(&req);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", "{\"error\":\"GET only\"}".to_string())
+    } else if path == "/metrics" {
+        ("200 OK", live.to_json().to_string_compact())
+    } else {
+        ("404 Not Found", "{\"error\":\"try /metrics\"}".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_json_and_404() {
+        let live = Arc::new(LiveMetrics::new(2));
+        live.note_events(&[MetricEvent {
+            iter: 0,
+            cluster: 0,
+            link: LinkKind::MuUl,
+            bits: 128.0,
+            loss: 0.5,
+        }]);
+        live.note_sync_round(0.25);
+        live.note_done();
+        let server = MetricsServer::spawn("127.0.0.1:0", live.clone()).unwrap();
+        let addr = server.local_addr();
+
+        let ok = scrape(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200"), "{ok}");
+        let body = ok.split("\r\n\r\n").nth(1).unwrap();
+        let j = crate::util::json::parse(body).unwrap();
+        assert_eq!(j.get("n_clusters").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("mu_msgs").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("clusters_done").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("last_loss").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(j.get("mu_ul_bits").and_then(Json::as_f64), Some(128.0));
+
+        let missing = scrape(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        let wrong = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(wrong.starts_with("HTTP/1.1 405"), "{wrong}");
+        drop(server); // joins the listener thread
+    }
+
+    #[test]
+    fn last_loss_is_null_before_first_sync() {
+        let live = LiveMetrics::new(1);
+        let j = live.to_json();
+        assert!(matches!(j.get("last_loss"), Some(Json::Null)));
+        live.finish();
+        assert!(matches!(live.to_json().get("finished"), Some(Json::Bool(true))));
+    }
+}

@@ -1,0 +1,50 @@
+//! Coordinator-as-a-service: the SBS↔MBS tier of the hierarchy over a
+//! real message transport.
+//!
+//! ```text
+//!            hfl worker ──┐  framed SparseWire       ┌── hfl serve
+//!   MU ⇄ SBS (in-process) ├── Sync / GlobalDelta ────┤  MBS + session log
+//!            hfl worker ──┘  over TCP or loopback    └── /metrics endpoint
+//! ```
+//!
+//! Layering (each module one concern):
+//!
+//! - [`frame`] — length-prefixed, checksummed byte framing (`HFLN` magic).
+//! - [`wire`] — [`wire::WireMsg`]: the session's message vocabulary.
+//!   Control messages (`Hello`/`Welcome`/`Refuse`) travel as exact JSON;
+//!   data-plane deltas as the `SparseWire` delta-packed codec, asserted
+//!   at the boundary to never exceed the fixed-width `payload_bits`
+//!   pricing the latency model charges.
+//! - [`transport`] — [`transport::Transport`] over loopback channels or
+//!   TCP. `coordinator::run_coordinated` runs every cluster over
+//!   loopback, so the whole codec path is proven bit-exact against the
+//!   in-process golden traces on every run.
+//! - [`serve`] / [`worker`] — the MBS barrier-round loop and the SBS+MUs
+//!   cell behind `hfl serve` / `hfl worker`; a config-fingerprint
+//!   handshake refuses mismatched peers before any training happens.
+//! - [`session`] / [`replay`] — fsynced append-only message log, folded
+//!   back into a bit-identical `CoordinatorRun` by `hfl replay` without
+//!   re-running any training.
+//! - [`metrics_http`] — live `GET /metrics` JSON endpoint
+//!   (`--metrics-addr`), observability-only.
+//! - [`scenario`] — the shared scenario both processes construct; its
+//!   fingerprint is what the handshake compares.
+
+pub mod frame;
+pub mod metrics_http;
+pub mod replay;
+pub mod scenario;
+pub mod serve;
+pub mod session;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use metrics_http::{LiveMetrics, MetricsServer};
+pub use replay::replay_session;
+pub use scenario::NetScenario;
+pub use serve::{accept_workers, run_coordinated_service, run_mbs, ClusterLink};
+pub use session::{read_session, Direction, SessionHeader, SessionLog, SessionRecord};
+pub use transport::{LoopbackTransport, TcpTransport, Transport};
+pub use wire::WireMsg;
+pub use worker::{handshake_worker, run_cell};

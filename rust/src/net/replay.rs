@@ -1,0 +1,220 @@
+//! Deterministic replay: rebuild a full [`CoordinatorRun`] — and hence
+//! its `GoldenTrace` — from a session log alone, bit-exactly.
+//!
+//! Replay is a *fold over logged messages*, not a re-execution: every
+//! golden-traced quantity is already in the log. Final parameters fold
+//! from the `Done` records in cluster order with the same
+//! `+= v / n` expression as the live MBS; the training-loss curve merges
+//! the logged per-iteration losses through the same helpers; per-link
+//! bits come from the events piggybacked on `Sync`/`Done`, with the
+//! `MbsDl` broadcast events re-derived from the logged `GlobalDelta`
+//! payloads exactly as the live MBS prices them. Held-out evaluation is
+//! the one thing a log cannot contain (it needs the oracle), so
+//! `final_eval`/`sync_evals` are empty defaults — neither enters the
+//! golden trace.
+
+use super::serve::{finish_losses, fold_final_model, merge_losses};
+use super::session::{read_session, Direction, SessionHeader, BROADCAST};
+use super::wire::WireMsg;
+use crate::coordinator::{CoordinatorRun, LinkKind, MetricEvent, MetricsLog};
+use crate::fl::oracle::EvalMetrics;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Fold a session log back into the run it recorded.
+pub fn replay_session(path: &Path) -> Result<(SessionHeader, CoordinatorRun)> {
+    let (header, records) = read_session(path)?;
+    let n = header.n_clusters;
+    if n == 0 {
+        bail!("session header claims 0 clusters");
+    }
+    let mut metrics = MetricsLog::default();
+    let mut final_params = vec![0.0f32; header.dim];
+    let mut loss_acc: Vec<(usize, f64, usize)> = Vec::new();
+    let mut done = vec![false; n];
+    let mut next_sync = 0usize;
+
+    for (i, rec) in records.iter().enumerate() {
+        let at = || format!("session record {i}");
+        match (&rec.dir, &rec.msg) {
+            (Direction::Rx, WireMsg::Sync { cluster, events, .. }) => {
+                if *cluster as u32 != rec.cluster {
+                    bail!("{}: Sync from cluster {cluster} logged under {}", at(), rec.cluster);
+                }
+                for ev in events {
+                    metrics.push(*ev);
+                }
+            }
+            (Direction::Tx, WireMsg::GlobalDelta { sync_index, delta }) => {
+                if rec.cluster != BROADCAST {
+                    bail!("{}: GlobalDelta not logged as a broadcast", at());
+                }
+                if *sync_index != next_sync {
+                    bail!(
+                        "{}: broadcast for sync {sync_index}, expected {next_sync} (log out of order?)",
+                        at()
+                    );
+                }
+                next_sync += 1;
+                // Re-derive the MbsDl accounting event exactly as the
+                // live MBS emitted it for this broadcast.
+                metrics.push(MetricEvent {
+                    iter: (sync_index + 1) * header.h_period - 1,
+                    cluster: usize::MAX,
+                    link: LinkKind::MbsDl,
+                    bits: delta.wire_bits(32),
+                    loss: f64::NAN,
+                });
+            }
+            (Direction::Rx, WireMsg::Done { cluster, final_model, iter_losses, events }) => {
+                if *cluster >= n {
+                    bail!("{}: Done from out-of-range cluster {cluster}", at());
+                }
+                if done[*cluster] {
+                    bail!("{}: duplicate Done from cluster {cluster}", at());
+                }
+                done[*cluster] = true;
+                for ev in events {
+                    metrics.push(*ev);
+                }
+                fold_final_model(&mut final_params, final_model, n)
+                    .with_context(|| format!("{}: folding cluster {cluster}", at()))?;
+                merge_losses(&mut loss_acc, iter_losses);
+            }
+            (dir, msg) => bail!("{}: unexpected {:?} {} in session log", at(), dir, msg.kind()),
+        }
+    }
+
+    if let Some(missing) = done.iter().position(|d| !d) {
+        bail!(
+            "cluster {missing} never reported Done — incomplete session log \
+             (the run may have crashed; {next_sync} sync rounds were recorded)"
+        );
+    }
+    Ok((
+        header,
+        CoordinatorRun {
+            final_params,
+            final_eval: EvalMetrics::default(),
+            sync_evals: Vec::new(),
+            metrics,
+            train_loss: finish_losses(loss_acc),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::session::SessionLog;
+    use crate::sparse::SparseVec;
+
+    fn header(n_clusters: usize) -> SessionHeader {
+        SessionHeader {
+            name: "replay-test".into(),
+            fingerprint: 7,
+            dim: 4,
+            n_clusters,
+            workers: 2 * n_clusters,
+            h_period: 2,
+            iters: 2,
+            sparse: false,
+        }
+    }
+
+    fn done(cluster: usize) -> WireMsg {
+        WireMsg::Done {
+            cluster,
+            final_model: vec![2.0, 4.0, 6.0, 8.0],
+            iter_losses: vec![(0, 1.0), (1, 0.5)],
+            events: vec![MetricEvent {
+                iter: 0,
+                cluster,
+                link: LinkKind::MuUl,
+                bits: 64.0,
+                loss: 1.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn replays_fold_of_done_records() {
+        let dir = std::env::temp_dir().join(format!("hfl-replay-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fold.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header(2)).unwrap();
+            log.append(
+                Direction::Tx,
+                BROADCAST,
+                &WireMsg::GlobalDelta {
+                    sync_index: 0,
+                    delta: SparseVec {
+                        dim: 4,
+                        indices: vec![1],
+                        values: vec![0.5],
+                    },
+                },
+            )
+            .unwrap();
+            log.append(Direction::Rx, 0, &done(0)).unwrap();
+            log.append(Direction::Rx, 1, &done(1)).unwrap();
+        }
+        let (h, run) = replay_session(&path).unwrap();
+        assert_eq!(h.n_clusters, 2);
+        // Two identical final models averaged over n=2 → the model itself.
+        assert_eq!(run.final_params, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(run.train_loss, vec![(0, 1.0), (1, 0.5)]);
+        // Two MuUl events plus one re-derived MbsDl broadcast event.
+        let bits = run.metrics.comm_bits();
+        assert_eq!(bits.n_mu_msgs, 2);
+        assert_eq!(bits.mu_ul, 128.0);
+        assert!(bits.mbs_dl > 0.0);
+        // MbsDl event sits at the sync boundary iteration (h_period 2).
+        assert!(run
+            .metrics
+            .events
+            .iter()
+            .any(|e| e.link == LinkKind::MbsDl && e.iter == 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_done_is_a_named_error() {
+        let dir = std::env::temp_dir().join(format!("hfl-replay-miss-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("missing.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header(2)).unwrap();
+            log.append(Direction::Rx, 0, &done(0)).unwrap();
+        }
+        let err = replay_session(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("cluster 1 never reported Done"),
+            "{err:#}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_order_broadcast_is_a_named_error() {
+        let dir = std::env::temp_dir().join(format!("hfl-replay-ooo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ooo.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header(1)).unwrap();
+            log.append(
+                Direction::Tx,
+                BROADCAST,
+                &WireMsg::GlobalDelta {
+                    sync_index: 3,
+                    delta: SparseVec::empty(4),
+                },
+            )
+            .unwrap();
+        }
+        let err = replay_session(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("expected 0"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

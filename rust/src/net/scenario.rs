@@ -1,0 +1,203 @@
+//! The scenario a `hfl serve`/`hfl worker` session trains: a quadratic
+//! oracle plus coordinator options, built identically on both sides of
+//! the wire from config + flags.
+//!
+//! Because server and workers construct their own oracles (the model
+//! never crosses the wire, only deltas), both sides MUST agree on every
+//! bit-relevant scalar. [`NetScenario::fingerprint`] hashes exactly those
+//! scalars; the handshake refuses a worker whose fingerprint differs —
+//! the same refuse-loudly discipline as snapshot restore. The
+//! aggregation policy is deliberately excluded: every `--agg-path` is
+//! bit-identical, so mixed policies across processes are legal.
+
+use super::session::SessionHeader;
+use crate::cli::Args;
+use crate::config::{Config, SparsityConfig};
+use crate::coordinator::CoordinatorOptions;
+use crate::fl::oracle::QuadraticOracle;
+use crate::sim::result::{fnv1a64, ScenarioMeta};
+use crate::snapshot::codec::ByteWriter;
+use anyhow::{bail, Result};
+
+/// One fully specified network-training scenario.
+#[derive(Clone, Debug)]
+pub struct NetScenario {
+    pub name: String,
+    pub dim: usize,
+    pub n_clusters: usize,
+    pub mus_per_cluster: usize,
+    pub iters: usize,
+    /// MU-uplink sparsity pin (`--phi`); `None` = dense.
+    pub phi: Option<f64>,
+    pub seed: u64,
+    pub copts: CoordinatorOptions,
+}
+
+impl NetScenario {
+    /// Build from the shared scenario flags (`--dim`, `--iters`, `--phi`)
+    /// on top of a loaded config (which already carries `--clusters`,
+    /// `--mus`, `--h` and `--seed`). Must parse identically for `serve`
+    /// and `worker` — the fingerprint only *detects* divergence.
+    pub fn from_cli(args: &Args, cfg: &Config) -> Result<Self> {
+        let dim = args.get_parsed_or("dim", 64usize)?;
+        let iters = args.get_parsed_or("iters", 24usize)?;
+        let phi = args.get_parsed::<f64>("phi")?;
+        if let Some(p) = phi {
+            // Same bound DgcKernel enforces — reject at the CLI boundary.
+            if !(0.0..1.0).contains(&p) {
+                bail!("--phi {p} outside [0,1) (DGC keeps at least one coordinate)");
+            }
+        }
+        if dim == 0 || iters == 0 {
+            bail!("--dim and --iters must be > 0");
+        }
+        let n_clusters = cfg.topology.n_clusters;
+        let mus_per_cluster = cfg.topology.mus_per_cluster;
+        let seed = cfg.training.seed;
+        let sparsity = match phi {
+            Some(p) => SparsityConfig {
+                enabled: true,
+                phi_mu_ul: p,
+                ..cfg.sparsity.clone()
+            },
+            None => SparsityConfig::dense(),
+        };
+        let copts = CoordinatorOptions {
+            iters,
+            peak_lr: 0.05,
+            warmup_iters: iters / 10,
+            milestones: (0.6, 0.85),
+            momentum: 0.9,
+            weight_decay: 0.0,
+            h_period: cfg.training.h_period,
+            n_clusters,
+            sparsity,
+            eval_every_syncs: 0,
+            agg: cfg.agg,
+        };
+        let sparse_tag = match phi {
+            Some(p) => format!("phi{p:.2}"),
+            None => "dense".into(),
+        };
+        Ok(Self {
+            name: format!(
+                "net-c{n_clusters}x{mus_per_cluster}-h{}-i{iters}-{sparse_tag}-d{dim}-s{seed}",
+                copts.h_period
+            ),
+            dim,
+            n_clusters,
+            mus_per_cluster,
+            iters,
+            phi,
+            seed,
+            copts,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_clusters * self.mus_per_cluster
+    }
+
+    /// Hash of every bit-relevant scalar — what the handshake compares.
+    pub fn fingerprint(&self) -> u64 {
+        let mut w = ByteWriter::new();
+        w.put_usize(self.dim);
+        w.put_usize(self.n_clusters);
+        w.put_usize(self.mus_per_cluster);
+        w.put_usize(self.iters);
+        w.put_usize(self.copts.h_period);
+        w.put_u64(self.seed);
+        w.put_f64(self.copts.peak_lr);
+        w.put_usize(self.copts.warmup_iters);
+        w.put_f64(self.copts.milestones.0);
+        w.put_f64(self.copts.milestones.1);
+        w.put_f32(self.copts.momentum);
+        w.put_f32(self.copts.weight_decay);
+        let s = &self.copts.sparsity;
+        w.put_bool(s.enabled);
+        w.put_f64(s.phi_mu_ul);
+        w.put_f64(s.phi_sbs_dl);
+        w.put_f64(s.phi_sbs_ul);
+        w.put_f64(s.phi_mbs_dl);
+        w.put_f64(s.beta_m);
+        w.put_f64(s.beta_s);
+        fnv1a64(w.into_bytes())
+    }
+
+    /// The deterministic oracle both sides construct (noiseless — required
+    /// for cross-process bit-equality).
+    pub fn oracle(&self) -> QuadraticOracle {
+        QuadraticOracle::new(self.dim, self.workers(), 0.0, self.seed)
+    }
+
+    /// Session-log header for this scenario.
+    pub fn header(&self) -> SessionHeader {
+        SessionHeader {
+            name: self.name.clone(),
+            fingerprint: self.fingerprint(),
+            dim: self.dim,
+            n_clusters: self.n_clusters,
+            workers: self.workers(),
+            h_period: self.copts.h_period,
+            iters: self.iters,
+            sparse: self.copts.sparsity.enabled,
+        }
+    }
+
+    /// Scenario identity for result/golden-trace construction.
+    pub fn meta(&self) -> ScenarioMeta {
+        self.header().meta()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(extra: &[&str]) -> Result<NetScenario> {
+        let mut argv = vec!["serve"];
+        argv.extend_from_slice(extra);
+        let args = Args::parse(argv)?;
+        let mut cfg = Config::default();
+        cfg.topology.n_clusters = 2;
+        cfg.topology.mus_per_cluster = 3;
+        NetScenario::from_cli(&args, &cfg)
+    }
+
+    #[test]
+    fn defaults_and_name_are_stable() {
+        let s = scenario(&[]).unwrap();
+        assert_eq!(s.dim, 64);
+        assert_eq!(s.iters, 24);
+        assert_eq!(s.workers(), 6);
+        assert!(!s.copts.sparsity.enabled);
+        assert_eq!(s.name, "net-c2x3-h2-i24-dense-d64-s1");
+        assert_eq!(s.meta().workers, 6);
+        assert_eq!(s.header().fingerprint, s.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_bit_relevant_scalars() {
+        let base = scenario(&[]).unwrap().fingerprint();
+        for flags in [
+            vec!["--dim", "65"],
+            vec!["--iters", "25"],
+            vec!["--phi", "0.9"],
+        ] {
+            let other = scenario(&flags).unwrap().fingerprint();
+            assert_ne!(base, other, "{flags:?} should change the fingerprint");
+        }
+        // Same flags → same fingerprint (both sides of the handshake).
+        assert_eq!(base, scenario(&[]).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn phi_pin_enables_sparsity_and_is_validated() {
+        let s = scenario(&["--phi", "0.9"]).unwrap();
+        assert!(s.copts.sparsity.enabled);
+        assert_eq!(s.copts.sparsity.phi_mu_ul, 0.9);
+        assert!(s.name.contains("phi0.90"));
+        assert!(scenario(&["--phi", "1.0"]).is_err());
+        assert!(scenario(&["--phi", "-0.1"]).is_err());
+    }
+}

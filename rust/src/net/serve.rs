@@ -1,0 +1,513 @@
+//! The MBS side of the service: accept workers, run the barrier-round
+//! sync protocol, fold the outcome into a [`CoordinatorRun`].
+//!
+//! The protocol is lockstep by construction: every cluster runs the same
+//! iteration count and H-period, so each sends the same number of `Sync`
+//! messages followed by one `Done`. The MBS therefore receives exactly
+//! one message per cluster per barrier round, reads them in cluster
+//! order, and aggregates in that order — the same cluster-ordered fold
+//! as the in-process engine, hence bit-identical results.
+//!
+//! `run_coordinated_service` wires every cluster over a loopback
+//! transport pair, which is how `coordinator::run_coordinated` (and so
+//! every existing golden trace) exercises the full frame/wire codec on
+//! each run.
+
+use super::metrics_http::LiveMetrics;
+use super::session::{Direction, SessionLog, BROADCAST};
+use super::transport::{LoopbackTransport, TcpTransport, Transport};
+use super::wire::WireMsg;
+use super::worker::run_cell;
+use crate::coordinator::{
+    ComputeService, CoordinatorOptions, CoordinatorRun, LinkKind, MetricEvent, MetricsLog,
+};
+use crate::fl::oracle::{EvalMetrics, GradOracle};
+use crate::sparse::merge::{self, DenseShadow, MergeScratch};
+use crate::sparse::{DiscountedError, SparseVec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Waiting longer than this on one cluster's message counts as a
+/// straggler wait on the live metrics endpoint (observability only —
+/// nothing here feeds back into the run).
+const STRAGGLER_THRESHOLD: Duration = Duration::from_secs(1);
+
+/// One connected worker cell, keyed by its assigned cluster.
+pub struct ClusterLink {
+    pub cluster: usize,
+    pub transport: Box<dyn Transport>,
+}
+
+/// MBS side of the session handshake. Checks the worker's scenario
+/// fingerprint against ours (the same refusal discipline as snapshot
+/// restore: refuse loudly rather than diverge silently) and assigns a
+/// cluster — the requested one if free, else the lowest free id.
+pub fn handshake_mbs(
+    transport: &mut dyn Transport,
+    fingerprint: u64,
+    taken: &mut [bool],
+) -> Result<usize> {
+    let n = taken.len();
+    let refuse = |t: &mut dyn Transport, reason: String| -> anyhow::Error {
+        let _ = t.send(&WireMsg::Refuse {
+            reason: reason.clone(),
+        });
+        anyhow!("{reason}")
+    };
+    let (fp, want) = match transport.recv().context("waiting for Hello")? {
+        WireMsg::Hello {
+            fingerprint,
+            cluster,
+        } => (fingerprint, cluster),
+        other => {
+            return Err(refuse(
+                transport,
+                format!("expected Hello, got {}", other.kind()),
+            ))
+        }
+    };
+    if fp != fingerprint {
+        return Err(refuse(
+            transport,
+            format!("scenario fingerprint mismatch: serving {fingerprint:016x}, worker has {fp:016x} (same flags/config on both sides?)"),
+        ));
+    }
+    let cluster = match want {
+        Some(c) if c >= n => {
+            return Err(refuse(
+                transport,
+                format!("cluster {c} out of range 0..{n}"),
+            ))
+        }
+        Some(c) if taken[c] => {
+            return Err(refuse(transport, format!("cluster {c} already connected")))
+        }
+        Some(c) => c,
+        None => match taken.iter().position(|t| !t) {
+            Some(c) => c,
+            None => {
+                return Err(refuse(
+                    transport,
+                    format!("all {n} clusters already connected"),
+                ))
+            }
+        },
+    };
+    taken[cluster] = true;
+    transport
+        .send(&WireMsg::Welcome {
+            cluster,
+            n_clusters: n,
+        })
+        .context("sending Welcome")?;
+    Ok(cluster)
+}
+
+/// Accept TCP workers until every cluster slot is filled. A connection
+/// that fails its handshake is reported and dropped; the listener keeps
+/// going — a mis-configured worker must not wedge the session.
+pub fn accept_workers(
+    listener: &TcpListener,
+    fingerprint: u64,
+    n_clusters: usize,
+) -> Result<Vec<ClusterLink>> {
+    let mut taken = vec![false; n_clusters];
+    let mut links: Vec<ClusterLink> = Vec::with_capacity(n_clusters);
+    while links.len() < n_clusters {
+        let (stream, peer) = listener.accept().context("accepting worker connection")?;
+        let mut transport = match TcpTransport::new(stream) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("rejecting {peer}: {e:#}");
+                continue;
+            }
+        };
+        match handshake_mbs(&mut transport, fingerprint, &mut taken) {
+            Ok(cluster) => {
+                eprintln!("worker {peer} joined as cluster {cluster}");
+                links.push(ClusterLink {
+                    cluster,
+                    transport: Box::new(transport),
+                });
+            }
+            Err(e) => eprintln!("refused {peer}: {e:#}"),
+        }
+    }
+    links.sort_by_key(|l| l.cluster);
+    Ok(links)
+}
+
+/// Fold one cluster's final model into the consensus average.
+pub(crate) fn fold_final_model(final_params: &mut [f32], model: &[f32], n: usize) -> Result<()> {
+    if model.len() != final_params.len() {
+        bail!(
+            "final model has {} parameters, expected {}",
+            model.len(),
+            final_params.len()
+        );
+    }
+    for (i, v) in model.iter().enumerate() {
+        final_params[i] += v / n as f32;
+    }
+    Ok(())
+}
+
+/// Merge one cluster's per-iteration losses into the cross-cluster
+/// accumulator (iter, sum, count).
+pub(crate) fn merge_losses(acc: &mut Vec<(usize, f64, usize)>, iter_losses: &[(usize, f64)]) {
+    for &(it, loss) in iter_losses {
+        match acc.iter_mut().find(|(i, _, _)| *i == it) {
+            Some((_, sum, cnt)) => {
+                *sum += loss;
+                *cnt += 1;
+            }
+            None => acc.push((it, loss, 1)),
+        }
+    }
+}
+
+/// Finish the loss accumulator into the run's (iter, mean loss) curve.
+pub(crate) fn finish_losses(mut acc: Vec<(usize, f64, usize)>) -> Vec<(usize, f64)> {
+    acc.sort_by_key(|(i, _, _)| *i);
+    acc.into_iter().map(|(i, s, c)| (i, s / c as f64)).collect()
+}
+
+/// Run the MBS over a set of connected cluster links.
+///
+/// `eval` maps parameters to held-out metrics — `run_coordinated` passes
+/// the shared compute service, the TCP server its own oracle. `log`
+/// records every data-plane message for `hfl replay`; `live` feeds the
+/// `/metrics` endpoint. Both are observability-only and do not perturb
+/// the arithmetic.
+pub fn run_mbs(
+    mut links: Vec<ClusterLink>,
+    opts: &CoordinatorOptions,
+    dim: usize,
+    init: &[f32],
+    eval: &mut dyn FnMut(&[f32]) -> EvalMetrics,
+    mut log: Option<&mut SessionLog>,
+    live: Option<&LiveMetrics>,
+) -> Result<CoordinatorRun> {
+    let n = opts.n_clusters;
+    links.sort_by_key(|l| l.cluster);
+    if links.len() != n || links.iter().enumerate().any(|(i, l)| l.cluster != i) {
+        bail!(
+            "expected one link per cluster 0..{n}, got [{}]",
+            links
+                .iter()
+                .map(|l| l.cluster.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+
+    let mut w_global: Vec<f32> = init.to_vec();
+    let (_phi_ul, _phi_sdl, _phi_sul, phi_mdl) = effective_phis(opts);
+    let mut mbs_enc = DiscountedError::new(dim, phi_mdl, opts.sparsity.beta_m as f32);
+    let mut agg = vec![0.0f32; dim];
+    // Density-adaptive sync aggregation (reference baseline +0.0: the
+    // accumulator is zeroed, never scaled).
+    let mut mbs_shadow = DenseShadow::new();
+    let mut mbs_merged = SparseVec::empty(dim);
+    let mut mbs_scratch = MergeScratch::default();
+    let mut metrics = MetricsLog::default();
+    let mut sync_evals = Vec::new();
+    let mut sync_index = 0usize;
+
+    // Barrier rounds: one message per cluster, read in cluster order.
+    // Lockstep makes this exhaustive — a cluster cannot pass sync k
+    // without the broadcast, which requires every cluster's sync k, so a
+    // round is either all-Sync or all-Done.
+    loop {
+        let mut round: Vec<WireMsg> = Vec::with_capacity(n);
+        for link in links.iter_mut() {
+            let t0 = Instant::now();
+            let msg = link.transport.recv().with_context(|| {
+                format!(
+                    "receiving from cluster {} ({}) at sync round {sync_index}",
+                    link.cluster,
+                    link.transport.peer()
+                )
+            })?;
+            if let Some(l) = live {
+                if t0.elapsed() > STRAGGLER_THRESHOLD {
+                    l.note_straggler();
+                }
+            }
+            let from = match &msg {
+                WireMsg::Sync { cluster, .. } | WireMsg::Done { cluster, .. } => *cluster,
+                other => bail!(
+                    "cluster {} sent {} during a sync round",
+                    link.cluster,
+                    other.kind()
+                ),
+            };
+            if from != link.cluster {
+                bail!(
+                    "link for cluster {} delivered a message from cluster {from}",
+                    link.cluster
+                );
+            }
+            if let Some(l) = log.as_deref_mut() {
+                l.append(Direction::Rx, link.cluster as u32, &msg)?;
+            }
+            round.push(msg);
+        }
+
+        if round.iter().all(|m| matches!(m, WireMsg::Done { .. })) {
+            // --- Shutdown: fold final cluster models (cluster order) ----
+            let mut final_params = vec![0.0f32; dim];
+            let mut loss_acc: Vec<(usize, f64, usize)> = Vec::new();
+            for msg in round {
+                let WireMsg::Done {
+                    cluster,
+                    final_model,
+                    iter_losses,
+                    events,
+                } = msg
+                else {
+                    unreachable!()
+                };
+                if let Some(l) = live {
+                    l.note_events(&events);
+                    l.note_done();
+                }
+                for ev in events {
+                    metrics.push(ev);
+                }
+                fold_final_model(&mut final_params, &final_model, n)
+                    .with_context(|| format!("folding Done from cluster {cluster}"))?;
+                merge_losses(&mut loss_acc, &iter_losses);
+            }
+            let final_eval = eval(&final_params);
+            if let Some(l) = live {
+                l.finish();
+            }
+            return Ok(CoordinatorRun {
+                final_params,
+                final_eval,
+                sync_evals,
+                metrics,
+                train_loss: finish_losses(loss_acc),
+            });
+        }
+        if !round.iter().all(|m| matches!(m, WireMsg::Sync { .. })) {
+            bail!("protocol violation at sync round {sync_index}: clusters disagree on Sync vs Done");
+        }
+
+        // --- All-Sync round: aggregate in cluster order -----------------
+        let mut deltas: Vec<SparseVec> = Vec::with_capacity(n);
+        let mut loss_total = 0.0f64;
+        for msg in round {
+            let WireMsg::Sync {
+                cluster,
+                mean_loss,
+                delta,
+                events,
+            } = msg
+            else {
+                unreachable!()
+            };
+            if delta.dim != dim {
+                bail!(
+                    "cluster {cluster} sync delta has dimension {}, expected {dim}",
+                    delta.dim
+                );
+            }
+            if let Some(l) = live {
+                l.note_events(&events);
+            }
+            for ev in events {
+                metrics.push(ev);
+            }
+            loss_total += mean_loss;
+            deltas.push(delta);
+        }
+        let scale = 1.0 / n as f32;
+        let parts: Vec<(&SparseVec, f32)> = deltas.iter().map(|m| (m, scale)).collect();
+        merge::aggregate_adaptive(
+            &opts.agg,
+            &parts,
+            dim,
+            None,
+            &mut agg,
+            &mut mbs_merged,
+            &mut mbs_scratch,
+            &mut mbs_shadow,
+        );
+        let msg = mbs_enc.compress(&agg);
+        let ev = MetricEvent {
+            iter: (sync_index + 1) * opts.h_period - 1,
+            cluster: usize::MAX,
+            link: LinkKind::MbsDl,
+            bits: msg.wire_bits(32),
+            loss: f64::NAN,
+        };
+        metrics.push(ev);
+        if let Some(l) = live {
+            l.note_events(&[ev]);
+            l.note_sync_round(loss_total / n as f64);
+        }
+        let broadcast = WireMsg::GlobalDelta {
+            sync_index,
+            delta: msg.clone(),
+        };
+        // One log record per broadcast — it is the same bytes to every
+        // cluster, and replay re-fans it out.
+        if let Some(l) = log.as_deref_mut() {
+            l.append(Direction::Tx, BROADCAST, &broadcast)?;
+        }
+        msg.add_into(&mut w_global, 1.0);
+        for link in links.iter_mut() {
+            link.transport.send(&broadcast).with_context(|| {
+                format!(
+                    "broadcasting sync {sync_index} to cluster {} ({})",
+                    link.cluster,
+                    link.transport.peer()
+                )
+            })?;
+        }
+        sync_index += 1;
+        if opts.eval_every_syncs > 0 && sync_index % opts.eval_every_syncs == 0 {
+            sync_evals.push((sync_index * opts.h_period, eval(&w_global)));
+        }
+    }
+}
+
+/// The per-link sparsification levels in effect (zeros when sparsity is
+/// disabled) — shared between MBS, cells and replay so the selection
+/// logic cannot drift.
+pub(crate) fn effective_phis(opts: &CoordinatorOptions) -> (f64, f64, f64, f64) {
+    crate::coordinator::run::effective_phis(opts)
+}
+
+/// Run the full coordinated topology in-process, every SBS↔MBS hop over
+/// a loopback transport: MBS on the caller's thread, one cell thread per
+/// cluster, one shared compute service. `coordinator::run_coordinated`
+/// delegates here — the framed codec is on the hot path of every
+/// existing test and golden trace.
+pub fn run_coordinated_service<F, O>(
+    factory: F,
+    opts: &CoordinatorOptions,
+    log: Option<&mut SessionLog>,
+    live: Option<&LiveMetrics>,
+) -> Result<CoordinatorRun>
+where
+    F: FnOnce() -> O + Send + 'static,
+    O: GradOracle + 'static,
+{
+    let svc = ComputeService::spawn(factory);
+    let compute = svc.handle();
+    let (dim, k_total, init, _ipe) = compute.meta();
+    let n = opts.n_clusters;
+    if n == 0 || k_total % n != 0 {
+        svc.shutdown();
+        bail!("workers ({k_total}) must divide evenly into clusters ({n})");
+    }
+
+    let mut links: Vec<ClusterLink> = Vec::with_capacity(n);
+    let mut cells = Vec::with_capacity(n);
+    for c in 0..n {
+        let (mbs_end, mut cell_end) = LoopbackTransport::pair();
+        links.push(ClusterLink {
+            cluster: c,
+            transport: Box::new(mbs_end),
+        });
+        let cell_opts = opts.clone();
+        let cell_compute = compute.clone();
+        cells.push(
+            std::thread::Builder::new()
+                .name(format!("hfl-cell-{c}"))
+                .spawn(move || run_cell(cell_compute, &cell_opts, c, &mut cell_end))
+                .with_context(|| format!("spawning cell thread for cluster {c}"))?,
+        );
+    }
+
+    let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
+    let run = run_mbs(links, opts, dim, &init, &mut eval, log, live);
+    // `run_mbs` consumed (and dropped) the links, so a cell blocked on a
+    // dead MBS sees a transport error rather than a hang. Prefer a cell's
+    // error — it is usually the root cause of an MBS-side failure.
+    let mut cell_err: Option<anyhow::Error> = None;
+    for (c, j) in cells.into_iter().enumerate() {
+        match j.join() {
+            Err(_) => {
+                if cell_err.is_none() {
+                    cell_err = Some(anyhow!("cell thread for cluster {c} panicked"));
+                }
+            }
+            Ok(Err(e)) => {
+                if cell_err.is_none() {
+                    cell_err = Some(e.context(format!("cell for cluster {c} failed")));
+                }
+            }
+            Ok(Ok(())) => {}
+        }
+    }
+    svc.shutdown();
+    match cell_err {
+        Some(e) => Err(e),
+        None => run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::worker::handshake_worker;
+
+    #[test]
+    fn handshake_assigns_lowest_free_cluster() {
+        let (mut w, mut m) = LoopbackTransport::pair();
+        let j = std::thread::spawn(move || handshake_worker(&mut w, 42, None));
+        let mut taken = vec![true, false, false];
+        let c = handshake_mbs(&mut m, 42, &mut taken).unwrap();
+        assert_eq!(c, 1);
+        assert!(taken[1]);
+        assert_eq!(j.join().unwrap().unwrap(), (1, 3));
+    }
+
+    #[test]
+    fn handshake_refuses_fingerprint_mismatch() {
+        let (mut w, mut m) = LoopbackTransport::pair();
+        let j = std::thread::spawn(move || handshake_worker(&mut w, 1, None));
+        let mut taken = vec![false];
+        let err = handshake_mbs(&mut m, 2, &mut taken).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint mismatch"), "{err:#}");
+        assert!(!taken[0]);
+        let worker_err = j.join().unwrap().unwrap_err();
+        assert!(format!("{worker_err:#}").contains("refused"), "{worker_err:#}");
+    }
+
+    #[test]
+    fn handshake_refuses_taken_or_out_of_range_cluster() {
+        let (mut w, mut m) = LoopbackTransport::pair();
+        let j = std::thread::spawn(move || handshake_worker(&mut w, 7, Some(0)));
+        let mut taken = vec![true];
+        assert!(handshake_mbs(&mut m, 7, &mut taken).is_err());
+        assert!(j.join().unwrap().is_err());
+
+        let (mut w, mut m) = LoopbackTransport::pair();
+        let j = std::thread::spawn(move || handshake_worker(&mut w, 7, Some(5)));
+        let mut taken = vec![false];
+        let err = handshake_mbs(&mut m, 7, &mut taken).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        assert!(j.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn loss_fold_helpers_mirror_in_process_merge() {
+        let mut acc = Vec::new();
+        merge_losses(&mut acc, &[(0, 1.0), (1, 3.0)]);
+        merge_losses(&mut acc, &[(1, 5.0), (0, 3.0)]);
+        assert_eq!(finish_losses(acc), vec![(0, 2.0), (1, 4.0)]);
+
+        let mut fp = vec![0.0f32; 2];
+        fold_final_model(&mut fp, &[2.0, 4.0], 2).unwrap();
+        fold_final_model(&mut fp, &[4.0, 0.0], 2).unwrap();
+        assert_eq!(fp, vec![3.0, 2.0]);
+        assert!(fold_final_model(&mut fp, &[1.0], 2).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Append-only session message log with deterministic replay support.
+//!
+//! The MBS logs every data-plane message it processes — each worker
+//! `Sync`/`Done` as it is received (in cluster order within a barrier
+//! round) and each `GlobalDelta` broadcast once (cluster `u32::MAX`) —
+//! so `hfl replay` can reconstruct the full [`CoordinatorRun`] and its
+//! `GoldenTrace` from the log alone, bit-exactly
+//! (see [`super::replay`]).
+//!
+//! File layout: a sequence of [`super::frame`] frames. The first frame
+//! (tag `TAG_SESSION_HEADER`) is an exact-JSON run header; every later
+//! frame (tag `TAG_SESSION_RECORD`) wraps one direction byte, one
+//! cluster id, and one serialized [`WireMsg`]. Each append is fsynced,
+//! and a torn final frame (the process died mid-write) is tolerated on
+//! read exactly like the matrix run log's torn last line — complete
+//! prefix returned, mid-file corruption still a named error.
+//!
+//! [`CoordinatorRun`]: crate::coordinator::CoordinatorRun
+
+use super::frame::{decode_frame, encode_frame};
+use super::wire::{self, WireMsg, TAG_SESSION_HEADER, TAG_SESSION_RECORD};
+use crate::sim::result::ScenarioMeta;
+use crate::util::json::{self, Json, ObjBuilder};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Which way a logged message travelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Worker → MBS (`Sync`, `Done`).
+    Rx,
+    /// MBS → workers (`GlobalDelta`; logged once per broadcast).
+    Tx,
+}
+
+/// Cluster id marking a broadcast record (sent to every cluster).
+pub const BROADCAST: u32 = u32::MAX;
+
+/// The session's identity and the scalars replay needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionHeader {
+    /// Scenario name (also the golden-trace key).
+    pub name: String,
+    /// Scenario fingerprint (the handshake's refusal key).
+    pub fingerprint: u64,
+    pub dim: usize,
+    pub n_clusters: usize,
+    pub workers: usize,
+    pub h_period: usize,
+    pub iters: usize,
+    pub sparse: bool,
+}
+
+impl SessionHeader {
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("name", self.name.clone())
+            .str("fingerprint", format!("{:016x}", self.fingerprint))
+            .num("dim", self.dim as f64)
+            .num("n_clusters", self.n_clusters as f64)
+            .num("workers", self.workers as f64)
+            .num("h_period", self.h_period as f64)
+            .num("iters", self.iters as f64)
+            .bool("sparse", self.sparse)
+            .build()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("session header missing `{k}`"))
+        };
+        let fp = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("session header missing `fingerprint`"))?;
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("session header missing `name`"))?
+                .to_string(),
+            fingerprint: u64::from_str_radix(fp, 16)
+                .with_context(|| format!("parsing fingerprint `{fp}`"))?,
+            dim: field("dim")?,
+            n_clusters: field("n_clusters")?,
+            workers: field("workers")?,
+            h_period: field("h_period")?,
+            iters: field("iters")?,
+            sparse: matches!(j.get("sparse"), Some(Json::Bool(true))),
+        })
+    }
+
+    /// The scenario identity for result/golden-trace construction.
+    pub fn meta(&self) -> ScenarioMeta {
+        ScenarioMeta {
+            id: 0,
+            name: self.name.clone(),
+            n_clusters: self.n_clusters,
+            workers: self.workers,
+            h_period: self.h_period,
+            sparse: self.sparse,
+        }
+    }
+}
+
+/// One logged data-plane message.
+#[derive(Clone, Debug)]
+pub struct SessionRecord {
+    pub dir: Direction,
+    /// Source cluster for `Rx`, [`BROADCAST`] for `Tx`.
+    pub cluster: u32,
+    pub msg: WireMsg,
+}
+
+/// Appending side of a session log (MBS only).
+pub struct SessionLog {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl SessionLog {
+    /// Create (truncate) the log and write its fsynced header frame.
+    pub fn create(path: &Path, header: &SessionHeader) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating session log {}", path.display()))?;
+        let mut log = Self {
+            file,
+            path: path.to_path_buf(),
+        };
+        let text = header
+            .to_json()
+            .to_string_strict()
+            .map_err(|e| anyhow!("session header serialization: {e}"))?;
+        log.write_frame(&encode_frame(TAG_SESSION_HEADER, text.as_bytes()))?;
+        Ok(log)
+    }
+
+    /// Append one message record; fsynced so a crash tears at most the
+    /// final frame.
+    pub fn append(&mut self, dir: Direction, cluster: u32, msg: &WireMsg) -> Result<()> {
+        let (tag, payload) = wire::encode_payload(msg);
+        let mut body = Vec::with_capacity(payload.len() + 6);
+        body.push(match dir {
+            Direction::Rx => 0u8,
+            Direction::Tx => 1u8,
+        });
+        body.extend_from_slice(&cluster.to_le_bytes());
+        body.push(tag);
+        body.extend_from_slice(&payload);
+        self.write_frame(&encode_frame(TAG_SESSION_RECORD, &body))
+    }
+
+    fn write_frame(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file
+            .write_all(bytes)
+            .and_then(|_| self.file.sync_data())
+            .with_context(|| format!("appending to session log {}", self.path.display()))
+    }
+}
+
+/// Read a session log: header plus the complete prefix of records. A torn
+/// final frame is tolerated; corruption earlier in the file is an error.
+pub fn read_session(path: &Path) -> Result<(SessionHeader, Vec<SessionRecord>)> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading session log {}", path.display()))?;
+    let mut pos = 0usize;
+    let mut frames: Vec<(u8, Vec<u8>)> = Vec::new();
+    while pos < bytes.len() {
+        match decode_frame(&bytes[pos..])
+            .with_context(|| format!("session log {} at byte {pos}", path.display()))?
+        {
+            Some((tag, payload, consumed)) => {
+                frames.push((tag, payload));
+                pos += consumed;
+            }
+            // Incomplete trailing frame: the writer died mid-append.
+            None => break,
+        }
+    }
+    let Some((first_tag, header_bytes)) = frames.first() else {
+        bail!("session log {} is empty", path.display());
+    };
+    if *first_tag != TAG_SESSION_HEADER {
+        bail!(
+            "session log {} does not start with a header frame (tag {first_tag})",
+            path.display()
+        );
+    }
+    let text = std::str::from_utf8(header_bytes).context("session header is not UTF-8")?;
+    let header = SessionHeader::from_json(
+        &json::parse(text).map_err(|e| anyhow!("session header JSON: {e}"))?,
+    )?;
+    let mut records = Vec::with_capacity(frames.len() - 1);
+    for (i, (tag, payload)) in frames.iter().enumerate().skip(1) {
+        if *tag != TAG_SESSION_RECORD {
+            bail!("session log frame {i} has unexpected tag {tag}");
+        }
+        if payload.len() < 6 {
+            bail!("session log record {i} truncated ({} bytes)", payload.len());
+        }
+        let dir = match payload[0] {
+            0 => Direction::Rx,
+            1 => Direction::Tx,
+            other => bail!("session log record {i} has unknown direction {other}"),
+        };
+        let cluster = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+        let msg = wire::decode_payload(payload[5], &payload[6..])
+            .with_context(|| format!("session log record {i}"))?;
+        records.push(SessionRecord { dir, cluster, msg });
+    }
+    Ok((header, records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn header() -> SessionHeader {
+        SessionHeader {
+            name: "net-test".into(),
+            fingerprint: 0x0123_4567_89ab_cdef,
+            dim: 16,
+            n_clusters: 2,
+            workers: 6,
+            h_period: 4,
+            iters: 12,
+            sparse: true,
+        }
+    }
+
+    fn sync(cluster: usize) -> WireMsg {
+        WireMsg::Sync {
+            cluster,
+            mean_loss: 0.5,
+            delta: SparseVec {
+                dim: 16,
+                indices: vec![0, 7, 15],
+                values: vec![1.0, 2.0, 3.0],
+            },
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn header_json_roundtrip() {
+        let h = header();
+        assert_eq!(SessionHeader::from_json(&h.to_json()).unwrap(), h);
+        assert_eq!(h.meta().name, "net-test");
+        assert_eq!(h.meta().workers, 6);
+    }
+
+    #[test]
+    fn log_roundtrip_and_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("hfl-session-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header()).unwrap();
+            log.append(Direction::Rx, 0, &sync(0)).unwrap();
+            log.append(Direction::Rx, 1, &sync(1)).unwrap();
+            log.append(
+                Direction::Tx,
+                BROADCAST,
+                &WireMsg::GlobalDelta {
+                    sync_index: 0,
+                    delta: SparseVec::empty(16),
+                },
+            )
+            .unwrap();
+        }
+        let (h, recs) = read_session(&path).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].dir, Direction::Rx);
+        assert_eq!(recs[0].msg, sync(0));
+        assert_eq!(recs[2].cluster, BROADCAST);
+
+        // Tear the final frame: the complete prefix still reads.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let (_, torn) = read_session(&path).unwrap();
+        assert_eq!(torn.len(), 2);
+
+        // Corrupt a mid-file byte: named error, not silence.
+        let mut corrupt = bytes.clone();
+        corrupt[70] ^= 0x01;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(read_session(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,243 @@
+//! The SBS↔MBS transport abstraction: one framed [`WireMsg`] per call.
+//!
+//! Two implementations share the byte-level codec, so the loopback pair
+//! exercises the exact frame/wire encoding the TCP path ships:
+//!
+//! - [`LoopbackTransport`] — an in-memory channel of framed byte vectors.
+//!   `coordinator::run_coordinated` wires every cluster over these, which
+//!   is how the in-process engine proves the codec bit-exact on every run.
+//! - [`TcpTransport`] — a `TcpStream` with an incremental receive buffer
+//!   (`TCP_NODELAY`; frames re-assembled across arbitrary segmentation).
+
+use super::frame;
+use super::wire::{self, WireMsg};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// A bidirectional, blocking, message-oriented link between one worker
+/// cell and the MBS.
+pub trait Transport: Send {
+    /// Frame and send one message.
+    fn send(&mut self, msg: &WireMsg) -> Result<()>;
+    /// Block until the next complete frame arrives and decode it.
+    fn recv(&mut self) -> Result<WireMsg>;
+    /// Human-readable peer name for error contexts.
+    fn peer(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// Loopback
+// ---------------------------------------------------------------------------
+
+/// In-memory transport endpoint: framed bytes over an `mpsc` channel.
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    rxbuf: Vec<u8>,
+}
+
+impl LoopbackTransport {
+    /// Create a connected pair of endpoints.
+    pub fn pair() -> (LoopbackTransport, LoopbackTransport) {
+        let (atx, arx) = channel();
+        let (btx, brx) = channel();
+        (
+            LoopbackTransport {
+                tx: atx,
+                rx: brx,
+                rxbuf: Vec::new(),
+            },
+            LoopbackTransport {
+                tx: btx,
+                rx: arx,
+                rxbuf: Vec::new(),
+            },
+        )
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<()> {
+        self.tx
+            .send(wire::encode_frame_msg(msg))
+            .map_err(|_| anyhow::anyhow!("loopback peer closed while sending {}", msg.kind()))
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        loop {
+            if let Some((tag, payload, consumed)) =
+                frame::decode_frame(&self.rxbuf).context("loopback frame")?
+            {
+                self.rxbuf.drain(..consumed);
+                return wire::decode_payload(tag, &payload);
+            }
+            let chunk = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("loopback peer closed while receiving"))?;
+            self.rxbuf.extend_from_slice(&chunk);
+        }
+    }
+
+    fn peer(&self) -> String {
+        "loopback".into()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// TCP transport endpoint with an incremental frame re-assembly buffer.
+pub struct TcpTransport {
+    stream: TcpStream,
+    rxbuf: Vec<u8>,
+    peer: String,
+}
+
+impl TcpTransport {
+    /// Wrap an accepted or connected stream (sets `TCP_NODELAY` — sync
+    /// messages are latency-bound, not throughput-bound).
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".into());
+        stream
+            .set_nodelay(true)
+            .with_context(|| format!("setting TCP_NODELAY toward {peer}"))?;
+        Ok(Self {
+            stream,
+            rxbuf: Vec::new(),
+            peer,
+        })
+    }
+
+    /// Connect to `addr`, retrying until `total` elapses — workers may
+    /// launch before the MBS listener binds (the CI multiprocess job
+    /// starts all three processes concurrently).
+    pub fn connect_retry(addr: &str, total: Duration) -> Result<Self> {
+        let deadline = Instant::now() + total;
+        loop {
+            match addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving {addr}"))?
+                .next()
+            {
+                None => bail!("{addr} resolved to no address"),
+                Some(sock) => match TcpStream::connect(sock) {
+                    Ok(s) => return Self::new(s),
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            return Err(e).with_context(|| {
+                                format!("connecting to MBS at {addr} (retried {total:?})")
+                            });
+                        }
+                        std::thread::sleep(Duration::from_millis(200));
+                    }
+                },
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<()> {
+        let bytes = wire::encode_frame_msg(msg);
+        self.stream
+            .write_all(&bytes)
+            .with_context(|| format!("sending {} to {}", msg.kind(), self.peer))?;
+        self.stream
+            .flush()
+            .with_context(|| format!("flushing toward {}", self.peer))
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some((tag, payload, consumed)) = frame::decode_frame(&self.rxbuf)
+                .with_context(|| format!("frame from {}", self.peer))?
+            {
+                self.rxbuf.drain(..consumed);
+                return wire::decode_payload(tag, &payload)
+                    .with_context(|| format!("message from {}", self.peer));
+            }
+            let n = self
+                .stream
+                .read(&mut chunk)
+                .with_context(|| format!("reading from {}", self.peer))?;
+            if n == 0 {
+                bail!(
+                    "connection closed by {} mid-stream ({} buffered bytes)",
+                    self.peer,
+                    self.rxbuf.len()
+                );
+            }
+            self.rxbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn msg(sync_index: usize) -> WireMsg {
+        WireMsg::GlobalDelta {
+            sync_index,
+            delta: SparseVec {
+                dim: 10,
+                indices: vec![1, 4, 9],
+                values: vec![0.5, -1.5, 2.0],
+            },
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrips_messages_in_order() {
+        let (mut a, mut b) = LoopbackTransport::pair();
+        a.send(&msg(0)).unwrap();
+        a.send(&msg(1)).unwrap();
+        assert_eq!(b.recv().unwrap(), msg(0));
+        assert_eq!(b.recv().unwrap(), msg(1));
+        b.send(&msg(2)).unwrap();
+        assert_eq!(a.recv().unwrap(), msg(2));
+    }
+
+    #[test]
+    fn loopback_closed_peer_is_error() {
+        let (mut a, b) = LoopbackTransport::pair();
+        drop(b);
+        assert!(a.send(&msg(0)).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_pair_roundtrips_across_segmentation() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            for i in 0..20 {
+                assert_eq!(t.recv().unwrap(), msg(i));
+            }
+            t.send(&msg(99)).unwrap();
+        });
+        let mut t =
+            TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+        for i in 0..20 {
+            t.send(&msg(i)).unwrap();
+        }
+        assert_eq!(t.recv().unwrap(), msg(99));
+        server.join().unwrap();
+    }
+}

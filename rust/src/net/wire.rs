@@ -1,0 +1,509 @@
+//! The coordinator's wire messages and their two serialization lanes.
+//!
+//! Control messages (session handshake) travel as **exact JSON** — the
+//! crate's own strict codec, no serde — so a refused handshake is
+//! human-readable on the wire. Data-plane messages (sync deltas, the
+//! global broadcast, final models) travel **binary**: `ByteWriter`
+//! scalars plus the delta-packed [`SparseWire`] codec for every model
+//! delta, so the framed payload *is* the realized stream the latency
+//! model prices.
+//!
+//! Bit-accounting invariant, asserted at this boundary for every encoded
+//! delta: `SparseWire::encoded_bits() ≤ SparseVec::wire_bits(32)` — the
+//! framed form never exceeds the fixed-width pricing
+//! ([`crate::wireless::latency::payload_bits`]) the engines bill.
+
+use crate::coordinator::{LinkKind, MetricEvent};
+use crate::snapshot::codec::{ByteReader, ByteWriter};
+use crate::sparse::{SparseVec, SparseWire};
+use crate::util::json::{self, Json, ObjBuilder};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Handshake: worker → MBS (JSON lane).
+pub const TAG_HELLO: u8 = 1;
+/// Handshake: MBS → worker, cluster assignment (JSON lane).
+pub const TAG_WELCOME: u8 = 2;
+/// Handshake: MBS → worker, session refused (JSON lane).
+pub const TAG_REFUSE: u8 = 3;
+/// Data plane: SBS → MBS period sync (binary lane).
+pub const TAG_SYNC: u8 = 4;
+/// Data plane: MBS → SBS global broadcast (binary lane).
+pub const TAG_GLOBAL_DELTA: u8 = 5;
+/// Data plane: SBS → MBS final model + losses (binary lane).
+pub const TAG_DONE: u8 = 6;
+/// Session log only: run header (JSON lane).
+pub const TAG_SESSION_HEADER: u8 = 7;
+/// Session log only: one logged message envelope (binary lane).
+pub const TAG_SESSION_RECORD: u8 = 8;
+
+/// One message between a worker cell (SBS + its MUs) and the MBS.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Worker joins: scenario fingerprint + optionally requested cluster.
+    Hello {
+        fingerprint: u64,
+        cluster: Option<usize>,
+    },
+    /// MBS accepts: deterministic cluster assignment.
+    Welcome { cluster: usize, n_clusters: usize },
+    /// MBS refuses (fingerprint mismatch, cluster taken, …).
+    Refuse { reason: String },
+    /// One H-period sync: the cluster's discounted-error delta plus the
+    /// metric events accumulated since the last send.
+    Sync {
+        cluster: usize,
+        mean_loss: f64,
+        delta: SparseVec,
+        events: Vec<MetricEvent>,
+    },
+    /// The MBS's aggregated broadcast after sync round `sync_index`.
+    GlobalDelta { sync_index: usize, delta: SparseVec },
+    /// End of run: the cluster's final reference model, its per-iteration
+    /// losses, and any metric events not yet shipped.
+    Done {
+        cluster: usize,
+        final_model: Vec<f32>,
+        iter_losses: Vec<(usize, f64)>,
+        events: Vec<MetricEvent>,
+    },
+}
+
+impl WireMsg {
+    /// Short name for error contexts.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WireMsg::Hello { .. } => "Hello",
+            WireMsg::Welcome { .. } => "Welcome",
+            WireMsg::Refuse { .. } => "Refuse",
+            WireMsg::Sync { .. } => "Sync",
+            WireMsg::GlobalDelta { .. } => "GlobalDelta",
+            WireMsg::Done { .. } => "Done",
+        }
+    }
+}
+
+fn link_to_u8(l: LinkKind) -> u8 {
+    match l {
+        LinkKind::MuUl => 0,
+        LinkKind::SbsDl => 1,
+        LinkKind::SbsUl => 2,
+        LinkKind::MbsDl => 3,
+    }
+}
+
+fn link_from_u8(b: u8) -> Result<LinkKind> {
+    Ok(match b {
+        0 => LinkKind::MuUl,
+        1 => LinkKind::SbsDl,
+        2 => LinkKind::SbsUl,
+        3 => LinkKind::MbsDl,
+        other => bail!("unknown link kind tag {other}"),
+    })
+}
+
+/// Serialize a model delta through [`SparseWire`], asserting the
+/// bit-accounting invariant at the transport boundary: the realized
+/// stream must never exceed the fixed-width `wire_bits(32)` form the
+/// wireless model prices.
+fn put_delta(w: &mut ByteWriter, v: &SparseVec) {
+    let wire = SparseWire::encode(v);
+    assert!(
+        wire.encoded_bits() as f64 <= v.wire_bits(32) + 1e-9,
+        "framed delta ({} bits) exceeds priced payload_bits form ({} bits)",
+        wire.encoded_bits(),
+        v.wire_bits(32)
+    );
+    w.put_usize(wire.dim);
+    w.put_usize(wire.nnz);
+    w.put_u32(wire.gap_bits());
+    w.put_u64_slice(wire.words());
+}
+
+fn get_delta(r: &mut ByteReader) -> Result<SparseVec> {
+    let dim = r.get_usize()?;
+    let nnz = r.get_usize()?;
+    let gap_bits = r.get_u32()?;
+    let words = r.get_u64_vec()?;
+    let wire = SparseWire::from_parts(dim, nnz, gap_bits, words)?;
+    wire.decode_checked()
+}
+
+fn put_events(w: &mut ByteWriter, events: &[MetricEvent]) {
+    w.put_usize(events.len());
+    for e in events {
+        w.put_usize(e.iter);
+        w.put_usize(e.cluster);
+        w.put_u8(link_to_u8(e.link));
+        w.put_f64(e.bits);
+        w.put_f64(e.loss);
+    }
+}
+
+fn get_events(r: &mut ByteReader) -> Result<Vec<MetricEvent>> {
+    let n = r.get_usize()?;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(MetricEvent {
+            iter: r.get_usize()?,
+            cluster: r.get_usize()?,
+            link: link_from_u8(r.get_u8()?)?,
+            bits: r.get_f64()?,
+            loss: r.get_f64()?,
+        });
+    }
+    Ok(out)
+}
+
+fn fingerprint_to_json(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+fn fingerprint_from_json(j: &Json, key: &str) -> Result<u64> {
+    let s = j
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing `{key}`"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("parsing `{key}` hex `{s}`"))
+}
+
+/// Encode one message to its `(tag, payload)` pair.
+pub fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
+    match msg {
+        WireMsg::Hello {
+            fingerprint,
+            cluster,
+        } => {
+            let b = ObjBuilder::new().str("fingerprint", fingerprint_to_json(*fingerprint));
+            let b = match cluster {
+                Some(c) => b.num("cluster", *c as f64),
+                None => b.val("cluster", Json::Null),
+            };
+            (TAG_HELLO, b.build().to_string_compact().into_bytes())
+        }
+        WireMsg::Welcome {
+            cluster,
+            n_clusters,
+        } => (
+            TAG_WELCOME,
+            ObjBuilder::new()
+                .num("cluster", *cluster as f64)
+                .num("n_clusters", *n_clusters as f64)
+                .build()
+                .to_string_compact()
+                .into_bytes(),
+        ),
+        WireMsg::Refuse { reason } => (
+            TAG_REFUSE,
+            ObjBuilder::new()
+                .str("reason", reason.clone())
+                .build()
+                .to_string_compact()
+                .into_bytes(),
+        ),
+        WireMsg::Sync {
+            cluster,
+            mean_loss,
+            delta,
+            events,
+        } => {
+            let mut w = ByteWriter::new();
+            w.put_usize(*cluster);
+            w.put_f64(*mean_loss);
+            put_delta(&mut w, delta);
+            put_events(&mut w, events);
+            (TAG_SYNC, w.into_bytes())
+        }
+        WireMsg::GlobalDelta { sync_index, delta } => {
+            let mut w = ByteWriter::new();
+            w.put_usize(*sync_index);
+            put_delta(&mut w, delta);
+            (TAG_GLOBAL_DELTA, w.into_bytes())
+        }
+        WireMsg::Done {
+            cluster,
+            final_model,
+            iter_losses,
+            events,
+        } => {
+            let mut w = ByteWriter::new();
+            w.put_usize(*cluster);
+            w.put_f32_slice(final_model);
+            w.put_usize(iter_losses.len());
+            for (it, loss) in iter_losses {
+                w.put_usize(*it);
+                w.put_f64(*loss);
+            }
+            put_events(&mut w, events);
+            (TAG_DONE, w.into_bytes())
+        }
+    }
+}
+
+/// Decode one message from its `(tag, payload)` pair.
+pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg> {
+    match tag {
+        TAG_HELLO | TAG_WELCOME | TAG_REFUSE => {
+            let text = std::str::from_utf8(payload).context("control payload is not UTF-8")?;
+            let j = json::parse(text).map_err(|e| anyhow!("control payload JSON: {e}"))?;
+            match tag {
+                TAG_HELLO => Ok(WireMsg::Hello {
+                    fingerprint: fingerprint_from_json(&j, "fingerprint")
+                        .context("decoding Hello")?,
+                    cluster: match j.get("cluster") {
+                        Some(Json::Null) | None => None,
+                        Some(v) => Some(
+                            v.as_usize()
+                                .ok_or_else(|| anyhow!("Hello cluster not a usize"))?,
+                        ),
+                    },
+                }),
+                TAG_WELCOME => Ok(WireMsg::Welcome {
+                    cluster: j
+                        .get("cluster")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("Welcome missing cluster"))?,
+                    n_clusters: j
+                        .get("n_clusters")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("Welcome missing n_clusters"))?,
+                }),
+                _ => Ok(WireMsg::Refuse {
+                    reason: j
+                        .get("reason")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("Refuse missing reason"))?
+                        .to_string(),
+                }),
+            }
+        }
+        TAG_SYNC => {
+            let mut r = ByteReader::new(payload);
+            let msg = WireMsg::Sync {
+                cluster: r.get_usize()?,
+                mean_loss: r.get_f64()?,
+                delta: get_delta(&mut r).context("decoding Sync delta")?,
+                events: get_events(&mut r).context("decoding Sync events")?,
+            };
+            r.finish()?;
+            Ok(msg)
+        }
+        TAG_GLOBAL_DELTA => {
+            let mut r = ByteReader::new(payload);
+            let msg = WireMsg::GlobalDelta {
+                sync_index: r.get_usize()?,
+                delta: get_delta(&mut r).context("decoding GlobalDelta delta")?,
+            };
+            r.finish()?;
+            Ok(msg)
+        }
+        TAG_DONE => {
+            let mut r = ByteReader::new(payload);
+            let cluster = r.get_usize()?;
+            let final_model = r.get_f32_vec()?;
+            let n = r.get_usize()?;
+            let mut iter_losses = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                iter_losses.push((r.get_usize()?, r.get_f64()?));
+            }
+            let events = get_events(&mut r).context("decoding Done events")?;
+            r.finish()?;
+            Ok(WireMsg::Done {
+                cluster,
+                final_model,
+                iter_losses,
+                events,
+            })
+        }
+        other => bail!("unknown message tag {other}"),
+    }
+}
+
+/// Encode one message as a complete frame (header + payload + checksum).
+pub fn encode_frame_msg(msg: &WireMsg) -> Vec<u8> {
+    let (tag, payload) = encode_payload(msg);
+    super::frame::encode_frame(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sparse(dim: usize, keep: f64, seed: u64) -> SparseVec {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = SparseVec::empty(dim);
+        for i in 0..dim {
+            if rng.uniform() < keep {
+                v.indices.push(i as u32);
+                v.values.push(rng.normal() as f32);
+            }
+        }
+        v
+    }
+
+    fn events() -> Vec<MetricEvent> {
+        vec![
+            MetricEvent {
+                iter: 3,
+                cluster: 1,
+                link: LinkKind::MuUl,
+                bits: 1536.0,
+                loss: 0.25,
+            },
+            MetricEvent {
+                iter: 7,
+                cluster: usize::MAX,
+                link: LinkKind::MbsDl,
+                bits: 4096.0,
+                loss: f64::NAN,
+            },
+        ]
+    }
+
+    fn roundtrip(msg: &WireMsg) -> WireMsg {
+        let (tag, payload) = encode_payload(msg);
+        decode_payload(tag, &payload).unwrap()
+    }
+
+    #[test]
+    fn control_messages_roundtrip_as_json() {
+        for msg in [
+            WireMsg::Hello {
+                fingerprint: 0xdead_beef_0123_4567,
+                cluster: Some(2),
+            },
+            WireMsg::Hello {
+                fingerprint: 7,
+                cluster: None,
+            },
+            WireMsg::Welcome {
+                cluster: 1,
+                n_clusters: 4,
+            },
+            WireMsg::Refuse {
+                reason: "fingerprint mismatch".into(),
+            },
+        ] {
+            assert_eq!(roundtrip(&msg), msg, "{}", msg.kind());
+            // The control lane really is JSON.
+            let (_, payload) = encode_payload(&msg);
+            json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_roundtrips_bit_exactly() {
+        let msg = WireMsg::Sync {
+            cluster: 3,
+            mean_loss: 0.015625,
+            delta: sparse(200, 0.1, 11),
+            events: events(),
+        };
+        let back = roundtrip(&msg);
+        // NaN loss breaks PartialEq; compare fields by bits.
+        let (WireMsg::Sync { delta: a, events: ea, .. }, WireMsg::Sync { delta: b, events: eb, .. }) =
+            (&msg, &back)
+        else {
+            panic!("kind changed");
+        };
+        assert_eq!(a, b);
+        assert_eq!(ea.len(), eb.len());
+        for (x, y) in ea.iter().zip(eb) {
+            assert_eq!(x.iter, y.iter);
+            assert_eq!(x.cluster, y.cluster);
+            assert_eq!(x.link, y.link);
+            assert_eq!(x.bits.to_bits(), y.bits.to_bits());
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn global_delta_and_done_roundtrip() {
+        let g = WireMsg::GlobalDelta {
+            sync_index: 5,
+            delta: sparse(64, 0.5, 12),
+        };
+        assert_eq!(roundtrip(&g), g);
+        let d = WireMsg::Done {
+            cluster: 0,
+            final_model: vec![1.0, -0.0, f32::MIN_POSITIVE, 3.5],
+            iter_losses: vec![(0, 0.5), (1, 0.25)],
+            events: Vec::new(),
+        };
+        assert_eq!(roundtrip(&d), d);
+    }
+
+    #[test]
+    fn sync_delta_bits_never_exceed_priced_form() {
+        // Satellite invariant, per delta-bearing message kind: the framed
+        // SparseWire stream stays within the fixed-width pricing.
+        for keep in [0.0, 0.05, 0.5, 1.0] {
+            let v = sparse(1 << 12, keep, 21);
+            let bound = v.wire_bits(32);
+            let wire = SparseWire::encode(&v);
+            assert!(wire.encoded_bits() as f64 <= bound + 1e-9, "keep {keep}");
+            // Encoding through each message kind exercises the boundary
+            // assert in put_delta.
+            let _ = encode_payload(&WireMsg::Sync {
+                cluster: 0,
+                mean_loss: 0.0,
+                delta: v.clone(),
+                events: Vec::new(),
+            });
+        }
+    }
+
+    #[test]
+    fn global_delta_bits_never_exceed_priced_form() {
+        for keep in [0.01, 0.3, 1.0] {
+            let v = sparse(1 << 10, keep, 22);
+            let bound = v.wire_bits(32);
+            assert!(SparseWire::encode(&v).encoded_bits() as f64 <= bound + 1e-9);
+            let _ = encode_payload(&WireMsg::GlobalDelta {
+                sync_index: 0,
+                delta: v,
+            });
+        }
+    }
+
+    #[test]
+    fn corrupt_delta_payload_is_named_error() {
+        // Re-frame a Sync whose delta claims a smaller dim than its
+        // indices reach: the checked decode must refuse it.
+        let v = sparse(100, 0.3, 31);
+        let msg = WireMsg::Sync {
+            cluster: 0,
+            mean_loss: 0.0,
+            delta: v,
+            events: Vec::new(),
+        };
+        let (tag, payload) = encode_payload(&msg);
+        let mut w = ByteWriter::new();
+        w.put_usize(0); // cluster
+        w.put_f64(0.0); // mean_loss
+        w.put_usize(4); // lie about dim
+        let mut r = ByteReader::new(&payload);
+        let _ = r.get_usize().unwrap();
+        let _ = r.get_f64().unwrap();
+        let _ = r.get_usize().unwrap(); // original dim
+        let nnz = r.get_usize().unwrap();
+        w.put_usize(nnz);
+        w.put_u32(r.get_u32().unwrap());
+        w.put_u64_slice(&r.get_u64_vec().unwrap());
+        put_events(&mut w, &[]);
+        let err = decode_payload(tag, &w.into_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("outside dim"), "{err:#}");
+    }
+
+    #[test]
+    fn frame_msg_roundtrips_through_frame_codec() {
+        let msg = WireMsg::GlobalDelta {
+            sync_index: 2,
+            delta: sparse(50, 0.2, 41),
+        };
+        let bytes = encode_frame_msg(&msg);
+        let (tag, payload, consumed) = super::super::frame::decode_frame(&bytes).unwrap().unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(decode_payload(tag, &payload).unwrap(), msg);
+    }
+}

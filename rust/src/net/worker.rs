@@ -1,0 +1,310 @@
+//! The worker side of the service: one SBS + its MU actors, speaking to
+//! the MBS over a [`Transport`].
+//!
+//! [`run_cell`] is the former in-process SBS actor with its MBS channel
+//! hops replaced by framed wire messages — same compressors, same
+//! slot-ordered aggregation, same arithmetic expressions, so a cell run
+//! over loopback (or TCP) reproduces the in-process engine bit-exactly.
+//! MU↔SBS traffic stays on in-process channels: the cell *is* the
+//! process boundary.
+
+use super::transport::Transport;
+use super::wire::WireMsg;
+use crate::coordinator::run::{effective_phis, mu_actor, MuContext};
+use crate::coordinator::{
+    ComputeHandle, CoordinatorOptions, LinkKind, MetricEvent, MetricsSink, MuToSbs, SbsToMu,
+};
+use crate::fl::lr_schedule::LrSchedule;
+use crate::sparse::merge::{self, DenseShadow, MergeScratch};
+use crate::sparse::{DiscountedError, SparseVec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Identify as a worker and obtain a cluster assignment. `want` pins a
+/// specific cluster id (`--cluster`); `None` lets the MBS assign the
+/// lowest free one.
+pub fn handshake_worker(
+    transport: &mut dyn Transport,
+    fingerprint: u64,
+    want: Option<usize>,
+) -> Result<(usize, usize)> {
+    transport
+        .send(&WireMsg::Hello {
+            fingerprint,
+            cluster: want,
+        })
+        .context("sending Hello")?;
+    match transport.recv().context("waiting for cluster assignment")? {
+        WireMsg::Welcome {
+            cluster,
+            n_clusters,
+        } => Ok((cluster, n_clusters)),
+        WireMsg::Refuse { reason } => bail!("MBS refused session: {reason}"),
+        other => bail!("expected Welcome or Refuse, got {}", other.kind()),
+    }
+}
+
+/// Pull everything currently queued on the cell's local metric channel.
+/// At a sync point this is exactly the cluster's events since the last
+/// drain: every MU emits before uploading, and the SBS has received all
+/// uploads for the rounds it completed.
+fn drain_events(rx: &Receiver<MetricEvent>) -> Vec<MetricEvent> {
+    let mut out = Vec::new();
+    while let Ok(ev) = rx.try_recv() {
+        out.push(ev);
+    }
+    out
+}
+
+/// Run one cluster's SBS+MUs cell against the MBS behind `transport`.
+///
+/// The compute service is cell-local (each worker process builds its own
+/// oracle; `run_coordinated` shares one handle across loopback cells —
+/// equivalent for the deterministic oracles the service contract
+/// requires).
+pub fn run_cell(
+    compute: ComputeHandle,
+    opts: &CoordinatorOptions,
+    cluster: usize,
+    transport: &mut dyn Transport,
+) -> Result<()> {
+    let (dim, k_total, init, _ipe) = compute.meta();
+    let n = opts.n_clusters;
+    if n == 0 || k_total % n != 0 {
+        bail!("workers ({k_total}) must divide evenly into clusters ({n})");
+    }
+    if cluster >= n {
+        bail!("cluster id {cluster} out of range 0..{n}");
+    }
+    let per_cluster = k_total / n;
+    let (phi_ul, _phi_sdl, phi_sul, _phi_mdl) = effective_phis(opts);
+    let init = Arc::new(init);
+
+    // --- Spawn MU actors on in-process channels --------------------------
+    let (from_mu_tx, inbox) = channel::<MuToSbs>();
+    let (metric_tx, metric_rx) = channel::<MetricEvent>();
+    let metrics = MetricsSink::new(metric_tx);
+    let mut mu_txs: Vec<Sender<SbsToMu>> = Vec::with_capacity(per_cluster);
+    let mut mu_joins = Vec::with_capacity(per_cluster);
+    for slot in 0..per_cluster {
+        let (tx, rx) = channel::<SbsToMu>();
+        mu_txs.push(tx);
+        let mctx = MuContext {
+            cluster,
+            slot,
+            worker: cluster * per_cluster + slot,
+            dim,
+            iters: opts.iters,
+            h_period: opts.h_period,
+            hierarchical: n > 1,
+            momentum: opts.momentum,
+            weight_decay: opts.weight_decay,
+            phi_ul,
+            init: init.clone(),
+            compute: compute.clone(),
+            metrics: metrics.clone(),
+        };
+        let to_sbs = from_mu_tx.clone();
+        mu_joins.push(
+            std::thread::Builder::new()
+                .name(format!("hfl-mu-{}", mctx.worker))
+                .spawn(move || mu_actor(mctx, rx, to_sbs))
+                .with_context(|| format!("spawning MU thread (cluster {cluster}, slot {slot})"))?,
+        );
+    }
+    drop(from_mu_tx);
+
+    let rounds = cell_rounds(
+        opts, cluster, dim, per_cluster, &init, transport, &inbox, &mu_txs, &metrics, &metric_rx,
+    );
+
+    // Always release the MUs, error path included — a dead peer must not
+    // leave threads parked on their inboxes.
+    for tx in &mu_txs {
+        let _ = tx.send(SbsToMu::Stop);
+    }
+    for (slot, j) in mu_joins.into_iter().enumerate() {
+        j.join()
+            .map_err(|_| anyhow!("MU thread panicked (cluster {cluster}, slot {slot})"))?;
+    }
+    let (final_model, iter_losses) = rounds?;
+
+    // All producers are gone; what's queued is the complete tail.
+    drop(metrics);
+    let events = drain_events(&metric_rx);
+    transport
+        .send(&WireMsg::Done {
+            cluster,
+            final_model,
+            iter_losses,
+            events,
+        })
+        .with_context(|| format!("cluster {cluster} reporting Done"))?;
+    Ok(())
+}
+
+/// The SBS round loop — bit-identical arithmetic to the in-process actor.
+#[allow(clippy::too_many_arguments)]
+fn cell_rounds(
+    opts: &CoordinatorOptions,
+    cluster: usize,
+    dim: usize,
+    per_cluster: usize,
+    init: &Arc<Vec<f32>>,
+    transport: &mut dyn Transport,
+    inbox: &Receiver<MuToSbs>,
+    mu_txs: &[Sender<SbsToMu>],
+    metrics: &MetricsSink,
+    metric_rx: &Receiver<MetricEvent>,
+) -> Result<(Vec<f32>, Vec<(usize, f64)>)> {
+    let n = opts.n_clusters;
+    let (_phi_ul, phi_sdl, phi_sul, phi_mdl) = effective_phis(opts);
+    let (dl_phi, dl_beta) = if n == 1 {
+        (phi_mdl, opts.sparsity.beta_m as f32)
+    } else {
+        (phi_sdl, opts.sparsity.beta_s as f32)
+    };
+    let schedule = LrSchedule::new(opts.peak_lr, opts.warmup_iters, opts.iters, opts.milestones);
+
+    let mut w_tilde: Vec<f32> = (**init).clone();
+    let mut w_global: Vec<f32> = (**init).clone();
+    let mut dl_enc = DiscountedError::new(dim, dl_phi, dl_beta);
+    let mut ul_enc = DiscountedError::new(dim, phi_sul, opts.sparsity.beta_s as f32);
+    let mut agg = vec![0.0f32; dim];
+    // Density-adaptive round aggregation (reference baseline −0.0: the
+    // accumulator is zeroed, scattered into, then scaled by −lr).
+    let mut agg_shadow = DenseShadow::new();
+    let mut agg_merged = SparseVec::default();
+    let mut agg_scratch = MergeScratch::default();
+    let mut iter_losses = Vec::with_capacity(opts.iters);
+    let mut period_loss = 0.0f64;
+    let mut period_count = 0usize;
+
+    for t in 0..opts.iters {
+        let lr = schedule.at(t) as f32;
+        // Collect one gradient per slot.
+        let mut slots: Vec<Option<MuToSbs>> = (0..per_cluster).map(|_| None).collect();
+        let mut got = 0;
+        while got < per_cluster {
+            let m = inbox
+                .recv()
+                .map_err(|_| anyhow!("MU actors of cluster {cluster} died at iter {t}"))?;
+            let slot = m.slot;
+            if slots[slot].is_some() {
+                bail!("duplicate gradient from slot {slot} (cluster {cluster}, iter {t})");
+            }
+            slots[slot] = Some(m);
+            got += 1;
+        }
+        // Aggregate in slot order → bit-identical to the engine; the
+        // sparse merge folds each coordinate in the same slot order as
+        // the dense scatter, so either path is exact.
+        let mut loss_sum = 0.0;
+        for m in slots.iter().flatten() {
+            loss_sum += m.loss;
+        }
+        let scale = 1.0 / per_cluster as f32;
+        let parts: Vec<(&SparseVec, f32)> =
+            slots.iter().flatten().map(|m| (&m.grad, scale)).collect();
+        merge::aggregate_adaptive(
+            &opts.agg,
+            &parts,
+            dim,
+            Some(-lr),
+            &mut agg,
+            &mut agg_merged,
+            &mut agg_scratch,
+            &mut agg_shadow,
+        );
+        let mean_loss = loss_sum / per_cluster as f64;
+        iter_losses.push((t, mean_loss));
+        period_loss += mean_loss;
+        period_count += 1;
+
+        let dl_msg = dl_enc.compress(&agg);
+        metrics.emit(MetricEvent {
+            iter: t,
+            cluster,
+            link: LinkKind::SbsDl,
+            bits: dl_msg.wire_bits(32),
+            loss: f64::NAN,
+        });
+        dl_msg.add_into(&mut w_tilde, 1.0);
+        for (slot, tx) in mu_txs.iter().enumerate() {
+            tx.send(SbsToMu::Update {
+                iter: t,
+                delta: dl_msg.clone(),
+            })
+            .map_err(|_| anyhow!("MU inbox closed (cluster {cluster}, slot {slot}, iter {t})"))?;
+        }
+
+        // Global sync through the transport.
+        if n > 1 && (t + 1) % opts.h_period == 0 {
+            let delta: Vec<f32> = (0..dim)
+                .map(|i| w_tilde[i] + dl_enc.error()[i] - w_global[i])
+                .collect();
+            let ul_msg = ul_enc.compress(&delta);
+            metrics.emit(MetricEvent {
+                iter: t,
+                cluster,
+                link: LinkKind::SbsUl,
+                bits: ul_msg.wire_bits(32),
+                loss: f64::NAN,
+            });
+            transport
+                .send(&WireMsg::Sync {
+                    cluster,
+                    mean_loss: period_loss / period_count.max(1) as f64,
+                    delta: ul_msg,
+                    events: drain_events(metric_rx),
+                })
+                .with_context(|| format!("cluster {cluster} syncing at iter {t}"))?;
+            period_loss = 0.0;
+            period_count = 0;
+            // Wait for the MBS's aggregated broadcast.
+            let global = match transport
+                .recv()
+                .with_context(|| format!("cluster {cluster} waiting for broadcast at iter {t}"))?
+            {
+                WireMsg::GlobalDelta { delta, .. } => delta,
+                WireMsg::Refuse { reason } => {
+                    bail!("MBS refused mid-run (cluster {cluster}, iter {t}): {reason}")
+                }
+                other => bail!(
+                    "expected GlobalDelta, got {} (cluster {cluster}, iter {t})",
+                    other.kind()
+                ),
+            };
+            if global.dim != dim {
+                bail!(
+                    "broadcast dimension {} != model dimension {dim} (cluster {cluster})",
+                    global.dim
+                );
+            }
+            // (MbsDl bits are accounted once at the MBS — it is a broadcast.)
+            global.add_into(&mut w_global, 1.0);
+            // Pull the cluster reference toward the new global model.
+            let delta: Vec<f32> = (0..dim).map(|i| w_global[i] - w_tilde[i]).collect();
+            let dl_msg = dl_enc.compress(&delta);
+            metrics.emit(MetricEvent {
+                iter: t,
+                cluster,
+                link: LinkKind::SbsDl,
+                bits: dl_msg.wire_bits(32),
+                loss: f64::NAN,
+            });
+            dl_msg.add_into(&mut w_tilde, 1.0);
+            for (slot, tx) in mu_txs.iter().enumerate() {
+                tx.send(SbsToMu::Update {
+                    iter: t,
+                    delta: dl_msg.clone(),
+                })
+                .map_err(|_| {
+                    anyhow!("MU inbox closed (cluster {cluster}, slot {slot}, iter {t})")
+                })?;
+            }
+        }
+    }
+    Ok((w_tilde, iter_losses))
+}

@@ -304,6 +304,72 @@ impl SparseWire {
     pub fn words(&self) -> &[u64] {
         &self.words
     }
+
+    /// Per-message bit width of the packed index gaps (for serialization).
+    pub fn gap_bits(&self) -> u32 {
+        self.gap_bits
+    }
+
+    /// Reassemble a wire message from its serialized parts (the network
+    /// deserialization entry point). Validates the *shape* — `gap_bits`
+    /// width and exact word count — but not the index stream itself; use
+    /// [`SparseWire::decode_checked`] on untrusted input.
+    pub fn from_parts(
+        dim: usize,
+        nnz: usize,
+        gap_bits: u32,
+        words: Vec<u64>,
+    ) -> anyhow::Result<Self> {
+        if gap_bits > 32 {
+            anyhow::bail!("SparseWire gap_bits {gap_bits} > 32");
+        }
+        let total_bits = nnz * (gap_bits as usize + 32);
+        let expect_words = total_bits.div_ceil(64);
+        if words.len() != expect_words {
+            anyhow::bail!(
+                "SparseWire word count {} != {expect_words} (nnz {nnz}, gap_bits {gap_bits})",
+                words.len()
+            );
+        }
+        Ok(Self {
+            dim,
+            nnz,
+            gap_bits,
+            words,
+        })
+    }
+
+    /// Decode with full index validation — gaps are accumulated in i64 so
+    /// a corrupt stream whose indices run past `dim` (or past `u32`) is a
+    /// named error instead of a wrapped index that would silently corrupt
+    /// (or panic inside) the downstream scatter-add. Use at trust
+    /// boundaries; [`SparseWire::decode`] stays the cheap in-process path.
+    pub fn decode_checked(&self) -> anyhow::Result<SparseVec> {
+        let mut out = SparseVec::empty(self.dim);
+        out.reserve(self.nnz);
+        let mut r = BitReader {
+            words: &self.words,
+            pos: 0,
+        };
+        let mut prev: i64 = -1;
+        for j in 0..self.nnz {
+            let gap = r.read(self.gap_bits) as i64;
+            let idx = prev + 1 + gap;
+            if idx >= self.dim as i64 || idx > u32::MAX as i64 {
+                anyhow::bail!(
+                    "SparseWire corrupt: decoded index {idx} (entry {j}) outside dim {}",
+                    self.dim
+                );
+            }
+            out.indices.push(idx as u32);
+            prev = idx;
+        }
+        for _ in 0..self.nnz {
+            out.values.push(f32::from_bits(r.read(32) as u32));
+        }
+        debug_assert!(out.is_sorted_unique());
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -473,6 +539,38 @@ mod tests {
     fn wire_rejects_invariant_violation() {
         let bad = SparseVec { dim: 4, indices: vec![2, 1], values: vec![1.0, 2.0] };
         let _ = SparseWire::encode(&bad);
+    }
+
+    #[test]
+    fn wire_from_parts_roundtrip_and_validation() {
+        let v = SparseVec { dim: 50, indices: vec![3, 17, 49], values: vec![1.0, -2.5, 0.125] };
+        let wire = SparseWire::encode(&v);
+        let rebuilt = SparseWire::from_parts(
+            wire.dim,
+            wire.nnz,
+            wire.gap_bits(),
+            wire.words().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, wire);
+        assert_eq!(rebuilt.decode_checked().unwrap(), v);
+        // Shape violations are named errors, not panics.
+        assert!(SparseWire::from_parts(50, 3, 40, wire.words().to_vec()).is_err());
+        assert!(SparseWire::from_parts(50, 3, wire.gap_bits(), Vec::new()).is_err());
+    }
+
+    #[test]
+    fn wire_decode_checked_rejects_out_of_range_indices() {
+        // Craft a stream whose gaps walk past dim: one entry, gap 7 ⇒
+        // index 7 ≥ dim 4.
+        let v = SparseVec { dim: 8, indices: vec![7], values: vec![1.0] };
+        let wire = SparseWire::encode(&v);
+        let bad = SparseWire::from_parts(4, wire.nnz, wire.gap_bits(), wire.words().to_vec())
+            .unwrap();
+        let err = bad.decode_checked().unwrap_err().to_string();
+        assert!(err.contains("outside dim"), "{err}");
+        // The honest stream decodes clean.
+        assert_eq!(wire.decode_checked().unwrap(), v);
     }
 
     #[test]

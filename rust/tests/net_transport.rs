@@ -1,0 +1,285 @@
+//! Integration tests for the `net` subsystem — the coordinator as a
+//! service:
+//!
+//! 1. **Loopback ≡ in-process** (the tentpole invariant): routing every
+//!    SBS↔MBS hop through the framed `SparseWire` transport must not
+//!    move a single bit. Swept across cluster counts × φ levels × both
+//!    aggregation paths against the sequential reference engine, plus a
+//!    full-`GoldenTrace` rerun-determinism check of the transport path
+//!    itself.
+//! 2. **TCP ≡ loopback**: a real localhost MBS with per-cluster worker
+//!    threads (each building its own oracle, as `hfl worker` processes
+//!    do) reproduces the loopback run's `GoldenTrace` exactly.
+//! 3. **Session log → replay**: `replay_session` rebuilds the full
+//!    golden trace from the fsynced message log alone — no retraining —
+//!    and a torn log yields a named incomplete-session error.
+//! 4. **Handshake**: a fingerprint mismatch over real TCP is refused
+//!    with the documented message on both sides.
+//! 5. **`/metrics`**: the live endpoint serves counters that agree with
+//!    the run's own metrics log.
+
+use hfl::config::SparsityConfig;
+use hfl::coordinator::{run_coordinated, ComputeService, CoordinatorOptions, LinkKind};
+use hfl::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
+use hfl::net::serve::handshake_mbs;
+use hfl::net::{
+    accept_workers, handshake_worker, replay_session, run_cell, run_coordinated_service, run_mbs,
+    LiveMetrics, MetricsServer, SessionLog, TcpTransport,
+};
+use hfl::sim::GoldenTrace;
+use hfl::sparse::{AggPath, AggPolicy};
+use hfl::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sparsity(phi: Option<f64>) -> SparsityConfig {
+    match phi {
+        Some(p) => SparsityConfig {
+            enabled: true,
+            phi_mu_ul: p,
+            phi_sbs_dl: 0.5,
+            phi_sbs_ul: 0.5,
+            phi_mbs_dl: 0.5,
+            beta_m: 0.2,
+            beta_s: 0.5,
+        },
+        None => SparsityConfig::dense(),
+    }
+}
+
+fn train_opts(phi: Option<f64>, n_clusters: usize, path: AggPath) -> TrainOptions {
+    TrainOptions {
+        iters: 24,
+        peak_lr: 0.04,
+        warmup_iters: 4,
+        milestones: (0.5, 0.75),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        h_period: 4,
+        n_clusters,
+        sparsity: sparsity(phi),
+        eval_every: 0,
+        inner_threads: 1,
+        pool: None,
+        agg: AggPolicy {
+            path,
+            ..Default::default()
+        },
+    }
+}
+
+fn coord_opts(phi: Option<f64>, n_clusters: usize, iters: usize) -> CoordinatorOptions {
+    CoordinatorOptions {
+        iters,
+        peak_lr: 0.04,
+        warmup_iters: 4,
+        milestones: (0.5, 0.75),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        h_period: 4,
+        n_clusters,
+        sparsity: sparsity(phi),
+        eval_every_syncs: 0,
+        agg: Default::default(),
+    }
+}
+
+/// The tentpole safety net: `run_coordinated` now routes every SBS↔MBS
+/// hop through framed loopback transports, so it must still match the
+/// sequential reference engine bit-for-bit — final parameters and
+/// per-link bit accounting — for every cluster count × φ × agg path.
+/// (Loss digests are engine-internal summation order and deliberately
+/// not compared across *engines*; they ARE compared across *reruns* of
+/// the transport path, where the full `GoldenTrace` must be stable.)
+#[test]
+fn prop_loopback_transport_bit_identical_to_in_process() {
+    for n_clusters in [1usize, 2, 4] {
+        for phi in [None, Some(0.9), Some(0.99)] {
+            for path in [AggPath::Dense, AggPath::Sparse] {
+                let seed = 9000 + n_clusters as u64;
+                let opts = train_opts(phi, n_clusters, path);
+                let mut oracle = QuadraticOracle::new(24, 8, 0.0, seed);
+                let seq = run_hierarchical(&mut oracle, &opts);
+
+                let copts = CoordinatorOptions::from(&opts);
+                let make = move || QuadraticOracle::new(24, 8, 0.0, seed);
+                let coord = run_coordinated(make, &copts).unwrap();
+                let coord2 = run_coordinated(make, &copts).unwrap();
+
+                let label = format!("n={n_clusters} phi={phi:?} path={path:?}");
+                let ts = GoldenTrace::from_train_log(&seq);
+                let tc = GoldenTrace::from_coordinated(&coord);
+                assert_eq!(ts.params_hash, tc.params_hash, "params diverged ({label})");
+                assert_eq!(ts.bits, tc.bits, "bit accounting diverged ({label})");
+                assert_eq!(
+                    tc,
+                    GoldenTrace::from_coordinated(&coord2),
+                    "transport path not rerun-deterministic ({label})"
+                );
+            }
+        }
+    }
+}
+
+/// A real TCP session — MBS on a localhost listener, one worker thread
+/// per cluster building its own oracle (exactly what `hfl serve` +
+/// `hfl worker` processes do) — reproduces the loopback golden trace.
+#[test]
+fn tcp_session_matches_loopback_trace_bit_exactly() {
+    fn make() -> QuadraticOracle {
+        QuadraticOracle::new(16, 6, 0.0, 4242)
+    }
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let reference = run_coordinated(make, &opts).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fingerprint = 0xfeed_f00d_u64;
+
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let opts = opts.clone();
+            std::thread::spawn(move || -> hfl::Result<()> {
+                let mut transport =
+                    TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))?;
+                let (cluster, _n) = handshake_worker(&mut transport, fingerprint, None)?;
+                let svc = ComputeService::spawn(make);
+                let res = run_cell(svc.handle(), &opts, cluster, &mut transport);
+                svc.shutdown();
+                res
+            })
+        })
+        .collect();
+
+    let links = accept_workers(&listener, fingerprint, 2).unwrap();
+    let svc = ComputeService::spawn(make);
+    let compute = svc.handle();
+    let (dim, _k, init, _ipe) = compute.meta();
+    let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
+    let run = run_mbs(links, &opts, dim, &init, &mut eval, None, None).unwrap();
+    svc.shutdown();
+    for j in workers {
+        j.join().unwrap().unwrap();
+    }
+
+    assert_eq!(
+        GoldenTrace::from_coordinated(&reference),
+        GoldenTrace::from_coordinated(&run),
+        "TCP session diverged from the loopback run"
+    );
+}
+
+/// The fsynced session log alone reconstructs the run: same parameter
+/// hash, same loss digest, same per-link bits. Tearing the tail (the
+/// writer died mid-final-record) turns into the named incomplete-session
+/// error, not silence.
+#[test]
+fn session_log_replays_bit_exactly_and_torn_log_is_named() {
+    let dir = std::env::temp_dir().join(format!("hfl-net-replay-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("session.hlog");
+
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let header = hfl::net::SessionHeader {
+        name: "net-replay-test".into(),
+        fingerprint: 0x1,
+        dim: 16,
+        n_clusters: 2,
+        workers: 6,
+        h_period: opts.h_period,
+        iters: opts.iters,
+        sparse: true,
+    };
+    let mut log = SessionLog::create(&path, &header).unwrap();
+    let live = Arc::new(LiveMetrics::new(2));
+    let run = run_coordinated_service(
+        || QuadraticOracle::new(16, 6, 0.0, 913),
+        &opts,
+        Some(&mut log),
+        Some(live.as_ref()),
+    )
+    .unwrap();
+    drop(log);
+
+    let (h, replayed) = replay_session(&path).unwrap();
+    assert_eq!(h.name, "net-replay-test");
+    assert_eq!(
+        GoldenTrace::from_coordinated(&run),
+        GoldenTrace::from_coordinated(&replayed),
+        "replayed trace diverged from the live session"
+    );
+    // Replay is a fold over logged messages, not a retrain: it carries no
+    // eval results (neither enters the golden trace).
+    assert!(replayed.sync_evals.is_empty());
+
+    // The live endpoint saw the whole run.
+    let j = live.to_json();
+    assert!(matches!(j.get("finished"), Some(Json::Bool(true))));
+    assert_eq!(j.get("clusters_done").and_then(Json::as_usize), Some(2));
+    assert!(j.get("sync_rounds").and_then(Json::as_f64).unwrap() > 0.0);
+
+    // Tear the final frame (a cluster's Done record): the prefix still
+    // parses, and replay names the incomplete cluster.
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+    let err = replay_session(&path).unwrap_err().to_string();
+    assert!(err.contains("never reported Done"), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fingerprint mismatch over real TCP: the MBS refuses (and keeps its
+/// slot table untouched), the worker surfaces the reason.
+#[test]
+fn tcp_handshake_refuses_fingerprint_mismatch() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker = std::thread::spawn(move || {
+        let mut t = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+        handshake_worker(&mut t, 0xbad, None).unwrap_err().to_string()
+    });
+
+    let (stream, _) = listener.accept().unwrap();
+    let mut t = TcpTransport::new(stream).unwrap();
+    let mut taken = vec![false];
+    assert!(handshake_mbs(&mut t, 0x600d, &mut taken).is_err());
+    assert!(!taken[0], "refused worker must not occupy a cluster slot");
+
+    let msg = worker.join().unwrap();
+    assert!(msg.contains("fingerprint mismatch"), "unexpected error: {msg}");
+}
+
+/// `GET /metrics` during/after a served run returns counters consistent
+/// with the run's own metrics log.
+#[test]
+fn metrics_endpoint_serves_run_counters() {
+    let opts = coord_opts(None, 1, 8);
+    let live = Arc::new(LiveMetrics::new(1));
+    let server = MetricsServer::spawn("127.0.0.1:0", Arc::clone(&live)).unwrap();
+    let run = run_coordinated_service(
+        || QuadraticOracle::new(8, 4, 0.0, 31),
+        &opts,
+        None,
+        Some(live.as_ref()),
+    )
+    .unwrap();
+
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+        .unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 200"), "{response}");
+    let body = response.split("\r\n\r\n").nth(1).unwrap();
+    let j = json::parse(body).unwrap();
+    assert!(matches!(j.get("finished"), Some(Json::Bool(true))));
+    let mu_msgs = run
+        .metrics
+        .events
+        .iter()
+        .filter(|e| e.link == LinkKind::MuUl)
+        .count();
+    assert_eq!(j.get("mu_msgs").and_then(Json::as_usize), Some(mu_msgs));
+}
