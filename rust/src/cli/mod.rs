@@ -14,6 +14,7 @@
 //! The shared `--pool-threads` option (persistent worker-pool lane budget,
 //! see [`crate::pool`]) is resolved by [`pool_from_args`].
 
+use crate::net::chaos::{ChaosConfig, FaultPolicy};
 use crate::pool::WorkerPool;
 use crate::sparse::merge::{AggPath, AggPolicy};
 use anyhow::{bail, Result};
@@ -51,6 +52,64 @@ pub fn pool_from_args(args: &Args, default_lanes: usize) -> Result<Option<Worker
     } else {
         Some(WorkerPool::new(lanes))
     })
+}
+
+/// Resolve the `--chaos-*` fault-plan options against the `[chaos]`
+/// config default. `--chaos` alone enables the config-file plan; any
+/// `--chaos-*` value both sets its field and enables the plan (an
+/// explicit fault flag is an explicit opt-in). The merged plan is
+/// re-validated, so CLI values obey the same bounds as the config file.
+pub fn chaos_from_args(args: &Args, default: &ChaosConfig) -> Result<ChaosConfig> {
+    let mut chaos = default.clone();
+    let mut touched = args.flag("chaos");
+    let mut set = |field: &mut f64, v: Option<f64>| {
+        if let Some(v) = v {
+            *field = v;
+            touched = true;
+        }
+    };
+    set(&mut chaos.drop_p, args.get_parsed("chaos-drop")?);
+    set(&mut chaos.delay_p, args.get_parsed("chaos-delay")?);
+    set(&mut chaos.dup_p, args.get_parsed("chaos-dup")?);
+    set(&mut chaos.truncate_p, args.get_parsed("chaos-truncate")?);
+    set(&mut chaos.corrupt_p, args.get_parsed("chaos-corrupt")?);
+    if let Some(seed) = args.get_parsed("chaos-seed")? {
+        chaos.seed = seed;
+        touched = true;
+    }
+    if let Some(ms) = args.get_parsed("chaos-delay-ms")? {
+        chaos.delay_ms = ms;
+        touched = true;
+    }
+    if let Some(c) = args.get_parsed("chaos-kill-cluster")? {
+        chaos.kill_cluster = Some(c);
+        touched = true;
+    }
+    if let Some(at) = args.get_parsed("chaos-kill-after")? {
+        chaos.kill_after = at;
+        touched = true;
+    }
+    if touched {
+        chaos.enabled = true;
+    }
+    chaos.validate()?;
+    Ok(chaos)
+}
+
+/// Resolve `--fault-policy wait-all|deadline-skip|quorum` (with
+/// `--fault-quorum K` for the latter). Absent flags keep the pre-chaos
+/// default: wait for every cluster, any fault is fatal.
+pub fn fault_policy_from_args(args: &Args) -> Result<FaultPolicy> {
+    let quorum = args.get_parsed_or("fault-quorum", 0usize)?;
+    match args.get("fault-policy") {
+        None => {
+            if quorum != 0 {
+                bail!("--fault-quorum requires --fault-policy quorum");
+            }
+            Ok(FaultPolicy::WaitAll)
+        }
+        Some(s) => FaultPolicy::parse(s, quorum),
+    }
 }
 
 /// Parsed command line: a subcommand plus `--key value` options and
@@ -292,6 +351,74 @@ mod tests {
         // Unknown values are rejected.
         let a = Args::parse(["matrix", "--agg-path", "turbo"]).unwrap();
         assert!(agg_from_args(&a, AggPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn chaos_from_args_merges_and_enables() {
+        // No chaos flags: the (disabled) config default passes through.
+        let a = Args::parse(["serve"]).unwrap();
+        let chaos = chaos_from_args(&a, &ChaosConfig::default()).unwrap();
+        assert!(!chaos.enabled);
+        a.finish().unwrap();
+
+        // Any --chaos-* value enables the plan and sets its field.
+        let a = Args::parse([
+            "serve",
+            "--chaos-seed",
+            "42",
+            "--chaos-drop",
+            "0.25",
+            "--chaos-kill-cluster",
+            "1",
+            "--chaos-kill-after",
+            "9",
+        ])
+        .unwrap();
+        let chaos = chaos_from_args(&a, &ChaosConfig::default()).unwrap();
+        assert!(chaos.enabled);
+        assert_eq!(chaos.seed, 42);
+        assert_eq!(chaos.drop_p, 0.25);
+        assert_eq!(chaos.kill_cluster, Some(1));
+        assert_eq!(chaos.kill_after, 9);
+        a.finish().unwrap();
+
+        // Bare --chaos enables the config-file plan unchanged.
+        let a = Args::parse(["serve", "--chaos"]).unwrap();
+        let base = ChaosConfig {
+            seed: 7,
+            drop_p: 0.1,
+            ..ChaosConfig::default()
+        };
+        let chaos = chaos_from_args(&a, &base).unwrap();
+        assert!(chaos.enabled);
+        assert_eq!(chaos.seed, 7);
+        assert_eq!(chaos.drop_p, 0.1);
+        a.finish().unwrap();
+
+        // CLI values are validated like config values.
+        let a = Args::parse(["serve", "--chaos-drop", "1.5"]).unwrap();
+        assert!(chaos_from_args(&a, &ChaosConfig::default()).is_err());
+    }
+
+    #[test]
+    fn fault_policy_from_args_parses_all_policies() {
+        let a = Args::parse(["serve"]).unwrap();
+        assert_eq!(fault_policy_from_args(&a).unwrap(), FaultPolicy::WaitAll);
+        a.finish().unwrap();
+
+        let a = Args::parse(["serve", "--fault-policy", "deadline-skip"]).unwrap();
+        assert_eq!(fault_policy_from_args(&a).unwrap(), FaultPolicy::DeadlineSkip);
+
+        let a = Args::parse(["serve", "--fault-policy", "quorum", "--fault-quorum", "2"]).unwrap();
+        assert_eq!(fault_policy_from_args(&a).unwrap(), FaultPolicy::Quorum(2));
+
+        // quorum without K, K without quorum, junk policy: all named errors.
+        let a = Args::parse(["serve", "--fault-policy", "quorum"]).unwrap();
+        assert!(fault_policy_from_args(&a).is_err());
+        let a = Args::parse(["serve", "--fault-quorum", "2"]).unwrap();
+        assert!(fault_policy_from_args(&a).is_err());
+        let a = Args::parse(["serve", "--fault-policy", "panic"]).unwrap();
+        assert!(fault_policy_from_args(&a).is_err());
     }
 
     #[test]

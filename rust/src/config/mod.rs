@@ -452,6 +452,10 @@ pub struct NetConfig {
     /// Session message-log path for `hfl replay`; empty (the default)
     /// disables logging.
     pub session_log: String,
+    /// Read/write timeout on every TCP transport, in milliseconds: a hung
+    /// peer yields a named io-timeout error instead of wedging the MBS.
+    /// 0 disables the bound. CLI override: `--io-timeout-ms`.
+    pub io_timeout_ms: u64,
 }
 
 impl Default for NetConfig {
@@ -460,6 +464,9 @@ impl Default for NetConfig {
             listen_addr: "127.0.0.1:7070".into(),
             metrics_addr: String::new(),
             session_log: String::new(),
+            // Generous: a full H-period of local compute plus aggregation
+            // must fit comfortably under the bound.
+            io_timeout_ms: 30_000,
         }
     }
 }
@@ -470,6 +477,11 @@ impl NetConfig {
             bail!("net listen_addr must not be empty");
         }
         Ok(())
+    }
+
+    /// The configured io timeout as a `Duration` (`None` when disabled).
+    pub fn io_timeout(&self) -> Option<std::time::Duration> {
+        (self.io_timeout_ms > 0).then(|| std::time::Duration::from_millis(self.io_timeout_ms))
     }
 }
 
@@ -505,6 +517,11 @@ pub struct Config {
     pub pool: PoolConfig,
     pub checkpoint: CheckpointConfig,
     pub net: NetConfig,
+    /// Deterministic fault injection (`crate::net::chaos`): a seeded
+    /// fault plan applied to every serve/worker transport. `[chaos]`
+    /// section / `--chaos-*` CLI flags; disabled by default, in which
+    /// case every transport is the untouched status quo.
+    pub chaos: crate::net::chaos::ChaosConfig,
     /// Aggregation dispatch (`crate::sparse::merge`): sparse k-way merge
     /// vs dense scatter at the SBS/MBS aggregation call sites. `[agg]
     /// path = "auto"|"sparse"|"dense"`, `[agg] crossover = 0.25`; CLI
@@ -545,6 +562,7 @@ impl Config {
         self.pool.validate().context("pool")?;
         self.checkpoint.validate().context("checkpoint")?;
         self.net.validate().context("net")?;
+        self.chaos.validate().context("chaos")?;
         self.agg.validate().context("agg")?;
         Ok(())
     }
@@ -665,6 +683,21 @@ impl Config {
                 };
                 self.net.session_log = s.clone();
             }
+            ("net", "io_timeout_ms") => self.net.io_timeout_ms = need_usize()? as u64,
+            ("chaos", "enabled") => {
+                self.chaos.enabled = value
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
+            ("chaos", "seed") => self.chaos.seed = need_usize()? as u64,
+            ("chaos", "drop_p") => self.chaos.drop_p = need_f64()?,
+            ("chaos", "delay_p") => self.chaos.delay_p = need_f64()?,
+            ("chaos", "delay_ms") => self.chaos.delay_ms = need_usize()? as u64,
+            ("chaos", "dup_p") => self.chaos.dup_p = need_f64()?,
+            ("chaos", "truncate_p") => self.chaos.truncate_p = need_f64()?,
+            ("chaos", "corrupt_p") => self.chaos.corrupt_p = need_f64()?,
+            ("chaos", "kill_cluster") => self.chaos.kill_cluster = Some(need_usize()?),
+            ("chaos", "kill_after") => self.chaos.kill_after = need_usize()? as u64,
             ("agg", "path") => {
                 let V::Str(s) = value else {
                     bail!("expected string");
@@ -885,6 +918,40 @@ mod tests {
         c.validate().unwrap();
         c.net.listen_addr.clear();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_defaults_off_and_overridable() {
+        let c = Config::default();
+        assert!(!c.chaos.enabled, "chaos must default to off");
+        assert_eq!(c.net.io_timeout_ms, 30_000);
+        assert_eq!(c.net.io_timeout(), Some(std::time::Duration::from_secs(30)));
+
+        let mut c = Config::default();
+        c.apply_override("chaos", "enabled", &toml::TomlValue::Bool(true))
+            .unwrap();
+        c.apply_override("chaos", "seed", &toml::TomlValue::Int(42))
+            .unwrap();
+        c.apply_override("chaos", "drop_p", &toml::TomlValue::Float(0.1))
+            .unwrap();
+        c.apply_override("chaos", "delay_ms", &toml::TomlValue::Int(5))
+            .unwrap();
+        c.apply_override("chaos", "kill_cluster", &toml::TomlValue::Int(1))
+            .unwrap();
+        c.apply_override("chaos", "kill_after", &toml::TomlValue::Int(7))
+            .unwrap();
+        c.apply_override("net", "io_timeout_ms", &toml::TomlValue::Int(0))
+            .unwrap();
+        assert!(c.chaos.enabled);
+        assert_eq!(c.chaos.seed, 42);
+        assert_eq!(c.chaos.kill_cluster, Some(1));
+        assert_eq!(c.chaos.kill_after, 7);
+        assert_eq!(c.net.io_timeout(), None, "0 disables the io bound");
+        c.validate().unwrap();
+
+        c.chaos.drop_p = 2.0;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("chaos"), "{err:#}");
     }
 
     #[test]

@@ -123,6 +123,10 @@ pub struct CoordinatorRun {
     pub metrics: MetricsLog,
     /// (iteration, mean training loss).
     pub train_loss: Vec<(usize, f64)>,
+    /// Clusters the fault policy declared dead, as `(cluster, sync round
+    /// of the skip)` in skip order. Empty on every clean run; enters the
+    /// golden trace as the skip digest.
+    pub skips: Vec<(usize, usize)>,
 }
 
 /// Run hierarchical FL on the actor topology. `factory` constructs the

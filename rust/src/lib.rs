@@ -37,6 +37,7 @@
 //! | [`runtime`] | PJRT client wrapper + HLO artifact registry (`pjrt` feature; offline stub by default) |
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
 //! | [`net`] | **coordinator-as-a-service**: framed `SparseWire` transport (loopback + TCP), `hfl serve`/`hfl worker` multi-process roles with fingerprint handshake, fsynced session log + bit-exact `hfl replay`, live `/metrics` HTTP endpoint (`[net]`) |
+//! | [`net::chaos`] | **deterministic fault injection + fault policies**: seeded `ChaosTransport` fault plans (`[chaos]`/`--chaos-*`; same seed ⇒ bit-identical run), worker rejoin with round-level recovery from the MBS broadcast history, degrade-and-continue aggregation (`--fault-policy wait-all\|deadline-skip\|quorum`) with skips pinned in the golden trace |
 //! | [`des`] | **discrete-event HCN simulator**: `(time, seq)`-keyed event queue, waypoint mobility + handover, straggler deadlines with stale discounting, timeline digests |
 //! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`, now with mobility × straggler axes), shared `ScenarioResult` + golden traces (`sim::result`) |
 //! | [`snapshot`] | **checkpoint/resume**: versioned FNV-1a-checksummed engine-state snapshots (exact f32/f64 bit patterns, RNG raw states, DES event queue), atomic writes, append-only JSONL run log for resumable matrix sweeps (`--checkpoint-every` / `--resume`) |

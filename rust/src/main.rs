@@ -30,6 +30,11 @@
 //!               [--session-log P] [--dim N] [--iters N] [--phi F]
 //!               [--clusters N] [--mus N] [--h N] [--seed S]
 //!               [--agg-path auto|sparse|dense]
+//!               [--io-timeout-ms N] [--rejoin-deadline-ms N]
+//!               [--fault-policy wait-all|deadline-skip|quorum] [--fault-quorum K]
+//!               [--chaos] [--chaos-seed S] [--chaos-drop P] [--chaos-delay P]
+//!               [--chaos-delay-ms N] [--chaos-dup P] [--chaos-truncate P]
+//!               [--chaos-corrupt P] [--chaos-kill-cluster C] [--chaos-kill-after N]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  MBS service: accept one TCP worker per
 //!                                  cluster (or run all cells in-process
@@ -37,6 +42,8 @@
 //! hfl worker    [--connect A] [--cluster C] [--dim N] [--iters N]
 //!               [--phi F] [--clusters N] [--mus N] [--h N] [--seed S]
 //!               [--agg-path auto|sparse|dense]
+//!               [--io-timeout-ms N] [--rejoin N] [--rejoining]
+//!               [--chaos…  same fault-plan flags as serve]
 //!                                  one SBS+MUs cell against a serving MBS
 //! hfl replay    --session-log P [--out results/]
 //!               [--write-golden F] [--check-golden F]
@@ -66,6 +73,19 @@
 //! single φ cell (the CI determinism job uses it for the φ=0.99
 //! sparse-vs-dense diff).
 //!
+//! The `--chaos-*` flags arm a seeded deterministic fault plan
+//! (`hfl::net::chaos`, `[chaos]` config section) on serve and worker
+//! transports: frames are dropped/delayed/duplicated/truncated/corrupted
+//! from `Pcg64` streams keyed by the chaos seed, and
+//! `--chaos-kill-cluster C --chaos-kill-after N` kills one endpoint at a
+//! planned operation index. Same seed ⇒ bit-identical run (golden-diffable).
+//! `--fault-policy`/`--fault-quorum` pick how the MBS degrades when a
+//! cluster dies (skip + reweight over survivors vs abort);
+//! `--rejoin-deadline-ms` opens the rejoin lane, which catches a
+//! relaunched `hfl worker --rejoining --cluster C` up bit-exactly from the
+//! per-round recovery point. `--io-timeout-ms` bounds every socket
+//! read/write so a hung peer is a named error, not a wedge.
+//!
 //! `--checkpoint-every N` enables checkpoint/resume (`hfl::snapshot`,
 //! `[checkpoint]` config section): `hfl train` snapshots full engine state
 //! every N rounds, while the grid commands (`matrix`, `des`) append each
@@ -81,8 +101,10 @@ use hfl::coordinator::{run_coordinated, ComputeService, CoordinatorOptions};
 use hfl::data::SyntheticSpec;
 use hfl::fl::{run_hierarchical_checkpointed, TrainOptions};
 use hfl::net::{
-    accept_workers, handshake_worker, replay_session, run_cell, run_coordinated_service, run_mbs,
-    LiveMetrics, MetricsServer, NetScenario, SessionLog, TcpTransport,
+    accept_workers_timeout, handshake_worker, replay_session, run_cell, run_chaos_service,
+    run_coordinated_service, run_mbs_faulty, ChaosTransport, ClusterLink, FaultContext,
+    FaultCounters, LiveMetrics, MetricsServer, NetScenario, SessionLog, TcpTransport, Transport,
+    WireMsg,
 };
 use hfl::runtime::{ModelOracle, Runtime};
 use hfl::sim::experiments::{self, Scale};
@@ -525,6 +547,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let out = args.get_or("out", "results");
     let write_golden = args.get("write-golden").map(str::to_string);
     let check_golden = args.get("check-golden").map(str::to_string);
+    let chaos = hfl::cli::chaos_from_args(args, &cfg.chaos)?;
+    let policy = hfl::cli::fault_policy_from_args(args)?;
+    let rejoin_deadline = Duration::from_millis(args.get_parsed_or("rejoin-deadline-ms", 0u64)?);
+    let io_timeout_ms = args.get_parsed_or("io-timeout-ms", cfg.net.io_timeout_ms)?;
+    let io_timeout = (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms));
     args.finish()?;
 
     let fingerprint = scenario.fingerprint();
@@ -534,6 +561,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     );
 
     let live = Arc::new(LiveMetrics::new(scenario.n_clusters));
+    let counters = Arc::new(FaultCounters::default());
+    if chaos.enabled {
+        live.attach_fault_counters(Arc::clone(&counters));
+        println!("chaos fault plan armed (seed {})", chaos.seed);
+    }
     // Bound to a variable: dropping the server closes its listener thread.
     let _metrics_server = if metrics_addr.is_empty() {
         None
@@ -553,17 +585,47 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let t0 = std::time::Instant::now();
     let run = if standalone {
         let sc = scenario.clone();
-        run_coordinated_service(
-            move || sc.oracle(),
-            &scenario.copts,
-            log.as_mut(),
-            Some(live.as_ref()),
-        )?
+        if chaos.enabled {
+            run_chaos_service(
+                move || sc.oracle(),
+                &scenario.copts,
+                &chaos,
+                policy,
+                Arc::clone(&counters),
+                log.as_mut(),
+                Some(live.as_ref()),
+            )?
+        } else {
+            run_coordinated_service(
+                move || sc.oracle(),
+                &scenario.copts,
+                log.as_mut(),
+                Some(live.as_ref()),
+            )?
+        }
     } else {
         let listener = std::net::TcpListener::bind(&listen)
             .with_context(|| format!("binding MBS listener on {listen}"))?;
         println!("listening on {}", listener.local_addr()?);
-        let links = accept_workers(&listener, fingerprint, scenario.n_clusters)?;
+        let links = accept_workers_timeout(&listener, fingerprint, scenario.n_clusters, io_timeout)?;
+        // Chaos wraps the MBS side of each link (stream tag = cluster id,
+        // matching run_chaos_service; workers tag their own side past n).
+        let links: Vec<ClusterLink> = links
+            .into_iter()
+            .map(|l| {
+                let cluster = l.cluster;
+                ClusterLink {
+                    cluster,
+                    transport: ChaosTransport::wrap(
+                        l.transport,
+                        &chaos,
+                        cluster,
+                        cluster as u64,
+                        Arc::clone(&counters),
+                    ),
+                }
+            })
+            .collect();
         // The MBS needs init + eval but never trains: its own copy of the
         // deterministic oracle matches every worker's bit-for-bit.
         let sc = scenario.clone();
@@ -571,7 +633,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         let compute = svc.handle();
         let (dim, _k, init, _ipe) = compute.meta();
         let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
-        let run = run_mbs(
+        let faults = FaultContext {
+            policy,
+            rejoin_deadline,
+            listener: Some(&listener),
+            fingerprint,
+            io_timeout,
+        };
+        let run = run_mbs_faulty(
             links,
             &scenario.copts,
             dim,
@@ -579,6 +648,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             &mut eval,
             log.as_mut(),
             Some(live.as_ref()),
+            &faults,
         );
         svc.shutdown();
         run?
@@ -588,6 +658,13 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         scenario.name,
         t0.elapsed().as_secs_f64()
     );
+    if chaos.enabled {
+        println!(
+            "chaos summary: {} faults injected, {} clusters skipped",
+            counters.total_faults(),
+            run.skips.len()
+        );
+    }
 
     let result = result::ScenarioResult::from_coordinated(scenario.meta(), 0.0, &run);
     println!("{}", result.table_row());
@@ -603,7 +680,16 @@ fn cmd_worker(args: &Args, cfg: &Config) -> Result<()> {
     let mut scenario = NetScenario::from_cli(args, cfg)?;
     scenario.copts.agg = hfl::cli::agg_from_args(args, cfg.agg)?;
     let connect = args.get_or("connect", &cfg.net.listen_addr);
-    let want = args.get_parsed::<usize>("cluster")?;
+    let mut want = args.get_parsed::<usize>("cluster")?;
+    let chaos = hfl::cli::chaos_from_args(args, &cfg.chaos)?;
+    let io_timeout_ms = args.get_parsed_or("io-timeout-ms", cfg.net.io_timeout_ms)?;
+    let io_timeout = (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms));
+    // In-process retry budget: after a link failure the worker reconnects,
+    // announces Rejoin and recomputes from round 0 (the MBS catch-up lane
+    // replays the stored broadcasts). `--rejoining` marks a *relaunched*
+    // process (e.g. after kill -9) so its very first connection rejoins.
+    let rejoin_attempts = args.get_parsed_or("rejoin", 0usize)?;
+    let rejoining = args.flag("rejoining");
     args.finish()?;
 
     let fingerprint = scenario.fingerprint();
@@ -611,23 +697,60 @@ fn cmd_worker(args: &Args, cfg: &Config) -> Result<()> {
         "worker for scenario {} (fingerprint {fingerprint:016x}) connecting to {connect}",
         scenario.name
     );
-    let mut transport = TcpTransport::connect_retry(&connect, Duration::from_secs(30))?;
-    let (cluster, n) = handshake_worker(&mut transport, fingerprint, want)?;
-    if n != scenario.n_clusters {
-        bail!(
-            "MBS serves {n} clusters but local config has {} — flags diverge",
-            scenario.n_clusters
+    let counters = Arc::new(FaultCounters::default());
+    let mut attempt = 0usize;
+    loop {
+        let mut transport = TcpTransport::connect_retry(&connect, Duration::from_secs(30))?;
+        transport.set_io_timeout(io_timeout)?;
+        let (cluster, n) = handshake_worker(&mut transport, fingerprint, want)?;
+        if n != scenario.n_clusters {
+            bail!(
+                "MBS serves {n} clusters but local config has {} — flags diverge",
+                scenario.n_clusters
+            );
+        }
+        // A reconnect must land on the same cluster slot.
+        want = Some(cluster);
+        // Worker-side chaos stream tags live past the MBS's 0..n block so
+        // the two endpoints of one link never share a fault stream. A
+        // planned kill fires once: the reconnected link drops it (else
+        // every rejoin would be killed at the same operation index).
+        let mut plan = chaos.clone();
+        if attempt > 0 {
+            plan.kill_cluster = None;
+        }
+        let mut link: Box<dyn Transport> = ChaosTransport::wrap(
+            Box::new(transport),
+            &plan,
+            cluster,
+            (n + cluster) as u64,
+            Arc::clone(&counters),
         );
-    }
-    println!("assigned cluster {cluster}/{n}");
+        if rejoining || attempt > 0 {
+            link.send(&WireMsg::Rejoin { cluster, round: 0 })?;
+            println!("cluster {cluster}/{n} rejoining from round 0");
+        } else {
+            println!("assigned cluster {cluster}/{n}");
+        }
 
-    let sc = scenario.clone();
-    let svc = ComputeService::spawn(move || sc.oracle());
-    let res = run_cell(svc.handle(), &scenario.copts, cluster, &mut transport);
-    svc.shutdown();
-    res?;
-    println!("cluster {cluster} done");
-    Ok(())
+        let sc = scenario.clone();
+        let svc = ComputeService::spawn(move || sc.oracle());
+        let res = run_cell(svc.handle(), &scenario.copts, cluster, link.as_mut());
+        svc.shutdown();
+        match res {
+            Ok(()) => {
+                println!("cluster {cluster} done");
+                return Ok(());
+            }
+            Err(e) if attempt < rejoin_attempts => {
+                attempt += 1;
+                eprintln!(
+                    "cluster {cluster} link failed (rejoin attempt {attempt}/{rejoin_attempts}): {e:#}"
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 /// `hfl replay` — reconstruct a finished run from its session log alone.

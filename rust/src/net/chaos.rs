@@ -1,0 +1,441 @@
+//! Deterministic chaos/fault injection for the coordinator transport,
+//! plus the MBS-side fault policy vocabulary.
+//!
+//! [`ChaosTransport`] wraps any [`Transport`] and perturbs it from a
+//! *seeded fault plan*: every fault decision is drawn from a [`Pcg64`]
+//! stream keyed by `(chaos seed, endpoint stream tag, message index)` —
+//! never from wall-clock time — so two runs with the same chaos seed
+//! inject the exact same faults at the exact same protocol points, at
+//! any thread count. Fault handling thereby *joins* the determinism
+//! contract instead of escaping it: a chaos run is reproducible and
+//! golden-diffable like any other.
+//!
+//! ## Fault model
+//!
+//! Two fault classes, deliberately different in mechanism:
+//!
+//! - **Healed byte faults** (`drop`, `duplicate`, `truncate`, `corrupt`,
+//!   `delay`): the `WireMsg` protocol is lockstep with no retransmit
+//!   lane, so a damaged frame is detected by the checksummed frame codec
+//!   and recovered by retransmission *below* the message boundary. The
+//!   wrapper models that reliability sublayer: it draws the fault,
+//!   counts it (and sleeps for planned delays — wall-clock only, never
+//!   arithmetic), then delivers the intact frame exactly once, i.e. the
+//!   detect-and-retransmit exchange collapsed to its deterministic
+//!   outcome. What the run observes — fault counters, delays, retry
+//!   totals — is real; the delivered message stream is byte-identical,
+//!   which is precisely the invariant a checksummed transport must hold.
+//! - **Kills** (`kill_cluster`/`kill_after`): the one fault the message
+//!   layer *can* see. Once the plan's operation index is reached the
+//!   endpoint is dead — every later `send`/`recv` fails with a named
+//!   error — exercising the real recovery machinery: the MBS rejoin
+//!   lane, [`FaultPolicy`] degradation, and worker rejoin
+//!   (`WireMsg::Rejoin`).
+//!
+//! With chaos disabled (the default) [`ChaosTransport::wrap`] returns
+//! the inner transport untouched, so the zero-fault path is the
+//! byte-identical status quo every existing golden fixture pins.
+
+use super::transport::Transport;
+use super::wire::WireMsg;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The `[chaos]` config section / `--chaos-*` CLI flags: a seeded fault
+/// plan. All probabilities are per-message; everything defaults to off.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosConfig {
+    /// Master switch; `false` makes [`ChaosTransport::wrap`] a no-op.
+    pub enabled: bool,
+    /// Seed of every fault stream (`--chaos-seed`).
+    pub seed: u64,
+    /// P(frame dropped, then retransmitted) per message.
+    pub drop_p: f64,
+    /// P(frame delayed by [`ChaosConfig::delay_ms`]) per message.
+    pub delay_p: f64,
+    /// Injected delay per delayed frame (wall-clock only).
+    pub delay_ms: u64,
+    /// P(frame duplicated, duplicate discarded) per message.
+    pub dup_p: f64,
+    /// P(frame truncated, then retransmitted) per message.
+    pub truncate_p: f64,
+    /// P(frame corrupted, then retransmitted) per message.
+    pub corrupt_p: f64,
+    /// Kill the connection of this cluster's endpoint…
+    pub kill_cluster: Option<usize>,
+    /// …once its send+recv operation count reaches this index.
+    pub kill_after: u64,
+}
+
+impl ChaosConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("drop_p", self.drop_p),
+            ("delay_p", self.delay_p),
+            ("dup_p", self.dup_p),
+            ("truncate_p", self.truncate_p),
+            ("corrupt_p", self.corrupt_p),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("chaos {name} {p} outside [0, 1]");
+            }
+        }
+        if self.delay_ms > 60_000 {
+            bail!("chaos delay_ms {} outside [0, 60000]", self.delay_ms);
+        }
+        Ok(())
+    }
+
+    /// True when enabled with at least one fault that can fire.
+    pub fn any_faults(&self) -> bool {
+        self.enabled
+            && (self.drop_p > 0.0
+                || self.delay_p > 0.0
+                || self.dup_p > 0.0
+                || self.truncate_p > 0.0
+                || self.corrupt_p > 0.0
+                || self.kill_cluster.is_some())
+    }
+}
+
+/// How the MBS reacts when a cluster stops answering (its link errors or
+/// its recv deadline fires and no rejoin arrives in time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Any cluster fault is fatal (the pre-chaos behaviour; default).
+    WaitAll,
+    /// Declare the cluster dead, reweight the consensus over survivors,
+    /// keep going while at least one cluster remains.
+    DeadlineSkip,
+    /// Like `DeadlineSkip`, but abort once fewer than `k` clusters
+    /// survive.
+    Quorum(usize),
+}
+
+impl FaultPolicy {
+    /// Parse `--fault-policy wait-all|deadline-skip|quorum` (+ `k`).
+    pub fn parse(s: &str, quorum: usize) -> Result<Self> {
+        match s {
+            "wait-all" => Ok(FaultPolicy::WaitAll),
+            "deadline-skip" => Ok(FaultPolicy::DeadlineSkip),
+            "quorum" => {
+                if quorum == 0 {
+                    bail!("--fault-policy quorum needs --fault-quorum K >= 1");
+                }
+                Ok(FaultPolicy::Quorum(quorum))
+            }
+            other => bail!("unknown fault policy `{other}` (wait-all|deadline-skip|quorum)"),
+        }
+    }
+
+    /// Minimum surviving clusters this policy tolerates.
+    pub fn min_alive(&self) -> usize {
+        match self {
+            FaultPolicy::WaitAll => usize::MAX,
+            FaultPolicy::DeadlineSkip => 1,
+            FaultPolicy::Quorum(k) => *k,
+        }
+    }
+}
+
+/// Shared fault counters: incremented by every [`ChaosTransport`] built
+/// from the same `Arc`, read by the `/metrics` endpoint and the
+/// end-of-run summary. Counters are observability only — they never feed
+/// back into the run.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub frames_dropped: AtomicU64,
+    pub frames_delayed: AtomicU64,
+    pub frames_duplicated: AtomicU64,
+    pub frames_truncated: AtomicU64,
+    pub frames_corrupted: AtomicU64,
+    /// Retransmissions performed by the healed-fault sublayer.
+    pub frames_retried: AtomicU64,
+    pub kills: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn total_faults(&self) -> u64 {
+        self.frames_dropped.load(Ordering::Relaxed)
+            + self.frames_delayed.load(Ordering::Relaxed)
+            + self.frames_duplicated.load(Ordering::Relaxed)
+            + self.frames_truncated.load(Ordering::Relaxed)
+            + self.frames_corrupted.load(Ordering::Relaxed)
+            + self.kills.load(Ordering::Relaxed)
+    }
+}
+
+/// Fault-injecting wrapper around any [`Transport`]. Build with
+/// [`ChaosTransport::wrap`]; every endpoint gets independent send/recv
+/// fault streams derived from `(seed, stream_tag)`.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    cfg: ChaosConfig,
+    /// This endpoint serves this cluster's link (kill targeting).
+    cluster: usize,
+    tx_rng: Pcg64,
+    rx_rng: Pcg64,
+    counters: Arc<FaultCounters>,
+    /// send+recv operations completed (the kill clock).
+    ops: u64,
+    /// Once set, the connection is dead and every call fails.
+    killed: Option<String>,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` under the fault plan `cfg`. `cluster` identifies the
+    /// link (kill targeting); `stream_tag` decorrelates endpoints that
+    /// share a seed (use distinct tags for the two sides of one link).
+    /// Disabled chaos returns `inner` unchanged — a byte-identical no-op.
+    pub fn wrap(
+        inner: Box<dyn Transport>,
+        cfg: &ChaosConfig,
+        cluster: usize,
+        stream_tag: u64,
+        counters: Arc<FaultCounters>,
+    ) -> Box<dyn Transport> {
+        if !cfg.enabled {
+            return inner;
+        }
+        Box::new(ChaosTransport {
+            inner,
+            cfg: cfg.clone(),
+            cluster,
+            tx_rng: Pcg64::new(cfg.seed, stream_tag.wrapping_mul(2)),
+            rx_rng: Pcg64::new(cfg.seed, stream_tag.wrapping_mul(2).wrapping_add(1)),
+            counters,
+            ops: 0,
+            killed: None,
+        })
+    }
+
+    /// Draw this message's faults from `rng` in a fixed order so the
+    /// stream position depends only on the message index, never on which
+    /// faults fired. Returns the planned delay.
+    fn draw_faults(cfg: &ChaosConfig, rng: &mut Pcg64, counters: &FaultCounters) -> Duration {
+        let (drop, delay, dup, trunc, corrupt) = (
+            rng.uniform(),
+            rng.uniform(),
+            rng.uniform(),
+            rng.uniform(),
+            rng.uniform(),
+        );
+        let mut retries = 0u64;
+        if drop < cfg.drop_p {
+            counters.frames_dropped.fetch_add(1, Ordering::Relaxed);
+            retries += 1;
+        }
+        if dup < cfg.dup_p {
+            counters.frames_duplicated.fetch_add(1, Ordering::Relaxed);
+        }
+        if trunc < cfg.truncate_p {
+            counters.frames_truncated.fetch_add(1, Ordering::Relaxed);
+            retries += 1;
+        }
+        if corrupt < cfg.corrupt_p {
+            counters.frames_corrupted.fetch_add(1, Ordering::Relaxed);
+            retries += 1;
+        }
+        if retries > 0 {
+            counters.frames_retried.fetch_add(retries, Ordering::Relaxed);
+        }
+        if delay < cfg.delay_p {
+            counters.frames_delayed.fetch_add(1, Ordering::Relaxed);
+            Duration::from_millis(cfg.delay_ms)
+        } else {
+            Duration::ZERO
+        }
+    }
+
+    /// Advance the kill clock; returns the death notice when the plan
+    /// kills this endpoint at this operation.
+    fn tick_kill(&mut self) -> Option<String> {
+        if let Some(reason) = &self.killed {
+            return Some(reason.clone());
+        }
+        if self.cfg.kill_cluster == Some(self.cluster) && self.ops >= self.cfg.kill_after {
+            let reason = format!(
+                "chaos fault plan (seed {}) killed the cluster-{} connection to {} at operation {}",
+                self.cfg.seed,
+                self.cluster,
+                self.inner.peer(),
+                self.ops
+            );
+            self.counters.kills.fetch_add(1, Ordering::Relaxed);
+            self.killed = Some(reason.clone());
+            return Some(reason);
+        }
+        self.ops += 1;
+        None
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<()> {
+        if let Some(reason) = self.tick_kill() {
+            bail!("{reason}");
+        }
+        let delay = Self::draw_faults(&self.cfg, &mut self.tx_rng, &self.counters);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        if let Some(reason) = self.tick_kill() {
+            bail!("{reason}");
+        }
+        let delay = Self::draw_faults(&self.cfg, &mut self.rx_rng, &self.counters);
+        let msg = self.inner.recv()?;
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        Ok(msg)
+    }
+
+    fn peer(&self) -> String {
+        format!("chaos({})", self.inner.peer())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::LoopbackTransport;
+
+    fn msg(i: usize) -> WireMsg {
+        WireMsg::GlobalDelta {
+            sync_index: i,
+            delta: crate::sparse::SparseVec {
+                dim: 8,
+                indices: vec![0, 3],
+                values: vec![1.0, -2.0],
+            },
+        }
+    }
+
+    fn plan(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            seed,
+            drop_p: 0.5,
+            dup_p: 0.25,
+            truncate_p: 0.25,
+            corrupt_p: 0.25,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_wrap_is_identity() {
+        let (a, _b) = LoopbackTransport::pair();
+        let counters = Arc::new(FaultCounters::default());
+        let t = ChaosTransport::wrap(
+            Box::new(a),
+            &ChaosConfig::default(),
+            0,
+            0,
+            Arc::clone(&counters),
+        );
+        // The inner transport passes through untouched (loopback peer
+        // name, no chaos prefix).
+        assert_eq!(t.peer(), "loopback");
+        assert_eq!(counters.total_faults(), 0);
+    }
+
+    #[test]
+    fn healed_faults_never_change_the_message_stream() {
+        let (a, mut b) = LoopbackTransport::pair();
+        let counters = Arc::new(FaultCounters::default());
+        let mut t = ChaosTransport::wrap(Box::new(a), &plan(11), 0, 7, Arc::clone(&counters));
+        for i in 0..50 {
+            t.send(&msg(i)).unwrap();
+        }
+        for i in 0..50 {
+            assert_eq!(b.recv().unwrap(), msg(i), "stream perturbed at {i}");
+        }
+        assert!(counters.total_faults() > 0, "plan with p=0.5 never fired");
+        assert!(counters.frames_retried.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn same_seed_draws_identical_fault_schedules() {
+        let run = |seed: u64| {
+            let (a, _b) = LoopbackTransport::pair();
+            let counters = Arc::new(FaultCounters::default());
+            let mut t = ChaosTransport::wrap(Box::new(a), &plan(seed), 0, 3, Arc::clone(&counters));
+            for i in 0..64 {
+                t.send(&msg(i)).unwrap();
+            }
+            (
+                counters.frames_dropped.load(Ordering::Relaxed),
+                counters.frames_duplicated.load(Ordering::Relaxed),
+                counters.frames_truncated.load(Ordering::Relaxed),
+                counters.frames_corrupted.load(Ordering::Relaxed),
+            )
+        };
+        assert_eq!(run(42), run(42), "same seed must replay the same plan");
+        assert_ne!(run(42), run(43), "distinct seeds should diverge (p=0.5 over 64 draws)");
+    }
+
+    #[test]
+    fn kill_fires_at_the_planned_operation_and_sticks() {
+        let (a, _b) = LoopbackTransport::pair();
+        let cfg = ChaosConfig {
+            enabled: true,
+            seed: 1,
+            kill_cluster: Some(2),
+            kill_after: 3,
+            ..ChaosConfig::default()
+        };
+        let counters = Arc::new(FaultCounters::default());
+        let mut t = ChaosTransport::wrap(Box::new(a), &cfg, 2, 0, Arc::clone(&counters));
+        for i in 0..3 {
+            t.send(&msg(i)).unwrap();
+        }
+        let err = t.send(&msg(3)).unwrap_err().to_string();
+        assert!(err.contains("chaos fault plan"), "{err}");
+        assert!(err.contains("operation 3"), "{err}");
+        // Dead is dead: recv fails too, and the kill counts once.
+        assert!(t.recv().is_err());
+        assert_eq!(counters.kills.load(Ordering::Relaxed), 1);
+
+        // A different cluster under the same plan is never killed.
+        let (a2, _b2) = LoopbackTransport::pair();
+        let mut t2 = ChaosTransport::wrap(Box::new(a2), &cfg, 0, 0, counters);
+        for i in 0..10 {
+            t2.send(&msg(i)).unwrap();
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_probabilities() {
+        let mut c = ChaosConfig::default();
+        c.validate().unwrap();
+        c.drop_p = 1.5;
+        assert!(c.validate().is_err());
+        c.drop_p = 0.0;
+        c.delay_ms = 120_000;
+        assert!(c.validate().is_err());
+        assert!(!ChaosConfig::default().any_faults());
+        assert!(plan(0).any_faults());
+    }
+
+    #[test]
+    fn fault_policy_parse_and_min_alive() {
+        assert_eq!(FaultPolicy::parse("wait-all", 0).unwrap(), FaultPolicy::WaitAll);
+        assert_eq!(
+            FaultPolicy::parse("deadline-skip", 0).unwrap(),
+            FaultPolicy::DeadlineSkip
+        );
+        assert_eq!(FaultPolicy::parse("quorum", 2).unwrap(), FaultPolicy::Quorum(2));
+        assert!(FaultPolicy::parse("quorum", 0).is_err());
+        assert!(FaultPolicy::parse("sometimes", 0).is_err());
+        assert_eq!(FaultPolicy::DeadlineSkip.min_alive(), 1);
+        assert_eq!(FaultPolicy::Quorum(3).min_alive(), 3);
+    }
+}

@@ -8,6 +8,7 @@
 //! but nothing here feeds back into the run (wall-clock straggler
 //! timing included), so serving metrics cannot perturb bit-exactness.
 
+use super::chaos::FaultCounters;
 use crate::coordinator::{LinkKind, MetricEvent};
 use crate::util::json::{Json, ObjBuilder};
 use anyhow::{Context, Result};
@@ -32,12 +33,18 @@ struct LiveStats {
     /// the first).
     last_loss: f64,
     straggler_waits: u64,
+    reconnects: u64,
+    clusters_skipped: u64,
     finished: bool,
 }
 
 /// Shared live view of a running session (MBS side).
 pub struct LiveMetrics {
     inner: Mutex<LiveStats>,
+    /// Chaos-layer counters, when a fault plan is active. Scrapes read
+    /// them live; absent counters scrape as zeros so the `/metrics`
+    /// schema is identical with chaos on or off.
+    faults: Mutex<Option<Arc<FaultCounters>>>,
 }
 
 impl LiveMetrics {
@@ -48,7 +55,13 @@ impl LiveMetrics {
                 last_loss: f64::NAN,
                 ..LiveStats::default()
             }),
+            faults: Mutex::new(None),
         }
+    }
+
+    /// Expose a chaos layer's [`FaultCounters`] through `/metrics`.
+    pub fn attach_fault_counters(&self, counters: Arc<FaultCounters>) {
+        *self.faults.lock().unwrap() = Some(counters);
     }
 
     /// Fold a batch of per-link events (piggybacked on `Sync`/`Done`, or
@@ -86,6 +99,16 @@ impl LiveMetrics {
         self.inner.lock().unwrap().clusters_done += 1;
     }
 
+    /// A dead worker connection was replaced by a rejoin.
+    pub fn note_reconnect(&self) {
+        self.inner.lock().unwrap().reconnects += 1;
+    }
+
+    /// The fault policy declared one cluster dead and continued without it.
+    pub fn note_cluster_skipped(&self) {
+        self.inner.lock().unwrap().clusters_skipped += 1;
+    }
+
     /// The run completed.
     pub fn finish(&self) {
         self.inner.lock().unwrap().finished = true;
@@ -93,6 +116,12 @@ impl LiveMetrics {
 
     /// Current snapshot as the `/metrics` JSON document.
     pub fn to_json(&self) -> Json {
+        // Snapshot the chaos counters first (separate lock, never held
+        // together with `inner`); zeros when no fault plan is attached.
+        let f = self.faults.lock().unwrap().clone();
+        let load = |pick: fn(&FaultCounters) -> u64| {
+            f.as_ref().map_or(0, |c| pick(c)) as f64
+        };
         let s = self.inner.lock().unwrap();
         let b = ObjBuilder::new()
             .num("n_clusters", s.n_clusters as f64)
@@ -105,6 +134,15 @@ impl LiveMetrics {
             .num("mbs_dl_bits", s.mbs_dl_bits)
             .num("mu_msgs", s.mu_msgs as f64)
             .num("straggler_waits", s.straggler_waits as f64)
+            .num("frames_dropped", load(|c| c.frames_dropped.load(Ordering::Relaxed)))
+            .num("frames_delayed", load(|c| c.frames_delayed.load(Ordering::Relaxed)))
+            .num("frames_duplicated", load(|c| c.frames_duplicated.load(Ordering::Relaxed)))
+            .num("frames_truncated", load(|c| c.frames_truncated.load(Ordering::Relaxed)))
+            .num("frames_corrupted", load(|c| c.frames_corrupted.load(Ordering::Relaxed)))
+            .num("frames_retried", load(|c| c.frames_retried.load(Ordering::Relaxed)))
+            .num("kills", load(|c| c.kills.load(Ordering::Relaxed)))
+            .num("reconnects", s.reconnects as f64)
+            .num("clusters_skipped", s.clusters_skipped as f64)
             .bool("finished", s.finished);
         let b = if s.last_loss.is_finite() {
             b.num("last_loss", s.last_loss)
@@ -174,18 +212,29 @@ fn handle(stream: &mut TcpStream, live: &LiveMetrics) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(2)))?;
     let mut req = Vec::new();
     let mut chunk = [0u8; 1024];
-    // Read until the end of the request head (we ignore any body).
+    // Read until the end of the request head (we ignore any body). A
+    // client that stalls or resets mid-head still gets an answer: fall
+    // through with whatever arrived and reject it as malformed, rather
+    // than dropping the socket on the read error.
     while !req.windows(4).any(|w| w == b"\r\n\r\n") && req.len() < 16 * 1024 {
-        let n = stream.read(&mut chunk)?;
-        if n == 0 {
-            break;
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => req.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
         }
-        req.extend_from_slice(&chunk[..n]);
     }
+    let complete = req.windows(4).any(|w| w == b"\r\n\r\n");
     let head = String::from_utf8_lossy(&req);
     let mut parts = head.lines().next().unwrap_or("").split_whitespace();
-    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
-    let (status, body) = if method != "GET" {
+    let (method, path, version) = (
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+    );
+    let malformed = !complete || method.is_empty() || path.is_empty() || !version.starts_with("HTTP/");
+    let (status, body) = if malformed {
+        ("400 Bad Request", "{\"error\":\"malformed request\"}".to_string())
+    } else if method != "GET" {
         ("405 Method Not Allowed", "{\"error\":\"GET only\"}".to_string())
     } else if path == "/metrics" {
         ("200 OK", live.to_json().to_string_compact())
@@ -242,6 +291,65 @@ mod tests {
         let wrong = scrape(addr, "POST /metrics HTTP/1.1\r\n\r\n");
         assert!(wrong.starts_with("HTTP/1.1 405"), "{wrong}");
         drop(server); // joins the listener thread
+    }
+
+    #[test]
+    fn malformed_and_partial_requests_get_400_not_a_dropped_socket() {
+        let live = Arc::new(LiveMetrics::new(1));
+        let server = MetricsServer::spawn("127.0.0.1:0", live).unwrap();
+        let addr = server.local_addr();
+
+        // Garbage bytes with a terminator: unparsable request line.
+        let garbage = scrape(addr, "\u{1}\u{2}\r\n\r\n");
+        assert!(garbage.starts_with("HTTP/1.1 400"), "{garbage}");
+
+        // Missing HTTP version token.
+        let no_version = scrape(addr, "GET /metrics\r\n\r\n");
+        assert!(no_version.starts_with("HTTP/1.1 400"), "{no_version}");
+
+        // Partial head: the client hangs up before "\r\n\r\n".
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        drop(server);
+    }
+
+    #[test]
+    fn fault_counters_scrape_as_zeros_then_live_values() {
+        let live = Arc::new(LiveMetrics::new(2));
+        // Without an attached chaos layer every fault key is present at 0.
+        let j = live.to_json();
+        for key in [
+            "frames_dropped",
+            "frames_corrupted",
+            "frames_retried",
+            "kills",
+            "reconnects",
+            "clusters_skipped",
+        ] {
+            assert_eq!(j.get(key).and_then(Json::as_usize), Some(0), "{key}");
+        }
+
+        let counters = Arc::new(FaultCounters::default());
+        counters.frames_dropped.store(3, Ordering::Relaxed);
+        counters.frames_corrupted.store(1, Ordering::Relaxed);
+        live.attach_fault_counters(counters.clone());
+        live.note_reconnect();
+        live.note_cluster_skipped();
+        let j = live.to_json();
+        assert_eq!(j.get("frames_dropped").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("frames_corrupted").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("reconnects").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("clusters_skipped").and_then(Json::as_usize), Some(1));
+        // The scrape reads the shared counters live, not a copy.
+        counters.frames_dropped.store(7, Ordering::Relaxed);
+        assert_eq!(
+            live.to_json().get("frames_dropped").and_then(Json::as_usize),
+            Some(7)
+        );
     }
 
     #[test]

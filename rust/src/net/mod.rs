@@ -27,9 +27,13 @@
 //!   re-running any training.
 //! - [`metrics_http`] — live `GET /metrics` JSON endpoint
 //!   (`--metrics-addr`), observability-only.
+//! - [`chaos`] — deterministic fault injection ([`chaos::ChaosTransport`],
+//!   seeded fault plans) plus the MBS [`chaos::FaultPolicy`] vocabulary:
+//!   wait-all, deadline-skip, quorum. Same chaos seed ⇒ bit-identical run.
 //! - [`scenario`] — the shared scenario both processes construct; its
 //!   fingerprint is what the handshake compares.
 
+pub mod chaos;
 pub mod frame;
 pub mod metrics_http;
 pub mod replay;
@@ -40,10 +44,14 @@ pub mod transport;
 pub mod wire;
 pub mod worker;
 
+pub use chaos::{ChaosConfig, ChaosTransport, FaultCounters, FaultPolicy};
 pub use metrics_http::{LiveMetrics, MetricsServer};
 pub use replay::replay_session;
 pub use scenario::NetScenario;
-pub use serve::{accept_workers, run_coordinated_service, run_mbs, ClusterLink};
+pub use serve::{
+    accept_workers, accept_workers_timeout, run_chaos_service, run_coordinated_service, run_mbs,
+    run_mbs_faulty, ClusterLink, FaultContext, RecoveryPoint,
+};
 pub use session::{read_session, Direction, SessionHeader, SessionLog, SessionRecord};
 pub use transport::{LoopbackTransport, TcpTransport, Transport};
 pub use wire::WireMsg;

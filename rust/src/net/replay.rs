@@ -12,6 +12,12 @@
 //! the one thing a log cannot contain (it needs the oracle), so
 //! `final_eval`/`sync_evals` are empty defaults — neither enters the
 //! golden trace.
+//!
+//! Degraded sessions replay too: a logged `Skip` marks its cluster dead
+//! (excused from `Done`, collected into the run's `skips`), a logged
+//! `Rejoin` revives it, and the final-model divisor is the count of
+//! `Done` records — the survivors — matching the live MBS's
+//! degrade-and-continue fold exactly.
 
 use super::serve::{finish_losses, fold_final_model, merge_losses};
 use super::session::{read_session, Direction, SessionHeader, BROADCAST};
@@ -32,7 +38,16 @@ pub fn replay_session(path: &Path) -> Result<(SessionHeader, CoordinatorRun)> {
     let mut final_params = vec![0.0f32; header.dim];
     let mut loss_acc: Vec<(usize, f64, usize)> = Vec::new();
     let mut done = vec![false; n];
+    let mut skipped = vec![false; n];
+    let mut skips: Vec<(usize, usize)> = Vec::new();
     let mut next_sync = 0usize;
+
+    // Pre-pass: the live MBS folds Done models over the survivor count,
+    // so replay must divide by the number of Done records — not n.
+    let n_done = records
+        .iter()
+        .filter(|r| matches!((&r.dir, &r.msg), (Direction::Rx, WireMsg::Done { .. })))
+        .count();
 
     for (i, rec) in records.iter().enumerate() {
         let at = || format!("session record {i}");
@@ -77,15 +92,36 @@ pub fn replay_session(path: &Path) -> Result<(SessionHeader, CoordinatorRun)> {
                 for ev in events {
                     metrics.push(*ev);
                 }
-                fold_final_model(&mut final_params, final_model, n)
+                fold_final_model(&mut final_params, final_model, n_done)
                     .with_context(|| format!("{}: folding cluster {cluster}", at()))?;
                 merge_losses(&mut loss_acc, iter_losses);
+            }
+            (Direction::Tx, WireMsg::Skip { cluster, round, .. }) => {
+                if *cluster >= n {
+                    bail!("{}: Skip of out-of-range cluster {cluster}", at());
+                }
+                skipped[*cluster] = true;
+                skips.push((*cluster, *round));
+            }
+            (Direction::Rx, WireMsg::Rejoin { cluster, .. }) => {
+                if *cluster >= n {
+                    bail!("{}: Rejoin of out-of-range cluster {cluster}", at());
+                }
+                // A rejoined cluster is live again (informational — a
+                // Rejoin record normally precedes any Skip of it).
+                skipped[*cluster] = false;
             }
             (dir, msg) => bail!("{}: unexpected {:?} {} in session log", at(), dir, msg.kind()),
         }
     }
 
-    if let Some(missing) = done.iter().position(|d| !d) {
+    // A skipped cluster is excused from Done; anyone else missing means
+    // the log is torn.
+    if let Some(missing) = done
+        .iter()
+        .zip(&skipped)
+        .position(|(d, s)| !d && !s)
+    {
         bail!(
             "cluster {missing} never reported Done — incomplete session log \
              (the run may have crashed; {next_sync} sync rounds were recorded)"
@@ -99,6 +135,7 @@ pub fn replay_session(path: &Path) -> Result<(SessionHeader, CoordinatorRun)> {
             sync_evals: Vec::new(),
             metrics,
             train_loss: finish_losses(loss_acc),
+            skips,
         },
     ))
 }
@@ -193,6 +230,60 @@ mod tests {
             format!("{err:#}").contains("cluster 1 never reported Done"),
             "{err:#}"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn skip_record_excuses_missing_done_and_reweights_fold() {
+        let dir = std::env::temp_dir().join(format!("hfl-replay-skip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("skip.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header(2)).unwrap();
+            // Cluster 1 dies during round 0; only cluster 0 finishes.
+            log.append(
+                Direction::Tx,
+                1,
+                &WireMsg::Skip {
+                    cluster: 1,
+                    round: 0,
+                    reason: "recv failed".into(),
+                },
+            )
+            .unwrap();
+            log.append(Direction::Rx, 0, &done(0)).unwrap();
+        }
+        let (_, run) = replay_session(&path).unwrap();
+        // Divisor is the survivor count (1), not n (2).
+        assert_eq!(run.final_params, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(run.skips, vec![(1, 0)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejoin_record_revives_a_cluster() {
+        let dir = std::env::temp_dir().join(format!("hfl-replay-rejoin-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rejoin.hlog");
+        {
+            let mut log = SessionLog::create(&path, &header(2)).unwrap();
+            log.append(
+                Direction::Rx,
+                1,
+                &WireMsg::Rejoin {
+                    cluster: 1,
+                    round: 0,
+                },
+            )
+            .unwrap();
+            log.append(Direction::Rx, 0, &done(0)).unwrap();
+            log.append(Direction::Rx, 1, &done(1)).unwrap();
+        }
+        let (_, run) = replay_session(&path).unwrap();
+        // Both clusters finished: the rejoin kept cluster 1 accountable
+        // and the fold divides by 2 as on a clean run.
+        assert_eq!(run.final_params, vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(run.skips.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,7 +12,25 @@
 //! transport pair, which is how `coordinator::run_coordinated` (and so
 //! every existing golden trace) exercises the full frame/wire codec on
 //! each run.
+//!
+//! ## Fault tolerance
+//!
+//! [`run_mbs_faulty`] is the fault-aware barrier loop; [`run_mbs`] is its
+//! zero-fault specialization (policy `wait_all`, no rejoin lane), so the
+//! clean path is arithmetically untouched. When a cluster's link errors
+//! mid-run the MBS first offers the **rejoin lane** (if a listener and
+//! deadline are configured): a relaunched worker replays the `Welcome`
+//! handshake, announces `Rejoin{cluster, round}`, and is caught up from
+//! the [`RecoveryPoint`] — the per-round, `snapshot`-codec-serializable
+//! broadcast history — by replaying every stored `GlobalDelta` against
+//! the worker's recomputed `Sync`s, which converges bit-exactly because
+//! workers are deterministic. Only if no worker rejoins in time does the
+//! [`FaultPolicy`] apply: `deadline_skip`/`quorum(k)` declare the cluster
+//! dead, reweight the consensus over survivors (the k-way merge's
+//! weighted parts, scale `1/alive`), and record the skip in the session
+//! log, `LiveMetrics`, and the run's `skips` (hence the `GoldenTrace`).
 
+use super::chaos::{ChaosConfig, ChaosTransport, FaultCounters, FaultPolicy};
 use super::metrics_http::LiveMetrics;
 use super::session::{Direction, SessionLog, BROADCAST};
 use super::transport::{LoopbackTransport, TcpTransport, Transport};
@@ -22,6 +40,7 @@ use crate::coordinator::{
     ComputeService, CoordinatorOptions, CoordinatorRun, LinkKind, MetricEvent, MetricsLog,
 };
 use crate::fl::oracle::{EvalMetrics, GradOracle};
+use crate::snapshot::codec::{ByteReader, ByteWriter};
 use crate::sparse::merge::{self, DenseShadow, MergeScratch};
 use crate::sparse::{DiscountedError, SparseVec};
 use anyhow::{anyhow, bail, Context, Result};
@@ -113,6 +132,18 @@ pub fn accept_workers(
     fingerprint: u64,
     n_clusters: usize,
 ) -> Result<Vec<ClusterLink>> {
+    accept_workers_timeout(listener, fingerprint, n_clusters, None)
+}
+
+/// [`accept_workers`] with an io timeout applied to every accepted
+/// transport, so a worker that hangs mid-run yields a named error (which
+/// the fault policy can then act on) instead of wedging the MBS.
+pub fn accept_workers_timeout(
+    listener: &TcpListener,
+    fingerprint: u64,
+    n_clusters: usize,
+    io_timeout: Option<Duration>,
+) -> Result<Vec<ClusterLink>> {
     let mut taken = vec![false; n_clusters];
     let mut links: Vec<ClusterLink> = Vec::with_capacity(n_clusters);
     while links.len() < n_clusters {
@@ -124,6 +155,10 @@ pub fn accept_workers(
                 continue;
             }
         };
+        if let Err(e) = transport.set_io_timeout(io_timeout) {
+            eprintln!("rejecting {peer}: {e:#}");
+            continue;
+        }
         match handshake_mbs(&mut transport, fingerprint, &mut taken) {
             Ok(cluster) => {
                 eprintln!("worker {peer} joined as cluster {cluster}");
@@ -137,6 +172,212 @@ pub fn accept_workers(
     }
     links.sort_by_key(|l| l.cluster);
     Ok(links)
+}
+
+/// Stand-in for a declared-dead cluster's transport. Installing it drops
+/// the real transport, so a loopback cell blocked on the MBS sees a
+/// closed channel (an error) rather than hanging forever, and any stray
+/// use of the dead link is a named error.
+struct DeadTransport {
+    cluster: usize,
+}
+
+impl Transport for DeadTransport {
+    fn send(&mut self, msg: &WireMsg) -> Result<()> {
+        bail!(
+            "cluster {} was declared dead (dropping {})",
+            self.cluster,
+            msg.kind()
+        )
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        bail!("cluster {} was declared dead", self.cluster)
+    }
+
+    fn peer(&self) -> String {
+        format!("dead(cluster-{})", self.cluster)
+    }
+}
+
+/// The MBS's per-round recovery state for the rejoin lane: the broadcast
+/// history plus the current global model, serializable through the
+/// `snapshot` byte codec (all fields round-trip bit-exactly). Catch-up
+/// replays from the *serialized* form, so rejoin provably needs nothing
+/// beyond what this struct persists.
+pub struct RecoveryPoint {
+    /// Sync rounds completed (== `broadcasts.len()`).
+    pub sync_index: usize,
+    /// Global model after the last broadcast.
+    pub w_global: Vec<f32>,
+    /// Every `GlobalDelta` broadcast so far, in sync order.
+    pub broadcasts: Vec<SparseVec>,
+}
+
+impl RecoveryPoint {
+    fn new(init: &[f32]) -> Self {
+        Self {
+            sync_index: 0,
+            w_global: init.to_vec(),
+            broadcasts: Vec::new(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_usize(self.sync_index);
+        w.put_f32_slice(&self.w_global);
+        w.put_usize(self.broadcasts.len());
+        for b in &self.broadcasts {
+            w.put_usize(b.dim);
+            w.put_u32_slice(&b.indices);
+            w.put_f32_slice(&b.values);
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let sync_index = r.get_usize()?;
+        let w_global = r.get_f32_vec()?;
+        let n = r.get_usize()?;
+        let mut broadcasts = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            broadcasts.push(SparseVec {
+                dim: r.get_usize()?,
+                indices: r.get_u32_vec()?,
+                values: r.get_f32_vec()?,
+            });
+        }
+        r.finish()?;
+        Ok(Self {
+            sync_index,
+            w_global,
+            broadcasts,
+        })
+    }
+}
+
+/// Fault-handling context for [`run_mbs_faulty`]. The default is the
+/// pre-fault-tolerance behaviour: `wait_all`, no rejoin lane.
+pub struct FaultContext<'a> {
+    /// What to do when a cluster stays dead past the rejoin deadline.
+    pub policy: FaultPolicy,
+    /// How long the rejoin lane waits for a replacement worker after a
+    /// link dies. Zero disables the lane.
+    pub rejoin_deadline: Duration,
+    /// Listener the rejoin lane accepts on (TCP serve only; loopback
+    /// sessions have no reconnect surface).
+    pub listener: Option<&'a TcpListener>,
+    /// Scenario fingerprint a rejoining worker must re-present.
+    pub fingerprint: u64,
+    /// io timeout applied to rejoined transports.
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for FaultContext<'_> {
+    fn default() -> Self {
+        Self {
+            policy: FaultPolicy::WaitAll,
+            rejoin_deadline: Duration::ZERO,
+            listener: None,
+            fingerprint: 0,
+            io_timeout: None,
+        }
+    }
+}
+
+/// Rejoin lane: wait up to `deadline` for a replacement worker for
+/// `cluster`, replay the `Welcome` handshake (every other slot presented
+/// as taken, so the newcomer lands on exactly the dead cluster), demand
+/// its `Rejoin`, and catch it up by replaying the stored broadcast
+/// history against its recomputed `Sync`s. Returns the caught-up
+/// transport plus the round the worker rejoined from.
+fn accept_rejoin(
+    listener: &TcpListener,
+    fingerprint: u64,
+    cluster: usize,
+    n_clusters: usize,
+    deadline: Duration,
+    io_timeout: Option<Duration>,
+    recovery: &RecoveryPoint,
+) -> Result<(Box<dyn Transport>, usize)> {
+    listener
+        .set_nonblocking(true)
+        .context("rejoin lane: listener mode")?;
+    let t0 = Instant::now();
+    let accepted = loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                listener.set_nonblocking(false).ok();
+                break stream;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if t0.elapsed() >= deadline {
+                    listener.set_nonblocking(false).ok();
+                    bail!("no worker rejoined cluster {cluster} within {deadline:?}");
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                listener.set_nonblocking(false).ok();
+                return Err(e).context("rejoin lane: accept");
+            }
+        }
+    };
+    accepted
+        .set_nonblocking(false)
+        .context("rejoin lane: stream mode")?;
+    let mut transport = TcpTransport::new(accepted)?;
+    transport.set_io_timeout(io_timeout)?;
+    let mut taken = vec![true; n_clusters];
+    taken[cluster] = false;
+    let assigned =
+        handshake_mbs(&mut transport, fingerprint, &mut taken).context("rejoin handshake")?;
+    debug_assert_eq!(assigned, cluster);
+    let round = match transport.recv().context("waiting for Rejoin")? {
+        WireMsg::Rejoin { cluster: rc, round } if rc == cluster => round,
+        WireMsg::Rejoin { cluster: rc, .. } => {
+            bail!("rejoining worker claims cluster {rc}, expected {cluster}")
+        }
+        other => bail!(
+            "expected Rejoin from reconnected worker for cluster {cluster}, got {}",
+            other.kind()
+        ),
+    };
+    if round > recovery.broadcasts.len() {
+        bail!(
+            "rejoining cluster {cluster} claims round {round}, but only {} broadcasts happened",
+            recovery.broadcasts.len()
+        );
+    }
+    // Round-trip the recovery point through the snapshot codec and catch
+    // up from the decoded copy: rejoin provably depends only on the
+    // persistable state, and the f32/u32 round-trip is bit-exact. The
+    // deterministic worker recomputes from `round`; its `Sync`s are
+    // consumed (not logged — the live run already logged round `i` once)
+    // and answered with the stored broadcasts until it converges onto the
+    // current round.
+    let rp = RecoveryPoint::from_bytes(&recovery.to_bytes()).context("recovery point codec")?;
+    for i in round..rp.broadcasts.len() {
+        match transport
+            .recv()
+            .with_context(|| format!("catch-up sync {i} from cluster {cluster}"))?
+        {
+            WireMsg::Sync { cluster: sc, .. } if sc == cluster => {}
+            other => bail!(
+                "catch-up expected Sync {i} from cluster {cluster}, got {}",
+                other.kind()
+            ),
+        }
+        transport
+            .send(&WireMsg::GlobalDelta {
+                sync_index: i,
+                delta: rp.broadcasts[i].clone(),
+            })
+            .with_context(|| format!("catch-up broadcast {i} to cluster {cluster}"))?;
+    }
+    Ok((Box::new(transport), round))
 }
 
 /// Fold one cluster's final model into the consensus average.
@@ -182,6 +423,22 @@ pub(crate) fn finish_losses(mut acc: Vec<(usize, f64, usize)>) -> Vec<(usize, f6
 /// `/metrics` endpoint. Both are observability-only and do not perturb
 /// the arithmetic.
 pub fn run_mbs(
+    links: Vec<ClusterLink>,
+    opts: &CoordinatorOptions,
+    dim: usize,
+    init: &[f32],
+    eval: &mut dyn FnMut(&[f32]) -> EvalMetrics,
+    log: Option<&mut SessionLog>,
+    live: Option<&LiveMetrics>,
+) -> Result<CoordinatorRun> {
+    run_mbs_faulty(links, opts, dim, init, eval, log, live, &FaultContext::default())
+}
+
+/// [`run_mbs`] with fault handling — see the module docs. Under the
+/// default [`FaultContext`] this IS the clean lockstep loop: every link
+/// alive, scale `1/n`, any link error fatal.
+#[allow(clippy::too_many_arguments)]
+pub fn run_mbs_faulty(
     mut links: Vec<ClusterLink>,
     opts: &CoordinatorOptions,
     dim: usize,
@@ -189,6 +446,7 @@ pub fn run_mbs(
     eval: &mut dyn FnMut(&[f32]) -> EvalMetrics,
     mut log: Option<&mut SessionLog>,
     live: Option<&LiveMetrics>,
+    faults: &FaultContext<'_>,
 ) -> Result<CoordinatorRun> {
     let n = opts.n_clusters;
     links.sort_by_key(|l| l.cluster);
@@ -215,22 +473,109 @@ pub fn run_mbs(
     let mut metrics = MetricsLog::default();
     let mut sync_evals = Vec::new();
     let mut sync_index = 0usize;
+    let mut alive = vec![true; n];
+    let mut skips: Vec<(usize, usize)> = Vec::new();
+    // The rejoin lane only exists over TCP; loopback sessions keep no
+    // broadcast history.
+    let mut recovery = faults.listener.map(|_| RecoveryPoint::new(init));
+    let rejoin_enabled = faults.listener.is_some() && faults.rejoin_deadline > Duration::ZERO;
+    // Under wait_all WITHOUT a rejoin lane any link error is immediately
+    // fatal (the clean path). With a lane, send errors defer to the next
+    // recv — the deterministic protocol point where recovery runs.
+    let defer_send_errors = faults.policy != FaultPolicy::WaitAll || rejoin_enabled;
 
-    // Barrier rounds: one message per cluster, read in cluster order.
-    // Lockstep makes this exhaustive — a cluster cannot pass sync k
-    // without the broadcast, which requires every cluster's sync k, so a
-    // round is either all-Sync or all-Done.
+    // Barrier rounds: one message per alive cluster, read in cluster
+    // order. Lockstep makes this exhaustive — a cluster cannot pass sync
+    // k without the broadcast, which requires every alive cluster's sync
+    // k, so a round is either all-Sync or all-Done.
     loop {
         let mut round: Vec<WireMsg> = Vec::with_capacity(n);
-        for link in links.iter_mut() {
+        for c in 0..n {
+            if !alive[c] {
+                continue;
+            }
             let t0 = Instant::now();
-            let msg = link.transport.recv().with_context(|| {
-                format!(
-                    "receiving from cluster {} ({}) at sync round {sync_index}",
-                    link.cluster,
-                    link.transport.peer()
-                )
-            })?;
+            let mut msg = links[c].transport.recv();
+            if msg.is_err() && rejoin_enabled {
+                if let (Some(listener), Some(rp)) = (faults.listener, recovery.as_ref()) {
+                    match accept_rejoin(
+                        listener,
+                        faults.fingerprint,
+                        c,
+                        n,
+                        faults.rejoin_deadline,
+                        faults.io_timeout,
+                        rp,
+                    ) {
+                        Ok((transport, from_round)) => {
+                            eprintln!(
+                                "cluster {c} rejoined at sync round {sync_index} \
+                                 (caught up from broadcast {from_round})"
+                            );
+                            links[c].transport = transport;
+                            if let Some(l) = live {
+                                l.note_reconnect();
+                            }
+                            if let Some(l) = log.as_deref_mut() {
+                                l.append(
+                                    Direction::Rx,
+                                    c as u32,
+                                    &WireMsg::Rejoin {
+                                        cluster: c,
+                                        round: from_round,
+                                    },
+                                )?;
+                            }
+                            msg = links[c].transport.recv();
+                        }
+                        Err(e) => eprintln!("rejoin lane for cluster {c} came up empty: {e:#}"),
+                    }
+                }
+            }
+            let msg = match msg {
+                Ok(m) => m,
+                Err(e) => {
+                    if faults.policy == FaultPolicy::WaitAll {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "receiving from cluster {c} ({}) at sync round {sync_index}",
+                                links[c].transport.peer()
+                            )
+                        });
+                    }
+                    // Degrade: declare the cluster dead and reweight the
+                    // consensus over survivors — unless that would drop
+                    // us below the policy's quorum.
+                    alive[c] = false;
+                    let n_alive = alive.iter().filter(|a| **a).count();
+                    let reason = format!("{e:#}");
+                    eprintln!("cluster {c} declared dead at sync round {sync_index}: {reason}");
+                    if n_alive < faults.policy.min_alive() {
+                        bail!(
+                            "quorum lost at sync round {sync_index}: {n_alive} clusters alive \
+                             after cluster {c} died, policy requires {}",
+                            faults.policy.min_alive()
+                        );
+                    }
+                    links[c].transport = Box::new(DeadTransport { cluster: c });
+                    skips.push((c, sync_index));
+                    if let Some(l) = log.as_deref_mut() {
+                        l.append(
+                            Direction::Tx,
+                            c as u32,
+                            &WireMsg::Skip {
+                                cluster: c,
+                                round: sync_index,
+                                reason,
+                            },
+                        )?;
+                    }
+                    if let Some(l) = live {
+                        l.note_cluster_skipped();
+                    }
+                    continue;
+                }
+            };
             if let Some(l) = live {
                 if t0.elapsed() > STRAGGLER_THRESHOLD {
                     l.note_straggler();
@@ -238,26 +583,22 @@ pub fn run_mbs(
             }
             let from = match &msg {
                 WireMsg::Sync { cluster, .. } | WireMsg::Done { cluster, .. } => *cluster,
-                other => bail!(
-                    "cluster {} sent {} during a sync round",
-                    link.cluster,
-                    other.kind()
-                ),
+                other => bail!("cluster {c} sent {} during a sync round", other.kind()),
             };
-            if from != link.cluster {
-                bail!(
-                    "link for cluster {} delivered a message from cluster {from}",
-                    link.cluster
-                );
+            if from != c {
+                bail!("link for cluster {c} delivered a message from cluster {from}");
             }
             if let Some(l) = log.as_deref_mut() {
-                l.append(Direction::Rx, link.cluster as u32, &msg)?;
+                l.append(Direction::Rx, c as u32, &msg)?;
             }
             round.push(msg);
         }
 
         if round.iter().all(|m| matches!(m, WireMsg::Done { .. })) {
-            // --- Shutdown: fold final cluster models (cluster order) ----
+            // --- Shutdown: fold final cluster models (cluster order).
+            // The divisor is the count of Done messages — the survivors —
+            // which equals n on the clean path.
+            let n_done = round.len();
             let mut final_params = vec![0.0f32; dim];
             let mut loss_acc: Vec<(usize, f64, usize)> = Vec::new();
             for msg in round {
@@ -277,7 +618,7 @@ pub fn run_mbs(
                 for ev in events {
                     metrics.push(ev);
                 }
-                fold_final_model(&mut final_params, &final_model, n)
+                fold_final_model(&mut final_params, &final_model, n_done)
                     .with_context(|| format!("folding Done from cluster {cluster}"))?;
                 merge_losses(&mut loss_acc, &iter_losses);
             }
@@ -291,13 +632,15 @@ pub fn run_mbs(
                 sync_evals,
                 metrics,
                 train_loss: finish_losses(loss_acc),
+                skips,
             });
         }
         if !round.iter().all(|m| matches!(m, WireMsg::Sync { .. })) {
             bail!("protocol violation at sync round {sync_index}: clusters disagree on Sync vs Done");
         }
 
-        // --- All-Sync round: aggregate in cluster order -----------------
+        // --- All-Sync round: aggregate in cluster order (survivors
+        // only; the consensus reweights over them) ----------------------
         let mut deltas: Vec<SparseVec> = Vec::with_capacity(n);
         let mut loss_total = 0.0f64;
         for msg in round {
@@ -325,7 +668,7 @@ pub fn run_mbs(
             loss_total += mean_loss;
             deltas.push(delta);
         }
-        let scale = 1.0 / n as f32;
+        let scale = 1.0 / deltas.len() as f32;
         let parts: Vec<(&SparseVec, f32)> = deltas.iter().map(|m| (m, scale)).collect();
         merge::aggregate_adaptive(
             &opts.agg,
@@ -348,7 +691,7 @@ pub fn run_mbs(
         metrics.push(ev);
         if let Some(l) = live {
             l.note_events(&[ev]);
-            l.note_sync_round(loss_total / n as f64);
+            l.note_sync_round(loss_total / deltas.len() as f64);
         }
         let broadcast = WireMsg::GlobalDelta {
             sync_index,
@@ -360,14 +703,32 @@ pub fn run_mbs(
             l.append(Direction::Tx, BROADCAST, &broadcast)?;
         }
         msg.add_into(&mut w_global, 1.0);
-        for link in links.iter_mut() {
-            link.transport.send(&broadcast).with_context(|| {
-                format!(
-                    "broadcasting sync {sync_index} to cluster {} ({})",
-                    link.cluster,
-                    link.transport.peer()
-                )
-            })?;
+        if let Some(rp) = recovery.as_mut() {
+            rp.broadcasts.push(msg.clone());
+            rp.sync_index = sync_index + 1;
+            rp.w_global.clone_from(&w_global);
+        }
+        for c in 0..n {
+            if !alive[c] {
+                continue;
+            }
+            if let Err(e) = links[c].transport.send(&broadcast) {
+                if !defer_send_errors {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "broadcasting sync {sync_index} to cluster {c} ({})",
+                            links[c].transport.peer()
+                        )
+                    });
+                }
+                // Death is only *declared* on recv: the next recv from
+                // this link fails at a deterministic protocol point, where
+                // the rejoin lane / fault policy take over. This keeps the
+                // skip round independent of send-vs-recv timing.
+                eprintln!(
+                    "broadcast {sync_index} to cluster {c} failed (deferring to next recv): {e:#}"
+                );
+            }
         }
         sync_index += 1;
         if opts.eval_every_syncs > 0 && sync_index % opts.eval_every_syncs == 0 {
@@ -453,6 +814,93 @@ where
     }
 }
 
+/// [`run_coordinated_service`] under a seeded fault plan: every MBS-side
+/// loopback endpoint is wrapped in a [`ChaosTransport`] (stream tag =
+/// cluster id) and the barrier loop runs under `policy`. Cell threads of
+/// clusters the policy skipped die on their closed channel — those
+/// errors are expected and tolerated; any other cluster's error still
+/// propagates. With `chaos.enabled == false` this is byte-identical to
+/// [`run_coordinated_service`].
+pub fn run_chaos_service<F, O>(
+    factory: F,
+    opts: &CoordinatorOptions,
+    chaos: &ChaosConfig,
+    policy: FaultPolicy,
+    counters: Arc<FaultCounters>,
+    log: Option<&mut SessionLog>,
+    live: Option<&LiveMetrics>,
+) -> Result<CoordinatorRun>
+where
+    F: FnOnce() -> O + Send + 'static,
+    O: GradOracle + 'static,
+{
+    let svc = ComputeService::spawn(factory);
+    let compute = svc.handle();
+    let (dim, k_total, init, _ipe) = compute.meta();
+    let n = opts.n_clusters;
+    if n == 0 || k_total % n != 0 {
+        svc.shutdown();
+        bail!("workers ({k_total}) must divide evenly into clusters ({n})");
+    }
+
+    let mut links: Vec<ClusterLink> = Vec::with_capacity(n);
+    let mut cells = Vec::with_capacity(n);
+    for c in 0..n {
+        let (mbs_end, mut cell_end) = LoopbackTransport::pair();
+        links.push(ClusterLink {
+            cluster: c,
+            transport: ChaosTransport::wrap(
+                Box::new(mbs_end),
+                chaos,
+                c,
+                c as u64,
+                Arc::clone(&counters),
+            ),
+        });
+        let cell_opts = opts.clone();
+        let cell_compute = compute.clone();
+        cells.push(
+            std::thread::Builder::new()
+                .name(format!("hfl-cell-{c}"))
+                .spawn(move || run_cell(cell_compute, &cell_opts, c, &mut cell_end))
+                .with_context(|| format!("spawning cell thread for cluster {c}"))?,
+        );
+    }
+
+    let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
+    let faults = FaultContext {
+        policy,
+        ..FaultContext::default()
+    };
+    let run = run_mbs_faulty(links, opts, dim, &init, &mut eval, log, live, &faults);
+    let skipped: Vec<usize> = run
+        .as_ref()
+        .map(|r| r.skips.iter().map(|(c, _)| *c).collect())
+        .unwrap_or_default();
+    let mut cell_err: Option<anyhow::Error> = None;
+    for (c, j) in cells.into_iter().enumerate() {
+        let tolerated = skipped.contains(&c);
+        match j.join() {
+            Err(_) => {
+                if !tolerated && cell_err.is_none() {
+                    cell_err = Some(anyhow!("cell thread for cluster {c} panicked"));
+                }
+            }
+            Ok(Err(e)) => {
+                if !tolerated && cell_err.is_none() {
+                    cell_err = Some(e.context(format!("cell for cluster {c} failed")));
+                }
+            }
+            Ok(Ok(())) => {}
+        }
+    }
+    svc.shutdown();
+    match cell_err {
+        Some(e) => Err(e),
+        None => run,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,6 +943,51 @@ mod tests {
         let err = handshake_mbs(&mut m, 7, &mut taken).unwrap_err();
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
         assert!(j.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn recovery_point_roundtrips_bit_exactly() {
+        let rp = RecoveryPoint {
+            sync_index: 3,
+            w_global: vec![1.5, -0.0, f32::MIN_POSITIVE, 42.0],
+            broadcasts: vec![
+                SparseVec {
+                    dim: 4,
+                    indices: vec![0, 2],
+                    values: vec![0.25, -8.0],
+                },
+                SparseVec::empty(4),
+                SparseVec {
+                    dim: 4,
+                    indices: vec![3],
+                    values: vec![f32::EPSILON],
+                },
+            ],
+        };
+        let back = RecoveryPoint::from_bytes(&rp.to_bytes()).unwrap();
+        assert_eq!(back.sync_index, rp.sync_index);
+        assert_eq!(
+            back.w_global.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rp.w_global.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.broadcasts, rp.broadcasts);
+        // Truncated bytes are a named error, not garbage.
+        let bytes = rp.to_bytes();
+        assert!(RecoveryPoint::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn dead_transport_names_the_cluster() {
+        let mut t = DeadTransport { cluster: 3 };
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("cluster 3"), "{err}");
+        assert!(t
+            .send(&WireMsg::Rejoin {
+                cluster: 3,
+                round: 0
+            })
+            .is_err());
+        assert_eq!(t.peer(), "dead(cluster-3)");
     }
 
     #[test]

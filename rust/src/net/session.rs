@@ -22,7 +22,7 @@ use super::wire::{self, WireMsg, TAG_SESSION_HEADER, TAG_SESSION_RECORD};
 use crate::sim::result::ScenarioMeta;
 use crate::util::json::{self, Json, ObjBuilder};
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::Write;
+use std::io::{Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 /// Which way a logged message travelled.
@@ -119,6 +119,11 @@ pub struct SessionRecord {
 pub struct SessionLog {
     file: std::fs::File,
     path: PathBuf,
+    /// Byte offset of the end of the last fully fsynced frame. A failed
+    /// append rolls the file back here, so the write side never leaves a
+    /// torn frame behind (readers tolerate one only at the tail of a
+    /// crashed session).
+    committed: u64,
 }
 
 impl SessionLog {
@@ -135,6 +140,7 @@ impl SessionLog {
         let mut log = Self {
             file,
             path: path.to_path_buf(),
+            committed: 0,
         };
         let text = header
             .to_json()
@@ -160,10 +166,34 @@ impl SessionLog {
     }
 
     fn write_frame(&mut self, bytes: &[u8]) -> Result<()> {
-        self.file
-            .write_all(bytes)
-            .and_then(|_| self.file.sync_data())
-            .with_context(|| format!("appending to session log {}", self.path.display()))
+        if let Err(e) = self.file.write_all(bytes).and_then(|_| self.file.sync_data()) {
+            // The failed append may have landed a prefix of the frame on
+            // disk; truncate back to the last whole record before
+            // surfacing the error.
+            let rolled = self.rollback();
+            return Err(anyhow::Error::new(e)).with_context(|| match rolled {
+                Ok(()) => format!(
+                    "appending to session log {} (rolled back to last whole frame at byte {})",
+                    self.path.display(),
+                    self.committed
+                ),
+                Err(r) => format!(
+                    "appending to session log {} (rollback to byte {} also failed: {r})",
+                    self.path.display(),
+                    self.committed
+                ),
+            });
+        }
+        self.committed += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Truncate the file back to the last fully committed frame boundary,
+    /// discarding partial bytes a failed append may have left behind.
+    fn rollback(&mut self) -> std::io::Result<()> {
+        self.file.set_len(self.committed)?;
+        self.file.seek(SeekFrom::Start(self.committed))?;
+        self.file.sync_data()
     }
 }
 
@@ -296,6 +326,33 @@ mod tests {
         corrupt[70] ^= 0x01;
         std::fs::write(&path, &corrupt).unwrap();
         assert!(read_session(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_append_rolls_back_to_the_last_whole_frame() {
+        let dir = std::env::temp_dir().join(format!("hfl-session-roll-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rollback.hlog");
+        let mut log = SessionLog::create(&path, &header()).unwrap();
+        log.append(Direction::Rx, 0, &sync(0)).unwrap();
+        let committed = log.committed;
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), committed);
+
+        // Simulate a torn append: partial frame bytes reach the disk but
+        // the write fails — exercise the same rollback write_frame takes.
+        log.file.write_all(b"partial frame wreckage").unwrap();
+        log.file.sync_data().unwrap();
+        assert!(std::fs::metadata(&path).unwrap().len() > committed);
+        log.rollback().unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), committed);
+
+        // The log keeps appending cleanly from the restored boundary.
+        log.append(Direction::Rx, 1, &sync(1)).unwrap();
+        drop(log);
+        let (_, recs) = read_session(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].msg, sync(1));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,8 +11,9 @@
 
 use super::frame;
 use super::wire::{self, WireMsg};
+use crate::util::rng::Pcg64;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -96,6 +97,29 @@ pub struct TcpTransport {
     stream: TcpStream,
     rxbuf: Vec<u8>,
     peer: String,
+    io_timeout: Option<Duration>,
+}
+
+/// FNV-1a over an address string — a deterministic per-peer seed for the
+/// backoff jitter stream (no wall-clock entropy in the retry schedule).
+fn addr_seed(addr: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in addr.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Exponential backoff for connect attempt `attempt` (0-based):
+/// 50ms·2^attempt capped at 2s, plus deterministic jitter in [0, 25%)
+/// drawn from a stream keyed by `(addr, attempt)` so concurrent workers
+/// retrying the same MBS don't stampede in lockstep, yet every rerun
+/// sleeps the same schedule.
+fn backoff_delay(addr: &str, attempt: u32) -> Duration {
+    let base_ms = 50u64.saturating_mul(1u64 << attempt.min(5)).min(2_000);
+    let jitter_ms = Pcg64::new(addr_seed(addr), attempt as u64).uniform_u64(base_ms / 4 + 1);
+    Duration::from_millis(base_ms + jitter_ms)
 }
 
 impl TcpTransport {
@@ -113,14 +137,32 @@ impl TcpTransport {
             stream,
             rxbuf: Vec::new(),
             peer,
+            io_timeout: None,
         })
+    }
+
+    /// Bound every blocking read/write on this stream: a hung peer then
+    /// yields a named "io timeout" error instead of wedging the MBS
+    /// lockstep loop forever. `None` restores unbounded blocking.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .with_context(|| format!("setting read timeout toward {}", self.peer))?;
+        self.stream
+            .set_write_timeout(timeout)
+            .with_context(|| format!("setting write timeout toward {}", self.peer))?;
+        self.io_timeout = timeout;
+        Ok(())
     }
 
     /// Connect to `addr`, retrying until `total` elapses — workers may
     /// launch before the MBS listener binds (the CI multiprocess job
-    /// starts all three processes concurrently).
+    /// starts all three processes concurrently). Retries back off
+    /// exponentially (50ms·2^k, capped at 2s) with deterministic
+    /// per-`(addr, attempt)` jitter — see [`backoff_delay`].
     pub fn connect_retry(addr: &str, total: Duration) -> Result<Self> {
         let deadline = Instant::now() + total;
+        let mut attempt = 0u32;
         loop {
             match addr
                 .to_socket_addrs()
@@ -133,10 +175,14 @@ impl TcpTransport {
                     Err(e) => {
                         if Instant::now() >= deadline {
                             return Err(e).with_context(|| {
-                                format!("connecting to MBS at {addr} (retried {total:?})")
+                                format!(
+                                    "connecting to MBS at {addr} ({} attempts over {total:?})",
+                                    attempt + 1
+                                )
                             });
                         }
-                        std::thread::sleep(Duration::from_millis(200));
+                        std::thread::sleep(backoff_delay(addr, attempt));
+                        attempt = attempt.saturating_add(1);
                     }
                 },
             }
@@ -165,10 +211,22 @@ impl Transport for TcpTransport {
                 return wire::decode_payload(tag, &payload)
                     .with_context(|| format!("message from {}", self.peer));
             }
-            let n = self
-                .stream
-                .read(&mut chunk)
-                .with_context(|| format!("reading from {}", self.peer))?;
+            let n = match self.stream.read(&mut chunk) {
+                Ok(n) => n,
+                // Both kinds occur across platforms for a fired
+                // SO_RCVTIMEO; name the hang instead of wedging.
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    bail!(
+                        "io timeout: no bytes from {} within {:?} ({} buffered bytes)",
+                        self.peer,
+                        self.io_timeout.unwrap_or_default(),
+                        self.rxbuf.len()
+                    );
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("reading from {}", self.peer));
+                }
+            };
             if n == 0 {
                 bail!(
                     "connection closed by {} mid-stream ({} buffered bytes)",
@@ -239,5 +297,36 @@ mod tests {
         }
         assert_eq!(t.recv().unwrap(), msg(99));
         server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_hung_peer_yields_named_io_timeout() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // The "peer" accepts but never writes a byte.
+        let silent = std::thread::spawn(move || listener.accept().unwrap());
+        let mut t =
+            TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+        t.set_io_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("io timeout"), "unexpected error: {err}");
+        drop(silent.join().unwrap());
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        for attempt in 0..12 {
+            let a = backoff_delay("127.0.0.1:7070", attempt);
+            let b = backoff_delay("127.0.0.1:7070", attempt);
+            assert_eq!(a, b, "jitter must be deterministic per (addr, attempt)");
+            assert!(a >= Duration::from_millis(50));
+            assert!(a <= Duration::from_millis(2_500), "attempt {attempt}: {a:?}");
+        }
+        // Exponential: later attempts never shrink below the first.
+        assert!(backoff_delay("x:1", 4) > backoff_delay("x:1", 0));
+        // Distinct addresses draw distinct jitter streams (compare the
+        // whole schedule; any single attempt could collide).
+        let schedule = |addr: &str| (0..8).map(|k| backoff_delay(addr, k)).collect::<Vec<_>>();
+        assert_ne!(schedule("x:1"), schedule("y:2"));
     }
 }

@@ -35,6 +35,11 @@ pub const TAG_DONE: u8 = 6;
 pub const TAG_SESSION_HEADER: u8 = 7;
 /// Session log only: one logged message envelope (binary lane).
 pub const TAG_SESSION_RECORD: u8 = 8;
+/// Recovery: worker → MBS after reconnecting mid-run (JSON lane).
+pub const TAG_REJOIN: u8 = 9;
+/// Recovery: MBS declares a cluster dead and reweights without it
+/// (session log / observability, JSON lane).
+pub const TAG_SKIP: u8 = 10;
 
 /// One message between a worker cell (SBS + its MUs) and the MBS.
 #[derive(Clone, Debug, PartialEq)]
@@ -66,6 +71,19 @@ pub enum WireMsg {
         iter_losses: Vec<(usize, f64)>,
         events: Vec<MetricEvent>,
     },
+    /// A reconnected worker re-enters the run: it has replayed the
+    /// `Welcome` handshake for `cluster` and asks to be caught up from
+    /// broadcast `round` onward (0 = replay everything).
+    Rejoin { cluster: usize, round: usize },
+    /// The MBS declared `cluster` dead during sync round `round` and
+    /// reweighted the consensus over survivors. Logged (Tx/broadcast
+    /// lane) so replay reconstructs the degraded trace; never sent to a
+    /// live worker.
+    Skip {
+        cluster: usize,
+        round: usize,
+        reason: String,
+    },
 }
 
 impl WireMsg {
@@ -78,6 +96,8 @@ impl WireMsg {
             WireMsg::Sync { .. } => "Sync",
             WireMsg::GlobalDelta { .. } => "GlobalDelta",
             WireMsg::Done { .. } => "Done",
+            WireMsg::Rejoin { .. } => "Rejoin",
+            WireMsg::Skip { .. } => "Skip",
         }
     }
 }
@@ -236,15 +256,43 @@ pub fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             put_events(&mut w, events);
             (TAG_DONE, w.into_bytes())
         }
+        WireMsg::Rejoin { cluster, round } => (
+            TAG_REJOIN,
+            ObjBuilder::new()
+                .num("cluster", *cluster as f64)
+                .num("round", *round as f64)
+                .build()
+                .to_string_compact()
+                .into_bytes(),
+        ),
+        WireMsg::Skip {
+            cluster,
+            round,
+            reason,
+        } => (
+            TAG_SKIP,
+            ObjBuilder::new()
+                .num("cluster", *cluster as f64)
+                .num("round", *round as f64)
+                .str("reason", reason.clone())
+                .build()
+                .to_string_compact()
+                .into_bytes(),
+        ),
     }
 }
 
 /// Decode one message from its `(tag, payload)` pair.
 pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg> {
     match tag {
-        TAG_HELLO | TAG_WELCOME | TAG_REFUSE => {
+        TAG_HELLO | TAG_WELCOME | TAG_REFUSE | TAG_REJOIN | TAG_SKIP => {
             let text = std::str::from_utf8(payload).context("control payload is not UTF-8")?;
             let j = json::parse(text).map_err(|e| anyhow!("control payload JSON: {e}"))?;
+            let field = |key: &str| {
+                j.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("control payload missing `{key}`"))
+            };
             match tag {
                 TAG_HELLO => Ok(WireMsg::Hello {
                     fingerprint: fingerprint_from_json(&j, "fingerprint")
@@ -258,14 +306,21 @@ pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg> {
                     },
                 }),
                 TAG_WELCOME => Ok(WireMsg::Welcome {
-                    cluster: j
-                        .get("cluster")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow!("Welcome missing cluster"))?,
-                    n_clusters: j
-                        .get("n_clusters")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow!("Welcome missing n_clusters"))?,
+                    cluster: field("cluster").context("decoding Welcome")?,
+                    n_clusters: field("n_clusters").context("decoding Welcome")?,
+                }),
+                TAG_REJOIN => Ok(WireMsg::Rejoin {
+                    cluster: field("cluster").context("decoding Rejoin")?,
+                    round: field("round").context("decoding Rejoin")?,
+                }),
+                TAG_SKIP => Ok(WireMsg::Skip {
+                    cluster: field("cluster").context("decoding Skip")?,
+                    round: field("round").context("decoding Skip")?,
+                    reason: j
+                        .get("reason")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("Skip missing reason"))?
+                        .to_string(),
                 }),
                 _ => Ok(WireMsg::Refuse {
                     reason: j
@@ -382,6 +437,15 @@ mod tests {
             },
             WireMsg::Refuse {
                 reason: "fingerprint mismatch".into(),
+            },
+            WireMsg::Rejoin {
+                cluster: 1,
+                round: 3,
+            },
+            WireMsg::Skip {
+                cluster: 2,
+                round: 4,
+                reason: "recv deadline".into(),
             },
         ] {
             assert_eq!(roundtrip(&msg), msg, "{}", msg.kind());

@@ -20,7 +20,7 @@ pub use matrix::{
     run_matrix, run_matrix_checkpointed, ChannelProfile, EngineSelect, MatrixOptions,
     MatrixScenario, ScenarioSpec,
 };
-pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult, TimelineDigest};
+pub use result::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult, SkipDigest, TimelineDigest};
 
 use crate::config::Config;
 use crate::wireless::{fl_latency, hfl_latency, LatencyInputs};

@@ -146,6 +146,36 @@ fn f64_from_bits_json(j: &Json) -> Result<f64> {
     Ok(f64::from_bits(bits))
 }
 
+/// Fingerprint of the clusters a degraded run skipped: an FNV-1a digest
+/// over the `(cluster, sync round)` pairs in skip order, plus the count.
+/// Identical digests mean the fault policy retired the exact same
+/// clusters at the exact same rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SkipDigest {
+    pub n_skips: u64,
+    pub digest: u64,
+}
+
+impl SkipDigest {
+    /// `None` for a clean run (no skips) — so clean traces serialize
+    /// exactly as before fault tolerance existed and old fixtures
+    /// compare/parse unchanged.
+    pub fn from_skips(skips: &[(usize, usize)]) -> Option<Self> {
+        if skips.is_empty() {
+            return None;
+        }
+        Some(Self {
+            n_skips: skips.len() as u64,
+            digest: fnv1a64(skips.iter().flat_map(|(c, r)| {
+                let mut bytes = Vec::with_capacity(16);
+                bytes.extend_from_slice(&(*c as u64).to_le_bytes());
+                bytes.extend_from_slice(&(*r as u64).to_le_bytes());
+                bytes
+            })),
+        })
+    }
+}
+
 /// Compact bit-exact fingerprint of one scenario run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GoldenTrace {
@@ -158,6 +188,9 @@ pub struct GoldenTrace {
     /// Per-event timeline fingerprint — `Some` only for runs produced by
     /// the discrete-event engine; analytic engines have no timeline.
     pub timeline: Option<TimelineDigest>,
+    /// Degradation fingerprint — `Some` only when a fault policy skipped
+    /// clusters; clean runs carry `None` and serialize unchanged.
+    pub skips: Option<SkipDigest>,
 }
 
 impl GoldenTrace {
@@ -167,6 +200,7 @@ impl GoldenTrace {
             loss_digest: digest_loss_curve(&log.train_loss),
             bits: log.bits,
             timeline: None,
+            skips: None,
         }
     }
 
@@ -176,6 +210,7 @@ impl GoldenTrace {
             loss_digest: digest_loss_curve(&run.train_loss),
             bits: run.metrics.comm_bits(),
             timeline: None,
+            skips: SkipDigest::from_skips(&run.skips),
         }
     }
 
@@ -197,6 +232,11 @@ impl GoldenTrace {
             b = b
                 .str("timeline_digest", format!("{:016x}", t.digest))
                 .str("timeline_events", t.n_events.to_string());
+        }
+        if let Some(s) = self.skips {
+            b = b
+                .str("skips_digest", format!("{:016x}", s.digest))
+                .str("skips_count", s.n_skips.to_string());
         }
         b.build()
     }
@@ -236,6 +276,14 @@ impl GoldenTrace {
         } else {
             None
         };
+        let skips = if j.get("skips_digest").is_some() {
+            Some(SkipDigest {
+                digest: hex("skips_digest")?,
+                n_skips: dec("skips_count")?,
+            })
+        } else {
+            None
+        };
         Ok(Self {
             params_hash: hex("params_hash")?,
             loss_digest: hex("loss_digest")?,
@@ -247,6 +295,7 @@ impl GoldenTrace {
                 n_mu_msgs: dec("n_mu_msgs")?,
             },
             timeline,
+            skips,
         })
     }
 
@@ -290,6 +339,17 @@ impl GoldenTrace {
                 "timeline {} != {}",
                 show(self.timeline),
                 show(other.timeline)
+            ));
+        }
+        if self.skips != other.skips {
+            let show = |s: Option<SkipDigest>| match s {
+                Some(s) => format!("{:016x}/{} skips", s.digest, s.n_skips),
+                None => "none".to_string(),
+            };
+            out.push(format!(
+                "skips {} != {}",
+                show(self.skips),
+                show(other.skips)
             ));
         }
         out
@@ -693,6 +753,7 @@ mod tests {
                 n_mu_msgs: 360,
             },
             timeline: None,
+            skips: None,
         }
     }
 
@@ -785,6 +846,38 @@ mod tests {
         assert!(!s.contains("timeline"));
         let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
         assert_eq!(back.timeline, None);
+    }
+
+    #[test]
+    fn golden_trace_skips_roundtrip_and_diff() {
+        // Clean runs carry no skip fields — byte-identical to pre-fault
+        // serialization, so existing fixtures never re-bless.
+        assert_eq!(SkipDigest::from_skips(&[]), None);
+        let clean = sample_trace();
+        assert!(!clean.to_json().to_string_compact().contains("skips"));
+
+        let mut t = sample_trace();
+        t.skips = SkipDigest::from_skips(&[(1, 3), (2, 3)]);
+        let s = t.to_json().to_string_compact();
+        assert!(s.contains("skips_digest"));
+        let back = GoldenTrace::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.skips.unwrap().n_skips, 2);
+
+        // The digest is order- and round-sensitive.
+        assert_ne!(
+            SkipDigest::from_skips(&[(1, 3), (2, 3)]),
+            SkipDigest::from_skips(&[(2, 3), (1, 3)])
+        );
+        assert_ne!(
+            SkipDigest::from_skips(&[(1, 3)]),
+            SkipDigest::from_skips(&[(1, 4)])
+        );
+
+        // A skip mismatch (degraded vs clean) is one named diff line.
+        let d = t.diff(&clean);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].contains("skips"));
     }
 
     #[test]

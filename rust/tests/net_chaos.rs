@@ -1,0 +1,474 @@
+//! Integration tests for the fault-tolerance layer (`net::chaos` + the
+//! fault-aware MBS):
+//!
+//! 1. **Chaos off ⇒ byte-identical**: `run_chaos_service` with a disabled
+//!    plan reproduces the clean coordinated golden trace exactly — the
+//!    zero-fault path is the status quo every existing fixture pins.
+//! 2. **Healed faults ⇒ clean trace, deterministically**: a seeded plan of
+//!    drops/dups/truncations/corruptions injects real (counted) faults but
+//!    the delivered message stream — hence the golden trace — is still the
+//!    clean one, and two same-seed runs are bit-identical.
+//! 3. **Kill + deadline-skip ⇒ deterministic degraded trace**: a planned
+//!    kill degrades the run (survivor-reweighted consensus, skip digest in
+//!    the golden trace); same seed reruns bit-identically, and the session
+//!    log replays the degraded run — skips included — bit-exactly.
+//! 4. **Kill + rejoin ⇒ clean trace over TCP**: a worker whose connection
+//!    the plan kills mid-run reconnects, announces `Rejoin`, is caught up
+//!    from the recovery point, and the final trace matches the
+//!    uninterrupted reference bit-for-bit.
+//! 5. **Adversarial frame decode (property)**: random bit flips,
+//!    truncations and length-field lies (up to `u32::MAX`) never panic,
+//!    never provoke a lied-length allocation, and always yield a named
+//!    error or an incomplete-frame request for more bytes.
+
+use hfl::config::SparsityConfig;
+use hfl::coordinator::{run_coordinated, ComputeService, CoordinatorOptions};
+use hfl::fl::QuadraticOracle;
+use hfl::net::frame::{
+    decode_frame, encode_frame, HEADER_LEN, MAGIC, MAX_PAYLOAD, TRAILER_LEN, VERSION,
+};
+use hfl::net::{
+    accept_workers, handshake_worker, replay_session, run_cell, run_chaos_service, run_mbs_faulty,
+    ChaosConfig, ChaosTransport, FaultContext, FaultCounters, FaultPolicy, LiveMetrics,
+    SessionHeader, SessionLog, TcpTransport, Transport, WireMsg,
+};
+use hfl::sim::GoldenTrace;
+use hfl::testing::{check, Gen, PropConfig};
+use hfl::util::json::Json;
+use hfl::util::rng::Pcg64;
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sparsity(phi: Option<f64>) -> SparsityConfig {
+    match phi {
+        Some(p) => SparsityConfig {
+            enabled: true,
+            phi_mu_ul: p,
+            phi_sbs_dl: 0.5,
+            phi_sbs_ul: 0.5,
+            phi_mbs_dl: 0.5,
+            beta_m: 0.2,
+            beta_s: 0.5,
+        },
+        None => SparsityConfig::dense(),
+    }
+}
+
+fn coord_opts(phi: Option<f64>, n_clusters: usize, iters: usize) -> CoordinatorOptions {
+    CoordinatorOptions {
+        iters,
+        peak_lr: 0.04,
+        warmup_iters: 4,
+        milestones: (0.5, 0.75),
+        momentum: 0.9,
+        weight_decay: 0.0,
+        h_period: 4,
+        n_clusters,
+        sparsity: sparsity(phi),
+        eval_every_syncs: 0,
+        agg: Default::default(),
+    }
+}
+
+fn make() -> QuadraticOracle {
+    QuadraticOracle::new(16, 6, 0.0, 777)
+}
+
+/// 1. A disabled plan is the identity: trace equal to `run_coordinated`,
+/// zero faults counted.
+#[test]
+fn chaos_disabled_is_byte_identical_to_clean_run() {
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let clean = run_coordinated(make, &opts).unwrap();
+    let counters = Arc::new(FaultCounters::default());
+    let run = run_chaos_service(
+        make,
+        &opts,
+        &ChaosConfig::default(),
+        FaultPolicy::WaitAll,
+        Arc::clone(&counters),
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        GoldenTrace::from_coordinated(&clean),
+        GoldenTrace::from_coordinated(&run),
+        "disabled chaos perturbed the run"
+    );
+    assert_eq!(counters.total_faults(), 0);
+    assert!(run.skips.is_empty());
+}
+
+/// 2. Healed byte faults fire (counters prove it) but the delivered
+/// stream is intact: the trace equals the clean run's, and the same seed
+/// injects the same schedule on a rerun.
+#[test]
+fn healed_fault_plan_keeps_the_clean_trace_and_reruns_bit_identically() {
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let chaos = ChaosConfig {
+        enabled: true,
+        seed: 0xC4A05,
+        drop_p: 0.3,
+        dup_p: 0.3,
+        truncate_p: 0.2,
+        corrupt_p: 0.2,
+        ..ChaosConfig::default()
+    };
+    let clean = run_coordinated(make, &opts).unwrap();
+    let c1 = Arc::new(FaultCounters::default());
+    let r1 = run_chaos_service(
+        make,
+        &opts,
+        &chaos,
+        FaultPolicy::WaitAll,
+        Arc::clone(&c1),
+        None,
+        None,
+    )
+    .unwrap();
+    let c2 = Arc::new(FaultCounters::default());
+    let r2 = run_chaos_service(
+        make,
+        &opts,
+        &chaos,
+        FaultPolicy::WaitAll,
+        Arc::clone(&c2),
+        None,
+        None,
+    )
+    .unwrap();
+
+    let clean_trace = GoldenTrace::from_coordinated(&clean);
+    let t1 = GoldenTrace::from_coordinated(&r1);
+    let t2 = GoldenTrace::from_coordinated(&r2);
+    assert_eq!(clean_trace, t1, "healed faults changed the trace");
+    assert_eq!(t1, t2, "same chaos seed was not rerun-deterministic");
+    assert!(c1.total_faults() > 0, "a p=0.3 plan never fired");
+    assert_eq!(
+        c1.total_faults(),
+        c2.total_faults(),
+        "same seed drew different fault schedules"
+    );
+}
+
+/// 3. A planned kill under `deadline-skip`: the run degrades (survivor
+/// fold, skip in the golden trace), reruns bit-identically on the same
+/// seed, and the session log replays the degraded run — skips included.
+#[test]
+fn kill_with_deadline_skip_degrades_deterministically_and_replays() {
+    let dir = std::env::temp_dir().join(format!("hfl-chaos-skip-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("degraded.hlog");
+
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let chaos = ChaosConfig {
+        enabled: true,
+        seed: 11,
+        kill_cluster: Some(1),
+        kill_after: 3,
+        ..ChaosConfig::default()
+    };
+    let header = SessionHeader {
+        name: "chaos-degraded".into(),
+        fingerprint: 0x2,
+        dim: 16,
+        n_clusters: 2,
+        workers: 6,
+        h_period: opts.h_period,
+        iters: opts.iters,
+        sparse: true,
+    };
+    let mut log = SessionLog::create(&path, &header).unwrap();
+    let live = Arc::new(LiveMetrics::new(2));
+    let counters = Arc::new(FaultCounters::default());
+    live.attach_fault_counters(Arc::clone(&counters));
+    let r1 = run_chaos_service(
+        make,
+        &opts,
+        &chaos,
+        FaultPolicy::DeadlineSkip,
+        Arc::clone(&counters),
+        Some(&mut log),
+        Some(live.as_ref()),
+    )
+    .unwrap();
+    drop(log);
+    let r2 = run_chaos_service(
+        make,
+        &opts,
+        &chaos,
+        FaultPolicy::DeadlineSkip,
+        Arc::new(FaultCounters::default()),
+        None,
+        None,
+    )
+    .unwrap();
+
+    // The degraded run IS degraded — and deterministically so.
+    assert_eq!(r1.skips.len(), 1, "planned kill produced {:?}", r1.skips);
+    assert_eq!(r1.skips[0].0, 1, "wrong cluster skipped: {:?}", r1.skips);
+    let clean = run_coordinated(make, &opts).unwrap();
+    let t1 = GoldenTrace::from_coordinated(&r1);
+    assert_ne!(
+        GoldenTrace::from_coordinated(&clean),
+        t1,
+        "losing a cluster left the trace unchanged"
+    );
+    assert_eq!(
+        t1,
+        GoldenTrace::from_coordinated(&r2),
+        "same-seed degraded reruns diverged"
+    );
+    assert_eq!(r1.skips, r2.skips);
+    assert!(counters.kills.load(Ordering::Relaxed) >= 1);
+
+    // The session log replays the degraded run bit-exactly, skips and all.
+    let (_, replayed) = replay_session(&path).unwrap();
+    assert_eq!(replayed.skips, r1.skips);
+    assert_eq!(
+        t1,
+        GoldenTrace::from_coordinated(&replayed),
+        "degraded session log did not replay bit-exactly"
+    );
+
+    // The live endpoint recorded the degradation.
+    let j = live.to_json();
+    assert_eq!(j.get("clusters_skipped").and_then(Json::as_usize), Some(1));
+    assert!(j.get("kills").and_then(Json::as_usize).unwrap() >= 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// 4. The rejoin lane over real TCP: the plan kills one worker's
+/// connection mid-run; the worker reconnects, replays the handshake,
+/// announces `Rejoin{cluster, 0}` and recomputes while the MBS feeds it
+/// the stored broadcasts. The final trace matches the uninterrupted
+/// reference bit-for-bit and nothing is skipped.
+#[test]
+fn killed_worker_rejoins_and_the_trace_matches_the_clean_run() {
+    let opts = coord_opts(Some(0.9), 2, 16);
+    let reference = run_coordinated(make, &opts).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fingerprint = 0xfau64;
+    let chaos = ChaosConfig {
+        enabled: true,
+        seed: 5,
+        kill_cluster: Some(1),
+        kill_after: 3,
+        ..ChaosConfig::default()
+    };
+    let counters = Arc::new(FaultCounters::default());
+
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let opts = opts.clone();
+            let plan = chaos.clone();
+            let counters = Arc::clone(&counters);
+            let addr = addr.clone();
+            std::thread::spawn(move || -> hfl::Result<()> {
+                let mut transport = TcpTransport::connect_retry(&addr, Duration::from_secs(10))?;
+                let (cluster, n) = handshake_worker(&mut transport, fingerprint, None)?;
+                // Chaos wraps the worker's side of the link; only the
+                // plan's target cluster ever dies.
+                let mut link: Box<dyn Transport> = ChaosTransport::wrap(
+                    Box::new(transport),
+                    &plan,
+                    cluster,
+                    (n + cluster) as u64,
+                    counters,
+                );
+                let svc = ComputeService::spawn(make);
+                let res = run_cell(svc.handle(), &opts, cluster, link.as_mut());
+                svc.shutdown();
+                if res.is_ok() {
+                    return Ok(());
+                }
+                // The plan killed us: relaunch on a fresh connection, land
+                // on the same cluster, rejoin from round 0 (exactly what
+                // `hfl worker --rejoining --cluster C` does).
+                drop(link);
+                let mut transport = TcpTransport::connect_retry(&addr, Duration::from_secs(10))?;
+                let (again, _n) = handshake_worker(&mut transport, fingerprint, Some(cluster))?;
+                assert_eq!(again, cluster, "rejoin landed on the wrong cluster");
+                transport.send(&WireMsg::Rejoin { cluster, round: 0 })?;
+                let svc = ComputeService::spawn(make);
+                let res = run_cell(svc.handle(), &opts, cluster, &mut transport);
+                svc.shutdown();
+                res
+            })
+        })
+        .collect();
+
+    let links = accept_workers(&listener, fingerprint, 2).unwrap();
+    let svc = ComputeService::spawn(make);
+    let compute = svc.handle();
+    let (dim, _k, init, _ipe) = compute.meta();
+    let mut eval = |p: &[f32]| compute.eval(Arc::new(p.to_vec()));
+    let live = LiveMetrics::new(2);
+    let faults = FaultContext {
+        policy: FaultPolicy::WaitAll,
+        rejoin_deadline: Duration::from_secs(20),
+        listener: Some(&listener),
+        fingerprint,
+        io_timeout: None,
+    };
+    let run = run_mbs_faulty(
+        links,
+        &opts,
+        dim,
+        &init,
+        &mut eval,
+        None,
+        Some(&live),
+        &faults,
+    )
+    .unwrap();
+    svc.shutdown();
+    for j in workers {
+        j.join().unwrap().unwrap();
+    }
+
+    assert!(run.skips.is_empty(), "rejoin should prevent any skip");
+    assert_eq!(
+        GoldenTrace::from_coordinated(&reference),
+        GoldenTrace::from_coordinated(&run),
+        "rejoined session diverged from the uninterrupted run"
+    );
+    assert!(counters.kills.load(Ordering::Relaxed) >= 1, "plan never killed");
+    let j = live.to_json();
+    assert_eq!(j.get("reconnects").and_then(Json::as_usize), Some(1));
+}
+
+/// Generator for rule 5: a valid frame put through one adversarial
+/// mutation — a bit flip, a truncation, a length-field lie (biased toward
+/// `u32::MAX`), or full-buffer garbage.
+struct AdversarialBytes;
+
+impl Gen for AdversarialBytes {
+    type Value = Vec<u8>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<u8> {
+        let len = rng.uniform_usize(64);
+        let payload: Vec<u8> = (0..len).map(|_| rng.uniform_u64(256) as u8).collect();
+        let tag = rng.uniform_u64(256) as u8;
+        let mut bytes = encode_frame(tag, &payload);
+        match rng.uniform_usize(4) {
+            0 => {
+                let i = rng.uniform_usize(bytes.len());
+                bytes[i] ^= 1 << rng.uniform_usize(8);
+            }
+            1 => {
+                let cut = rng.uniform_usize(bytes.len() + 1);
+                bytes.truncate(cut);
+            }
+            2 => {
+                let lie: u32 = if rng.uniform() < 0.5 {
+                    u32::MAX - rng.uniform_u64(1024) as u32
+                } else {
+                    rng.uniform_u64(1u64 << 32) as u32
+                };
+                bytes[6..10].copy_from_slice(&lie.to_le_bytes());
+            }
+            _ => {
+                for b in bytes.iter_mut() {
+                    *b = rng.uniform_u64(256) as u8;
+                }
+            }
+        }
+        bytes
+    }
+
+    fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec()]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// 5. Adversarial decode never panics, never trusts a lied length, and
+/// classifies every outcome: a named error, a request for more bytes
+/// (legal only when the buffer really is short of its own claim), or a
+/// verified frame whose payload came out of the actual buffer.
+#[test]
+fn prop_frame_decode_survives_adversarial_bytes() {
+    let cfg = PropConfig {
+        cases: 600,
+        ..PropConfig::default()
+    };
+    check(&cfg, &AdversarialBytes, |bytes| {
+        match decode_frame(bytes) {
+            Ok(None) => {
+                // "More bytes please" must be honest: with an intact
+                // header the claim must genuinely exceed the buffer.
+                if bytes.len() >= HEADER_LEN && bytes[..4] == MAGIC && bytes[4] == VERSION {
+                    let len =
+                        u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
+                    if len <= MAX_PAYLOAD && bytes.len() >= HEADER_LEN + len + TRAILER_LEN {
+                        return Err("complete frame reported as incomplete".into());
+                    }
+                }
+                Ok(())
+            }
+            Ok(Some((_tag, payload, consumed))) => {
+                // A decoded payload is a slice of the real buffer — a lied
+                // length can never materialize bytes that were not read.
+                if consumed > bytes.len() {
+                    return Err(format!("consumed {consumed} of {} bytes", bytes.len()));
+                }
+                if HEADER_LEN + payload.len() + TRAILER_LEN != consumed {
+                    return Err(format!(
+                        "payload {} disagrees with consumed {consumed}",
+                        payload.len()
+                    ));
+                }
+                Ok(())
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if ["magic", "version", "cap", "checksum"].iter().any(|k| msg.contains(k)) {
+                    Ok(())
+                } else {
+                    Err(format!("unnamed decode error: {msg}"))
+                }
+            }
+        }
+    });
+}
+
+/// Deterministic companion to the property: every interesting length lie,
+/// including `u32::MAX`, resolves without allocation — over the cap is a
+/// named error, under it (but past the buffer) is an incomplete frame.
+#[test]
+fn length_field_lies_are_cap_errors_or_incomplete_never_allocations() {
+    let base = encode_frame(7, b"short payload");
+    for lie in [
+        base.len() as u32,
+        1 << 20,
+        MAX_PAYLOAD as u32,
+        MAX_PAYLOAD as u32 + 1,
+        u32::MAX,
+    ] {
+        let mut bytes = base.clone();
+        bytes[6..10].copy_from_slice(&lie.to_le_bytes());
+        match decode_frame(&bytes) {
+            Ok(None) => assert!(
+                lie as usize <= MAX_PAYLOAD,
+                "lie {lie} over the cap should be an error"
+            ),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    lie as usize > MAX_PAYLOAD && msg.contains("cap"),
+                    "lie {lie}: unexpected error {msg}"
+                );
+            }
+            Ok(Some(_)) => panic!("lie {lie} decoded as a complete frame"),
+        }
+    }
+}

@@ -33,7 +33,7 @@ use hfl::config::{Config, SparsityConfig};
 use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
 use hfl::fl::{run_hierarchical, CommBits, QuadraticOracle, TrainLog, TrainOptions};
 use hfl::pool::{PoolHandle, WorkerPool};
-use hfl::sim::{Engine, GoldenTrace, ScenarioResult, TimelineDigest};
+use hfl::sim::{Engine, GoldenTrace, ScenarioResult, SkipDigest, TimelineDigest};
 use hfl::sparse::merge::{merge_weighted_into, merge_weighted_par, MergeScratch, ParMergeScratch};
 use hfl::sparse::{DgcCompressor, SparseVec, SparseWire};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
@@ -965,6 +965,11 @@ fn prop_scenario_result_exact_json_roundtrip_is_bitwise() {
                 },
                 timeline: if rng.uniform_usize(2) == 0 {
                     Some(TimelineDigest { n_events: rng.next_u64(), digest: rng.next_u64() })
+                } else {
+                    None
+                },
+                skips: if rng.uniform_usize(2) == 0 {
+                    Some(SkipDigest { n_skips: rng.next_u64(), digest: rng.next_u64() })
                 } else {
                     None
                 },
