@@ -1,0 +1,120 @@
+//! DES scale-out bench (§Scale): one static wait-for-all discrete-event
+//! run at 10⁵ MUs — the regime the sparse-residual MU state, the rolling
+//! loss window, and the calendar event queue exist for. Reports wall
+//! clock, simulated-event throughput, and the process peak RSS (`VmHWM`),
+//! and **asserts a memory ceiling**: per-MU engine state must stay O(nnz),
+//! so a regression back to dense per-MU buffers (O(K · dim)) blows the
+//! ceiling long before it blows CI's memory limit.
+//!
+//! ```bash
+//! cargo bench --bench des_scale              # 100k MUs, dim 384
+//! cargo bench --bench des_scale -- --smoke   # 2k MUs (CI harness check)
+//! ```
+
+use hfl::config::Config;
+use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
+use hfl::fl::{QuadraticOracle, TrainOptions};
+use hfl::util::bench::black_box;
+
+/// Peak resident set size in MiB from `/proc/self/status` (`VmHWM`).
+/// Returns `None` where procfs is unavailable (non-Linux), which skips
+/// the ceiling assertion but keeps the throughput numbers.
+fn peak_rss_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line
+        .trim_start_matches("VmHWM:")
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb / 1024.0)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Full scale: 2 cells × 50k MUs = 10⁵ MUs at dim 384 — the quadratic
+    // oracle's inherent per-worker data (curvature + optimum) is ~307 MiB;
+    // the engine itself must add O(nnz) per MU on top, not O(dim). A
+    // regression to dense per-MU DGC buffers would add another ~307 MiB
+    // and break the ceiling below.
+    let (cells, per_cell, dim, iters) = if smoke {
+        (2usize, 1_000usize, 64usize, 4usize)
+    } else {
+        (2usize, 50_000usize, 384usize, 4usize)
+    };
+    let k_total = cells * per_cell;
+    let oracle_mib = (2 * k_total * dim * 4) as f64 / (1024.0 * 1024.0);
+    // Ceiling = oracle data + fixed engine/runtime headroom. The headroom
+    // covers per-MU bookkeeping (mutexed sparse triples, RNG streams,
+    // topology arrays — ~100 B/MU), the event queue, and allocator slack;
+    // it does NOT leave room for even one dense K × dim buffer.
+    let ceiling_mib = oracle_mib + 160.0;
+
+    let mut cfg = Config::smoke();
+    cfg.topology.n_clusters = cells;
+    cfg.topology.mus_per_cluster = per_cell;
+    cfg.topology.reuse_colors = cfg.topology.reuse_colors.min(cells);
+    cfg.training.h_period = 2;
+    cfg.sparsity.enabled = true;
+    cfg.sparsity.phi_mu_ul = 0.9;
+
+    let topts = TrainOptions {
+        spec: hfl::spec::RunSpec::new()
+            .iters(iters)
+            .peak_lr(0.05)
+            .warmup(1)
+            .milestones(0.6, 0.85)
+            .h_period(cfg.training.h_period)
+            .sparsity(cfg.sparsity.clone()),
+        n_clusters: cells,
+        eval_every: 0,
+    };
+    let params = DesParams {
+        topts,
+        mobility: MobilityProfile::Static,
+        straggler: StragglerPolicy::WaitForAll,
+        compute: ComputeProfile::none(),
+        compute_scale: 1.0,
+        seed: 7,
+    };
+
+    println!(
+        "des_scale: {cells} cells x {per_cell} MUs (K = {k_total}), dim {dim}, {iters} iters"
+    );
+    let t_setup = std::time::Instant::now();
+    let mut oracle = QuadraticOracle::new_skewed(dim, k_total, 0.0, 1.0, 2026);
+    println!(
+        "  oracle setup {:.2}s ({oracle_mib:.0} MiB inherent worker data)",
+        t_setup.elapsed().as_secs_f64()
+    );
+
+    let t_run = std::time::Instant::now();
+    let out = run_des(&mut oracle, &cfg, &params).expect("DES run");
+    let wall = t_run.elapsed().as_secs_f64();
+    black_box(&out.log.final_params);
+    println!(
+        "  run {wall:.2}s — {} events ({:.0} events/s), timeline {:016x}",
+        out.timeline.n_events,
+        out.timeline.n_events as f64 / wall.max(1e-9),
+        out.timeline.digest,
+    );
+    println!(
+        "  {} MU-rounds simulated ({:.0} MU-rounds/s)",
+        k_total * iters,
+        (k_total * iters) as f64 / wall.max(1e-9),
+    );
+
+    match peak_rss_mib() {
+        Some(peak) => {
+            println!("  peak RSS {peak:.0} MiB (ceiling {ceiling_mib:.0} MiB)");
+            assert!(
+                peak <= ceiling_mib,
+                "peak RSS {peak:.0} MiB exceeds the {ceiling_mib:.0} MiB ceiling — \
+                 per-MU engine state is no longer O(nnz)"
+            );
+        }
+        None => println!("  peak RSS unavailable (no /proc); ceiling check skipped"),
+    }
+}

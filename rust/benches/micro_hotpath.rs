@@ -196,19 +196,16 @@ fn run_arena(
     seed: u64,
 ) -> f64 {
     let opts = TrainOptions {
-        iters,
-        peak_lr: 0.05,
-        warmup_iters: 2,
-        milestones: (0.6, 0.85),
-        momentum: 0.9,
-        weight_decay: 0.0,
-        h_period: h,
+        spec: hfl::spec::RunSpec::new()
+            .iters(iters)
+            .peak_lr(0.05)
+            .warmup(2)
+            .milestones(0.6, 0.85)
+            .h_period(h)
+            .sparsity(bench_sparsity())
+            .inner_threads(inner),
         n_clusters: n,
-        sparsity: bench_sparsity(),
         eval_every: 0,
-        inner_threads: inner,
-        pool: None,
-        agg: Default::default(),
     };
     let mut oracle = QuadraticOracle::new_skewed(dim, n * per_cluster, 0.0, 1.0, seed);
     let log = run_hierarchical(&mut oracle, &opts);

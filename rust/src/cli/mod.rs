@@ -12,12 +12,18 @@
 //! `--key=value` escape hatch, which accepts any value verbatim
 //! (e.g. `--out=--weird-name.json`).
 //! The shared `--pool-threads` option (persistent worker-pool lane budget,
-//! see [`crate::pool`]) is resolved by [`pool_from_args`].
+//! see [`crate::pool`]) is resolved by [`pool_from_args`]; the shared
+//! training-run flags decode through [`spec_from_args`] into one
+//! [`RunSpec`], `--phi` through [`phi_from_args`], and the grid commands'
+//! `--out`/`--write-golden`/`--check-golden` surface through
+//! [`GoldenArgs`].
 
 use crate::net::chaos::{ChaosConfig, FaultPolicy};
 use crate::pool::WorkerPool;
+use crate::sim::result::{self, ScenarioResult};
 use crate::sparse::merge::{AggPath, AggPolicy};
-use anyhow::{bail, Result};
+use crate::spec::RunSpec;
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// Resolve the shared `--agg-path auto|sparse|dense` option against the
@@ -94,6 +100,127 @@ pub fn chaos_from_args(args: &Args, default: &ChaosConfig) -> Result<ChaosConfig
     }
     chaos.validate()?;
     Ok(chaos)
+}
+
+/// Underscore-tolerant count option: `--mus 1_000_000` reads as one
+/// million. Plain digits parse as usual; `_` separators are stripped
+/// first (a count axis that reaches 10^6+ is unreadable without them).
+pub fn count_from_args(args: &Args, key: &str) -> Result<Option<usize>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(s) => {
+            let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+            if cleaned.is_empty() || s.starts_with('_') || s.ends_with('_') {
+                bail!("--{key}={s}: not a count (digits with optional `_` separators)");
+            }
+            cleaned
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key}={s}: {e}"))
+        }
+    }
+}
+
+/// Resolve the shared `--phi F` sparsity pin. One definition of the bound
+/// check (the same bound `DgcKernel` enforces) for every subcommand that
+/// accepts the flag — reject at the CLI boundary instead of panicking
+/// inside a pooled worker.
+pub fn phi_from_args(args: &Args) -> Result<Option<f64>> {
+    let phi = args.get_parsed::<f64>("phi")?;
+    if let Some(p) = phi {
+        if !(0.0..1.0).contains(&p) {
+            bail!("--phi {p} outside [0,1) (DGC keeps at least one coordinate)");
+        }
+    }
+    Ok(phi)
+}
+
+/// Apply the shared training-run flags to a starting [`RunSpec`]: `--iters`
+/// overrides the iteration budget, `--inner-threads` the intra-round
+/// fan-out, and `--agg-path` the aggregation dispatch (against the `[agg]`
+/// config default). This is the one decode path from CLI/config to the
+/// spec shared by `train`, `matrix` and `des`.
+pub fn spec_from_args(args: &Args, default_agg: AggPolicy, base: RunSpec) -> Result<RunSpec> {
+    let mut spec = base.agg(agg_from_args(args, default_agg)?);
+    if let Some(iters) = count_from_args(args, "iters")? {
+        spec.iters = iters;
+    }
+    if let Some(inner) = args.get_parsed::<usize>("inner-threads")? {
+        spec.inner_threads = inner;
+    }
+    Ok(spec)
+}
+
+/// The shared golden-trace output surface of the grid subcommands
+/// (`matrix`, `des`, `serve`, `replay`): `--out DIR` for the CSV/JSON/
+/// golden triple, `--write-golden F` to emit a fixture, `--check-golden F`
+/// to diff against one. One parse + one emit path keeps the error wording
+/// identical across subcommands.
+#[derive(Clone, Debug)]
+pub struct GoldenArgs {
+    /// Output directory for `<prefix>.csv` / `<prefix>.json` /
+    /// `<prefix>_golden.json`.
+    pub out: String,
+    /// `--write-golden F`: also write the golden trace to this fixture path.
+    pub write_golden: Option<String>,
+    /// `--check-golden F`: diff the golden trace against this fixture and
+    /// fail on any mismatch.
+    pub check_golden: Option<String>,
+}
+
+impl GoldenArgs {
+    /// Parse `--out` (default `results`), `--write-golden`, `--check-golden`.
+    pub fn from_args(args: &Args) -> Self {
+        Self {
+            out: args.get_or("out", "results"),
+            write_golden: args.get("write-golden").map(str::to_string),
+            check_golden: args.get("check-golden").map(str::to_string),
+        }
+    }
+
+    /// Write the grid outputs under `out/<prefix>.*`, then honor the
+    /// fixture write/check requests. Golden traces are a bit-exactness
+    /// boundary: serialization refuses to emit a fixture with silently
+    /// nulled non-finite numbers, and any check mismatch is an error
+    /// listing every diverging scenario.
+    pub fn emit(&self, results: &[ScenarioResult], prefix: &str) -> Result<()> {
+        let csv_path = format!("{}/{prefix}.csv", self.out);
+        result::results_to_csv(results).save(&csv_path)?;
+        let json_path = format!("{}/{prefix}.json", self.out);
+        std::fs::write(
+            &json_path,
+            format!("{}\n", result::results_to_json(results).to_string_compact()),
+        )?;
+        let golden_text = format!(
+            "{}\n",
+            result::golden_to_json(results)
+                .to_string_strict()
+                .map_err(|e| anyhow!("golden trace serialization: {e}"))?
+        );
+        let golden_path = format!("{}/{prefix}_golden.json", self.out);
+        std::fs::write(&golden_path, &golden_text)?;
+        println!("wrote {csv_path}, {json_path} and {golden_path}");
+
+        if let Some(path) = &self.write_golden {
+            std::fs::write(path, &golden_text)?;
+            println!("wrote golden fixture {path}");
+        }
+        if let Some(path) = &self.check_golden {
+            let text = std::fs::read_to_string(path)?;
+            let json = crate::util::json::parse(&text)
+                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            let fixture = result::golden_from_json(&json)?;
+            let diff = result::golden_diff(results, &fixture);
+            if !diff.is_empty() {
+                for d in &diff {
+                    eprintln!("golden mismatch: {d}");
+                }
+                bail!("{} golden-trace mismatches against {path}", diff.len());
+            }
+            println!("golden traces match {path} ({} scenarios)", results.len());
+        }
+        Ok(())
+    }
 }
 
 /// Resolve `--fault-policy wait-all|deadline-skip|quorum` (with
@@ -419,6 +546,57 @@ mod tests {
         assert!(fault_policy_from_args(&a).is_err());
         let a = Args::parse(["serve", "--fault-policy", "panic"]).unwrap();
         assert!(fault_policy_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn count_from_args_strips_separators() {
+        let a = Args::parse(["des", "--mus", "1_000_000"]).unwrap();
+        assert_eq!(count_from_args(&a, "mus").unwrap(), Some(1_000_000));
+        let a = Args::parse(["des", "--mus", "250"]).unwrap();
+        assert_eq!(count_from_args(&a, "mus").unwrap(), Some(250));
+        let a = Args::parse(["des"]).unwrap();
+        assert_eq!(count_from_args(&a, "mus").unwrap(), None);
+        for bad in ["_1000", "1000_", "abc", "_", "1_000.5"] {
+            let a = Args::parse(vec!["des".to_string(), format!("--mus={bad}")]).unwrap();
+            assert!(count_from_args(&a, "mus").is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn phi_from_args_validates_range() {
+        let a = Args::parse(["des", "--phi", "0.9"]).unwrap();
+        assert_eq!(phi_from_args(&a).unwrap(), Some(0.9));
+        a.finish().unwrap();
+        let a = Args::parse(["des"]).unwrap();
+        assert_eq!(phi_from_args(&a).unwrap(), None);
+        let a = Args::parse(["des", "--phi", "1.0"]).unwrap();
+        assert!(phi_from_args(&a).is_err());
+        let a = Args::parse(["des", "--phi=-0.1"]).unwrap();
+        assert!(phi_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn spec_from_args_applies_shared_overrides() {
+        let a = Args::parse([
+            "des",
+            "--iters",
+            "5_000",
+            "--inner-threads",
+            "4",
+            "--agg-path",
+            "dense",
+        ])
+        .unwrap();
+        let spec = spec_from_args(&a, AggPolicy::default(), RunSpec::new().iters(30)).unwrap();
+        assert_eq!(spec.iters, 5000);
+        assert_eq!(spec.inner_threads, 4);
+        assert_eq!(spec.agg.path, AggPath::Dense);
+        a.finish().unwrap();
+        // Absent flags keep the base spec.
+        let a = Args::parse(["des"]).unwrap();
+        let spec = spec_from_args(&a, AggPolicy::default(), RunSpec::new().iters(30)).unwrap();
+        assert_eq!(spec.iters, 30);
+        assert_eq!(spec.inner_threads, 1);
     }
 
     #[test]

@@ -30,66 +30,59 @@
 use super::compute::ComputeHandle;
 use super::messages::{MuToSbs, SbsToMu};
 use super::metrics::{LinkKind, MetricEvent, MetricsLog, MetricsSink};
-use crate::config::SparsityConfig;
 use crate::fl::oracle::{EvalMetrics, GradOracle};
-use crate::sparse::merge::AggPolicy;
+use crate::spec::RunSpec;
 use crate::sparse::{DgcCompressor, SparseVec};
 use anyhow::Result;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-/// Options for a coordinated run (mirrors [`crate::fl::TrainOptions`]).
+/// Options for a coordinated run: the shared [`RunSpec`] scalars (the
+/// coordinator ignores its `inner_threads`/`pool` wiring — cells fan out
+/// as threads of their own) plus the two coordinator-only knobs.
+/// `Deref`s to its spec, so `opts.iters`-style reads work unchanged.
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
-    pub iters: usize,
-    pub peak_lr: f64,
-    pub warmup_iters: usize,
-    pub milestones: (f64, f64),
-    pub momentum: f32,
-    pub weight_decay: f32,
-    pub h_period: usize,
+    /// The shared run specification (see [`crate::spec::RunSpec`]).
+    pub spec: RunSpec,
+    /// Number of clusters N (one SBS cell / worker process each).
     pub n_clusters: usize,
-    pub sparsity: SparsityConfig,
     /// Evaluate on the MBS's global model every this many sync points
     /// (0 → final only).
     pub eval_every_syncs: usize,
-    /// Aggregation dispatch at the SBS/MBS slots (mirrors
-    /// [`crate::fl::TrainOptions::agg`]; bit-identical either way).
-    pub agg: AggPolicy,
 }
 
 impl Default for CoordinatorOptions {
     fn default() -> Self {
-        Self {
-            iters: 100,
-            peak_lr: 0.1,
-            warmup_iters: 0,
-            milestones: (0.5, 0.75),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: 2,
-            n_clusters: 1,
-            sparsity: SparsityConfig::dense(),
-            eval_every_syncs: 0,
-            agg: AggPolicy::default(),
-        }
+        Self { spec: RunSpec::default(), n_clusters: 1, eval_every_syncs: 0 }
+    }
+}
+
+impl std::ops::Deref for CoordinatorOptions {
+    type Target = RunSpec;
+    fn deref(&self) -> &RunSpec {
+        &self.spec
+    }
+}
+
+impl std::ops::DerefMut for CoordinatorOptions {
+    fn deref_mut(&mut self) -> &mut RunSpec {
+        &mut self.spec
+    }
+}
+
+impl From<RunSpec> for CoordinatorOptions {
+    fn from(spec: RunSpec) -> Self {
+        Self { spec, ..Self::default() }
     }
 }
 
 impl From<&crate::fl::TrainOptions> for CoordinatorOptions {
     fn from(o: &crate::fl::TrainOptions) -> Self {
         Self {
-            iters: o.iters,
-            peak_lr: o.peak_lr,
-            warmup_iters: o.warmup_iters,
-            milestones: o.milestones,
-            momentum: o.momentum,
-            weight_decay: o.weight_decay,
-            h_period: o.h_period,
+            spec: o.spec.clone(),
             n_clusters: o.n_clusters,
-            sparsity: o.sparsity.clone(),
             eval_every_syncs: 0,
-            agg: o.agg,
         }
     }
 }
@@ -221,21 +214,20 @@ pub(crate) fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SparsityConfig;
     use crate::fl::oracle::QuadraticOracle;
+    use crate::sparse::merge::AggPolicy;
 
     fn opts() -> CoordinatorOptions {
         CoordinatorOptions {
-            iters: 60,
-            peak_lr: 0.05,
-            warmup_iters: 5,
-            milestones: (0.6, 0.85),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: 4,
+            spec: RunSpec::new()
+                .iters(60)
+                .peak_lr(0.05)
+                .warmup(5)
+                .milestones(0.6, 0.85)
+                .h_period(4),
             n_clusters: 2,
-            sparsity: SparsityConfig::dense(),
             eval_every_syncs: 3,
-            agg: AggPolicy::default(),
         }
     }
 

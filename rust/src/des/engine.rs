@@ -36,6 +36,34 @@
 //! With mobility, deadlines, or nonzero compute profiles the timeline
 //! departs from the closed form — that is the point of the subsystem — but
 //! stays bit-reproducible across reruns and thread counts.
+//!
+//! ## Scale: millions of MUs
+//!
+//! Per-MU engine state is O(nnz), not O(dim), so idle MUs are nearly
+//! free and a 10⁶-MU run fits in laptop memory:
+//!
+//! * each MU's DGC accumulators live in joint-support sparse form
+//!   (`MuDgc`): one sorted index array plus the momentum/residual
+//!   values at those coordinates. A touched MU is materialized into an
+//!   all-`+0.0` dense scratch (`LaneScratch`), stepped through the
+//!   stateless [`DgcKernel`] — the *identical* arithmetic of the dense
+//!   [`crate::sparse::DgcCompressor`] — and re-extracted by bit pattern
+//!   (`to_bits() != 0`, preserving `−0.0`), so the reconstruction is
+//!   provably bit-exact at every step. (A dense config — φ = 0 — keeps a
+//!   dense momentum buffer by necessity: that *is* the algorithm's
+//!   state.)
+//! * the per-(round, MU) loss slots occupy a rolling window of `H` rounds
+//!   (the maximum inter-cluster round spread between sync barriers), not
+//!   `iters × K`;
+//! * fan-out scratch is per *lane* (leased width), message slots are per
+//!   *participant of the largest cluster seen*, and cluster/sync
+//!   aggregation streams through the k-way sparse merge
+//!   ([`merge::aggregate_adaptive_pooled`]) — coordinate ranges fan out
+//!   across the idle leased lanes — so no O(MUs × dim) buffer ever
+//!   materializes;
+//! * the event queue is a hierarchical calendar queue
+//!   ([`crate::des::events::EventQueue`]) with O(1) expected push/pop at
+//!   10⁷-event populations.
 
 use crate::config::Config;
 use crate::des::events::{EventKind, EventQueue, TimelineRecorder};
@@ -46,8 +74,8 @@ use crate::pool::Lease;
 use crate::sim::result::TimelineDigest;
 use crate::snapshot::codec::{get_rng, put_rng, ByteReader, ByteWriter};
 use crate::snapshot::{self, CheckpointSpec};
-use crate::sparse::merge::{self, AggPath, DenseShadow, MergeScratch};
-use crate::sparse::{DgcCompressor, DiscountedError, SparseVec};
+use crate::sparse::merge::{self, AggPath, DenseShadow, MergeScratch, ParMergeScratch};
+use crate::sparse::{DgcKernel, DiscountedError, SparseVec};
 use crate::tensor::{kernels, RowMatrix};
 use crate::topology::{HexLayout, NetworkTopology, Point};
 use crate::util::rng::Pcg64;
@@ -249,11 +277,19 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     mu_mean_comp: Vec<f64>,
     comp_rng: Vec<Pcg64>,
     busy_until: Vec<f64>,
-    // Training state (mirrors `run_hierarchical`). DGC compressors sit
+    // Training state (mirrors `run_hierarchical`). Per-MU DGC state sits
     // behind per-MU mutexes so the intra-round fan-out can drive disjoint
     // MUs from worker threads; the sequential path locks uncontended.
     schedule: LrSchedule,
-    dgc: Vec<Mutex<DgcCompressor>>,
+    /// The shared stateless DGC step (σ, φ) every MU runs through.
+    kernel: DgcKernel,
+    /// Joint-support sparse momentum/residual state, one entry per MU —
+    /// O(nnz) per idle MU, the million-MU scale-out's key invariant.
+    dgc: Vec<Mutex<MuDgc>>,
+    /// Dense materialization scratch, one slot per fan-out lane (one slot
+    /// total when aggregations run sequentially). The `u`/`v` buffers hold
+    /// `+0.0` everywhere between uses.
+    scratch_pool: Vec<Mutex<LaneScratch>>,
     /// Per-cluster reference models in one flat cache-aligned allocation.
     w_tilde: RowMatrix,
     dl_enc: Vec<DiscountedError>,
@@ -267,15 +303,19 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     stale: Vec<Vec<(SparseVec, f32, f64)>>,
     // Bookkeeping.
     ctx: Vec<RoundCtx>,
-    /// Raw per-(round, MU) losses; folded in global MU order when the
-    /// iteration completes so the loss curve matches the sequential engine
-    /// bit-for-bit in the static wait-for-all configuration.
+    /// Raw per-(round, MU) losses in a rolling window of `loss_window`
+    /// rounds (slot `(round % loss_window) * k_total + mu`); folded in
+    /// global MU order when the iteration completes — so the loss curve
+    /// matches the sequential engine bit-for-bit in the static
+    /// wait-for-all configuration — and the row reset to NaN for reuse.
+    /// Clusters never drift more than one H-period apart (the sync is a
+    /// barrier), so a window of `H` rounds always suffices.
     round_loss: Vec<f64>,
+    loss_window: usize,
     clusters_done_at: Vec<usize>,
     queue: EventQueue,
     rec: TimelineRecorder,
     log: TrainLog,
-    grad: Vec<f32>,
     agg: Vec<f32>,
     msg: SparseVec,
     /// Reusable SBS→MU downlink message (per-round DL encode).
@@ -288,10 +328,10 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     /// fan-out inside one cluster aggregation (width resolved from
     /// `TrainOptions::inner_threads`; `None` = sequential aggregations).
     lease: Option<Lease>,
-    /// Fan-out scratch slots, keyed by position in the current round's
-    /// participant list (empty when the fan-out cannot run). Slot buffers
-    /// grow to `dim` lazily on first use.
-    par_bufs: Vec<Mutex<ParBuf>>,
+    /// Fan-out message slots, keyed by position in the current round's
+    /// participant list and grown lazily to the largest participant count
+    /// seen — bounded by the largest cluster, never by K.
+    par_msgs: Vec<Mutex<SparseVec>>,
     /// True when cluster aggregations keep per-participant messages live
     /// for the density-adaptive sparse merge (φ_ul > 0 and the agg path
     /// is not forced dense); false keeps the historical streaming
@@ -306,8 +346,12 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     sync_msgs: Vec<SparseVec>,
     /// Reusable merged consensus of the sparse path.
     agg_sparse: SparseVec,
-    /// k-way merge scratch (heap + cursors).
+    /// k-way merge scratch (heap + cursors) of the sequential dispatch.
     merge_scratch: MergeScratch,
+    /// Per-lane scratch of the pooled merge dispatch (used whenever a
+    /// lane lease is held — the lanes are idle during the aggregation
+    /// tail, so the coordinate-range fan-out rides for free).
+    par_merge_scratch: ParMergeScratch,
     /// Keeps `agg` bit-identical to the reference `zero → scatter →
     /// scale(−lr)` round sequence on the sparse path (−0.0 baseline).
     agg_shadow: DenseShadow,
@@ -325,10 +369,98 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     finish_time: f64,
 }
 
-/// One fan-out slot's private scratch (gradient buffer + DGC message).
-struct ParBuf {
+/// One MU's DGC accumulators in joint-support sparse form: `indices` is
+/// the sorted union of the coordinates where the momentum (`u`) or
+/// residual (`v`) accumulator is non-zero **by bit pattern** (so `−0.0`
+/// survives round trips), and `u`/`v` hold the values at those
+/// coordinates. Every coordinate outside the support is exactly `+0.0` in
+/// the equivalent dense state — the invariant that makes materialization
+/// bit-exact.
+#[derive(Default)]
+struct MuDgc {
+    indices: Vec<u32>,
+    u: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl MuDgc {
+    /// Materialize into `s`'s all-`+0.0` dense buffers, run one DGC step
+    /// over `s.grad` (identical arithmetic to the dense
+    /// [`crate::sparse::DgcCompressor`]), then re-extract the joint
+    /// support by bit pattern — leaving `s.u`/`s.v` all-`+0.0` again. The
+    /// extraction scan doubles as the re-zeroing pass: a coordinate it
+    /// skips already holds `+0.0`.
+    fn step_from_scratch(&mut self, k: &DgcKernel, s: &mut LaneScratch, out: &mut SparseVec) {
+        let LaneScratch { grad, u, v, quant } = s;
+        for (j, &i) in self.indices.iter().enumerate() {
+            u[i as usize] = self.u[j];
+            v[i as usize] = self.v[j];
+        }
+        k.step_into(grad, u, v, quant, out);
+        self.indices.clear();
+        self.u.clear();
+        self.v.clear();
+        for i in 0..u.len() {
+            if u[i].to_bits() != 0 || v[i].to_bits() != 0 {
+                self.indices.push(i as u32);
+                self.u.push(u[i]);
+                self.v.push(v[i]);
+                u[i] = 0.0;
+                v[i] = 0.0;
+            }
+        }
+    }
+
+    /// Overwrite from checkpointed state (validated by the caller).
+    fn restore(&mut self, indices: Vec<u32>, u: Vec<f32>, v: Vec<f32>) {
+        self.indices = indices;
+        self.u = u;
+        self.v = v;
+    }
+}
+
+/// One lane's private dense scratch: the gradient buffer plus the
+/// momentum/residual/quantile buffers the stateless DGC step runs over.
+/// `u` and `v` hold `+0.0` everywhere between uses (established on grow,
+/// restored by [`MuDgc::step_from_scratch`]'s extraction pass), so which
+/// lane an MU lands on cannot influence a single bit.
+#[derive(Default)]
+struct LaneScratch {
     grad: Vec<f32>,
-    msg: SparseVec,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    quant: Vec<f32>,
+}
+
+impl LaneScratch {
+    fn ensure_dim(&mut self, dim: usize) {
+        if self.u.len() != dim {
+            self.grad.clear();
+            self.grad.resize(dim, 0.0);
+            self.u.clear();
+            self.u.resize(dim, 0.0);
+            self.v.clear();
+            self.v.resize(dim, 0.0);
+            self.quant.clear();
+            self.quant.resize(dim, 0.0);
+        }
+    }
+}
+
+/// Claim any free lane scratch. At most `slots.len()` executors run
+/// concurrently (the lease width), so a free slot always exists; the spin
+/// only rides out the instant between a peer's `try_lock` and its
+/// release. Which slot a task gets is scheduling-dependent — harmless,
+/// because the all-`+0.0` invariant makes every slot interchangeable.
+fn acquire_scratch(slots: &[Mutex<LaneScratch>]) -> std::sync::MutexGuard<'_, LaneScratch> {
+    loop {
+        for s in slots {
+            if let Ok(g) = s.try_lock() {
+                return g;
+            }
+        }
+        std::thread::yield_now();
+    }
 }
 
 /// Apply one MU's compressed update to the cluster aggregate — the single
@@ -359,10 +491,11 @@ fn apply_mu_message(
 }
 
 /// Trajectory-defining scalars of a DES run. A snapshot taken under one
-/// fingerprint refuses to resume under another — thread counts, pool
-/// wiring, and `agg` dispatch are deliberately excluded (bit-irrelevant by
-/// the determinism contract, so resuming at a different thread count is
-/// legal and still bit-exact).
+/// fingerprint refuses to resume under another — the shared training
+/// scalars are folded in by [`crate::spec::RunSpec::put_fingerprint`], so
+/// thread counts, pool wiring, and `agg` dispatch are excluded
+/// (bit-irrelevant by the determinism contract, so resuming at a different
+/// thread count is legal and still bit-exact).
 fn put_des_fingerprint(
     w: &mut ByteWriter,
     dim: usize,
@@ -374,23 +507,8 @@ fn put_des_fingerprint(
     w.put_usize(dim);
     w.put_usize(k_total);
     w.put_usize(topts.n_clusters);
-    w.put_usize(topts.iters);
-    w.put_usize(topts.h_period);
-    w.put_usize(topts.warmup_iters);
     w.put_usize(topts.eval_every);
-    w.put_f64(topts.peak_lr);
-    w.put_f64(topts.milestones.0);
-    w.put_f64(topts.milestones.1);
-    w.put_f32(topts.momentum);
-    w.put_f32(topts.weight_decay);
-    let s = &topts.sparsity;
-    w.put_bool(s.enabled);
-    w.put_f64(s.phi_mu_ul);
-    w.put_f64(s.phi_sbs_dl);
-    w.put_f64(s.phi_sbs_ul);
-    w.put_f64(s.phi_mbs_dl);
-    w.put_f64(s.beta_m);
-    w.put_f64(s.beta_s);
+    topts.spec.put_fingerprint(w);
     w.put_u64(params.seed);
     w.put_f64(params.compute_scale);
     match &params.mobility {
@@ -557,34 +675,39 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         }
         let wd = self.topts.weight_decay;
         let mut ran_parallel = false;
-        if parts.len() > 1 && !self.par_bufs.is_empty() {
+        if parts.len() > 1 && self.lease.is_some() {
+            // Message slots are keyed by *position in this round's
+            // participant list*, not MU id: only one cluster is in flight
+            // at a time, so the slot count is bounded by the largest
+            // cluster, not K.
+            while self.par_msgs.len() < parts.len() {
+                self.par_msgs.push(Mutex::new(SparseVec::empty(self.dim)));
+            }
             if let (Some(lease), Some(par)) = (self.lease.as_ref(), self.oracle.par_view()) {
-                // Fan out: gradient + DGC compression per participant into
-                // its private buffers (disjoint MUs → disjoint state), on
-                // lanes leased from the persistent pool — no per-round
-                // thread spawns. The lease width is clamped to the
-                // participant count inside the pool.
+                // Fan out: gradient + DGC compression per participant —
+                // lane-private dense scratch, per-participant message
+                // slots (disjoint MUs → disjoint state), on lanes leased
+                // from the persistent pool — no per-round thread spawns.
                 let w_row = self.w_tilde.row(c);
+                let kernel = self.kernel;
                 let dgc = &self.dgc;
-                let bufs = &self.par_bufs;
+                let msgs = &self.par_msgs;
+                let scratch = &self.scratch_pool;
                 let dim = self.dim;
-                // Buffer slots are keyed by *position in this round's
-                // participant list*, not MU id: only one cluster is in
-                // flight at a time, so the number of slots that ever grow
-                // to `dim` is bounded by the largest cluster, not K.
                 let losses = lease
                     .run_ordered(parts.len(), |idx| {
                         let mu = parts[idx];
-                        let mut pb_guard = bufs[idx].lock().unwrap();
-                        let pb = &mut *pb_guard;
-                        if pb.grad.len() != dim {
-                            pb.grad.resize(dim, 0.0);
-                        }
-                        let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
+                        let mut s = acquire_scratch(scratch);
+                        s.ensure_dim(dim);
+                        let loss = par.loss_grad_par(mu, w_row, &mut s.grad);
                         if wd != 0.0 {
-                            kernels::axpy(&mut pb.grad, w_row, wd);
+                            kernels::axpy(&mut s.grad, w_row, wd);
                         }
-                        dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
+                        dgc[mu].lock().unwrap().step_from_scratch(
+                            &kernel,
+                            &mut s,
+                            &mut msgs[idx].lock().unwrap(),
+                        );
                         loss
                     })
                     .with_context(|| {
@@ -592,12 +715,13 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                     })?;
                 // Ordered reduction in MU-id order — never arrival order.
                 for (idx, &mu) in parts.iter().enumerate() {
-                    self.round_loss[round * self.k_total + mu] = losses[idx];
-                    let pb = self.par_bufs[idx].lock().unwrap();
-                    self.log.bits.mu_ul += pb.msg.wire_bits(32);
+                    let slot = (round % self.loss_window) * self.k_total + mu;
+                    self.round_loss[slot] = losses[idx];
+                    let m = self.par_msgs[idx].lock().unwrap();
+                    self.log.bits.mu_ul += m.wire_bits(32);
                     self.log.bits.n_mu_msgs += 1;
                     apply_mu_message(
-                        &pb.msg,
+                        &m,
                         self.ctx[c].fresh.contains(&mu),
                         denom,
                         stale_discount,
@@ -614,14 +738,19 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             // Fresh computation + uplink, in MU-id order — never arrival
             // order.
             for &mu in &parts {
-                let loss = self
-                    .oracle
-                    .loss_grad(mu, self.w_tilde.row(c), &mut self.grad);
-                self.round_loss[round * self.k_total + mu] = loss;
+                let mut s = self.scratch_pool[0].lock().unwrap();
+                s.ensure_dim(self.dim);
+                let loss = self.oracle.loss_grad(mu, self.w_tilde.row(c), &mut s.grad);
+                let slot = (round % self.loss_window) * self.k_total + mu;
+                self.round_loss[slot] = loss;
                 if wd != 0.0 {
-                    kernels::axpy(&mut self.grad, self.w_tilde.row(c), wd);
+                    kernels::axpy(&mut s.grad, self.w_tilde.row(c), wd);
                 }
-                self.dgc[mu].lock().unwrap().step_into(&self.grad, &mut self.msg);
+                self.dgc[mu]
+                    .lock()
+                    .unwrap()
+                    .step_from_scratch(&self.kernel, &mut s, &mut self.msg);
+                drop(s);
                 self.log.bits.mu_ul += self.msg.wire_bits(32);
                 self.log.bits.n_mu_msgs += 1;
                 // Bits are spent either way; a late update lands stale
@@ -667,32 +796,39 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     ) -> Result<()> {
         let wd = self.topts.weight_decay;
         let mut ran_parallel = false;
-        if parts.len() > 1 && !self.par_bufs.is_empty() {
+        if parts.len() > 1 && self.lease.is_some() {
+            while self.par_msgs.len() < parts.len() {
+                self.par_msgs.push(Mutex::new(SparseVec::empty(self.dim)));
+            }
             if let (Some(lease), Some(par)) = (self.lease.as_ref(), self.oracle.par_view()) {
                 let w_row = self.w_tilde.row(c);
+                let kernel = self.kernel;
                 let dgc = &self.dgc;
-                let bufs = &self.par_bufs;
+                let msgs = &self.par_msgs;
+                let scratch = &self.scratch_pool;
                 let dim = self.dim;
                 let losses = lease
                     .run_ordered(parts.len(), |idx| {
                         let mu = parts[idx];
-                        let mut pb_guard = bufs[idx].lock().unwrap();
-                        let pb = &mut *pb_guard;
-                        if pb.grad.len() != dim {
-                            pb.grad.resize(dim, 0.0);
-                        }
-                        let loss = par.loss_grad_par(mu, w_row, &mut pb.grad);
+                        let mut s = acquire_scratch(scratch);
+                        s.ensure_dim(dim);
+                        let loss = par.loss_grad_par(mu, w_row, &mut s.grad);
                         if wd != 0.0 {
-                            kernels::axpy(&mut pb.grad, w_row, wd);
+                            kernels::axpy(&mut s.grad, w_row, wd);
                         }
-                        dgc[mu].lock().unwrap().step_into(&pb.grad, &mut pb.msg);
+                        dgc[mu].lock().unwrap().step_from_scratch(
+                            &kernel,
+                            &mut s,
+                            &mut msgs[idx].lock().unwrap(),
+                        );
                         loss
                     })
                     .with_context(|| {
                         format!("DES intra-round fan-out (cluster {c}, round {round})")
                     })?;
                 for (idx, &mu) in parts.iter().enumerate() {
-                    self.round_loss[round * self.k_total + mu] = losses[idx];
+                    let slot = (round % self.loss_window) * self.k_total + mu;
+                    self.round_loss[slot] = losses[idx];
                 }
                 ran_parallel = true;
             }
@@ -702,23 +838,27 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                 self.seq_msgs.push(SparseVec::empty(self.dim));
             }
             for (idx, &mu) in parts.iter().enumerate() {
-                let loss = self
-                    .oracle
-                    .loss_grad(mu, self.w_tilde.row(c), &mut self.grad);
-                self.round_loss[round * self.k_total + mu] = loss;
+                let mut s = self.scratch_pool[0].lock().unwrap();
+                s.ensure_dim(self.dim);
+                let loss = self.oracle.loss_grad(mu, self.w_tilde.row(c), &mut s.grad);
+                let slot = (round % self.loss_window) * self.k_total + mu;
+                self.round_loss[slot] = loss;
                 if wd != 0.0 {
-                    kernels::axpy(&mut self.grad, self.w_tilde.row(c), wd);
+                    kernels::axpy(&mut s.grad, self.w_tilde.row(c), wd);
                 }
-                self.dgc[mu].lock().unwrap().step_into(&self.grad, &mut self.seq_msgs[idx]);
+                self.dgc[mu]
+                    .lock()
+                    .unwrap()
+                    .step_from_scratch(&self.kernel, &mut s, &mut self.seq_msgs[idx]);
             }
         }
         // Ordered reduction in MU-id order — never arrival order. The
         // fan-out guards stay alive so the merge can borrow the messages.
-        let guards: Vec<std::sync::MutexGuard<'_, ParBuf>> = if ran_parallel {
+        let guards: Vec<std::sync::MutexGuard<'_, SparseVec>> = if ran_parallel {
             parts
                 .iter()
                 .enumerate()
-                .map(|(idx, _)| self.par_bufs[idx].lock().unwrap())
+                .map(|(idx, _)| self.par_msgs[idx].lock().unwrap())
                 .collect()
         } else {
             Vec::new()
@@ -730,7 +870,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         }
         let mut late: Vec<(SparseVec, f32, f64)> = Vec::new();
         for (idx, &mu) in parts.iter().enumerate() {
-            let m: &SparseVec = if ran_parallel { &guards[idx].msg } else { &self.seq_msgs[idx] };
+            let m: &SparseVec = if ran_parallel { &guards[idx] } else { &self.seq_msgs[idx] };
             self.log.bits.mu_ul += m.wire_bits(32);
             self.log.bits.n_mu_msgs += 1;
             // Bits are spent either way; a late update lands stale once
@@ -745,16 +885,30 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             }
         }
         let lr = self.schedule.at(round) as f32;
-        merge::aggregate_adaptive(
-            &self.topts.agg,
-            &agg_parts,
-            self.dim,
-            Some(-lr),
-            &mut self.agg,
-            &mut self.agg_sparse,
-            &mut self.merge_scratch,
-            &mut self.agg_shadow,
-        );
+        match self.lease.as_ref() {
+            Some(lease) => merge::aggregate_adaptive_pooled(
+                &self.topts.agg,
+                &agg_parts,
+                self.dim,
+                Some(-lr),
+                lease.width(),
+                self.topts.pool.as_ref(),
+                &mut self.agg,
+                &mut self.agg_sparse,
+                &mut self.par_merge_scratch,
+                &mut self.agg_shadow,
+            )?,
+            None => merge::aggregate_adaptive(
+                &self.topts.agg,
+                &agg_parts,
+                self.dim,
+                Some(-lr),
+                &mut self.agg,
+                &mut self.agg_sparse,
+                &mut self.merge_scratch,
+                &mut self.agg_shadow,
+            ),
+        }
         drop(agg_parts);
         drop(guards);
         for e in late {
@@ -769,21 +923,24 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     /// Fold the completed iteration's per-MU losses in global MU order —
     /// the sequential engine's exact summation order.
     fn fold_iteration_loss(&mut self, round: usize) {
+        let base = (round % self.loss_window) * self.k_total;
         let mut iter_loss = 0.0f64;
         for mu in 0..self.k_total {
-            let v = self.round_loss[round * self.k_total + mu];
+            let v = self.round_loss[base + mu];
             if !v.is_nan() {
                 iter_loss += v / self.k_total as f64;
             }
         }
         self.log.train_loss.push((round, iter_loss));
+        // Recycle the window row for the round that will reuse this slot.
+        self.round_loss[base..base + self.k_total].fill(f64::NAN);
     }
 
     /// The H-periodic global sync: identical arithmetic to the sequential
     /// engine's sync block, then fronthaul + final broadcast pricing.
     /// Allocation-free: the Δ vectors land in a reusable scratch slice and
     /// each encoder's error buffer is borrowed in place.
-    fn do_sync(&mut self, round: usize, t: f64) {
+    fn do_sync(&mut self, round: usize, t: f64) -> Result<()> {
         if !self.collect_sync {
             kernels::zero(&mut self.sync_agg);
             self.sync_shadow.mark_dirty();
@@ -818,16 +975,30 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             let scale = 1.0 / self.n as f32;
             let parts: Vec<(&SparseVec, f32)> =
                 self.sync_msgs.iter().map(|m| (m, scale)).collect();
-            merge::aggregate_adaptive(
-                &self.topts.agg,
-                &parts,
-                self.dim,
-                None,
-                &mut self.sync_agg,
-                &mut self.agg_sparse,
-                &mut self.merge_scratch,
-                &mut self.sync_shadow,
-            );
+            match self.lease.as_ref() {
+                Some(lease) => merge::aggregate_adaptive_pooled(
+                    &self.topts.agg,
+                    &parts,
+                    self.dim,
+                    None,
+                    lease.width(),
+                    self.topts.pool.as_ref(),
+                    &mut self.sync_agg,
+                    &mut self.agg_sparse,
+                    &mut self.par_merge_scratch,
+                    &mut self.sync_shadow,
+                )?,
+                None => merge::aggregate_adaptive(
+                    &self.topts.agg,
+                    &parts,
+                    self.dim,
+                    None,
+                    &mut self.sync_agg,
+                    &mut self.agg_sparse,
+                    &mut self.merge_scratch,
+                    &mut self.sync_shadow,
+                ),
+            }
         }
         self.mbs_enc.compress_into(&self.sync_agg, &mut self.sync_msg);
         self.log.bits.mbs_dl += self.sync_msg.wire_bits(32);
@@ -843,6 +1014,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             t + self.pricing.theta_ul + self.pricing.theta_dl + self.pricing.max_final_dl;
         self.queue
             .push(t_resume, EventKind::GlobalSync { period: (round + 1) / self.h });
+        Ok(())
     }
 
     /// Move the MUs to their positions at time `t`, re-associate to the
@@ -928,11 +1100,14 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
             put_rng(&mut w, rng);
         }
         w.put_f64_slice(&self.busy_until);
-        // Training state.
+        // Training state. The per-MU DGC state is stored sparse — exactly
+        // the joint-support triples held in memory — so snapshot size scales
+        // with live residual mass, not `k_total * dim`.
         for d in &self.dgc {
             let d = d.lock().unwrap();
-            w.put_f32_slice(d.momentum_buf());
-            w.put_f32_slice(d.residual());
+            w.put_u32_slice(&d.indices);
+            w.put_f32_slice(&d.u);
+            w.put_f32_slice(&d.v);
         }
         for c in 0..self.n {
             w.put_f32_slice(self.w_tilde.row(c));
@@ -1059,12 +1234,20 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         }
         self.busy_until = busy;
         for d in &self.dgc {
+            let indices = r.get_u32_vec()?;
             let u = r.get_f32_vec()?;
             let v = r.get_f32_vec()?;
-            if u.len() != self.dim || v.len() != self.dim {
-                bail!("snapshot DGC state has the wrong dimension");
+            if u.len() != indices.len() || v.len() != indices.len() {
+                bail!("snapshot DGC state has mismatched triple lengths");
             }
-            d.lock().unwrap().restore_state(&u, &v);
+            let mut prev: Option<u32> = None;
+            for &i in &indices {
+                if (i as usize) >= self.dim || prev.is_some_and(|p| p >= i) {
+                    bail!("snapshot DGC indices not strictly increasing within dim");
+                }
+                prev = Some(i);
+            }
+            d.lock().unwrap().restore(indices, u, v);
         }
         for c in 0..self.n {
             r.get_f32_into(self.w_tilde.row_mut(c))?;
@@ -1248,7 +1431,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                         // Barrier: the last cluster to finish triggers the
                         // sync at the barrier instant.
                         if complete {
-                            self.do_sync(round, ev.time);
+                            self.do_sync(round, ev.time)?;
                         }
                     } else {
                         if complete && self.eval_due(round) {
@@ -1412,9 +1595,11 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         topts.iters,
         topts.milestones,
     );
-    let dgc: Vec<Mutex<DgcCompressor>> = (0..k_total)
-        .map(|_| Mutex::new(DgcCompressor::new(dim, topts.momentum, phi_ul)))
-        .collect();
+    // Per-MU DGC state is held sparse (joint-support index/u/v triples) and
+    // materialized into dense lane scratch only while an MU actually steps —
+    // resident cost is O(live residual mass), not O(K · dim).
+    let kernel = DgcKernel::new(topts.momentum, phi_ul);
+    let dgc: Vec<Mutex<MuDgc>> = (0..k_total).map(|_| Mutex::new(MuDgc::default())).collect();
     let init = oracle.init_params();
     let w_tilde = RowMatrix::broadcast(&init, n);
     let dl_enc: Vec<DiscountedError> = (0..n)
@@ -1445,18 +1630,18 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         }
         None
     };
-    let par_bufs: Vec<Mutex<ParBuf>> = if lease.is_some() {
-        (0..k_total)
-            .map(|_| {
-                Mutex::new(ParBuf {
-                    grad: Vec::new(),
-                    msg: SparseVec::empty(dim),
-                })
-            })
-            .collect()
-    } else {
-        Vec::new()
-    };
+    // One dense scratch lane per concurrent executor (the leased width
+    // includes the submitting thread; sequential runs get exactly one).
+    // Lanes are interchangeable — each is returned all-+0.0 — so which lane
+    // an MU lands on never affects the arithmetic.
+    let lane_width = lease.as_ref().map(|l| l.width()).unwrap_or(1).max(1);
+    let scratch_pool: Vec<Mutex<LaneScratch>> =
+        (0..lane_width).map(|_| Mutex::new(LaneScratch::default())).collect();
+
+    // Losses live in a rolling window of `h` rounds: the sync barrier
+    // guarantees no round older than one H-period is still in flight, and
+    // flat (n = 1) topologies complete rounds strictly in order.
+    let loss_window = if n == 1 { 1 } else { topts.h_period.min(topts.iters).max(1) };
 
     // Density-adaptive aggregation: keep per-participant messages live
     // only when a sparse merge could ever win (φ > 0 on the link and the
@@ -1504,6 +1689,7 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         comp_rng,
         busy_until: vec![0.0; k_total],
         schedule,
+        kernel,
         dgc,
         w_tilde,
         dl_enc,
@@ -1512,25 +1698,27 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         mbs_enc,
         stale: vec![Vec::new(); n],
         ctx,
-        round_loss: vec![f64::NAN; topts.iters * k_total],
+        loss_window,
+        round_loss: vec![f64::NAN; loss_window * k_total],
         clusters_done_at: vec![0; topts.iters],
         queue: EventQueue::new(),
         rec: TimelineRecorder::new(),
         log: TrainLog::default(),
-        grad: vec![0.0; dim],
         agg: vec![0.0; dim],
         msg: SparseVec::empty(dim),
         dl_out: SparseVec::empty(dim),
         sync_delta: vec![0.0; dim],
         sync_msg: SparseVec::empty(dim),
         lease,
-        par_bufs,
+        scratch_pool,
+        par_msgs: Vec::new(),
         collect_agg,
         collect_sync,
         seq_msgs: Vec::new(),
         sync_msgs,
         agg_sparse: SparseVec::empty(dim),
         merge_scratch: MergeScratch::default(),
+        par_merge_scratch: ParMergeScratch::default(),
         agg_shadow: DenseShadow::new(),
         sync_agg: vec![0.0; dim],
         sync_shadow: DenseShadow::new(),
@@ -1587,19 +1775,15 @@ mod tests {
 
     fn topts_for(cfg: &Config, iters: usize) -> TrainOptions {
         TrainOptions {
-            iters,
-            peak_lr: 0.05,
-            warmup_iters: 3,
-            milestones: (0.6, 0.85),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: cfg.training.h_period,
+            spec: crate::spec::RunSpec::new()
+                .iters(iters)
+                .peak_lr(0.05)
+                .warmup(3)
+                .milestones(0.6, 0.85)
+                .h_period(cfg.training.h_period)
+                .sparsity(cfg.sparsity.clone()),
             n_clusters: cfg.topology.n_clusters,
-            sparsity: cfg.sparsity.clone(),
             eval_every: 10,
-            inner_threads: 1,
-            pool: None,
-            agg: Default::default(),
         }
     }
 
@@ -1807,10 +1991,8 @@ mod tests {
         // reduction folds in MU-id order).
         let cfg = cfg_for(2, 4);
         let run = |inner: usize| {
-            let topts = TrainOptions {
-                inner_threads: inner,
-                ..topts_for(&cfg, 12)
-            };
+            let mut topts = topts_for(&cfg, 12);
+            topts.inner_threads = inner;
             let params = DesParams {
                 topts,
                 mobility: MobilityProfile::Waypoint { speed_mps: 30.0, pause_s: 1.0 },
@@ -1969,5 +2151,65 @@ mod tests {
             "resuming under a different seed must error"
         );
         let _ = std::fs::remove_file(&snap);
+    }
+
+    #[test]
+    fn sparse_residual_state_matches_dense_compressor_bit_exactly() {
+        // The million-MU invariant: materialize-on-touch through the
+        // stateless kernel reproduces the dense compressor bit for bit —
+        // messages AND internal accumulators — across sparse and dense
+        // configs, with and without momentum, including exact-zero and
+        // sign-flipping gradient coordinates.
+        let dim = 64usize;
+        for (phi, momentum) in [(0.0, 0.0f32), (0.0, 0.9), (0.9, 0.0), (0.9, 0.9)] {
+            let kernel = DgcKernel::new(momentum, phi);
+            let mut dense = crate::sparse::DgcCompressor::new(dim, momentum, phi);
+            let mut sparse = MuDgc::default();
+            let mut scratch = LaneScratch::default();
+            scratch.ensure_dim(dim);
+            let mut msg_dense = SparseVec::empty(dim);
+            let mut msg_sparse = SparseVec::empty(dim);
+            let mut rng = Pcg64::new(97, (phi * 10.0) as u64 + momentum as u64);
+            for step in 0..30 {
+                let grad: Vec<f32> = (0..dim)
+                    .map(|i| {
+                        if (i + step) % 7 == 0 {
+                            0.0 // exact zeros must stay off the support
+                        } else {
+                            rng.normal() as f32
+                        }
+                    })
+                    .collect();
+                dense.step_into(&grad, &mut msg_dense);
+                scratch.grad.copy_from_slice(&grad);
+                sparse.step_from_scratch(&kernel, &mut scratch, &mut msg_sparse);
+                assert_eq!(
+                    bits_f32(&msg_dense.values),
+                    bits_f32(&msg_sparse.values),
+                    "message values (phi={phi} m={momentum} step={step})"
+                );
+                assert_eq!(
+                    msg_dense.indices, msg_sparse.indices,
+                    "message support (phi={phi} m={momentum} step={step})"
+                );
+                // Scatter the sparse triples into dense buffers: must equal
+                // the compressor's internal state exactly, and the scratch
+                // lanes must be back to all-+0.0 bit patterns.
+                let mut u = vec![0.0f32; dim];
+                let mut v = vec![0.0f32; dim];
+                for (j, &i) in sparse.indices.iter().enumerate() {
+                    u[i as usize] = sparse.u[j];
+                    v[i as usize] = sparse.v[j];
+                }
+                assert_eq!(bits_f32(&u), bits_f32(dense.momentum_buf()), "u state");
+                assert_eq!(bits_f32(&v), bits_f32(dense.residual()), "v state");
+                assert!(scratch.u.iter().all(|x| x.to_bits() == 0), "lane u not re-zeroed");
+                assert!(scratch.v.iter().all(|x| x.to_bits() == 0), "lane v not re-zeroed");
+                assert!(
+                    sparse.indices.windows(2).all(|w| w[0] < w[1]),
+                    "support must stay strictly sorted"
+                );
+            }
+        }
     }
 }

@@ -3,10 +3,15 @@
 //! Events are totally ordered by `(time, seq)`: `time` via IEEE-754 total
 //! order (`f64::total_cmp`) and `seq` — a monotonically increasing insertion
 //! counter — as the tiebreak, so simultaneous events process in the exact
-//! order they were scheduled. The queue is a binary min-heap; together with
-//! the per-entity RNG streams this makes the whole timeline a pure function
-//! of `(config, seed)` — the determinism contract the golden-trace suite
-//! pins down.
+//! order they were scheduled. The queue is a two-level **calendar queue**
+//! (near-term day buckets + a far-future overflow level, see
+//! [`EventQueue`]); together with the per-entity RNG streams this makes the
+//! whole timeline a pure function of `(config, seed)` — the determinism
+//! contract the golden-trace suite pins down. Every calendar decision
+//! (bucket width, resize, year rotation) is derived from queue content
+//! alone, never from wall clock or randomness, so the pop order is exactly
+//! the binary-heap `(time, seq)` order at any scale — asserted against a
+//! reference heap by the adversarial property test below.
 //!
 //! [`TimelineRecorder`] folds every processed event into an incremental
 //! FNV-1a digest (`kind tag ‖ time bits ‖ entity ids`, in processing
@@ -14,8 +19,7 @@
 //! at the same simulated times in the same order.
 
 use crate::sim::result::{Fnv1a, TimelineDigest};
-use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::cmp::Ordering;
 
 /// What happened (or is scheduled to happen) at one point in simulated time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,16 +105,106 @@ impl Ord for Event {
     }
 }
 
-/// Binary min-heap of events keyed by `(time, seq)`.
-#[derive(Debug, Default)]
+/// Two-level calendar queue of events keyed by `(time, seq)`.
+///
+/// Level 0 is a ring of `nb` unsorted *day buckets* of width `width`
+/// seconds: an event at time `t` lives on day `⌊t/width⌋` in bucket
+/// `day mod nb`. Level 1 is a single overflow list holding everything
+/// beyond the current *year* (`year_end_day`); when the scan crosses a
+/// year boundary the overflow is re-partitioned into the new year's
+/// buckets. Pop scans forward from `current_day`, taking the `(time, seq)`
+/// minimum among the events of that exact day (same day ⇒ same bucket, so
+/// the linear scan sees them all); a bucket may also hold later-year
+/// events, which the integer day check skips exactly. Pushing an event
+/// earlier than the scan position rewinds `current_day`, so the order is
+/// the global `(time, seq)` minimum even on adversarial schedules.
+///
+/// The queue resizes itself from content (`len` vs `nb`, bucket width
+/// from the current time span), so `10^7`-event timelines stay O(1) per
+/// operation amortized while 4-event unit tests behave identically to the
+/// old binary heap — bit-identical pop order, by construction, at every
+/// size.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
+    /// Level 0: `nb` day buckets, each an unsorted vec of near-term events.
+    buckets: Vec<Vec<Event>>,
+    /// Level 1: events at or beyond `year_end_day`, unsorted.
+    overflow: Vec<Event>,
+    /// Bucket width in simulated seconds (always finite and > 0).
+    width: f64,
+    /// Day the pop scan resumes from (`⌊t/width⌋` of the scan floor).
+    current_day: u64,
+    /// Exclusive day bound of level 0; events at later days overflow.
+    year_end_day: u64,
+    /// Total events across both levels.
+    len: usize,
+    /// Events in level 0 (buckets) only.
+    level0_len: usize,
     next_seq: u64,
 }
 
+/// Initial/minimum bucket count (kept tiny so unit-test-sized queues cost
+/// nothing; the first resize recalibrates from content).
+const MIN_BUCKETS: usize = 16;
+/// Hard cap on the bucket ring (2^22 buckets ≈ 10^7 events at the grow
+/// threshold — beyond that buckets just get denser).
+const MAX_BUCKETS: usize = 1 << 22;
+
+/// Day index of time `t` for bucket width `width`: `⌊t/width⌋`, clamped
+/// to `[0, u64::MAX − 1]`. Monotone in `t` (equal times ⇒ equal days), so
+/// day order never contradicts time order; the clamp leaves room for an
+/// exclusive `year_end_day` above every representable day. Far-future
+/// times that saturate share one day — that only makes a bucket denser,
+/// never reorders a pop (the in-bucket scan orders by exact `(time, seq)`).
+fn day_of(t: f64, width: f64) -> u64 {
+    if t <= 0.0 {
+        0
+    } else {
+        ((t / width) as u64).min(u64::MAX - 1) // `as` saturates
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            overflow: Vec::new(),
+            width: 1.0,
+            current_day: 0,
+            year_end_day: MIN_BUCKETS as u64,
+            len: 0,
+            level0_len: 0,
+            next_seq: 0,
+        }
+    }
+}
+
 impl EventQueue {
+    /// An empty queue with the minimal bucket ring.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The day index of time `t` under the current width (see [`day_of`]).
+    fn day(&self, t: f64) -> u64 {
+        day_of(t, self.width)
+    }
+
+    /// Insert a restored or fresh event into the right level, rewinding the
+    /// scan position if it lands before it.
+    fn insert(&mut self, ev: Event) {
+        let day = self.day(ev.time);
+        if day < self.year_end_day {
+            if day < self.current_day {
+                self.current_day = day;
+            }
+            let nb = self.buckets.len() as u64;
+            self.buckets[(day % nb) as usize].push(ev);
+            self.level0_len += 1;
+        } else {
+            self.overflow.push(ev);
+        }
+        self.len += 1;
     }
 
     /// Schedule `kind` at absolute simulated time `time`.
@@ -118,20 +212,147 @@ impl EventQueue {
         debug_assert!(time.is_finite(), "non-finite event time {time}");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Event { time, seq, kind }));
+        self.insert(Event { time, seq, kind });
+        if self.len > self.buckets.len() * 4 && self.buckets.len() < MAX_BUCKETS {
+            self.rebuild(self.buckets.len() * 2);
+        }
     }
 
     /// Pop the earliest event (ties broken by insertion order).
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|r| r.0)
+        if self.len == 0 {
+            return None;
+        }
+        if self.level0_len == 0 {
+            self.advance_year();
+        }
+        let nb = self.buckets.len() as u64;
+        let width = self.width;
+        let mut empty_scans = 0u64;
+        loop {
+            let day = self.current_day;
+            let bucket = &mut self.buckets[(day % nb) as usize];
+            // The `(time, seq)` minimum among this day's events; the same
+            // bucket may hold later-year events, skipped by the day check.
+            let mut best: Option<usize> = None;
+            for (i, ev) in bucket.iter().enumerate() {
+                if day_of(ev.time, width) != day {
+                    continue;
+                }
+                match best {
+                    Some(b) if bucket[b].cmp(ev) != Ordering::Greater => {}
+                    _ => best = Some(i),
+                }
+            }
+            if let Some(i) = best {
+                let ev = bucket.swap_remove(i);
+                self.len -= 1;
+                self.level0_len -= 1;
+                if self.len < self.buckets.len() / 4 && self.buckets.len() > MIN_BUCKETS {
+                    let target = (self.buckets.len() / 2).max(MIN_BUCKETS);
+                    self.rebuild(target);
+                }
+                return Some(ev);
+            }
+            self.current_day += 1;
+            empty_scans += 1;
+            if self.current_day >= self.year_end_day {
+                if self.level0_len == 0 {
+                    self.advance_year();
+                } else {
+                    self.jump_to_min_level0_day();
+                }
+                empty_scans = 0;
+            } else if empty_scans >= nb {
+                // A full empty lap: level-0 events exist but live on a far
+                // day (possible after a rewind). Jump straight to them.
+                self.jump_to_min_level0_day();
+                empty_scans = 0;
+            }
+        }
     }
 
+    /// Set the scan position to the earliest day present in level 0.
+    fn jump_to_min_level0_day(&mut self) {
+        debug_assert!(self.level0_len > 0);
+        let mut min_day = u64::MAX;
+        for b in &self.buckets {
+            for ev in b {
+                let d = self.day(ev.time);
+                if d < min_day {
+                    min_day = d;
+                }
+            }
+        }
+        self.current_day = min_day;
+    }
+
+    /// Rotate the calendar to the year containing the earliest overflow
+    /// event and pull that year's events down into the buckets.
+    fn advance_year(&mut self) {
+        debug_assert!(self.level0_len == 0 && !self.overflow.is_empty());
+        let mut min_day = u64::MAX;
+        for ev in &self.overflow {
+            let d = self.day(ev.time);
+            if d < min_day {
+                min_day = d;
+            }
+        }
+        self.current_day = min_day;
+        // `day_of` clamps below u64::MAX, so this is always > min_day.
+        self.year_end_day = min_day.saturating_add(self.buckets.len() as u64);
+        let nb = self.buckets.len() as u64;
+        let mut keep = Vec::new();
+        for ev in std::mem::take(&mut self.overflow) {
+            let d = self.day(ev.time);
+            if d < self.year_end_day {
+                self.buckets[(d % nb) as usize].push(ev);
+                self.level0_len += 1;
+            } else {
+                keep.push(ev);
+            }
+        }
+        self.overflow = keep;
+    }
+
+    /// Re-bucket everything into a ring of `nb` buckets with a width
+    /// recalibrated from the current time span (≈ one event per bucket for
+    /// uniformly spread timelines). Content-determined, so rebuilds happen
+    /// at the same points in every replay of the same schedule.
+    fn rebuild(&mut self, nb: usize) {
+        let mut events: Vec<Event> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            events.append(b);
+        }
+        events.append(&mut self.overflow);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for ev in &events {
+            lo = lo.min(ev.time);
+            hi = hi.max(ev.time);
+        }
+        let span = hi - lo;
+        if span.is_finite() && span > 0.0 && !events.is_empty() {
+            self.width = (span / events.len() as f64).max(1e-9);
+        }
+        self.buckets = vec![Vec::new(); nb];
+        self.level0_len = 0;
+        self.len = 0;
+        let floor_day = if events.is_empty() { 0 } else { self.day(lo) };
+        self.current_day = floor_day;
+        self.year_end_day = floor_day.saturating_add(nb as u64);
+        for ev in events {
+            self.insert(ev);
+        }
+    }
+
+    /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
+    /// Whether no events are pending.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     /// The next insertion counter (for checkpointing).
@@ -142,7 +363,11 @@ impl EventQueue {
     /// Pending events in `(time, seq)` order with their original `seq`
     /// values — the checkpoint image of the queue.
     pub fn snapshot_events(&self) -> Vec<Event> {
-        let mut evs: Vec<Event> = self.heap.iter().map(|r| r.0).collect();
+        let mut evs: Vec<Event> = Vec::with_capacity(self.len);
+        for b in &self.buckets {
+            evs.extend_from_slice(b);
+        }
+        evs.extend_from_slice(&self.overflow);
         evs.sort_unstable();
         evs
     }
@@ -152,12 +377,19 @@ impl EventQueue {
     /// tie-breaking — and therefore the whole remaining timeline — is
     /// bit-identical to the uninterrupted run.
     pub fn restore(events: Vec<Event>, next_seq: u64) -> Self {
-        let mut heap = BinaryHeap::with_capacity(events.len());
+        let mut q = Self::new();
+        q.next_seq = next_seq;
         for ev in events {
             assert!(ev.seq < next_seq, "restored event seq beyond next_seq");
-            heap.push(Reverse(ev));
+            q.insert(ev);
         }
-        Self { heap, next_seq }
+        // One calibration pass so a huge restored image starts with a
+        // content-sized ring instead of growing push by push.
+        if q.len > q.buckets.len() * 4 {
+            let target = q.len.next_power_of_two().min(MAX_BUCKETS);
+            q.rebuild(target);
+        }
+        q
     }
 }
 
@@ -288,6 +520,102 @@ mod tests {
         let mut r2 = EventQueue::restore(Vec::new(), 7);
         r2.push(0.0, EventKind::GlobalSync { period: 0 });
         assert_eq!(r2.pop().unwrap().seq, 7);
+    }
+
+    /// Reference implementation: the pre-calendar binary min-heap, the
+    /// ordering oracle the calendar queue must reproduce pop-for-pop.
+    #[derive(Default)]
+    struct HeapQueue {
+        heap: std::collections::BinaryHeap<std::cmp::Reverse<Event>>,
+        next_seq: u64,
+    }
+
+    impl HeapQueue {
+        fn push(&mut self, time: f64, kind: EventKind) {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.heap.push(std::cmp::Reverse(Event { time, seq, kind }));
+        }
+        fn pop(&mut self) -> Option<Event> {
+            self.heap.pop().map(|r| r.0)
+        }
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_adversarial_schedules() {
+        use crate::util::rng::Pcg64;
+        // Each case interleaves pushes and pops with duplicate timestamps,
+        // far-future outliers, bursts (to cross resize thresholds both
+        // ways) and mid-stream snapshot/restore of the calendar side.
+        for seed in 0..8u64 {
+            let mut rng = Pcg64::new(0xCA1E_17DA, seed);
+            let mut cal = EventQueue::new();
+            let mut heap = HeapQueue::default();
+            let mut clock = 0.0f64;
+            for step in 0..2_000usize {
+                let r = rng.uniform();
+                if r < 0.55 || cal.is_empty() {
+                    // Push a burst; times cluster near the clock, repeat
+                    // exactly (seq tiebreak), or jump far ahead.
+                    let burst = 1 + rng.uniform_usize(8);
+                    for _ in 0..burst {
+                        let t = match rng.uniform_usize(10) {
+                            0..=5 => clock + rng.uniform_range(0.0, 2.0),
+                            6 | 7 => clock, // exact duplicate timestamp
+                            8 => clock + rng.uniform_range(0.0, 1e6),
+                            _ => clock + rng.uniform_range(0.0, 1e12), // far future
+                        };
+                        let kind = EventKind::Deadline { cluster: step, round: 0 };
+                        cal.push(t, kind);
+                        heap.push(t, kind);
+                    }
+                } else if r < 0.95 {
+                    let (a, b) = (cal.pop(), heap.pop());
+                    assert_eq!(a, b, "seed {seed} step {step}: pop order diverged");
+                    if let Some(ev) = a {
+                        clock = clock.max(ev.time);
+                    }
+                } else {
+                    // Interleaved snapshot/restore must preserve the exact
+                    // remaining order and seq stream.
+                    let evs = cal.snapshot_events();
+                    assert!(evs.windows(2).all(|w| w[0] < w[1]));
+                    cal = EventQueue::restore(evs, cal.next_seq());
+                    assert_eq!(cal.next_seq(), heap.next_seq);
+                }
+                assert_eq!(cal.len(), heap.heap.len());
+            }
+            // Drain: every remaining event in identical order.
+            loop {
+                match (cal.pop(), heap.pop()) {
+                    (None, None) => break,
+                    (a, b) => assert_eq!(a, b, "seed {seed}: drain diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn calendar_scales_past_resize_thresholds_in_order() {
+        // A deterministic 60k-event storm (way past several grow/shrink
+        // rebuilds) must drain in strict (time, seq) order.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(0x5CA1E, 1);
+        let mut q = EventQueue::new();
+        for i in 0..60_000usize {
+            let t = rng.uniform_range(0.0, 1e4);
+            q.push(t, EventKind::GlobalSync { period: i });
+        }
+        let mut last: Option<Event> = None;
+        let mut n = 0usize;
+        while let Some(ev) = q.pop() {
+            if let Some(prev) = last {
+                assert!(prev < ev, "out of order at event {n}");
+            }
+            last = Some(ev);
+            n += 1;
+        }
+        assert_eq!(n, 60_000);
     }
 
     #[test]

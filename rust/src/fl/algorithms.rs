@@ -72,6 +72,7 @@ use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
 use crate::config::SparsityConfig;
 use crate::snapshot::codec::{ByteReader, ByteWriter};
 use crate::snapshot::{self, CheckpointSpec};
+use crate::spec::RunSpec;
 use crate::sparse::merge::{self, AggPath, AggPolicy, DenseShadow, MergeScratch};
 use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
 use crate::tensor::{kernels, padded, TensorArena};
@@ -79,61 +80,43 @@ use anyhow::{bail, Context};
 use std::path::Path;
 use std::sync::Mutex;
 
-/// Options shared by all four algorithms.
+/// Options shared by all four algorithms: the embedded [`RunSpec`] (the
+/// cross-engine scalars — iters, LR schedule, momentum/weight-decay, H,
+/// sparsity, aggregation dispatch, fan-out wiring) plus the two knobs only
+/// the sequential engines read. `Deref`s to its spec, so `opts.iters`-style
+/// reads work unchanged.
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
-    /// Total iterations (global steps).
-    pub iters: usize,
-    /// Peak learning rate (after linear scaling).
-    pub peak_lr: f64,
-    /// Warm-up iterations.
-    pub warmup_iters: usize,
-    /// LR decay milestones as fractions of `iters`.
-    pub milestones: (f64, f64),
-    /// Momentum σ (both MU-side DGC correction and dense momentum).
-    pub momentum: f32,
-    /// Weight decay λ.
-    pub weight_decay: f32,
-    /// Model-averaging period H.
-    pub h_period: usize,
+    /// The shared run specification (see [`crate::spec::RunSpec`]).
+    pub spec: RunSpec,
     /// Number of clusters N (1 → flat FL).
     pub n_clusters: usize,
-    /// Sparsification configuration.
-    pub sparsity: SparsityConfig,
     /// Evaluate every this many iterations (0 → only at the end).
     pub eval_every: usize,
-    /// Intra-round fan-out width: worker threads executing the independent
-    /// per-cluster compute+uplink blocks of each round. `1` (default) runs
-    /// sequentially; `0` uses one thread per available core. Results are
-    /// bit-identical for every value (see the module docs).
-    pub inner_threads: usize,
-    /// Persistent worker pool to lease the fan-out lanes from; `None`
-    /// (default) uses the process-wide shared pool
-    /// ([`crate::pool::global_handle`]). Bit-identical either way.
-    pub pool: Option<crate::pool::PoolHandle>,
-    /// Aggregation dispatch: k-way sparse merge vs dense scatter at the
-    /// SBS round and MBS sync call sites (`--agg-path`, `[agg]` config).
-    /// Bit-identical for every setting (see [`crate::sparse::merge`]).
-    pub agg: AggPolicy,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        Self {
-            iters: 100,
-            peak_lr: 0.1,
-            warmup_iters: 0,
-            milestones: (0.5, 0.75),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: 2,
-            n_clusters: 1,
-            sparsity: SparsityConfig::dense(),
-            eval_every: 0,
-            inner_threads: 1,
-            pool: None,
-            agg: AggPolicy::default(),
-        }
+        Self { spec: RunSpec::default(), n_clusters: 1, eval_every: 0 }
+    }
+}
+
+impl std::ops::Deref for TrainOptions {
+    type Target = RunSpec;
+    fn deref(&self) -> &RunSpec {
+        &self.spec
+    }
+}
+
+impl std::ops::DerefMut for TrainOptions {
+    fn deref_mut(&mut self) -> &mut RunSpec {
+        &mut self.spec
+    }
+}
+
+impl From<RunSpec> for TrainOptions {
+    fn from(spec: RunSpec) -> Self {
+        Self { spec, ..Self::default() }
     }
 }
 
@@ -177,46 +160,32 @@ impl TrainLog {
 
 /// Algorithm 1 (+ momentum, Eq. 23): flat synchronous FL, dense.
 pub fn fl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
-    let opts = TrainOptions {
-        n_clusters: 1,
-        sparsity: SparsityConfig::dense(),
-        ..opts.clone()
-    };
+    let mut opts = opts.clone();
+    opts.n_clusters = 1;
+    opts.spec.sparsity = SparsityConfig::dense();
     run_hierarchical(oracle, &opts)
 }
 
 /// Algorithm 4 (+ downlink sparsification, §V-C): flat sparse FL.
 pub fn sparse_fl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
-    let opts = TrainOptions {
-        n_clusters: 1,
-        sparsity: SparsityConfig {
-            enabled: true,
-            ..opts.sparsity.clone()
-        },
-        ..opts.clone()
-    };
+    let mut opts = opts.clone();
+    opts.n_clusters = 1;
+    opts.spec.sparsity.enabled = true;
     run_hierarchical(oracle, &opts)
 }
 
 /// Algorithm 3 (+ momentum): hierarchical FL, dense, period-H averaging.
 pub fn hfl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
-    let opts = TrainOptions {
-        sparsity: SparsityConfig::dense(),
-        ..opts.clone()
-    };
+    let mut opts = opts.clone();
+    opts.spec.sparsity = SparsityConfig::dense();
     assert!(opts.n_clusters > 1, "hfl requires n_clusters > 1 (use fl)");
     run_hierarchical(oracle, &opts)
 }
 
 /// Algorithm 5: the paper's full sparse hierarchical FL.
 pub fn sparse_hfl<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
-    let opts = TrainOptions {
-        sparsity: SparsityConfig {
-            enabled: true,
-            ..opts.sparsity.clone()
-        },
-        ..opts.clone()
-    };
+    let mut opts = opts.clone();
+    opts.spec.sparsity.enabled = true;
     assert!(opts.n_clusters > 1, "sparse_hfl requires n_clusters > 1");
     run_hierarchical(oracle, &opts)
 }
@@ -512,23 +481,9 @@ fn put_fl_fingerprint(w: &mut ByteWriter, dim: usize, k_total: usize, opts: &Tra
     w.put_usize(dim);
     w.put_usize(k_total);
     w.put_usize(opts.n_clusters);
-    w.put_usize(opts.iters);
-    w.put_usize(opts.h_period);
-    w.put_usize(opts.warmup_iters);
     w.put_usize(opts.eval_every);
-    w.put_f64(opts.peak_lr);
-    w.put_f64(opts.milestones.0);
-    w.put_f64(opts.milestones.1);
-    w.put_f32(opts.momentum);
-    w.put_f32(opts.weight_decay);
-    let s = &opts.sparsity;
-    w.put_bool(s.enabled);
-    w.put_f64(s.phi_mu_ul);
-    w.put_f64(s.phi_sbs_dl);
-    w.put_f64(s.phi_sbs_ul);
-    w.put_f64(s.phi_mbs_dl);
-    w.put_f64(s.beta_m);
-    w.put_f64(s.beta_s);
+    // All cross-engine scalars come from the single RunSpec definition.
+    opts.spec.put_fingerprint(w);
 }
 
 fn check_fl_fingerprint(
@@ -932,19 +887,14 @@ mod tests {
 
     fn opts(iters: usize) -> TrainOptions {
         TrainOptions {
-            iters,
-            peak_lr: 0.05,
-            warmup_iters: 10,
-            milestones: (0.6, 0.85),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: 4,
+            spec: RunSpec::new()
+                .iters(iters)
+                .peak_lr(0.05)
+                .warmup(10)
+                .milestones(0.6, 0.85)
+                .h_period(4),
             n_clusters: 1,
-            sparsity: SparsityConfig::dense(),
             eval_every: 0,
-            inner_threads: 1,
-            pool: None,
-            agg: AggPolicy::default(),
         }
     }
 

@@ -38,7 +38,8 @@
 //! | [`coordinator`] | thread-actor MBS/SBS/MU runtime, per-link metrics → shared `CommBits` schema |
 //! | [`net`] | **coordinator-as-a-service**: framed `SparseWire` transport (loopback + TCP), `hfl serve`/`hfl worker` multi-process roles with fingerprint handshake, fsynced session log + bit-exact `hfl replay`, live `/metrics` HTTP endpoint (`[net]`) |
 //! | [`net::chaos`] | **deterministic fault injection + fault policies**: seeded `ChaosTransport` fault plans (`[chaos]`/`--chaos-*`; same seed ⇒ bit-identical run), worker rejoin with round-level recovery from the MBS broadcast history, degrade-and-continue aggregation (`--fault-policy wait-all\|deadline-skip\|quorum`) with skips pinned in the golden trace |
-//! | [`des`] | **discrete-event HCN simulator**: `(time, seq)`-keyed event queue, waypoint mobility + handover, straggler deadlines with stale discounting, timeline digests |
+//! | [`des`] | **discrete-event HCN simulator at million-MU scale**: hierarchical calendar event queue (O(1) push/pop at 10⁷ events, exact `(time, seq)` order), sparse-residual per-MU DGC state (O(nnz) per idle MU, bit-exact materialize-on-touch), rolling loss window, streamed cluster/sync aggregation over the pooled k-way merge, waypoint mobility + handover, straggler deadlines with stale discounting, timeline digests |
+//! | [`spec`] | **`RunSpec` unified run options**: one builder-style options block (iters, LR schedule, H, sparsity, agg policy, inner threads, pool handle) embedded by `TrainOptions`/`CoordinatorOptions`/`MatrixOptions` via deref, plus its snapshot fingerprint |
 //! | [`sim`] | figure/table runners (Fig. 3–6, Table III), **scenario-matrix engine** (`sim::matrix`, now with mobility × straggler axes), shared `ScenarioResult` + golden traces (`sim::result`) |
 //! | [`snapshot`] | **checkpoint/resume**: versioned FNV-1a-checksummed engine-state snapshots (exact f32/f64 bit patterns, RNG raw states, DES event queue), atomic writes, append-only JSONL run log for resumable matrix sweeps (`--checkpoint-every` / `--resume`) |
 //! | [`testing`] | minimal property-testing harness (offline substitute for proptest) |
@@ -77,6 +78,7 @@ pub mod runtime;
 pub mod sim;
 pub mod snapshot;
 pub mod sparse;
+pub mod spec;
 pub mod tensor;
 pub mod testing;
 pub mod topology;

@@ -12,20 +12,25 @@
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
-//! hfl matrix    [--quick|--full] [--threads N] [--pool-threads N]
-//!               [--iters N] [--dim N] [--phi F]
+//! hfl matrix    [--quick|--full] [--threads N] [--inner-threads N]
+//!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
 //!               [--agg-path auto|sparse|dense]
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
 //! hfl des       [--quick|--full] [--threads N] [--inner-threads N]
 //!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
+//!               [--mus N] [--cells N]
 //!               [--agg-path auto|sparse|dense]
 //!               [--compute-mean S] [--compute-het X]
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                  discrete-event HCN simulation grid
-//!                                  (mobility × straggler × deadline axes)
+//!                                  (mobility × straggler × deadline axes;
+//!                                  --mus/--cells switch to scale mode: ONE
+//!                                  static wait-for-all scenario at that
+//!                                  size, `_` separators allowed:
+//!                                  --mus 1_000_000)
 //! hfl serve     [--listen A] [--standalone] [--metrics-addr A]
 //!               [--session-log P] [--dim N] [--iters N] [--phi F]
 //!               [--clusters N] [--mus N] [--h N] [--seed S]
@@ -111,6 +116,7 @@ use hfl::sim::experiments::{self, Scale};
 use hfl::sim::{fig3, fig4, fig5a, fig5b};
 use hfl::sim::{result, run_matrix_checkpointed, EngineSelect, MatrixOptions, ScenarioSpec};
 use hfl::snapshot::CheckpointSpec;
+use hfl::spec::RunSpec;
 use hfl::topology::NetworkTopology;
 use hfl::util::logging;
 use std::path::{Path, PathBuf};
@@ -191,10 +197,10 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(a) = args.get_parsed::<f64>("alpha")? {
         cfg.radio.pathloss_exp = a;
     }
-    if let Some(n) = args.get_parsed::<usize>("clusters")? {
+    if let Some(n) = hfl::cli::count_from_args(args, "clusters")? {
         cfg.topology.n_clusters = n;
     }
-    if let Some(m) = args.get_parsed::<usize>("mus")? {
+    if let Some(m) = hfl::cli::count_from_args(args, "mus")? {
         cfg.topology.mus_per_cluster = m;
     }
     if let Some(h) = args.get_parsed::<usize>("h")? {
@@ -269,22 +275,15 @@ fn cmd_latency(args: &Args, cfg: &Config) -> Result<()> {
 fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     let algo = args.get_or("algo", "sparse-hfl");
     let model = args.get_or("model", cfg.training.model.as_str());
-    let iters = args.get_parsed_or("iters", 120usize)?;
+    let iters = hfl::cli::count_from_args(args, "iters")?.unwrap_or(120);
     let coordinated = args.flag("coordinated");
     let train_samples = args.get_parsed_or("train-samples", cfg.training.train_samples)?;
     let test_samples = args.get_parsed_or("test-samples", cfg.training.test_samples)?;
-    // Intra-round fan-out width (bit-exact for any value; 0 = auto).
-    let inner_threads = args.get_parsed_or("inner-threads", 1usize)?;
     // Dedicated persistent pool for this command, if requested; must stay
     // alive until training finishes (dropping it joins the workers).
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let pool = dedicated_pool.as_ref().map(|p| p.handle());
-    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
     let (ckpt, resume) = checkpoint_from_args(args, cfg, "train.snap")?;
-    args.finish()?;
-    if coordinated && (ckpt.is_some() || resume.is_some()) {
-        bail!("--checkpoint-every/--resume are not supported with --coordinated");
-    }
 
     let (n_clusters, sparse) = match algo.as_str() {
         "fl" => (1, false),
@@ -294,24 +293,34 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
         other => bail!("unknown algo `{other}`"),
     };
     let workers = cfg.topology.total_mus();
+    // The shared flags (--iters, --inner-threads, --agg-path) land on the
+    // spec through the one decode path every subcommand uses.
+    let spec = hfl::cli::spec_from_args(
+        args,
+        cfg.agg,
+        RunSpec::new()
+            .iters(iters)
+            .peak_lr(cfg.training.scaled_lr(workers))
+            .warmup(iters / 10)
+            .milestones(cfg.training.decay_milestones.0, cfg.training.decay_milestones.1)
+            .momentum(cfg.training.momentum as f32)
+            .weight_decay(cfg.training.weight_decay as f32)
+            .h_period(cfg.training.h_period)
+            .sparsity(if sparse {
+                cfg.sparsity.clone()
+            } else {
+                hfl::config::SparsityConfig::dense()
+            })
+            .pool(pool),
+    )?;
+    args.finish()?;
+    if coordinated && (ckpt.is_some() || resume.is_some()) {
+        bail!("--checkpoint-every/--resume are not supported with --coordinated");
+    }
     let opts = TrainOptions {
-        iters,
-        peak_lr: cfg.training.scaled_lr(workers),
-        warmup_iters: iters / 10,
-        milestones: cfg.training.decay_milestones,
-        momentum: cfg.training.momentum as f32,
-        weight_decay: cfg.training.weight_decay as f32,
-        h_period: cfg.training.h_period,
+        spec,
         n_clusters,
-        sparsity: if sparse {
-            cfg.sparsity.clone()
-        } else {
-            hfl::config::SparsityConfig::dense()
-        },
         eval_every: (iters / 8).max(1),
-        inner_threads,
-        pool,
-        agg,
     };
     let spec = SyntheticSpec {
         n_train: train_samples,
@@ -400,14 +409,12 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
     let full = args.flag("full");
     let threads = args.get_parsed_or("threads", 0usize)?;
-    let iters = args.get_parsed::<usize>("iters")?;
-    let dim = args.get_parsed::<usize>("dim")?;
-    let out = args.get_or("out", "results");
-    let write_golden = args.get("write-golden").map(str::to_string);
-    let check_golden = args.get("check-golden").map(str::to_string);
+    let dim = hfl::cli::count_from_args(args, "dim")?;
+    let golden = hfl::cli::GoldenArgs::from_args(args);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
-    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
-    let phi_pin = args.get_parsed::<f64>("phi")?;
+    let phi_pin = hfl::cli::phi_from_args(args)?;
+    let rspec = hfl::cli::spec_from_args(args, cfg.agg, MatrixOptions::default().spec)?
+        .pool(dedicated_pool.as_ref().map(|p| p.handle()));
     let (ckpt, resume) = checkpoint_from_args(args, cfg, "matrix_runlog.jsonl")?;
     args.finish()?;
 
@@ -417,25 +424,16 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
         ScenarioSpec::quick_with(&cfg.des)
     };
     if let Some(phi) = phi_pin {
-        // Same bound DgcKernel enforces — reject here instead of panicking
-        // inside a pooled worker (invalid setups are errors, not panics).
-        if !(0.0..1.0).contains(&phi) {
-            bail!("--phi {phi} outside [0,1) (DGC keeps at least one coordinate)");
-        }
         spec.phis = vec![Some(phi)];
     }
     let mut opts = MatrixOptions {
+        spec: rspec,
         threads,
         base_seed: cfg.training.seed,
         compute_mean_s: cfg.des.compute_mean_s,
         compute_het: cfg.des.compute_het,
-        pool: dedicated_pool.as_ref().map(|p| p.handle()),
-        agg,
         ..Default::default()
     };
-    if let Some(it) = iters {
-        opts.iters = it;
-    }
     if let Some(d) = dim {
         opts.dim = d;
     }
@@ -455,25 +453,26 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     for r in &results {
         println!("{}", r.table_row());
     }
-    write_grid_outputs(&results, &out, "matrix", write_golden, check_golden)
+    golden.emit(&results, "matrix")
 }
 
 fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
     let full = args.flag("full");
     let threads = args.get_parsed_or("threads", 0usize)?;
-    // Per-cell intra-round fan-out, multiplying the cross-cell pool.
-    let inner_threads = args.get_parsed_or("inner-threads", 1usize)?;
-    let iters = args.get_parsed::<usize>("iters")?;
-    let dim = args.get_parsed::<usize>("dim")?;
+    let dim = hfl::cli::count_from_args(args, "dim")?;
+    // Scale-axis pins: `--mus N` / `--cells N` switch to scale mode — the
+    // grid collapses to ONE static wait-for-all scenario at the requested
+    // size, the million-MU entry point (underscore separators allowed).
+    let mus_pin = hfl::cli::count_from_args(args, "mus")?;
+    let cells_pin = hfl::cli::count_from_args(args, "cells")?;
     let compute_mean = args.get_parsed_or("compute-mean", cfg.des.compute_mean_s)?;
     let compute_het = args.get_parsed_or("compute-het", cfg.des.compute_het)?;
-    let out = args.get_or("out", "results");
-    let write_golden = args.get("write-golden").map(str::to_string);
-    let check_golden = args.get("check-golden").map(str::to_string);
+    let golden = hfl::cli::GoldenArgs::from_args(args);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
-    let agg = hfl::cli::agg_from_args(args, cfg.agg)?;
-    let phi_pin = args.get_parsed::<f64>("phi")?;
+    let phi_pin = hfl::cli::phi_from_args(args)?;
+    let rspec = hfl::cli::spec_from_args(args, cfg.agg, MatrixOptions::default().spec)?
+        .pool(dedicated_pool.as_ref().map(|p| p.handle()));
     let (ckpt, resume) = checkpoint_from_args(args, cfg, "des_runlog.jsonl")?;
     args.finish()?;
 
@@ -482,28 +481,43 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     } else {
         ScenarioSpec::quick_des(&cfg.des)
     };
-    if let Some(phi) = phi_pin {
-        // Same bound DgcKernel enforces — reject here instead of panicking
-        // inside a pooled worker (invalid setups are errors, not panics).
-        if !(0.0..1.0).contains(&phi) {
-            bail!("--phi {phi} outside [0,1) (DGC keeps at least one coordinate)");
+    if mus_pin.is_some() || cells_pin.is_some() {
+        // Scale mode: a pinned axis collapses the whole grid to ONE
+        // scenario — the canonical static wait-for-all configuration at
+        // the requested size. Crossing a million-MU cell with the full
+        // mobility × straggler × φ grid would multiply a laptop-scale run
+        // into an OOM; anyone who wants a crossed axis at scale can pin
+        // it explicitly (`--phi`) or edit the spec in code.
+        let m = mus_pin.unwrap_or(4);
+        if m == 0 {
+            bail!("--mus must be > 0");
         }
+        let c = cells_pin.unwrap_or(1);
+        if c == 0 {
+            bail!("--cells must be > 0");
+        }
+        spec = ScenarioSpec {
+            cells: vec![c],
+            mus_per_cell: vec![m],
+            skews: vec![1.0],
+            phis: vec![Some(phi_pin.unwrap_or(0.9))],
+            h_periods: vec![2],
+            profiles: vec![hfl::sim::ChannelProfile::nominal()],
+            mobilities: vec![hfl::des::MobilityProfile::Static],
+            stragglers: vec![hfl::des::StragglerPolicy::WaitForAll],
+        };
+    } else if let Some(phi) = phi_pin {
         spec.phis = vec![Some(phi)];
     }
     let mut opts = MatrixOptions {
+        spec: rspec,
         threads,
         base_seed: cfg.training.seed,
         engine: EngineSelect::Des,
         compute_mean_s: compute_mean,
         compute_het,
-        inner_threads,
-        pool: dedicated_pool.as_ref().map(|p| p.handle()),
-        agg,
         ..Default::default()
     };
-    if let Some(it) = iters {
-        opts.iters = it;
-    }
     if let Some(d) = dim {
         opts.dim = d;
     }
@@ -526,7 +540,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
             .unwrap_or_default();
         println!("{}{tl}", r.table_row());
     }
-    write_grid_outputs(&results, &out, "des", write_golden, check_golden)
+    golden.emit(&results, "des")
 }
 
 /// `hfl serve` — run the MBS side of a coordinator-as-a-service session.
@@ -544,9 +558,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let standalone = args.flag("standalone");
     let metrics_addr = args.get_or("metrics-addr", &cfg.net.metrics_addr);
     let session_log = args.get_or("session-log", &cfg.net.session_log);
-    let out = args.get_or("out", "results");
-    let write_golden = args.get("write-golden").map(str::to_string);
-    let check_golden = args.get("check-golden").map(str::to_string);
+    let golden = hfl::cli::GoldenArgs::from_args(args);
     let chaos = hfl::cli::chaos_from_args(args, &cfg.chaos)?;
     let policy = hfl::cli::fault_policy_from_args(args)?;
     let rejoin_deadline = Duration::from_millis(args.get_parsed_or("rejoin-deadline-ms", 0u64)?);
@@ -668,7 +680,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 
     let result = result::ScenarioResult::from_coordinated(scenario.meta(), 0.0, &run);
     println!("{}", result.table_row());
-    write_grid_outputs(&[result], &out, "net", write_golden, check_golden)
+    golden.emit(&[result], "net")
 }
 
 /// `hfl worker` — run one SBS+MUs cell against a serving MBS.
@@ -760,9 +772,7 @@ fn cmd_worker(args: &Args, cfg: &Config) -> Result<()> {
 /// against the live session's (the CI multiprocess job diffs them).
 fn cmd_replay(args: &Args, cfg: &Config) -> Result<()> {
     let session_log = args.get_or("session-log", &cfg.net.session_log);
-    let out = args.get_or("out", "results");
-    let write_golden = args.get("write-golden").map(str::to_string);
-    let check_golden = args.get("check-golden").map(str::to_string);
+    let golden = hfl::cli::GoldenArgs::from_args(args);
     args.finish()?;
     if session_log.is_empty() {
         bail!("--session-log PATH required (or set [net] session_log)");
@@ -775,55 +785,5 @@ fn cmd_replay(args: &Args, cfg: &Config) -> Result<()> {
     );
     let result = result::ScenarioResult::from_coordinated(header.meta(), 0.0, &run);
     println!("{}", result.table_row());
-    write_grid_outputs(&[result], &out, "net", write_golden, check_golden)
-}
-
-/// Shared tail of the grid subcommands: CSV + JSON + golden outputs under
-/// `out/<prefix>.*`, optional fixture write, optional fixture check.
-fn write_grid_outputs(
-    results: &[hfl::sim::ScenarioResult],
-    out: &str,
-    prefix: &str,
-    write_golden: Option<String>,
-    check_golden: Option<String>,
-) -> Result<()> {
-    let csv_path = format!("{out}/{prefix}.csv");
-    result::results_to_csv(results).save(&csv_path)?;
-    let json_path = format!("{out}/{prefix}.json");
-    std::fs::write(
-        &json_path,
-        format!("{}\n", result::results_to_json(results).to_string_compact()),
-    )?;
-    // Golden traces are a bit-exactness boundary: refuse to emit a fixture
-    // with silently nulled non-finite numbers instead of writing one that
-    // can never round-trip.
-    let golden_text = format!(
-        "{}\n",
-        result::golden_to_json(results)
-            .to_string_strict()
-            .map_err(|e| anyhow::anyhow!("golden trace serialization: {e}"))?
-    );
-    let golden_path = format!("{out}/{prefix}_golden.json");
-    std::fs::write(&golden_path, &golden_text)?;
-    println!("wrote {csv_path}, {json_path} and {golden_path}");
-
-    if let Some(path) = write_golden {
-        std::fs::write(&path, &golden_text)?;
-        println!("wrote golden fixture {path}");
-    }
-    if let Some(path) = check_golden {
-        let text = std::fs::read_to_string(&path)?;
-        let json = hfl::util::json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
-        let fixture = result::golden_from_json(&json)?;
-        let diff = result::golden_diff(results, &fixture);
-        if !diff.is_empty() {
-            for d in &diff {
-                eprintln!("golden mismatch: {d}");
-            }
-            bail!("{} golden-trace mismatches against {path}", diff.len());
-        }
-        println!("golden traces match {path} ({} scenarios)", results.len());
-    }
-    Ok(())
+    golden.emit(&[result], "net")
 }

@@ -17,6 +17,7 @@ use crate::coordinator::CoordinatorOptions;
 use crate::fl::oracle::QuadraticOracle;
 use crate::sim::result::{fnv1a64, ScenarioMeta};
 use crate::snapshot::codec::ByteWriter;
+use crate::spec::RunSpec;
 use anyhow::{bail, Result};
 
 /// One fully specified network-training scenario.
@@ -40,14 +41,8 @@ impl NetScenario {
     /// and `worker` — the fingerprint only *detects* divergence.
     pub fn from_cli(args: &Args, cfg: &Config) -> Result<Self> {
         let dim = args.get_parsed_or("dim", 64usize)?;
-        let iters = args.get_parsed_or("iters", 24usize)?;
-        let phi = args.get_parsed::<f64>("phi")?;
-        if let Some(p) = phi {
-            // Same bound DgcKernel enforces — reject at the CLI boundary.
-            if !(0.0..1.0).contains(&p) {
-                bail!("--phi {p} outside [0,1) (DGC keeps at least one coordinate)");
-            }
-        }
+        let iters = crate::cli::count_from_args(args, "iters")?.unwrap_or(24);
+        let phi = crate::cli::phi_from_args(args)?;
         if dim == 0 || iters == 0 {
             bail!("--dim and --iters must be > 0");
         }
@@ -63,17 +58,16 @@ impl NetScenario {
             None => SparsityConfig::dense(),
         };
         let copts = CoordinatorOptions {
-            iters,
-            peak_lr: 0.05,
-            warmup_iters: iters / 10,
-            milestones: (0.6, 0.85),
-            momentum: 0.9,
-            weight_decay: 0.0,
-            h_period: cfg.training.h_period,
+            spec: RunSpec::new()
+                .iters(iters)
+                .peak_lr(0.05)
+                .warmup(iters / 10)
+                .milestones(0.6, 0.85)
+                .h_period(cfg.training.h_period)
+                .sparsity(sparsity)
+                .agg(cfg.agg),
             n_clusters,
-            sparsity,
             eval_every_syncs: 0,
-            agg: cfg.agg,
         };
         let sparse_tag = match phi {
             Some(p) => format!("phi{p:.2}"),
@@ -99,28 +93,16 @@ impl NetScenario {
     }
 
     /// Hash of every bit-relevant scalar — what the handshake compares.
+    /// The training scalars come from [`RunSpec::put_fingerprint`] (which
+    /// covers `iters`), so the list cannot drift from the snapshot
+    /// fingerprints; only the topology/seed scalars are added here.
     pub fn fingerprint(&self) -> u64 {
         let mut w = ByteWriter::new();
         w.put_usize(self.dim);
         w.put_usize(self.n_clusters);
         w.put_usize(self.mus_per_cluster);
-        w.put_usize(self.iters);
-        w.put_usize(self.copts.h_period);
         w.put_u64(self.seed);
-        w.put_f64(self.copts.peak_lr);
-        w.put_usize(self.copts.warmup_iters);
-        w.put_f64(self.copts.milestones.0);
-        w.put_f64(self.copts.milestones.1);
-        w.put_f32(self.copts.momentum);
-        w.put_f32(self.copts.weight_decay);
-        let s = &self.copts.sparsity;
-        w.put_bool(s.enabled);
-        w.put_f64(s.phi_mu_ul);
-        w.put_f64(s.phi_sbs_dl);
-        w.put_f64(s.phi_sbs_ul);
-        w.put_f64(s.phi_mbs_dl);
-        w.put_f64(s.beta_m);
-        w.put_f64(s.beta_s);
+        self.copts.spec.put_fingerprint(&mut w);
         fnv1a64(w.into_bytes())
     }
 

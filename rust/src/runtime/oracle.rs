@@ -171,13 +171,12 @@ mod tests {
             return;
         };
         let mut o = ModelOracle::new(&rt, "mlp", 4, &spec()).unwrap();
-        let opts = crate::fl::TrainOptions {
-            iters: 40,
-            peak_lr: 0.05,
-            warmup_iters: 5,
-            momentum: 0.9,
-            ..Default::default()
-        };
+        let opts: crate::fl::TrainOptions = crate::spec::RunSpec::new()
+            .iters(40)
+            .peak_lr(0.05)
+            .warmup(5)
+            .momentum(0.9)
+            .into();
         let log = crate::fl::fl(&mut o, &opts);
         let m = log.final_eval().unwrap();
         assert!(

@@ -134,27 +134,26 @@ where
         let mut first_trace: Option<GoldenTrace> = None;
         for &seed in &scale.seeds {
             let mut oracle = make_oracle(&sc, seed)?;
-            let opts = TrainOptions {
-                iters: scale.iters,
-                peak_lr: cfg.training.scaled_lr(sc.workers),
-                warmup_iters: scale.warmup_iters,
-                milestones: cfg.training.decay_milestones,
-                momentum: cfg.training.momentum as f32,
-                weight_decay: cfg.training.weight_decay as f32,
-                h_period: sc.h_period,
-                n_clusters: sc.n_clusters,
-                sparsity: if sc.sparse {
+            let spec = crate::spec::RunSpec::new()
+                .iters(scale.iters)
+                .peak_lr(cfg.training.scaled_lr(sc.workers))
+                .warmup(scale.warmup_iters)
+                .milestones(cfg.training.decay_milestones.0, cfg.training.decay_milestones.1)
+                .momentum(cfg.training.momentum as f32)
+                .weight_decay(cfg.training.weight_decay as f32)
+                .h_period(sc.h_period)
+                .sparsity(if sc.sparse {
                     crate::config::SparsityConfig {
                         enabled: true,
                         ..cfg.sparsity.clone()
                     }
                 } else {
                     crate::config::SparsityConfig::dense()
-                },
+                });
+            let opts = TrainOptions {
+                spec,
+                n_clusters: sc.n_clusters,
                 eval_every: scale.eval_every,
-                inner_threads: 1,
-                pool: None,
-                agg: Default::default(),
             };
             let log: TrainLog = run_hierarchical(oracle.as_mut(), &opts);
             if first_trace.is_none() {

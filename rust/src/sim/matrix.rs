@@ -36,13 +36,14 @@
 use crate::config::{Config, DesConfig, SparsityConfig};
 use crate::des::{MobilityProfile, StragglerPolicy};
 use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
-use crate::pool::PoolHandle;
 use crate::sim::result::{Engine, Fnv1a, ScenarioMeta, ScenarioResult};
 use crate::snapshot;
+use crate::spec::RunSpec;
 use crate::util::json::{self, ObjBuilder};
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
 use std::path::Path;
 use std::sync::Mutex;
 
@@ -347,16 +348,24 @@ pub enum EngineSelect {
 }
 
 /// Execution options for a matrix run (training scale + parallelism).
+///
+/// The training scalars shared with the other engines (iteration budget,
+/// LR schedule, sparsity, aggregation dispatch, fan-out/pool wiring) live
+/// in the embedded [`RunSpec`]; `MatrixOptions` derefs to it, so
+/// `opts.iters`-style access still works. The per-cell H period and
+/// sparsity level come from the scenario axes and override the spec's
+/// values cell by cell.
 #[derive(Clone, Debug)]
 pub struct MatrixOptions {
+    /// The shared training-run scalars every cell starts from
+    /// (`h_period`/`sparsity` are then overridden per cell by the
+    /// scenario's axis values).
+    pub spec: RunSpec,
     /// Worker threads; 0 → `std::thread::available_parallelism()`.
     pub threads: usize,
-    /// Training iterations per cell.
-    pub iters: usize,
     /// Quadratic-problem dimension per cell.
     pub dim: usize,
-    pub peak_lr: f64,
-    pub warmup_iters: usize,
+    /// Evaluate the global loss every this many iterations (0 = never).
     pub eval_every: usize,
     /// Gradient noise of the quadratic oracle (0 = deterministic descent).
     pub grad_noise: f32,
@@ -369,40 +378,38 @@ pub struct MatrixOptions {
     pub compute_mean_s: f64,
     /// Lognormal heterogeneity σ of per-MU compute speed for DES cells.
     pub compute_het: f64,
-    /// Intra-scenario fan-out width ([`TrainOptions::inner_threads`]):
-    /// threads executing the per-cluster blocks *inside* each cell's
-    /// rounds, on top of the cross-cell `threads` pool. `1` (default) =
-    /// sequential cells; bit-identical results for every value.
-    pub inner_threads: usize,
-    /// Persistent worker pool the grid (and every nested engine fan-out)
-    /// leases lanes from; `None` uses the process-wide shared pool
-    /// ([`crate::pool::global_handle`]). Results are bit-identical either
-    /// way — the pool only changes where the threads come from.
-    pub pool: Option<PoolHandle>,
-    /// Aggregation dispatch inside every cell's engine
-    /// ([`crate::sparse::merge`], `--agg-path`): sparse k-way merge vs
-    /// dense scatter. Bit-identical for every setting.
-    pub agg: crate::sparse::merge::AggPolicy,
 }
 
 impl Default for MatrixOptions {
     fn default() -> Self {
         Self {
+            spec: RunSpec::new()
+                .iters(30)
+                .peak_lr(0.05)
+                .warmup(3)
+                .milestones(0.6, 0.85),
             threads: 0,
-            iters: 30,
             dim: 32,
-            peak_lr: 0.05,
-            warmup_iters: 3,
             eval_every: 10,
             grad_noise: 0.0,
             base_seed: 2019,
             engine: EngineSelect::Auto,
             compute_mean_s: 0.0,
             compute_het: 0.5,
-            inner_threads: 1,
-            pool: None,
-            agg: Default::default(),
         }
+    }
+}
+
+impl Deref for MatrixOptions {
+    type Target = RunSpec;
+    fn deref(&self) -> &RunSpec {
+        &self.spec
+    }
+}
+
+impl DerefMut for MatrixOptions {
+    fn deref_mut(&mut self) -> &mut RunSpec {
+        &mut self.spec
     }
 }
 
@@ -596,27 +603,20 @@ pub(crate) fn cell_train_options(
     sc: &MatrixScenario,
     opts: &MatrixOptions,
 ) -> TrainOptions {
-    TrainOptions {
-        iters: opts.iters,
-        peak_lr: opts.peak_lr,
-        warmup_iters: opts.warmup_iters,
-        milestones: (0.6, 0.85),
-        momentum: 0.9,
-        weight_decay: 0.0,
-        h_period: sc.h_period,
-        n_clusters: sc.n_clusters,
-        sparsity: match sc.phi {
-            Some(phi) => SparsityConfig {
-                enabled: true,
-                phi_mu_ul: phi,
-                ..cfg.sparsity.clone()
-            },
-            None => SparsityConfig::dense(),
+    let mut spec = opts.spec.clone();
+    spec.h_period = sc.h_period;
+    spec.sparsity = match sc.phi {
+        Some(phi) => SparsityConfig {
+            enabled: true,
+            phi_mu_ul: phi,
+            ..cfg.sparsity.clone()
         },
+        None => SparsityConfig::dense(),
+    };
+    TrainOptions {
+        spec,
+        n_clusters: sc.n_clusters,
         eval_every: opts.eval_every,
-        inner_threads: opts.inner_threads,
-        pool: opts.pool.clone(),
-        agg: opts.agg,
     }
 }
 
@@ -795,7 +795,7 @@ mod tests {
             ..ScenarioSpec::quick()
         });
         let opts = MatrixOptions {
-            iters: 10,
+            spec: MatrixOptions::default().spec.iters(10),
             dim: 16,
             eval_every: 5,
             ..Default::default()
@@ -827,19 +827,16 @@ mod tests {
             ..ScenarioSpec::quick()
         });
         let opts = MatrixOptions {
+            spec: MatrixOptions::default().spec.iters(10).inner_threads(2),
             threads: 4,
-            iters: 10,
             dim: 16,
             eval_every: 5,
-            inner_threads: 2,
             ..Default::default()
         };
         let shared = run_matrix(&cfg, &spec, &opts).unwrap();
         let dedicated_pool = crate::pool::WorkerPool::new(3);
-        let dopts = MatrixOptions {
-            pool: Some(dedicated_pool.handle()),
-            ..opts
-        };
+        let mut dopts = opts.clone();
+        dopts.spec.pool = Some(dedicated_pool.handle());
         let dedicated = run_matrix(&cfg, &spec, &dopts).unwrap();
         assert_eq!(shared.len(), dedicated.len());
         for (a, b) in shared.iter().zip(&dedicated) {
@@ -869,11 +866,13 @@ mod tests {
         };
         let run = |path: AggPath| {
             let opts = MatrixOptions {
+                spec: MatrixOptions::default()
+                    .spec
+                    .iters(8)
+                    .agg(AggPolicy { path, ..Default::default() }),
                 threads: 2,
-                iters: 8,
                 dim: 24,
                 eval_every: 4,
-                agg: AggPolicy { path, ..Default::default() },
                 ..Default::default()
             };
             run_matrix(&cfg, &spec, &opts).unwrap()
@@ -903,7 +902,12 @@ mod tests {
             profiles: vec![ChannelProfile::nominal()],
             ..ScenarioSpec::quick()
         });
-        let opts = MatrixOptions { threads: 1, iters: 8, dim: 12, ..Default::default() };
+        let opts = MatrixOptions {
+            spec: MatrixOptions::default().spec.iters(8),
+            threads: 1,
+            dim: 12,
+            ..Default::default()
+        };
         let results = run_matrix(&cfg, &spec, &opts).unwrap();
         assert_eq!(results.len(), 2);
         assert_ne!(results[0].trace.params_hash, results[1].trace.params_hash);
@@ -966,7 +970,12 @@ mod tests {
                 StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
             ],
         };
-        let opts = MatrixOptions { threads: 2, iters: 8, dim: 12, ..Default::default() };
+        let opts = MatrixOptions {
+            spec: MatrixOptions::default().spec.iters(8),
+            threads: 2,
+            dim: 12,
+            ..Default::default()
+        };
         let full = run_matrix(&cfg, &spec, &opts).unwrap();
         assert_eq!(full.len(), 8);
 

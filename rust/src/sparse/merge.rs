@@ -272,14 +272,13 @@ pub struct ParMergeScratch {
 /// arithmetic of [`merge_weighted_into`], so the result is **bit-identical
 /// to the sequential merge (and to the dense scatter fold) at any width**.
 ///
-/// The engines deliberately do *not* route [`aggregate_adaptive`] through
-/// this variant: their parallelism budget is already spent on the
+/// The flat training engines do *not* route [`aggregate_adaptive`]
+/// through this variant: their parallelism budget is already spent on the
 /// cluster/MU lane fan-outs, and a nested range fan-out per aggregation
-/// would contend for the same pool. It is exposed (and property-tested at
-/// widths {1, 2, 8}) for callers aggregating very large dims outside an
-/// engine fan-out; wiring it into the engines' sync points — which run on
-/// the submitting thread with idle lanes — is a ROADMAP follow-up,
-/// pending measurement.
+/// would contend for the same pool. The DES engine *does* use it (via
+/// [`aggregate_adaptive_pooled`]): its cluster aggregation and H-sync
+/// tails run on the submitting thread after the per-MU fan-out has
+/// drained, so the leased lanes are idle exactly when the merge runs.
 pub fn merge_weighted_par(
     parts: &[(&SparseVec, f32)],
     dim: usize,
@@ -378,6 +377,51 @@ pub fn aggregate_adaptive(
         }
         shadow.mark_dirty();
     }
+}
+
+/// [`aggregate_adaptive`] with the sparse-path merge fanned out across
+/// coordinate ranges on `width` pool lanes ([`merge_weighted_par`]).
+/// Bit-identical to the sequential dispatch at every width — the
+/// per-coordinate fold order never changes — so callers may switch
+/// between the two freely (the DES engine uses this variant whenever it
+/// holds a lane lease, and the sequential one otherwise). The dense path
+/// is the same scatter fold as [`aggregate_adaptive`], untouched by
+/// `width`.
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate_adaptive_pooled(
+    policy: &AggPolicy,
+    parts: &[(&SparseVec, f32)],
+    dim: usize,
+    post_scale: Option<f32>,
+    width: usize,
+    pool: Option<&PoolHandle>,
+    buf: &mut [f32],
+    merged: &mut SparseVec,
+    scratch: &mut ParMergeScratch,
+    shadow: &mut DenseShadow,
+) -> Result<()> {
+    let total_nnz: usize = parts.iter().map(|(m, _)| m.nnz()).sum();
+    if policy.use_sparse(total_nnz, dim) {
+        merge_weighted_par(parts, dim, width.max(1), pool, merged, scratch)?;
+        let baseline = match post_scale {
+            Some(a) => {
+                merged.scale_values(a);
+                0.0f32 * a
+            }
+            None => 0.0,
+        };
+        shadow.write(buf, baseline, merged);
+    } else {
+        crate::tensor::kernels::zero(buf);
+        for (m, w) in parts {
+            m.add_into(buf, *w);
+        }
+        if let Some(a) = post_scale {
+            crate::tensor::kernels::scale(buf, a);
+        }
+        shadow.mark_dirty();
+    }
+    Ok(())
 }
 
 /// Bookkeeping that lets the sparse aggregation path hand downstream
@@ -631,6 +675,58 @@ mod tests {
                             bufs[which][i].to_bits(),
                             reference[i].to_bits(),
                             "round {round} path {path:?} scale {post_scale:?} coord {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_adaptive_pooled_matches_sequential_dispatch() {
+        // The pooled dispatch must agree bit for bit with the sequential
+        // one at every width, on both paths and both post-scale shapes.
+        let dim = 96;
+        let mut rng = Pcg64::seeded(75);
+        for post_scale in [Some(-0.03f32), None] {
+            for path in [AggPath::Sparse, AggPath::Dense, AggPath::Auto] {
+                let policy = AggPolicy { path, ..AggPolicy::default() };
+                let parts = random_parts(&mut rng, 5, dim, 0.15);
+                let refs = as_refs(&parts);
+                let mut seq_buf = vec![0.0f32; dim];
+                let mut seq_shadow = DenseShadow::new();
+                aggregate_adaptive(
+                    &policy,
+                    &refs,
+                    dim,
+                    post_scale,
+                    &mut seq_buf,
+                    &mut SparseVec::default(),
+                    &mut MergeScratch::default(),
+                    &mut seq_shadow,
+                );
+                let mut scratch = ParMergeScratch::default();
+                for width in [1usize, 2, 7] {
+                    let mut buf = vec![0.0f32; dim];
+                    let mut shadow = DenseShadow::new();
+                    aggregate_adaptive_pooled(
+                        &policy,
+                        &refs,
+                        dim,
+                        post_scale,
+                        width,
+                        None,
+                        &mut buf,
+                        &mut SparseVec::default(),
+                        &mut scratch,
+                        &mut shadow,
+                    )
+                    .unwrap();
+                    for i in 0..dim {
+                        assert_eq!(
+                            buf[i].to_bits(),
+                            seq_buf[i].to_bits(),
+                            "path {path:?} width {width} scale {post_scale:?} coord {i}"
                         );
                     }
                 }

@@ -1,0 +1,227 @@
+//! The shared training-run specification.
+//!
+//! [`RunSpec`] is the single home of the ~10 scalars every training engine
+//! reads — iteration budget, LR schedule, momentum/weight-decay, the H
+//! averaging period, the sparsity configuration, the aggregation dispatch,
+//! and the fan-out/pool wiring. [`crate::fl::TrainOptions`],
+//! [`crate::coordinator::CoordinatorOptions`] and
+//! [`crate::sim::MatrixOptions`] each *embed* one `RunSpec` (and `Deref`
+//! to it, so `opts.iters`-style reads keep their natural spelling) and add
+//! only their engine-specific knobs on top. The config fingerprints that
+//! gate snapshot resume and the `hfl serve`/`hfl worker` handshake both
+//! derive from [`RunSpec::put_fingerprint`], so the formerly-triplicated
+//! field lists can no longer drift.
+
+use crate::config::SparsityConfig;
+use crate::pool::PoolHandle;
+use crate::snapshot::codec::ByteWriter;
+use crate::sparse::merge::AggPolicy;
+
+/// The scalars shared by every training run, regardless of which engine
+/// (sequential, coordinator-as-a-service, DES grid cell) executes it.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Total iterations (global steps).
+    pub iters: usize,
+    /// Peak learning rate (after linear scaling).
+    pub peak_lr: f64,
+    /// Warm-up iterations.
+    pub warmup_iters: usize,
+    /// LR decay milestones as fractions of `iters`.
+    pub milestones: (f64, f64),
+    /// Momentum σ (both MU-side DGC correction and dense momentum).
+    pub momentum: f32,
+    /// Weight decay λ.
+    pub weight_decay: f32,
+    /// Model-averaging period H.
+    pub h_period: usize,
+    /// Sparsification configuration (per-link φ and β).
+    pub sparsity: SparsityConfig,
+    /// Aggregation dispatch: k-way sparse merge vs dense scatter
+    /// (`--agg-path`, `[agg]` config). Bit-identical for every setting
+    /// (see [`crate::sparse::merge`]).
+    pub agg: AggPolicy,
+    /// Intra-round fan-out width: worker threads executing the independent
+    /// per-cluster compute+uplink blocks of each round. `1` (default) runs
+    /// sequentially; `0` uses one thread per available core. Results are
+    /// bit-identical for every value.
+    pub inner_threads: usize,
+    /// Persistent worker pool to lease the fan-out lanes from; `None`
+    /// (default) uses the process-wide shared pool
+    /// ([`crate::pool::global_handle`]). Bit-identical either way.
+    pub pool: Option<PoolHandle>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            iters: 100,
+            peak_lr: 0.1,
+            warmup_iters: 0,
+            milestones: (0.5, 0.75),
+            momentum: 0.9,
+            weight_decay: 0.0,
+            h_period: 2,
+            sparsity: SparsityConfig::dense(),
+            agg: AggPolicy::default(),
+            inner_threads: 1,
+            pool: None,
+        }
+    }
+}
+
+impl RunSpec {
+    /// A default spec — the starting point for the builder methods below.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the iteration budget.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    /// Set the peak learning rate.
+    pub fn peak_lr(mut self, lr: f64) -> Self {
+        self.peak_lr = lr;
+        self
+    }
+
+    /// Set the warm-up iteration count.
+    pub fn warmup(mut self, iters: usize) -> Self {
+        self.warmup_iters = iters;
+        self
+    }
+
+    /// Set the LR decay milestones (fractions of `iters`).
+    pub fn milestones(mut self, a: f64, b: f64) -> Self {
+        self.milestones = (a, b);
+        self
+    }
+
+    /// Set the momentum σ.
+    pub fn momentum(mut self, m: f32) -> Self {
+        self.momentum = m;
+        self
+    }
+
+    /// Set the weight decay λ.
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    /// Set the model-averaging period H.
+    pub fn h_period(mut self, h: usize) -> Self {
+        self.h_period = h;
+        self
+    }
+
+    /// Set the sparsification configuration.
+    pub fn sparsity(mut self, s: SparsityConfig) -> Self {
+        self.sparsity = s;
+        self
+    }
+
+    /// Set the aggregation dispatch policy.
+    pub fn agg(mut self, agg: AggPolicy) -> Self {
+        self.agg = agg;
+        self
+    }
+
+    /// Set the intra-round fan-out width.
+    pub fn inner_threads(mut self, n: usize) -> Self {
+        self.inner_threads = n;
+        self
+    }
+
+    /// Set the worker pool handle to lease fan-out lanes from.
+    pub fn pool(mut self, pool: Option<PoolHandle>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Fold every *bit-relevant* scalar of this spec into a fingerprint
+    /// stream: the iteration budget, LR schedule, momentum/weight-decay,
+    /// H period, and the full sparsity configuration. `agg`,
+    /// `inner_threads` and `pool` are deliberately excluded — they are
+    /// bit-irrelevant by the determinism contract, so snapshots may resume
+    /// (and serve/worker sessions may pair) across different values. Both
+    /// the snapshot config fingerprints and
+    /// [`crate::net::NetScenario::fingerprint`] build on this single
+    /// definition.
+    pub fn put_fingerprint(&self, w: &mut ByteWriter) {
+        w.put_usize(self.iters);
+        w.put_usize(self.h_period);
+        w.put_usize(self.warmup_iters);
+        w.put_f64(self.peak_lr);
+        w.put_f64(self.milestones.0);
+        w.put_f64(self.milestones.1);
+        w.put_f32(self.momentum);
+        w.put_f32(self.weight_decay);
+        let s = &self.sparsity;
+        w.put_bool(s.enabled);
+        w.put_f64(s.phi_mu_ul);
+        w.put_f64(s.phi_sbs_dl);
+        w.put_f64(s.phi_sbs_ul);
+        w.put_f64(s.phi_mbs_dl);
+        w.put_f64(s.beta_m);
+        w.put_f64(s.beta_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_every_field() {
+        let s = RunSpec::new()
+            .iters(7)
+            .peak_lr(0.25)
+            .warmup(3)
+            .milestones(0.4, 0.9)
+            .momentum(0.8)
+            .weight_decay(0.01)
+            .h_period(5)
+            .inner_threads(4);
+        assert_eq!(s.iters, 7);
+        assert_eq!(s.peak_lr, 0.25);
+        assert_eq!(s.warmup_iters, 3);
+        assert_eq!(s.milestones, (0.4, 0.9));
+        assert_eq!(s.momentum, 0.8);
+        assert_eq!(s.weight_decay, 0.01);
+        assert_eq!(s.h_period, 5);
+        assert_eq!(s.inner_threads, 4);
+    }
+
+    #[test]
+    fn fingerprint_covers_bit_relevant_scalars_only() {
+        let bytes = |s: &RunSpec| {
+            let mut w = ByteWriter::new();
+            s.put_fingerprint(&mut w);
+            w.into_bytes()
+        };
+        let base = RunSpec::new();
+        let b0 = bytes(&base);
+        // Every bit-relevant knob moves the stream…
+        for other in [
+            base.clone().iters(101),
+            base.clone().peak_lr(0.2),
+            base.clone().warmup(1),
+            base.clone().milestones(0.5, 0.8),
+            base.clone().momentum(0.5),
+            base.clone().weight_decay(0.1),
+            base.clone().h_period(3),
+            base.clone().sparsity(SparsityConfig::default()),
+        ] {
+            assert_ne!(b0, bytes(&other));
+        }
+        // …and the thread-shape/dispatch knobs deliberately do not.
+        assert_eq!(b0, bytes(&base.clone().inner_threads(8)));
+        let mut agg = base.clone();
+        agg.agg.path = crate::sparse::merge::AggPath::Dense;
+        assert_eq!(b0, bytes(&agg));
+    }
+}

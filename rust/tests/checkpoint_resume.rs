@@ -69,20 +69,20 @@ impl Gen for ResumeCase {
 
 fn topts(n: usize, h: usize, inner: usize, pool: Option<hfl::pool::PoolHandle>) -> TrainOptions {
     TrainOptions {
-        iters: ITERS,
-        peak_lr: 0.05,
-        warmup_iters: 2,
-        h_period: h,
+        spec: hfl::spec::RunSpec::new()
+            .iters(ITERS)
+            .peak_lr(0.05)
+            .warmup(2)
+            .h_period(h)
+            .sparsity(SparsityConfig {
+                enabled: true,
+                phi_mu_ul: 0.8,
+                ..SparsityConfig::default()
+            })
+            .inner_threads(inner)
+            .pool(pool),
         n_clusters: n,
-        sparsity: SparsityConfig {
-            enabled: true,
-            phi_mu_ul: 0.8,
-            ..SparsityConfig::default()
-        },
         eval_every: 4,
-        inner_threads: inner,
-        pool,
-        ..TrainOptions::default()
     }
 }
 

@@ -18,31 +18,28 @@ use hfl::sim::{Engine, GoldenTrace, ScenarioMeta, ScenarioResult};
 
 fn train_opts(sparse: bool, n_clusters: usize) -> TrainOptions {
     TrainOptions {
-        iters: 48,
-        peak_lr: 0.04,
-        warmup_iters: 6,
-        milestones: (0.5, 0.75),
-        momentum: 0.9,
-        weight_decay: 1e-3,
-        h_period: 4,
+        spec: hfl::spec::RunSpec::new()
+            .iters(48)
+            .peak_lr(0.04)
+            .warmup(6)
+            .milestones(0.5, 0.75)
+            .weight_decay(1e-3)
+            .h_period(4)
+            .sparsity(if sparse {
+                SparsityConfig {
+                    enabled: true,
+                    phi_mu_ul: 0.8,
+                    phi_sbs_dl: 0.5,
+                    phi_sbs_ul: 0.5,
+                    phi_mbs_dl: 0.5,
+                    beta_m: 0.2,
+                    beta_s: 0.5,
+                }
+            } else {
+                SparsityConfig::dense()
+            }),
         n_clusters,
-        sparsity: if sparse {
-            SparsityConfig {
-                enabled: true,
-                phi_mu_ul: 0.8,
-                phi_sbs_dl: 0.5,
-                phi_sbs_ul: 0.5,
-                phi_mbs_dl: 0.5,
-                beta_m: 0.2,
-                beta_s: 0.5,
-            }
-        } else {
-            SparsityConfig::dense()
-        },
         eval_every: 0,
-        inner_threads: 1,
-        pool: None,
-        agg: Default::default(),
     }
 }
 

@@ -58,17 +58,15 @@ fn sparsity(phi: Option<f64>) -> SparsityConfig {
 
 fn coord_opts(phi: Option<f64>, n_clusters: usize, iters: usize) -> CoordinatorOptions {
     CoordinatorOptions {
-        iters,
-        peak_lr: 0.04,
-        warmup_iters: 4,
-        milestones: (0.5, 0.75),
-        momentum: 0.9,
-        weight_decay: 0.0,
-        h_period: 4,
+        spec: hfl::spec::RunSpec::new()
+            .iters(iters)
+            .peak_lr(0.04)
+            .warmup(4)
+            .milestones(0.5, 0.75)
+            .h_period(4)
+            .sparsity(sparsity(phi)),
         n_clusters,
-        sparsity: sparsity(phi),
         eval_every_syncs: 0,
-        agg: Default::default(),
     }
 }
 

@@ -49,40 +49,32 @@ fn sparsity(phi: Option<f64>) -> SparsityConfig {
     }
 }
 
+fn spec(phi: Option<f64>, iters: usize) -> hfl::spec::RunSpec {
+    hfl::spec::RunSpec::new()
+        .iters(iters)
+        .peak_lr(0.04)
+        .warmup(4)
+        .milestones(0.5, 0.75)
+        .h_period(4)
+        .sparsity(sparsity(phi))
+}
+
 fn train_opts(phi: Option<f64>, n_clusters: usize, path: AggPath) -> TrainOptions {
     TrainOptions {
-        iters: 24,
-        peak_lr: 0.04,
-        warmup_iters: 4,
-        milestones: (0.5, 0.75),
-        momentum: 0.9,
-        weight_decay: 0.0,
-        h_period: 4,
-        n_clusters,
-        sparsity: sparsity(phi),
-        eval_every: 0,
-        inner_threads: 1,
-        pool: None,
-        agg: AggPolicy {
+        spec: spec(phi, 24).agg(AggPolicy {
             path,
             ..Default::default()
-        },
+        }),
+        n_clusters,
+        eval_every: 0,
     }
 }
 
 fn coord_opts(phi: Option<f64>, n_clusters: usize, iters: usize) -> CoordinatorOptions {
     CoordinatorOptions {
-        iters,
-        peak_lr: 0.04,
-        warmup_iters: 4,
-        milestones: (0.5, 0.75),
-        momentum: 0.9,
-        weight_decay: 0.0,
-        h_period: 4,
+        spec: spec(phi, iters),
         n_clusters,
-        sparsity: sparsity(phi),
         eval_every_syncs: 0,
-        agg: Default::default(),
     }
 }
 

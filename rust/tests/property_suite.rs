@@ -442,24 +442,24 @@ fn prop_inner_fanout_bit_exact_across_thread_counts() {
         |&(n, per, dim, h, sparse, wd, seed)| {
             let run = |threads: usize| -> TrainLog {
                 let opts = TrainOptions {
-                    iters: 8,
-                    peak_lr: 0.05,
-                    warmup_iters: 2,
-                    h_period: h,
+                    spec: hfl::spec::RunSpec::new()
+                        .iters(8)
+                        .peak_lr(0.05)
+                        .warmup(2)
+                        .h_period(h)
+                        .weight_decay(if wd { 1e-3 } else { 0.0 })
+                        .sparsity(if sparse {
+                            SparsityConfig {
+                                enabled: true,
+                                phi_mu_ul: 0.8,
+                                ..SparsityConfig::default()
+                            }
+                        } else {
+                            SparsityConfig::dense()
+                        })
+                        .inner_threads(threads),
                     n_clusters: n,
-                    weight_decay: if wd { 1e-3 } else { 0.0 },
-                    sparsity: if sparse {
-                        SparsityConfig {
-                            enabled: true,
-                            phi_mu_ul: 0.8,
-                            ..SparsityConfig::default()
-                        }
-                    } else {
-                        SparsityConfig::dense()
-                    },
                     eval_every: 4,
-                    inner_threads: threads,
-                    ..TrainOptions::default()
                 };
                 let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
                 run_hierarchical(&mut oracle, &opts)
@@ -548,20 +548,20 @@ fn prop_pool_leased_fanout_bit_exact_both_engines() {
         &PoolFanoutCase,
         |&(n, per, dim, h, seed)| {
             let topts_for = |inner: usize, pool: Option<PoolHandle>| TrainOptions {
-                iters: 6,
-                peak_lr: 0.05,
-                warmup_iters: 2,
-                h_period: h,
+                spec: hfl::spec::RunSpec::new()
+                    .iters(6)
+                    .peak_lr(0.05)
+                    .warmup(2)
+                    .h_period(h)
+                    .sparsity(SparsityConfig {
+                        enabled: true,
+                        phi_mu_ul: 0.8,
+                        ..SparsityConfig::default()
+                    })
+                    .inner_threads(inner)
+                    .pool(pool),
                 n_clusters: n,
-                sparsity: SparsityConfig {
-                    enabled: true,
-                    phi_mu_ul: 0.8,
-                    ..SparsityConfig::default()
-                },
                 eval_every: 3,
-                inner_threads: inner,
-                pool,
-                ..TrainOptions::default()
             };
 
             // --- sequential-reference engine ------------------------------
