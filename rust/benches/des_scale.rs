@@ -78,6 +78,7 @@ fn main() {
         compute: ComputeProfile::none(),
         compute_scale: 1.0,
         seed: 7,
+        churn: hfl::adversary::ChurnConfig::default(),
     };
 
     println!(

@@ -1,0 +1,368 @@
+//! Deterministic adversarial-client plans: Byzantine update corruption
+//! ([`AdversaryPlan`]) and client churn / energy-budgeted participation
+//! ([`ChurnConfig`]).
+//!
+//! Both mirror the design of [`crate::net::chaos::ChaosConfig`]: every
+//! decision is drawn from a [`Pcg64`] stream keyed on `(seed, mu_id,
+//! round)` — never wall-clock, never arrival order — so a plan is
+//! bit-reproducible at any thread count and across engines. The draws are
+//! *stateless*: no RNG cursor survives between rounds, so checkpoints
+//! carry only the seed (plus the stale-replay buffers, which are real
+//! per-MU state).
+//!
+//! ## Attack taxonomy
+//!
+//! An attacker MU (a fixed per-seed subset of the population, chosen by a
+//! per-MU coin at [`AdversaryPlan::fraction`]) corrupts its **post-DGC
+//! sparse update at the uplink boundary** — after sparsification and
+//! error-feedback accounting, before wire pricing and transmission — so
+//! the honest-side DGC state evolves exactly as in an honest run and the
+//! transmitted message is priced as sent:
+//!
+//! * **sign flip** — negates every value (support unchanged);
+//! * **scaled amplification** — multiplies every value by
+//!   [`AdversaryPlan::scale`] (support unchanged);
+//! * **Gaussian garbage** — replaces every value with a keyed
+//!   `N(0, garbage_std²)` draw (support unchanged);
+//! * **stale replay** — re-sends the MU's *previous round's honest*
+//!   post-DGC update (support may differ; the wire price follows the
+//!   replayed message). The first attacking round has nothing to replay
+//!   and falls back to a sign flip.
+//!
+//! The behavior is re-drawn per `(mu, round)`, uniformly over the four.
+//!
+//! ## Churn and energy
+//!
+//! [`ChurnConfig`] gates DES round participation: an alive MU departs
+//! with probability `drop_p` per round (out of coverage — the mobility
+//! outage analogue), a departed MU rejoins with probability `rejoin_p`,
+//! and a finite `energy` budget retires an MU permanently after that many
+//! participated rounds. Skipped `(mu, round)` pairs feed the golden
+//! trace's skip digest; survivor reweighting falls out of the engines'
+//! participant-count denominators.
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// Odd SplitMix64-style multiplier used to fold the round index into a
+/// stream key without colliding adjacent `(mu, round)` pairs.
+const ROUND_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+const TAG_ATTACKER: u64 = 0xadf1_0000_0000_0001;
+const TAG_BEHAVIOR: u64 = 0xadf1_0000_0000_0002;
+const TAG_GARBAGE: u64 = 0xadf1_0000_0000_0003;
+const TAG_DROP: u64 = 0xc4c1_0000_0000_0001;
+const TAG_REJOIN: u64 = 0xc4c1_0000_0000_0002;
+
+/// What an attacker does to its update in one round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackBehavior {
+    SignFlip,
+    ScaledAmplification,
+    GaussianGarbage,
+    StaleReplay,
+}
+
+/// Seeded Byzantine fault-injection plan (`[adversary]` / `--adversary-*`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversaryPlan {
+    pub enabled: bool,
+    /// Root seed of every keyed decision stream.
+    pub seed: u64,
+    /// Fraction of the MU population flipped to attackers, in `[0, 1]`.
+    pub fraction: f64,
+    /// Multiplier of the scaled-amplification behavior.
+    pub scale: f32,
+    /// Standard deviation of the Gaussian-garbage behavior.
+    pub garbage_std: f32,
+}
+
+impl Default for AdversaryPlan {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 2027,
+            fraction: 0.2,
+            scale: 10.0,
+            garbage_std: 1.0,
+        }
+    }
+}
+
+impl AdversaryPlan {
+    pub fn validate(&self) -> Result<()> {
+        if !self.fraction.is_finite() || !(0.0..=1.0).contains(&self.fraction) {
+            bail!("adversary fraction must be in [0, 1], got {}", self.fraction);
+        }
+        if !self.scale.is_finite() || self.scale == 0.0 {
+            bail!("adversary scale must be finite and non-zero, got {}", self.scale);
+        }
+        if !self.garbage_std.is_finite() || self.garbage_std < 0.0 {
+            bail!("adversary garbage std must be finite and >= 0, got {}", self.garbage_std);
+        }
+        Ok(())
+    }
+
+    /// Is this MU an attacker under the plan? Fixed per `(seed, mu)` —
+    /// attackers don't change identity between rounds.
+    pub fn is_attacker(&self, mu: u64) -> bool {
+        self.enabled
+            && self.fraction > 0.0
+            && Pcg64::new(self.seed ^ TAG_ATTACKER, mu).uniform() < self.fraction
+    }
+
+    /// The behavior an attacker exhibits this round, re-drawn per
+    /// `(seed, mu, round)`.
+    pub fn behavior(&self, mu: u64, round: u64) -> AttackBehavior {
+        let mut rng =
+            Pcg64::new(self.seed ^ TAG_BEHAVIOR, mu ^ round.wrapping_mul(ROUND_MIX));
+        match rng.uniform_u64(4) {
+            0 => AttackBehavior::SignFlip,
+            1 => AttackBehavior::ScaledAmplification,
+            2 => AttackBehavior::GaussianGarbage,
+            _ => AttackBehavior::StaleReplay,
+        }
+    }
+
+    /// Corrupt one post-DGC sparse update in place, if `mu` attacks this
+    /// round. `stale` is the caller-owned replay slot for this MU (always
+    /// updated to this round's *honest* message for attackers, so a later
+    /// stale replay re-sends a genuine past update). Returns `true` when
+    /// the update was mutated.
+    pub fn corrupt(
+        &self,
+        mu: u64,
+        round: u64,
+        indices: &mut Vec<u32>,
+        values: &mut Vec<f32>,
+        stale: &mut Option<(Vec<u32>, Vec<f32>)>,
+    ) -> bool {
+        if !self.is_attacker(mu) {
+            return false;
+        }
+        let behavior = self.behavior(mu, round);
+        let prev = match behavior {
+            AttackBehavior::StaleReplay => stale.take(),
+            _ => None,
+        };
+        *stale = Some((indices.clone(), values.clone()));
+        match behavior {
+            AttackBehavior::SignFlip => {
+                for v in values.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            AttackBehavior::ScaledAmplification => {
+                for v in values.iter_mut() {
+                    *v *= self.scale;
+                }
+            }
+            AttackBehavior::GaussianGarbage => {
+                let mut rng =
+                    Pcg64::new(self.seed ^ TAG_GARBAGE, mu ^ round.wrapping_mul(ROUND_MIX));
+                for v in values.iter_mut() {
+                    *v = rng.normal() as f32 * self.garbage_std;
+                }
+            }
+            AttackBehavior::StaleReplay => {
+                if let Some((si, sv)) = prev {
+                    *indices = si;
+                    *values = sv;
+                } else {
+                    // Nothing sent yet — first attacking round flips signs.
+                    for v in values.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Seeded client-churn and energy-budget plan for the DES engine
+/// (`--churn-*` / `[churn]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnConfig {
+    pub enabled: bool,
+    /// Root seed of the drop/rejoin decision streams.
+    pub seed: u64,
+    /// Per-round probability an alive MU departs before the round starts.
+    pub drop_p: f64,
+    /// Per-round probability a departed MU rejoins.
+    pub rejoin_p: f64,
+    /// Participation budget in rounds (energy model: one unit per
+    /// participated round); `0` = unlimited.
+    pub energy: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 2029,
+            drop_p: 0.1,
+            rejoin_p: 0.5,
+            energy: 0.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.drop_p.is_finite() || !(0.0..=1.0).contains(&self.drop_p) {
+            bail!("churn drop probability must be in [0, 1], got {}", self.drop_p);
+        }
+        if !self.rejoin_p.is_finite() || !(0.0..=1.0).contains(&self.rejoin_p) {
+            bail!("churn rejoin probability must be in [0, 1], got {}", self.rejoin_p);
+        }
+        if !self.energy.is_finite() || self.energy < 0.0 {
+            bail!("churn energy budget must be finite and >= 0, got {}", self.energy);
+        }
+        Ok(())
+    }
+
+    /// Does this alive MU depart before `round` starts?
+    pub fn drops(&self, mu: u64, round: u64) -> bool {
+        self.enabled
+            && self.drop_p > 0.0
+            && Pcg64::new(self.seed ^ TAG_DROP, mu ^ round.wrapping_mul(ROUND_MIX)).uniform()
+                < self.drop_p
+    }
+
+    /// Does this departed MU rejoin before `round` starts?
+    pub fn rejoins(&self, mu: u64, round: u64) -> bool {
+        self.enabled
+            && self.rejoin_p > 0.0
+            && Pcg64::new(self.seed ^ TAG_REJOIN, mu ^ round.wrapping_mul(ROUND_MIX)).uniform()
+                < self.rejoin_p
+    }
+
+    /// Has a finite energy budget been exhausted after `spent` rounds of
+    /// participation?
+    pub fn exhausted(&self, spent: f64) -> bool {
+        self.enabled && self.energy > 0.0 && spent >= self.energy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let plan = AdversaryPlan { enabled: true, fraction: 0.3, ..Default::default() };
+        let other = AdversaryPlan { seed: 999, ..plan };
+        let attackers: Vec<bool> = (0..200).map(|m| plan.is_attacker(m)).collect();
+        assert_eq!(attackers, (0..200).map(|m| plan.is_attacker(m)).collect::<Vec<_>>());
+        assert_ne!(attackers, (0..200).map(|m| other.is_attacker(m)).collect::<Vec<_>>());
+        // ~30% of 200 MUs — loose bounds, deterministic draw.
+        let n = attackers.iter().filter(|&&a| a).count();
+        assert!((30..90).contains(&n), "{n} attackers");
+        // Behaviors re-draw per round but are stable for a given key.
+        let m = (0..200u64).find(|&m| plan.is_attacker(m)).unwrap();
+        assert_eq!(plan.behavior(m, 3), plan.behavior(m, 3));
+        let varied: std::collections::BTreeSet<_> =
+            (0..40).map(|r| format!("{:?}", plan.behavior(m, r))).collect();
+        assert!(varied.len() >= 3, "behaviors should vary across rounds: {varied:?}");
+    }
+
+    #[test]
+    fn disabled_plan_never_touches_an_update() {
+        let plan = AdversaryPlan::default();
+        assert!(!plan.enabled);
+        let mut idx = vec![1u32, 5];
+        let mut vals = vec![0.5f32, -0.25];
+        let mut stale = None;
+        assert!(!plan.corrupt(0, 0, &mut idx, &mut vals, &mut stale));
+        assert_eq!(vals, vec![0.5, -0.25]);
+        assert!(stale.is_none());
+    }
+
+    #[test]
+    fn corrupt_behaviors_mutate_as_documented() {
+        let plan = AdversaryPlan { enabled: true, fraction: 1.0, ..Default::default() };
+        let mu = 7u64;
+        assert!(plan.is_attacker(mu));
+        // Find one round per behavior.
+        let find = |want: AttackBehavior| (0..1000u64).find(|&r| plan.behavior(mu, r) == want);
+        let (rf, rs, rg, rr) = (
+            find(AttackBehavior::SignFlip).unwrap(),
+            find(AttackBehavior::ScaledAmplification).unwrap(),
+            find(AttackBehavior::GaussianGarbage).unwrap(),
+            find(AttackBehavior::StaleReplay).unwrap(),
+        );
+        let idx0 = vec![2u32, 9];
+        let vals0 = vec![1.5f32, -2.0];
+
+        let (mut idx, mut vals, mut stale) = (idx0.clone(), vals0.clone(), None);
+        assert!(plan.corrupt(mu, rf, &mut idx, &mut vals, &mut stale));
+        assert_eq!(vals, vec![-1.5, 2.0]);
+        assert_eq!(idx, idx0);
+        assert_eq!(stale, Some((idx0.clone(), vals0.clone())));
+
+        let (mut idx, mut vals, mut stale) = (idx0.clone(), vals0.clone(), None);
+        plan.corrupt(mu, rs, &mut idx, &mut vals, &mut stale);
+        assert_eq!(vals, vec![15.0, -20.0]);
+
+        let (mut idx, mut vals, mut stale) = (idx0.clone(), vals0.clone(), None);
+        plan.corrupt(mu, rg, &mut idx, &mut vals, &mut stale);
+        assert_ne!(vals, vals0);
+        let again = {
+            let (mut i2, mut v2, mut s2) = (idx0.clone(), vals0.clone(), None);
+            plan.corrupt(mu, rg, &mut i2, &mut v2, &mut s2);
+            v2
+        };
+        assert_eq!(vals, again, "garbage draws are keyed, not stateful");
+
+        // Stale replay with no history falls back to a sign flip…
+        let (mut idx, mut vals, mut stale) = (idx0.clone(), vals0.clone(), None);
+        plan.corrupt(mu, rr, &mut idx, &mut vals, &mut stale);
+        assert_eq!(vals, vec![-1.5, 2.0]);
+        // …and with history re-sends the stored *honest* message.
+        let mut stale = Some((vec![4u32], vec![0.125f32]));
+        let (mut idx, mut vals) = (idx0.clone(), vals0.clone());
+        plan.corrupt(mu, rr, &mut idx, &mut vals, &mut stale);
+        assert_eq!(idx, vec![4]);
+        assert_eq!(vals, vec![0.125]);
+        assert_eq!(stale, Some((idx0.clone(), vals0.clone())));
+    }
+
+    #[test]
+    fn plan_validation_names_bad_fields() {
+        AdversaryPlan::default().validate().unwrap();
+        let bad = AdversaryPlan { fraction: 1.5, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("fraction"));
+        let bad = AdversaryPlan { fraction: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdversaryPlan { scale: 0.0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("scale"));
+        let bad = AdversaryPlan { garbage_std: f32::NAN, ..Default::default() };
+        assert!(bad.validate().is_err());
+
+        ChurnConfig::default().validate().unwrap();
+        let bad = ChurnConfig { drop_p: 2.0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("drop"));
+        let bad = ChurnConfig { rejoin_p: -1.0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("rejoin"));
+        let bad = ChurnConfig { energy: f64::INFINITY, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("energy"));
+    }
+
+    #[test]
+    fn churn_draws_are_keyed_and_gated() {
+        let off = ChurnConfig::default();
+        assert!(!off.drops(3, 5) && !off.rejoins(3, 5));
+        let churn = ChurnConfig { enabled: true, drop_p: 0.5, rejoin_p: 0.5, ..Default::default() };
+        let drops: Vec<bool> = (0..100).map(|r| churn.drops(11, r)).collect();
+        assert_eq!(drops, (0..100).map(|r| churn.drops(11, r)).collect::<Vec<_>>());
+        assert!(drops.iter().any(|&d| d) && !drops.iter().all(|&d| d));
+        // Different MU, different stream.
+        assert_ne!(drops, (0..100).map(|r| churn.drops(12, r)).collect::<Vec<_>>());
+        // Energy gate.
+        assert!(!churn.exhausted(1e9)); // energy 0 = unlimited
+        let budget = ChurnConfig { energy: 3.0, ..churn };
+        assert!(!budget.exhausted(2.0));
+        assert!(budget.exhausted(3.0));
+    }
+}

@@ -18,26 +18,101 @@
 //! `--out`/`--write-golden`/`--check-golden` surface through
 //! [`GoldenArgs`].
 
+use crate::adversary::{AdversaryPlan, ChurnConfig};
 use crate::net::chaos::{ChaosConfig, FaultPolicy};
 use crate::pool::WorkerPool;
 use crate::sim::result::{self, ScenarioResult};
-use crate::sparse::merge::{AggPath, AggPolicy};
+use crate::sparse::merge::{AggPath, AggPolicy, AggRule};
 use crate::spec::RunSpec;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
-/// Resolve the shared `--agg-path auto|sparse|dense` option against the
-/// `[agg]` config default (crossover always comes from the config). The
-/// returned policy is threaded into `TrainOptions::agg` /
-/// `MatrixOptions::agg`; every setting is bit-identical — the flag only
-/// moves wall-clock (see `crate::sparse::merge`).
+/// Resolve the shared `--agg-path auto|sparse|dense` and `--agg-rule
+/// mean|trimmed-mean|coord-median` (with `--agg-trim K` for the trim
+/// depth) options against the `[agg]` config default (crossover always
+/// comes from the config). The returned policy is threaded into
+/// `TrainOptions::agg` / `MatrixOptions::agg`; the path is bit-identical
+/// for every setting — only the consensus *rule* changes arithmetic (see
+/// `crate::sparse::merge`).
 pub fn agg_from_args(args: &Args, default: AggPolicy) -> Result<AggPolicy> {
     let mut agg = default;
     if let Some(s) = args.get("agg-path") {
         agg.path = AggPath::parse(s)?;
     }
+    let trim_default = match agg.rule {
+        AggRule::TrimmedMean(k) => k,
+        _ => 1,
+    };
+    let trim_k = args.get_parsed_or("agg-trim", trim_default)?;
+    if let Some(s) = args.get("agg-rule") {
+        agg.rule = AggRule::parse(s, trim_k)?;
+    } else if matches!(agg.rule, AggRule::TrimmedMean(_)) {
+        agg.rule = AggRule::TrimmedMean(trim_k);
+    } else if args.get("agg-trim").is_some() {
+        bail!("--agg-trim requires --agg-rule trimmed-mean (or [agg] rule = \"trimmed-mean\")");
+    }
     agg.validate()?;
     Ok(agg)
+}
+
+/// Resolve the `--adversary-*` Byzantine-plan options against the
+/// `[adversary]` config default. `--adversary` alone enables the
+/// config-file plan; any `--adversary-*` value both sets its field and
+/// enables the plan (mirrors [`chaos_from_args`]). Re-validated, so CLI
+/// values obey the same bounds as the config file.
+pub fn adversary_from_args(args: &Args, default: &AdversaryPlan) -> Result<AdversaryPlan> {
+    let mut plan = *default;
+    let mut touched = args.flag("adversary");
+    if let Some(f) = args.get_parsed("adversary-frac")? {
+        plan.fraction = f;
+        touched = true;
+    }
+    if let Some(seed) = args.get_parsed("adversary-seed")? {
+        plan.seed = seed;
+        touched = true;
+    }
+    if let Some(s) = args.get_parsed::<f32>("adversary-scale")? {
+        plan.scale = s;
+        touched = true;
+    }
+    if let Some(g) = args.get_parsed::<f32>("adversary-garbage-std")? {
+        plan.garbage_std = g;
+        touched = true;
+    }
+    if touched {
+        plan.enabled = true;
+    }
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Resolve the `--churn-*` client-churn options against the `[churn]`
+/// config default, with the same any-flag-enables contract as
+/// [`chaos_from_args`] / [`adversary_from_args`].
+pub fn churn_from_args(args: &Args, default: &ChurnConfig) -> Result<ChurnConfig> {
+    let mut churn = *default;
+    let mut touched = args.flag("churn");
+    if let Some(p) = args.get_parsed("churn-drop")? {
+        churn.drop_p = p;
+        touched = true;
+    }
+    if let Some(p) = args.get_parsed("churn-rejoin")? {
+        churn.rejoin_p = p;
+        touched = true;
+    }
+    if let Some(e) = args.get_parsed("churn-energy")? {
+        churn.energy = e;
+        touched = true;
+    }
+    if let Some(s) = args.get_parsed("churn-seed")? {
+        churn.seed = s;
+        touched = true;
+    }
+    if touched {
+        churn.enabled = true;
+    }
+    churn.validate()?;
+    Ok(churn)
 }
 
 /// Resolve the shared `--pool-threads N` option against the `[pool]`
@@ -137,11 +212,19 @@ pub fn phi_from_args(args: &Args) -> Result<Option<f64>> {
 
 /// Apply the shared training-run flags to a starting [`RunSpec`]: `--iters`
 /// overrides the iteration budget, `--inner-threads` the intra-round
-/// fan-out, and `--agg-path` the aggregation dispatch (against the `[agg]`
-/// config default). This is the one decode path from CLI/config to the
-/// spec shared by `train`, `matrix` and `des`.
-pub fn spec_from_args(args: &Args, default_agg: AggPolicy, base: RunSpec) -> Result<RunSpec> {
-    let mut spec = base.agg(agg_from_args(args, default_agg)?);
+/// fan-out, `--agg-path`/`--agg-rule` the aggregation dispatch, and
+/// `--adversary-*` the Byzantine plan (each against its config-section
+/// default). This is the one decode path from CLI/config to the spec
+/// shared by `train`, `matrix`, `des` and `serve`/`worker`.
+pub fn spec_from_args(
+    args: &Args,
+    default_agg: AggPolicy,
+    default_adversary: &AdversaryPlan,
+    base: RunSpec,
+) -> Result<RunSpec> {
+    let mut spec = base
+        .agg(agg_from_args(args, default_agg)?)
+        .adversary(adversary_from_args(args, default_adversary)?);
     if let Some(iters) = count_from_args(args, "iters")? {
         spec.iters = iters;
     }
@@ -473,11 +556,119 @@ mod tests {
         a.finish().unwrap();
         // Absent flag keeps the config default.
         let a = Args::parse(["matrix"]).unwrap();
-        let cfg_default = AggPolicy { path: AggPath::Dense, crossover: 0.5 };
+        let cfg_default = AggPolicy { path: AggPath::Dense, crossover: 0.5, ..Default::default() };
         assert_eq!(agg_from_args(&a, cfg_default).unwrap(), cfg_default);
         // Unknown values are rejected.
         let a = Args::parse(["matrix", "--agg-path", "turbo"]).unwrap();
         assert!(agg_from_args(&a, AggPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn agg_rule_from_args_parses_and_validates() {
+        let a = Args::parse(["matrix", "--agg-rule", "coord-median"]).unwrap();
+        let agg = agg_from_args(&a, AggPolicy::default()).unwrap();
+        assert_eq!(agg.rule, AggRule::CoordMedian);
+        a.finish().unwrap();
+
+        let a = Args::parse(["matrix", "--agg-rule", "trimmed-mean", "--agg-trim", "2"]).unwrap();
+        let agg = agg_from_args(&a, AggPolicy::default()).unwrap();
+        assert_eq!(agg.rule, AggRule::TrimmedMean(2));
+        a.finish().unwrap();
+
+        // --agg-trim defaults to 1 with trimmed-mean, and retunes a
+        // trimmed-mean config default on its own.
+        let a = Args::parse(["matrix", "--agg-rule", "trimmed-mean"]).unwrap();
+        assert_eq!(
+            agg_from_args(&a, AggPolicy::default()).unwrap().rule,
+            AggRule::TrimmedMean(1)
+        );
+        let trimmed_default =
+            AggPolicy { rule: AggRule::TrimmedMean(1), ..Default::default() };
+        let a = Args::parse(["matrix", "--agg-trim", "3"]).unwrap();
+        assert_eq!(
+            agg_from_args(&a, trimmed_default).unwrap().rule,
+            AggRule::TrimmedMean(3)
+        );
+
+        // --agg-trim without a trimmed-mean rule, unknown rules, and
+        // k = 0 are all named errors at the CLI boundary.
+        let a = Args::parse(["matrix", "--agg-trim", "2"]).unwrap();
+        assert!(agg_from_args(&a, AggPolicy::default()).is_err());
+        let a = Args::parse(["matrix", "--agg-rule", "krum"]).unwrap();
+        assert!(agg_from_args(&a, AggPolicy::default()).is_err());
+        let a = Args::parse(["matrix", "--agg-rule", "trimmed-mean", "--agg-trim", "0"]).unwrap();
+        assert!(agg_from_args(&a, AggPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn adversary_from_args_merges_and_enables() {
+        // No adversary flags: the (disabled) config default passes through.
+        let a = Args::parse(["des"]).unwrap();
+        let plan = adversary_from_args(&a, &AdversaryPlan::default()).unwrap();
+        assert!(!plan.enabled);
+        a.finish().unwrap();
+
+        // Any --adversary-* value enables the plan and sets its field.
+        let a = Args::parse([
+            "des",
+            "--adversary-frac",
+            "0.2",
+            "--adversary-seed",
+            "9",
+            "--adversary-scale",
+            "25.0",
+        ])
+        .unwrap();
+        let plan = adversary_from_args(&a, &AdversaryPlan::default()).unwrap();
+        assert!(plan.enabled);
+        assert_eq!(plan.fraction, 0.2);
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.scale, 25.0);
+        a.finish().unwrap();
+
+        // Bare --adversary enables the config-file plan unchanged.
+        let a = Args::parse(["des", "--adversary"]).unwrap();
+        let base = AdversaryPlan { fraction: 0.35, ..Default::default() };
+        let plan = adversary_from_args(&a, &base).unwrap();
+        assert!(plan.enabled);
+        assert_eq!(plan.fraction, 0.35);
+
+        // Out-of-range fractions are refused at the CLI boundary.
+        let a = Args::parse(["des", "--adversary-frac", "1.5"]).unwrap();
+        assert!(adversary_from_args(&a, &AdversaryPlan::default()).is_err());
+        let a = Args::parse(["des", "--adversary-frac=-0.2"]).unwrap();
+        assert!(adversary_from_args(&a, &AdversaryPlan::default()).is_err());
+    }
+
+    #[test]
+    fn churn_from_args_merges_and_enables() {
+        let a = Args::parse(["des"]).unwrap();
+        let churn = churn_from_args(&a, &ChurnConfig::default()).unwrap();
+        assert!(!churn.enabled);
+        a.finish().unwrap();
+
+        let a = Args::parse([
+            "des",
+            "--churn-drop",
+            "0.2",
+            "--churn-rejoin",
+            "0.6",
+            "--churn-energy",
+            "8",
+            "--churn-seed",
+            "5",
+        ])
+        .unwrap();
+        let churn = churn_from_args(&a, &ChurnConfig::default()).unwrap();
+        assert!(churn.enabled);
+        assert_eq!(churn.drop_p, 0.2);
+        assert_eq!(churn.rejoin_p, 0.6);
+        assert_eq!(churn.energy, 8.0);
+        assert_eq!(churn.seed, 5);
+        a.finish().unwrap();
+
+        let a = Args::parse(["des", "--churn-drop", "2.0"]).unwrap();
+        assert!(churn_from_args(&a, &ChurnConfig::default()).is_err());
     }
 
     #[test]
@@ -587,16 +778,26 @@ mod tests {
             "dense",
         ])
         .unwrap();
-        let spec = spec_from_args(&a, AggPolicy::default(), RunSpec::new().iters(30)).unwrap();
+        let adv = AdversaryPlan::default();
+        let spec = spec_from_args(&a, AggPolicy::default(), &adv, RunSpec::new().iters(30)).unwrap();
         assert_eq!(spec.iters, 5000);
         assert_eq!(spec.inner_threads, 4);
         assert_eq!(spec.agg.path, AggPath::Dense);
+        assert!(!spec.adversary.enabled);
         a.finish().unwrap();
         // Absent flags keep the base spec.
         let a = Args::parse(["des"]).unwrap();
-        let spec = spec_from_args(&a, AggPolicy::default(), RunSpec::new().iters(30)).unwrap();
+        let spec = spec_from_args(&a, AggPolicy::default(), &adv, RunSpec::new().iters(30)).unwrap();
         assert_eq!(spec.iters, 30);
         assert_eq!(spec.inner_threads, 1);
+        // Adversary flags land in the spec's plan.
+        let a = Args::parse(["des", "--adversary-frac", "0.2", "--agg-rule", "coord-median"])
+            .unwrap();
+        let spec = spec_from_args(&a, AggPolicy::default(), &adv, RunSpec::new()).unwrap();
+        assert!(spec.adversary.enabled);
+        assert_eq!(spec.adversary.fraction, 0.2);
+        assert_eq!(spec.agg.rule, AggRule::CoordMedian);
+        a.finish().unwrap();
     }
 
     #[test]

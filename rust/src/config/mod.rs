@@ -525,8 +525,21 @@ pub struct Config {
     /// Aggregation dispatch (`crate::sparse::merge`): sparse k-way merge
     /// vs dense scatter at the SBS/MBS aggregation call sites. `[agg]
     /// path = "auto"|"sparse"|"dense"`, `[agg] crossover = 0.25`; CLI
-    /// override `--agg-path`. Bit-identical for every setting.
+    /// override `--agg-path`. Bit-identical for every setting. The
+    /// consensus statistic (`[agg] rule = "mean"|"trimmed-mean"|
+    /// "coord-median"`, `[agg] trim_k`; CLI `--agg-rule`/`--agg-trim`)
+    /// changes the arithmetic — `mean` is the byte-identical default.
     pub agg: crate::sparse::merge::AggPolicy,
+    /// Byzantine fault injection (`crate::adversary`): a seeded plan
+    /// flipping a fraction of MUs to attacker behaviors at the post-DGC
+    /// uplink boundary. `[adversary]` section / `--adversary-*` CLI
+    /// flags; disabled by default, in which case every engine is the
+    /// untouched honest run.
+    pub adversary: crate::adversary::AdversaryPlan,
+    /// Client churn + energy-budgeted participation for the DES engine
+    /// (`crate::adversary::ChurnConfig`). `[churn]` section / `--churn-*`
+    /// CLI flags; disabled by default.
+    pub churn: crate::adversary::ChurnConfig,
 }
 
 impl Config {
@@ -564,6 +577,8 @@ impl Config {
         self.net.validate().context("net")?;
         self.chaos.validate().context("chaos")?;
         self.agg.validate().context("agg")?;
+        self.adversary.validate().context("adversary")?;
+        self.churn.validate().context("churn")?;
         Ok(())
     }
 
@@ -705,6 +720,41 @@ impl Config {
                 self.agg.path = crate::sparse::merge::AggPath::parse(s)?;
             }
             ("agg", "crossover") => self.agg.crossover = need_f64()?,
+            ("agg", "rule") => {
+                let V::Str(s) = value else {
+                    bail!("expected string");
+                };
+                // Preserve an already-set trim depth across a re-parse.
+                let k = match self.agg.rule {
+                    crate::sparse::merge::AggRule::TrimmedMean(k) => k,
+                    _ => 1,
+                };
+                self.agg.rule = crate::sparse::merge::AggRule::parse(s, k)?;
+            }
+            ("agg", "trim_k") => match self.agg.rule {
+                crate::sparse::merge::AggRule::TrimmedMean(_) => {
+                    self.agg.rule = crate::sparse::merge::AggRule::TrimmedMean(need_usize()?)
+                }
+                _ => bail!("[agg] trim_k requires rule = \"trimmed-mean\" (set rule first)"),
+            },
+            ("adversary", "enabled") => {
+                self.adversary.enabled = value
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
+            ("adversary", "seed") => self.adversary.seed = need_usize()? as u64,
+            ("adversary", "fraction") => self.adversary.fraction = need_f64()?,
+            ("adversary", "scale") => self.adversary.scale = need_f64()? as f32,
+            ("adversary", "garbage_std") => self.adversary.garbage_std = need_f64()? as f32,
+            ("churn", "enabled") => {
+                self.churn.enabled = value
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
+            ("churn", "seed") => self.churn.seed = need_usize()? as u64,
+            ("churn", "drop_p") => self.churn.drop_p = need_f64()?,
+            ("churn", "rejoin_p") => self.churn.rejoin_p = need_f64()?,
+            ("churn", "energy") => self.churn.energy = need_f64()?,
             (s, k) => bail!("unknown config key [{s}] {k}"),
         }
         Ok(())
@@ -878,6 +928,75 @@ mod tests {
             .is_err());
         c.agg.crossover = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn agg_rule_defaults_mean_and_overridable() {
+        use crate::sparse::merge::AggRule;
+        let c = Config::default();
+        assert_eq!(c.agg.rule, AggRule::Mean);
+        let mut c = Config::default();
+        c.apply_override("agg", "rule", &toml::TomlValue::Str("trimmed-mean".into()))
+            .unwrap();
+        assert_eq!(c.agg.rule, AggRule::TrimmedMean(1));
+        c.apply_override("agg", "trim_k", &toml::TomlValue::Int(2)).unwrap();
+        assert_eq!(c.agg.rule, AggRule::TrimmedMean(2));
+        c.apply_override("agg", "rule", &toml::TomlValue::Str("trimmed-mean".into()))
+            .unwrap();
+        assert_eq!(c.agg.rule, AggRule::TrimmedMean(2), "re-parse preserves trim depth");
+        c.validate().unwrap();
+        c.apply_override("agg", "rule", &toml::TomlValue::Str("coord-median".into()))
+            .unwrap();
+        assert_eq!(c.agg.rule, AggRule::CoordMedian);
+        assert!(c.apply_override("agg", "trim_k", &toml::TomlValue::Int(2)).is_err());
+        assert!(c
+            .apply_override("agg", "rule", &toml::TomlValue::Str("krum".into()))
+            .is_err());
+        // k = 0 trimmed-mean is refused at validation, with the section name.
+        let mut c = Config::default();
+        c.agg.rule = AggRule::TrimmedMean(0);
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("agg"), "{err:#}");
+    }
+
+    #[test]
+    fn adversary_and_churn_default_off_and_overridable() {
+        let c = Config::default();
+        assert!(!c.adversary.enabled);
+        assert!(!c.churn.enabled);
+        c.validate().unwrap();
+
+        let mut c = Config::default();
+        c.apply_override("adversary", "enabled", &toml::TomlValue::Bool(true))
+            .unwrap();
+        c.apply_override("adversary", "seed", &toml::TomlValue::Int(11)).unwrap();
+        c.apply_override("adversary", "fraction", &toml::TomlValue::Float(0.25))
+            .unwrap();
+        c.apply_override("adversary", "scale", &toml::TomlValue::Float(5.0))
+            .unwrap();
+        c.apply_override("adversary", "garbage_std", &toml::TomlValue::Float(2.0))
+            .unwrap();
+        assert!(c.adversary.enabled);
+        assert_eq!(c.adversary.seed, 11);
+        assert_eq!(c.adversary.fraction, 0.25);
+        assert_eq!(c.adversary.scale, 5.0);
+        c.validate().unwrap();
+        c.adversary.fraction = 1.5;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("adversary"), "{err:#}");
+
+        let mut c = Config::default();
+        c.apply_override("churn", "enabled", &toml::TomlValue::Bool(true)).unwrap();
+        c.apply_override("churn", "drop_p", &toml::TomlValue::Float(0.2)).unwrap();
+        c.apply_override("churn", "rejoin_p", &toml::TomlValue::Float(0.7)).unwrap();
+        c.apply_override("churn", "energy", &toml::TomlValue::Int(6)).unwrap();
+        assert!(c.churn.enabled);
+        assert_eq!(c.churn.drop_p, 0.2);
+        assert_eq!(c.churn.energy, 6.0);
+        c.validate().unwrap();
+        c.churn.drop_p = -0.5;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("churn"), "{err:#}");
     }
 
     #[test]

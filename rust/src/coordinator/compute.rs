@@ -146,6 +146,7 @@ impl Drop for ComputeService {
 mod tests {
     use super::*;
     use crate::fl::oracle::QuadraticOracle;
+    use anyhow::{anyhow, Result};
 
     #[test]
     fn serves_grad_eval_meta() {
@@ -164,7 +165,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_requests_from_many_threads() {
+    fn concurrent_requests_from_many_threads() -> Result<()> {
         let svc = ComputeService::spawn(|| QuadraticOracle::new(4, 8, 0.0, 2));
         let h = svc.handle();
         let params = Arc::new(vec![0.5f32; 4]);
@@ -175,12 +176,17 @@ mod tests {
                 std::thread::spawn(move || h.grad(w, p))
             })
             .collect();
-        for t in threads {
-            let (loss, grad) = t.join().unwrap();
+        for (worker, t) in threads.into_iter().enumerate() {
+            // Named error instead of re-raising the opaque panic payload —
+            // same join discipline as the coordinator's actor threads.
+            let (loss, grad) = t
+                .join()
+                .map_err(|_| anyhow!("grad requester thread panicked (worker {worker})"))?;
             assert!(loss.is_finite());
             assert_eq!(grad.len(), 4);
         }
         svc.shutdown();
+        Ok(())
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use super::compute::ComputeHandle;
 use super::messages::{MuToSbs, SbsToMu};
 use super::metrics::{LinkKind, MetricEvent, MetricsLog, MetricsSink};
+use crate::adversary::AdversaryPlan;
 use crate::fl::oracle::{EvalMetrics, GradOracle};
 use crate::spec::RunSpec;
 use crate::sparse::{DgcCompressor, SparseVec};
@@ -153,6 +154,9 @@ pub(crate) struct MuContext {
     pub(crate) init: Arc<Vec<f32>>,
     pub(crate) compute: ComputeHandle,
     pub(crate) metrics: MetricsSink,
+    /// Byzantine behavior keyed by the MU's *global* worker id — decisions
+    /// match the sequential and DES engines bit for bit.
+    pub(crate) adversary: AdversaryPlan,
 }
 
 /// MU actor: per-iteration compute → DGC-compress → upload, then apply the
@@ -163,6 +167,9 @@ pub(crate) fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<
     let mut replica: Vec<f32> = (*ctx.init).clone();
     let mut dgc = DgcCompressor::new(ctx.dim, ctx.momentum, ctx.phi_ul);
     let mut msg = SparseVec::empty(ctx.dim);
+    // Stale-replay slot of the Byzantine attack model: the previous honest
+    // post-DGC message (actor-local — each MU owns exactly one uplink).
+    let mut stale: Option<(Vec<u32>, Vec<f32>)> = None;
     for iter in 0..ctx.iters {
         // Compute this iteration's gradient at the current replica.
         let (loss, mut grad) = ctx.compute.grad(ctx.worker, Arc::new(replica.clone()));
@@ -172,6 +179,18 @@ pub(crate) fn mu_actor(ctx: MuContext, inbox: Receiver<SbsToMu>, to_sbs: Sender<
             }
         }
         dgc.step_into(&grad, &mut msg);
+        if ctx.adversary.enabled {
+            // Attack the post-DGC uplink, before bit accounting — the DGC
+            // residual keeps evolving as if the honest update was sent,
+            // exactly like the sequential and DES engines.
+            ctx.adversary.corrupt(
+                ctx.worker as u64,
+                iter as u64,
+                &mut msg.indices,
+                &mut msg.values,
+                &mut stale,
+            );
+        }
         ctx.metrics.emit(MetricEvent {
             iter,
             cluster: ctx.cluster,

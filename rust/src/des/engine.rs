@@ -65,6 +65,7 @@
 //!   ([`crate::des::events::EventQueue`]) with O(1) expected push/pop at
 //!   10⁷-event populations.
 
+use crate::adversary::ChurnConfig;
 use crate::config::Config;
 use crate::des::events::{EventKind, EventQueue, TimelineRecorder};
 use crate::des::mobility::{MobilityProfile, Waypoint};
@@ -74,7 +75,7 @@ use crate::pool::Lease;
 use crate::sim::result::TimelineDigest;
 use crate::snapshot::codec::{get_rng, put_rng, ByteReader, ByteWriter};
 use crate::snapshot::{self, CheckpointSpec};
-use crate::sparse::merge::{self, AggPath, DenseShadow, MergeScratch, ParMergeScratch};
+use crate::sparse::merge::{self, AggPath, AggRule, DenseShadow, MergeScratch, ParMergeScratch};
 use crate::sparse::{DgcKernel, DiscountedError, SparseVec};
 use crate::tensor::{kernels, RowMatrix};
 use crate::topology::{HexLayout, NetworkTopology, Point};
@@ -99,6 +100,10 @@ pub struct DesParams {
     pub compute_scale: f64,
     /// Seed of the per-entity compute/mobility streams.
     pub seed: u64,
+    /// Client churn + energy-budget participation gating (`--churn-*`,
+    /// `[churn]`). Disabled by default; a disabled config is byte-identical
+    /// to the pre-churn engine.
+    pub churn: ChurnConfig,
 }
 
 /// Everything a DES run produces.
@@ -118,6 +123,10 @@ pub struct DesOutcome {
     pub n_late: u64,
     /// MU-rounds skipped because the MU was still transmitting.
     pub n_skipped_rounds: u64,
+    /// `(mu, round)` pairs skipped by the churn/energy gate — departed or
+    /// exhausted MUs that sat out the round. Feeds the golden trace's skip
+    /// digest; empty when churn is disabled (traces unchanged).
+    pub skips: Vec<(usize, usize)>,
 }
 
 /// Link-latency pricing of the current topology snapshot, mirroring the
@@ -367,6 +376,22 @@ struct Sim<'a, O: GradOracle + ?Sized> {
     n_late: u64,
     n_skipped: u64,
     finish_time: f64,
+    // Churn / adversary per-MU state (checkpointed; all empty/identity
+    // when the corresponding feature is disabled).
+    /// Churn liveness per MU: a dropped MU sits out rounds until its
+    /// rejoin draw fires. All-true when churn is disabled.
+    alive: Vec<bool>,
+    /// Energy units spent per MU (1.0 per participated round); once
+    /// `churn.energy` is exhausted the MU departs permanently.
+    energy_spent: Vec<f64>,
+    /// Per-MU stale-replay slots: the previous honest post-DGC message,
+    /// recorded by [`crate::adversary::AdversaryPlan::corrupt`]. Only
+    /// touched in the sequential MU-id reduction, never from fan-out
+    /// lanes.
+    mu_stale: Vec<Option<(Vec<u32>, Vec<f32>)>>,
+    /// `(mu, round)` pairs skipped by the churn/energy gate, in decision
+    /// order (cluster-round start, MU-id order within a cluster).
+    skips: Vec<(usize, usize)>,
 }
 
 /// One MU's DGC accumulators in joint-support sparse form: `indices` is
@@ -533,6 +558,15 @@ fn put_des_fingerprint(
     w.put_usize(cfg.topology.mus_per_cluster);
     w.put_f64(cfg.topology.radius_m);
     w.put_usize(cfg.radio.subcarriers);
+    // Churn gates participation per (seed, mu, round) — trajectory-defining.
+    // (The adversary plan and aggregation rule ride in the RunSpec
+    // fingerprint above.)
+    let ch = &params.churn;
+    w.put_bool(ch.enabled);
+    w.put_u64(ch.seed);
+    w.put_f64(ch.drop_p);
+    w.put_f64(ch.rejoin_p);
+    w.put_f64(ch.energy);
 }
 
 fn check_des_fingerprint(
@@ -584,10 +618,34 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
     }
 
     fn start_round(&mut self, c: usize, round: usize, t: f64) -> Result<()> {
+        let churn = self.params.churn;
         let mut participants = Vec::new();
         for &mu in &self.members[c] {
+            if churn.enabled {
+                // Churn/energy gate, evaluated before the busy gate so the
+                // skip record is independent of radio timing. Decisions are
+                // keyed `(seed, mu, round)` — bit-identical at any thread
+                // count, and replayed identically on resume.
+                if self.alive[mu] {
+                    if churn.drops(mu as u64, round as u64) {
+                        self.alive[mu] = false;
+                    }
+                } else if churn.rejoins(mu as u64, round as u64) {
+                    self.alive[mu] = true;
+                }
+                if !self.alive[mu] || churn.exhausted(self.energy_spent[mu]) {
+                    self.n_skipped += 1;
+                    self.skips.push((mu, round));
+                    continue;
+                }
+            }
             if self.busy_until[mu] <= t {
                 participants.push(mu);
+                if churn.enabled {
+                    // Participation costs one energy unit; an exhausted MU
+                    // sits out every later round (permanent departure).
+                    self.energy_spent[mu] += 1.0;
+                }
             } else {
                 self.n_skipped += 1;
             }
@@ -714,10 +772,22 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                         format!("DES intra-round fan-out (cluster {c}, round {round})")
                     })?;
                 // Ordered reduction in MU-id order — never arrival order.
+                let adversary = self.topts.spec.adversary;
                 for (idx, &mu) in parts.iter().enumerate() {
                     let slot = (round % self.loss_window) * self.k_total + mu;
                     self.round_loss[slot] = losses[idx];
-                    let m = self.par_msgs[idx].lock().unwrap();
+                    let mut m = self.par_msgs[idx].lock().unwrap();
+                    if adversary.enabled {
+                        // Corruption happens here, in the sequential MU-id
+                        // reduction, so fan-out scheduling cannot touch it.
+                        adversary.corrupt(
+                            mu as u64,
+                            round as u64,
+                            &mut m.indices,
+                            &mut m.values,
+                            &mut self.mu_stale[mu],
+                        );
+                    }
                     self.log.bits.mu_ul += m.wire_bits(32);
                     self.log.bits.n_mu_msgs += 1;
                     apply_mu_message(
@@ -737,6 +807,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         if !ran_parallel {
             // Fresh computation + uplink, in MU-id order — never arrival
             // order.
+            let adversary = self.topts.spec.adversary;
             for &mu in &parts {
                 let mut s = self.scratch_pool[0].lock().unwrap();
                 s.ensure_dim(self.dim);
@@ -751,6 +822,18 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
                     .unwrap()
                     .step_from_scratch(&self.kernel, &mut s, &mut self.msg);
                 drop(s);
+                if adversary.enabled {
+                    // Attack the post-DGC uplink message; the honest DGC
+                    // residual above already evolved as if the honest
+                    // update had been sent.
+                    adversary.corrupt(
+                        mu as u64,
+                        round as u64,
+                        &mut self.msg.indices,
+                        &mut self.msg.values,
+                        &mut self.mu_stale[mu],
+                    );
+                }
                 self.log.bits.mu_ul += self.msg.wire_bits(32);
                 self.log.bits.n_mu_msgs += 1;
                 // Bits are spent either way; a late update lands stale
@@ -854,7 +937,7 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         }
         // Ordered reduction in MU-id order — never arrival order. The
         // fan-out guards stay alive so the merge can borrow the messages.
-        let guards: Vec<std::sync::MutexGuard<'_, SparseVec>> = if ran_parallel {
+        let mut guards: Vec<std::sync::MutexGuard<'_, SparseVec>> = if ran_parallel {
             parts
                 .iter()
                 .enumerate()
@@ -863,6 +946,23 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         } else {
             Vec::new()
         };
+        let adversary = self.topts.spec.adversary;
+        if adversary.enabled {
+            // Corrupt the post-DGC messages in MU-id order before any bit
+            // accounting or aggregation — identical placement to the
+            // streaming path, so the attack stream is path-independent.
+            for (idx, &mu) in parts.iter().enumerate() {
+                let m: &mut SparseVec =
+                    if ran_parallel { &mut guards[idx] } else { &mut self.seq_msgs[idx] };
+                adversary.corrupt(
+                    mu as u64,
+                    round as u64,
+                    &mut m.indices,
+                    &mut m.values,
+                    &mut self.mu_stale[mu],
+                );
+            }
+        }
         let mut agg_parts: Vec<(&SparseVec, f32)> =
             Vec::with_capacity(landed.len() + parts.len());
         for (m, w) in &landed {
@@ -1168,6 +1268,27 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         w.put_u64(self.n_late);
         w.put_u64(self.n_skipped);
         w.put_f64(self.finish_time);
+        // Churn / adversary state. All-default when both features are off,
+        // costing a few bytes per MU; the stale-replay slots are sparse.
+        for &a in &self.alive {
+            w.put_bool(a);
+        }
+        w.put_f64_slice(&self.energy_spent);
+        for s in &self.mu_stale {
+            match s {
+                Some((si, sv)) => {
+                    w.put_bool(true);
+                    w.put_u32_slice(si);
+                    w.put_f32_slice(sv);
+                }
+                None => w.put_bool(false),
+            }
+        }
+        w.put_usize(self.skips.len());
+        for &(mu, rd) in &self.skips {
+            w.put_usize(mu);
+            w.put_usize(rd);
+        }
         let blob = self
             .oracle
             .export_state()
@@ -1330,6 +1451,33 @@ impl<O: GradOracle + ?Sized> Sim<'_, O> {
         self.n_late = r.get_u64()?;
         self.n_skipped = r.get_u64()?;
         self.finish_time = r.get_f64()?;
+        for a in self.alive.iter_mut() {
+            *a = r.get_bool()?;
+        }
+        let energy_spent = r.get_f64_vec()?;
+        if energy_spent.len() != self.k_total {
+            bail!("snapshot energy vector has the wrong length");
+        }
+        self.energy_spent = energy_spent;
+        for s in self.mu_stale.iter_mut() {
+            *s = if r.get_bool()? {
+                let si = r.get_u32_vec()?;
+                let sv = r.get_f32_vec()?;
+                if si.len() != sv.len() {
+                    bail!("corrupt stale-replay slot in snapshot (nnz mismatch)");
+                }
+                Some((si, sv))
+            } else {
+                None
+            };
+        }
+        let n_skips = r.get_usize()?;
+        self.skips.clear();
+        for _ in 0..n_skips {
+            let mu = r.get_usize()?;
+            let rd = r.get_usize()?;
+            self.skips.push((mu, rd));
+        }
         let blob = r.get_bytes()?;
         self.oracle
             .import_state(&blob)
@@ -1541,6 +1689,19 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
             cfg.topology.mus_per_cluster
         );
     }
+    topts.agg.validate().context("aggregation policy")?;
+    topts
+        .agg
+        .validate_participants(k_total / n)
+        .context("round aggregation (MUs per cluster)")?;
+    if n > 1 {
+        topts
+            .agg
+            .validate_participants(n)
+            .context("H-sync aggregation (clusters)")?;
+    }
+    topts.spec.adversary.validate().context("adversary plan")?;
+    params.churn.validate().context("churn config")?;
 
     let topo = NetworkTopology::generate(&cfg.topology);
     let flat = n == 1;
@@ -1647,8 +1808,13 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
     // only when a sparse merge could ever win (φ > 0 on the link and the
     // path is not forced dense) — otherwise the historical streaming
     // scatter runs byte for byte with no extra buffers.
-    let collect_agg = phi_ul > 0.0 && topts.agg.path != AggPath::Dense;
-    let collect_sync = phi_sul > 0.0 && topts.agg.path != AggPath::Dense;
+    // Robust rules always collect: trimming/medianing needs every
+    // participant's value per coordinate, which the streaming scatter
+    // cannot provide.
+    let collect_agg = (phi_ul > 0.0 && topts.agg.path != AggPath::Dense)
+        || topts.agg.rule != AggRule::Mean;
+    let collect_sync = (phi_sul > 0.0 && topts.agg.path != AggPath::Dense)
+        || topts.agg.rule != AggRule::Mean;
     let sync_msgs: Vec<SparseVec> = if collect_sync {
         (0..n).map(|_| SparseVec::empty(dim)).collect()
     } else {
@@ -1726,6 +1892,10 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         n_late: 0,
         n_skipped: 0,
         finish_time: 0.0,
+        alive: vec![true; k_total],
+        energy_spent: vec![0.0; k_total],
+        mu_stale: (0..k_total).map(|_| None).collect(),
+        skips: Vec::new(),
     };
     let resumed = if let Some(path) = resume {
         let payload = snapshot::read_snapshot(path, snapshot::ENGINE_DES)
@@ -1753,6 +1923,7 @@ pub fn run_des_checkpointed<O: GradOracle + ?Sized>(
         n_handovers: sim.n_handovers,
         n_late: sim.n_late,
         n_skipped_rounds: sim.n_skipped,
+        skips: sim.skips,
         log: sim.log,
     })
 }
@@ -1795,6 +1966,7 @@ mod tests {
             compute: ComputeProfile::none(),
             compute_scale: 1.0,
             seed: 99,
+            churn: ChurnConfig::default(),
         }
     }
 
@@ -1874,6 +2046,7 @@ mod tests {
                 compute: ComputeProfile { mean_s: 0.5, het: 0.5 },
                 compute_scale: 1.0,
                 seed: 1234,
+                churn: ChurnConfig::default(),
             };
             let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 55);
             run_des(&mut oracle, &cfg, &params).unwrap()
@@ -1896,6 +2069,7 @@ mod tests {
                 compute: ComputeProfile { mean_s: 0.5, het: 0.5 },
                 compute_scale: 1.0,
                 seed: 0,
+                churn: ChurnConfig::default(),
             }
         };
         let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 55);
@@ -1914,6 +2088,7 @@ mod tests {
             compute: ComputeProfile::none(),
             compute_scale: 1.0,
             seed: 31,
+            churn: ChurnConfig::default(),
         };
         let mut oracle = QuadraticOracle::new_skewed(8, 8, 0.0, 1.0, 31);
         let out = run_des(&mut oracle, &cfg, &params).unwrap();
@@ -1938,6 +2113,7 @@ mod tests {
                 compute: ComputeProfile::none(),
                 compute_scale: 1.0,
                 seed: 77,
+                churn: ChurnConfig::default(),
             };
             let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 77);
             run_des(&mut oracle, &cfg, &params).unwrap()
@@ -1969,6 +2145,7 @@ mod tests {
                 compute: ComputeProfile::none(),
                 compute_scale: 1.0,
                 seed: 5,
+                churn: ChurnConfig::default(),
             };
             let mut oracle = QuadraticOracle::new_skewed(10, 8, 0.0, 1.0, 5);
             run_des(&mut oracle, &cfg, &params).unwrap()
@@ -2000,6 +2177,7 @@ mod tests {
                 compute: ComputeProfile { mean_s: 0.4, het: 0.5 },
                 compute_scale: 1.0,
                 seed: 2222,
+                churn: ChurnConfig::default(),
             };
             let mut oracle = QuadraticOracle::new_skewed(14, 8, 0.0, 1.0, 66);
             run_des(&mut oracle, &cfg, &params).unwrap()
@@ -2040,6 +2218,7 @@ mod tests {
                 compute: ComputeProfile { mean_s: 0.4, het: 0.5 },
                 compute_scale: 1.0,
                 seed: 4711,
+                churn: ChurnConfig::default(),
             };
             let mut oracle = QuadraticOracle::new_skewed(14, 8, 0.0, 1.0, 66);
             run_des(&mut oracle, &cfg, &params).unwrap()
@@ -2096,6 +2275,7 @@ mod tests {
                 compute: ComputeProfile { mean_s: 0.4, het: 0.6 },
                 compute_scale: 1.0,
                 seed: 2024,
+                churn: ChurnConfig::default(),
             }
         };
         let make_oracle = || QuadraticOracle::new_skewed(12, 8, 0.01, 1.0, 909);
@@ -2210,6 +2390,190 @@ mod tests {
                     "support must stay strictly sorted"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn churn_skips_are_deterministic_and_thread_independent() {
+        // Churn draws are keyed (seed, mu, round) on the event-loop thread,
+        // so the skip record — and everything downstream of survivor
+        // reweighting — must be bit-identical at any fan-out width.
+        let cfg = cfg_for(2, 4);
+        let run = |inner: usize| {
+            let mut topts = topts_for(&cfg, 12);
+            topts.inner_threads = inner;
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Static,
+                straggler: StragglerPolicy::WaitForAll,
+                compute: ComputeProfile::none(),
+                compute_scale: 1.0,
+                seed: 606,
+                churn: ChurnConfig {
+                    enabled: true,
+                    seed: 606,
+                    drop_p: 0.3,
+                    rejoin_p: 0.5,
+                    energy: 0.0,
+                },
+            };
+            let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 606);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let seq = run(1);
+        assert!(!seq.skips.is_empty(), "drop_p=0.3 over 12 rounds must skip someone");
+        for inner in [2usize, 8] {
+            let par = run(inner);
+            assert_eq!(par.skips, seq.skips, "inner={inner}");
+            assert_eq!(par.timeline, seq.timeline, "inner={inner}");
+            assert_eq!(
+                bits_f32(&par.log.final_params),
+                bits_f32(&seq.log.final_params),
+                "inner={inner}"
+            );
+            assert_eq!(par.log.bits, seq.log.bits, "inner={inner}");
+        }
+    }
+
+    #[test]
+    fn energy_budget_forces_permanent_departure() {
+        // With a 3-round energy budget and no random churn, every MU
+        // participates exactly 3 times and then departs for good.
+        let cfg = cfg_for(2, 4);
+        let iters = 10usize;
+        let topts = topts_for(&cfg, iters);
+        let params = DesParams {
+            topts,
+            mobility: MobilityProfile::Static,
+            straggler: StragglerPolicy::WaitForAll,
+            compute: ComputeProfile::none(),
+            compute_scale: 1.0,
+            seed: 17,
+            churn: ChurnConfig {
+                enabled: true,
+                seed: 17,
+                drop_p: 0.0,
+                rejoin_p: 0.0,
+                energy: 3.0,
+            },
+        };
+        let mut oracle = QuadraticOracle::new_skewed(10, 8, 0.0, 1.0, 17);
+        let out = run_des(&mut oracle, &cfg, &params).unwrap();
+        // 8 MUs × (10 − 3) post-budget rounds all land in the skip record.
+        assert_eq!(out.skips.len(), 8 * (iters - 3));
+        assert!(out.skips.iter().all(|&(_, r)| r >= 3), "budget covers rounds 0..3");
+    }
+
+    #[test]
+    fn disabled_churn_is_byte_identical_to_pre_churn_engine() {
+        // A disabled churn config — whatever its other knobs say — must not
+        // move a single bit or record a single skip.
+        let cfg = cfg_for(2, 4);
+        let run = |churn: ChurnConfig| {
+            let topts = topts_for(&cfg, 10);
+            let params = DesParams {
+                topts,
+                mobility: MobilityProfile::Static,
+                straggler: StragglerPolicy::WaitForAll,
+                compute: ComputeProfile::none(),
+                compute_scale: 1.0,
+                seed: 23,
+                churn,
+            };
+            let mut oracle = QuadraticOracle::new_skewed(10, 8, 0.0, 1.0, 23);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let base = run(ChurnConfig::default());
+        let off = run(ChurnConfig {
+            enabled: false,
+            seed: 1,
+            drop_p: 0.9,
+            rejoin_p: 0.1,
+            energy: 1.0,
+        });
+        assert!(base.skips.is_empty());
+        assert_eq!(off.skips, base.skips);
+        assert_eq!(off.timeline, base.timeline);
+        assert_eq!(bits_f32(&off.log.final_params), bits_f32(&base.log.final_params));
+        assert_eq!(off.log.bits, base.log.bits);
+    }
+
+    #[test]
+    fn adversary_changes_trajectory_deterministically_in_des() {
+        // A 25% attacker population must move the trajectory, reproduce
+        // bit-exactly across reruns and fan-out widths, and leave the
+        // honest run untouched when disabled.
+        let cfg = cfg_for(2, 4);
+        let run = |enabled: bool, inner: usize| {
+            let mut topts = topts_for(&cfg, 12);
+            topts.inner_threads = inner;
+            topts.spec.adversary = crate::adversary::AdversaryPlan {
+                enabled,
+                seed: 404,
+                fraction: 0.25,
+                scale: 10.0,
+                garbage_std: 1.0,
+            };
+            let params = static_params(topts);
+            let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 404);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let honest = run(false, 1);
+        let attacked = run(true, 1);
+        assert_ne!(
+            bits_f32(&honest.log.final_params),
+            bits_f32(&attacked.log.final_params),
+            "25% attackers must perturb the model"
+        );
+        // Radio timing is untouched: the attack corrupts message values,
+        // not the event schedule.
+        assert_eq!(honest.timeline, attacked.timeline);
+        for inner in [2usize, 8] {
+            let again = run(true, inner);
+            assert_eq!(
+                bits_f32(&again.log.final_params),
+                bits_f32(&attacked.log.final_params),
+                "inner={inner}"
+            );
+            assert_eq!(again.log.bits, attacked.log.bits, "inner={inner}");
+        }
+    }
+
+    #[test]
+    fn robust_rules_run_under_attack_in_des() {
+        // TrimmedMean/CoordMedian must run end-to-end in the DES under an
+        // active attack, stay bit-reproducible, and differ from plain Mean.
+        let cfg = cfg_for(2, 4);
+        let run = |rule: crate::sparse::AggRule| {
+            let mut topts = topts_for(&cfg, 12);
+            topts.agg = crate::sparse::AggPolicy { rule, ..Default::default() };
+            topts.spec.adversary = crate::adversary::AdversaryPlan {
+                enabled: true,
+                seed: 505,
+                fraction: 0.25,
+                scale: 10.0,
+                garbage_std: 1.0,
+            };
+            let params = static_params(topts);
+            let mut oracle = QuadraticOracle::new_skewed(12, 8, 0.0, 1.0, 505);
+            run_des(&mut oracle, &cfg, &params).unwrap()
+        };
+        let mean = run(crate::sparse::AggRule::Mean);
+        for rule in
+            [crate::sparse::AggRule::TrimmedMean(1), crate::sparse::AggRule::CoordMedian]
+        {
+            let robust = run(rule);
+            let robust2 = run(rule);
+            assert_eq!(
+                bits_f32(&robust.log.final_params),
+                bits_f32(&robust2.log.final_params),
+                "{rule:?} must be reproducible"
+            );
+            assert_ne!(
+                bits_f32(&robust.log.final_params),
+                bits_f32(&mean.log.final_params),
+                "{rule:?} must actually change the aggregate under attack"
+            );
         }
     }
 }

@@ -34,6 +34,14 @@ pub fn run_des_cell(
         QuadraticOracle::new_skewed(opts.dim, workers, opts.grad_noise, sc.skew, oracle_seed);
     let topts = cell_train_options(cfg, sc, opts);
     let scfg = scenario_config(cfg, sc);
+    // The cell's churn axis (when non-default) overrides the base config's
+    // drop rate and switches the gate on — mirroring how the adversary and
+    // rule axes compose with the base spec in `cell_train_options`.
+    let mut churn = opts.churn;
+    if sc.churn_drop > 0.0 {
+        churn.enabled = true;
+        churn.drop_p = sc.churn_drop;
+    }
     let params = DesParams {
         topts,
         mobility: sc.mobility.clone(),
@@ -44,6 +52,7 @@ pub fn run_des_cell(
         },
         compute_scale: sc.profile.straggler_factor,
         seed: des_seed,
+        churn,
     };
     let outcome = run_des(&mut oracle, &scfg, &params)?;
     Ok(result_from_outcome(sc, &outcome))
@@ -63,5 +72,6 @@ pub fn result_from_outcome(sc: &MatrixScenario, out: &DesOutcome) -> ScenarioRes
     let mut result =
         ScenarioResult::from_train_log(meta, Engine::Des, out.per_iter_s, &out.log);
     result.trace.timeline = Some(out.timeline);
+    result.trace.skips = crate::sim::result::SkipDigest::from_skips(&out.skips);
     result
 }

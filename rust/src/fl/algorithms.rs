@@ -69,11 +69,12 @@
 
 use super::lr_schedule::LrSchedule;
 use super::oracle::{EvalMetrics, GradOracle, ParGradOracle};
+use crate::adversary::AdversaryPlan;
 use crate::config::SparsityConfig;
 use crate::snapshot::codec::{ByteReader, ByteWriter};
 use crate::snapshot::{self, CheckpointSpec};
 use crate::spec::RunSpec;
-use crate::sparse::merge::{self, AggPath, AggPolicy, DenseShadow, MergeScratch};
+use crate::sparse::merge::{self, AggPath, AggPolicy, AggRule, DenseShadow, MergeScratch};
 use crate::sparse::{DgcKernel, DiscountKernel, SparseVec};
 use crate::tensor::{kernels, padded, TensorArena};
 use anyhow::{bail, Context};
@@ -219,6 +220,10 @@ struct Lane<'a> {
     /// Keeps the lane's dense `agg` chunk bit-identical to the reference
     /// `zero → scatter → scale(−lr)` sequence on the sparse path.
     shadow: DenseShadow,
+    /// Per-worker stale-replay slots for the adversary plan: the last
+    /// *honest* post-DGC message each attacker produced (empty vectors of
+    /// `None` when the plan is disabled — no per-round cost).
+    stale: Vec<Option<(Vec<u32>, Vec<f32>)>>,
 }
 
 /// Named disjoint views into one lane, split on demand.
@@ -333,7 +338,14 @@ struct ClusterOut {
 /// writes it through the lane's [`DenseShadow`] (−0.0 baseline), so the
 /// DL encoder reads a bit-identical buffer either way. With φ_ul = 0 the
 /// messages are dense by construction and the streaming single-buffer
-/// path is kept as-is — no per-worker message storage.
+/// path is kept as-is — no per-worker message storage. A robust consensus
+/// rule (`agg.rule != Mean`) always forces the per-worker collect path:
+/// trimming/medians need every participant's value at each coordinate.
+///
+/// The adversary hook sits at the uplink boundary: an attacker's message
+/// is corrupted *after* `step_into` (so its DGC error feedback evolves as
+/// if the honest values were sent) and *before* `wire_bits` (so the wire
+/// is priced on what actually travels).
 #[allow(clippy::too_many_arguments)]
 fn round_cluster<R: RoundOracle>(
     oracle: &mut R,
@@ -342,11 +354,13 @@ fn round_cluster<R: RoundOracle>(
     per_cluster: usize,
     dim: usize,
     pad: usize,
+    t: usize,
     lr: f32,
     weight_decay: f32,
     dgc_kernel: DgcKernel,
     dl_kernel: DiscountKernel,
     agg: AggPolicy,
+    adversary: &AdversaryPlan,
 ) -> ClusterOut {
     let lv = lane_view(&mut *lane.buf, pad, dim);
     let mut out = ClusterOut {
@@ -355,7 +369,8 @@ fn round_cluster<R: RoundOracle>(
         dl_bits: 0.0,
     };
     // --- Computation and Uplink (Alg. 5 lines 7–18) ---
-    let streaming = dgc_kernel.phi == 0.0 || agg.path == AggPath::Dense;
+    let streaming =
+        (dgc_kernel.phi == 0.0 || agg.path == AggPath::Dense) && agg.rule == AggRule::Mean;
     if streaming {
         kernels::zero(lv.agg);
     }
@@ -371,6 +386,15 @@ fn round_cluster<R: RoundOracle>(
         let (u, v) = lv.dgc[base..base + 2 * pad].split_at_mut(pad);
         let msg = &mut lane.msgs[if streaming { 0 } else { j }];
         dgc_kernel.step_into(lv.grad, &mut u[..dim], &mut v[..dim], lv.qscratch, msg);
+        if adversary.enabled {
+            adversary.corrupt(
+                k as u64,
+                t as u64,
+                &mut msg.indices,
+                &mut msg.values,
+                &mut lane.stale[j],
+            );
+        }
         out.mu_bits.push(msg.wire_bits(32));
         if streaming {
             msg.add_into(lv.agg, 1.0 / per_cluster as f32);
@@ -515,7 +539,7 @@ fn check_fl_fingerprint(
 /// module docs for the layout and the contract).
 pub fn run_hierarchical<O: GradOracle + ?Sized>(oracle: &mut O, opts: &TrainOptions) -> TrainLog {
     run_hierarchical_checkpointed(oracle, opts, None, None)
-        .expect("engine without checkpoint IO cannot fail")
+        .expect("invalid training configuration (no checkpoint IO in this path)")
 }
 
 /// [`run_hierarchical`] with checkpoint/resume: with `ckpt` set, the full
@@ -543,6 +567,19 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
         "workers ({k_total}) must divide evenly into clusters ({n}) — Assumption 1"
     );
     let per_cluster = k_total / n;
+    // Refuse impossible configurations up front with named errors: a
+    // trimmed mean that would discard every participant at either
+    // aggregation site, or a malformed adversary plan.
+    opts.agg.validate().context("aggregation policy")?;
+    opts.agg
+        .validate_participants(per_cluster)
+        .context("round aggregation (MUs per cluster)")?;
+    if n > 1 {
+        opts.agg
+            .validate_participants(n)
+            .context("H-sync aggregation (clusters)")?;
+    }
+    opts.adversary.validate().context("adversary plan")?;
 
     let (phi_ul, phi_sdl, phi_sul, phi_mdl) = if opts.sparsity.enabled {
         (
@@ -578,8 +615,11 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
     let (lane_chunks, global_buf) = arena.split_lanes_mut(n, lane_stride);
     // The sparse-merge path needs every worker's message live at once;
     // with φ_ul = 0 (dense messages) or a forced dense path the streaming
-    // single-buffer flow is kept, so only slot 0 ever grows.
-    let collect_msgs = phi_ul > 0.0 && opts.agg.path != AggPath::Dense;
+    // single-buffer flow is kept, so only slot 0 ever grows. A robust
+    // consensus rule needs every participant's value per coordinate, so
+    // it forces the collect path regardless of density.
+    let collect_msgs =
+        (phi_ul > 0.0 && opts.agg.path != AggPath::Dense) || opts.agg.rule != AggRule::Mean;
     let lane_msg_slots = if collect_msgs { per_cluster } else { 1 };
     let lanes: Vec<Mutex<Lane<'_>>> = lane_chunks
         .into_iter()
@@ -592,6 +632,7 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
                 agg_sparse: SparseVec::empty(dim),
                 merge_scratch: MergeScratch::default(),
                 shadow: DenseShadow::new(),
+                stale: vec![None; per_cluster],
             })
         })
         .collect();
@@ -600,7 +641,9 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
     let mut sync_msg = SparseVec::empty(dim);
     // Per-cluster sync messages, merged consensus, and shadow bookkeeping
     // of the H-sync aggregation (sparse path only; see the sync block).
-    let collect_sync = phi_sul > 0.0 && opts.agg.path != AggPath::Dense;
+    // Robust rules force the collect path here too.
+    let collect_sync =
+        (phi_sul > 0.0 && opts.agg.path != AggPath::Dense) || opts.agg.rule != AggRule::Mean;
     let mut sync_msgs: Vec<SparseVec> = if collect_sync {
         (0..n).map(|_| SparseVec::empty(dim)).collect()
     } else {
@@ -658,6 +701,13 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
                 r.get_f32_into(&mut u[..dim])?;
                 r.get_f32_into(&mut v[..dim])?;
             }
+            for s in lane.stale.iter_mut() {
+                *s = if r.get_bool()? {
+                    Some((r.get_u32_vec()?, r.get_f32_vec()?))
+                } else {
+                    None
+                };
+            }
             // The restored agg chunk no longer matches the shadow's −0.0
             // baseline bookkeeping; force the next sparse-path write to
             // re-zero it.
@@ -698,11 +748,13 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
                         per_cluster,
                         dim,
                         pad,
+                        t,
                         lr,
                         opts.weight_decay,
                         dgc_kernel,
                         dl_kernel,
                         opts.agg,
+                        &opts.adversary,
                     )
                 })
                 .expect("intra-round fan-out pool failed")
@@ -717,11 +769,13 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
                     per_cluster,
                     dim,
                     pad,
+                    t,
                     lr,
                     opts.weight_decay,
                     dgc_kernel,
                     dl_kernel,
                     opts.agg,
+                    &opts.adversary,
                 ));
             }
             seq
@@ -827,6 +881,17 @@ pub fn run_hierarchical_checkpointed<O: GradOracle + ?Sized>(
                         let (u, v) = lv.dgc[base..base + 2 * pad].split_at(pad);
                         w.put_f32_slice(&u[..dim]);
                         w.put_f32_slice(&v[..dim]);
+                    }
+                    // Adversary stale-replay slots are real per-MU state.
+                    for s in &lane.stale {
+                        match s {
+                            Some((si, sv)) => {
+                                w.put_bool(true);
+                                w.put_u32_slice(si);
+                                w.put_f32_slice(sv);
+                            }
+                            None => w.put_bool(false),
+                        }
                     }
                 }
                 w.put_f32_slice(&g.w_global[..]);

@@ -24,12 +24,13 @@
 //! | module | contents |
 //! |--------|----------|
 //! | [`util`] | RNG (PCG64 + per-scenario streams), special functions (E1), quickselect, stats, CSV/JSON emitters, logger, microbench |
+//! | [`adversary`] | **Byzantine clients + churn**: seeded `AdversaryPlan` (sign-flip / scaled / Gaussian-garbage / stale-replay at the post-DGC uplink boundary, keyed `(seed, mu, round)` streams) and `ChurnConfig` (drop/rejoin/energy-budget participation gating for the DES) |
 //! | [`config`] | typed configuration + TOML-subset parser + paper presets (Table II) + DES knobs (`[des]`) |
 //! | [`cli`] | dependency-free argument parser and subcommand dispatch |
 //! | [`topology`] | hexagonal clusters, frequency-reuse coloring, MU placement, nearest-SBS association |
 //! | [`wireless`] | channel model, power control, M-QAM rates, Algorithm 2, broadcast, latency |
 //! | [`sparse`] | DGC sparsification, sparse codec + bit accounting + delta-packed `SparseWire`, error accumulation — owning structs + stateless arena kernels |
-//! | [`sparse::merge`] | **sparse-first aggregation**: allocation-free k-way merge consensus (O(Σnnz·log k), bit-identical to the MU-ordered dense scatter), pool-parallel range variant, density-adaptive dispatch (`--agg-path`, `[agg]`), −0.0-exact `DenseShadow` |
+//! | [`sparse::merge`] | **sparse-first aggregation + robust consensus**: allocation-free k-way merge (O(Σnnz·log k), bit-identical to the MU-ordered dense scatter), `AggRule::{Mean, TrimmedMean(k), CoordMedian}` on the same sorted-coordinate frontier (`--agg-rule`), pool-parallel range variant, density-adaptive dispatch (`--agg-path`, `[agg]`), −0.0-exact `DenseShadow` |
 //! | [`tensor`] | **flat tensor arenas + fused kernels**: one cache-aligned allocation for all per-cluster/per-worker hot-path state, bit-exact axpy/scale/scatter kernels, lane splitting for the intra-round fan-out |
 //! | [`pool`] | **persistent deterministic worker pool**: condvar-parked lanes created once per process, per-batch work-stealing queues, ordered-slot reduction, nested leases for the fl/des engines, panic propagation with item context |
 //! | [`fl`] | optimizers, LR schedule, Algorithms 1 / 3 / 4 / 5 on the tensor arena with deterministic per-cluster fan-out (`inner_threads`, leased from [`pool`]), quadratic oracles (IID→non-IID skew) |
@@ -66,6 +67,7 @@
 //! pool's ordered-slot reduction preserves the exact contract above for
 //! every pool size and lease width.
 
+pub mod adversary;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

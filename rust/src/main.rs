@@ -9,12 +9,17 @@
 //!               [--iters N] [--h N] [--clusters N] [--mus N]
 //!               [--inner-threads N] [--pool-threads N]
 //!               [--agg-path auto|sparse|dense]
+//!               [--agg-rule mean|trimmed-mean|coord-median] [--agg-trim K]
+//!               [--adversary] [--adversary-frac F] [--adversary-seed S]
+//!               [--adversary-scale X] [--adversary-garbage-std G]
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--coordinated]                                train on the AOT model
 //! hfl table3    [--full]                                       Fig. 6 / Table III study
-//! hfl matrix    [--quick|--full] [--threads N] [--inner-threads N]
+//! hfl matrix    [--quick|--full|--adversarial] [--threads N] [--inner-threads N]
 //!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
 //!               [--agg-path auto|sparse|dense]
+//!               [--agg-rule mean|trimmed-mean|coord-median] [--agg-trim K]
+//!               [--adversary…] [--churn…  same flags as des]
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
 //!                                                              scenario-matrix sweep
@@ -22,6 +27,11 @@
 //!               [--pool-threads N] [--iters N] [--dim N] [--phi F]
 //!               [--mus N] [--cells N]
 //!               [--agg-path auto|sparse|dense]
+//!               [--agg-rule mean|trimmed-mean|coord-median] [--agg-trim K]
+//!               [--adversary] [--adversary-frac F] [--adversary-seed S]
+//!               [--adversary-scale X] [--adversary-garbage-std G]
+//!               [--churn] [--churn-drop P] [--churn-rejoin P]
+//!               [--churn-energy E] [--churn-seed S]
 //!               [--compute-mean S] [--compute-het X]
 //!               [--checkpoint-every N] [--checkpoint PATH] [--resume PATH]
 //!               [--out results/] [--write-golden F] [--check-golden F]
@@ -35,6 +45,8 @@
 //!               [--session-log P] [--dim N] [--iters N] [--phi F]
 //!               [--clusters N] [--mus N] [--h N] [--seed S]
 //!               [--agg-path auto|sparse|dense]
+//!               [--agg-rule mean|trimmed-mean|coord-median] [--agg-trim K]
+//!               [--adversary…  same Byzantine-plan flags as train]
 //!               [--io-timeout-ms N] [--rejoin-deadline-ms N]
 //!               [--fault-policy wait-all|deadline-skip|quorum] [--fault-quorum K]
 //!               [--chaos] [--chaos-seed S] [--chaos-drop P] [--chaos-delay P]
@@ -47,6 +59,8 @@
 //! hfl worker    [--connect A] [--cluster C] [--dim N] [--iters N]
 //!               [--phi F] [--clusters N] [--mus N] [--h N] [--seed S]
 //!               [--agg-path auto|sparse|dense]
+//!               [--agg-rule mean|trimmed-mean|coord-median] [--agg-trim K]
+//!               [--adversary…  same Byzantine-plan flags as serve]
 //!               [--io-timeout-ms N] [--rejoin N] [--rejoining]
 //!               [--chaos…  same fault-plan flags as serve]
 //!                                  one SBS+MUs cell against a serving MBS
@@ -77,6 +91,20 @@
 //! `hfl::sparse::merge`). `--phi F` pins the grid's sparsity axis to a
 //! single φ cell (the CI determinism job uses it for the φ=0.99
 //! sparse-vs-dense diff).
+//!
+//! `--agg-rule` picks the consensus rule on the merged coordinates —
+//! `mean` (the weighted fold; default), `trimmed-mean` with `--agg-trim K`
+//! extremes dropped per side, or `coord-median` — and, unlike the path,
+//! changes the arithmetic, so it is part of the snapshot/handshake
+//! fingerprint. The `--adversary-*` flags arm a seeded Byzantine plan
+//! (`hfl::adversary`, `[adversary]` config section): a deterministic
+//! fraction of MUs per round sends sign-flipped, amplified, garbage or
+//! stale-replay uplinks, drawn from `Pcg64` streams keyed
+//! `(seed, mu, round)` — same seed ⇒ bit-identical attack at any thread
+//! count. `--churn-*` (DES cells only, `[churn]` config section) adds
+//! seeded client churn: MUs drop, rejoin and exhaust a per-MU energy
+//! budget; skipped (mu, round) pairs land in the golden trace's skip
+//! digest. See README §Robust aggregation.
 //!
 //! The `--chaos-*` flags arm a seeded deterministic fault plan
 //! (`hfl::net::chaos`, `[chaos]` config section) on serve and worker
@@ -298,6 +326,7 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
     let spec = hfl::cli::spec_from_args(
         args,
         cfg.agg,
+        &cfg.adversary,
         RunSpec::new()
             .iters(iters)
             .peak_lr(cfg.training.scaled_lr(workers))
@@ -408,17 +437,24 @@ fn cmd_table3(args: &Args, cfg: &Config) -> Result<()> {
 fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
     let _quick = args.flag("quick"); // the default grid; flag kept for symmetry
     let full = args.flag("full");
+    // The robustness demonstration grid: 3 aggregation rules × honest/20%
+    // attackers × churn off/on (`ScenarioSpec::adversarial`, trim k = 1).
+    let adversarial = args.flag("adversarial");
     let threads = args.get_parsed_or("threads", 0usize)?;
     let dim = hfl::cli::count_from_args(args, "dim")?;
     let golden = hfl::cli::GoldenArgs::from_args(args);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let phi_pin = hfl::cli::phi_from_args(args)?;
-    let rspec = hfl::cli::spec_from_args(args, cfg.agg, MatrixOptions::default().spec)?
-        .pool(dedicated_pool.as_ref().map(|p| p.handle()));
+    let rspec =
+        hfl::cli::spec_from_args(args, cfg.agg, &cfg.adversary, MatrixOptions::default().spec)?
+            .pool(dedicated_pool.as_ref().map(|p| p.handle()));
+    let churn = hfl::cli::churn_from_args(args, &cfg.churn)?;
     let (ckpt, resume) = checkpoint_from_args(args, cfg, "matrix_runlog.jsonl")?;
     args.finish()?;
 
-    let mut spec = if full {
+    let mut spec = if adversarial {
+        ScenarioSpec::adversarial(1)
+    } else if full {
         ScenarioSpec::full_with(&cfg.des)
     } else {
         ScenarioSpec::quick_with(&cfg.des)
@@ -432,6 +468,7 @@ fn cmd_matrix(args: &Args, cfg: &Config) -> Result<()> {
         base_seed: cfg.training.seed,
         compute_mean_s: cfg.des.compute_mean_s,
         compute_het: cfg.des.compute_het,
+        churn,
         ..Default::default()
     };
     if let Some(d) = dim {
@@ -471,8 +508,10 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
     let golden = hfl::cli::GoldenArgs::from_args(args);
     let dedicated_pool = hfl::cli::pool_from_args(args, cfg.pool.threads)?;
     let phi_pin = hfl::cli::phi_from_args(args)?;
-    let rspec = hfl::cli::spec_from_args(args, cfg.agg, MatrixOptions::default().spec)?
-        .pool(dedicated_pool.as_ref().map(|p| p.handle()));
+    let rspec =
+        hfl::cli::spec_from_args(args, cfg.agg, &cfg.adversary, MatrixOptions::default().spec)?
+            .pool(dedicated_pool.as_ref().map(|p| p.handle()));
+    let churn = hfl::cli::churn_from_args(args, &cfg.churn)?;
     let (ckpt, resume) = checkpoint_from_args(args, cfg, "des_runlog.jsonl")?;
     args.finish()?;
 
@@ -505,6 +544,12 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
             profiles: vec![hfl::sim::ChannelProfile::nominal()],
             mobilities: vec![hfl::des::MobilityProfile::Static],
             stragglers: vec![hfl::des::StragglerPolicy::WaitForAll],
+            // Default axes: the CLI-level `--agg-rule`/`--adversary-*`/
+            // `--churn-*` values (already on `rspec`/`churn`) govern the
+            // single scale cell instead of multiplying it.
+            agg_rules: vec![hfl::sparse::AggRule::Mean],
+            adversary_fracs: vec![0.0],
+            churn_drops: vec![0.0],
         };
     } else if let Some(phi) = phi_pin {
         spec.phis = vec![Some(phi)];
@@ -516,6 +561,7 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
         engine: EngineSelect::Des,
         compute_mean_s: compute_mean,
         compute_het,
+        churn,
         ..Default::default()
     };
     if let Some(d) = dim {
@@ -554,6 +600,9 @@ fn cmd_des(args: &Args, cfg: &Config) -> Result<()> {
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let mut scenario = NetScenario::from_cli(args, cfg)?;
     scenario.copts.agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    // Set before `fingerprint()`: the adversary plan changes the
+    // arithmetic, so serve and worker must agree on it at handshake.
+    scenario.copts.adversary = hfl::cli::adversary_from_args(args, &cfg.adversary)?;
     let listen = args.get_or("listen", &cfg.net.listen_addr);
     let standalone = args.flag("standalone");
     let metrics_addr = args.get_or("metrics-addr", &cfg.net.metrics_addr);
@@ -561,6 +610,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let golden = hfl::cli::GoldenArgs::from_args(args);
     let chaos = hfl::cli::chaos_from_args(args, &cfg.chaos)?;
     let policy = hfl::cli::fault_policy_from_args(args)?;
+    // CLI-boundary check of the same invariant the MBS re-validates at
+    // startup: a quorum above the cluster count can never be met.
+    policy.validate(scenario.n_clusters)?;
     let rejoin_deadline = Duration::from_millis(args.get_parsed_or("rejoin-deadline-ms", 0u64)?);
     let io_timeout_ms = args.get_parsed_or("io-timeout-ms", cfg.net.io_timeout_ms)?;
     let io_timeout = (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms));
@@ -691,6 +743,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 fn cmd_worker(args: &Args, cfg: &Config) -> Result<()> {
     let mut scenario = NetScenario::from_cli(args, cfg)?;
     scenario.copts.agg = hfl::cli::agg_from_args(args, cfg.agg)?;
+    // Must mirror `cmd_serve` exactly — the plan is fingerprinted, so a
+    // worker with different `--adversary-*` flags is refused at handshake.
+    scenario.copts.adversary = hfl::cli::adversary_from_args(args, &cfg.adversary)?;
     let connect = args.get_or("connect", &cfg.net.listen_addr);
     let mut want = args.get_parsed::<usize>("cluster")?;
     let chaos = hfl::cli::chaos_from_args(args, &cfg.chaos)?;

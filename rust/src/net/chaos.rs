@@ -139,6 +139,25 @@ impl FaultPolicy {
             FaultPolicy::Quorum(k) => *k,
         }
     }
+
+    /// Refuse a policy the topology can never satisfy: `quorum(k)` with
+    /// `k > n_clusters` would abort at round 0 even with every cluster
+    /// healthy (and `k == 0` is `deadline-skip` spelled confusingly).
+    /// Named error at startup instead of a baffling mid-run abort.
+    pub fn validate(&self, n_clusters: usize) -> Result<()> {
+        if let FaultPolicy::Quorum(k) = *self {
+            if k == 0 {
+                bail!("fault policy quorum(0) is vacuous — use deadline-skip");
+            }
+            if k > n_clusters {
+                bail!(
+                    "fault policy quorum({k}) can never be met: only {n_clusters} \
+                     cluster(s) configured"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Shared fault counters: incremented by every [`ChaosTransport`] built
@@ -328,6 +347,17 @@ mod tests {
             corrupt_p: 0.25,
             ..ChaosConfig::default()
         }
+    }
+
+    #[test]
+    fn fault_policy_validate_refuses_unreachable_quorum() {
+        assert!(FaultPolicy::WaitAll.validate(1).is_ok());
+        assert!(FaultPolicy::DeadlineSkip.validate(1).is_ok());
+        assert!(FaultPolicy::Quorum(2).validate(2).is_ok());
+        assert!(FaultPolicy::Quorum(3).validate(2).is_err());
+        assert!(FaultPolicy::Quorum(0).validate(2).is_err());
+        let err = FaultPolicy::Quorum(5).validate(2).unwrap_err().to_string();
+        assert!(err.contains("quorum(5)") && err.contains("2"), "{err}");
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //! bit-relevant scalar. [`NetScenario::fingerprint`] hashes exactly those
 //! scalars; the handshake refuses a worker whose fingerprint differs —
 //! the same refuse-loudly discipline as snapshot restore. The
-//! aggregation policy is deliberately excluded: every `--agg-path` is
-//! bit-identical, so mixed policies across processes are legal.
+//! aggregation `path`/`crossover` are deliberately excluded (every
+//! `--agg-path` is bit-identical, so mixed dispatch across processes is
+//! legal), but the consensus `rule` and the adversary plan change the
+//! arithmetic and ride [`RunSpec::put_fingerprint`] — both sides must
+//! pass the same `--agg-rule`/`--adversary-*` flags.
 
 use super::session::SessionHeader;
 use crate::cli::Args;
@@ -171,6 +174,19 @@ mod tests {
         }
         // Same flags → same fingerprint (both sides of the handshake).
         assert_eq!(base, scenario(&[]).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn rule_and_adversary_plan_move_the_fingerprint() {
+        // `cmd_serve`/`cmd_worker` set these after `from_cli`; both change
+        // the arithmetic, so the handshake must detect a one-sided flag.
+        let mut s = scenario(&[]).unwrap();
+        let base = s.fingerprint();
+        s.copts.agg.rule = crate::sparse::AggRule::CoordMedian;
+        let ruled = s.fingerprint();
+        assert_ne!(base, ruled);
+        s.copts.spec.adversary.enabled = true;
+        assert_ne!(ruled, s.fingerprint());
     }
 
     #[test]

@@ -460,6 +460,17 @@ pub fn run_mbs_faulty(
                 .join(", ")
         );
     }
+    // Refuse impossible robustness configs before any cluster trains: an
+    // unreachable quorum, a trim depth the sync fold can't satisfy, or an
+    // out-of-range adversary plan each get a named startup error.
+    faults.policy.validate(n).context("fault policy")?;
+    opts.agg.validate().context("aggregation policy")?;
+    if n > 1 {
+        opts.agg
+            .validate_participants(n)
+            .context("MBS sync aggregation (clusters)")?;
+    }
+    opts.spec.adversary.validate().context("adversary plan")?;
 
     let mut w_global: Vec<f32> = init.to_vec();
     let (_phi_ul, _phi_sdl, _phi_sul, phi_mdl) = effective_phis(opts);

@@ -78,6 +78,14 @@ pub fn run_cell(
         bail!("cluster id {cluster} out of range 0..{n}");
     }
     let per_cluster = k_total / n;
+    // Same refuse-at-startup discipline as the MBS: a trim depth the SBS
+    // round fold can't satisfy, or a bad adversary plan, is a named error
+    // before any MU thread spawns.
+    opts.agg.validate().context("aggregation policy")?;
+    opts.agg
+        .validate_participants(per_cluster)
+        .context("SBS round aggregation (MUs per cluster)")?;
+    opts.spec.adversary.validate().context("adversary plan")?;
     let (phi_ul, _phi_sdl, phi_sul, _phi_mdl) = effective_phis(opts);
     let init = Arc::new(init);
 
@@ -103,6 +111,7 @@ pub fn run_cell(
             phi_ul,
             init: init.clone(),
             compute: compute.clone(),
+            adversary: opts.spec.adversary,
             metrics: metrics.clone(),
         };
         let to_sbs = from_mu_tx.clone();

@@ -33,8 +33,10 @@
 //! [`GoldenTrace`](crate::sim::result::GoldenTrace)s — including DES
 //! timeline digests — from 1-thread and 8-thread runs of the same grid.
 
+use crate::adversary::ChurnConfig;
 use crate::config::{Config, DesConfig, SparsityConfig};
 use crate::des::{MobilityProfile, StragglerPolicy};
+use crate::sparse::AggRule;
 use crate::fl::{run_hierarchical, QuadraticOracle, TrainOptions};
 use crate::sim::result::{Engine, Fnv1a, ScenarioMeta, ScenarioResult};
 use crate::snapshot;
@@ -109,6 +111,17 @@ pub struct ScenarioSpec {
     /// Straggler policies. Any non-[`StragglerPolicy::WaitForAll`] value
     /// routes the cell through the discrete-event engine.
     pub stragglers: Vec<StragglerPolicy>,
+    /// Aggregation rules. A non-[`AggRule::Mean`] value overrides the base
+    /// spec's rule for that cell (robust consensus via the k-way merge).
+    pub agg_rules: Vec<AggRule>,
+    /// Byzantine attacker fractions ∈ [0, 1]. A value > 0 enables the
+    /// seeded [`crate::adversary::AdversaryPlan`] at that fraction for the
+    /// cell (the plan's other knobs come from the base spec).
+    pub adversary_fracs: Vec<f64>,
+    /// Churn drop probabilities ∈ [0, 1]. A value > 0 enables the churn
+    /// gate at that drop rate and routes the cell through the
+    /// discrete-event engine (only the DES models participation over time).
+    pub churn_drops: Vec<f64>,
 }
 
 impl ScenarioSpec {
@@ -144,6 +157,9 @@ impl ScenarioSpec {
                     stale_discount: des.stale_discount as f32,
                 },
             ],
+            agg_rules: vec![AggRule::Mean],
+            adversary_fracs: vec![0.0],
+            churn_drops: vec![0.0],
         }
     }
 
@@ -169,6 +185,9 @@ impl ScenarioSpec {
             ],
             mobilities: quick.mobilities,
             stragglers: quick.stragglers,
+            agg_rules: quick.agg_rules,
+            adversary_fracs: quick.adversary_fracs,
+            churn_drops: quick.churn_drops,
         }
     }
 
@@ -197,6 +216,9 @@ impl ScenarioSpec {
                     stale_discount: des.stale_discount as f32,
                 },
             ],
+            agg_rules: vec![AggRule::Mean],
+            adversary_fracs: vec![0.0],
+            churn_drops: vec![0.0],
         }
     }
 
@@ -231,6 +253,34 @@ impl ScenarioSpec {
                     stale_discount: 0.0,
                 },
             ],
+            agg_rules: vec![AggRule::Mean],
+            adversary_fracs: vec![0.0],
+            churn_drops: vec![0.0],
+        }
+    }
+
+    /// Adversarial quick grid for CI and demonstration sweeps: the three
+    /// aggregation rules × an honest and a 20%-attacker population ×
+    /// churn off/on, over a small static topology (2 × 1 × 1 × 1 × 1 × 1 ×
+    /// 1 × 1 × 3 × 2 × 2 = 24 cells). Mean-vs-robust divergence under
+    /// attack is asserted by the CI `adversary` job on this grid.
+    pub fn adversarial(trim_k: usize) -> Self {
+        Self {
+            cells: vec![1, 2],
+            mus_per_cell: vec![8],
+            skews: vec![1.0],
+            phis: vec![Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![StragglerPolicy::WaitForAll],
+            agg_rules: vec![
+                AggRule::Mean,
+                AggRule::TrimmedMean(trim_k),
+                AggRule::CoordMedian,
+            ],
+            adversary_fracs: vec![0.0, 0.2],
+            churn_drops: vec![0.0, 0.2],
         }
     }
 
@@ -244,19 +294,24 @@ impl ScenarioSpec {
             * self.profiles.len()
             * self.mobilities.len()
             * self.stragglers.len()
+            * self.agg_rules.len()
+            * self.adversary_fracs.len()
+            * self.churn_drops.len()
     }
 
     /// Expand the grid into concrete scenarios with stable, dense ids
-    /// (axis order: cells, MUs, skew, φ, H, profile, mobility, straggler —
-    /// outermost first). The default static wait-for-all combination keeps
-    /// the historical *name format*; DES combinations append
-    /// `-<mobility>-<straggler>`. Note that ids are dense within *this*
-    /// grid: adding axis values renumbers later cells, and since a cell's
-    /// RNG stream is keyed by `(base_seed, id)`, a same-named cell in a
-    /// differently-shaped grid trains a different problem. Golden fixtures
-    /// are therefore only comparable across runs of the *same* grid shape
-    /// (the checked-in fixtures pin single-cell grids, which always get
-    /// id 0).
+    /// (axis order: cells, MUs, skew, φ, H, profile, mobility, straggler,
+    /// agg rule, adversary fraction, churn drop — outermost first). The
+    /// default combination (static wait-for-all, mean rule, no adversary,
+    /// no churn) keeps the historical *name format*; DES combinations
+    /// append `-<mobility>-<straggler>` and the robustness axes append
+    /// `-<rule>`/`-adv<frac>`/`-churn<drop>` only when non-default. Note
+    /// that ids are dense within *this* grid: adding axis values renumbers
+    /// later cells, and since a cell's RNG stream is keyed by
+    /// `(base_seed, id)`, a same-named cell in a differently-shaped grid
+    /// trains a different problem. Golden fixtures are therefore only
+    /// comparable across runs of the *same* grid shape (the checked-in
+    /// fixtures pin single-cell grids, which always get id 0).
     pub fn expand(&self) -> Vec<MatrixScenario> {
         let mut out = Vec::with_capacity(self.n_scenarios());
         for &n_clusters in &self.cells {
@@ -267,35 +322,17 @@ impl ScenarioSpec {
                             for profile in &self.profiles {
                                 for mobility in &self.mobilities {
                                     for straggler in &self.stragglers {
-                                        let phi_label = match phi {
-                                            None => "dense".to_string(),
-                                            Some(p) => format!("phi{p}"),
-                                        };
-                                        let mut name = format!(
-                                            "c{n_clusters}x{mus}-h{h}-skew{skew}-{phi_label}-{}",
-                                            profile.name
-                                        );
-                                        if !(mobility.is_static()
-                                            && straggler.is_wait_for_all())
-                                        {
-                                            name.push_str(&format!(
-                                                "-{}-{}",
-                                                mobility.label(),
-                                                straggler.label()
-                                            ));
+                                        for &agg_rule in &self.agg_rules {
+                                            for &adv in &self.adversary_fracs {
+                                                for &churn in &self.churn_drops {
+                                                    self.push_cell(
+                                                        &mut out, n_clusters, mus, skew,
+                                                        phi, h, profile, mobility,
+                                                        straggler, agg_rule, adv, churn,
+                                                    );
+                                                }
+                                            }
                                         }
-                                        out.push(MatrixScenario {
-                                            id: out.len(),
-                                            name,
-                                            n_clusters,
-                                            mus_per_cluster: mus,
-                                            skew,
-                                            phi,
-                                            h_period: h,
-                                            profile: profile.clone(),
-                                            mobility: mobility.clone(),
-                                            straggler: straggler.clone(),
-                                        });
                                     }
                                 }
                             }
@@ -305,6 +342,59 @@ impl ScenarioSpec {
             }
         }
         out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push_cell(
+        &self,
+        out: &mut Vec<MatrixScenario>,
+        n_clusters: usize,
+        mus: usize,
+        skew: f64,
+        phi: Option<f64>,
+        h: usize,
+        profile: &ChannelProfile,
+        mobility: &MobilityProfile,
+        straggler: &StragglerPolicy,
+        agg_rule: AggRule,
+        adversary_frac: f64,
+        churn_drop: f64,
+    ) {
+        let phi_label = match phi {
+            None => "dense".to_string(),
+            Some(p) => format!("phi{p}"),
+        };
+        let mut name = format!(
+            "c{n_clusters}x{mus}-h{h}-skew{skew}-{phi_label}-{}",
+            profile.name
+        );
+        if !(mobility.is_static() && straggler.is_wait_for_all()) {
+            name.push_str(&format!("-{}-{}", mobility.label(), straggler.label()));
+        }
+        if agg_rule != AggRule::Mean {
+            name.push_str(&format!("-{}", agg_rule.label()));
+        }
+        if adversary_frac > 0.0 {
+            name.push_str(&format!("-adv{adversary_frac}"));
+        }
+        if churn_drop > 0.0 {
+            name.push_str(&format!("-churn{churn_drop}"));
+        }
+        out.push(MatrixScenario {
+            id: out.len(),
+            name,
+            n_clusters,
+            mus_per_cluster: mus,
+            skew,
+            phi,
+            h_period: h,
+            profile: profile.clone(),
+            mobility: mobility.clone(),
+            straggler: straggler.clone(),
+            agg_rule,
+            adversary_frac,
+            churn_drop,
+        });
     }
 }
 
@@ -323,6 +413,12 @@ pub struct MatrixScenario {
     pub profile: ChannelProfile,
     pub mobility: MobilityProfile,
     pub straggler: StragglerPolicy,
+    /// Aggregation rule; [`AggRule::Mean`] defers to the base spec's rule.
+    pub agg_rule: AggRule,
+    /// Attacker fraction; 0 defers to the base spec's adversary plan.
+    pub adversary_frac: f64,
+    /// Churn drop probability; 0 defers to the base churn config.
+    pub churn_drop: f64,
 }
 
 impl MatrixScenario {
@@ -331,9 +427,11 @@ impl MatrixScenario {
     }
 
     /// True when the cell needs the discrete-event engine: the analytic
-    /// latency model cannot express mobility or deadline policies.
+    /// latency model cannot express mobility, deadline policies, or
+    /// round-by-round churn.
     pub fn is_event_driven(&self) -> bool {
         !(self.mobility.is_static() && self.straggler.is_wait_for_all())
+            || self.churn_drop > 0.0
     }
 }
 
@@ -378,6 +476,9 @@ pub struct MatrixOptions {
     pub compute_mean_s: f64,
     /// Lognormal heterogeneity σ of per-MU compute speed for DES cells.
     pub compute_het: f64,
+    /// Base churn config for DES cells (`--churn-*`, `[churn]`); a cell's
+    /// `churn_drop` axis value > 0 overrides `drop_p` and enables it.
+    pub churn: ChurnConfig,
 }
 
 impl Default for MatrixOptions {
@@ -396,6 +497,7 @@ impl Default for MatrixOptions {
             engine: EngineSelect::Auto,
             compute_mean_s: 0.0,
             compute_het: 0.5,
+            churn: ChurnConfig::default(),
         }
     }
 }
@@ -472,6 +574,32 @@ fn runlog_header(spec: &ScenarioSpec, opts: &MatrixOptions) -> Result<String> {
         .str("grad_noise_bits", opts.grad_noise.to_bits().to_string())
         .str("compute_mean_s_bits", opts.compute_mean_s.to_bits().to_string())
         .str("compute_het_bits", opts.compute_het.to_bits().to_string())
+        // Robustness knobs ARE trajectory-defining (unlike path/crossover):
+        // a log written under another rule, adversary plan, or churn config
+        // must not resume.
+        .str("agg_rule", opts.agg.rule.label())
+        .str(
+            "adversary",
+            format!(
+                "{}:{}:{}:{}:{}",
+                opts.spec.adversary.enabled,
+                opts.spec.adversary.seed,
+                opts.spec.adversary.fraction.to_bits(),
+                opts.spec.adversary.scale.to_bits(),
+                opts.spec.adversary.garbage_std.to_bits()
+            ),
+        )
+        .str(
+            "churn",
+            format!(
+                "{}:{}:{}:{}:{}",
+                opts.churn.enabled,
+                opts.churn.seed,
+                opts.churn.drop_p.to_bits(),
+                opts.churn.rejoin_p.to_bits(),
+                opts.churn.energy.to_bits()
+            ),
+        )
         .str(
             "engine",
             match opts.engine {
@@ -613,6 +741,16 @@ pub(crate) fn cell_train_options(
         },
         None => SparsityConfig::dense(),
     };
+    // Robustness axes override the base spec only when non-default, so a
+    // CLI-level `--agg-rule`/`--adversary` applies to every cell of a grid
+    // whose axes sit at their defaults.
+    if sc.agg_rule != AggRule::Mean {
+        spec.agg.rule = sc.agg_rule;
+    }
+    if sc.adversary_frac > 0.0 {
+        spec.adversary.enabled = true;
+        spec.adversary.fraction = sc.adversary_frac;
+    }
     TrainOptions {
         spec,
         n_clusters: sc.n_clusters,
@@ -743,11 +881,128 @@ mod tests {
         for sc in &scenarios {
             assert_eq!(
                 sc.is_event_driven(),
-                sc.name.contains("wp") || sc.name.contains("dl"),
+                sc.name.contains("wp") || sc.name.contains("dl") || sc.name.contains("churn"),
                 "{}: DES cells (and only DES cells) carry axis suffixes",
                 sc.name
             );
         }
+    }
+
+    #[test]
+    fn adversarial_grid_names_and_routing() {
+        let spec = ScenarioSpec::adversarial(1);
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), spec.n_scenarios());
+        assert_eq!(scenarios.len(), 24);
+        let mut names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), scenarios.len(), "duplicate adversarial names");
+        for sc in &scenarios {
+            // Non-default robustness axes must be visible in the name, and
+            // only churn routes a static cell to the DES.
+            assert_eq!(sc.name.contains("trim1"), sc.agg_rule == AggRule::TrimmedMean(1));
+            assert_eq!(sc.name.contains("median"), sc.agg_rule == AggRule::CoordMedian);
+            assert_eq!(sc.name.contains("adv0.2"), sc.adversary_frac > 0.0);
+            assert_eq!(sc.name.contains("churn0.2"), sc.churn_drop > 0.0);
+            assert_eq!(sc.is_event_driven(), sc.churn_drop > 0.0);
+        }
+        // The honest-mean baseline cell keeps the historical name format.
+        assert!(scenarios
+            .iter()
+            .any(|s| s.name == "c2x8-h2-skew1-phi0.9-nominal"));
+    }
+
+    #[test]
+    fn adversarial_axes_change_traces_but_not_honest_cells() {
+        // An attacked cell must diverge from its honest twin; the honest
+        // cells of a robustness grid must be byte-identical to the same
+        // cells in a no-axis grid of the same shape (the axes sit at the
+        // END of the id order, so honest cells keep their ids).
+        let cfg = Config::smoke();
+        let base = ScenarioSpec {
+            cells: vec![2],
+            mus_per_cell: vec![4],
+            skews: vec![1.0],
+            phis: vec![Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![StragglerPolicy::WaitForAll],
+            ..ScenarioSpec::quick()
+        };
+        let adv = ScenarioSpec { adversary_fracs: vec![0.0, 0.25], ..base.clone() };
+        let opts = MatrixOptions {
+            spec: MatrixOptions::default().spec.iters(8),
+            threads: 1,
+            dim: 12,
+            ..Default::default()
+        };
+        let honest = run_matrix(&cfg, &base, &opts).unwrap();
+        let attacked = run_matrix(&cfg, &adv, &opts).unwrap();
+        assert_eq!(honest.len(), 1);
+        assert_eq!(attacked.len(), 2);
+        // The honest cell keeps id 0 (the new axes expand innermost), so it
+        // trains the identical problem and must not move a bit.
+        assert_eq!(attacked[0].name, honest[0].name);
+        assert_eq!(attacked[0].trace, honest[0].trace, "honest cell must not move");
+        // A CLI-level adversary plan (base spec, axes at defaults) attacks
+        // the same cell id / RNG stream — the diff is the attack alone.
+        let mut aopts = opts.clone();
+        aopts.spec.adversary = crate::adversary::AdversaryPlan {
+            enabled: true,
+            seed: 7,
+            fraction: 0.25,
+            scale: 10.0,
+            garbage_std: 1.0,
+        };
+        let spec_attacked = run_matrix(&cfg, &base, &aopts).unwrap();
+        assert_ne!(
+            spec_attacked[0].trace.params_hash, honest[0].trace.params_hash,
+            "25% attackers must move the trajectory"
+        );
+        // Thread-count invariance holds across the new axes.
+        let attacked8 =
+            run_matrix(&cfg, &adv, &MatrixOptions { threads: 8, ..opts }).unwrap();
+        for (a, b) in attacked.iter().zip(&attacked8) {
+            assert_eq!(a.trace, b.trace, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn churn_axis_routes_to_des_and_records_skips() {
+        let cfg = Config::smoke();
+        let spec = ScenarioSpec {
+            cells: vec![2],
+            mus_per_cell: vec![4],
+            skews: vec![1.0],
+            phis: vec![Some(0.9)],
+            h_periods: vec![2],
+            profiles: vec![ChannelProfile::nominal()],
+            mobilities: vec![MobilityProfile::Static],
+            stragglers: vec![StragglerPolicy::WaitForAll],
+            churn_drops: vec![0.0, 0.3],
+            ..ScenarioSpec::quick()
+        };
+        let opts = MatrixOptions {
+            spec: MatrixOptions::default().spec.iters(10),
+            threads: 1,
+            dim: 12,
+            ..Default::default()
+        };
+        let results = run_matrix(&cfg, &spec, &opts).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].trace.skips.is_none(), "no churn → no skip digest");
+        assert!(results[0].trace.timeline.is_none(), "static cell stays analytic");
+        assert!(results[1].trace.timeline.is_some(), "churn cell runs on the DES");
+        assert!(
+            results[1].trace.skips.is_some(),
+            "drop_p=0.3 over 10 rounds must record skips"
+        );
+        // Same seed ⇒ identical skip digest at any thread count.
+        let r8 = run_matrix(&cfg, &spec, &MatrixOptions { threads: 8, ..opts }).unwrap();
+        assert_eq!(r8[1].trace.skips, results[1].trace.skips);
+        assert_eq!(r8[1].trace, results[1].trace);
     }
 
     #[test]
@@ -863,6 +1118,7 @@ mod tests {
                 StragglerPolicy::WaitForAll,
                 StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
             ],
+            ..ScenarioSpec::quick()
         };
         let run = |path: AggPath| {
             let opts = MatrixOptions {
@@ -925,6 +1181,9 @@ mod tests {
             profile: ChannelProfile::nominal(),
             mobility: MobilityProfile::Static,
             straggler: StragglerPolicy::WaitForAll,
+            agg_rule: AggRule::Mean,
+            adversary_frac: 0.0,
+            churn_drop: 0.0,
         }
     }
 
@@ -969,6 +1228,7 @@ mod tests {
                 StragglerPolicy::WaitForAll,
                 StragglerPolicy::Deadline { rel: 0.8, stale_discount: 0.5 },
             ],
+            ..ScenarioSpec::quick()
         };
         let opts = MatrixOptions {
             spec: MatrixOptions::default().spec.iters(8),

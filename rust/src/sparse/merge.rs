@@ -31,6 +31,36 @@
 //! The merge requires (and `debug_assert`s) the [`SparseVec`]
 //! sorted-unique-index invariant — see the [`SparseVec`] docs.
 //!
+//! ## Robust consensus rules (`AggRule`)
+//!
+//! [`AggRule`] adds Byzantine-robust alternatives to the weighted-mean
+//! fold on the *same* sorted-coordinate frontier the merge heap already
+//! produces. At every coordinate in the support union the robust walk
+//! collects one contribution per part — `x_j = (n · w_j) · v_j[i]` for a
+//! part that carries the coordinate (so uniform `w = 1/n` weighting makes
+//! `x_j ≈ v_j[i]`, and stale-discounted weights keep their discount), and
+//! an exact `+0.0` for each absent part — then applies the statistic:
+//!
+//! * [`AggRule::TrimmedMean`]`(k)` — sort ascending, drop the `k` smallest
+//!   and `k` largest, average the rest (summed in ascending order). If a
+//!   site has fewer than `2k + 1` live parts (client churn), `k` is
+//!   clamped to `⌊(n − 1)/2⌋` so the statistic stays defined; impossible
+//!   *configured* shapes are refused at startup by
+//!   [`AggPolicy::validate_participants`].
+//! * [`AggRule::CoordMedian`] — sort ascending; odd `n` takes the middle
+//!   value, even `n` takes `0.5 · (lower + upper)`.
+//!
+//! **Tie/order contract:** values are ordered by `f32::total_cmp`, which
+//! is equality exactly on identical bit patterns — so the sort (unstable
+//! or not) and the subsequent ascending-order sum are deterministic for
+//! any thread count and any input permutation of equal values. `−0.0`
+//! sorts below `+0.0`; NaNs (never produced by honest parts) order by
+//! sign and payload instead of poisoning the comparison.
+//!
+//! `AggRule::Mean` never routes through the robust walk: it dispatches to
+//! the exact weighted fold above, byte-identical to every trace recorded
+//! before the rule existed.
+//!
 //! ## The −0.0 emulation (`DenseShadow`)
 //!
 //! The reference round aggregation ends with `scale(agg, -lr)`, which turns
@@ -82,6 +112,89 @@ impl AggPath {
     }
 }
 
+/// Which consensus statistic the aggregation computes per coordinate.
+///
+/// `Mean` is the historical weighted fold (bit-identical to the dense
+/// scatter reference); the robust rules defend against Byzantine parts —
+/// see the module docs for the exact per-coordinate contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggRule {
+    /// Weighted mean — the reference fold, byte-identical to the
+    /// pre-robustness engines at every call site.
+    #[default]
+    Mean,
+    /// Drop the `k` smallest and `k` largest per-coordinate contributions,
+    /// average the rest. Tolerates up to `k` Byzantine parts per site.
+    TrimmedMean(usize),
+    /// Coordinate-wise median. Tolerates up to `⌊(n−1)/2⌋` Byzantine parts.
+    CoordMedian,
+}
+
+impl AggRule {
+    /// Parse a `--agg-rule` / `[agg] rule` value. `trim_k` supplies the
+    /// trim depth (`--agg-trim`) when the rule is `trimmed-mean`.
+    pub fn parse(s: &str, trim_k: usize) -> Result<Self> {
+        match s {
+            "mean" => Ok(AggRule::Mean),
+            "trimmed-mean" => Ok(AggRule::TrimmedMean(trim_k)),
+            "coord-median" => Ok(AggRule::CoordMedian),
+            other => {
+                bail!("unknown aggregation rule `{other}` (expected mean|trimmed-mean|coord-median)")
+            }
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AggRule::Mean => "mean",
+            AggRule::TrimmedMean(_) => "trimmed-mean",
+            AggRule::CoordMedian => "coord-median",
+        }
+    }
+
+    /// Short stable tag for scenario names (`-trim1`, `-median`); `Mean`
+    /// is the default and carries no tag.
+    pub fn label(&self) -> String {
+        match self {
+            AggRule::Mean => "mean".to_string(),
+            AggRule::TrimmedMean(k) => format!("trim{k}"),
+            AggRule::CoordMedian => "median".to_string(),
+        }
+    }
+
+    /// The per-coordinate statistic over the collected contributions
+    /// (present parts only — absent parts are padded to `n` exact `+0.0`s
+    /// here). Consumes `vals` as scratch. `Mean` never routes here (the
+    /// dispatcher keeps it on the reference fold); it is defined as
+    /// `TrimmedMean(0)` for completeness.
+    fn fold(&self, vals: &mut Vec<f32>, n: usize) -> f32 {
+        debug_assert!(vals.len() <= n);
+        vals.resize(n, 0.0);
+        vals.sort_unstable_by(|a, b| a.total_cmp(b));
+        match *self {
+            AggRule::Mean | AggRule::TrimmedMean(_) => {
+                let k = match *self {
+                    AggRule::TrimmedMean(k) => k.min((n - 1) / 2),
+                    _ => 0,
+                };
+                let kept = &vals[k..n - k];
+                let mut acc = 0.0f32;
+                for &x in kept {
+                    acc += x;
+                }
+                acc / kept.len() as f32
+            }
+            AggRule::CoordMedian => {
+                if n % 2 == 1 {
+                    vals[n / 2]
+                } else {
+                    0.5 * (vals[n / 2 - 1] + vals[n / 2])
+                }
+            }
+        }
+    }
+}
+
 /// Default density crossover of [`AggPolicy`]: the sparse merge wins while
 /// the round's total message nnz stays below this fraction of `dim`.
 ///
@@ -102,6 +215,11 @@ pub struct AggPolicy {
     /// Auto-path crossover: use the sparse merge while
     /// `total_nnz ≤ crossover · dim`.
     pub crossover: f64,
+    /// Per-coordinate consensus statistic. Robust rules always take the
+    /// merge-frontier walk regardless of `path` (the statistic needs every
+    /// part's contribution at a coordinate, which the dense scatter fold
+    /// cannot provide).
+    pub rule: AggRule,
 }
 
 impl Default for AggPolicy {
@@ -109,6 +227,7 @@ impl Default for AggPolicy {
         Self {
             path: AggPath::Auto,
             crossover: AGG_DENSITY_CROSSOVER,
+            rule: AggRule::Mean,
         }
     }
 }
@@ -128,6 +247,26 @@ impl AggPolicy {
         if !self.crossover.is_finite() || self.crossover <= 0.0 || self.crossover > 1.0 {
             bail!("agg crossover must be in (0, 1], got {}", self.crossover);
         }
+        if let AggRule::TrimmedMean(k) = self.rule {
+            if k == 0 {
+                bail!("trimmed-mean needs k >= 1 (k = 0 is plain mean — use `mean`)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Named startup refusal for rule/population shapes that can never
+    /// work: `TrimmedMean(k)` needs at least `2k + 1` participating parts
+    /// at every site it aggregates.
+    pub fn validate_participants(&self, parts: usize) -> Result<()> {
+        if let AggRule::TrimmedMean(k) = self.rule {
+            if 2 * k >= parts {
+                bail!(
+                    "trimmed-mean k={k} needs at least 2k+1={} participating parts per site, got {parts}",
+                    2 * k + 1
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -139,6 +278,9 @@ impl AggPolicy {
 pub struct MergeScratch {
     heap: Vec<u64>,
     cursors: Vec<usize>,
+    /// Per-coordinate contribution buffer of the robust walk (unused by
+    /// the mean fold).
+    vals: Vec<f32>,
 }
 
 #[inline]
@@ -236,6 +378,87 @@ fn merge_range(
     }
 }
 
+/// Robust variant of [`merge_range`]: the same heap frontier, but each
+/// coordinate collects its per-part contributions `(n · w_j) · v_j[i]`
+/// (ascending part order — the heap's tie order) and emits
+/// `rule.fold(...)` over them plus one `+0.0` per absent part.
+fn robust_range(
+    parts: &[(&SparseVec, f32)],
+    rule: AggRule,
+    lo: u64,
+    hi: u64,
+    out: &mut SparseVec,
+    scratch: &mut MergeScratch,
+) {
+    let n = parts.len();
+    if n == 0 {
+        return;
+    }
+    let nf = n as f32;
+    scratch.heap.clear();
+    scratch.cursors.clear();
+    scratch.cursors.resize(n, 0);
+    for (j, (p, _)) in parts.iter().enumerate() {
+        let start = p.indices.partition_point(|&i| (i as u64) < lo);
+        scratch.cursors[j] = start;
+        if start < p.indices.len() && (p.indices[start] as u64) < hi {
+            heap_push(&mut scratch.heap, heap_key(p.indices[start], j));
+        }
+    }
+    let mut cur: Option<u32> = None;
+    let mut vals = std::mem::take(&mut scratch.vals);
+    vals.clear();
+    while let Some(key) = heap_pop(&mut scratch.heap) {
+        let idx = (key >> 32) as u32;
+        let j = (key & 0xffff_ffff) as usize;
+        let (p, w) = parts[j];
+        let pos = scratch.cursors[j];
+        let v = p.values[pos];
+        scratch.cursors[j] = pos + 1;
+        if pos + 1 < p.indices.len() && (p.indices[pos + 1] as u64) < hi {
+            heap_push(&mut scratch.heap, heap_key(p.indices[pos + 1], j));
+        }
+        match cur {
+            Some(ci) if ci == idx => {}
+            _ => {
+                if let Some(ci) = cur {
+                    out.indices.push(ci);
+                    out.values.push(rule.fold(&mut vals, n));
+                }
+                cur = Some(idx);
+                vals.clear();
+            }
+        }
+        vals.push((w * nf) * v);
+    }
+    if let Some(ci) = cur {
+        out.indices.push(ci);
+        out.values.push(rule.fold(&mut vals, n));
+    }
+    scratch.vals = vals;
+}
+
+/// Robust k-way consensus of `parts` into `out`: the sorted union of the
+/// part indices, each value the [`AggRule`] statistic over all `n`
+/// per-part contributions at that coordinate (absent parts contribute an
+/// exact `+0.0`). See the module docs for the tie/order contract.
+pub fn merge_robust_into(
+    parts: &[(&SparseVec, f32)],
+    rule: AggRule,
+    dim: usize,
+    out: &mut SparseVec,
+    scratch: &mut MergeScratch,
+) {
+    for (p, _) in parts {
+        debug_assert_eq!(p.dim, dim, "merge part dimension mismatch");
+        debug_assert!(p.is_sorted_unique(), "merge parts need sorted unique indices");
+    }
+    out.dim = dim;
+    out.indices.clear();
+    out.values.clear();
+    robust_range(parts, rule, 0, dim as u64, out, scratch);
+}
+
 /// K-way merge of `parts` (each `(message, weight)`) into the sparse
 /// consensus `out`: `out` carries the sorted union of the part indices,
 /// each value the part-ordered fold `Σ_j w_j · v_j[i]` — bit-identical to
@@ -323,6 +546,56 @@ pub fn merge_weighted_par(
     Ok(())
 }
 
+/// Pool-parallel robust consensus: the [`merge_weighted_par`] range
+/// decomposition with the robust per-coordinate walk. Every coordinate's
+/// statistic is computed by exactly one lane over the identical collected
+/// contributions, so the concatenated result is bit-identical to
+/// [`merge_robust_into`] at any width.
+pub fn merge_robust_par(
+    parts: &[(&SparseVec, f32)],
+    rule: AggRule,
+    dim: usize,
+    width: usize,
+    pool: Option<&PoolHandle>,
+    out: &mut SparseVec,
+    scratch: &mut ParMergeScratch,
+) -> Result<()> {
+    if width == 0 {
+        bail!("parallel merge needs at least one lane");
+    }
+    while scratch.lanes.len() < width {
+        scratch.lanes.push(Mutex::new((SparseVec::default(), MergeScratch::default())));
+    }
+    for (p, _) in parts {
+        debug_assert_eq!(p.dim, dim, "merge part dimension mismatch");
+        debug_assert!(p.is_sorted_unique(), "merge parts need sorted unique indices");
+    }
+    let handle = match pool {
+        Some(h) => h.clone(),
+        None => crate::pool::global_handle(),
+    };
+    let lanes = &scratch.lanes;
+    handle.run_ordered(width, width, |r| {
+        let lo = dim as u64 * r as u64 / width as u64;
+        let hi = dim as u64 * (r as u64 + 1) / width as u64;
+        let mut lane = lanes[r].lock().unwrap();
+        let (buf, ms) = &mut *lane;
+        buf.dim = dim;
+        buf.indices.clear();
+        buf.values.clear();
+        robust_range(parts, rule, lo, hi, buf, ms);
+    })?;
+    out.dim = dim;
+    out.indices.clear();
+    out.values.clear();
+    for lane in &scratch.lanes[..width] {
+        let lane = lane.lock().unwrap();
+        out.indices.extend_from_slice(&lane.0.indices);
+        out.values.extend_from_slice(&lane.0.values);
+    }
+    Ok(())
+}
+
 /// One density-adaptive aggregation — the single definition of the
 /// dispatch every SBS/MBS call site (fl rounds + H-sync, DES cluster
 /// aggregation + sync, coordinator SBS/MBS) goes through, so the
@@ -356,6 +629,22 @@ pub fn aggregate_adaptive(
     scratch: &mut MergeScratch,
     shadow: &mut DenseShadow,
 ) {
+    if policy.rule != AggRule::Mean {
+        // Robust rules always walk the merge frontier: the statistic needs
+        // every part's contribution per coordinate, which the dense
+        // scatter fold cannot provide. `path`/`crossover` stay a pure
+        // wall-clock choice for the mean fold only.
+        merge_robust_into(parts, policy.rule, dim, merged, scratch);
+        let baseline = match post_scale {
+            Some(a) => {
+                merged.scale_values(a);
+                0.0f32 * a
+            }
+            None => 0.0,
+        };
+        shadow.write(buf, baseline, merged);
+        return;
+    }
     let total_nnz: usize = parts.iter().map(|(m, _)| m.nnz()).sum();
     if policy.use_sparse(total_nnz, dim) {
         merge_weighted_into(parts, dim, merged, scratch);
@@ -400,6 +689,18 @@ pub fn aggregate_adaptive_pooled(
     scratch: &mut ParMergeScratch,
     shadow: &mut DenseShadow,
 ) -> Result<()> {
+    if policy.rule != AggRule::Mean {
+        merge_robust_par(parts, policy.rule, dim, width.max(1), pool, merged, scratch)?;
+        let baseline = match post_scale {
+            Some(a) => {
+                merged.scale_values(a);
+                0.0f32 * a
+            }
+            None => 0.0,
+        };
+        shadow.write(buf, baseline, merged);
+        return Ok(());
+    }
     let total_nnz: usize = parts.iter().map(|(m, _)| m.nnz()).sum();
     if policy.use_sparse(total_nnz, dim) {
         merge_weighted_par(parts, dim, width.max(1), pool, merged, scratch)?;
@@ -749,11 +1050,172 @@ mod tests {
         assert!(p.use_sparse(16 * dim / 100, dim));
         // Dense-ish traffic must not.
         assert!(!p.use_sparse(dim / 2, dim));
-        assert!(AggPolicy { path: AggPath::Auto, crossover: 0.0 }.validate().is_err());
-        assert!(AggPolicy { path: AggPath::Auto, crossover: 1.5 }.validate().is_err());
+        assert!(AggPolicy { crossover: 0.0, ..Default::default() }.validate().is_err());
+        assert!(AggPolicy { crossover: 1.5, ..Default::default() }.validate().is_err());
         let forced = AggPolicy { path: AggPath::Sparse, ..Default::default() };
         assert!(forced.use_sparse(usize::MAX, 1));
         let dense = AggPolicy { path: AggPath::Dense, ..Default::default() };
         assert!(!dense.use_sparse(0, 1 << 20));
+    }
+
+    #[test]
+    fn agg_rule_parse_labels_and_validation() {
+        assert_eq!(AggRule::parse("mean", 1).unwrap(), AggRule::Mean);
+        assert_eq!(AggRule::parse("trimmed-mean", 2).unwrap(), AggRule::TrimmedMean(2));
+        assert_eq!(AggRule::parse("coord-median", 1).unwrap(), AggRule::CoordMedian);
+        assert!(AggRule::parse("krum", 1).is_err());
+        assert_eq!(AggRule::TrimmedMean(3).label(), "trim3");
+        assert_eq!(AggRule::CoordMedian.label(), "median");
+        assert_eq!(AggRule::default(), AggRule::Mean);
+
+        // k = 0 trimmed-mean is refused (that's just `mean`).
+        let p = AggPolicy { rule: AggRule::TrimmedMean(0), ..Default::default() };
+        assert!(p.validate().is_err());
+        // 2k >= parts is an impossible configured shape — named refusal.
+        let p = AggPolicy { rule: AggRule::TrimmedMean(2), ..Default::default() };
+        p.validate().unwrap();
+        assert!(p.validate_participants(4).is_err());
+        let err = p.validate_participants(3).unwrap_err().to_string();
+        assert!(err.contains("trimmed-mean"), "{err}");
+        p.validate_participants(5).unwrap();
+        // Mean and median never constrain the population.
+        AggPolicy::default().validate_participants(1).unwrap();
+        let med = AggPolicy { rule: AggRule::CoordMedian, ..Default::default() };
+        med.validate_participants(1).unwrap();
+    }
+
+    #[test]
+    fn robust_rules_match_hand_computed_statistics() {
+        // 3 parts over dim 4; coordinate 1 only in parts 0 and 2 — the
+        // absent part contributes an exact +0.0.
+        let p0 = SparseVec { dim: 4, indices: vec![0, 1], values: vec![1.0, 4.0] };
+        let p1 = SparseVec { dim: 4, indices: vec![0], values: vec![2.0] };
+        let p2 = SparseVec { dim: 4, indices: vec![0, 1], values: vec![9.0, -2.0] };
+        // Uniform 1/n weights make x_j = v_j exactly (n·w = 3·(1/3) rounds
+        // to 1.0? — not guaranteed in f32, so use w = 1 and divide by hand).
+        let w = 1.0f32 / 3.0;
+        let parts: Vec<(&SparseVec, f32)> = vec![(&p0, w), (&p1, w), (&p2, w)];
+        let nw = w * 3.0f32; // the exact factor the walk applies
+
+        let mut out = SparseVec::default();
+        let mut scratch = MergeScratch::default();
+        merge_robust_into(&parts, AggRule::CoordMedian, 4, &mut out, &mut scratch);
+        assert_eq!(out.indices, vec![0, 1]);
+        // coord 0: values {1, 2, 9}·nw → median 2·nw; coord 1: {4·nw, 0, −2·nw} → 0.
+        assert_eq!(out.values[0].to_bits(), (2.0f32 * nw).to_bits());
+        assert_eq!(out.values[1].to_bits(), 0.0f32.to_bits());
+
+        merge_robust_into(&parts, AggRule::TrimmedMean(1), 4, &mut out, &mut scratch);
+        // Trim 1 high + 1 low leaves the median value at n = 3.
+        assert_eq!(out.indices, vec![0, 1]);
+        assert_eq!(out.values[0].to_bits(), ((2.0f32 * nw) / 1.0).to_bits());
+        assert_eq!(out.values[1].to_bits(), 0.0f32.to_bits());
+
+        // Even part count: median averages the two middle values.
+        let q = SparseVec { dim: 4, indices: vec![0], values: vec![3.0] };
+        let four: Vec<(&SparseVec, f32)> = vec![(&p0, 0.25), (&p1, 0.25), (&p2, 0.25), (&q, 0.25)];
+        merge_robust_into(&four, AggRule::CoordMedian, 4, &mut out, &mut scratch);
+        let s = 0.25f32 * 4.0; // per-part factor
+        // coord 0: {1, 2, 9, 3}·s → 0.5·(2 + 3)·s.
+        assert_eq!(out.values[0].to_bits(), (0.5 * (2.0 * s + 3.0 * s)).to_bits());
+        // coord 1: {4·s, 0, −2·s, 0} sorted → middle pair (0, 0) → 0.
+        assert_eq!(out.values[1].to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn trimmed_mean_discards_byzantine_outliers() {
+        // 5 honest-ish parts + the k-clamp under churn: with only 2 live
+        // parts and k = 1, the clamp takes k_eff = 0 (plain mean) instead
+        // of panicking on an empty kept range.
+        let honest: Vec<SparseVec> = (0..4)
+            .map(|i| SparseVec { dim: 2, indices: vec![0], values: vec![1.0 + 0.1 * i as f32] })
+            .collect();
+        let attacker = SparseVec { dim: 2, indices: vec![0], values: vec![-1.0e6] };
+        let mut parts: Vec<(&SparseVec, f32)> = honest.iter().map(|p| (p, 0.2f32)).collect();
+        parts.push((&attacker, 0.2));
+        let mut out = SparseVec::default();
+        let mut scratch = MergeScratch::default();
+        merge_robust_into(&parts, AggRule::TrimmedMean(1), 2, &mut out, &mut scratch);
+        // The −1e6 outlier is trimmed: the statistic stays in the honest range.
+        assert!(out.values[0] > 0.9 && out.values[0] < 1.5, "{}", out.values[0]);
+        merge_robust_into(&parts, AggRule::Mean, 2, &mut out, &mut scratch);
+        // Whereas the (robust-walk) mean is dragged far negative.
+        assert!(out.values[0] < -1.0e4, "{}", out.values[0]);
+
+        let two: Vec<(&SparseVec, f32)> = vec![(&honest[0], 0.5), (&attacker, 0.5)];
+        merge_robust_into(&two, AggRule::TrimmedMean(1), 2, &mut out, &mut scratch);
+        assert!(out.values[0].is_finite()); // clamped, defined, no panic
+    }
+
+    #[test]
+    fn robust_parallel_merge_is_bit_identical_for_every_width() {
+        let mut rng = Pcg64::seeded(76);
+        let parts = random_parts(&mut rng, 7, 257, 0.3);
+        let refs = as_refs(&parts);
+        for rule in [AggRule::TrimmedMean(2), AggRule::CoordMedian] {
+            let mut seq = SparseVec::default();
+            merge_robust_into(&refs, rule, 257, &mut seq, &mut MergeScratch::default());
+            assert!(seq.is_sorted_unique());
+            let mut scratch = ParMergeScratch::default();
+            for width in [1usize, 2, 3, 8] {
+                let mut par = SparseVec::default();
+                merge_robust_par(&refs, rule, 257, width, None, &mut par, &mut scratch).unwrap();
+                assert_eq!(par.indices, seq.indices, "rule {rule:?} width {width}");
+                let bits =
+                    |v: &SparseVec| v.values.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&par), bits(&seq), "rule {rule:?} width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn robust_rules_route_through_aggregate_adaptive() {
+        // A robust rule must take the frontier walk no matter what the
+        // path says, and the pooled dispatch must agree bit for bit.
+        let dim = 64;
+        let mut rng = Pcg64::seeded(77);
+        let parts = random_parts(&mut rng, 5, dim, 0.4);
+        let refs = as_refs(&parts);
+        for rule in [AggRule::TrimmedMean(1), AggRule::CoordMedian] {
+            let mut reference = SparseVec::default();
+            merge_robust_into(&refs, rule, dim, &mut reference, &mut MergeScratch::default());
+            reference.scale_values(-0.05);
+            for path in [AggPath::Auto, AggPath::Sparse, AggPath::Dense] {
+                let policy = AggPolicy { path, rule, ..Default::default() };
+                let mut buf = vec![0.0f32; dim];
+                aggregate_adaptive(
+                    &policy,
+                    &refs,
+                    dim,
+                    Some(-0.05),
+                    &mut buf,
+                    &mut SparseVec::default(),
+                    &mut MergeScratch::default(),
+                    &mut DenseShadow::new(),
+                );
+                let mut pooled = vec![0.0f32; dim];
+                aggregate_adaptive_pooled(
+                    &policy,
+                    &refs,
+                    dim,
+                    Some(-0.05),
+                    3,
+                    None,
+                    &mut pooled,
+                    &mut SparseVec::default(),
+                    &mut ParMergeScratch::default(),
+                    &mut DenseShadow::new(),
+                )
+                .unwrap();
+                let mut expect = vec![-0.0f32; dim];
+                for (&i, &v) in reference.indices.iter().zip(&reference.values) {
+                    expect[i as usize] = v;
+                }
+                for i in 0..dim {
+                    assert_eq!(buf[i].to_bits(), expect[i].to_bits(), "path {path:?} coord {i}");
+                    assert_eq!(pooled[i].to_bits(), expect[i].to_bits(), "pooled {path:?} {i}");
+                }
+            }
+        }
     }
 }

@@ -23,5 +23,5 @@ pub mod quantize;
 pub use codec::{SparseVec, SparseWire};
 pub use dgc::{DgcCompressor, DgcKernel};
 pub use error_accum::{DiscountKernel, DiscountedError};
-pub use merge::{AggPath, AggPolicy, DenseShadow, MergeScratch};
+pub use merge::{AggPath, AggPolicy, AggRule, DenseShadow, MergeScratch};
 pub use quantize::QuantizedVec;

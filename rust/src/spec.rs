@@ -12,10 +12,11 @@
 //! derive from [`RunSpec::put_fingerprint`], so the formerly-triplicated
 //! field lists can no longer drift.
 
+use crate::adversary::AdversaryPlan;
 use crate::config::SparsityConfig;
 use crate::pool::PoolHandle;
 use crate::snapshot::codec::ByteWriter;
-use crate::sparse::merge::AggPolicy;
+use crate::sparse::merge::{AggPolicy, AggRule};
 
 /// The scalars shared by every training run, regardless of which engine
 /// (sequential, coordinator-as-a-service, DES grid cell) executes it.
@@ -38,9 +39,15 @@ pub struct RunSpec {
     /// Sparsification configuration (per-link φ and β).
     pub sparsity: SparsityConfig,
     /// Aggregation dispatch: k-way sparse merge vs dense scatter
-    /// (`--agg-path`, `[agg]` config). Bit-identical for every setting
-    /// (see [`crate::sparse::merge`]).
+    /// (`--agg-path`, `[agg]` config). The `path`/`crossover` choice is
+    /// bit-identical for every setting; the consensus `rule`
+    /// (`--agg-rule`) changes the arithmetic and is therefore
+    /// fingerprinted (see [`crate::sparse::merge`]).
     pub agg: AggPolicy,
+    /// Byzantine fault-injection plan (`--adversary-*`, `[adversary]`):
+    /// which MUs attack, and how, per round. Disabled by default; when
+    /// disabled every engine path is byte-identical to the honest run.
+    pub adversary: AdversaryPlan,
     /// Intra-round fan-out width: worker threads executing the independent
     /// per-cluster compute+uplink blocks of each round. `1` (default) runs
     /// sequentially; `0` uses one thread per available core. Results are
@@ -64,6 +71,7 @@ impl Default for RunSpec {
             h_period: 2,
             sparsity: SparsityConfig::dense(),
             agg: AggPolicy::default(),
+            adversary: AdversaryPlan::default(),
             inner_threads: 1,
             pool: None,
         }
@@ -130,6 +138,12 @@ impl RunSpec {
         self
     }
 
+    /// Set the Byzantine fault-injection plan.
+    pub fn adversary(mut self, plan: AdversaryPlan) -> Self {
+        self.adversary = plan;
+        self
+    }
+
     /// Set the intra-round fan-out width.
     pub fn inner_threads(mut self, n: usize) -> Self {
         self.inner_threads = n;
@@ -144,11 +158,13 @@ impl RunSpec {
 
     /// Fold every *bit-relevant* scalar of this spec into a fingerprint
     /// stream: the iteration budget, LR schedule, momentum/weight-decay,
-    /// H period, and the full sparsity configuration. `agg`,
-    /// `inner_threads` and `pool` are deliberately excluded — they are
-    /// bit-irrelevant by the determinism contract, so snapshots may resume
-    /// (and serve/worker sessions may pair) across different values. Both
-    /// the snapshot config fingerprints and
+    /// H period, the full sparsity configuration, the consensus rule, and
+    /// the adversary plan. The agg `path`/`crossover`, `inner_threads`
+    /// and `pool` are deliberately excluded — they are bit-irrelevant by
+    /// the determinism contract, so snapshots may resume (and
+    /// serve/worker sessions may pair) across different values; the agg
+    /// `rule` and the adversary plan change the arithmetic and *are*
+    /// included. Both the snapshot config fingerprints and
     /// [`crate::net::NetScenario::fingerprint`] build on this single
     /// definition.
     pub fn put_fingerprint(&self, w: &mut ByteWriter) {
@@ -168,6 +184,20 @@ impl RunSpec {
         w.put_f64(s.phi_mbs_dl);
         w.put_f64(s.beta_m);
         w.put_f64(s.beta_s);
+        match self.agg.rule {
+            AggRule::Mean => w.put_u8(0),
+            AggRule::TrimmedMean(k) => {
+                w.put_u8(1);
+                w.put_usize(k);
+            }
+            AggRule::CoordMedian => w.put_u8(2),
+        }
+        let a = &self.adversary;
+        w.put_bool(a.enabled);
+        w.put_u64(a.seed);
+        w.put_f64(a.fraction);
+        w.put_f32(a.scale);
+        w.put_f32(a.garbage_std);
     }
 }
 
@@ -223,5 +253,20 @@ mod tests {
         let mut agg = base.clone();
         agg.agg.path = crate::sparse::merge::AggPath::Dense;
         assert_eq!(b0, bytes(&agg));
+        // The consensus *rule* changes the arithmetic — it must move the
+        // stream (unlike the path, which is bit-irrelevant by contract).
+        let mut rule = base.clone();
+        rule.agg.rule = AggRule::TrimmedMean(1);
+        assert_ne!(b0, bytes(&rule));
+        let mut rule2 = base.clone();
+        rule2.agg.rule = AggRule::TrimmedMean(2);
+        assert_ne!(bytes(&rule), bytes(&rule2));
+        // So does enabling (or re-seeding) the adversary plan.
+        let mut adv = base.clone();
+        adv.adversary.enabled = true;
+        assert_ne!(b0, bytes(&adv));
+        let mut adv2 = adv.clone();
+        adv2.adversary.seed ^= 1;
+        assert_ne!(bytes(&adv), bytes(&adv2));
     }
 }

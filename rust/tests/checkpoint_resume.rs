@@ -209,6 +209,7 @@ fn prop_des_resume_at_round_k_bit_exact() {
                 compute: ComputeProfile { mean_s: 0.3, het: 0.5 },
                 compute_scale: 1.0,
                 seed,
+                churn: hfl::adversary::ChurnConfig::default(),
             };
             let (inner_a, pool_a, inner_b, pool_b) = if swap {
                 (8, Some(dedicated.handle()), 1, None)
@@ -322,6 +323,7 @@ fn cross_engine_snapshots_are_refused() {
         compute: ComputeProfile { mean_s: 0.3, het: 0.5 },
         compute_scale: 1.0,
         seed,
+        churn: hfl::adversary::ChurnConfig::default(),
     };
     let err = run_des_checkpointed(&mut oracle(dim, n * per, seed), &cfg, &params, None, Some(&snap));
     let _ = std::fs::remove_file(&snap);

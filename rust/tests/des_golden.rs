@@ -144,6 +144,9 @@ fn fixture_cell() -> (Config, ScenarioSpec, MatrixOptions) {
         // event-driven (mobility + deadline straggler policy).
         mobilities: vec![quick.mobilities.last().unwrap().clone()],
         stragglers: vec![quick.stragglers.last().unwrap().clone()],
+        // Honest/default robustness axes — the fixture predates them and
+        // must stay byte-identical.
+        ..quick.clone()
     };
     let opts = MatrixOptions {
         threads: 1,

@@ -81,6 +81,9 @@ fn fixture_cell() -> (Config, ScenarioSpec, MatrixOptions) {
         profiles: vec![ChannelProfile::nominal()],
         mobilities: vec![hfl::des::MobilityProfile::Static],
         stragglers: vec![hfl::des::StragglerPolicy::WaitForAll],
+        // Honest defaults: the robustness axes must leave this fixture's
+        // traces byte-identical to the pre-adversary grid.
+        ..ScenarioSpec::quick()
     };
     (Config::smoke(), spec, MatrixOptions::default())
 }

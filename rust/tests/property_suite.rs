@@ -28,13 +28,23 @@
 //!    above 2^53 — through the decimal-string lane; and
 //!    `ScenarioResult::to_exact_json`/`from_exact_json` invert bitwise
 //!    even when accuracies are NaN.
+//! 8. **Robustness layer**: `AggRule::Mean` through the
+//!    `aggregate_adaptive{,_pooled}` dispatch is bit-identical to BOTH the
+//!    pre-robustness weighted k-way merge and the dense scatter fold for
+//!    φ ∈ {0, 0.5, 0.99} × merge widths {1, 2, 8}; and DES client churn is
+//!    deterministic — the same churn seed yields an identical skip digest
+//!    (and timeline/params) at every fan-out width.
 
 use hfl::config::{Config, SparsityConfig};
 use hfl::des::{run_des, ComputeProfile, DesParams, MobilityProfile, StragglerPolicy};
 use hfl::fl::{run_hierarchical, CommBits, QuadraticOracle, TrainLog, TrainOptions};
 use hfl::pool::{PoolHandle, WorkerPool};
 use hfl::sim::{Engine, GoldenTrace, ScenarioResult, SkipDigest, TimelineDigest};
-use hfl::sparse::merge::{merge_weighted_into, merge_weighted_par, MergeScratch, ParMergeScratch};
+use hfl::adversary::ChurnConfig;
+use hfl::sparse::merge::{
+    aggregate_adaptive, aggregate_adaptive_pooled, merge_weighted_into, merge_weighted_par,
+    AggPath, AggPolicy, DenseShadow, MergeScratch, ParMergeScratch,
+};
 use hfl::sparse::{DgcCompressor, SparseVec, SparseWire};
 use hfl::testing::{check, Gen, Pair, PropConfig, UsizeRange, VecF32};
 use hfl::util::json::{self, Json, ObjBuilder};
@@ -606,6 +616,7 @@ fn prop_pool_leased_fanout_bit_exact_both_engines() {
                     },
                     compute_scale: 1.0,
                     seed,
+                    churn: hfl::adversary::ChurnConfig::default(),
                 };
                 let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
                 run_des(&mut oracle, &cfg, &params).expect("DES run failed")
@@ -1033,6 +1044,226 @@ fn prop_scenario_result_exact_json_roundtrip_is_bitwise() {
             }
             if back.trace != res.trace {
                 return Err("golden trace diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- 8. Robustness: Mean-rule dispatch identity + churn determinism ----------
+
+/// `(k parts, dim, seed)` for the Mean-dispatch identity property.
+struct MeanDispatchCase;
+impl Gen for MeanDispatchCase {
+    type Value = (usize, usize, u64);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            1 + rng.uniform_usize(9),   // 1..=9 parts
+            16 + rng.uniform_usize(200), // dim 16..=215
+            rng.next_u64(),
+        )
+    }
+}
+
+#[test]
+fn prop_mean_rule_dispatch_bit_identical_to_legacy_paths() {
+    // The no-re-blessing contract of the robust-consensus PR:
+    // `AggRule::Mean` through the rule-aware dispatch must reproduce BOTH
+    // the pre-robustness weighted k-way merge and the dense scatter fold
+    // bit for bit, for φ ∈ {0, 0.5, 0.99} × pooled merge widths {1, 2, 8},
+    // with and without the round path's negative post-scale.
+    check(
+        &PropConfig { cases: 16, ..Default::default() },
+        &MeanDispatchCase,
+        |&(k, dim, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            for phi in [0.0f64, 0.5, 0.99] {
+                // DGC-shaped parts with non-uniform weights (the DES
+                // stale-discount shape).
+                let mut parts_own: Vec<(SparseVec, f32)> = Vec::new();
+                for _ in 0..k {
+                    let mut c = DgcCompressor::new(dim, 0.9, phi);
+                    let g: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                    parts_own.push((c.step(&g), rng.uniform_range(0.05, 1.5) as f32));
+                }
+                let parts: Vec<(&SparseVec, f32)> =
+                    parts_own.iter().map(|(p, w)| (p, *w)).collect();
+                for post_scale in [None, Some(-0.05f32)] {
+                    // Reference: the pre-robustness zero → scatter → [scale].
+                    let mut reference = vec![0.0f32; dim];
+                    for (p, w) in &parts_own {
+                        p.add_into(&mut reference, *w);
+                    }
+                    if let Some(a) = post_scale {
+                        for v in &mut reference {
+                            *v *= a;
+                        }
+                    }
+                    let ref_bits: Vec<u32> = reference.iter().map(|x| x.to_bits()).collect();
+
+                    // Pre-PR weighted merge, written over the reference
+                    // baseline (−0.0 after a negative scale).
+                    let mut legacy = SparseVec::default();
+                    merge_weighted_into(&parts, dim, &mut legacy, &mut MergeScratch::default());
+                    let baseline = match post_scale {
+                        Some(a) => {
+                            legacy.scale_values(a);
+                            0.0f32 * a
+                        }
+                        None => 0.0,
+                    };
+                    let mut legacy_dense = vec![baseline; dim];
+                    for (&i, &v) in legacy.indices.iter().zip(&legacy.values) {
+                        legacy_dense[i as usize] = v;
+                    }
+                    let legacy_bits: Vec<u32> =
+                        legacy_dense.iter().map(|x| x.to_bits()).collect();
+                    if legacy_bits != ref_bits {
+                        return Err(format!("pre-PR merge != scatter (k={k}, φ={phi})"));
+                    }
+
+                    // The new dispatch, with every path forced in turn.
+                    for path in [AggPath::Auto, AggPath::Sparse, AggPath::Dense] {
+                        let policy = AggPolicy { path, ..AggPolicy::default() };
+                        let mut buf = vec![0.0f32; dim];
+                        let mut merged = SparseVec::default();
+                        let mut shadow = DenseShadow::new();
+                        aggregate_adaptive(
+                            &policy,
+                            &parts,
+                            dim,
+                            post_scale,
+                            &mut buf,
+                            &mut merged,
+                            &mut MergeScratch::default(),
+                            &mut shadow,
+                        );
+                        let bits: Vec<u32> = buf.iter().map(|x| x.to_bits()).collect();
+                        if bits != ref_bits {
+                            return Err(format!(
+                                "dispatch path {path:?} diverged (k={k}, φ={phi}, \
+                                 scale={post_scale:?})"
+                            ));
+                        }
+                        // Pooled variant at widths {1, 2, 8}.
+                        for width in [1usize, 2, 8] {
+                            let mut buf = vec![0.0f32; dim];
+                            let mut merged = SparseVec::default();
+                            let mut shadow = DenseShadow::new();
+                            aggregate_adaptive_pooled(
+                                &policy,
+                                &parts,
+                                dim,
+                                post_scale,
+                                width,
+                                None,
+                                &mut buf,
+                                &mut merged,
+                                &mut ParMergeScratch::default(),
+                                &mut shadow,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            let bits: Vec<u32> = buf.iter().map(|x| x.to_bits()).collect();
+                            if bits != ref_bits {
+                                return Err(format!(
+                                    "pooled dispatch diverged (path {path:?}, width {width}, \
+                                     k={k}, φ={phi})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `(n_clusters, per_cluster, dim, h_period, seed)` for churn determinism.
+struct ChurnCase;
+impl Gen for ChurnCase {
+    type Value = (usize, usize, usize, usize, u64);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            2 + rng.uniform_usize(2), // 2..=3 clusters
+            2 + rng.uniform_usize(3), // 2..=4 MUs per cluster
+            6 + rng.uniform_usize(10),
+            1 + rng.uniform_usize(2),
+            rng.next_u64(),
+        )
+    }
+}
+
+#[test]
+fn prop_churn_skip_digest_deterministic_across_thread_counts() {
+    // Churn decisions are drawn from streams keyed (seed, mu, round) —
+    // never from scheduling — so the same churn seed must yield an
+    // identical skip digest, timeline, and final parameters at every
+    // intra-round fan-out width.
+    check(
+        &PropConfig { cases: 6, ..Default::default() },
+        &ChurnCase,
+        |&(n, per, dim, h, seed)| {
+            let mut cfg = Config::smoke();
+            cfg.topology.n_clusters = n;
+            cfg.topology.mus_per_cluster = per;
+            cfg.topology.reuse_colors = cfg.topology.reuse_colors.min(n);
+            cfg.training.h_period = h;
+            let run = |inner: usize| {
+                let params = DesParams {
+                    topts: TrainOptions {
+                        spec: hfl::spec::RunSpec::new()
+                            .iters(8)
+                            .peak_lr(0.05)
+                            .warmup(2)
+                            .h_period(h)
+                            .sparsity(SparsityConfig {
+                                enabled: true,
+                                phi_mu_ul: 0.8,
+                                ..SparsityConfig::default()
+                            })
+                            .inner_threads(inner),
+                        n_clusters: n,
+                        eval_every: 0,
+                    },
+                    mobility: MobilityProfile::Static,
+                    straggler: StragglerPolicy::WaitForAll,
+                    compute: ComputeProfile { mean_s: 0.3, het: 0.5 },
+                    compute_scale: 1.0,
+                    seed,
+                    churn: ChurnConfig {
+                        enabled: true,
+                        seed: seed ^ 0x00C0_FFEE,
+                        drop_p: 0.3,
+                        rejoin_p: 0.5,
+                        energy: 0.0,
+                    },
+                };
+                let mut oracle = QuadraticOracle::new_skewed(dim, n * per, 0.0, 1.0, seed);
+                run_des(&mut oracle, &cfg, &params).expect("DES churn run")
+            };
+            let base = run(1);
+            let digest = SkipDigest::from_skips(&base.skips);
+            if digest.is_none() {
+                return Err(format!(
+                    "drop_p=0.3 over 8 rounds × {} MUs produced no skips",
+                    n * per
+                ));
+            }
+            let fp = |l: &TrainLog| -> Vec<u32> {
+                l.final_params.iter().map(|x| x.to_bits()).collect()
+            };
+            for inner in [2usize, 8] {
+                let other = run(inner);
+                if SkipDigest::from_skips(&other.skips) != digest {
+                    return Err(format!("skip digest diverged at inner_threads={inner}"));
+                }
+                if other.timeline != base.timeline {
+                    return Err(format!("timeline diverged at inner_threads={inner}"));
+                }
+                if fp(&other.log) != fp(&base.log) {
+                    return Err(format!("params diverged at inner_threads={inner}"));
+                }
             }
             Ok(())
         },
